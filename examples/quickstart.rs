@@ -1,0 +1,50 @@
+//! Quickstart: sketch a small matrix, estimate a few l_4 distances, and
+//! compare against the exact values.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lpsketch::baselines::exact;
+use lpsketch::config::Config;
+use lpsketch::coordinator::Pipeline;
+use lpsketch::data::{gen, DataDist};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configure: p = 4 distance, k = 128 sketch width, basic strategy.
+    let mut cfg = Config::default();
+    cfg.n = 200;
+    cfg.d = 2048; // high-dimensional rows — the regime sketches are for
+    cfg.k = 128;
+    println!("config: {}", cfg.describe());
+
+    // 2. Some synthetic heavy-tailed non-negative data (TF-like).
+    let data = gen::generate(
+        DataDist::ZipfTf { exponent: 1.1, density: 0.1 },
+        cfg.n,
+        cfg.d,
+        cfg.seed,
+    );
+
+    // 3. One linear scan: stream the matrix into O(nk) sketches.
+    let pipeline = Pipeline::new(cfg)?;
+    let report = pipeline.ingest(&data)?;
+    println!(
+        "ingested {} rows in {:.1}ms — sketches use {:.1}x less memory than the data",
+        report.rows,
+        report.elapsed.as_secs_f64() * 1e3,
+        report.data_bytes as f64 / report.sketch_bytes as f64,
+    );
+
+    // 4. Query pairwise distances from the sketches alone.
+    println!("\n pair      estimate      exact         rel.err");
+    for (a, b) in [(0u64, 1u64), (2, 3), (10, 99), (42, 137)] {
+        let est = pipeline.estimate_pair(a, b).expect("rows are ingested");
+        let exact = exact::distance_f32(data.row(a as usize), data.row(b as usize), 4);
+        println!(
+            " ({a:>3},{b:>3})  {est:>12.5e}  {exact:>12.5e}  {:>7.4}",
+            (est - exact).abs() / exact
+        );
+    }
+
+    println!("\nmetrics: {}", pipeline.metrics().render());
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! End-to-end driver (the EXPERIMENTS.md validation run): stream a real
+//! small workload through the full three-layer stack and report the
+//! paper's headline metric — all-pairs l_4 cost and storage vs the exact
+//! baseline — plus estimate quality and pipeline metrics.
+//!
+//! Exercises every layer: L1/L2 AOT artifacts via PJRT when available
+//! (`--pjrt`, needs `make artifacts`), the L3 streaming coordinator with
+//! backpressure, the batched query service, and the margin MLE.
+//!
+//! Run: `cargo run --release --example streaming_pipeline -- [--pjrt]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use lpsketch::baselines::exact;
+use lpsketch::config::Config;
+use lpsketch::coordinator::Pipeline;
+use lpsketch::data::corpus;
+use lpsketch::util::stats::summarize;
+
+fn main() -> anyhow::Result<()> {
+    let use_pjrt = std::env::args().any(|a| a == "--pjrt");
+    let mut cfg = Config::default();
+    cfg.n = 512;
+    cfg.d = 1024; // matches the default artifact grid
+    cfg.k = 128;
+    cfg.workers = 4;
+    cfg.block_rows = 64;
+    cfg.use_pjrt = use_pjrt;
+    println!("config: {}", cfg.describe());
+
+    // Real small workload: the bundled document corpus.
+    let corpus = corpus::generate(cfg.n, cfg.d, 80, 7);
+    let data = corpus.tf;
+    let p = cfg.p;
+
+    // --- exact baseline: O(n²D) ---
+    let t0 = Instant::now();
+    let exact_all = exact::pairwise_condensed(&data, p, cfg.workers);
+    let exact_s = t0.elapsed().as_secs_f64();
+    println!("\nexact all-pairs ({} pairs): {exact_s:.3}s", exact_all.len());
+
+    // --- sketch path: O(nD) scan + O(n²k) estimates ---
+    let pipeline = Arc::new(Pipeline::new(cfg)?);
+    let t1 = Instant::now();
+    let report = pipeline.ingest(&data)?;
+    let ingest_s = t1.elapsed().as_secs_f64();
+    let t2 = Instant::now();
+    let est_all = pipeline.all_pairs_condensed();
+    let pairs_s = t2.elapsed().as_secs_f64();
+    println!(
+        "sketch path: ingest {ingest_s:.3}s ({} rows via PJRT) + all-pairs {pairs_s:.3}s \
+         = {:.3}s total ({:.1}x vs exact)",
+        report.pjrt_rows,
+        ingest_s + pairs_s,
+        exact_s / (ingest_s + pairs_s)
+    );
+    println!(
+        "storage: {} B data → {} B sketches ({:.1}x compression)",
+        report.data_bytes,
+        report.sketch_bytes,
+        report.data_bytes as f64 / report.sketch_bytes as f64
+    );
+
+    // --- estimate quality ---
+    let rel_errs: Vec<f64> = exact_all
+        .iter()
+        .zip(&est_all)
+        .filter(|(&e, _)| e > 0.0)
+        .map(|(&e, &g)| (g - e).abs() / e)
+        .collect();
+    let s = summarize(&rel_errs);
+    println!(
+        "\nestimate rel.err over {} pairs: mean {:.3}  p50 {:.3}  p95 {:.3}",
+        rel_errs.len(),
+        s.mean,
+        s.p50,
+        s.p95
+    );
+
+    // --- batched query service (latency path) ---
+    let service = pipeline.spawn_query_service();
+    let t3 = Instant::now();
+    let queries = 2000u64;
+    for i in 0..queries {
+        let a = i % data.n() as u64;
+        let b = (i * 7 + 1) % data.n() as u64;
+        if a != b {
+            service.query(a, b)?;
+        }
+    }
+    let q_s = t3.elapsed().as_secs_f64();
+    println!(
+        "\nbatched query service: {queries} queries in {q_s:.3}s ({:.0} q/s)",
+        queries as f64 / q_s
+    );
+    println!("metrics: {}", pipeline.metrics().render());
+    Ok(())
+}

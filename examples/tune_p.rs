@@ -1,0 +1,72 @@
+//! Treating p as a tuning parameter (paper §1): "if there is an
+//! efficient mechanism to compute the l_p distances, then it becomes
+//! affordable to tune learning algorithms for many values of p".
+//!
+//! Demonstrates exactly that: a 1-NN classifier over the bundled corpus
+//! evaluated at p = 2 (exact, cheap) and p = 4, 6 (sketched), showing
+//! the higher-moment distances separating heavy-tailed documents, at
+//! sketch cost rather than O(nD) per distance.
+//!
+//! Run: `cargo run --release --example tune_p`
+
+use lpsketch::data::corpus;
+use lpsketch::knn::{exact_knn, KnnIndex};
+use lpsketch::projection::{ProjectionDist, ProjectionSpec, Strategy};
+
+fn main() -> anyhow::Result<()> {
+    let (n, d, k) = (1200usize, 1024usize, 128usize);
+    let corpus = corpus::generate(n, d, 80, 99);
+    let data = &corpus.tf;
+    let queries: Vec<usize> = (0..120).map(|i| (i * 9 + 3) % n).collect();
+
+    println!("1-NN topic accuracy on {n} docs (leave-self-out), {} queries:\n", queries.len());
+    println!("  p   method            accuracy");
+    println!("  -----------------------------------");
+
+    // p = 2: plain Euclidean, exact (the cheap default everyone uses).
+    let acc2 = accuracy_exact(&corpus, &queries, 2);
+    println!("  2   exact scan        {acc2:.3}");
+
+    // p = 4 and 6: sketched (affordable at scale), with exact re-rank.
+    for p in [4usize, 6] {
+        let index = KnnIndex::build(
+            data,
+            ProjectionSpec::new(5, k, ProjectionDist::Normal, Strategy::Basic),
+            p,
+        )?;
+        let mut hits = 0;
+        for &q in &queries {
+            let got = index.query_rerank(data, data.row(q), 2, 16);
+            // got[0] is the query row itself (d = 0); vote with got[1].
+            let nb = got.iter().find(|nb| nb.index != q).expect("n > 1");
+            hits += (corpus.labels[nb.index] == corpus.labels[q]) as usize;
+        }
+        println!(
+            "  {p}   sketch k={k} +rr    {:.3}",
+            hits as f64 / queries.len() as f64
+        );
+    }
+
+    // Exact p=4/6 accuracy as the reference for the sketched versions.
+    for p in [4usize, 6] {
+        let acc = accuracy_exact(&corpus, &queries, p);
+        println!("  {p}   exact scan        {acc:.3}");
+    }
+
+    println!(
+        "\nsketch index answers each query from {k} floats/row instead of {d}; \
+         tuning p costs one extra index, not another O(nD) scan per query."
+    );
+    Ok(())
+}
+
+fn accuracy_exact(corpus: &corpus::Corpus, queries: &[usize], p: usize) -> f64 {
+    let data = &corpus.tf;
+    let mut hits = 0;
+    for &q in queries {
+        let got = exact_knn(data, data.row(q), 2, p);
+        let nb = got.iter().find(|nb| nb.index != q).expect("n > 1");
+        hits += (corpus.labels[nb.index] == corpus.labels[q]) as usize;
+    }
+    hits as f64 / queries.len() as f64
+}

@@ -1,0 +1,117 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest for rust.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's bundled
+XLA (xla_extension 0.5.1) rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+The manifest is line-oriented `key=value` tokens (one artifact per line)
+so the rust side needs no JSON parser:
+
+    name=sketch_p4_b64_d1024_k128 op=sketch p=4 b=64 d=1024 k=128 \
+        orders=3 moments=6 file=sketch_p4_b64_d1024_k128.hlo.txt
+
+Run once via `make artifacts`; python never executes on the request path.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.coeffs import moment_orders, orders
+
+F32 = jnp.float32
+
+# Default artifact shape grid. The rust pipeline pads row blocks to B and
+# chunks/pads the feature axis to D (sketches and moments are additive over
+# D-chunks), so a small fixed grid serves arbitrary data sizes.
+DEFAULT_B = 64
+DEFAULT_D = 1024
+DEFAULT_KS = (64, 128, 256)
+DEFAULT_PS = (4, 6)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def build_artifacts(b, d, ks, ps, b2=None):
+    """Yield (name, manifest_fields, lowered) for the full artifact grid."""
+    b2 = b2 or b
+    for p in ps:
+        ns, nm = orders(p), moment_orders(p)
+        for k in ks:
+            name = f"sketch_p{p}_b{b}_d{d}_k{k}"
+            fn = functools.partial(model.sketch_block, p=p)
+            yield (
+                name,
+                dict(op="sketch", p=p, b=b, d=d, k=k, orders=ns, moments=nm),
+                jax.jit(fn).lower(_spec(b, d), _spec(d, k)),
+            )
+            name = f"sketch_alt_p{p}_b{b}_d{d}_k{k}"
+            fn = functools.partial(model.sketch_block_alt, p=p)
+            yield (
+                name,
+                dict(op="sketch_alt", p=p, b=b, d=d, k=k, orders=ns, moments=nm),
+                jax.jit(fn).lower(_spec(b, d), _spec(ns, d, k)),
+            )
+            name = f"estimate_p{p}_b{b}_k{k}"
+            fn = functools.partial(model.estimate_block, p=p)
+            yield (
+                name,
+                dict(op="estimate", p=p, b=b, b2=b2, k=k, orders=ns),
+                jax.jit(fn).lower(
+                    _spec(ns, b, k), _spec(ns, b2, k), _spec(b), _spec(b2)
+                ),
+            )
+        name = f"exact_p{p}_b{b}_d{d}"
+        fn = functools.partial(model.exact_block, p=p)
+        yield (
+            name,
+            dict(op="exact", p=p, b=b, b2=b2, d=d),
+            jax.jit(fn).lower(_spec(b, d), _spec(b2, d)),
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--b", type=int, default=DEFAULT_B)
+    ap.add_argument("--d", type=int, default=DEFAULT_D)
+    ap.add_argument("--ks", type=int, nargs="+", default=list(DEFAULT_KS))
+    ap.add_argument("--ps", type=int, nargs="+", default=list(DEFAULT_PS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    lines = []
+    for name, fields, lowered in build_artifacts(args.b, args.d, args.ks, args.ps):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        fields["name"] = name
+        fields["file"] = fname
+        keys = ["name", "op", "p", "b", "b2", "d", "k", "orders", "moments", "file"]
+        lines.append(" ".join(f"{k}={fields[k]}" for k in keys if k in fields))
+        print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {len(lines)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

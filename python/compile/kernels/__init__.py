@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the paper's compute hot-spot + pure-jnp oracles.
+from . import coeffs, estimate, ref, sketch  # noqa: F401

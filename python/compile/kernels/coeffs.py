@@ -1,0 +1,39 @@
+"""Binomial decomposition of the even-p l_p distance (paper §1.1).
+
+For even p,
+
+    |x - y|^p = (x - y)^p = sum_{m=0}^{p} (-1)^(p-m) C(p, m) x^m y^(p-m)
+
+so the distance splits into 2 marginal norms (m = 0 and m = p, coefficient
++1) and p-1 mixed "inner products" Sum_i x_i^m y_i^(p-m) with coefficient
+
+    c_m = (-1)^m C(p, m)          (p even => (-1)^(p-m) == (-1)^m)
+
+p = 4: c = [-4, +6, -4]           (m = 1, 2, 3)
+p = 6: c = [-6, +15, -20, +15, -6] (m = 1..5)
+"""
+
+import math
+
+
+def inner_coeffs(p: int) -> list[int]:
+    """Coefficients c_m of Sum x^m y^(p-m) for m = 1..p-1."""
+    if p < 4 or p % 2 != 0:
+        raise ValueError(f"p must be even and >= 4, got {p}")
+    return [(-1) ** m * math.comb(p, m) for m in range(1, p)]
+
+
+def orders(p: int) -> int:
+    """Number of mixed inner products (= power-sketch orders) for p."""
+    return p - 1
+
+
+def moment_orders(p: int) -> int:
+    """Highest marginal moment the estimators/variance formulas consume.
+
+    Lemma 1 (p=4) needs Sum x^6; Lemma 5 (p=6) needs Sum x^10 — i.e.
+    moments up to 2(p-1). The sketch artifact emits all of 1..2(p-1) so a
+    single linear scan powers the plain estimator, the margin MLE and the
+    theoretical-variance evaluation.
+    """
+    return 2 * (p - 1)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Everything here is written in the most direct style possible (no tiling,
+no fusion) so that a mismatch unambiguously implicates the kernel.
+"""
+
+import jax.numpy as jnp
+
+from .coeffs import inner_coeffs, moment_orders, orders
+
+
+def ref_powers(x, n: int):
+    """Stack [x^1, x^2, ..., x^n] along a new leading axis."""
+    return jnp.stack([x ** m for m in range(1, n + 1)], axis=0)
+
+
+def ref_sketch(x, r, p: int):
+    """Power sketches for the *basic* strategy (one shared R).
+
+    x: (B, D) row block, r: (D, K).
+    Returns u: (p-1, B, K) with u[m-1] = (x ** m) @ r.
+    """
+    return jnp.stack([(x ** m) @ r for m in range(1, orders(p) + 1)], axis=0)
+
+
+def ref_sketch_alt(x, r_stack, p: int):
+    """Power sketches for the *alternative* strategy (independent R per order).
+
+    r_stack: (p-1, D, K); u[m-1] = (x ** m) @ r_stack[m-1].
+    """
+    return jnp.stack(
+        [(x ** m) @ r_stack[m - 1] for m in range(1, orders(p) + 1)], axis=0
+    )
+
+
+def ref_moments(x, p: int):
+    """Marginal moments M[m-1] = Sum_i x_i^m for m = 1..2(p-1). Shape (2(p-1), B)."""
+    return jnp.stack(
+        [jnp.sum(x ** m, axis=-1) for m in range(1, moment_orders(p) + 1)], axis=0
+    )
+
+
+def ref_estimate(u, v, mx_p, my_p, p: int):
+    """Plain (no-margin-MLE) pairwise estimate matrix, both strategies.
+
+    u: (p-1, B, K) sketches of the x rows, v: (p-1, B2, K) of the y rows,
+    mx_p: (B,) exact Sum x^p per row, my_p: (B2,).
+    Returns (B, B2): d_hat[i,j] per the paper's unbiased estimator.
+    """
+    k = u.shape[-1]
+    acc = mx_p[:, None] + my_p[None, :]
+    for m, c in zip(range(1, p), inner_coeffs(p)):
+        acc = acc + (c / k) * (u[m - 1] @ v[p - m - 1].T)
+    return acc
+
+
+def ref_exact(x, y, p: int):
+    """Exact pairwise l_p^p distance matrix: (B, B2)."""
+    return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]) ** p, axis=-1)

@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: fused power-sketch + marginal-moment pass.
+
+The paper's compute hot-spot is the linear scan that turns a row block
+X (B, D) into
+
+  * power sketches  u_m = (X^∘m) @ R   for m = 1..p-1   (the "inner
+    product" estimators' raw material), and
+  * marginal moments M_m = Σ_i x_i^m   for m = 1..2(p-1) (consumed by the
+    plain estimator, the margin MLE of Lemma 4, and the variance
+    formulas of Lemmas 1/2/5/6).
+
+A GPU-style implementation makes p-1 (or 2p-2) passes over X. Here the
+HBM→VMEM schedule (BlockSpec grid over D tiles) loads each X tile ONCE,
+walks the Hadamard power ladder x, x², x³… in VMEM (VPU), and issues one
+MXU matmul per sketch order against the resident R tile, accumulating
+both outputs across the grid. Bandwidth win ≈ (p-1)× on the dominant
+X stream — see DESIGN.md §6.
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated analytically (DESIGN.md §8).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .coeffs import moment_orders, orders
+
+
+def _sketch_kernel(x_ref, r_ref, u_ref, m_ref, *, n_sketch: int, n_moment: int):
+    """Grid axis 0 walks D tiles; u_ref / m_ref are revisited accumulators."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        u_ref[...] = jnp.zeros_like(u_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    x = x_ref[...]          # (B, DT) — loaded into VMEM once per grid step
+    r = r_ref[...]          # (DT, K) — resident for the whole ladder
+    xp = x
+    for m in range(1, n_moment + 1):
+        if m > 1:
+            xp = xp * x     # Hadamard power ladder, no extra HBM traffic
+        if m <= n_sketch:
+            u_ref[m - 1] += jnp.dot(xp, r)
+        m_ref[m - 1] += jnp.sum(xp, axis=1)
+
+
+def _sketch_alt_kernel(x_ref, r_ref, u_ref, m_ref, *, n_sketch: int, n_moment: int):
+    """Alternative strategy: r_ref is (p-1, DT, K), one independent R per order."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        u_ref[...] = jnp.zeros_like(u_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    x = x_ref[...]
+    xp = x
+    for m in range(1, n_moment + 1):
+        if m > 1:
+            xp = xp * x
+        if m <= n_sketch:
+            u_ref[m - 1] += jnp.dot(xp, r_ref[m - 1])
+        m_ref[m - 1] += jnp.sum(xp, axis=1)
+
+
+def _pick_tile(d: int, target: int = 256) -> int:
+    """Largest divisor of d not exceeding target (D tiles must divide D)."""
+    t = min(d, target)
+    while d % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("p", "d_tile"))
+def sketch(x, r, *, p: int, d_tile: int | None = None):
+    """Basic-strategy fused sketch. x: (B, D), r: (D, K) shared across orders.
+
+    Returns (u, m): u (p-1, B, K), m (2(p-1), B).
+    """
+    b, d = x.shape
+    k = r.shape[1]
+    ns, nm = orders(p), moment_orders(p)
+    dt = d_tile or _pick_tile(d)
+    grid = (d // dt,)
+    return pl.pallas_call(
+        functools.partial(_sketch_kernel, n_sketch=ns, n_moment=nm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, dt), lambda i: (0, i)),
+            pl.BlockSpec((dt, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ns, b, k), lambda i: (0, 0, 0)),
+            pl.BlockSpec((nm, b), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ns, b, k), x.dtype),
+            jax.ShapeDtypeStruct((nm, b), x.dtype),
+        ],
+        interpret=True,
+    )(x, r)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "d_tile"))
+def sketch_alt(x, r_stack, *, p: int, d_tile: int | None = None):
+    """Alternative-strategy fused sketch. r_stack: (p-1, D, K) independent R's."""
+    b, d = x.shape
+    ns, nm = orders(p), moment_orders(p)
+    assert r_stack.shape[0] == ns, "need one projection matrix per order"
+    k = r_stack.shape[2]
+    dt = d_tile or _pick_tile(d)
+    grid = (d // dt,)
+    return pl.pallas_call(
+        functools.partial(_sketch_alt_kernel, n_sketch=ns, n_moment=nm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, dt), lambda i: (0, i)),
+            pl.BlockSpec((ns, dt, k), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ns, b, k), lambda i: (0, 0, 0)),
+            pl.BlockSpec((nm, b), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ns, b, k), x.dtype),
+            jax.ShapeDtypeStruct((nm, b), x.dtype),
+        ],
+        interpret=True,
+    )(x, r_stack)

@@ -1,0 +1,48 @@
+"""L2: JAX compute graphs composing the Pallas kernels.
+
+These are the functions `aot.py` lowers to HLO text for the rust runtime.
+Python (and everything in this package) runs only at build time; the rust
+coordinator executes the lowered artifacts via PJRT on the request path.
+
+Graphs
+------
+* sketch_block / sketch_block_alt — fused power sketch + marginal moments
+  of a row block (the linear-scan pass).
+* estimate_block — pairwise d-hat matrix from two sketch blocks (the
+  O(n^2 k) request-path op).
+* exact_block — XLA-fused exact pairwise l_p^p distances (the O(n^2 D)
+  baseline of the paper's headline cost comparison, E7).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.estimate import estimate as _estimate_kernel
+from .kernels.sketch import sketch as _sketch_kernel
+from .kernels.sketch import sketch_alt as _sketch_alt_kernel
+
+
+def sketch_block(x, r, *, p: int):
+    """(u, moments) for the basic strategy: one shared R across orders."""
+    return _sketch_kernel(x, r, p=p)
+
+
+def sketch_block_alt(x, r_stack, *, p: int):
+    """(u, moments) for the alternative strategy: independent R per order."""
+    return _sketch_alt_kernel(x, r_stack, p=p)
+
+
+def estimate_block(u, v, mx_p, my_p, *, p: int):
+    """Pairwise unbiased estimate matrix (B, B2)."""
+    return _estimate_kernel(u, v, mx_p, my_p, p=p)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def exact_block(x, y, *, p: int):
+    """Exact pairwise l_p^p distances; vmapped over rows to bound memory."""
+    def row(xi):
+        return jnp.sum(jnp.abs(xi[None, :] - y) ** p, axis=-1)
+
+    return jax.vmap(row)(x)

@@ -1,0 +1,162 @@
+"""Analytical TPU performance model for the L1 Pallas kernels.
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the
+kernels' TPU efficiency is *estimated* from their BlockSpec schedule:
+VMEM residency, HBM traffic, and MXU/VPU work. This is the §Perf L1
+instrument (DESIGN.md §8): it reports whether a (B, D_tile, K) schedule
+fits VMEM, its arithmetic intensity, and the roofline-implied MXU
+utilization, and it verifies the fused ladder's claimed (p−1)× bandwidth
+win over the naive per-order passes.
+
+Reference machine: TPU v4-ish — 16 MiB VMEM/core, 1.2 TB/s HBM,
+137.5 bf16-TFLOP/s per core (f32 ≈ half). Constants are parameters, not
+oracles; the *ratios* are what the perf targets check.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Chip:
+    """Per-core hardware envelope."""
+
+    vmem_bytes: int = 16 * 2**20
+    hbm_bw: float = 1.2e12  # B/s
+    peak_flops: float = 137.5e12 / 2  # f32 MXU FLOP/s
+
+    @property
+    def ridge_intensity(self) -> float:
+        """FLOP/byte at which compute and bandwidth balance."""
+        return self.peak_flops / self.hbm_bw
+
+
+@dataclass(frozen=True)
+class SketchSchedule:
+    """One grid step of the fused sketch kernel (sketch.py).
+
+    Per step the kernel holds: the X tile (B, DT), the R tile (DT, K),
+    one power buffer (B, DT), the U accumulators (p-1, B, K) and the
+    moment accumulators (2(p-1), B) — all f32.
+    """
+
+    b: int
+    d: int
+    d_tile: int
+    k: int
+    p: int
+    dtype_bytes: int = 4
+
+    @property
+    def orders(self) -> int:
+        return self.p - 1
+
+    @property
+    def moment_orders(self) -> int:
+        return 2 * (self.p - 1)
+
+    def vmem_bytes(self) -> int:
+        x = self.b * self.d_tile
+        r = self.d_tile * self.k
+        power = self.b * self.d_tile
+        u = self.orders * self.b * self.k
+        m = self.moment_orders * self.b
+        return (x + r + power + u + m) * self.dtype_bytes
+
+    def fits(self, chip: Chip, head_room: float = 0.5) -> bool:
+        """Double-buffered tiles must fit in a VMEM fraction."""
+        return 2 * self.vmem_bytes() <= head_room * chip.vmem_bytes
+
+    def hbm_bytes(self) -> int:
+        """Fused schedule: X and R stream once; outputs written once."""
+        x = self.b * self.d
+        r = self.d * self.k
+        out = self.orders * self.b * self.k + self.moment_orders * self.b
+        return (x + r + out) * self.dtype_bytes
+
+    def hbm_bytes_naive(self) -> int:
+        """Per-order passes (GPU-style): X re-streamed for every sketch
+        order and once more for the moment scan; R re-streamed per order."""
+        x = (self.orders + 1) * self.b * self.d
+        r = self.orders * self.d * self.k
+        out = self.orders * self.b * self.k + self.moment_orders * self.b
+        return (x + r + out) * self.dtype_bytes
+
+    def flops(self) -> int:
+        """MXU matmuls (2·B·D·K per order) + VPU ladder (D·B per power)."""
+        mxu = 2 * self.orders * self.b * self.d * self.k
+        vpu = self.moment_orders * self.b * self.d * 2  # mul + moment add
+        return mxu + vpu
+
+    def intensity(self) -> float:
+        return self.flops() / self.hbm_bytes()
+
+    def mxu_utilization(self, chip: Chip) -> float:
+        """Roofline: min(1, intensity/ridge) — the fraction of peak the
+        schedule can sustain if the MXU pipeline is otherwise perfect."""
+        return min(1.0, self.intensity() / chip.ridge_intensity)
+
+    def bandwidth_win(self) -> float:
+        """The fused ladder's HBM-traffic advantage over naive passes."""
+        return self.hbm_bytes_naive() / self.hbm_bytes()
+
+
+@dataclass(frozen=True)
+class EstimateSchedule:
+    """The pairwise-combine kernel: p−1 GEMMs (B,K)x(K,B2) + rank-1 add."""
+
+    b: int
+    b2: int
+    k: int
+    p: int
+    dtype_bytes: int = 4
+
+    def vmem_bytes(self) -> int:
+        u = (self.p - 1) * self.b * self.k
+        v = (self.p - 1) * self.b2 * self.k
+        out = self.b * self.b2
+        margins = self.b + self.b2
+        return (u + v + out + margins) * self.dtype_bytes
+
+    def fits(self, chip: Chip, head_room: float = 0.5) -> bool:
+        return 2 * self.vmem_bytes() <= head_room * chip.vmem_bytes
+
+    def hbm_bytes(self) -> int:
+        return self.vmem_bytes()  # single grid step: everything streams once
+
+    def flops(self) -> int:
+        return 2 * (self.p - 1) * self.b * self.b2 * self.k + 2 * self.b * self.b2
+
+    def intensity(self) -> float:
+        return self.flops() / self.hbm_bytes()
+
+    def mxu_utilization(self, chip: Chip) -> float:
+        return min(1.0, self.intensity() / chip.ridge_intensity)
+
+
+def report(b=64, d=1024, d_tile=256, ks=(64, 128, 256), ps=(4, 6)) -> str:
+    """The §8 table: one row per artifact shape."""
+    chip = Chip()
+    lines = [
+        f"chip: vmem={chip.vmem_bytes >> 20}MiB hbm={chip.hbm_bw / 1e12:.1f}TB/s "
+        f"peak={chip.peak_flops / 1e12:.1f}TF/s ridge={chip.ridge_intensity:.0f} FLOP/B",
+        f"{'kernel':<22}{'vmem':>8}{'fits':>6}{'int.':>7}{'mxu%':>6}{'bw win':>8}",
+    ]
+    for p in ps:
+        for k in ks:
+            s = SketchSchedule(b=b, d=d, d_tile=d_tile, k=k, p=p)
+            lines.append(
+                f"sketch p={p} k={k:<10}{s.vmem_bytes() >> 10:>6}Ki"
+                f"{str(s.fits(chip)):>6}{s.intensity():>7.1f}"
+                f"{100 * s.mxu_utilization(chip):>6.1f}{s.bandwidth_win():>7.2f}x"
+            )
+            e = EstimateSchedule(b=b, b2=b, k=k, p=p)
+            lines.append(
+                f"estimate p={p} k={k:<8}{e.vmem_bytes() >> 10:>6}Ki"
+                f"{str(e.fits(chip)):>6}{e.intensity():>7.1f}"
+                f"{100 * e.mxu_utilization(chip):>6.1f}{'':>8}"
+            )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

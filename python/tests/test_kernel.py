@@ -1,0 +1,225 @@
+"""Kernel vs pure-jnp oracle — the CORE L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes/strategies of the Pallas kernels and
+asserts allclose against ref.py; plus deterministic edge cases and the
+decomposition identities the whole method rests on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import coeffs, ref
+from compile.kernels.estimate import estimate
+from compile.kernels.sketch import _pick_tile, sketch, sketch_alt
+
+F32 = jnp.float32
+
+
+def rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, dtype=F32)
+
+
+# ---------------------------------------------------------------- coeffs
+
+
+def test_coeffs_p4():
+    assert coeffs.inner_coeffs(4) == [-4, 6, -4]
+    assert coeffs.orders(4) == 3
+    assert coeffs.moment_orders(4) == 6
+
+
+def test_coeffs_p6():
+    assert coeffs.inner_coeffs(6) == [-6, 15, -20, 15, -6]
+
+
+@pytest.mark.parametrize("p", [3, 5, 2, 0, 7])
+def test_coeffs_rejects_bad_p(p):
+    with pytest.raises(ValueError):
+        coeffs.inner_coeffs(p)
+
+
+@pytest.mark.parametrize("p", [4, 6, 8, 10])
+def test_binomial_identity(p):
+    # Sum over the full binomial row at x=y=1: (1-1)^p = 0.
+    total = 2 + sum(coeffs.inner_coeffs(p))  # marginals carry +1 each
+    assert total == 0
+
+
+@pytest.mark.parametrize("p", [4, 6, 8])
+def test_decomposition_reconstructs_distance(p):
+    x = np.random.RandomState(0).rand(37)
+    y = np.random.RandomState(1).rand(37)
+    direct = np.sum(np.abs(x - y) ** p)
+    via = np.sum(x**p) + np.sum(y**p) + sum(
+        c * np.sum(x**m * y ** (p - m))
+        for m, c in zip(range(1, p), coeffs.inner_coeffs(p))
+    )
+    np.testing.assert_allclose(via, direct, rtol=1e-10)
+
+
+# ---------------------------------------------------------------- sketch
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    d=st.sampled_from([4, 12, 32, 96]),
+    k=st.integers(1, 16),
+    p=st.sampled_from([4, 6]),
+    seed=st.integers(0, 2**31),
+)
+def test_sketch_matches_ref(b, d, k, p, seed):
+    x = rand(seed, b, d)
+    r = rand(seed + 1, d, k)
+    u, m = sketch(x, r, p=p)
+    np.testing.assert_allclose(u, ref.ref_sketch(x, r, p), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(m, ref.ref_moments(x, p), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    d=st.sampled_from([8, 24, 64]),
+    k=st.integers(1, 12),
+    p=st.sampled_from([4, 6]),
+    seed=st.integers(0, 2**31),
+)
+def test_sketch_alt_matches_ref(b, d, k, p, seed):
+    x = rand(seed, b, d)
+    r_stack = rand(seed + 2, coeffs.orders(p), d, k)
+    u, m = sketch_alt(x, r_stack, p=p)
+    np.testing.assert_allclose(
+        u, ref.ref_sketch_alt(x, r_stack, p), rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(m, ref.ref_moments(x, p), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.sampled_from([32, 60, 96]),
+    tile=st.sampled_from([None, 4, 16]),
+    seed=st.integers(0, 2**31),
+)
+def test_sketch_tile_invariance(d, tile, seed):
+    # The D-grid schedule must not change the numbers.
+    if tile is not None and d % tile != 0:
+        tile = _pick_tile(d, tile)
+    x = rand(seed, 4, d)
+    r = rand(seed + 1, d, 8)
+    u_t, m_t = sketch(x, r, p=4, d_tile=tile)
+    u_full, m_full = sketch(x, r, p=4, d_tile=d)
+    np.testing.assert_allclose(u_t, u_full, rtol=2e-4, atol=1e-4)
+    np.testing.assert_allclose(m_t, m_full, rtol=2e-4, atol=1e-4)
+
+
+def test_sketch_zero_input():
+    u, m = sketch(jnp.zeros((3, 16)), jnp.ones((16, 4)), p=4)
+    assert not np.asarray(u).any()
+    assert not np.asarray(m).any()
+
+
+def test_pick_tile_divides():
+    for d in [7, 64, 100, 1024, 777]:
+        t = _pick_tile(d)
+        assert d % t == 0 and 1 <= t <= min(d, 256)
+
+
+# -------------------------------------------------------------- estimate
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    b2=st.integers(1, 6),
+    k=st.integers(1, 16),
+    p=st.sampled_from([4, 6]),
+    seed=st.integers(0, 2**31),
+)
+def test_estimate_matches_ref(b, b2, k, p, seed):
+    u = rand(seed, p - 1, b, k)
+    v = rand(seed + 1, p - 1, b2, k)
+    mx = jnp.abs(rand(seed + 2, b))
+    my = jnp.abs(rand(seed + 3, b2))
+    got = estimate(u, v, mx, my, p=p)
+    want = ref.ref_estimate(u, v, mx, my, p)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("p", [4, 6])
+def test_sketch_then_estimate_is_unbiased_mc(p):
+    # End-to-end: mean over many projections approaches the exact
+    # distance (the paper's core claim at kernel level).
+    d, k, reps = 24, 16, 400
+    x = jnp.abs(rand(3, 2, d))
+    mx = jnp.sum(x**p, axis=-1)
+    exact = ref.ref_exact(x, x, p)  # 2x2, off-diagonal is d(x0, x1)
+    est = np.zeros((2, 2))
+    for rep in range(reps):
+        r = rand(1000 + rep, d, k)
+        u, _ = sketch(x, r, p=p)
+        est += np.asarray(estimate(u, u, mx, mx, p=p))
+    est /= reps
+    # Diagonal must be ~0; off-diagonal within MC error (~1/sqrt(reps)).
+    target = float(exact[0, 1])
+    assert abs(est[0, 1] - target) / target < 0.2
+    assert abs(est[0, 0]) < 0.05 * target
+
+
+def test_exact_block_identity():
+    x = jnp.abs(rand(5, 3, 10))
+    d = ref.ref_exact(x, x, 4)
+    assert np.allclose(np.diag(d), 0.0, atol=1e-5)
+    # Symmetry of the exact distance matrix on identical sets.
+    np.testing.assert_allclose(d, d.T, rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------------- model
+
+
+def test_model_shapes():
+    from compile import model
+
+    b, d, k, p = 4, 32, 8, 4
+    x = rand(0, b, d)
+    r = rand(1, d, k)
+    u, m = model.sketch_block(x, r, p=p)
+    assert u.shape == (p - 1, b, k)
+    assert m.shape == (2 * (p - 1), b)
+    e = model.estimate_block(u, u, m[p - 1], m[p - 1], p=p)
+    assert e.shape == (b, b)
+    ex = model.exact_block(x, x, p=p)
+    assert ex.shape == (b, b)
+
+
+def test_model_estimate_consistent_with_ref():
+    from compile import model
+
+    b, d, k, p = 3, 20, 6, 4
+    x = jnp.abs(rand(5, b, d))
+    r = rand(6, d, k)
+    u, m = model.sketch_block(x, r, p=p)
+    got = model.estimate_block(u, u, m[p - 1], m[p - 1], p=p)
+    want = ref.ref_estimate(u, u, m[p - 1], m[p - 1], p)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------ aot
+
+
+def test_aot_hlo_text_roundtrip():
+    # Lower a small artifact grid and sanity-check the HLO text output.
+    from compile import aot
+
+    arts = list(aot.build_artifacts(b=4, d=16, ks=[4], ps=[4]))
+    names = [a[0] for a in arts]
+    assert "sketch_p4_b4_d16_k4" in names
+    assert "estimate_p4_b4_k4" in names
+    assert "exact_p4_b4_d16" in names
+    for name, fields, lowered in arts:
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "f32" in text
+        assert fields["op"] in ("sketch", "sketch_alt", "estimate", "exact")

@@ -1,0 +1,73 @@
+"""Tests for the analytical TPU schedule model (DESIGN.md §8)."""
+
+from compile.tpu_model import Chip, EstimateSchedule, SketchSchedule, report
+
+
+def default_sketch(**kw):
+    args = dict(b=64, d=1024, d_tile=256, k=128, p=4)
+    args.update(kw)
+    return SketchSchedule(**args)
+
+
+def test_default_artifact_grid_fits_vmem():
+    chip = Chip()
+    for p in (4, 6):
+        for k in (64, 128, 256):
+            assert default_sketch(k=k, p=p).fits(chip), (p, k)
+            assert EstimateSchedule(b=64, b2=64, k=k, p=p).fits(chip), (p, k)
+
+
+def test_vmem_grows_with_tile_and_k():
+    s = default_sketch()
+    assert default_sketch(d_tile=512).vmem_bytes() > s.vmem_bytes()
+    assert default_sketch(k=256).vmem_bytes() > s.vmem_bytes()
+
+
+def test_oversized_tile_rejected():
+    chip = Chip()
+    huge = default_sketch(b=512, d_tile=4096, k=512)
+    assert not huge.fits(chip)
+
+
+def test_bandwidth_win_approaches_p_minus_1():
+    # The fused ladder streams X once instead of (p-1)+1 times; with K
+    # << D the X stream dominates, so the win approaches p (orders + the
+    # moment pass) as K/D -> 0 and is > 2 for the default shapes.
+    s4 = default_sketch(k=64)
+    assert 2.0 < s4.bandwidth_win() <= s4.p
+    s6 = default_sketch(k=64, p=6)
+    assert s6.bandwidth_win() > s4.bandwidth_win()
+
+
+def test_hbm_accounting_consistent():
+    s = default_sketch()
+    assert s.hbm_bytes_naive() > s.hbm_bytes()
+    # Fused traffic = inputs + outputs, exactly once.
+    expected = 4 * (s.b * s.d + s.d * s.k + s.orders * s.b * s.k + s.moment_orders * s.b)
+    assert s.hbm_bytes() == expected
+
+
+def test_intensity_increases_with_k():
+    # More MXU work per X byte as K grows.
+    assert default_sketch(k=256).intensity() > default_sketch(k=64).intensity()
+
+
+def test_mxu_utilization_bounded():
+    chip = Chip()
+    for k in (16, 64, 256, 1024):
+        u = default_sketch(k=k).mxu_utilization(chip)
+        assert 0.0 < u <= 1.0
+
+
+def test_estimate_is_compute_bound_at_large_k():
+    chip = Chip()
+    e = EstimateSchedule(b=256, b2=256, k=512, p=4)
+    # Large square blocks at wide k push the GEMMs past the ridge.
+    assert e.intensity() > 0.5 * chip.ridge_intensity
+
+
+def test_report_renders():
+    text = report()
+    assert "sketch p=4" in text
+    assert "estimate p=6" in text
+    assert "ridge" in text

@@ -1,0 +1,11 @@
+//! Bench target regenerating paper experiment e9 (see DESIGN.md §4).
+//! Full sweep by default; set LPSKETCH_BENCH_FAST=1 for the short grid.
+
+fn main() {
+    let fast = std::env::var("LPSKETCH_BENCH_FAST").as_deref() == Ok("1");
+    let acc = lpsketch::experiments::run("e9", fast).expect("experiment runs");
+    let ok = lpsketch::experiments::common::report(&acc);
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,186 @@
+//! Hot-path micro-benchmarks — the instrument for the §Perf pass
+//! (EXPERIMENTS.md). Measures each layer in isolation:
+//!   * L3 sketch path: pure-rust sketcher by distribution (dense/sparse)
+//!   * L3 estimate path: plain vs MLE combine, pairs/s
+//!   * PJRT dispatch: artifact sketch/estimate per block (needs
+//!     `make artifacts`; skipped if absent)
+//!   * store: insert + pair-visit
+
+use std::path::Path;
+
+use lpsketch::bench_support::{bench, fmt_duration, Table};
+use lpsketch::config::Config;
+use lpsketch::coordinator::{Pipeline, SketchStore};
+use lpsketch::core::decompose::Decomposition;
+use lpsketch::core::estimator;
+use lpsketch::core::mle::{self, Solve};
+use lpsketch::data::{gen, DataDist};
+use lpsketch::projection::sketcher::Sketcher;
+use lpsketch::projection::{ProjectionDist, ProjectionSpec, Strategy};
+use lpsketch::runtime::{Engine, OpKind, OwnedInput};
+
+fn main() {
+    let mut table = Table::new(&["path", "config", "mean", "p95", "throughput"]);
+    let (n, d, k) = (256usize, 1024usize, 128usize);
+    let data = gen::generate(DataDist::ZipfTf { exponent: 1.1, density: 0.1 }, n, d, 7);
+    let rows: Vec<&[f32]> = (0..n).map(|i| data.row(i)).collect();
+
+    // L3 sketch throughput by projection distribution.
+    for (name, dist) in [
+        ("normal", ProjectionDist::Normal),
+        ("uniform", ProjectionDist::Uniform),
+        ("3pt s=3", ProjectionDist::ThreePoint(3.0)),
+        ("3pt s=100", ProjectionDist::ThreePoint(100.0)),
+    ] {
+        let sk = Sketcher::new(ProjectionSpec::new(1, k, dist, Strategy::Basic), 4);
+        let m = bench(&format!("sketch/{name}"), Some((n * d) as u64), || {
+            std::hint::black_box(sk.sketch_rows(&rows));
+        });
+        table.row(&[
+            "sketch".into(),
+            format!("{name} n={n} d={d} k={k}"),
+            fmt_duration(m.mean),
+            fmt_duration(m.p95),
+            format!("{:.1} Melem/s", m.throughput().unwrap() / 1e6),
+        ]);
+    }
+
+    // L3 estimate throughput: plain vs one-step MLE.
+    let sk = Sketcher::new(ProjectionSpec::new(1, k, ProjectionDist::Normal, Strategy::Basic), 4);
+    let sketches = sk.sketch_rows(&rows);
+    let dec = Decomposition::new(4).unwrap();
+    let pairs: Vec<(usize, usize)> =
+        (0..n).flat_map(|i| ((i + 1)..n).map(move |j| (i, j))).collect();
+    let m = bench("estimate/plain", Some(pairs.len() as u64), || {
+        let mut acc = 0.0;
+        for &(i, j) in &pairs {
+            acc += estimator::estimate(&dec, &sketches[i], &sketches[j]);
+        }
+        std::hint::black_box(acc);
+    });
+    table.row(&[
+        "estimate".into(),
+        format!("plain {} pairs k={k}", pairs.len()),
+        fmt_duration(m.mean),
+        fmt_duration(m.p95),
+        format!("{:.2} Mpairs/s", m.throughput().unwrap() / 1e6),
+    ]);
+    let m = bench("estimate/mle", Some(pairs.len() as u64), || {
+        let mut acc = 0.0;
+        for &(i, j) in &pairs {
+            acc += mle::estimate_mle(&dec, &sketches[i], &sketches[j], Solve::OneStepNewton);
+        }
+        std::hint::black_box(acc);
+    });
+    table.row(&[
+        "estimate".into(),
+        format!("mle-newton {} pairs k={k}", pairs.len()),
+        fmt_duration(m.mean),
+        fmt_duration(m.p95),
+        format!("{:.2} Mpairs/s", m.throughput().unwrap() / 1e6),
+    ]);
+
+    // End-to-end all-pairs through the pipeline.
+    let mut cfg = Config::default();
+    cfg.n = n;
+    cfg.d = d;
+    cfg.k = k;
+    let pipeline = Pipeline::new(cfg).unwrap();
+    pipeline.ingest(&data).unwrap();
+    let m = bench("pipeline/all_pairs", Some(pairs.len() as u64), || {
+        std::hint::black_box(pipeline.all_pairs_condensed());
+    });
+    table.row(&[
+        "pipeline".into(),
+        format!("all-pairs n={n} k={k}"),
+        fmt_duration(m.mean),
+        fmt_duration(m.p95),
+        format!("{:.2} Mpairs/s", m.throughput().unwrap() / 1e6),
+    ]);
+
+    // Store ops.
+    let store = SketchStore::new(4);
+    for (i, s) in sketches.iter().enumerate() {
+        store.insert(i as u64, s.clone());
+    }
+    let m = bench("store/pair_visit", Some(pairs.len() as u64), || {
+        let mut acc = 0.0;
+        for &(i, j) in &pairs {
+            acc += store
+                .with_pair(i as u64, j as u64, |a, b| estimator::estimate(&dec, a, b))
+                .unwrap();
+        }
+        std::hint::black_box(acc);
+    });
+    table.row(&[
+        "store".into(),
+        format!("locked pair visit × {}", pairs.len()),
+        fmt_duration(m.mean),
+        fmt_duration(m.p95),
+        format!("{:.2} Mpairs/s", m.throughput().unwrap() / 1e6),
+    ]);
+
+    // PJRT block dispatch (if artifacts exist).
+    if Path::new("artifacts/manifest.txt").exists() {
+        let engine = Engine::start(Path::new("artifacts")).unwrap();
+        let h = engine.handle();
+        if let Some(meta) = h.manifest().find_sketch(OpKind::Sketch, 4, 64).cloned() {
+            h.warm(&meta.name).unwrap();
+            let spec = ProjectionSpec::new(1, meta.k, ProjectionDist::Normal, Strategy::Basic);
+            let r = spec.materialize(1, 0, meta.d).data;
+            let x = gen::generate(DataDist::Uniform01, meta.b, meta.d, 3).data().to_vec();
+            let m = bench("pjrt/sketch_block", Some((meta.b * meta.d) as u64), || {
+                std::hint::black_box(
+                    h.run(
+                        &meta.name,
+                        vec![
+                            OwnedInput::new(x.clone(), &[meta.b, meta.d]),
+                            OwnedInput::new(r.clone(), &[meta.d, meta.k]),
+                        ],
+                    )
+                    .unwrap(),
+                );
+            });
+            table.row(&[
+                "pjrt".into(),
+                format!("sketch b={} d={} k={}", meta.b, meta.d, meta.k),
+                fmt_duration(m.mean),
+                fmt_duration(m.p95),
+                format!("{:.1} Melem/s", m.throughput().unwrap() / 1e6),
+            ]);
+        }
+        if let Some(meta) = h.manifest().find_estimate(4, 64).cloned() {
+            h.warm(&meta.name).unwrap();
+            let orders = meta.p - 1;
+            let u: Vec<f32> = (0..orders * meta.b * meta.k).map(|i| (i % 97) as f32 * 0.01).collect();
+            let v = u.clone();
+            let mx = vec![1.0f32; meta.b];
+            let my = vec![1.0f32; meta.b2];
+            let m = bench("pjrt/estimate_block", Some((meta.b * meta.b2) as u64), || {
+                std::hint::black_box(
+                    h.run(
+                        &meta.name,
+                        vec![
+                            OwnedInput::new(u.clone(), &[orders, meta.b, meta.k]),
+                            OwnedInput::new(v.clone(), &[orders, meta.b2, meta.k]),
+                            OwnedInput::new(mx.clone(), &[meta.b]),
+                            OwnedInput::new(my.clone(), &[meta.b2]),
+                        ],
+                    )
+                    .unwrap(),
+                );
+            });
+            table.row(&[
+                "pjrt".into(),
+                format!("estimate b={}x{} k={}", meta.b, meta.b2, meta.k),
+                fmt_duration(m.mean),
+                fmt_duration(m.p95),
+                format!("{:.2} Mpairs/s", m.throughput().unwrap() / 1e6),
+            ]);
+        }
+    } else {
+        eprintln!("(artifacts/ missing — PJRT rows skipped; run `make artifacts`)");
+    }
+
+    table.print();
+}

@@ -1,0 +1,147 @@
+//! Exact pairwise l_p^p computation — the O(n²D) baseline of the paper's
+//! headline cost comparison (E7), multi-threaded over row blocks.
+
+use crate::data::RowMatrix;
+
+/// Exact l_p^p distance between two f32 rows, accumulated in f64.
+#[inline]
+pub fn distance_f32(x: &[f32], y: &[f32], p: usize) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert!(p % 2 == 0);
+    let half = (p / 2) as i32;
+    let mut acc = 0.0f64;
+    for (&a, &b) in x.iter().zip(y) {
+        let diff = (a - b) as f64;
+        acc += (diff * diff).powi(half);
+    }
+    acc
+}
+
+/// All pairwise distances of `m` (upper triangle, row-major condensed:
+/// entry for (i, j), i < j, at index `i*n - i*(i+1)/2 + (j - i - 1)`).
+pub fn pairwise_condensed(m: &RowMatrix, p: usize, threads: usize) -> Vec<f64> {
+    let n = m.n();
+    let len = n * (n - 1) / 2;
+    let mut out = vec![0.0f64; len];
+    if n < 2 {
+        return out;
+    }
+    let threads = threads.max(1).min(n);
+    // Partition rows round-robin so thread loads balance despite the
+    // triangular row lengths.
+    std::thread::scope(|scope| {
+        for (t, chunk) in partition_condensed(n, threads).into_iter().enumerate() {
+            let out_ptr = SendPtr(out.as_mut_ptr());
+            scope.spawn(move || {
+                let out_ptr = out_ptr; // move the Send wrapper in
+                for i in chunk {
+                    let base = condensed_base(n, i);
+                    for j in (i + 1)..n {
+                        let d = distance_f32(m.row(i), m.row(j), p);
+                        // SAFETY: rows are disjoint across threads, so the
+                        // condensed ranges [base, base+n-i-1) never overlap.
+                        unsafe { *out_ptr.0.add(base + j - i - 1) = d };
+                    }
+                }
+                let _ = t;
+            });
+        }
+    });
+    out
+}
+
+/// Condensed index of the first pair of row `i`.
+#[inline]
+pub fn condensed_base(n: usize, i: usize) -> usize {
+    // Σ_{r<i} (n-1-r) = i·n − i(i+1)/2 (scipy's squareform convention).
+    i * n - i * (i + 1) / 2
+}
+
+/// Condensed index of pair (i, j), i < j.
+#[inline]
+pub fn condensed_index(n: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i < j && j < n);
+    condensed_base(n, i) + j - i - 1
+}
+
+/// Round-robin row partition balancing triangular work.
+fn partition_condensed(n: usize, threads: usize) -> Vec<Vec<usize>> {
+    let mut parts = vec![Vec::new(); threads];
+    for i in 0..n {
+        // Pair row i (long) with row n-1-i (short) by folding.
+        parts[i % threads].push(i);
+    }
+    parts
+}
+
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+
+/// Dense n×n2 exact distance matrix between two row sets (E7's block op).
+pub fn block(x: &RowMatrix, y: &RowMatrix, p: usize) -> Vec<f64> {
+    assert_eq!(x.d(), y.d());
+    let mut out = Vec::with_capacity(x.n() * y.n());
+    for i in 0..x.n() {
+        for j in 0..y.n() {
+            out.push(distance_f32(x.row(i), y.row(j), p));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::decompose::exact_distance;
+    use crate::data::{gen, DataDist};
+
+    #[test]
+    fn condensed_index_is_bijective() {
+        let n = 9;
+        let mut seen = vec![false; n * (n - 1) / 2];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let idx = condensed_index(n, i, j);
+                assert!(!seen[idx], "collision at ({i},{j})");
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn matches_f64_reference() {
+        let m = gen::generate(DataDist::Gaussian, 6, 33, 5);
+        let d = pairwise_condensed(&m, 4, 3);
+        for i in 0..m.n() {
+            for j in (i + 1)..m.n() {
+                let want = exact_distance(&m.row_f64(i), &m.row_f64(j), 4);
+                let got = d[condensed_index(m.n(), i, j)];
+                assert!((got - want).abs() < 1e-3 * (1.0 + want), "{got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        let m = gen::generate(DataDist::Uniform01, 17, 24, 9);
+        let a = pairwise_condensed(&m, 6, 1);
+        let b = pairwise_condensed(&m, 6, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn block_matches_condensed() {
+        let m = gen::generate(DataDist::Uniform01, 5, 16, 2);
+        let full = block(&m, &m, 4);
+        let cond = pairwise_condensed(&m, 4, 2);
+        for i in 0..5 {
+            assert_eq!(full[i * 5 + i], 0.0);
+            for j in (i + 1)..5 {
+                let got = full[i * 5 + j];
+                let want = cond[condensed_index(5, i, j)];
+                assert!((got - want).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Comparison baselines the paper's evaluation (and motivation) needs:
+//!
+//! * [`exact`] — the O(n²D) exact computation the sketches beat (E7).
+//! * [`stable`] — symmetric α-stable random projections (prior art;
+//!   structurally limited to p ≤ 2, the paper's whole motivation — E11).
+//! * [`sampling`] — coordinate sampling, the naive data-reduction
+//!   alternative that collapses on heavy-tailed data.
+
+pub mod exact;
+pub mod sampling;
+pub mod stable;

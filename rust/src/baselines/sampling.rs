@@ -1,0 +1,131 @@
+//! Coordinate-sampling baseline: estimate d_(p) from k uniformly sampled
+//! coordinates, d̂ = (D/k) Σ_{i∈S} |x_i − y_i|^p.
+//!
+//! The "obvious" alternative data-reduction scheme the paper's sketches
+//! compete with. Unbiased, same O(k) storage per row, but its variance
+//! scales with the *population variance of the coordinate contributions*
+//! — catastrophically bad on sparse / heavy-tailed data where a few
+//! coordinates carry most of the distance (exactly the TF-vector regime
+//! the paper motivates). E8/E11 plot this contrast.
+
+use crate::util::rng::Rng;
+
+/// A coordinate sample of one row: the k sampled values (shared index
+/// set per seed, so two rows sampled with the same seed are comparable).
+#[derive(Clone, Debug)]
+pub struct CoordSample {
+    pub d: usize,
+    pub values: Vec<f32>,
+}
+
+/// Sampler: picks k coordinate indices without replacement from [0, D).
+#[derive(Clone, Debug)]
+pub struct CoordSampler {
+    pub seed: u64,
+    pub k: usize,
+}
+
+impl CoordSampler {
+    pub fn new(seed: u64, k: usize) -> Self {
+        CoordSampler { seed, k }
+    }
+
+    /// The shared index set for dimension `d` (Floyd's algorithm —
+    /// uniform without replacement, O(k) memory).
+    pub fn indices(&self, d: usize) -> Vec<usize> {
+        let k = self.k.min(d);
+        let mut rng = Rng::new(self.seed ^ 0x5A3E_11DE);
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (d - k)..d {
+            let t = rng.next_range(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+
+    pub fn sample(&self, row: &[f32]) -> CoordSample {
+        let values = self.indices(row.len()).iter().map(|&i| row[i]).collect();
+        CoordSample { d: row.len(), values }
+    }
+}
+
+/// Unbiased estimate of d_(p) from two aligned coordinate samples.
+pub fn estimate(x: &CoordSample, y: &CoordSample, p: usize) -> f64 {
+    assert_eq!(x.d, y.d);
+    assert_eq!(x.values.len(), y.values.len());
+    let k = x.values.len();
+    let half = (p / 2) as i32;
+    let mut acc = 0.0f64;
+    for (&a, &b) in x.values.iter().zip(&y.values) {
+        let diff = (a - b) as f64;
+        acc += (diff * diff).powi(half);
+    }
+    acc * x.d as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::decompose::exact_distance;
+    use crate::util::stats::Welford;
+
+    #[test]
+    fn indices_are_unique_and_in_range() {
+        for seed in 0..20 {
+            let s = CoordSampler::new(seed, 17);
+            let idx = s.indices(40);
+            assert_eq!(idx.len(), 17);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), 17);
+            assert!(idx.iter().all(|&i| i < 40));
+        }
+    }
+
+    #[test]
+    fn k_equals_d_is_exact() {
+        let x: Vec<f32> = (0..24).map(|i| (i as f32 * 0.3).sin()).collect();
+        let y: Vec<f32> = (0..24).map(|i| (i as f32 * 0.7).cos()).collect();
+        let s = CoordSampler::new(3, 24);
+        let got = estimate(&s.sample(&x), &s.sample(&y), 4);
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let want = exact_distance(&x64, &y64, 4);
+        assert!((got - want).abs() < 1e-3 * (1.0 + want));
+    }
+
+    #[test]
+    fn unbiased_over_seeds() {
+        let x: Vec<f32> = (0..64).map(|i| 0.3 + (i as f32 * 0.13).sin().abs()).collect();
+        let y: Vec<f32> = (0..64).map(|i| 0.3 + (i as f32 * 0.29).cos().abs()).collect();
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let exact = exact_distance(&x64, &y64, 4);
+        let mut w = Welford::new();
+        for seed in 0..3000 {
+            let s = CoordSampler::new(seed, 16);
+            w.push(estimate(&s.sample(&x), &s.sample(&y), 4));
+        }
+        assert!(w.z_against(exact).abs() < 4.5, "mean={} exact={exact}", w.mean());
+    }
+
+    #[test]
+    fn heavy_tail_variance_blows_up() {
+        // One dominant coordinate: sampling misses it with prob 1−k/D,
+        // so the relative variance is huge vs a dense difference vector.
+        let d = 256;
+        let mut x = vec![0.0f32; d];
+        x[7] = 10.0; // single spike carries ~all of the distance
+        let y = vec![0.0f32; d];
+        let mut w = Welford::new();
+        for seed in 0..2000 {
+            let s = CoordSampler::new(seed, 16);
+            w.push(estimate(&s.sample(&x), &s.sample(&y), 4));
+        }
+        let exact = 10f64.powi(4);
+        let rel_sd = w.sample_variance().sqrt() / exact;
+        assert!(rel_sd > 2.0, "expected catastrophic rel sd, got {rel_sd}");
+    }
+}

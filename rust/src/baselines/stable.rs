@@ -1,0 +1,189 @@
+//! Symmetric α-stable random projections — the prior art the paper's
+//! introduction contrasts against (Indyk 2000/2006; Li 2008).
+//!
+//! For 0 < α ≤ 2, projecting rows with i.i.d. α-stable entries gives
+//! samples whose scale parameter is the l_α distance; median-type or
+//! geometric-mean estimators recover it. The *point of E11* is the other
+//! direction: stable distributions do not exist for α > 2, so running
+//! this machinery "at p = 4" (the closest one can do is α = 2) estimates
+//! the l_2 distance, not l_4 — the estimator is structurally unable to
+//! converge to d_(4) no matter how large k grows. That failure is the
+//! paper's motivation for the even-p decomposition approach.
+//!
+//! Sampler: Chambers–Mallows–Stuck (CMS), the standard exact method.
+
+use crate::util::rng::Rng;
+use std::f64::consts::PI;
+
+/// Draw one standard symmetric α-stable variate (β = 0) via CMS.
+pub fn sample_stable(alpha: f64, rng: &mut Rng) -> f64 {
+    assert!(alpha > 0.0 && alpha <= 2.0, "stable requires 0 < α ≤ 2");
+    let u = PI * (rng.next_f64_open() - 0.5); // U(−π/2, π/2)
+    let w = -rng.next_f64_open().ln(); // Exp(1)
+    if (alpha - 1.0).abs() < 1e-12 {
+        // Cauchy case (the general formula hits 0/0 at α = 1).
+        return u.tan();
+    }
+    let t = (alpha * u).sin() / u.cos().powf(1.0 / alpha);
+    let s = ((1.0 - alpha) * u).cos() / w;
+    t * s.powf((1.0 - alpha) / alpha)
+}
+
+/// A stable sketch of one row: k projections with i.i.d. S(α,0) entries.
+#[derive(Clone, Debug)]
+pub struct StableSketch {
+    pub alpha: f64,
+    pub data: Vec<f64>,
+}
+
+/// Stable-projection sketcher (counter-based entries, seeded like
+/// [`crate::projection::ProjectionSpec`]).
+#[derive(Clone, Debug)]
+pub struct StableSketcher {
+    pub seed: u64,
+    pub k: usize,
+    pub alpha: f64,
+}
+
+impl StableSketcher {
+    pub fn new(seed: u64, k: usize, alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 2.0);
+        StableSketcher { seed, k, alpha }
+    }
+
+    /// Project one row: out[j] = Σ_i x_i · s_ij, s_ij i.i.d. S(α,0).
+    pub fn sketch(&self, row: &[f32]) -> StableSketch {
+        let mut data = vec![0.0f64; self.k];
+        for (i, &x) in row.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            // One deterministic RNG stream per (row-index, column) pair.
+            let mut rng = Rng::new(
+                crate::util::rng::counter_hash(self.seed, i as u64, 0x57AB1E),
+            );
+            for slot in data.iter_mut() {
+                *slot += x as f64 * sample_stable(self.alpha, &mut rng);
+            }
+        }
+        StableSketch { alpha: self.alpha, data }
+    }
+}
+
+/// Geometric-mean estimator of the l_α distance^α between two sketched
+/// rows (Li 2008, SODA): d̂_α = C(α,k) · Π |u_j − v_j|^{α/k}.
+///
+/// The bias-correction constant uses E|S(α,0)|^{α/k}; we compute it by
+/// seeded Monte-Carlo once per (α, k) — exact closed forms involve
+/// gamma-function ratios, and MC at 200k draws is accurate to ~0.2%,
+/// well inside the estimator's own noise at practical k.
+pub fn geometric_mean_estimate(u: &StableSketch, v: &StableSketch) -> f64 {
+    assert_eq!(u.data.len(), v.data.len());
+    assert_eq!(u.alpha, v.alpha);
+    let k = u.data.len();
+    let alpha = u.alpha;
+    let exp = alpha / k as f64;
+    let mut log_prod = 0.0f64;
+    for (a, b) in u.data.iter().zip(&v.data) {
+        let diff = (a - b).abs().max(1e-300);
+        log_prod += exp * diff.ln();
+    }
+    log_prod.exp() / gm_constant(alpha, k)
+}
+
+/// E[Π |S_j|^{α/k}] = (E|S|^{α/k})^k for i.i.d. S_j ~ S(α,0) — the
+/// normalizer making the geometric-mean estimator unbiased on the scale.
+fn gm_constant(alpha: f64, k: usize) -> f64 {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    static CACHE: Mutex<Option<HashMap<(u64, usize), f64>>> = Mutex::new(None);
+    let key = (alpha.to_bits(), k);
+    if let Some(v) = CACHE.lock().unwrap().get_or_insert_with(HashMap::new).get(&key) {
+        return *v;
+    }
+    let c = gm_constant_uncached(alpha, k);
+    CACHE.lock().unwrap().get_or_insert_with(HashMap::new).insert(key, c);
+    c
+}
+
+/// Deterministic seeded MC for E[Π|S_j|^{α/k}]; exact closed forms
+/// involve gamma-function ratios that add no accuracy at this tolerance.
+fn gm_constant_uncached(alpha: f64, k: usize) -> f64 {
+    let reps = 200_000;
+    let exp = alpha / k as f64;
+    let mut rng = Rng::new(0x6E0_CAFE ^ alpha.to_bits().rotate_left(17) ^ k as u64);
+    let mut mean = 0.0f64;
+    for _ in 0..reps {
+        let s = sample_stable(alpha, &mut rng).abs().max(1e-300);
+        mean += s.powf(exp);
+    }
+    mean /= reps as f64;
+    mean.powi(k as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Welford;
+
+    #[test]
+    fn cauchy_samples_have_cauchy_quartiles() {
+        // For S(1,0) = standard Cauchy, the quartiles are ±1.
+        let mut rng = Rng::new(77);
+        let mut xs: Vec<f64> = (0..20_000).map(|_| sample_stable(1.0, &mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q1 = xs[xs.len() / 4];
+        let q3 = xs[3 * xs.len() / 4];
+        assert!((q1 + 1.0).abs() < 0.05, "q1={q1}");
+        assert!((q3 - 1.0).abs() < 0.05, "q3={q3}");
+    }
+
+    #[test]
+    fn alpha2_samples_are_gaussian_var2() {
+        // S(2,0) has variance 2.
+        let mut rng = Rng::new(78);
+        let mut w = Welford::new();
+        for _ in 0..40_000 {
+            w.push(sample_stable(2.0, &mut rng));
+        }
+        assert!(w.mean().abs() < 0.03, "mean={}", w.mean());
+        assert!((w.sample_variance() - 2.0).abs() < 0.08, "var={}", w.sample_variance());
+    }
+
+    #[test]
+    fn gm_estimator_recovers_l1_distance() {
+        // α = 1: estimates Σ|x−y| (l_1). MC over seeds.
+        let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.17).sin()).collect();
+        let y: Vec<f32> = (0..32).map(|i| (i as f32 * 0.11).cos()).collect();
+        let exact: f64 = x.iter().zip(&y).map(|(&a, &b)| ((a - b) as f64).abs()).sum();
+        let mut w = Welford::new();
+        for seed in 0..400 {
+            let sk = StableSketcher::new(seed, 64, 1.0);
+            let (u, v) = (sk.sketch(&x), sk.sketch(&y));
+            w.push(geometric_mean_estimate(&u, &v));
+        }
+        let rel = (w.mean() - exact).abs() / exact;
+        assert!(rel < 0.05, "mean={} exact={exact} rel={rel}", w.mean());
+    }
+
+    #[test]
+    fn fails_for_p4_structurally() {
+        // The E11 claim: α is capped at 2, so the "best effort" stable
+        // estimate converges to the l_2 distance — bounded away from the
+        // l_4 distance regardless of k.
+        let x: Vec<f32> = (0..48).map(|i| 0.5 + 0.4 * (i as f32 * 0.23).sin()).collect();
+        let y: Vec<f32> = (0..48).map(|i| 0.5 + 0.4 * (i as f32 * 0.31).cos()).collect();
+        let l2: f64 = x.iter().zip(&y).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+        let l4: f64 = x.iter().zip(&y).map(|(&a, &b)| ((a - b) as f64).powi(4)).sum();
+        let mut w = Welford::new();
+        for seed in 0..300 {
+            let sk = StableSketcher::new(seed, 128, 2.0);
+            let (u, v) = (sk.sketch(&x), sk.sketch(&y));
+            w.push(geometric_mean_estimate(&u, &v));
+        }
+        // Converges to l_2 …
+        assert!((w.mean() - l2).abs() / l2 < 0.1, "mean={} l2={l2}", w.mean());
+        // … which is far from l_4 (the distances differ by >3× here).
+        assert!((w.mean() - l4).abs() / l4 > 1.0, "mean={} l4={l4}", w.mean());
+    }
+}

@@ -1,0 +1,234 @@
+//! In-repo micro-benchmark harness (criterion is not vendored; DESIGN.md
+//! §3): warmup, adaptive iteration count, robust summary statistics, and
+//! an aligned table printer shared by every `benches/` target.
+//!
+//! Methodology mirrors criterion's core loop: run the closure until a
+//! target measurement time is accumulated (after a warmup phase), then
+//! report mean / p50 / p95 over per-iteration times.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    /// Elements per second, if `elements` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.mean.as_secs_f64())
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster settings for CI-ish runs (env `LPSKETCH_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("LPSKETCH_BENCH_FAST").as_deref() == Ok("1") {
+            BenchConfig {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(100),
+                min_iters: 3,
+                max_iters: 10_000,
+            }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// Time `f` under `cfg`; `elements` feeds the throughput column.
+pub fn bench_with<F: FnMut()>(
+    cfg: &BenchConfig,
+    name: &str,
+    elements: Option<u64>,
+    mut f: F,
+) -> Measurement {
+    // Warmup until the budget elapses (at least one call).
+    let w0 = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_iters == 0 || w0.elapsed() < cfg.warmup {
+        f();
+        warm_iters += 1;
+        if warm_iters >= cfg.max_iters {
+            break;
+        }
+    }
+    // Measure.
+    let mut times = Vec::new();
+    let m0 = Instant::now();
+    while (times.len() as u64) < cfg.min_iters
+        || (m0.elapsed() < cfg.measure && (times.len() as u64) < cfg.max_iters)
+    {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let mut sorted = times.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Measurement {
+        name: name.to_string(),
+        iters: times.len() as u64,
+        mean: Duration::from_secs_f64(mean),
+        p50: Duration::from_secs_f64(percentile(&sorted, 0.5)),
+        p95: Duration::from_secs_f64(percentile(&sorted, 0.95)),
+        elements,
+    }
+}
+
+/// Convenience: default config from env.
+pub fn bench<F: FnMut()>(name: &str, elements: Option<u64>, f: F) -> Measurement {
+    bench_with(&BenchConfig::from_env(), name, elements, f)
+}
+
+/// Fixed-width table printer: pass header + rows of equal arity.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Duration → human string (µs/ms/s picked by magnitude).
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// f64 → short scientific-ish string for table cells.
+pub fn fmt_num(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let a = x.abs();
+    if (1e-3..1e6).contains(&a) {
+        format!("{x:.4}")
+    } else {
+        format!("{x:.3e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_percentiles() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_iters: 5,
+            max_iters: 10_000,
+        };
+        let m = bench_with(&cfg, "noop", Some(10), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.iters >= 5);
+        assert!(m.p50 <= m.p95);
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "22".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1].chars().all(|c| c == '-'), true);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with("us"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).ends_with('s'));
+        assert_eq!(fmt_num(0.0), "0");
+        assert!(fmt_num(1e9).contains('e'));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,282 @@
+//! Configuration system: one struct drives the CLI, the pipeline, the
+//! examples, and the experiment harness.
+//!
+//! Sources, later wins: built-in defaults → config file (`key = value`
+//! lines, `#` comments) → command-line overrides (`--key value` /
+//! `--key=value`). No external parser crates (none are vendored) — the
+//! format is a flat key list, documented per field below.
+
+use std::path::{Path, PathBuf};
+
+use crate::data::DataDist;
+use crate::projection::{ProjectionDist, Strategy};
+
+/// Full pipeline / estimator configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Even p ≥ 4 — the l_p distance order.
+    pub p: usize,
+    /// Sketch width k ≪ D.
+    pub k: usize,
+    /// Projection strategy (basic | alternative), paper §2.1/§2.2.
+    pub strategy: Strategy,
+    /// Projection distribution: normal | uniform | threepoint:<s>.
+    pub dist: ProjectionDist,
+    /// Root seed for projections + data generation.
+    pub seed: u64,
+    /// Rows per ingest block (the sketch-artifact batch size).
+    pub block_rows: usize,
+    /// Number of sketch worker threads.
+    pub workers: usize,
+    /// Bounded-queue depth per stage (backpressure knob).
+    pub queue_depth: usize,
+    /// Query batcher: max pairs per batch.
+    pub batch_max: usize,
+    /// Query batcher: deadline in microseconds before a partial batch is
+    /// flushed.
+    pub batch_deadline_us: u64,
+    /// Use the margin MLE (Lemma 4) on the query path.
+    pub use_mle: bool,
+    /// Prefer the PJRT engine when artifacts match; fall back to pure
+    /// rust otherwise.
+    pub use_pjrt: bool,
+    /// Artifacts directory (manifest + *.hlo.txt).
+    pub artifacts_dir: PathBuf,
+    /// Synthetic data distribution for generated workloads.
+    pub data_dist: DataDist,
+    /// Generated workload shape.
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            p: 4,
+            k: 128,
+            strategy: Strategy::Basic,
+            dist: ProjectionDist::Normal,
+            seed: 42,
+            block_rows: 64,
+            workers: std::thread::available_parallelism().map_or(1, |n| n.get()),
+            queue_depth: 8,
+            batch_max: 4096,
+            batch_deadline_us: 200,
+            use_mle: false,
+            use_pjrt: false,
+            artifacts_dir: PathBuf::from("artifacts"),
+            data_dist: DataDist::ZipfTf { exponent: 1.1, density: 0.1 },
+            n: 1024,
+            d: 1024,
+        }
+    }
+}
+
+impl Config {
+    /// Apply one `key`, `value` pair. Unknown keys are an error so typos
+    /// fail loudly.
+    pub fn set(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        match key {
+            "p" => {
+                self.p = value.parse()?;
+                anyhow::ensure!(self.p >= 4 && self.p % 2 == 0, "p must be even and >= 4");
+            }
+            "k" => self.k = parse_nonzero(key, value)?,
+            "strategy" => self.strategy = Strategy::parse(value)?,
+            "dist" => self.dist = ProjectionDist::parse(value)?,
+            "seed" => self.seed = value.parse()?,
+            "block-rows" | "block_rows" => self.block_rows = parse_nonzero(key, value)?,
+            "workers" => self.workers = parse_nonzero(key, value)?,
+            "queue-depth" | "queue_depth" => self.queue_depth = parse_nonzero(key, value)?,
+            "batch-max" | "batch_max" => self.batch_max = parse_nonzero(key, value)?,
+            "batch-deadline-us" | "batch_deadline_us" => self.batch_deadline_us = value.parse()?,
+            "mle" | "use-mle" | "use_mle" => self.use_mle = parse_bool(value)?,
+            "pjrt" | "use-pjrt" | "use_pjrt" => self.use_pjrt = parse_bool(value)?,
+            "artifacts-dir" | "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
+            "data-dist" | "data_dist" => self.data_dist = DataDist::parse(value)?,
+            "n" => self.n = parse_nonzero(key, value)?,
+            "d" => self.d = parse_nonzero(key, value)?,
+            _ => anyhow::bail!("unknown config key {key:?}"),
+        }
+        Ok(())
+    }
+
+    /// Parse a `key = value` config file.
+    pub fn load_file(&mut self, path: &Path) -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {path:?}: {e}"))?;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("{path:?}:{}: expected key = value", lineno + 1))?;
+            self.set(k.trim(), v.trim())
+                .map_err(|e| anyhow::anyhow!("{path:?}:{}: {e}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Apply `--key value` / `--key=value` style CLI arguments; returns
+    /// the positional (non-flag) arguments in order.
+    pub fn apply_args<I: IntoIterator<Item = String>>(
+        &mut self,
+        args: I,
+    ) -> anyhow::Result<Vec<String>> {
+        let mut positional = Vec::new();
+        let mut it = args.into_iter();
+        while let Some(arg) = it.next() {
+            if let Some(flag) = arg.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    self.set(k, v)?;
+                } else if flag == "config" {
+                    let path = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--config needs a path"))?;
+                    self.load_file(Path::new(&path))?;
+                } else if matches!(flag, "mle" | "pjrt") {
+                    // Bare boolean flags.
+                    self.set(flag, "true")?;
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--{flag} needs a value"))?;
+                    self.set(flag, &v)?;
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        self.validate()?;
+        Ok(positional)
+    }
+
+    /// Cross-field invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.p >= 4 && self.p % 2 == 0, "p must be even and >= 4");
+        anyhow::ensure!(
+            self.k <= self.d,
+            "k ({}) must not exceed d ({}) — sketches must compress",
+            self.k,
+            self.d
+        );
+        Ok(())
+    }
+
+    /// Projection spec derived from this config.
+    pub fn projection_spec(&self) -> crate::projection::ProjectionSpec {
+        crate::projection::ProjectionSpec::new(self.seed, self.k, self.dist, self.strategy)
+    }
+
+    /// One-line human summary (logged by the CLI and examples).
+    pub fn describe(&self) -> String {
+        format!(
+            "p={} k={} strategy={} dist={} n={} d={} workers={} block={} mle={} pjrt={}",
+            self.p,
+            self.k,
+            self.strategy.as_str(),
+            self.dist.describe(),
+            self.n,
+            self.d,
+            self.workers,
+            self.block_rows,
+            self.use_mle,
+            self.use_pjrt,
+        )
+    }
+}
+
+fn parse_bool(v: &str) -> anyhow::Result<bool> {
+    match v {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        _ => anyhow::bail!("expected bool, got {v:?}"),
+    }
+}
+
+fn parse_nonzero(key: &str, v: &str) -> anyhow::Result<usize> {
+    let n: usize = v.parse()?;
+    anyhow::ensure!(n > 0, "{key} must be > 0");
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = Config::default();
+        let pos = c
+            .apply_args(args(&["--p", "6", "--k=64", "--strategy", "alt", "run"]))
+            .unwrap();
+        assert_eq!(c.p, 6);
+        assert_eq!(c.k, 64);
+        assert_eq!(c.strategy, Strategy::Alternative);
+        assert_eq!(pos, vec!["run".to_string()]);
+    }
+
+    #[test]
+    fn bare_boolean_flags() {
+        let mut c = Config::default();
+        c.apply_args(args(&["--mle", "--pjrt"])).unwrap();
+        assert!(c.use_mle);
+        assert!(c.use_pjrt);
+    }
+
+    #[test]
+    fn rejects_odd_p() {
+        let mut c = Config::default();
+        assert!(c.set("p", "5").is_err());
+        assert!(c.set("p", "2").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let mut c = Config::default();
+        assert!(c.set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn rejects_k_above_d() {
+        let mut c = Config::default();
+        assert!(c.apply_args(args(&["--d", "64", "--k", "128"])).is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("lpsketch_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.conf");
+        std::fs::write(&path, "# comment\np = 6\nk = 32 # trailing\n\ndist = threepoint:16\n")
+            .unwrap();
+        let mut c = Config::default();
+        c.load_file(&path).unwrap();
+        assert_eq!(c.p, 6);
+        assert_eq!(c.k, 32);
+        assert_eq!(c.dist, ProjectionDist::ThreePoint(16.0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_error_carries_line() {
+        let dir = std::env::temp_dir().join("lpsketch_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.conf");
+        std::fs::write(&path, "p = 4\nbogus_line\n").unwrap();
+        let err = Config::default().load_file(&path).unwrap_err().to_string();
+        assert!(err.contains(":2"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,224 @@
+//! Query batcher: coalesces individual pair queries into batches — the
+//! dynamic-batching pattern of serving systems, applied to distance
+//! queries.
+//!
+//! Rationale: the estimate op amortizes (one artifact dispatch / one
+//! cache-warm pass over the sketch store serves the whole batch), so
+//! throughput wants big batches while latency wants small ones. The
+//! policy is **work-conserving**: a batch is flushed as soon as
+//! * `max_batch` queries have accumulated (size cap), or
+//! * the queue has gone idle for `idle_tick` (no point waiting — flush
+//!   what we have; this keeps single-client latency at ~tick, not at
+//!   the deadline), or
+//! * `deadline` has elapsed since the *oldest* queued query (upper
+//!   bound under a continuous trickle that never goes idle).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One pair query with its reply slot.
+pub struct PairQuery<T> {
+    pub a: u64,
+    pub b: u64,
+    pub reply: mpsc::SyncSender<T>,
+}
+
+/// Outcome of one drain step.
+pub enum Drained<T> {
+    /// A batch ready to execute.
+    Batch(Vec<PairQuery<T>>, FlushReason),
+    /// Channel closed and nothing pending — shut down.
+    Closed,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// Size cap reached.
+    Size,
+    /// Queue went idle (work-conserving fast path).
+    Idle,
+    /// Deadline since the oldest query expired under continuous load.
+    Deadline,
+    /// Channel closed with a partial batch pending.
+    Drain,
+}
+
+/// Batching policy over an mpsc receiver.
+pub struct Batcher<T> {
+    rx: mpsc::Receiver<PairQuery<T>>,
+    pub max_batch: usize,
+    pub deadline: Duration,
+    /// How long an empty queue is polled before flushing a partial
+    /// batch. Small (≈20µs): this is the added latency for a lone
+    /// client.
+    pub idle_tick: Duration,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(rx: mpsc::Receiver<PairQuery<T>>, max_batch: usize, deadline: Duration) -> Self {
+        assert!(max_batch > 0);
+        Batcher { rx, max_batch, deadline, idle_tick: Duration::from_micros(20) }
+    }
+
+    /// Block until a batch is ready (or the channel closes).
+    pub fn drain(&self) -> Drained<T> {
+        // Block for the first query.
+        let first = match self.rx.recv() {
+            Ok(q) => q,
+            Err(_) => return Drained::Closed,
+        };
+        let started = Instant::now();
+        let mut batch = vec![first];
+        while batch.len() < self.max_batch {
+            // Fast path: drain whatever is already queued.
+            match self.rx.try_recv() {
+                Ok(q) => {
+                    batch.push(q);
+                    continue;
+                }
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    return Drained::Batch(batch, FlushReason::Drain)
+                }
+                Err(mpsc::TryRecvError::Empty) => {}
+            }
+            // Queue momentarily empty: give producers one idle tick
+            // (bounded by the remaining deadline) then flush.
+            let left = self.deadline.saturating_sub(started.elapsed());
+            if left.is_zero() {
+                return Drained::Batch(batch, FlushReason::Deadline);
+            }
+            match self.rx.recv_timeout(self.idle_tick.min(left)) {
+                Ok(q) => batch.push(q),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    let reason = if started.elapsed() >= self.deadline {
+                        FlushReason::Deadline
+                    } else {
+                        FlushReason::Idle
+                    };
+                    return Drained::Batch(batch, reason);
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Drained::Batch(batch, FlushReason::Drain)
+                }
+            }
+        }
+        Drained::Batch(batch, FlushReason::Size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(a: u64, b: u64) -> (PairQuery<f64>, mpsc::Receiver<f64>) {
+        let (reply, rx) = mpsc::sync_channel(1);
+        (PairQuery { a, b, reply }, rx)
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let (tx, rx) = mpsc::channel();
+        let batcher = Batcher::new(rx, 3, Duration::from_secs(10));
+        let mut replies = Vec::new();
+        for i in 0..3 {
+            let (query, r) = q(i, i + 1);
+            tx.send(query).unwrap();
+            replies.push(r);
+        }
+        match batcher.drain() {
+            Drained::Batch(batch, FlushReason::Size) => assert_eq!(batch.len(), 3),
+            _ => panic!("expected size flush"),
+        }
+    }
+
+    #[test]
+    fn lone_query_flushes_fast_on_idle() {
+        let (tx, rx) = mpsc::channel();
+        let batcher = Batcher::new(rx, 100, Duration::from_secs(10));
+        let (query, _r) = q(1, 2);
+        tx.send(query).unwrap();
+        let t0 = Instant::now();
+        match batcher.drain() {
+            Drained::Batch(batch, FlushReason::Idle) => {
+                assert_eq!(batch.len(), 1);
+                // Work-conserving: flushed in ~idle_tick, far below the
+                // 10s deadline.
+                assert!(t0.elapsed() < Duration::from_millis(100));
+            }
+            _ => panic!("expected idle flush"),
+        }
+    }
+
+    #[test]
+    fn burst_is_coalesced_into_one_batch() {
+        let (tx, rx) = mpsc::channel();
+        let batcher = Batcher::new(rx, 100, Duration::from_secs(10));
+        let mut replies = Vec::new();
+        for i in 0..10 {
+            let (query, r) = q(i, i + 1);
+            tx.send(query).unwrap();
+            replies.push(r);
+        }
+        match batcher.drain() {
+            Drained::Batch(batch, reason) => {
+                assert_eq!(batch.len(), 10);
+                assert!(matches!(reason, FlushReason::Idle | FlushReason::Deadline));
+            }
+            _ => panic!("expected a batch"),
+        }
+    }
+
+    #[test]
+    fn deadline_bounds_continuous_trickle() {
+        // A producer sending faster than the idle tick keeps the queue
+        // warm; the deadline caps how long the batch can grow.
+        let (tx, rx) = mpsc::channel();
+        let mut batcher = Batcher::new(rx, 1_000_000, Duration::from_millis(30));
+        batcher.idle_tick = Duration::from_millis(5);
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let producer = std::thread::spawn(move || {
+            let mut i = 0u64;
+            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                let (query, _r) = q(i, i + 1);
+                if tx.send(query).is_err() {
+                    break;
+                }
+                i += 1;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        let t0 = Instant::now();
+        match batcher.drain() {
+            Drained::Batch(batch, FlushReason::Deadline) => {
+                assert!(batch.len() >= 2);
+                assert!(t0.elapsed() >= Duration::from_millis(25));
+            }
+            Drained::Batch(_, reason) => panic!("expected deadline flush, got {reason:?}"),
+            Drained::Closed => panic!("closed"),
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn drains_partial_on_close() {
+        let (tx, rx) = mpsc::channel();
+        let batcher = Batcher::new(rx, 100, Duration::from_secs(10));
+        let (query, _r) = q(1, 2);
+        tx.send(query).unwrap();
+        drop(tx);
+        match batcher.drain() {
+            Drained::Batch(batch, FlushReason::Drain) => assert_eq!(batch.len(), 1),
+            _ => panic!("expected drain flush"),
+        }
+    }
+
+    #[test]
+    fn closed_empty_reports_closed() {
+        let (tx, rx) = mpsc::channel::<PairQuery<f64>>();
+        drop(tx);
+        let batcher = Batcher::new(rx, 10, Duration::from_millis(1));
+        assert!(matches!(batcher.drain(), Drained::Closed));
+    }
+}

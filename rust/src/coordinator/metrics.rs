@@ -1,0 +1,184 @@
+//! Pipeline metrics: lock-free counters + a log-bucketed latency
+//! histogram, snapshotable for the CLI / benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log₂-bucketed histogram of microsecond latencies (buckets:
+/// [0,1), [1,2), [2,4), … — 40 buckets covers > 15 minutes).
+pub struct Histogram {
+    buckets: [AtomicU64; 40],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram { buckets: [ZERO; 40], count: AtomicU64::new(0), sum_us: AtomicU64::new(0) }
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let bucket = (64 - us.leading_zeros()) as usize; // 0 → 0, 1 → 1, 2..3 → 2, …
+        self.buckets[bucket.min(39)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, dur: std::time::Duration) {
+        self.record_us(dur.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0..1) — a
+    /// ≤ 2× overestimate by construction, good enough for dashboards.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i == 0 { 1 } else { 1u64 << i };
+            }
+        }
+        1u64 << 39
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// All pipeline counters. Cheap to share via `Arc`.
+#[derive(Default)]
+pub struct Metrics {
+    pub rows_ingested: AtomicU64,
+    pub blocks_sketched: AtomicU64,
+    pub queries_served: AtomicU64,
+    pub batches_flushed: AtomicU64,
+    pub batch_deadline_flushes: AtomicU64,
+    pub pjrt_calls: AtomicU64,
+    pub fallback_calls: AtomicU64,
+    pub sketch_latency: Histogram,
+    pub query_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            rows_ingested: self.rows_ingested.load(Ordering::Relaxed),
+            blocks_sketched: self.blocks_sketched.load(Ordering::Relaxed),
+            queries_served: self.queries_served.load(Ordering::Relaxed),
+            batches_flushed: self.batches_flushed.load(Ordering::Relaxed),
+            batch_deadline_flushes: self.batch_deadline_flushes.load(Ordering::Relaxed),
+            pjrt_calls: self.pjrt_calls.load(Ordering::Relaxed),
+            fallback_calls: self.fallback_calls.load(Ordering::Relaxed),
+            sketch_mean_us: self.sketch_latency.mean_us(),
+            sketch_p95_us: self.sketch_latency.quantile_us(0.95),
+            query_mean_us: self.query_latency.mean_us(),
+            query_p95_us: self.query_latency.quantile_us(0.95),
+        }
+    }
+}
+
+/// Point-in-time copy of the counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub rows_ingested: u64,
+    pub blocks_sketched: u64,
+    pub queries_served: u64,
+    pub batches_flushed: u64,
+    pub batch_deadline_flushes: u64,
+    pub pjrt_calls: u64,
+    pub fallback_calls: u64,
+    pub sketch_mean_us: f64,
+    pub sketch_p95_us: u64,
+    pub query_mean_us: f64,
+    pub query_p95_us: u64,
+}
+
+impl Snapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "rows={} blocks={} queries={} batches={} (deadline={}) pjrt={} fallback={} \
+             sketch_mean={:.1}us sketch_p95={}us query_mean={:.1}us query_p95={}us",
+            self.rows_ingested,
+            self.blocks_sketched,
+            self.queries_served,
+            self.batches_flushed,
+            self.batch_deadline_flushes,
+            self.pjrt_calls,
+            self.fallback_calls,
+            self.sketch_mean_us,
+            self.sketch_p95_us,
+            self.query_mean_us,
+            self.query_p95_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_monotone() {
+        let h = Histogram::new();
+        for us in [0u64, 1, 3, 7, 100, 1000, 100_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.quantile_us(0.01) <= h.quantile_us(0.5));
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+    }
+
+    #[test]
+    fn quantile_bounds_value() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record_us(100);
+        }
+        let q = h.quantile_us(0.5);
+        assert!((100..=256).contains(&q), "q={q}"); // ≤ 2× overestimate
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let h = Histogram::new();
+        h.record_us(10);
+        h.record_us(30);
+        assert_eq!(h.mean_us(), 20.0);
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let m = Metrics::new();
+        m.rows_ingested.fetch_add(5, Ordering::Relaxed);
+        m.pjrt_calls.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.rows_ingested, 5);
+        assert_eq!(s.pjrt_calls, 2);
+        assert!(s.render().contains("rows=5"));
+    }
+}

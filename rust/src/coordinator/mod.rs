@@ -1,0 +1,27 @@
+//! Layer-3 coordinator: the streaming orchestrator that is this repo's
+//! systems contribution (DESIGN.md §2).
+//!
+//! * [`pipeline`] — reader → sharded sketch workers → sketch store, with
+//!   bounded channels as backpressure; query side (single / batched /
+//!   all-pairs).
+//! * [`scheduler`] — slices row streams into fixed-size blocks.
+//! * [`batcher`] — deadline+size dynamic batching for pair queries.
+//! * [`router`] — row-id → shard assignment (a partition, by invariant).
+//! * [`state`] — the sharded SketchStore (the O(nk) replacement for the
+//!   O(nD) matrix).
+//! * [`metrics`] — counters + latency histograms.
+
+pub mod batcher;
+pub mod metrics;
+pub mod persist;
+pub mod pipeline;
+pub mod rebalance;
+pub mod router;
+pub mod scheduler;
+pub mod state;
+
+pub use metrics::{Metrics, Snapshot};
+pub use pipeline::{IngestReport, Pipeline, QueryHandle};
+pub use router::Router;
+pub use scheduler::{Block, BlockScheduler};
+pub use state::SketchStore;

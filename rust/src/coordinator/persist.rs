@@ -1,0 +1,287 @@
+//! Sketch-store persistence: save the O(nk) sketch state to disk and
+//! reload it later — the operational consequence of the paper's storage
+//! claim (after the linear scan, the sketches *are* the dataset; the
+//! O(nD) matrix can be discarded).
+//!
+//! Format (little-endian, versioned):
+//! ```text
+//! magic "LPSK" | u32 version | u32 p | u32 k | u32 orders |
+//! u32 moment_orders | u8 two_sided | u64 row_count |
+//! per row: u64 id | uside f32[orders*k] | (vside f32[orders*k])? |
+//!          moments f64[moment_orders]
+//! ```
+//! The header captures everything needed to validate compatibility with
+//! a [`crate::config::Config`] before any row is read.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::core::marginals::Moments;
+use crate::projection::sketcher::{RowSketch, SketchSet};
+
+use super::state::SketchStore;
+
+const MAGIC: &[u8; 4] = b"LPSK";
+const VERSION: u32 = 1;
+
+/// Header of a sketch file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SketchFileHeader {
+    pub p: u32,
+    pub k: u32,
+    pub orders: u32,
+    pub moment_orders: u32,
+    pub two_sided: bool,
+    pub rows: u64,
+}
+
+fn w_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_u64(w: &mut impl Write, v: u64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn r_u32(r: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(r: &mut impl Read) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn w_f32s(w: &mut impl Write, xs: &[f32]) -> std::io::Result<()> {
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn r_f32s(r: &mut impl Read, n: usize) -> anyhow::Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(n);
+    let mut b = [0u8; 4];
+    for _ in 0..n {
+        r.read_exact(&mut b)?;
+        out.push(f32::from_le_bytes(b));
+    }
+    Ok(out)
+}
+
+/// Save every row of `store` to `path`. `p` is the distance order the
+/// sketches were built for (recorded for load-time validation).
+pub fn save(store: &SketchStore, p: usize, path: &Path) -> anyhow::Result<SketchFileHeader> {
+    let ids = store.ids();
+    // Probe shape from the first row (empty stores save an empty file
+    // with zeroed shape — loadable, yields an empty store).
+    let probe = ids.first().map(|&id| store.get(id).unwrap());
+    let (k, orders, nm, two_sided) = match &probe {
+        Some(rs) => (
+            rs.uside.k as u32,
+            rs.uside.orders as u32,
+            rs.moments.len() as u32,
+            rs.vside_data.is_some(),
+        ),
+        None => (0, 0, 0, false),
+    };
+    let header = SketchFileHeader {
+        p: p as u32,
+        k,
+        orders,
+        moment_orders: nm,
+        two_sided,
+        rows: ids.len() as u64,
+    };
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION)?;
+    w_u32(&mut w, header.p)?;
+    w_u32(&mut w, header.k)?;
+    w_u32(&mut w, header.orders)?;
+    w_u32(&mut w, header.moment_orders)?;
+    w.write_all(&[header.two_sided as u8])?;
+    w_u64(&mut w, header.rows)?;
+    for id in ids {
+        let rs = store.get(id).expect("listed id");
+        anyhow::ensure!(
+            rs.uside.k as u32 == k && rs.uside.orders as u32 == orders,
+            "heterogeneous store (row {id})"
+        );
+        w_u64(&mut w, id)?;
+        w_f32s(&mut w, &rs.uside.data)?;
+        match (&rs.vside_data, two_sided) {
+            (Some(v), true) => w_f32s(&mut w, &v.data)?,
+            (None, false) => {}
+            _ => anyhow::bail!("mixed one/two-sided rows (row {id})"),
+        }
+        for o in 1..=rs.moments.len() {
+            w.write_all(&rs.moments.get(o).to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(header)
+}
+
+/// Read just the header (cheap compatibility probe).
+pub fn read_header(path: &Path) -> anyhow::Result<SketchFileHeader> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a sketch file");
+    let version = r_u32(&mut r)?;
+    anyhow::ensure!(version == VERSION, "unsupported sketch-file version {version}");
+    let p = r_u32(&mut r)?;
+    let k = r_u32(&mut r)?;
+    let orders = r_u32(&mut r)?;
+    let moment_orders = r_u32(&mut r)?;
+    let mut flag = [0u8; 1];
+    r.read_exact(&mut flag)?;
+    let rows = r_u64(&mut r)?;
+    Ok(SketchFileHeader { p, k, orders, moment_orders, two_sided: flag[0] != 0, rows })
+}
+
+/// Load a sketch file into a fresh store with `shards` shards.
+pub fn load(path: &Path, shards: usize) -> anyhow::Result<(SketchStore, SketchFileHeader)> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a sketch file");
+    let version = r_u32(&mut r)?;
+    anyhow::ensure!(version == VERSION, "unsupported sketch-file version {version}");
+    let p = r_u32(&mut r)?;
+    let k = r_u32(&mut r)? as usize;
+    let orders = r_u32(&mut r)? as usize;
+    let nm = r_u32(&mut r)? as usize;
+    let mut flag = [0u8; 1];
+    r.read_exact(&mut flag)?;
+    let two_sided = flag[0] != 0;
+    let rows = r_u64(&mut r)?;
+    let store = SketchStore::new(shards);
+    for _ in 0..rows {
+        let id = r_u64(&mut r)?;
+        let udata = r_f32s(&mut r, orders * k)?;
+        let vside_data = if two_sided {
+            Some(SketchSet { orders, k, data: r_f32s(&mut r, orders * k)? })
+        } else {
+            None
+        };
+        let mut moments = Vec::with_capacity(nm);
+        let mut b = [0u8; 8];
+        for _ in 0..nm {
+            r.read_exact(&mut b)?;
+            moments.push(f64::from_le_bytes(b));
+        }
+        store.insert(
+            id,
+            RowSketch {
+                uside: SketchSet { orders, k, data: udata },
+                vside_data,
+                moments: Moments(moments),
+            },
+        );
+    }
+    let header = SketchFileHeader {
+        p,
+        k: k as u32,
+        orders: orders as u32,
+        moment_orders: nm as u32,
+        two_sided,
+        rows,
+    };
+    Ok((store, header))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::decompose::Decomposition;
+    use crate::core::estimator;
+    use crate::projection::sketcher::Sketcher;
+    use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lpsketch_persist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn filled_store(strategy: Strategy, n: u64) -> SketchStore {
+        let sk = Sketcher::new(ProjectionSpec::new(5, 8, ProjectionDist::Normal, strategy), 4);
+        let store = SketchStore::new(3);
+        for id in 0..n {
+            let row: Vec<f32> = (0..20).map(|i| ((id + 1) as f32 * 0.1 + i as f32 * 0.01).sin()).collect();
+            store.insert(id, sk.sketch_row(&row));
+        }
+        store
+    }
+
+    #[test]
+    fn roundtrip_basic_strategy() {
+        let store = filled_store(Strategy::Basic, 17);
+        let path = tmp("basic.lpsk");
+        let saved = save(&store, 4, &path).unwrap();
+        assert_eq!(saved.rows, 17);
+        assert!(!saved.two_sided);
+        let (loaded, header) = load(&path, 5).unwrap();
+        assert_eq!(header, saved);
+        assert_eq!(loaded.ids(), store.ids());
+        // Estimates identical through the roundtrip.
+        let dec = Decomposition::new(4).unwrap();
+        let before = store.with_pair(1, 9, |a, b| estimator::estimate(&dec, a, b)).unwrap();
+        let after = loaded.with_pair(1, 9, |a, b| estimator::estimate(&dec, a, b)).unwrap();
+        assert_eq!(before, after);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrip_alternative_strategy() {
+        let store = filled_store(Strategy::Alternative, 9);
+        let path = tmp("alt.lpsk");
+        let saved = save(&store, 4, &path).unwrap();
+        assert!(saved.two_sided);
+        let (loaded, _) = load(&path, 2).unwrap();
+        for id in 0..9u64 {
+            let a = store.get(id).unwrap();
+            let b = loaded.get(id).unwrap();
+            assert_eq!(a.uside.data, b.uside.data);
+            assert_eq!(a.vside().data, b.vside().data);
+            assert_eq!(a.moments.0, b.moments.0);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_probe_without_full_read() {
+        let store = filled_store(Strategy::Basic, 4);
+        let path = tmp("probe.lpsk");
+        save(&store, 6, &path).unwrap();
+        let h = read_header(&path).unwrap();
+        assert_eq!(h.p, 6);
+        assert_eq!(h.rows, 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = tmp("garbage.lpsk");
+        std::fs::write(&path, b"not a sketch file at all").unwrap();
+        assert!(load(&path, 1).is_err());
+        assert!(read_header(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_store_roundtrips() {
+        let store = SketchStore::new(2);
+        let path = tmp("empty.lpsk");
+        let saved = save(&store, 4, &path).unwrap();
+        assert_eq!(saved.rows, 0);
+        let (loaded, _) = load(&path, 2).unwrap();
+        assert!(loaded.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+}

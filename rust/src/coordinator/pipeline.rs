@@ -1,0 +1,662 @@
+//! The streaming pipeline: reader → sharded sketch workers → sketch
+//! store, with bounded channels as backpressure, then a query side
+//! (single pairs, batched pairs, all-pairs export).
+//!
+//! This is the paper's operating regime made concrete: the data matrix
+//! streams through once (the "linear scan"), only O(nk) sketch state is
+//! retained, and pairwise distances are answered on the fly from the
+//! sketches — never stored O(n²), never recomputed O(D).
+//!
+//! Compute backends per block:
+//! * **PJRT** (`use_pjrt`): blocks padded to the artifact's batch B,
+//!   executed on the AOT-compiled fused sketch kernel (L1/L2 of the
+//!   stack). Used when an artifact matches (p, k) and D.
+//! * **pure rust** fallback: the [`Sketcher`] mirror, any shape.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::config::Config;
+use crate::core::decompose::Decomposition;
+use crate::core::estimator;
+use crate::core::marginals::Moments;
+use crate::core::mle::{self, Solve};
+use crate::data::RowMatrix;
+use crate::projection::sketcher::{RowSketch, SketchSet, Sketcher};
+use crate::projection::Strategy;
+use crate::runtime::{ArtifactMeta, Engine, EngineHandle, OpKind, OwnedInput};
+
+use super::batcher::{Batcher, Drained, FlushReason, PairQuery};
+use super::metrics::{Metrics, Snapshot};
+use super::router::Router;
+use super::scheduler::{Block, BlockScheduler};
+use super::state::SketchStore;
+
+/// Outcome of one `ingest` call.
+#[derive(Clone, Debug)]
+pub struct IngestReport {
+    pub rows: usize,
+    pub blocks: usize,
+    pub elapsed: Duration,
+    /// Sketch bytes added (the O(nk) side of the storage claim).
+    pub sketch_bytes: usize,
+    /// Raw data bytes scanned (the O(nD) side).
+    pub data_bytes: usize,
+    /// Rows sketched via PJRT vs the rust fallback.
+    pub pjrt_rows: usize,
+}
+
+/// The coordinator. Owns the sketch store; cheap to share behind `Arc`.
+pub struct Pipeline {
+    cfg: Config,
+    dec: Decomposition,
+    sketcher: Sketcher,
+    store: SketchStore,
+    metrics: Metrics,
+    router: Router,
+    next_id: AtomicU64,
+    /// PJRT state, present when `cfg.use_pjrt` and the engine started.
+    pjrt: Option<PjrtPath>,
+    _engine: Option<Engine>,
+}
+
+struct PjrtPath {
+    handle: EngineHandle,
+    meta: ArtifactMeta,
+}
+
+impl Pipeline {
+    /// Build a pipeline. With `use_pjrt`, starts the engine and warms
+    /// the matching sketch artifact; fails fast if none matches (p, k).
+    pub fn new(cfg: Config) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let dec = Decomposition::new(cfg.p)?;
+        let sketcher = Sketcher::new(cfg.projection_spec(), cfg.p);
+        let (pjrt, engine) = if cfg.use_pjrt {
+            let engine = Engine::start(&cfg.artifacts_dir)?;
+            let op = match cfg.strategy {
+                Strategy::Basic => OpKind::Sketch,
+                Strategy::Alternative => OpKind::SketchAlt,
+            };
+            let meta = engine
+                .handle()
+                .manifest()
+                .find_sketch(op, cfg.p, cfg.k)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no {} artifact for p={} k={} (rebuild with `make artifacts`)",
+                        op.as_str(),
+                        cfg.p,
+                        cfg.k
+                    )
+                })?
+                .clone();
+            engine.handle().warm(&meta.name)?;
+            (Some(PjrtPath { handle: engine.handle(), meta }), Some(engine))
+        } else {
+            (None, None)
+        };
+        let workers = cfg.workers;
+        Ok(Pipeline {
+            dec,
+            sketcher,
+            store: SketchStore::new(workers),
+            metrics: Metrics::new(),
+            router: Router::new_mod(workers),
+            next_id: AtomicU64::new(0),
+            pjrt,
+            _engine: engine,
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn store(&self) -> &SketchStore {
+        &self.store
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Whether blocks of width `d` can take the PJRT path.
+    fn pjrt_usable(&self, d: usize) -> bool {
+        self.pjrt.as_ref().is_some_and(|p| p.meta.d == d)
+    }
+
+    /// Stream `data` through the pipeline: one reader, `workers` sketch
+    /// workers, bounded queues of depth `queue_depth` (backpressure).
+    /// Returns ids `base..base+n` in row order.
+    pub fn ingest(&self, data: &RowMatrix) -> anyhow::Result<IngestReport> {
+        let n = data.n();
+        let base = self.next_id.fetch_add(n as u64, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let bytes_before = self.store.bytes();
+        let use_pjrt = self.pjrt_usable(data.d());
+        let pjrt_rows = AtomicU64::new(0);
+        let errors: std::sync::Mutex<Vec<anyhow::Error>> = std::sync::Mutex::new(Vec::new());
+
+        std::thread::scope(|scope| {
+            let (tx, rx) = mpsc::sync_channel::<Block>(self.cfg.queue_depth);
+            let rx = Arc::new(std::sync::Mutex::new(rx));
+            for _ in 0..self.cfg.workers {
+                let rx = rx.clone();
+                let pjrt_rows = &pjrt_rows;
+                let errors = &errors;
+                scope.spawn(move || loop {
+                    let block = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(block) = block else { break };
+                    let t = Instant::now();
+                    let result = if use_pjrt {
+                        self.sketch_block_pjrt(&block).map(|rs| {
+                            pjrt_rows.fetch_add(block.rows as u64, Ordering::Relaxed);
+                            self.metrics.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+                            rs
+                        })
+                    } else {
+                        self.metrics.fallback_calls.fetch_add(1, Ordering::Relaxed);
+                        Ok(self.sketch_block_rust(&block))
+                    };
+                    match result {
+                        Ok(sketches) => {
+                            for (i, rs) in sketches.into_iter().enumerate() {
+                                self.store.insert(base + block.row_id(i), rs);
+                            }
+                            self.metrics.rows_ingested.fetch_add(block.rows as u64, Ordering::Relaxed);
+                            self.metrics.blocks_sketched.fetch_add(1, Ordering::Relaxed);
+                            self.metrics.sketch_latency.record(t.elapsed());
+                        }
+                        Err(e) => errors.lock().unwrap().push(e),
+                    }
+                });
+            }
+            // Reader: the bounded send blocks when workers lag — that is
+            // the backpressure (queue never exceeds queue_depth).
+            for block in BlockScheduler::new(data.data(), n, data.d(), self.cfg.block_rows) {
+                if tx.send(block).is_err() {
+                    break;
+                }
+            }
+            drop(tx);
+        });
+
+        let errs = errors.into_inner().unwrap();
+        if let Some(e) = errs.into_iter().next() {
+            return Err(e);
+        }
+        Ok(IngestReport {
+            rows: n,
+            blocks: n.div_ceil(self.cfg.block_rows),
+            elapsed: t0.elapsed(),
+            sketch_bytes: self.store.bytes() - bytes_before,
+            data_bytes: data.bytes(),
+            pjrt_rows: pjrt_rows.load(Ordering::Relaxed) as usize,
+        })
+    }
+
+    /// Pure-rust sketch of one block.
+    fn sketch_block_rust(&self, block: &Block) -> Vec<RowSketch> {
+        let rows: Vec<&[f32]> = (0..block.rows).map(|i| block.row(i)).collect();
+        self.sketcher.sketch_rows(&rows)
+    }
+
+    /// PJRT sketch of one block via the AOT artifact (padded to B).
+    fn sketch_block_pjrt(&self, block: &Block) -> anyhow::Result<Vec<RowSketch>> {
+        let pjrt = self.pjrt.as_ref().expect("pjrt path");
+        let meta = &pjrt.meta;
+        anyhow::ensure!(block.rows <= meta.b, "block exceeds artifact batch");
+        anyhow::ensure!(block.d == meta.d, "block width mismatch");
+        let x = block.padded(meta.b);
+        let spec = &self.sketcher.spec;
+        let orders = self.dec.orders();
+        let (u, m) = match self.cfg.strategy {
+            Strategy::Basic => {
+                let r = spec.materialize(1, 0, meta.d).data;
+                let outs = pjrt.handle.run(
+                    &meta.name,
+                    vec![
+                        OwnedInput::new(x, &[meta.b, meta.d]),
+                        OwnedInput::new(r, &[meta.d, meta.k]),
+                    ],
+                )?;
+                anyhow::ensure!(outs.len() == 2, "sketch artifact returns (u, m)");
+                let mut it = outs.into_iter();
+                (it.next().unwrap(), it.next().unwrap())
+            }
+            Strategy::Alternative => {
+                // u-side: order m uses matrix id m.
+                let mut r_stack = Vec::with_capacity(orders * meta.d * meta.k);
+                for ord in 1..=orders {
+                    r_stack.extend_from_slice(&spec.materialize(ord, 0, meta.d).data);
+                }
+                let outs = pjrt.handle.run(
+                    &meta.name,
+                    vec![
+                        OwnedInput::new(x.clone(), &[meta.b, meta.d]),
+                        OwnedInput::new(r_stack, &[orders, meta.d, meta.k]),
+                    ],
+                )?;
+                anyhow::ensure!(outs.len() == 2, "sketch artifact returns (u, m)");
+                let mut it = outs.into_iter();
+                (it.next().unwrap(), it.next().unwrap())
+            }
+        };
+        let mut sketches = self.unpack_sketches(block, meta, &u, &m);
+        // Alternative strategy: second pass with the order-reversed stack
+        // gives the v-side (order m with matrix id p−m).
+        if matches!(self.cfg.strategy, Strategy::Alternative) {
+            let p = self.dec.p();
+            let x = block.padded(meta.b);
+            let mut r_stack = Vec::with_capacity(orders * meta.d * meta.k);
+            for ord in 1..=orders {
+                r_stack.extend_from_slice(&spec.materialize(p - ord, 0, meta.d).data);
+            }
+            let outs = pjrt.handle.run(
+                &meta.name,
+                vec![
+                    OwnedInput::new(x, &[meta.b, meta.d]),
+                    OwnedInput::new(r_stack, &[orders, meta.d, meta.k]),
+                ],
+            )?;
+            let v = &outs[0];
+            for (i, rs) in sketches.iter_mut().enumerate() {
+                let mut vset = SketchSet::zeros(orders, meta.k);
+                for ord in 1..=orders {
+                    let src = &v[((ord - 1) * meta.b + i) * meta.k..((ord - 1) * meta.b + i + 1) * meta.k];
+                    vset.u_mut(ord).copy_from_slice(src);
+                }
+                rs.vside_data = Some(vset);
+            }
+        }
+        Ok(sketches)
+    }
+
+    /// Slice artifact outputs (u: orders×B×K, m: moments×B) into
+    /// per-row [`RowSketch`]es for the block's logical rows.
+    fn unpack_sketches(
+        &self,
+        block: &Block,
+        meta: &ArtifactMeta,
+        u: &[f32],
+        m: &[f32],
+    ) -> Vec<RowSketch> {
+        let orders = self.dec.orders();
+        let nm = self.dec.moment_orders();
+        (0..block.rows)
+            .map(|i| {
+                let mut uset = SketchSet::zeros(orders, meta.k);
+                for ord in 1..=orders {
+                    let src = &u[((ord - 1) * meta.b + i) * meta.k..((ord - 1) * meta.b + i + 1) * meta.k];
+                    uset.u_mut(ord).copy_from_slice(src);
+                }
+                let moments =
+                    Moments((1..=nm).map(|o| m[(o - 1) * meta.b + i] as f64).collect());
+                RowSketch { uside: uset, vside_data: None, moments }
+            })
+            .collect()
+    }
+
+    /// Estimate the distance between two stored rows (the query path).
+    pub fn estimate_pair(&self, a: u64, b: u64) -> Option<f64> {
+        let t = Instant::now();
+        let out = self.store.with_pair(a, b, |ra, rb| {
+            if self.cfg.use_mle {
+                mle::estimate_mle(&self.dec, ra, rb, Solve::OneStepNewton)
+            } else {
+                estimator::estimate(&self.dec, ra, rb)
+            }
+        });
+        if out.is_some() {
+            self.metrics.queries_served.fetch_add(1, Ordering::Relaxed);
+            self.metrics.query_latency.record(t.elapsed());
+        }
+        out
+    }
+
+    /// Batch of pair estimates (None for unknown ids).
+    pub fn estimate_pairs(&self, pairs: &[(u64, u64)]) -> Vec<Option<f64>> {
+        pairs.iter().map(|&(a, b)| self.estimate_pair(a, b)).collect()
+    }
+
+    /// All pairwise estimates over ids `0..n` (condensed upper-triangle
+    /// order, matching [`crate::baselines::exact::condensed_index`]).
+    ///
+    /// Takes the PJRT estimate artifact (blocked MXU GEMMs) when
+    /// available and the plain estimator is requested; otherwise the
+    /// pure-rust path, parallelized over `workers`.
+    pub fn all_pairs_condensed(&self) -> Vec<f64> {
+        let ids = self.store.ids();
+        let n = ids.len();
+        let mut out = vec![0.0f64; n * (n - 1) / 2];
+        if n < 2 {
+            return out;
+        }
+        // Snapshot sketches once to avoid per-pair locking.
+        let rows: Vec<RowSketch> = ids.iter().map(|&id| self.store.get(id).unwrap()).collect();
+        if !self.cfg.use_mle {
+            if let Some(pjrt) = &self.pjrt {
+                if let Some(meta) =
+                    pjrt.handle.manifest().find_estimate(self.cfg.p, self.cfg.k).cloned()
+                {
+                    if let Ok(()) = self.all_pairs_pjrt(&rows, &meta, &mut out) {
+                        self.metrics
+                            .queries_served
+                            .fetch_add((n * (n - 1) / 2) as u64, Ordering::Relaxed);
+                        return out;
+                    }
+                }
+            }
+        }
+        let workers = self.cfg.workers.max(1);
+        let chunks: Vec<&mut [f64]> = {
+            // Split the condensed buffer by row ranges.
+            let mut parts = Vec::new();
+            let mut rest: &mut [f64] = &mut out;
+            for i in 0..n - 1 {
+                let len = n - 1 - i;
+                let (head, tail) = rest.split_at_mut(len);
+                parts.push(head);
+                rest = tail;
+            }
+            parts
+        };
+        std::thread::scope(|scope| {
+            let rows = &rows;
+            let mut row_chunks: Vec<Vec<(usize, &mut [f64])>> = (0..workers).map(|_| Vec::new()).collect();
+            for (i, chunk) in chunks.into_iter().enumerate() {
+                row_chunks[i % workers].push((i, chunk));
+            }
+            for assigned in row_chunks {
+                let dec = &self.dec;
+                let use_mle = self.cfg.use_mle;
+                scope.spawn(move || {
+                    for (i, chunk) in assigned {
+                        for (off, slot) in chunk.iter_mut().enumerate() {
+                            let j = i + 1 + off;
+                            *slot = if use_mle {
+                                mle::estimate_mle(dec, &rows[i], &rows[j], Solve::OneStepNewton)
+                            } else {
+                                estimator::estimate(dec, &rows[i], &rows[j])
+                            };
+                        }
+                    }
+                });
+            }
+        });
+        self.metrics
+            .queries_served
+            .fetch_add((n * (n - 1) / 2) as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Blocked all-pairs via the PJRT estimate artifact: one MXU GEMM
+    /// per block pair instead of O(b²) scalar dots (§Perf iteration 4).
+    fn all_pairs_pjrt(
+        &self,
+        rows: &[RowSketch],
+        meta: &ArtifactMeta,
+        out: &mut [f64],
+    ) -> anyhow::Result<()> {
+        let n = rows.len();
+        let (b, k, p) = (meta.b, meta.k, self.dec.p());
+        let orders = self.dec.orders();
+        anyhow::ensure!(meta.b2 == b, "estimate artifact must be square-blocked");
+        self.pjrt.as_ref().unwrap().handle.warm(&meta.name)?;
+        // Pack per-block stacks once: U from uside, V from vside, plus
+        // marginal p-norms.
+        let blocks = n.div_ceil(b);
+        let pack = |bi: usize, vside: bool| -> (Vec<f32>, Vec<f32>) {
+            let mut stack = vec![0.0f32; orders * b * k];
+            let mut norms = vec![0.0f32; b];
+            for (slot, row) in rows[bi * b..((bi + 1) * b).min(n)].iter().enumerate() {
+                let set = if vside { row.vside() } else { &row.uside };
+                for m in 1..=orders {
+                    stack[((m - 1) * b + slot) * k..((m - 1) * b + slot + 1) * k]
+                        .copy_from_slice(set.u(m));
+                }
+                norms[slot] = row.moments.get(p) as f32;
+            }
+            (stack, norms)
+        };
+        let packed_u: Vec<_> = (0..blocks).map(|bi| pack(bi, false)).collect();
+        let packed_v: Vec<_> = (0..blocks).map(|bi| pack(bi, true)).collect();
+        for bi in 0..blocks {
+            for bj in bi..blocks {
+                let (u, mx) = &packed_u[bi];
+                let (v, my) = &packed_v[bj];
+                let outs = self.pjrt.as_ref().unwrap().handle.run(
+                    &meta.name,
+                    vec![
+                        OwnedInput::new(u.clone(), &[orders, b, k]),
+                        OwnedInput::new(v.clone(), &[orders, b, k]),
+                        OwnedInput::new(mx.clone(), &[b]),
+                        OwnedInput::new(my.clone(), &[b]),
+                    ],
+                )?;
+                self.metrics.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+                let est = &outs[0];
+                for si in 0..b {
+                    let i = bi * b + si;
+                    if i >= n {
+                        break;
+                    }
+                    let j0 = if bi == bj { si + 1 } else { 0 };
+                    for sj in j0..b {
+                        let j = bj * b + sj;
+                        if j >= n {
+                            break;
+                        }
+                        out[crate::baselines::exact::condensed_index(n, i, j)] =
+                            est[si * b + sj] as f64;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Spawn a batched query service (size+deadline batching, one worker
+    /// thread). The returned handle is cloneable; the service stops when
+    /// every handle is dropped.
+    pub fn spawn_query_service(self: &Arc<Self>) -> QueryHandle {
+        let (tx, rx) = mpsc::channel::<PairQuery<Option<f64>>>();
+        let pipeline = Arc::clone(self);
+        std::thread::spawn(move || {
+            let batcher = Batcher::new(
+                rx,
+                pipeline.cfg.batch_max,
+                Duration::from_micros(pipeline.cfg.batch_deadline_us),
+            );
+            loop {
+                match batcher.drain() {
+                    Drained::Batch(batch, reason) => {
+                        pipeline.metrics.batches_flushed.fetch_add(1, Ordering::Relaxed);
+                        if reason == FlushReason::Deadline {
+                            pipeline
+                                .metrics
+                                .batch_deadline_flushes
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                        for q in batch {
+                            let ans = pipeline.estimate_pair(q.a, q.b);
+                            let _ = q.reply.send(ans);
+                        }
+                    }
+                    Drained::Closed => break,
+                }
+            }
+        });
+        QueryHandle { tx }
+    }
+}
+
+/// Client handle to the batched query service.
+#[derive(Clone)]
+pub struct QueryHandle {
+    tx: mpsc::Sender<PairQuery<Option<f64>>>,
+}
+
+impl QueryHandle {
+    /// Blocking pair query through the batcher.
+    pub fn query(&self, a: u64, b: u64) -> anyhow::Result<Option<f64>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(PairQuery { a, b, reply })
+            .map_err(|_| anyhow::anyhow!("query service stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("query service dropped reply"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::decompose::exact_distance;
+    use crate::data::{gen, DataDist};
+
+    fn cfg(n: usize, d: usize) -> Config {
+        let mut c = Config::default();
+        c.n = n;
+        c.d = d;
+        c.k = 32.min(d);
+        c.block_rows = 16;
+        c.workers = 3;
+        c.queue_depth = 2;
+        c
+    }
+
+    #[test]
+    fn ingest_sketches_every_row_exactly_once() {
+        // d large enough that sketches compress: sketch bytes/row =
+        // (p−1)·k·4 + moments, data bytes/row = d·4.
+        let c = cfg(100, 256);
+        let data = gen::generate(DataDist::Uniform01, c.n, c.d, 1);
+        let p = Pipeline::new(c).unwrap();
+        let report = p.ingest(&data).unwrap();
+        assert_eq!(report.rows, 100);
+        assert_eq!(p.rows(), 100);
+        assert_eq!(p.store().ids(), (0..100).collect::<Vec<u64>>());
+        assert_eq!(p.metrics().rows_ingested, 100);
+        assert!(report.sketch_bytes < report.data_bytes);
+    }
+
+    #[test]
+    fn second_ingest_appends_ids() {
+        let c = cfg(10, 32);
+        let data = gen::generate(DataDist::Uniform01, 10, 32, 2);
+        let p = Pipeline::new(c).unwrap();
+        p.ingest(&data).unwrap();
+        p.ingest(&data).unwrap();
+        assert_eq!(p.rows(), 20);
+        assert_eq!(p.store().ids(), (0..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn estimates_track_exact_distances() {
+        // Gaussian (centered) data: the marginal norms do not dwarf the
+        // distance, so the k=64 estimator has moderate relative error.
+        // (On similar non-negative rows the plain estimator's relative
+        // error is intrinsically large — that is what Lemma 4 is for.)
+        let mut c = cfg(40, 128);
+        c.k = 64;
+        let data = gen::generate(DataDist::Gaussian, c.n, c.d, 3);
+        let p = Pipeline::new(c).unwrap();
+        p.ingest(&data).unwrap();
+        // Averaged relative error over pairs should be moderate at k=64.
+        let mut rel = 0.0;
+        let mut count = 0;
+        for i in 0..10u64 {
+            for j in (i + 1)..10u64 {
+                let est = p.estimate_pair(i, j).unwrap();
+                let exact = exact_distance(
+                    &data.row_f64(i as usize),
+                    &data.row_f64(j as usize),
+                    4,
+                );
+                rel += (est - exact).abs() / exact;
+                count += 1;
+            }
+        }
+        rel /= count as f64;
+        assert!(rel < 0.5, "mean rel err {rel}");
+    }
+
+    #[test]
+    fn unknown_id_is_none() {
+        let c = cfg(5, 32);
+        let data = gen::generate(DataDist::Uniform01, 5, 32, 4);
+        let p = Pipeline::new(c).unwrap();
+        p.ingest(&data).unwrap();
+        assert!(p.estimate_pair(0, 99).is_none());
+    }
+
+    #[test]
+    fn all_pairs_matches_pointwise() {
+        let c = cfg(12, 64);
+        let data = gen::generate(DataDist::LogNormal { sigma: 1.0 }, 12, 64, 5);
+        let p = Pipeline::new(c).unwrap();
+        p.ingest(&data).unwrap();
+        let all = p.all_pairs_condensed();
+        for i in 0..12u64 {
+            for j in (i + 1)..12u64 {
+                let idx = crate::baselines::exact::condensed_index(12, i as usize, j as usize);
+                let single = p.estimate_pair(i, j).unwrap();
+                assert!((all[idx] - single).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn query_service_round_trips() {
+        let c = cfg(20, 32);
+        let data = gen::generate(DataDist::Uniform01, 20, 32, 6);
+        let p = Arc::new(Pipeline::new(c).unwrap());
+        p.ingest(&data).unwrap();
+        let h = p.spawn_query_service();
+        let mut threads = Vec::new();
+        for t in 0..4u64 {
+            let h = h.clone();
+            threads.push(std::thread::spawn(move || {
+                for i in 0..5u64 {
+                    let got = h.query(t, (t + i + 1) % 20).unwrap();
+                    assert!(got.is_some());
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        let snap = p.metrics();
+        assert!(snap.batches_flushed >= 1);
+        assert_eq!(snap.queries_served, 20);
+    }
+
+    #[test]
+    fn mle_config_changes_estimates() {
+        let mut c = cfg(10, 64);
+        let data = gen::generate(DataDist::Uniform01, 10, 64, 7);
+        let plain = Pipeline::new(c.clone()).unwrap();
+        plain.ingest(&data).unwrap();
+        c.use_mle = true;
+        let mle = Pipeline::new(c).unwrap();
+        mle.ingest(&data).unwrap();
+        let a = plain.estimate_pair(0, 1).unwrap();
+        let b = mle.estimate_pair(0, 1).unwrap();
+        assert_ne!(a, b, "MLE should adjust the plain estimate");
+        assert!(a.is_finite() && b.is_finite());
+    }
+}

@@ -1,0 +1,116 @@
+//! Shard router: assigns row ids to worker shards and pair queries to
+//! their owning shards.
+//!
+//! Routing must be a *partition* (DESIGN.md §7): every id maps to
+//! exactly one shard, stable across the pipeline's lifetime, and in
+//! agreement with [`SketchStore::shard_of`](super::state::SketchStore).
+//! Two policies:
+//! * `Mod` — id % shards: perfect balance for dense id ranges (the
+//!   default; ingest assigns ids sequentially).
+//! * `Range` — contiguous blocks: preserves block locality when queries
+//!   scan id ranges (the all-pairs export path).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    Mod,
+    /// Range routing needs the total id-space size.
+    Range { total: u64 },
+}
+
+/// Router over `shards` workers.
+#[derive(Clone, Copy, Debug)]
+pub struct Router {
+    pub shards: usize,
+    pub policy: Policy,
+}
+
+impl Router {
+    pub fn new_mod(shards: usize) -> Self {
+        Router { shards: shards.max(1), policy: Policy::Mod }
+    }
+
+    pub fn new_range(shards: usize, total: u64) -> Self {
+        Router { shards: shards.max(1), policy: Policy::Range { total } }
+    }
+
+    /// The shard owning row `id`.
+    #[inline]
+    pub fn route(&self, id: u64) -> usize {
+        match self.policy {
+            Policy::Mod => (id % self.shards as u64) as usize,
+            Policy::Range { total } => {
+                let per = total.div_ceil(self.shards as u64).max(1);
+                ((id / per) as usize).min(self.shards - 1)
+            }
+        }
+    }
+
+    /// Shard of a *pair* query: the shard of the smaller id (a stable,
+    /// balance-preserving convention — each unordered pair has exactly
+    /// one home).
+    #[inline]
+    pub fn route_pair(&self, a: u64, b: u64) -> usize {
+        self.route(a.min(b))
+    }
+
+    /// Per-shard load for ids `0..n` (test/bench helper).
+    pub fn load(&self, n: u64) -> Vec<u64> {
+        let mut counts = vec![0u64; self.shards];
+        for id in 0..n {
+            counts[self.route(id)] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mod_routing_is_partition_and_balanced() {
+        let r = Router::new_mod(4);
+        let load = r.load(1000);
+        assert_eq!(load.iter().sum::<u64>(), 1000);
+        assert!(load.iter().all(|&c| (249..=251).contains(&c)), "{load:?}");
+    }
+
+    #[test]
+    fn range_routing_is_partition_and_contiguous() {
+        let r = Router::new_range(3, 10);
+        let shards: Vec<usize> = (0..10).map(|i| r.route(i)).collect();
+        assert_eq!(shards, vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2]);
+        // Monotone ⇒ contiguous ranges.
+        assert!(shards.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn range_routing_never_overflows_shards() {
+        let r = Router::new_range(4, 3); // more shards than ids
+        for id in 0..3 {
+            assert!(r.route(id) < 4);
+        }
+        // Ids beyond `total` still route somewhere valid.
+        assert!(r.route(1_000_000) < 4);
+    }
+
+    #[test]
+    fn pair_routing_is_symmetric() {
+        let r = Router::new_mod(5);
+        for a in 0..20u64 {
+            for b in 0..20u64 {
+                assert_eq!(r.route_pair(a, b), r.route_pair(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn matches_store_sharding() {
+        use crate::coordinator::state::SketchStore;
+        let store = SketchStore::new(6);
+        let r = Router::new_mod(6);
+        for id in 0..100 {
+            assert_eq!(r.route(id), store.shard_of(id));
+        }
+    }
+}

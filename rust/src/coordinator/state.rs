@@ -1,0 +1,170 @@
+//! SketchStore: the coordinator's state — every ingested row's sketches
+//! + marginal moments, sharded for concurrent writes.
+//!
+//! This is the O(nk) object that replaces the O(nD) matrix (and the
+//! O(n²) distance cache) in the paper's storage claim. Shards are
+//! written by the pipeline workers in parallel and read lock-free-ish
+//! (RwLock read path) by the query side.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use crate::projection::sketcher::RowSketch;
+
+/// Sharded row-id → sketch map.
+pub struct SketchStore {
+    shards: Vec<RwLock<HashMap<u64, RowSketch>>>,
+}
+
+impl SketchStore {
+    pub fn new(shards: usize) -> Self {
+        let shards = shards.max(1);
+        SketchStore {
+            shards: (0..shards).map(|_| RwLock::new(HashMap::new())).collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard owns a row id (must agree with the router).
+    #[inline]
+    pub fn shard_of(&self, id: u64) -> usize {
+        (id % self.shards.len() as u64) as usize
+    }
+
+    pub fn insert(&self, id: u64, sketch: RowSketch) {
+        self.shards[self.shard_of(id)].write().unwrap().insert(id, sketch);
+    }
+
+    pub fn get(&self, id: u64) -> Option<RowSketch> {
+        self.shards[self.shard_of(id)].read().unwrap().get(&id).cloned()
+    }
+
+    /// Visit a pair without cloning (the query hot path).
+    pub fn with_pair<T>(
+        &self,
+        a: u64,
+        b: u64,
+        f: impl FnOnce(&RowSketch, &RowSketch) -> T,
+    ) -> Option<T> {
+        let (sa, sb) = (self.shard_of(a), self.shard_of(b));
+        if sa == sb {
+            let guard = self.shards[sa].read().unwrap();
+            let ra = guard.get(&a)?;
+            let rb = guard.get(&b)?;
+            Some(f(ra, rb))
+        } else {
+            // Lock in shard order to avoid deadlock with concurrent pairs.
+            let (first, second) = if sa < sb { (sa, sb) } else { (sb, sa) };
+            let g1 = self.shards[first].read().unwrap();
+            let g2 = self.shards[second].read().unwrap();
+            let (ga, gb) = if sa < sb { (&g1, &g2) } else { (&g2, &g1) };
+            let ra = ga.get(&a)?;
+            let rb = gb.get(&b)?;
+            Some(f(ra, rb))
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.shards[self.shard_of(id)].read().unwrap().contains_key(&id)
+    }
+
+    /// Total sketch payload bytes (the paper's O(nk) storage number).
+    pub fn bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().values().map(|r| r.sketch_bytes()).sum::<usize>())
+            .sum()
+    }
+
+    /// All row ids, ascending (test/debug helper; takes all read locks).
+    pub fn ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.read().unwrap().keys().copied().collect::<Vec<_>>())
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::sketcher::Sketcher;
+    use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+
+    fn sketch_of(val: f32) -> RowSketch {
+        let sk = Sketcher::new(
+            ProjectionSpec::new(1, 4, ProjectionDist::Normal, Strategy::Basic),
+            4,
+        );
+        sk.sketch_row(&[val, val * 2.0, val * 3.0])
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let store = SketchStore::new(4);
+        store.insert(10, sketch_of(1.0));
+        assert!(store.contains(10));
+        assert!(!store.contains(11));
+        let got = store.get(10).unwrap();
+        assert_eq!(got.moments.get(1), sketch_of(1.0).moments.get(1));
+    }
+
+    #[test]
+    fn with_pair_same_and_cross_shard() {
+        let store = SketchStore::new(2);
+        store.insert(0, sketch_of(1.0)); // shard 0
+        store.insert(2, sketch_of(2.0)); // shard 0
+        store.insert(1, sketch_of(3.0)); // shard 1
+        // Same shard.
+        let m = store.with_pair(0, 2, |a, b| (a.moments.get(1), b.moments.get(1))).unwrap();
+        assert!(m.0 < m.1);
+        // Cross shard, both orders.
+        assert!(store.with_pair(0, 1, |_, _| ()).is_some());
+        assert!(store.with_pair(1, 0, |_, _| ()).is_some());
+        // Missing row.
+        assert!(store.with_pair(0, 99, |_, _| ()).is_none());
+    }
+
+    #[test]
+    fn concurrent_writers_land_once() {
+        let store = std::sync::Arc::new(SketchStore::new(4));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let store = store.clone();
+                s.spawn(move || {
+                    for i in 0..50u64 {
+                        store.insert(t * 50 + i, sketch_of(i as f32));
+                    }
+                });
+            }
+        });
+        assert_eq!(store.len(), 200);
+        assert_eq!(store.ids().len(), 200);
+        assert_eq!(store.ids()[0], 0);
+        assert_eq!(*store.ids().last().unwrap(), 199);
+    }
+
+    #[test]
+    fn bytes_accounts_all_rows() {
+        let store = SketchStore::new(3);
+        let one = sketch_of(1.0).sketch_bytes();
+        for i in 0..7 {
+            store.insert(i, sketch_of(i as f32));
+        }
+        assert_eq!(store.bytes(), 7 * one);
+    }
+}

@@ -1,0 +1,131 @@
+//! Real-root cubic solver (Cardano + trigonometric branch) and the
+//! one-step Newton iteration the paper recommends for the margin MLE
+//! ("one-step Newton-Rhapson in statistics", §2.3).
+
+/// All real roots of z³ + a z² + b z + c = 0, ascending, deduplicated to
+/// numerical precision.
+pub fn real_roots(a: f64, b: f64, c: f64) -> Vec<f64> {
+    // Depressed cubic t³ + p t + q, z = t - a/3.
+    let shift = a / 3.0;
+    let p = b - a * a / 3.0;
+    let q = 2.0 * a * a * a / 27.0 - a * b / 3.0 + c;
+    let disc = (q / 2.0).powi(2) + (p / 3.0).powi(3);
+
+    let mut roots = if disc > 1e-300 {
+        // One real root (Cardano).
+        let sq = disc.sqrt();
+        let u = cbrt(-q / 2.0 + sq);
+        let v = cbrt(-q / 2.0 - sq);
+        vec![u + v - shift]
+    } else if p.abs() < 1e-300 && q.abs() < 1e-300 {
+        vec![-shift]
+    } else {
+        // Three real roots (trigonometric / Viète).
+        let r = (-p / 3.0).max(0.0).sqrt();
+        let arg = (3.0 * q / (2.0 * p * r.max(1e-300))).clamp(-1.0, 1.0);
+        let phi = arg.acos();
+        (0..3)
+            .map(|i| 2.0 * r * ((phi - 2.0 * std::f64::consts::PI * i as f64) / 3.0).cos() - shift)
+            .collect()
+    };
+
+    // Polish with a couple of Newton steps (Cardano loses digits when the
+    // roots are badly scaled) and sort/dedup.
+    for z in roots.iter_mut() {
+        for _ in 0..3 {
+            *z = newton_step(*z, a, b, c);
+        }
+    }
+    roots.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    roots.dedup_by(|x, y| (*x - *y).abs() < 1e-8 * (x.abs() + y.abs() + 1.0));
+    roots
+}
+
+/// One Newton–Raphson step on f(z) = z³ + a z² + b z + c.
+#[inline]
+pub fn newton_step(z: f64, a: f64, b: f64, c: f64) -> f64 {
+    let f = ((z + a) * z + b) * z + c;
+    let fp = (3.0 * z + 2.0 * a) * z + b;
+    if fp.abs() < 1e-300 {
+        z
+    } else {
+        z - f / fp
+    }
+}
+
+#[inline]
+fn cbrt(x: f64) -> f64 {
+    x.signum() * x.abs().cbrt()
+}
+
+/// Residual |f(z)| of a candidate root (testing hook).
+pub fn residual(z: f64, a: f64, b: f64, c: f64) -> f64 {
+    (((z + a) * z + b) * z + c).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn three_known_roots() {
+        // (z-1)(z-2)(z-3) = z³ -6z² +11z -6
+        let r = real_roots(-6.0, 11.0, -6.0);
+        assert_eq!(r.len(), 3);
+        for (got, want) in r.iter().zip([1.0, 2.0, 3.0]) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn single_real_root() {
+        // z³ + z + 1 has one real root ≈ -0.682327803828
+        let r = real_roots(0.0, 1.0, 1.0);
+        assert_eq!(r.len(), 1);
+        assert!((r[0] + 0.6823278038280193).abs() < 1e-9);
+    }
+
+    #[test]
+    fn triple_root() {
+        // (z-2)³ = z³ -6z² +12z -8
+        let r = real_roots(-6.0, 12.0, -8.0);
+        assert!(!r.is_empty());
+        for z in r {
+            assert!((z - 2.0).abs() < 1e-5, "z={z}");
+        }
+    }
+
+    #[test]
+    fn roots_have_small_residual_property() {
+        testkit::check(300, |g| {
+            // Build a cubic from random roots, possibly with two complex.
+            let scale = 10f64.powi(g.usize_in(0, 5) as i32 - 2);
+            let (a, b, c) = (
+                g.f64_in(-5.0, 5.0) * scale,
+                g.f64_in(-5.0, 5.0) * scale,
+                g.f64_in(-5.0, 5.0) * scale,
+            );
+            let roots = real_roots(a, b, c);
+            crate::prop_assert!(!roots.is_empty(), "cubic must have a real root");
+            for z in roots {
+                let tol = 1e-7 * (1.0 + z.abs().powi(3) + a.abs() * z.abs() * z.abs());
+                crate::prop_assert!(
+                    residual(z, a, b, c) < tol,
+                    "residual {} at z={z} (a={a} b={b} c={c})",
+                    residual(z, a, b, c)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn newton_converges_to_root() {
+        let (a, b, c) = (-6.0, 11.0, -6.0);
+        let mut z = 2.9;
+        for _ in 0..20 {
+            z = newton_step(z, a, b, c);
+        }
+        assert!((z - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,171 @@
+//! Binomial decomposition of the even-p l_p distance (paper §1.1).
+//!
+//! For even p,
+//! ```text
+//! |x - y|^p = (x - y)^p = Σ_{m=0}^{p} (-1)^(p-m) C(p,m) x^m y^(p-m)
+//! ```
+//! splitting d_(p) into **2 marginal norms** (m = 0, p; coefficient +1)
+//! and **p-1 mixed inner products** Σ_i x_i^m y_i^(p-m) with coefficient
+//! `c_m = (-1)^m C(p,m)` (p even ⇒ (-1)^(p-m) = (-1)^m).
+//!
+//! p = 4 ⇒ c = [-4, +6, -4]; p = 6 ⇒ c = [-6, +15, -20, +15, -6] — the
+//! exact expansions displayed in §2 and §3 of the paper.
+
+/// A validated even-p decomposition: coefficient table + bookkeeping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decomposition {
+    p: usize,
+    /// c_m for m = 1..p-1 (index m-1).
+    coeffs: Vec<f64>,
+}
+
+impl Decomposition {
+    /// Build the decomposition for even `p >= 4`.
+    pub fn new(p: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(p >= 4 && p % 2 == 0, "p must be even and >= 4, got {p}");
+        let coeffs = (1..p)
+            .map(|m| {
+                let sign = if m % 2 == 0 { 1.0 } else { -1.0 };
+                sign * binomial(p, m) as f64
+            })
+            .collect();
+        Ok(Decomposition { p, coeffs })
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Number of mixed inner products / power-sketch orders (= p-1).
+    pub fn orders(&self) -> usize {
+        self.p - 1
+    }
+
+    /// Highest marginal moment the estimators and variance formulas
+    /// consume: 2(p-1) (Σx^6 for Lemma 1, Σx^10 for Lemma 5).
+    pub fn moment_orders(&self) -> usize {
+        2 * (self.p - 1)
+    }
+
+    /// Coefficient c_m of Σ x^m y^(p-m), m in 1..=p-1.
+    pub fn coeff(&self, m: usize) -> f64 {
+        self.coeffs[m - 1]
+    }
+
+    pub fn coeffs(&self) -> &[f64] {
+        &self.coeffs
+    }
+
+    /// Evaluate d_(p) from exact building blocks: marginal p-norms and the
+    /// exact mixed inner products (index m-1 holds Σ x^m y^(p-m)).
+    pub fn combine(&self, x_norm_p: f64, y_norm_p: f64, inner: &[f64]) -> f64 {
+        assert_eq!(inner.len(), self.orders());
+        let mut d = x_norm_p + y_norm_p;
+        for (m, &ip) in (1..self.p).zip(inner) {
+            d += self.coeff(m) * ip;
+        }
+        d
+    }
+}
+
+/// C(n, k) as u128 (safe for the p ≤ 32 range we could ever sketch).
+pub fn binomial(n: usize, k: usize) -> u128 {
+    let k = k.min(n - k);
+    let mut num: u128 = 1;
+    let mut den: u128 = 1;
+    for i in 0..k {
+        num *= (n - i) as u128;
+        den *= (i + 1) as u128;
+    }
+    num / den
+}
+
+/// Exact mixed inner products Σ_i x_i^m y_i^(p-m) for m = 1..p-1.
+pub fn exact_inner_products(x: &[f64], y: &[f64], p: usize) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    (1..p)
+        .map(|m| {
+            x.iter()
+                .zip(y)
+                .map(|(&a, &b)| a.powi(m as i32) * b.powi((p - m) as i32))
+                .sum()
+        })
+        .collect()
+}
+
+/// Exact l_p^p distance (the quantity all estimators target).
+pub fn exact_distance(x: &[f64], y: &[f64], p: usize) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(&a, &b)| (a - b).abs().powi(p as i32))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn paper_coefficients() {
+        let d4 = Decomposition::new(4).unwrap();
+        assert_eq!(d4.coeffs(), &[-4.0, 6.0, -4.0]);
+        let d6 = Decomposition::new(6).unwrap();
+        assert_eq!(d6.coeffs(), &[-6.0, 15.0, -20.0, 15.0, -6.0]);
+        let d8 = Decomposition::new(8).unwrap();
+        assert_eq!(d8.coeffs(), &[-8.0, 28.0, -56.0, 70.0, -56.0, 28.0, -8.0]);
+    }
+
+    #[test]
+    fn rejects_odd_and_small_p() {
+        assert!(Decomposition::new(3).is_err());
+        assert!(Decomposition::new(5).is_err());
+        assert!(Decomposition::new(2).is_err());
+        assert!(Decomposition::new(0).is_err());
+    }
+
+    #[test]
+    fn binomial_values() {
+        assert_eq!(binomial(4, 2), 6);
+        assert_eq!(binomial(6, 3), 20);
+        assert_eq!(binomial(10, 0), 1);
+        assert_eq!(binomial(10, 10), 1);
+        assert_eq!(binomial(20, 10), 184_756);
+    }
+
+    #[test]
+    fn decomposition_identity_property() {
+        // Σ|x-y|^p == combine(marginals, exact inner products) for random
+        // signed data and p in {4, 6, 8}.
+        testkit::check(100, |g| {
+            let p = [4, 6, 8][g.usize_in(0, 3)];
+            let n = g.usize_in(1, 40);
+            let x: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            let y: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            let dec = Decomposition::new(p).unwrap();
+            let xn: f64 = x.iter().map(|v| v.powi(p as i32)).sum();
+            let yn: f64 = y.iter().map(|v| v.powi(p as i32)).sum();
+            let inner = exact_inner_products(&x, &y, p);
+            let lhs = exact_distance(&x, &y, p);
+            let rhs = dec.combine(xn, yn, &inner);
+            let scale = lhs.abs().max(1.0);
+            crate::prop_assert!(
+                (lhs - rhs).abs() / scale < 1e-9,
+                "p={p} lhs={lhs} rhs={rhs}"
+            );
+        });
+    }
+
+    #[test]
+    fn zero_distance_at_equal_vectors() {
+        let x: [f64; 4] = [0.3, 1.7, 0.9, 2.2];
+        for p in [4, 6] {
+            let dec = Decomposition::new(p).unwrap();
+            let xn: f64 = x.iter().map(|v| v.powi(p as i32)).sum();
+            let inner = exact_inner_products(&x, &x, p);
+            let d = dec.combine(xn, xn, &inner);
+            assert!(d.abs() < 1e-9 * xn.abs(), "p={p} d={d}");
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! The paper's unbiased l_p^p distance estimators (§2.1, §2.2, §3, §4).
+//!
+//! Both projection strategies share one combine rule — the strategy only
+//! changes how the sketches were *produced* (shared vs independent R):
+//!
+//! ```text
+//! d̂ = Σx^p + Σy^p + (1/k) Σ_{m=1}^{p-1} c_m ⟨u_m, v_{p-m}⟩
+//! ```
+
+use super::decompose::Decomposition;
+use crate::projection::sketcher::{RowSketch, SketchSet};
+
+/// f64 dot product of two f32 sketch vectors.
+///
+/// Four independent accumulators break the sequential-FMA dependency
+/// chain so the compiler can vectorize the f32→f64 convert + FMA loop
+/// (≈2.3× on the estimate hot path — EXPERIMENTS.md §Perf iteration 3).
+/// f64 accumulation is load-bearing: sketch entries are O(√D) and the
+/// combine multiplies by binomial coefficients, so f32 accumulation
+/// loses digits exactly where the distance is a small difference of
+/// large terms.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += (a[i] as f64) * (b[i] as f64);
+        acc[1] += (a[i + 1] as f64) * (b[i + 1] as f64);
+        acc[2] += (a[i + 2] as f64) * (b[i + 2] as f64);
+        acc[3] += (a[i + 3] as f64) * (b[i + 3] as f64);
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..a.len() {
+        tail += (a[i] as f64) * (b[i] as f64);
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Plain estimator from two sketch sets + exact marginal p-norms.
+pub fn combine(
+    dec: &Decomposition,
+    u: &SketchSet,
+    v: &SketchSet,
+    x_norm_p: f64,
+    y_norm_p: f64,
+) -> f64 {
+    let p = dec.p();
+    debug_assert_eq!(u.orders, p - 1);
+    debug_assert_eq!(v.orders, p - 1);
+    let k = u.k as f64;
+    let mut d = x_norm_p + y_norm_p;
+    for m in 1..p {
+        d += dec.coeff(m) * dot(u.u(m), v.u(p - m)) / k;
+    }
+    d
+}
+
+/// Plain estimator straight from two [`RowSketch`]es (marginal p-norm is
+/// moment `p`). `x` is the left element of the pair (u-side sketches),
+/// `y` the right (v-side) — the distinction only matters under the
+/// alternative strategy.
+pub fn estimate(dec: &Decomposition, x: &RowSketch, y: &RowSketch) -> f64 {
+    combine(
+        dec,
+        &x.uside,
+        y.vside(),
+        x.moments.get(dec.p()),
+        y.moments.get(dec.p()),
+    )
+}
+
+/// Per-order sketch inner products ⟨u_m, v_{p-m}⟩/k — the raw unbiased
+/// estimates of Σ x^m y^(p-m) (inputs to the margin MLE).
+pub fn raw_inner_estimates(dec: &Decomposition, u: &SketchSet, v: &SketchSet) -> Vec<f64> {
+    let p = dec.p();
+    let k = u.k as f64;
+    (1..p).map(|m| dot(u.u(m), v.u(p - m)) / k).collect()
+}
+
+/// Dense pairwise estimate matrix (row-major B×B2) — the pure-rust mirror
+/// of the `estimate` PJRT artifact, for arbitrary shapes.
+pub fn estimate_block(dec: &Decomposition, xs: &[RowSketch], ys: &[RowSketch]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len() * ys.len());
+    for x in xs {
+        for y in ys {
+            out.push(estimate(dec, x, y));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::decompose::exact_distance;
+    use crate::core::variance;
+    use crate::projection::sketcher::Sketcher;
+    use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+    use crate::util::rng::Rng;
+    use crate::util::stats::Welford;
+
+    fn random_rows(rng: &mut Rng, d: usize, lo: f64) -> (Vec<f32>, Vec<f32>) {
+        let x: Vec<f32> = (0..d).map(|_| (lo + rng.next_f64() * (1.0 - lo)) as f32).collect();
+        let y: Vec<f32> = (0..d).map(|_| (lo + rng.next_f64() * (1.0 - lo)) as f32).collect();
+        (x, y)
+    }
+
+    /// Monte-Carlo over projection seeds: mean → exact distance (unbiased)
+    /// and empirical variance → the Lemma formula.
+    fn mc_check(p: usize, strategy: Strategy, dist: ProjectionDist, var_of: impl Fn(&variance::CrossTable, usize) -> f64) {
+        let mut rng = Rng::new(2024);
+        let d = 64;
+        let k = 32;
+        let (x, y) = random_rows(&mut rng, d, 0.0);
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let exact = exact_distance(&x64, &y64, p);
+        let t = variance::table_for(&x64, &y64, p);
+        let theory_var = var_of(&t, k);
+
+        let dec = Decomposition::new(p).unwrap();
+        let mut w = Welford::new();
+        let reps = 4000;
+        for rep in 0..reps {
+            let spec = ProjectionSpec::new(rep as u64, k, dist, strategy);
+            let sk = Sketcher::new(spec, p);
+            let out = sk.sketch_rows(&[&x, &y]);
+            w.push(estimate(&dec, &out[0], &out[1]));
+        }
+        // Unbiasedness: z-test of the MC mean against the exact distance.
+        let z = w.z_against(exact);
+        assert!(z.abs() < 4.5, "p={p} {strategy:?}: biased, z={z} mean={} exact={exact}", w.mean());
+        // Variance within MC tolerance (sd of var-estimate ~ sqrt(2/n)·var).
+        let rel = (w.sample_variance() - theory_var).abs() / theory_var;
+        assert!(
+            rel < 0.15,
+            "p={p} {strategy:?}: var mismatch: emp={} theory={theory_var} rel={rel}",
+            w.sample_variance()
+        );
+    }
+
+    #[test]
+    fn lemma1_mc_basic_p4() {
+        mc_check(4, Strategy::Basic, ProjectionDist::Normal, variance::lemma1_var);
+    }
+
+    #[test]
+    fn lemma2_mc_alternative_p4() {
+        mc_check(4, Strategy::Alternative, ProjectionDist::Normal, variance::lemma2_var);
+    }
+
+    #[test]
+    fn lemma5_mc_basic_p6() {
+        mc_check(6, Strategy::Basic, ProjectionDist::Normal, variance::lemma5_var);
+    }
+
+    #[test]
+    fn lemma6_mc_three_point_s10() {
+        mc_check(4, Strategy::Basic, ProjectionDist::ThreePoint(10.0), |t, k| {
+            variance::lemma6_var(t, 10.0, k)
+        });
+    }
+
+    #[test]
+    fn lemma6_mc_uniform() {
+        mc_check(4, Strategy::Basic, ProjectionDist::Uniform, |t, k| {
+            variance::lemma6_var(t, 9.0 / 5.0, k)
+        });
+    }
+
+    #[test]
+    fn general_p8_mc_unbiased_and_variance() {
+        // The paper works out p=4 and p=6; the decomposition and the
+        // general variance machinery extend to any even p — verify at
+        // p=8 (moments up to x^14, so small D keeps f64 healthy).
+        let mut rng = Rng::new(88);
+        let d = 16;
+        let k = 24;
+        let (x, y) = random_rows(&mut rng, d, 0.0);
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let exact = exact_distance(&x64, &y64, 8);
+        let t = variance::table_for(&x64, &y64, 8);
+        let theory = variance::var_basic_general(8, 3.0, &t, k);
+        let dec = Decomposition::new(8).unwrap();
+        let mut w = Welford::new();
+        for rep in 0..4000 {
+            let spec = ProjectionSpec::new(rep, k, ProjectionDist::Normal, Strategy::Basic);
+            let sk = Sketcher::new(spec, 8);
+            let out = sk.sketch_rows(&[&x, &y]);
+            w.push(estimate(&dec, &out[0], &out[1]));
+        }
+        assert!(w.z_against(exact).abs() < 4.5, "p=8 biased: z={}", w.z_against(exact));
+        let rel = (w.sample_variance() - theory).abs() / theory;
+        assert!(rel < 0.2, "p=8 var mismatch: emp={} theory={theory}", w.sample_variance());
+    }
+
+    #[test]
+    fn alt_variance_mc_p6_matches_general() {
+        mc_check(6, Strategy::Alternative, ProjectionDist::Normal, |t, k| {
+            variance::var_alt_general(6, 3.0, t, k)
+        });
+    }
+
+    #[test]
+    fn estimate_block_matches_pairwise() {
+        let mut rng = Rng::new(5);
+        let (x, y) = random_rows(&mut rng, 32, -1.0);
+        let (z, _) = random_rows(&mut rng, 32, -1.0);
+        let dec = Decomposition::new(4).unwrap();
+        let sk = Sketcher::new(
+            ProjectionSpec::new(1, 16, ProjectionDist::Normal, Strategy::Basic),
+            4,
+        );
+        let rows = sk.sketch_rows(&[&x, &y, &z]);
+        let block = estimate_block(&dec, &rows[..2], &rows[1..]);
+        assert_eq!(block.len(), 4);
+        assert_eq!(block[0], estimate(&dec, &rows[0], &rows[1]));
+        assert_eq!(block[3], estimate(&dec, &rows[1], &rows[2]));
+    }
+
+    #[test]
+    fn identical_rows_estimate_near_zero_distance() {
+        // d(x,x)=0; the estimator is unbiased so the MC mean must → 0.
+        let mut rng = Rng::new(8);
+        let (x, _) = random_rows(&mut rng, 64, 0.0);
+        let dec = Decomposition::new(4).unwrap();
+        let mut w = Welford::new();
+        for rep in 0..2000 {
+            let sk = Sketcher::new(
+                ProjectionSpec::new(rep, 32, ProjectionDist::Normal, Strategy::Basic),
+                4,
+            );
+            let out = sk.sketch_rows(&[&x, &x]);
+            w.push(estimate(&dec, &out[0], &out[1]));
+        }
+        assert!(w.z_against(0.0).abs() < 4.5, "mean={} sem={}", w.mean(), w.sem());
+    }
+}

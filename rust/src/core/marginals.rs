@@ -1,0 +1,158 @@
+//! Marginal-moment linear scan (the "assume a linear scan is feasible"
+//! half of the paper's method) and the cross moments Σ x^a y^b the
+//! variance formulas consume.
+
+/// Marginal moments of one row: `m[i] = Σ_j x_j^(i+1)` for i+1 = 1..=n.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Moments(pub Vec<f64>);
+
+impl Moments {
+    /// One pass over `x`, walking the Hadamard power ladder — mirrors the
+    /// L1 kernel so rust fallback and PJRT artifacts agree bit-for-bit in
+    /// structure (f32 vs f64 rounding aside).
+    pub fn scan(x: &[f64], n: usize) -> Self {
+        let mut m = vec![0.0; n];
+        for &v in x {
+            let mut p = 1.0;
+            for slot in m.iter_mut() {
+                p *= v;
+                *slot += p;
+            }
+        }
+        Moments(m)
+    }
+
+    pub fn scan_f32(x: &[f32], n: usize) -> Self {
+        let mut m = vec![0.0f64; n];
+        for &v in x {
+            let v = v as f64;
+            let mut p = 1.0;
+            for slot in m.iter_mut() {
+                p *= v;
+                *slot += p;
+            }
+        }
+        Moments(m)
+    }
+
+    /// Σ x^order (order >= 1).
+    pub fn get(&self, order: usize) -> f64 {
+        self.0[order - 1]
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Moments are additive over D-chunks (streaming invariant).
+    pub fn merge(&mut self, other: &Moments) {
+        assert_eq!(self.0.len(), other.0.len());
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            *a += b;
+        }
+    }
+}
+
+/// Cross moment Σ_i x_i^a y_i^b (a or b may be 0).
+pub fn cross_moment(x: &[f64], y: &[f64], a: usize, b: usize) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(&xv, &yv)| xv.powi(a as i32) * yv.powi(b as i32))
+        .sum()
+}
+
+/// All cross moments Σ x^a y^b for 0 <= a, b <= max_order in one pass,
+/// indexed `[a][b]`. `[0][0]` = D. Used by the variance formulas, which
+/// for p=6 touch ~30 distinct (a, b) pairs.
+pub fn cross_moment_table(x: &[f64], y: &[f64], max_order: usize) -> Vec<Vec<f64>> {
+    assert_eq!(x.len(), y.len());
+    let n = max_order + 1;
+    let mut t = vec![vec![0.0; n]; n];
+    let mut xp = vec![0.0; n];
+    let mut yp = vec![0.0; n];
+    for (&xv, &yv) in x.iter().zip(y) {
+        xp[0] = 1.0;
+        yp[0] = 1.0;
+        for i in 1..n {
+            xp[i] = xp[i - 1] * xv;
+            yp[i] = yp[i - 1] * yv;
+        }
+        for a in 0..n {
+            let row = &mut t[a];
+            let xa = xp[a];
+            for b in 0..n {
+                row[b] += xa * yp[b];
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn scan_matches_naive() {
+        let x = [1.0, -2.0, 0.5];
+        let m = Moments::scan(&x, 4);
+        for order in 1..=4 {
+            let naive: f64 = x.iter().map(|v| v.powi(order as i32)).sum();
+            assert!((m.get(order) - naive).abs() < 1e-12, "order {order}");
+        }
+    }
+
+    #[test]
+    fn f32_scan_close_to_f64() {
+        let x64 = [0.25, 0.5, 0.75, 1.25];
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let a = Moments::scan(&x64, 6);
+        let b = Moments::scan_f32(&x32, 6);
+        for o in 1..=6 {
+            assert!((a.get(o) - b.get(o)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn merge_is_chunked_scan() {
+        testkit::check(50, |g| {
+            let x = g.vec_f64(2..64, -1.5..1.5);
+            let split = g.usize_in(1, x.len());
+            let whole = Moments::scan(&x, 10);
+            let mut left = Moments::scan(&x[..split], 10);
+            left.merge(&Moments::scan(&x[split..], 10));
+            for o in 1..=10 {
+                let scale = whole.get(o).abs().max(1.0);
+                crate::prop_assert!(
+                    (whole.get(o) - left.get(o)).abs() / scale < 1e-12,
+                    "order {o}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn cross_table_matches_pointwise() {
+        testkit::check(30, |g| {
+            let n = g.usize_in(1, 30);
+            let x: Vec<f64> = (0..n).map(|_| g.f64_in(-1.0, 1.0)).collect();
+            let y: Vec<f64> = (0..n).map(|_| g.f64_in(-1.0, 1.0)).collect();
+            let t = cross_moment_table(&x, &y, 5);
+            for a in 0..=5 {
+                for b in 0..=5 {
+                    let direct = cross_moment(&x, &y, a, b);
+                    crate::prop_assert!(
+                        (t[a][b] - direct).abs() < 1e-9 * direct.abs().max(1.0),
+                        "a={a} b={b}"
+                    );
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,220 @@
+//! Margin-aware MLE estimator (paper §2.3, Lemma 4).
+//!
+//! Each mixed inner product a = Σ x^m y^(p-m) is re-estimated using the
+//! exactly-known marginal norms mx = Σ x^(2m), my = Σ y^(2(p-m)) — the
+//! [Li–Hastie–Church 2006] margin trick applied per order. â solves the
+//! cubic
+//!
+//! ```text
+//! a³ − (a²/k)·uᵀv + a·[ (mx‖v‖² + my‖u‖²)/k − mx·my ] − (mx·my/k)·uᵀv = 0
+//! ```
+//!
+//! (u = u_m, v = v_{p-m}). The paper gives this for the alternative
+//! strategy where the three orders are independent; in practice it is
+//! applied under the basic strategy too (§2.3 last paragraph), which the
+//! E4/E9 experiments quantify. Solved either in closed form (Cardano,
+//! picking the root nearest the plain estimate — the MLE branch) or by
+//! the one-step Newton iteration the paper recommends.
+
+use super::cubic;
+use super::decompose::Decomposition;
+use super::estimator::dot;
+use crate::projection::sketcher::RowSketch;
+
+/// How to solve the per-order cubic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solve {
+    /// Closed-form roots; pick the admissible one nearest the plain
+    /// estimate.
+    ClosedForm,
+    /// One Newton–Raphson step from the plain estimate ("one-step
+    /// Newton-Rhapson", §2.3).
+    OneStepNewton,
+}
+
+/// MLE of one mixed inner product.
+///
+/// * `uv`   — uᵀv (NOT divided by k)
+/// * `nu2`  — ‖u‖², `nv2` — ‖v‖²
+/// * `mx`   — Σ x^(2m), `my` — Σ y^(2(p-m))
+pub fn inner_mle(uv: f64, nu2: f64, nv2: f64, mx: f64, my: f64, k: usize, solve: Solve) -> f64 {
+    let kf = k as f64;
+    // Cubic z³ + A z² + B z + C = 0.
+    let a = -uv / kf;
+    let b = (mx * nv2 + my * nu2) / kf - mx * my;
+    let c = -mx * my * uv / kf;
+    let plain = uv / kf;
+    match solve {
+        Solve::OneStepNewton => cubic::newton_step(plain, a, b, c),
+        Solve::ClosedForm => {
+            let bound = (mx * my).sqrt(); // |Σ x^m y^(p-m)| ≤ √(mx·my)
+            let roots = cubic::real_roots(a, b, c);
+            roots
+                .into_iter()
+                .filter(|z| z.abs() <= bound * (1.0 + 1e-9))
+                .min_by(|x, y| {
+                    (x - plain).abs().partial_cmp(&(y - plain).abs()).unwrap()
+                })
+                // All roots outside the Cauchy–Schwarz ball (tiny-k noise):
+                // fall back to the clamped plain estimate.
+                .unwrap_or_else(|| plain.clamp(-bound, bound))
+        }
+    }
+}
+
+/// Margin-MLE distance estimate d̂_(p),mle from two row sketches.
+pub fn estimate_mle(dec: &Decomposition, x: &RowSketch, y: &RowSketch, solve: Solve) -> f64 {
+    let p = dec.p();
+    let k = x.uside.k;
+    let mut d = x.moments.get(p) + y.moments.get(p);
+    for m in 1..p {
+        let u = x.uside.u(m);
+        let v = y.vside().u(p - m);
+        let a_hat = inner_mle(
+            dot(u, v),
+            x.uside.norm2(m),
+            y.vside().norm2(p - m),
+            x.moments.get(2 * m),
+            y.moments.get(2 * (p - m)),
+            k,
+            solve,
+        );
+        d += dec.coeff(m) * a_hat;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::decompose::exact_distance;
+    use crate::core::estimator::estimate;
+    use crate::core::variance;
+    use crate::projection::sketcher::Sketcher;
+    use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+    use crate::util::rng::Rng;
+    use crate::util::stats::Welford;
+
+    fn rows(seed: u64, d: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..d).map(|_| rng.next_f64() as f32).collect();
+        let y: Vec<f32> = (0..d).map(|_| rng.next_f64() as f32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn mle_root_is_exact_at_infinite_k_limit() {
+        // If the sketches were noiseless (u = v = the true quantities in a
+        // k=1 "perfect" setup), the cubic is satisfied by the true a.
+        // Synthetic check: build uv, norms from a consistent model.
+        let (mx, my, a_true) = (2.0, 3.0, 1.2);
+        let k = 1000;
+        // E[uᵀv] = k·a, E‖u‖² = k·mx, E‖v‖² = k·my.
+        let est = inner_mle(
+            k as f64 * a_true,
+            k as f64 * mx,
+            k as f64 * my,
+            mx,
+            my,
+            k,
+            Solve::ClosedForm,
+        );
+        assert!((est - a_true).abs() < 1e-9, "est={est}");
+    }
+
+    #[test]
+    fn mle_unbiased_and_beats_plain_variance() {
+        // MC over seeds (alternative strategy, as analyzed by Lemma 4):
+        // mean → exact, variance strictly below the plain estimator's and
+        // close to the Lemma 4 asymptote.
+        let (x, y) = rows(31, 64);
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let exact = exact_distance(&x64, &y64, 4);
+        let t = variance::table_for(&x64, &y64, 4);
+        let k = 64;
+        let dec = Decomposition::new(4).unwrap();
+
+        let (mut w_plain, mut w_mle, mut w_newton) =
+            (Welford::new(), Welford::new(), Welford::new());
+        for rep in 0..3000 {
+            let spec = ProjectionSpec::new(rep, k, ProjectionDist::Normal, Strategy::Alternative);
+            let sk = Sketcher::new(spec, 4);
+            let out = sk.sketch_rows(&[&x, &y]);
+            w_plain.push(estimate(&dec, &out[0], &out[1]));
+            w_mle.push(estimate_mle(&dec, &out[0], &out[1], Solve::ClosedForm));
+            w_newton.push(estimate_mle(&dec, &out[0], &out[1], Solve::OneStepNewton));
+        }
+        // Asymptotically unbiased: allow a small bias at finite k but the
+        // mean must sit within a few percent of the exact distance.
+        assert!(
+            (w_mle.mean() - exact).abs() / exact < 0.05,
+            "mle mean={} exact={exact}",
+            w_mle.mean()
+        );
+        let plain_var = variance::lemma2_var(&t, k);
+        let mle_var = variance::lemma4_mle_var(&t, k);
+        assert!(
+            w_mle.sample_variance() < w_plain.sample_variance(),
+            "MLE should reduce variance: {} vs {}",
+            w_mle.sample_variance(),
+            w_plain.sample_variance()
+        );
+        // Within 30% of the asymptotic Lemma 4 prediction (O(1/k²) terms
+        // and MC noise both contribute).
+        let rel = (w_mle.sample_variance() - mle_var).abs() / mle_var;
+        assert!(
+            rel < 0.3,
+            "mle var {} vs lemma4 {mle_var} (plain theory {plain_var})",
+            w_mle.sample_variance()
+        );
+        // One-step Newton is asymptotically equivalent; at k=64 it still
+        // carries an O(1/k) gap vs the full solve (E9 quantifies). It must
+        // land strictly between plain and ~1.6× the full-MLE variance.
+        let rel_n = (w_newton.sample_variance() - w_mle.sample_variance()).abs()
+            / w_mle.sample_variance();
+        assert!(rel_n < 0.8, "newton var off by {rel_n}");
+        assert!(
+            w_newton.sample_variance() < w_plain.sample_variance(),
+            "one-step newton should still beat the plain estimator"
+        );
+    }
+
+    #[test]
+    fn mle_respects_cauchy_schwarz_bound() {
+        crate::testkit::check(200, |g| {
+            let mx = g.f64_in(0.1, 5.0);
+            let my = g.f64_in(0.1, 5.0);
+            let k = g.usize_in(2, 64);
+            let uv = g.f64_in(-3.0, 3.0) * k as f64;
+            let nu2 = g.f64_in(0.1, 5.0) * k as f64;
+            let nv2 = g.f64_in(0.1, 5.0) * k as f64;
+            let est = inner_mle(uv, nu2, nv2, mx, my, k, Solve::ClosedForm);
+            let bound = (mx * my).sqrt() * (1.0 + 1e-6);
+            crate::prop_assert!(est.abs() <= bound, "est={est} bound={bound}");
+        });
+    }
+
+    #[test]
+    fn one_step_newton_close_to_closed_form_at_large_k() {
+        let (x, y) = rows(77, 128);
+        let dec = Decomposition::new(4).unwrap();
+        let spec = ProjectionSpec::new(5, 256, ProjectionDist::Normal, Strategy::Alternative);
+        let sk = Sketcher::new(spec, 4);
+        let out = sk.sketch_rows(&[&x, &y]);
+        let a = estimate_mle(&dec, &out[0], &out[1], Solve::ClosedForm);
+        let b = estimate_mle(&dec, &out[0], &out[1], Solve::OneStepNewton);
+        assert!((a - b).abs() / a.abs().max(1.0) < 0.10, "{a} vs {b}");
+    }
+
+    #[test]
+    fn works_for_p6_extension() {
+        let (x, y) = rows(13, 64);
+        let dec = Decomposition::new(6).unwrap();
+        let spec = ProjectionSpec::new(5, 128, ProjectionDist::Normal, Strategy::Alternative);
+        let sk = Sketcher::new(spec, 6);
+        let out = sk.sketch_rows(&[&x, &y]);
+        let est = estimate_mle(&dec, &out[0], &out[1], Solve::ClosedForm);
+        assert!(est.is_finite());
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's estimation theory: decomposition, estimators, margin MLE,
+//! variance formulas (Lemmas 1–6), and supporting numerics.
+
+pub mod cubic;
+pub mod decompose;
+pub mod estimator;
+pub mod marginals;
+pub mod mle;
+pub mod tail;
+pub mod variance;
+
+pub use decompose::Decomposition;

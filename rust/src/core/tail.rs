@@ -1,0 +1,288 @@
+//! Confidence intervals for the sketch estimators — the paper's
+//! "extension" direction (its companion works, [15][18], develop tail
+//! bounds for the p ≤ 2 estimators; here we provide the practical
+//! equivalent for even p ≥ 4).
+//!
+//! Two routes:
+//! * **Plug-in Gaussian CI** — the estimator is a mean of k i.i.d.
+//!   per-column terms, so it is asymptotically normal with the Lemma
+//!   1/2/6 variance; plugging sketch-measurable proxies for the unknown
+//!   cross-moments gives a usable interval. We use the conservative
+//!   Cauchy–Schwarz closure: every |Σxᵃyᵇ| in the variance formula is
+//!   bounded by √(Σx^2a · Σy^2b), all computable from the stored
+//!   marginal moments alone.
+//! * **Empirical (per-column) CI** — the k per-column combine terms are
+//!   themselves i.i.d. samples of the estimator; their sample variance
+//!   gives a self-normalized interval with no formula at all.
+//!
+//! E-coverage tests verify both intervals hit nominal coverage.
+
+use super::decompose::Decomposition;
+use crate::core::marginals::Moments;
+use crate::projection::sketcher::RowSketch;
+
+/// Two-sided normal quantile for common confidence levels.
+pub fn z_quantile(confidence: f64) -> f64 {
+    // Acklam-style rational approximation of Φ⁻¹((1+c)/2); accurate to
+    // ~1e-4 over the levels we use — far inside CI-width noise.
+    let p = (1.0 + confidence) / 2.0;
+    assert!((0.5..1.0).contains(&p), "confidence in (0,1)");
+    inverse_normal_cdf(p)
+}
+
+fn inverse_normal_cdf(p: f64) -> f64 {
+    // Peter Acklam's approximation.
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -inverse_normal_cdf(1.0 - p)
+    }
+}
+
+/// A confidence interval around an estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct Interval {
+    pub estimate: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Interval {
+    pub fn contains(&self, v: f64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+}
+
+/// Conservative variance upper bound from marginal moments alone
+/// (Cauchy–Schwarz closure of the Lemma 2 formula; strategy-independent
+/// upper bound on non-negative data by Lemma 3, and an upper bound of
+/// Lemma 1's |cross terms| in general).
+pub fn variance_upper_bound(p: usize, mx: &Moments, my: &Moments, s: f64, k: usize) -> f64 {
+    let dec = Decomposition::new(p).expect("valid p");
+    let mut var = 0.0;
+    for m in 1..p {
+        let c = dec.coeff(m);
+        // Var of one inner-product estimator ≤ (Σx^2m Σy^2(p−m)
+        //   + (Σxᵐy^{p−m})² + |s−3|·Σx^2m y^2(p−m)) / k,
+        // each unknown bounded via Cauchy–Schwarz by marginal moments.
+        let xa = mx.get(2 * m);
+        let yb = my.get(2 * (p - m));
+        let cross2 = xa * yb; // ≥ (Σ xᵐ y^{p−m})²  and ≥ Σx^2m y^2(p−m)
+        var += c * c * (xa * yb + cross2 + (s - 3.0).abs() * cross2);
+    }
+    // Cross-order covariances (basic strategy): bound each |cov| by the
+    // product of the component sds (Cauchy–Schwarz again).
+    let mut sds: Vec<f64> = Vec::with_capacity(p - 1);
+    for m in 1..p {
+        let xa = mx.get(2 * m);
+        let yb = my.get(2 * (p - m));
+        sds.push((2.0 + (s - 3.0).abs()) * xa * yb);
+    }
+    for i in 0..sds.len() {
+        for j in 0..sds.len() {
+            if i != j {
+                let ci = dec.coeff(i + 1).abs();
+                let cj = dec.coeff(j + 1).abs();
+                var += ci * cj * (sds[i] * sds[j]).sqrt();
+            }
+        }
+    }
+    var / k as f64
+}
+
+/// Plug-in CI from the stored sketches' marginal moments.
+pub fn plugin_interval(
+    dec: &Decomposition,
+    x: &RowSketch,
+    y: &RowSketch,
+    s: f64,
+    confidence: f64,
+) -> Interval {
+    let estimate = crate::core::estimator::estimate(dec, x, y);
+    let var = variance_upper_bound(dec.p(), &x.moments, &y.moments, s, x.uside.k);
+    let half = z_quantile(confidence) * var.sqrt();
+    Interval { estimate, lo: estimate - half, hi: estimate + half }
+}
+
+/// Empirical CI from the k per-column combine terms.
+///
+/// Column j's term `Σ_m c_m u_{m,j} v_{p−m,j}` is one i.i.d. draw of the
+/// (centered) inner-product part; their sample sd / √k self-normalizes
+/// the interval.
+pub fn empirical_interval(
+    dec: &Decomposition,
+    x: &RowSketch,
+    y: &RowSketch,
+    confidence: f64,
+) -> Interval {
+    let p = dec.p();
+    let k = x.uside.k;
+    let margins = x.moments.get(p) + y.moments.get(p);
+    let mut w = crate::util::stats::Welford::new();
+    let v = y.vside();
+    for j in 0..k {
+        let mut term = 0.0;
+        for m in 1..p {
+            term += dec.coeff(m) * (x.uside.u(m)[j] as f64) * (v.u(p - m)[j] as f64);
+        }
+        w.push(term);
+    }
+    let estimate = margins + w.mean();
+    let half = z_quantile(confidence) * w.sem();
+    Interval { estimate, lo: estimate - half, hi: estimate + half }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::decompose::exact_distance;
+    use crate::projection::sketcher::Sketcher;
+    use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn z_quantiles_match_tables() {
+        assert!((z_quantile(0.95) - 1.9600).abs() < 1e-3);
+        assert!((z_quantile(0.90) - 1.6449).abs() < 1e-3);
+        assert!((z_quantile(0.99) - 2.5758).abs() < 1e-3);
+    }
+
+    fn pair(d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, f64) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..d).map(|_| rng.next_f64() as f32).collect();
+        let y: Vec<f32> = (0..d).map(|_| rng.next_f64() as f32).collect();
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let exact = exact_distance(&x64, &y64, 4);
+        (x, y, exact)
+    }
+
+    #[test]
+    fn empirical_interval_centers_on_estimate() {
+        let (x, y, _) = pair(64, 1);
+        let dec = Decomposition::new(4).unwrap();
+        let sk = Sketcher::new(
+            ProjectionSpec::new(3, 64, ProjectionDist::Normal, Strategy::Basic),
+            4,
+        );
+        let rows = sk.sketch_rows(&[&x, &y]);
+        let iv = empirical_interval(&dec, &rows[0], &rows[1], 0.95);
+        let plain = crate::core::estimator::estimate(&dec, &rows[0], &rows[1]);
+        assert!((iv.estimate - plain).abs() < 1e-9 * (1.0 + plain.abs()));
+        assert!(iv.lo < iv.estimate && iv.estimate < iv.hi);
+    }
+
+    #[test]
+    fn empirical_coverage_near_nominal() {
+        let (x, y, exact) = pair(64, 2);
+        let dec = Decomposition::new(4).unwrap();
+        let mut hits = 0;
+        let reps = 600;
+        for seed in 0..reps {
+            let sk = Sketcher::new(
+                ProjectionSpec::new(seed, 96, ProjectionDist::Normal, Strategy::Basic),
+                4,
+            );
+            let rows = sk.sketch_rows(&[&x, &y]);
+            if empirical_interval(&dec, &rows[0], &rows[1], 0.95).contains(exact) {
+                hits += 1;
+            }
+        }
+        let coverage = hits as f64 / reps as f64;
+        // Nominal 95% ± finite-k slack (per-column terms are heavy-tailed).
+        assert!((0.88..=1.0).contains(&coverage), "coverage {coverage}");
+    }
+
+    #[test]
+    fn plugin_interval_is_conservative() {
+        // The Cauchy–Schwarz closure over-covers by design.
+        let (x, y, exact) = pair(64, 3);
+        let dec = Decomposition::new(4).unwrap();
+        let mut hits = 0;
+        let reps = 300;
+        for seed in 0..reps {
+            let sk = Sketcher::new(
+                ProjectionSpec::new(seed, 64, ProjectionDist::Normal, Strategy::Basic),
+                4,
+            );
+            let rows = sk.sketch_rows(&[&x, &y]);
+            if plugin_interval(&dec, &rows[0], &rows[1], 3.0, 0.95).contains(exact) {
+                hits += 1;
+            }
+        }
+        let coverage = hits as f64 / reps as f64;
+        assert!(coverage >= 0.95, "conservative interval under-covers: {coverage}");
+    }
+
+    #[test]
+    fn plugin_width_shrinks_with_k() {
+        let (x, y, _) = pair(64, 4);
+        let dec = Decomposition::new(4).unwrap();
+        let width = |k: usize| {
+            let sk = Sketcher::new(
+                ProjectionSpec::new(9, k, ProjectionDist::Normal, Strategy::Basic),
+                4,
+            );
+            let rows = sk.sketch_rows(&[&x, &y]);
+            plugin_interval(&dec, &rows[0], &rows[1], 3.0, 0.95).width()
+        };
+        let w16 = width(16);
+        let w256 = width(256);
+        assert!(w256 < w16 / 2.0, "width should shrink ~1/sqrt(k): {w16} vs {w256}");
+    }
+
+    #[test]
+    fn variance_bound_dominates_lemma1() {
+        use crate::core::variance;
+        let (x, y, _) = pair(48, 5);
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let t = variance::table_for(&x64, &y64, 4);
+        let mx = Moments::scan(&x64, 6);
+        let my = Moments::scan(&y64, 6);
+        let bound = variance_upper_bound(4, &mx, &my, 3.0, 32);
+        let lemma1 = variance::lemma1_var(&t, 32);
+        assert!(bound >= lemma1, "bound {bound} < lemma1 {lemma1}");
+    }
+}

@@ -1,0 +1,323 @@
+//! The paper's variance theory (Lemmas 1, 2, 4, 5, 6 and the Δ₄ / Δ₆
+//! strategy gaps), in two independent implementations that are tested
+//! against each other:
+//!
+//! 1. **Hard-coded transcriptions** of the formulas exactly as printed in
+//!    the paper (`lemma1_var`, `lemma2_var`, `delta4`, `lemma4_mle_var`,
+//!    `lemma5_var`, `delta6`, `lemma6_var`).
+//! 2. A **general derivation** for any even p and any projection kurtosis
+//!    `s = E r⁴` (`var_basic_general`, `var_alt_general`), built from the
+//!    Isserlis/Wick identity for four projected factors sharing a column r:
+//!
+//!    ```text
+//!    E[(w₁ᵀr)(w₂ᵀr)(w₃ᵀr)(w₄ᵀr)] = ⟨w₁,w₂⟩⟨w₃,w₄⟩ + ⟨w₁,w₃⟩⟨w₂,w₄⟩
+//!                                 + ⟨w₁,w₄⟩⟨w₂,w₃⟩ + (s−3)Σᵢ w₁w₂w₃w₄
+//!    ```
+//!
+//!    with w = x^∘a or y^∘b, so every term reduces to a cross moment
+//!    Σ xᵃyᵇ. Setting p=4, s=3 reproduces Lemma 1 term-by-term; s free
+//!    reproduces Lemma 6; dropping cross-order terms reproduces Lemma 2.
+//!
+//! All functions return Var(d̂) for sketch size k, i.e. they include the
+//! 1/k factor.
+
+use super::decompose::Decomposition;
+use super::marginals::cross_moment_table;
+
+/// Cross-moment table `t[a][b] = Σᵢ xᵢᵃ yᵢᵇ` (a, b ≤ 2(p-1)).
+pub type CrossTable = Vec<Vec<f64>>;
+
+/// Build the cross-moment table sized for even p.
+pub fn table_for(x: &[f64], y: &[f64], p: usize) -> CrossTable {
+    cross_moment_table(x, y, 2 * (p - 1))
+}
+
+/// General Var(d̂) for the *basic* strategy (one shared R), any even p,
+/// projection kurtosis `s` (normal: s = 3; three-point SubG(s): s).
+pub fn var_basic_general(p: usize, s: f64, t: &CrossTable, k: usize) -> f64 {
+    let dec = Decomposition::new(p).expect("valid p");
+    let mut v = 0.0;
+    for m in 1..p {
+        for mp in 1..p {
+            let c = dec.coeff(m) * dec.coeff(mp);
+            // E[u_m v_{p-m} u_m' v_{p-m'}] minus the product of means:
+            // ⟨x^m, x^m'⟩⟨y^{p-m}, y^{p-m'}⟩  +  ⟨x^m, y^{p-m'}⟩⟨x^m', y^{p-m}⟩
+            // + (s-3) Σ x^{m+m'} y^{2p-m-m'}
+            v += c
+                * (t[m + mp][0] * t[0][2 * p - m - mp]
+                    + t[m][p - mp] * t[mp][p - m]
+                    + (s - 3.0) * t[m + mp][2 * p - m - mp]);
+        }
+    }
+    v / k as f64
+}
+
+/// General Var(d̂) for the *alternative* strategy (independent R per
+/// order): cross-order covariances vanish.
+pub fn var_alt_general(p: usize, s: f64, t: &CrossTable, k: usize) -> f64 {
+    let dec = Decomposition::new(p).expect("valid p");
+    let mut v = 0.0;
+    for m in 1..p {
+        let c = dec.coeff(m).powi(2);
+        v += c
+            * (t[2 * m][0] * t[0][2 * (p - m)]
+                + t[m][p - m] * t[m][p - m]
+                + (s - 3.0) * t[2 * m][2 * (p - m)]);
+    }
+    v / k as f64
+}
+
+/// Strategy gap Δ_p = Var(basic) − Var(alternative) (Lemma 3 / §3): the
+/// sum of cross-order covariance terms. Negative on non-negative data for
+/// p = 4 (proved) and p = 6 (conjectured; E5 checks it empirically).
+pub fn delta_general(p: usize, s: f64, t: &CrossTable, k: usize) -> f64 {
+    var_basic_general(p, s, t, k) - var_alt_general(p, s, t, k)
+}
+
+// --------------------------------------------------------------------
+// Paper transcriptions, p = 4
+// --------------------------------------------------------------------
+
+/// Lemma 1: Var(d̂_(4)) for the basic strategy with normal projections.
+pub fn lemma1_var(t: &CrossTable, k: usize) -> f64 {
+    let kf = k as f64;
+    let main = 36.0 / kf * (t[4][0] * t[0][4] + t[2][2] * t[2][2])
+        + 16.0 / kf * (t[6][0] * t[0][2] + t[3][1] * t[3][1])
+        + 16.0 / kf * (t[2][0] * t[0][6] + t[1][3] * t[1][3]);
+    main + delta4(t, k)
+}
+
+/// The Δ₄ cross-term of Lemma 1 / Eq. (1).
+pub fn delta4(t: &CrossTable, k: usize) -> f64 {
+    let kf = k as f64;
+    -48.0 / kf * (t[5][0] * t[0][3] + t[2][1] * t[3][2])
+        - 48.0 / kf * (t[3][0] * t[0][5] + t[1][2] * t[2][3])
+        + 32.0 / kf * (t[4][0] * t[0][4] + t[1][1] * t[3][3])
+}
+
+/// Lemma 2: Var(d̂_(4),a) for the alternative strategy.
+pub fn lemma2_var(t: &CrossTable, k: usize) -> f64 {
+    let kf = k as f64;
+    36.0 / kf * (t[4][0] * t[0][4] + t[2][2] * t[2][2])
+        + 16.0 / kf * (t[6][0] * t[0][2] + t[3][1] * t[3][1])
+        + 16.0 / kf * (t[2][0] * t[0][6] + t[1][3] * t[1][3])
+}
+
+/// Lemma 4: asymptotic Var(d̂_(4),a,mle) — the margin-aware MLE under the
+/// alternative strategy (O(1/k²) terms dropped).
+pub fn lemma4_mle_var(t: &CrossTable, k: usize) -> f64 {
+    let kf = k as f64;
+    let term = |prod: f64, a: f64, c: f64| c / kf * (prod - a * a).powi(2) / (prod + a * a);
+    term(t[4][0] * t[0][4], t[2][2], 36.0)
+        + term(t[6][0] * t[0][2], t[3][1], 16.0)
+        + term(t[2][0] * t[0][6], t[1][3], 16.0)
+}
+
+/// Extension of Lemma 4 to any even p (the paper skips the p=6 analysis;
+/// each order's MLE is independent under the alternative strategy, so the
+/// same per-order shrinkage applies).
+pub fn mle_var_general(p: usize, t: &CrossTable, k: usize) -> f64 {
+    let dec = Decomposition::new(p).expect("valid p");
+    let kf = k as f64;
+    (1..p)
+        .map(|m| {
+            let c = dec.coeff(m).powi(2);
+            let prod = t[2 * m][0] * t[0][2 * (p - m)];
+            let a = t[m][p - m];
+            c / kf * (prod - a * a).powi(2) / (prod + a * a)
+        })
+        .sum()
+}
+
+// --------------------------------------------------------------------
+// Paper transcriptions, p = 6
+// --------------------------------------------------------------------
+
+/// Lemma 5: Var(d̂_(6)) for the basic strategy with normal projections.
+pub fn lemma5_var(t: &CrossTable, k: usize) -> f64 {
+    let kf = k as f64;
+    let main = 400.0 / kf * (t[6][0] * t[0][6] + t[3][3] * t[3][3])
+        + 225.0 / kf * (t[4][0] * t[0][8] + t[2][4] * t[2][4])
+        + 225.0 / kf * (t[8][0] * t[0][4] + t[4][2] * t[4][2])
+        + 36.0 / kf * (t[2][0] * t[0][10] + t[1][5] * t[1][5])
+        + 36.0 / kf * (t[10][0] * t[0][2] + t[5][1] * t[5][1]);
+    main + delta6(t, k)
+}
+
+/// The Δ₆ cross-term of Lemma 5.
+pub fn delta6(t: &CrossTable, k: usize) -> f64 {
+    let kf = k as f64;
+    (-600.0 * (t[5][0] * t[0][7] + t[3][4] * t[2][3])
+        - 600.0 * (t[7][0] * t[0][5] + t[3][2] * t[4][3])
+        + 240.0 * (t[4][0] * t[0][8] + t[3][5] * t[1][3])
+        + 240.0 * (t[8][0] * t[0][4] + t[3][1] * t[5][3])
+        + 450.0 * (t[6][0] * t[0][6] + t[2][2] * t[4][4])
+        - 180.0 * (t[3][0] * t[0][9] + t[2][5] * t[1][4])
+        - 180.0 * (t[7][0] * t[0][5] + t[2][1] * t[5][4])
+        - 180.0 * (t[5][0] * t[0][7] + t[4][5] * t[1][2])
+        - 180.0 * (t[9][0] * t[0][3] + t[4][1] * t[5][2])
+        + 72.0 * (t[6][0] * t[0][6] + t[1][1] * t[5][5]))
+        / kf
+}
+
+// --------------------------------------------------------------------
+// Paper transcription, sub-Gaussian (Lemma 6)
+// --------------------------------------------------------------------
+
+/// Lemma 6: Var(d̂_(4),s) — basic strategy, projections with E r⁴ = s.
+pub fn lemma6_var(t: &CrossTable, s: f64, k: usize) -> f64 {
+    let kf = k as f64;
+    let e = s - 3.0;
+    36.0 / kf * (t[4][0] * t[0][4] + t[2][2] * t[2][2] + e * t[4][4])
+        + 16.0 / kf * (t[6][0] * t[0][2] + t[3][1] * t[3][1] + e * t[6][2])
+        + 16.0 / kf * (t[2][0] * t[0][6] + t[1][3] * t[1][3] + e * t[2][6])
+        - 48.0 / kf * (t[5][0] * t[0][3] + t[2][1] * t[3][2] + e * t[5][3])
+        - 48.0 / kf * (t[3][0] * t[0][5] + t[1][2] * t[2][3] + e * t[3][5])
+        + 32.0 / kf * (t[4][0] * t[0][4] + t[1][1] * t[3][3] + e * t[4][4])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn random_pair(g: &mut crate::testkit::Gen, lo: f64) -> (Vec<f64>, Vec<f64>) {
+        let n = g.usize_in(2, 40);
+        let x: Vec<f64> = (0..n).map(|_| g.f64_in(lo, 1.0)).collect();
+        let y: Vec<f64> = (0..n).map(|_| g.f64_in(lo, 1.0)).collect();
+        (x, y)
+    }
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1e-12)
+    }
+
+    #[test]
+    fn lemma1_matches_general_derivation() {
+        testkit::check(100, |g| {
+            let (x, y) = random_pair(g, -1.0);
+            let t = table_for(&x, &y, 4);
+            let paper = lemma1_var(&t, 16);
+            let general = var_basic_general(4, 3.0, &t, 16);
+            crate::prop_assert!(close(paper, general), "paper={paper} general={general}");
+        });
+    }
+
+    #[test]
+    fn lemma2_matches_general_derivation() {
+        testkit::check(100, |g| {
+            let (x, y) = random_pair(g, -1.0);
+            let t = table_for(&x, &y, 4);
+            crate::prop_assert!(
+                close(lemma2_var(&t, 8), var_alt_general(4, 3.0, &t, 8)),
+                "lemma2 mismatch"
+            );
+        });
+    }
+
+    #[test]
+    fn lemma5_matches_general_derivation() {
+        testkit::check(100, |g| {
+            let (x, y) = random_pair(g, -1.0);
+            let t = table_for(&x, &y, 6);
+            let paper = lemma5_var(&t, 32);
+            let general = var_basic_general(6, 3.0, &t, 32);
+            crate::prop_assert!(close(paper, general), "paper={paper} general={general}");
+        });
+    }
+
+    #[test]
+    fn lemma6_matches_general_derivation() {
+        testkit::check(100, |g| {
+            let (x, y) = random_pair(g, -1.0);
+            let s = g.f64_in(1.0, 20.0);
+            let t = table_for(&x, &y, 4);
+            let paper = lemma6_var(&t, s, 4);
+            let general = var_basic_general(4, s, &t, 4);
+            crate::prop_assert!(close(paper, general), "s={s} paper={paper} general={general}");
+        });
+    }
+
+    #[test]
+    fn lemma6_at_s3_is_lemma1() {
+        testkit::check(50, |g| {
+            let (x, y) = random_pair(g, -1.0);
+            let t = table_for(&x, &y, 4);
+            crate::prop_assert!(close(lemma6_var(&t, 3.0, 7), lemma1_var(&t, 7)), "s=3");
+        });
+    }
+
+    #[test]
+    fn delta4_is_lemma1_minus_lemma2() {
+        testkit::check(50, |g| {
+            let (x, y) = random_pair(g, -1.0);
+            let t = table_for(&x, &y, 4);
+            let d = lemma1_var(&t, 5) - lemma2_var(&t, 5);
+            crate::prop_assert!(close(d, delta4(&t, 5)), "delta4 identity");
+        });
+    }
+
+    #[test]
+    fn lemma3_delta4_nonpositive_on_nonneg_data() {
+        // The paper's Lemma 3 (proved via AM-GM): Δ4 <= 0 when x, y >= 0.
+        testkit::check(300, |g| {
+            let (x, y) = random_pair(g, 0.0);
+            let t = table_for(&x, &y, 4);
+            let d = delta4(&t, 1);
+            crate::prop_assert!(d <= 1e-9 * t[4][0].max(1.0), "delta4={d} > 0");
+        });
+    }
+
+    #[test]
+    fn delta4_can_be_positive_on_signed_data() {
+        // Paper §2.2: all x negative, all y positive => Δ4 >= 0.
+        let x = vec![-0.5, -1.0, -0.25, -0.8];
+        let y = vec![0.7, 0.3, 0.9, 0.2];
+        let t = table_for(&x, &y, 4);
+        assert!(delta4(&t, 1) >= 0.0, "expected Δ4 >= 0, got {}", delta4(&t, 1));
+    }
+
+    #[test]
+    fn delta6_conjecture_nonpositive_on_nonneg_data() {
+        // §3: "we believe Δ6 <= 0 [for non-negative data]" — checked here.
+        testkit::check(300, |g| {
+            let (x, y) = random_pair(g, 0.0);
+            let t = table_for(&x, &y, 6);
+            let d = delta6(&t, 1);
+            crate::prop_assert!(d <= 1e-9 * t[6][0].max(1.0), "delta6={d} > 0");
+        });
+    }
+
+    #[test]
+    fn mle_never_worse_than_plain_alternative() {
+        // (prod - a²)²/(prod + a²) <= prod + a² for every order term.
+        testkit::check(100, |g| {
+            let (x, y) = random_pair(g, -1.0);
+            let t = table_for(&x, &y, 4);
+            crate::prop_assert!(
+                lemma4_mle_var(&t, 9) <= lemma2_var(&t, 9) * (1.0 + 1e-12),
+                "MLE var exceeds plain var"
+            );
+        });
+    }
+
+    #[test]
+    fn mle_general_matches_lemma4_at_p4() {
+        testkit::check(50, |g| {
+            let (x, y) = random_pair(g, -1.0);
+            let t = table_for(&x, &y, 4);
+            crate::prop_assert!(
+                close(mle_var_general(4, &t, 3), lemma4_mle_var(&t, 3)),
+                "general MLE vs Lemma 4"
+            );
+        });
+    }
+
+    #[test]
+    fn variance_scales_as_one_over_k() {
+        let x = vec![0.1, 0.4, 0.8];
+        let y = vec![0.9, 0.2, 0.5];
+        let t = table_for(&x, &y, 4);
+        assert!(close(lemma1_var(&t, 1) / 10.0, lemma1_var(&t, 10)));
+    }
+}

@@ -1,0 +1,199 @@
+//! Synthetic data generators covering the paper's data regimes.
+//!
+//! The paper's motivating data are **non-negative, heavy-tailed**
+//! (term-frequency / count matrices, §2.2 "the data are non-negative,
+//! which is more likely the reality"); the Δ₄ sign-flip discussion also
+//! needs signed data. Generators:
+//!
+//! * `Uniform01` — dense non-negative, light tails.
+//! * `ZipfTf` — sparse term-frequency-like rows: zipf-ranked column
+//!   popularity × geometric counts (the nearest synthetic equivalent of
+//!   the web/text matrices the paper targets; substitution documented in
+//!   DESIGN.md §3).
+//! * `LogNormal` — dense non-negative, heavy tails (kurtosis-rich, the
+//!   ICA/4th-moment motivation).
+//! * `Gaussian` — signed, for the general-formula experiments.
+//! * `SignedSplit` — x-rows negative, y-rows positive: the paper's
+//!   explicit Δ₄ ≥ 0 adversarial case (§2.2).
+
+use super::matrix::RowMatrix;
+use crate::util::normal::NormalSampler;
+use crate::util::rng::Rng;
+
+/// Data distribution families.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DataDist {
+    Uniform01,
+    ZipfTf { exponent: f64, density: f64 },
+    LogNormal { sigma: f64 },
+    Gaussian,
+    SignedSplit,
+}
+
+impl DataDist {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        Ok(match text {
+            "uniform" => DataDist::Uniform01,
+            "zipf" => DataDist::ZipfTf { exponent: 1.1, density: 0.1 },
+            "lognormal" => DataDist::LogNormal { sigma: 1.0 },
+            "gaussian" => DataDist::Gaussian,
+            "signed-split" => DataDist::SignedSplit,
+            _ => anyhow::bail!(
+                "unknown data distribution {text:?} (uniform|zipf|lognormal|gaussian|signed-split)"
+            ),
+        })
+    }
+
+    pub fn describe(&self) -> &'static str {
+        match self {
+            DataDist::Uniform01 => "uniform",
+            DataDist::ZipfTf { .. } => "zipf",
+            DataDist::LogNormal { .. } => "lognormal",
+            DataDist::Gaussian => "gaussian",
+            DataDist::SignedSplit => "signed-split",
+        }
+    }
+
+    /// All rows non-negative? (Determines which strategy Lemma 3 favors.)
+    pub fn non_negative(&self) -> bool {
+        matches!(
+            self,
+            DataDist::Uniform01 | DataDist::ZipfTf { .. } | DataDist::LogNormal { .. }
+        )
+    }
+}
+
+/// Generate an n×d matrix from `dist` with deterministic `seed`.
+pub fn generate(dist: DataDist, n: usize, d: usize, seed: u64) -> RowMatrix {
+    let mut rng = Rng::new(seed ^ 0xDA7A_5EED);
+    let mut normal = NormalSampler::from_rng(rng.fork(1));
+    let mut m = RowMatrix::zeros(n, d);
+    match dist {
+        DataDist::Uniform01 => {
+            for i in 0..n {
+                for v in m.row_mut(i) {
+                    *v = rng.next_f64() as f32;
+                }
+            }
+        }
+        DataDist::Gaussian => {
+            for i in 0..n {
+                for v in m.row_mut(i) {
+                    *v = normal.sample() as f32;
+                }
+            }
+        }
+        DataDist::LogNormal { sigma } => {
+            for i in 0..n {
+                for v in m.row_mut(i) {
+                    // exp(σZ - σ²/2): mean 1, heavy right tail.
+                    *v = (sigma * normal.sample() - sigma * sigma / 2.0).exp() as f32;
+                }
+            }
+        }
+        DataDist::ZipfTf { exponent, density } => {
+            // Column j has zipf weight (j+1)^-exponent; each row activates
+            // ~density·d columns with geometric "term counts" scaled by
+            // the column weight — a TF-matrix lookalike.
+            let weights: Vec<f64> =
+                (0..d).map(|j| ((j + 1) as f64).powf(-exponent)).collect();
+            let nnz = ((d as f64 * density).ceil() as usize).max(1).min(d);
+            let mut cols: Vec<usize> = (0..d).collect();
+            for i in 0..n {
+                // Zipf-biased column choice: earlier columns more likely.
+                rng.shuffle(&mut cols);
+                let mut picked = 0;
+                let mut ci = 0;
+                let row = m.row_mut(i);
+                while picked < nnz && ci < d {
+                    let j = cols[ci];
+                    ci += 1;
+                    // accept with probability ∝ zipf weight (capped at 1)
+                    if rng.next_f64() < (weights[j] * 10.0).min(1.0) {
+                        // geometric count 1,2,3,… (mean 2)
+                        let mut c = 1.0;
+                        while rng.next_f64() < 0.5 {
+                            c += 1.0;
+                        }
+                        row[j] = c as f32;
+                        picked += 1;
+                    }
+                }
+                // guarantee at least one nonzero
+                if picked == 0 {
+                    row[cols[0]] = 1.0;
+                }
+            }
+        }
+        DataDist::SignedSplit => {
+            // Even rows all-negative, odd rows all-positive — pairing an
+            // even with an odd row realizes the paper's Δ₄ ≥ 0 case.
+            for i in 0..n {
+                let sign = if i % 2 == 0 { -1.0 } else { 1.0 };
+                for v in m.row_mut(i) {
+                    *v = (sign * (0.05 + rng.next_f64())) as f32;
+                }
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(DataDist::Uniform01, 4, 16, 9);
+        let b = generate(DataDist::Uniform01, 4, 16, 9);
+        let c = generate(DataDist::Uniform01, 4, 16, 10);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn non_negative_families_are_non_negative() {
+        for dist in [
+            DataDist::Uniform01,
+            DataDist::ZipfTf { exponent: 1.1, density: 0.1 },
+            DataDist::LogNormal { sigma: 1.0 },
+        ] {
+            let m = generate(dist, 8, 64, 3);
+            assert!(m.data().iter().all(|&v| v >= 0.0), "{dist:?}");
+            assert!(dist.non_negative());
+        }
+    }
+
+    #[test]
+    fn zipf_rows_sparse_and_nonzero() {
+        let m = generate(DataDist::ZipfTf { exponent: 1.1, density: 0.05 }, 16, 256, 4);
+        for i in 0..16 {
+            let nnz = m.row(i).iter().filter(|&&v| v != 0.0).count();
+            assert!(nnz >= 1, "row {i} empty");
+            assert!(nnz <= 64, "row {i} too dense: {nnz}");
+        }
+    }
+
+    #[test]
+    fn signed_split_signs() {
+        let m = generate(DataDist::SignedSplit, 4, 32, 5);
+        assert!(m.row(0).iter().all(|&v| v < 0.0));
+        assert!(m.row(1).iter().all(|&v| v > 0.0));
+        assert!(!DataDist::SignedSplit.non_negative());
+    }
+
+    #[test]
+    fn lognormal_heavy_tail() {
+        let m = generate(DataDist::LogNormal { sigma: 1.5 }, 1, 20_000, 6);
+        let mean: f64 = m.row(0).iter().map(|&v| v as f64).sum::<f64>() / 20_000.0;
+        let max = m.row(0).iter().cloned().fold(0.0f32, f32::max) as f64;
+        assert!(max / mean > 20.0, "tail not heavy: max/mean={}", max / mean);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(DataDist::parse("zipf").unwrap().describe(), "zipf");
+        assert!(DataDist::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Matrix IO: a tiny binary f32 format (magic + dims, little-endian) and
+//! CSV for interoperability.
+
+use super::matrix::RowMatrix;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"LPSK";
+
+/// Write the binary format: "LPSK" + n:u64le + d:u64le + n*d f32le.
+pub fn write_binary(m: &RowMatrix, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(m.n() as u64).to_le_bytes())?;
+    w.write_all(&(m.d() as u64).to_le_bytes())?;
+    for &v in m.data() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the binary format.
+pub fn read_binary(path: &Path) -> anyhow::Result<RowMatrix> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?}");
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let d = u64::from_le_bytes(b8) as usize;
+    anyhow::ensure!(
+        n.checked_mul(d).is_some() && n * d < (1 << 34),
+        "unreasonable dims {n}x{d}"
+    );
+    let mut data = vec![0.0f32; n * d];
+    let mut b4 = [0u8; 4];
+    for v in data.iter_mut() {
+        r.read_exact(&mut b4)?;
+        *v = f32::from_le_bytes(b4);
+    }
+    Ok(RowMatrix::new(n, d, data))
+}
+
+/// Write CSV (no header, one row per line).
+pub fn write_csv(m: &RowMatrix, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..m.n() {
+        let line: Vec<String> = m.row(i).iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", line.join(","))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read CSV (no header; all rows must have equal width).
+pub fn read_csv(path: &Path) -> anyhow::Result<RowMatrix> {
+    let f = std::fs::File::open(path)?;
+    let r = BufReader::new(f);
+    let mut data = Vec::new();
+    let mut d = None;
+    let mut n = 0;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let vals: Vec<f32> = line
+            .split(',')
+            .map(|t| t.trim().parse::<f32>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        match d {
+            None => d = Some(vals.len()),
+            Some(w) => anyhow::ensure!(
+                w == vals.len(),
+                "ragged CSV: line {} has {} cols, expected {w}",
+                lineno + 1,
+                vals.len()
+            ),
+        }
+        data.extend_from_slice(&vals);
+        n += 1;
+    }
+    let d = d.ok_or_else(|| anyhow::anyhow!("empty CSV {path:?}"))?;
+    Ok(RowMatrix::new(n, d, data))
+}
+
+/// Load either format by extension (.bin / .csv).
+pub fn load(path: &Path) -> anyhow::Result<RowMatrix> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("csv") => read_csv(path),
+        _ => read_binary(path),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen::{generate, DataDist};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lpsketch-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let m = generate(DataDist::Gaussian, 7, 13, 1);
+        let p = tmp("rt.bin");
+        write_binary(&m, &p).unwrap();
+        let back = read_binary(&p).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let m = generate(DataDist::Uniform01, 3, 5, 2);
+        let p = tmp("rt.csv");
+        write_csv(&m, &p).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(m.n(), back.n());
+        assert_eq!(m.d(), back.d());
+        for (a, b) in m.data().iter().zip(back.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn ragged_csv_rejected() {
+        let p = tmp("ragged.csv");
+        std::fs::write(&p, "1,2,3\n4,5\n").unwrap();
+        assert!(read_csv(&p).is_err());
+    }
+
+    #[test]
+    fn load_dispatches_on_extension() {
+        let m = generate(DataDist::Uniform01, 2, 4, 3);
+        let pb = tmp("d.bin");
+        let pc = tmp("d.csv");
+        write_binary(&m, &pb).unwrap();
+        write_csv(&m, &pc).unwrap();
+        assert_eq!(load(&pb).unwrap().n(), 2);
+        assert_eq!(load(&pc).unwrap().d(), 4);
+    }
+}

@@ -1,0 +1,94 @@
+//! Row-major data matrix A ∈ R^{n×D} and block iteration.
+
+/// Dense row-major matrix of f32 (the paper's data matrix A).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowMatrix {
+    n: usize,
+    d: usize,
+    data: Vec<f32>,
+}
+
+impl RowMatrix {
+    pub fn new(n: usize, d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * d, "data length must be n*d");
+        RowMatrix { n, d, data }
+    }
+
+    pub fn zeros(n: usize, d: usize) -> Self {
+        RowMatrix { n, d, data: vec![0.0; n * d] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Row range [i0, i1) as a contiguous slice.
+    pub fn rows(&self, i0: usize, i1: usize) -> &[f32] {
+        &self.data[i0 * self.d..i1 * self.d]
+    }
+
+    /// Iterate blocks of up to `block_rows` rows: yields (row0, rows).
+    pub fn blocks(&self, block_rows: usize) -> impl Iterator<Item = (usize, &[f32])> {
+        assert!(block_rows > 0);
+        (0..self.n).step_by(block_rows).map(move |i0| {
+            let i1 = (i0 + block_rows).min(self.n);
+            (i0, self.rows(i0, i1))
+        })
+    }
+
+    /// Bytes of payload (storage accounting for E7).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// f64 copy of row i (theory-side helpers want f64).
+    pub fn row_f64(&self, i: usize) -> Vec<f64> {
+        self.row(i).iter().map(|&v| v as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_blocks() {
+        let m = RowMatrix::new(5, 3, (0..15).map(|i| i as f32).collect());
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        let blocks: Vec<_> = m.blocks(2).collect();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks[0].0, 0);
+        assert_eq!(blocks[0].1.len(), 6);
+        assert_eq!(blocks[2].0, 4);
+        assert_eq!(blocks[2].1.len(), 3); // tail block
+    }
+
+    #[test]
+    #[should_panic(expected = "n*d")]
+    fn bad_shape_rejected() {
+        RowMatrix::new(2, 3, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        assert_eq!(RowMatrix::zeros(4, 8).bytes(), 128);
+    }
+}

@@ -1,0 +1,12 @@
+//! Data substrates: row-major matrices with block iterators, synthetic
+//! generators for the paper's data regimes, binary/CSV IO, and a bundled
+//! mini text corpus → term-frequency vectors (the motivating non-negative
+//! heavy-tailed workload).
+
+pub mod corpus;
+pub mod gen;
+pub mod io;
+pub mod matrix;
+
+pub use gen::DataDist;
+pub use matrix::RowMatrix;

@@ -1,0 +1,196 @@
+//! Shared experiment machinery: workload pair builders, the Monte-Carlo
+//! driver that every variance experiment uses, and acceptance helpers.
+//!
+//! The paper is a theory report — its "tables" are the Lemma variance
+//! formulas. Each experiment therefore compares an *empirical* Monte-
+//! Carlo moment against the corresponding *closed-form* prediction and
+//! reports the ratio (acceptance: within MC error).
+
+use crate::core::decompose::{exact_distance, Decomposition};
+use crate::core::estimator;
+use crate::core::mle::{self, Solve};
+use crate::core::variance::{self, CrossTable};
+use crate::data::{gen, DataDist};
+use crate::projection::sketcher::Sketcher;
+use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+use crate::util::stats::Welford;
+
+/// A fixed (x, y) pair with its exact quantities precomputed.
+pub struct Pair {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub x64: Vec<f64>,
+    pub y64: Vec<f64>,
+    pub exact: f64,
+    pub table: CrossTable,
+    pub p: usize,
+}
+
+impl Pair {
+    pub fn new(x: Vec<f32>, y: Vec<f32>, p: usize) -> Self {
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let exact = exact_distance(&x64, &y64, p);
+        let table = variance::table_for(&x64, &y64, p);
+        Pair { x, y, x64, y64, exact, table, p }
+    }
+
+    /// Draw a pair from a data distribution (rows 0 and 1 of a 2×D draw).
+    pub fn from_dist(dist: DataDist, d: usize, p: usize, seed: u64) -> Self {
+        let m = gen::generate(dist, 2, d, seed);
+        Pair::new(m.row(0).to_vec(), m.row(1).to_vec(), p)
+    }
+}
+
+/// What one Monte-Carlo sweep measured.
+#[derive(Clone, Debug)]
+pub struct McResult {
+    pub k: usize,
+    pub reps: usize,
+    pub exact: f64,
+    pub mc_mean: f64,
+    pub mc_var: f64,
+    pub theory_var: f64,
+    /// z-score of the mean against the exact distance (|z| < ~4 ⇒
+    /// consistent with unbiasedness).
+    pub bias_z: f64,
+}
+
+impl McResult {
+    pub fn var_ratio(&self) -> f64 {
+        self.mc_var / self.theory_var
+    }
+}
+
+/// Which estimator the MC driver runs.
+#[derive(Clone, Copy, Debug)]
+pub enum Estimator {
+    Plain,
+    Mle(Solve),
+}
+
+/// Monte-Carlo over projection seeds: sketch the pair `reps` times with
+/// independent seeds, estimate, and compare moments to `theory_var`.
+pub fn run_mc(
+    pair: &Pair,
+    strategy: Strategy,
+    dist: ProjectionDist,
+    k: usize,
+    reps: usize,
+    est: Estimator,
+    theory_var: f64,
+) -> McResult {
+    let dec = Decomposition::new(pair.p).expect("valid p");
+    let mut w = Welford::new();
+    for rep in 0..reps {
+        let spec = ProjectionSpec::new(0x9E1 ^ (rep as u64) << 8, k, dist, strategy);
+        let sk = Sketcher::new(spec, pair.p);
+        let rows = sk.sketch_rows(&[&pair.x, &pair.y]);
+        let d = match est {
+            Estimator::Plain => estimator::estimate(&dec, &rows[0], &rows[1]),
+            Estimator::Mle(solve) => mle::estimate_mle(&dec, &rows[0], &rows[1], solve),
+        };
+        w.push(d);
+    }
+    McResult {
+        k,
+        reps,
+        exact: pair.exact,
+        mc_mean: w.mean(),
+        mc_var: w.sample_variance(),
+        theory_var,
+        bias_z: w.z_against(pair.exact),
+    }
+}
+
+/// The theory variance for a (strategy, dist) combination at width k —
+/// dispatching to the right Lemma formula.
+pub fn theory_var(pair: &Pair, strategy: Strategy, dist: ProjectionDist, k: usize) -> f64 {
+    let s = dist.kurtosis();
+    match strategy {
+        Strategy::Basic => variance::var_basic_general(pair.p, s, &pair.table, k),
+        Strategy::Alternative => variance::var_alt_general(pair.p, s, &pair.table, k),
+    }
+}
+
+/// Standard data regimes the experiments sweep (name, dist).
+pub fn data_regimes() -> Vec<(&'static str, DataDist)> {
+    vec![
+        ("uniform", DataDist::Uniform01),
+        ("zipf-tf", DataDist::ZipfTf { exponent: 1.1, density: 0.1 }),
+        ("lognormal", DataDist::LogNormal { sigma: 1.0 }),
+        ("gaussian", DataDist::Gaussian),
+    ]
+}
+
+/// MC tolerance on a variance ratio at `reps` replicates: the sampling
+/// sd of a variance estimate is ≈ √(2/(reps−1)) (relative, Gaussian-ish
+/// tails), padded ×5 for the heavy-tailed estimators here.
+pub fn var_tolerance(reps: usize) -> f64 {
+    5.0 * (2.0 / (reps as f64 - 1.0)).sqrt()
+}
+
+/// Acceptance record every experiment emits per configuration.
+#[derive(Clone, Debug)]
+pub struct Acceptance {
+    pub label: String,
+    pub ok: bool,
+    pub detail: String,
+}
+
+impl Acceptance {
+    pub fn check(label: impl Into<String>, ok: bool, detail: impl Into<String>) -> Self {
+        Acceptance { label: label.into(), ok, detail: detail.into() }
+    }
+}
+
+/// Render acceptances and return whether all passed.
+pub fn report(acceptances: &[Acceptance]) -> bool {
+    let mut all = true;
+    for a in acceptances {
+        let mark = if a.ok { "PASS" } else { "FAIL" };
+        println!("  [{mark}] {} — {}", a.label, a.detail);
+        all &= a.ok;
+    }
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_precomputes_exact() {
+        let p = Pair::new(vec![1.0, 2.0], vec![0.0, 1.0], 4);
+        assert_eq!(p.exact, 2.0); // 1^4 + 1^4
+    }
+
+    #[test]
+    fn mc_driver_is_consistent_with_lemma1() {
+        let pair = Pair::from_dist(DataDist::Uniform01, 48, 4, 3);
+        let k = 24;
+        let tv = theory_var(&pair, Strategy::Basic, ProjectionDist::Normal, k);
+        let r = run_mc(
+            &pair,
+            Strategy::Basic,
+            ProjectionDist::Normal,
+            k,
+            1500,
+            Estimator::Plain,
+            tv,
+        );
+        assert!(r.bias_z.abs() < 4.5, "bias z={}", r.bias_z);
+        assert!(
+            (r.var_ratio() - 1.0).abs() < var_tolerance(1500),
+            "ratio={}",
+            r.var_ratio()
+        );
+    }
+
+    #[test]
+    fn regimes_cover_signed_and_unsigned() {
+        let regimes = data_regimes();
+        assert!(regimes.iter().any(|(_, d)| d.non_negative()));
+        assert!(regimes.iter().any(|(_, d)| !d.non_negative()));
+    }
+}

@@ -1,0 +1,119 @@
+//! E11 — §1 motivation: stable random projections work for p ≤ 2 but are
+//! structurally incapable of p = 4, while the paper's estimator
+//! converges. The "failure" is not noise — the stable estimate converges
+//! to the *wrong limit* (the l_2 distance), so no k fixes it.
+
+use crate::baselines::stable::{geometric_mean_estimate, StableSketcher};
+use crate::bench_support::Table;
+use crate::core::decompose::{exact_distance, Decomposition};
+use crate::core::estimator;
+use crate::data::DataDist;
+use crate::projection::sketcher::Sketcher;
+use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+use crate::util::stats::Welford;
+
+use super::common::{Acceptance, Pair};
+
+pub fn run(fast: bool) -> Vec<Acceptance> {
+    println!("E11: stable projections at p∈{{1,2}} vs the p=4 wall");
+    let (d, reps, k) = if fast { (48, 200, 64) } else { (128, 600, 128) };
+    let pair = Pair::from_dist(DataDist::Uniform01, d, 4, 0xE11);
+    let l1: f64 = pair
+        .x64
+        .iter()
+        .zip(&pair.y64)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    let l2 = exact_distance(&pair.x64, &pair.y64, 2);
+    let l4 = pair.exact;
+
+    let stable_mc = |alpha: f64| {
+        let mut w = Welford::new();
+        for seed in 0..reps as u64 {
+            let sk = StableSketcher::new(seed, k, alpha);
+            let (u, v) = (sk.sketch(&pair.x), sk.sketch(&pair.y));
+            w.push(geometric_mean_estimate(&u, &v));
+        }
+        w
+    };
+    let dec = Decomposition::new(4).unwrap();
+    let ours_mc = || {
+        let mut w = Welford::new();
+        for seed in 0..reps as u64 {
+            let spec = ProjectionSpec::new(seed, k, ProjectionDist::Normal, Strategy::Basic);
+            let sk = Sketcher::new(spec, 4);
+            let rows = sk.sketch_rows(&[&pair.x, &pair.y]);
+            w.push(estimator::estimate(&dec, &rows[0], &rows[1]));
+        }
+        w
+    };
+
+    let s1 = stable_mc(1.0);
+    let s2 = stable_mc(2.0);
+    let ours = ours_mc();
+    let mut table = Table::new(&["estimator", "target", "exact", "mc_mean", "rel_err"]);
+    let mut acc = Vec::new();
+    let rel = |mean: f64, exact: f64| (mean - exact).abs() / exact;
+    table.row(&[
+        "stable α=1 (CMS+GM)".into(),
+        "l_1".into(),
+        format!("{l1:.4}"),
+        format!("{:.4}", s1.mean()),
+        format!("{:.3}", rel(s1.mean(), l1)),
+    ]);
+    table.row(&[
+        "stable α=2".into(),
+        "l_2^2".into(),
+        format!("{l2:.4}"),
+        format!("{:.4}", s2.mean()),
+        format!("{:.3}", rel(s2.mean(), l2)),
+    ]);
+    table.row(&[
+        "stable α=2 read as p=4".into(),
+        "l_4^4".into(),
+        format!("{l4:.4}"),
+        format!("{:.4}", s2.mean()),
+        format!("{:.3}", rel(s2.mean(), l4)),
+    ]);
+    table.row(&[
+        "this paper (basic, k)".into(),
+        "l_4^4".into(),
+        format!("{l4:.4}"),
+        format!("{:.4}", ours.mean()),
+        format!("{:.3}", rel(ours.mean(), l4)),
+    ]);
+    table.print();
+
+    acc.push(Acceptance::check(
+        "stable α=1 recovers l_1",
+        rel(s1.mean(), l1) < 0.05,
+        format!("rel={:.3}", rel(s1.mean(), l1)),
+    ));
+    acc.push(Acceptance::check(
+        "stable α=2 recovers l_2",
+        rel(s2.mean(), l2) < 0.05,
+        format!("rel={:.3}", rel(s2.mean(), l2)),
+    ));
+    acc.push(Acceptance::check(
+        "stable cannot reach l_4 (wrong limit)",
+        rel(s2.mean(), l4) > 0.5,
+        format!("rel={:.3}", rel(s2.mean(), l4)),
+    ));
+    acc.push(Acceptance::check(
+        "our estimator converges to l_4",
+        ours.z_against(l4).abs() < 4.5,
+        format!("z={:+.2}", ours.z_against(l4)),
+    ));
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e11_fast_passes() {
+        let acc = run(true);
+        assert!(acc.iter().all(|a| a.ok), "{acc:?}");
+    }
+}

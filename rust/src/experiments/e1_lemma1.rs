@@ -1,0 +1,90 @@
+//! E1 — Lemma 1: the basic-strategy estimator d̂_(4) is unbiased and its
+//! variance matches the closed form (including the Δ₄ cross-term).
+//!
+//! Sweep: data regime × k; acceptance: |bias z| < 4.5 and empirical/
+//! theory variance ratio within MC tolerance.
+
+use crate::bench_support::Table;
+use crate::projection::{ProjectionDist, Strategy};
+
+use super::common::{self, Acceptance, Estimator, Pair};
+
+pub struct Params {
+    pub d: usize,
+    pub ks: Vec<usize>,
+    pub reps: usize,
+}
+
+impl Params {
+    pub fn new(fast: bool) -> Self {
+        if fast {
+            Params { d: 64, ks: vec![16, 64], reps: 800 }
+        } else {
+            Params { d: 256, ks: vec![16, 32, 64, 128, 256, 512], reps: 2000 }
+        }
+    }
+}
+
+/// Run the sweep for one strategy (shared by E1/E2).
+pub fn sweep(strategy: Strategy, params: &Params) -> (Table, Vec<Acceptance>) {
+    let mut table = Table::new(&[
+        "dist", "k", "exact", "mc_mean", "bias_z", "mc_var", "theory_var", "ratio",
+    ]);
+    let mut acc = Vec::new();
+    let tol = common::var_tolerance(params.reps);
+    for (name, dist) in common::data_regimes() {
+        let pair = Pair::from_dist(dist, params.d, 4, 0xE1);
+        for &k in &params.ks {
+            let tv = common::theory_var(&pair, strategy, ProjectionDist::Normal, k);
+            let r = common::run_mc(
+                &pair,
+                strategy,
+                ProjectionDist::Normal,
+                k,
+                params.reps,
+                Estimator::Plain,
+                tv,
+            );
+            table.row(&[
+                name.to_string(),
+                k.to_string(),
+                format!("{:.4e}", r.exact),
+                format!("{:.4e}", r.mc_mean),
+                format!("{:+.2}", r.bias_z),
+                format!("{:.4e}", r.mc_var),
+                format!("{:.4e}", r.theory_var),
+                format!("{:.3}", r.var_ratio()),
+            ]);
+            acc.push(Acceptance::check(
+                format!("{name}/k={k} unbiased"),
+                r.bias_z.abs() < 4.5,
+                format!("z={:+.2}", r.bias_z),
+            ));
+            acc.push(Acceptance::check(
+                format!("{name}/k={k} variance"),
+                (r.var_ratio() - 1.0).abs() < tol,
+                format!("ratio={:.3} tol={tol:.3}", r.var_ratio()),
+            ));
+        }
+    }
+    (table, acc)
+}
+
+pub fn run(fast: bool) -> Vec<Acceptance> {
+    let params = Params::new(fast);
+    println!("E1: Lemma 1 — basic strategy, p=4, normal projections");
+    let (table, acc) = sweep(Strategy::Basic, &params);
+    table.print();
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e1_fast_passes() {
+        let acc = run(true);
+        assert!(acc.iter().all(|a| a.ok), "{acc:?}");
+    }
+}

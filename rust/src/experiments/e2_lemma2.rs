@@ -1,0 +1,49 @@
+//! E2 — Lemma 2: the alternative strategy (independent R per order) is
+//! unbiased with the cross-term-free variance; plus the storage cost the
+//! alternative strategy pays (two sketch sides per row).
+
+use crate::projection::sketcher::Sketcher;
+use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+
+use super::common::Acceptance;
+use super::e1_lemma1::{sweep, Params};
+
+pub fn run(fast: bool) -> Vec<Acceptance> {
+    let params = Params::new(fast);
+    println!("E2: Lemma 2 — alternative strategy, p=4, normal projections");
+    let (table, mut acc) = sweep(Strategy::Alternative, &params);
+    table.print();
+
+    // Storage overhead: alternative rows store both sketch sides.
+    let k = 64;
+    let row: Vec<f32> = (0..128).map(|i| (i as f32 * 0.1).sin()).collect();
+    let basic = Sketcher::new(
+        ProjectionSpec::new(1, k, ProjectionDist::Normal, Strategy::Basic),
+        4,
+    )
+    .sketch_row(&row);
+    let alt = Sketcher::new(
+        ProjectionSpec::new(1, k, ProjectionDist::Normal, Strategy::Alternative),
+        4,
+    )
+    .sketch_row(&row);
+    let ratio = alt.sketch_bytes() as f64 / basic.sketch_bytes() as f64;
+    println!("  storage: alt/basic bytes = {ratio:.2} (moments shared)");
+    acc.push(Acceptance::check(
+        "alt pays ~2x sketch storage",
+        (1.5..=2.0).contains(&ratio),
+        format!("ratio={ratio:.2}"),
+    ));
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2_fast_passes() {
+        let acc = run(true);
+        assert!(acc.iter().all(|a| a.ok), "{acc:?}");
+    }
+}

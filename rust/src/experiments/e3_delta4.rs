@@ -1,0 +1,121 @@
+//! E3 — Lemma 3: Δ₄ = Var(basic) − Var(alt) is ≤ 0 whenever the data are
+//! non-negative (the basic strategy wins), and can flip sign on signed
+//! data (the paper's x ≤ 0 ≤ y example).
+//!
+//! Checks:
+//! 1. Δ₄ ≤ 0 on 100% of non-negative draws (formula evaluation).
+//! 2. Δ₄ ≥ 0 on the adversarial all-negative-x / all-positive-y regime.
+//! 3. The *measured* variance gap between strategies matches Δ₄ (MC).
+
+use crate::bench_support::Table;
+use crate::core::variance;
+use crate::data::{gen, DataDist};
+use crate::projection::{ProjectionDist, Strategy};
+
+use super::common::{self, Acceptance, Estimator, Pair};
+
+pub fn run(fast: bool) -> Vec<Acceptance> {
+    println!("E3: Lemma 3 — sign of Δ₄ by data regime");
+    let (draws, d, reps) = if fast { (40, 64, 1500) } else { (200, 256, 4000) };
+    let mut acc = Vec::new();
+    let mut table = Table::new(&["regime", "draws", "delta4<=0", "min", "max"]);
+
+    // 1. Non-negative regimes: Δ₄ ≤ 0 always.
+    for (name, dist) in common::data_regimes() {
+        if !dist.non_negative() {
+            continue;
+        }
+        let mut le_zero = 0usize;
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for draw in 0..draws {
+            let pair = Pair::from_dist(dist, d, 4, 0xE3_00 + draw as u64);
+            let delta = variance::delta4(&pair.table, 64);
+            le_zero += (delta <= 1e-12 * pair.exact.powi(2)) as usize;
+            lo = lo.min(delta);
+            hi = hi.max(delta);
+        }
+        table.row(&[
+            name.to_string(),
+            draws.to_string(),
+            format!("{le_zero}/{draws}"),
+            format!("{lo:.3e}"),
+            format!("{hi:.3e}"),
+        ]);
+        acc.push(Acceptance::check(
+            format!("{name}: Δ₄ ≤ 0 on all draws"),
+            le_zero == draws,
+            format!("{le_zero}/{draws}"),
+        ));
+    }
+
+    // 2. Adversarial signed regime: x < 0 < y ⇒ Δ₄ ≥ 0 (paper §2.2).
+    let mut ge_zero = 0usize;
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for draw in 0..draws {
+        let m = gen::generate(DataDist::Uniform01, 2, d, 0xE3_F0 + draw as u64);
+        let x: Vec<f32> = m.row(0).iter().map(|&v| -v - 0.01).collect();
+        let y: Vec<f32> = m.row(1).iter().map(|&v| v + 0.01).collect();
+        let pair = Pair::new(x, y, 4);
+        let delta = variance::delta4(&pair.table, 64);
+        ge_zero += (delta >= 0.0) as usize;
+        lo = lo.min(delta);
+        hi = hi.max(delta);
+    }
+    table.row(&[
+        "neg-x/pos-y".to_string(),
+        draws.to_string(),
+        format!("(Δ₄≥0: {ge_zero}/{draws})"),
+        format!("{lo:.3e}"),
+        format!("{hi:.3e}"),
+    ]);
+    table.print();
+    acc.push(Acceptance::check(
+        "adversarial: Δ₄ ≥ 0 (alt wins)",
+        ge_zero == draws,
+        format!("{ge_zero}/{draws}"),
+    ));
+
+    // 3. MC: measured Var(basic) − Var(alt) ≈ Δ₄.
+    let pair = Pair::from_dist(DataDist::Uniform01, d, 4, 0xE3_AA);
+    let k = 32;
+    let tv_b = common::theory_var(&pair, Strategy::Basic, ProjectionDist::Normal, k);
+    let tv_a = common::theory_var(&pair, Strategy::Alternative, ProjectionDist::Normal, k);
+    let rb = common::run_mc(
+        &pair, Strategy::Basic, ProjectionDist::Normal, k, reps, Estimator::Plain, tv_b,
+    );
+    let ra = common::run_mc(
+        &pair, Strategy::Alternative, ProjectionDist::Normal, k, reps, Estimator::Plain, tv_a,
+    );
+    let measured_gap = rb.mc_var - ra.mc_var;
+    let delta = variance::delta4(&pair.table, k);
+    println!(
+        "  MC gap Var(basic)−Var(alt) = {measured_gap:.4e}, Δ₄ = {delta:.4e} \
+         (basic var {:.4e}, alt var {:.4e})",
+        rb.mc_var, ra.mc_var
+    );
+    // The gap is a difference of two noisy variances — accept within the
+    // combined MC noise of the two estimates.
+    let noise = common::var_tolerance(reps) * (tv_b + tv_a);
+    acc.push(Acceptance::check(
+        "MC variance gap matches Δ₄",
+        (measured_gap - delta).abs() < noise,
+        format!("gap={measured_gap:.3e} Δ₄={delta:.3e} noise={noise:.3e}"),
+    ));
+    acc.push(Acceptance::check(
+        "basic beats alt on non-negative data (MC)",
+        rb.mc_var <= ra.mc_var * (1.0 + common::var_tolerance(reps)),
+        format!("basic={:.3e} alt={:.3e}", rb.mc_var, ra.mc_var),
+    ));
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e3_fast_passes() {
+        let acc = run(true);
+        assert!(acc.iter().all(|a| a.ok), "{acc:?}");
+    }
+}

@@ -1,0 +1,89 @@
+//! E6 — §4 / Lemma 6: sub-Gaussian projections. The variance is a
+//! function of the projection kurtosis s alone; the sparse three-point
+//! family trades a (s−3)-term variance change for 1−1/s sparsity (and a
+//! proportional sketching speedup).
+
+use std::time::Instant;
+
+use crate::bench_support::Table;
+use crate::data::DataDist;
+use crate::projection::sketcher::Sketcher;
+use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+
+use super::common::{self, Acceptance, Estimator, Pair};
+
+pub fn run(fast: bool) -> Vec<Acceptance> {
+    println!("E6: Lemma 6 — sub-Gaussian projections, p=4, basic strategy");
+    let (d, reps, k) = if fast { (64, 1200, 32) } else { (256, 3000, 64) };
+    let dists: Vec<(&str, ProjectionDist)> = vec![
+        ("normal (s=3)", ProjectionDist::Normal),
+        ("uniform (s=9/5)", ProjectionDist::Uniform),
+        ("3pt s=1", ProjectionDist::ThreePoint(1.0)),
+        ("3pt s=3", ProjectionDist::ThreePoint(3.0)),
+        ("3pt s=10", ProjectionDist::ThreePoint(10.0)),
+        ("3pt s=100", ProjectionDist::ThreePoint(100.0)),
+    ];
+    let mut acc = Vec::new();
+    let tol = common::var_tolerance(reps);
+    let pair = Pair::from_dist(DataDist::ZipfTf { exponent: 1.1, density: 0.1 }, d, 4, 0xE6);
+    let mut table = Table::new(&["projection", "s", "bias_z", "mc_var", "lemma6_var", "ratio"]);
+    for (name, dist) in &dists {
+        let s = dist.kurtosis();
+        let tv = common::theory_var(&pair, Strategy::Basic, *dist, k);
+        let r = common::run_mc(&pair, Strategy::Basic, *dist, k, reps, Estimator::Plain, tv);
+        table.row(&[
+            name.to_string(),
+            format!("{s:.1}"),
+            format!("{:+.2}", r.bias_z),
+            format!("{:.4e}", r.mc_var),
+            format!("{tv:.4e}"),
+            format!("{:.3}", r.var_ratio()),
+        ]);
+        acc.push(Acceptance::check(
+            format!("{name}: unbiased"),
+            r.bias_z.abs() < 4.5,
+            format!("z={:+.2}", r.bias_z),
+        ));
+        acc.push(Acceptance::check(
+            format!("{name}: Lemma 6 variance"),
+            (r.var_ratio() - 1.0).abs() < tol,
+            format!("ratio={:.3}", r.var_ratio()),
+        ));
+    }
+    table.print();
+
+    // Sparsity speedup: dense vs s=100 three-point sketching wall-clock.
+    // R materialization (counter-hash per entry) is shared across the
+    // batch, so the sparse win shows at realistic batch sizes.
+    let rows = 256;
+    let data = crate::data::gen::generate(DataDist::Uniform01, rows, 1024, 0xE6_01);
+    let refs: Vec<&[f32]> = (0..rows).map(|i| data.row(i)).collect();
+    let time = |dist: ProjectionDist| {
+        let sk = Sketcher::new(ProjectionSpec::new(7, 64, dist, Strategy::Basic), 4);
+        let t = Instant::now();
+        let out = sk.sketch_rows(&refs);
+        std::hint::black_box(&out);
+        t.elapsed().as_secs_f64()
+    };
+    let t_dense = time(ProjectionDist::Normal);
+    let t_sparse = time(ProjectionDist::ThreePoint(100.0));
+    let speedup = t_dense / t_sparse;
+    println!("  sketch speedup 3pt(s=100) vs normal: {speedup:.1}x (1−1/s = 0.99 sparsity)");
+    acc.push(Acceptance::check(
+        "sparse three-point sketches faster",
+        speedup > 1.2,
+        format!("{speedup:.1}x"),
+    ));
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e6_fast_passes() {
+        let acc = run(true);
+        assert!(acc.iter().all(|a| a.ok), "{acc:?}");
+    }
+}

@@ -1,0 +1,110 @@
+//! E9 — §2.3 ablation: plain (no margins) vs one-step Newton vs full
+//! closed-form cubic MLE, across k. Reports the variance-reduction
+//! ratio and the compute cost of each estimator.
+
+use std::time::Instant;
+
+use crate::bench_support::Table;
+use crate::core::decompose::Decomposition;
+use crate::core::estimator;
+use crate::core::mle::{self, Solve};
+use crate::core::variance;
+use crate::data::DataDist;
+use crate::projection::sketcher::Sketcher;
+use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+
+use super::common::{self, Acceptance, Estimator, Pair};
+
+pub fn run(fast: bool) -> Vec<Acceptance> {
+    println!("E9: ablation — plain vs one-step Newton vs closed-form cubic MLE");
+    let (d, reps, ks): (usize, usize, Vec<usize>) = if fast {
+        (64, 1200, vec![16, 64])
+    } else {
+        (256, 3000, vec![16, 32, 64, 128, 256])
+    };
+    let pair = Pair::from_dist(DataDist::Uniform01, d, 4, 0xE9);
+    let mut table = Table::new(&[
+        "k", "plain_var", "newton_var", "cubic_var", "newton/plain", "cubic/plain", "lemma4/plain",
+    ]);
+    let mut acc = Vec::new();
+    for &k in &ks {
+        let plain_tv = common::theory_var(&pair, Strategy::Alternative, ProjectionDist::Normal, k);
+        let lemma4 = variance::lemma4_mle_var(&pair.table, k);
+        let plain = common::run_mc(
+            &pair, Strategy::Alternative, ProjectionDist::Normal, k, reps,
+            Estimator::Plain, plain_tv,
+        );
+        let newton = common::run_mc(
+            &pair, Strategy::Alternative, ProjectionDist::Normal, k, reps,
+            Estimator::Mle(Solve::OneStepNewton), lemma4,
+        );
+        let cubic = common::run_mc(
+            &pair, Strategy::Alternative, ProjectionDist::Normal, k, reps,
+            Estimator::Mle(Solve::ClosedForm), lemma4,
+        );
+        table.row(&[
+            k.to_string(),
+            format!("{:.4e}", plain.mc_var),
+            format!("{:.4e}", newton.mc_var),
+            format!("{:.4e}", cubic.mc_var),
+            format!("{:.3}", newton.mc_var / plain.mc_var),
+            format!("{:.3}", cubic.mc_var / plain.mc_var),
+            format!("{:.3}", lemma4 / plain_tv),
+        ]);
+        if k == *ks.last().unwrap() {
+            let tol = common::var_tolerance(reps);
+            acc.push(Acceptance::check(
+                "margins help (cubic < plain)",
+                cubic.mc_var < plain.mc_var * (1.0 + tol),
+                format!("ratio={:.3}", cubic.mc_var / plain.mc_var),
+            ));
+            acc.push(Acceptance::check(
+                "one-step Newton captures most of the gain",
+                newton.mc_var < plain.mc_var * (1.0 + tol)
+                    && (newton.mc_var / cubic.mc_var - 1.0).abs() < 2.0 * tol,
+                format!("newton/cubic={:.3}", newton.mc_var / cubic.mc_var),
+            ));
+        }
+    }
+    table.print();
+
+    // Estimator compute cost (ns/estimate) — the price of the gain.
+    let k = *ks.last().unwrap();
+    let sk = Sketcher::new(
+        ProjectionSpec::new(1, k, ProjectionDist::Normal, Strategy::Alternative),
+        4,
+    );
+    let rows = sk.sketch_rows(&[&pair.x, &pair.y]);
+    let dec = Decomposition::new(4).unwrap();
+    let iters = if fast { 20_000 } else { 200_000 };
+    let time = |f: &dyn Fn() -> f64| {
+        let t = Instant::now();
+        let mut acc = 0.0;
+        for _ in 0..iters {
+            acc += f();
+        }
+        std::hint::black_box(acc);
+        t.elapsed().as_secs_f64() / iters as f64 * 1e9
+    };
+    let t_plain = time(&|| estimator::estimate(&dec, &rows[0], &rows[1]));
+    let t_newton = time(&|| mle::estimate_mle(&dec, &rows[0], &rows[1], Solve::OneStepNewton));
+    let t_cubic = time(&|| mle::estimate_mle(&dec, &rows[0], &rows[1], Solve::ClosedForm));
+    println!("  cost/estimate: plain {t_plain:.0}ns, newton {t_newton:.0}ns, cubic {t_cubic:.0}ns");
+    acc.push(Acceptance::check(
+        "one-step Newton cheaper than closed form",
+        t_newton < t_cubic,
+        format!("{t_newton:.0}ns vs {t_cubic:.0}ns"),
+    ));
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e9_fast_passes() {
+        let acc = run(true);
+        assert!(acc.iter().all(|a| a.ok), "{acc:?}");
+    }
+}

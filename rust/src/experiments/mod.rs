@@ -1,0 +1,63 @@
+//! The E1..E11 reproduction harness — one experiment per paper claim
+//! (the paper is a theory report with no numbered tables/figures, so
+//! each Lemma / section claim is the "table" we regenerate; DESIGN.md §4
+//! maps experiment ids to claims).
+//!
+//! Each experiment prints the table it regenerates and returns a list
+//! of [`common::Acceptance`] checks; `benches/` targets and the `lpsketch
+//! exp` CLI both route through these functions.
+
+pub mod common;
+pub mod e1_lemma1;
+pub mod e2_lemma2;
+pub mod e3_delta4;
+pub mod e4_mle;
+pub mod e5_p6;
+pub mod e6_subgauss;
+pub mod e7_throughput;
+pub mod e8_knn;
+pub mod e9_ablation;
+pub mod e10_pipeline;
+pub mod e11_stable;
+
+use common::Acceptance;
+
+/// Registered experiments: (id, description, runner).
+pub fn registry() -> Vec<(&'static str, &'static str, fn(bool) -> Vec<Acceptance>)> {
+    vec![
+        ("e1", "Lemma 1: basic-strategy variance (p=4)", e1_lemma1::run),
+        ("e2", "Lemma 2: alternative-strategy variance (p=4)", e2_lemma2::run),
+        ("e3", "Lemma 3: sign of Δ₄ by data regime", e3_delta4::run),
+        ("e4", "Lemma 4: margin MLE", e4_mle::run),
+        ("e5", "Lemma 5: p=6 estimator + Δ₆ conjecture", e5_p6::run),
+        ("e6", "Lemma 6: sub-Gaussian projections", e6_subgauss::run),
+        ("e7", "§5 headline: cost/storage crossover", e7_throughput::run),
+        ("e8", "intro: sketch k-NN recall", e8_knn::run),
+        ("e9", "§2.3 ablation: margin estimators", e9_ablation::run),
+        ("e10", "pipeline scaling", e10_pipeline::run),
+        ("e11", "§1: stable projections fail for p=4", e11_stable::run),
+    ]
+}
+
+/// Run one experiment by id; `fast` shrinks sweeps for tests/CI.
+pub fn run(id: &str, fast: bool) -> anyhow::Result<Vec<Acceptance>> {
+    let reg = registry();
+    let (_, _, f) = reg
+        .iter()
+        .find(|(eid, _, _)| *eid == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment {id:?} (e1..e11)"))?;
+    Ok(f(fast))
+}
+
+/// Run every experiment; returns (id, all-passed).
+pub fn run_all(fast: bool) -> Vec<(String, bool)> {
+    registry()
+        .into_iter()
+        .map(|(id, _, f)| {
+            println!("\n=== {id} ===");
+            let acc = f(fast);
+            let ok = common::report(&acc);
+            (id.to_string(), ok)
+        })
+        .collect()
+}

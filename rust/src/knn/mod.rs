@@ -1,0 +1,213 @@
+//! Sketch-based k-nearest-neighbor search — the paper's introductory
+//! use-case ("a straightforward application would be searching for the
+//! nearest neighbors using l_p distance").
+//!
+//! Two-phase search, the standard sketch-index pattern:
+//! 1. **Candidate generation** — rank all rows by the *estimated* l_p
+//!    distance from the query's sketch (O(n·k) per query instead of
+//!    O(n·D)).
+//! 2. **Re-ranking (optional)** — recompute exact distances for the top
+//!    `rerank` candidates with a linear scan over just those rows.
+//!
+//! E8 measures recall@m vs sketch width k, with and without re-ranking,
+//! against exact ground truth.
+
+use crate::core::decompose::Decomposition;
+use crate::core::estimator;
+use crate::core::mle::{self, Solve};
+use crate::data::RowMatrix;
+use crate::projection::sketcher::{RowSketch, Sketcher};
+use crate::projection::ProjectionSpec;
+
+/// A built sketch index over a fixed row set.
+pub struct KnnIndex {
+    dec: Decomposition,
+    sketcher: Sketcher,
+    rows: Vec<RowSketch>,
+    /// Use the margin MLE (Lemma 4) when scoring candidates.
+    pub use_mle: bool,
+}
+
+/// One scored neighbor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    pub index: usize,
+    /// Estimated (phase 1) or exact (after re-rank) l_p^p distance.
+    pub distance: f64,
+    pub exact: bool,
+}
+
+impl KnnIndex {
+    /// Sketch every row of `data` (the index build = one linear scan).
+    pub fn build(data: &RowMatrix, spec: ProjectionSpec, p: usize) -> anyhow::Result<Self> {
+        let dec = Decomposition::new(p)?;
+        let sketcher = Sketcher::new(spec, p);
+        let refs: Vec<&[f32]> = (0..data.n()).map(|i| data.row(i)).collect();
+        let rows = sketcher.sketch_rows(&refs);
+        Ok(KnnIndex { dec, sketcher, rows, use_mle: false })
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Sketch bytes held by the index (the O(nk) storage claim).
+    pub fn bytes(&self) -> usize {
+        self.rows.iter().map(|r| r.sketch_bytes()).sum()
+    }
+
+    /// Phase-1 query: top `m` candidates by estimated distance.
+    pub fn query(&self, q: &[f32], m: usize) -> Vec<Neighbor> {
+        let qs = self.sketcher.sketch_row(q);
+        let mut scored: Vec<Neighbor> = self
+            .rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| Neighbor {
+                index: i,
+                distance: if self.use_mle {
+                    mle::estimate_mle(&self.dec, &qs, r, Solve::OneStepNewton)
+                } else {
+                    estimator::estimate(&self.dec, &qs, r)
+                },
+                exact: false,
+            })
+            .collect();
+        top_m(&mut scored, m)
+    }
+
+    /// Two-phase query: take `rerank ≥ m` candidates by sketch, then
+    /// re-rank those with exact distances over `data` (must be the same
+    /// matrix the index was built from).
+    pub fn query_rerank(
+        &self,
+        data: &RowMatrix,
+        q: &[f32],
+        m: usize,
+        rerank: usize,
+    ) -> Vec<Neighbor> {
+        assert_eq!(data.n(), self.rows.len(), "index/data mismatch");
+        let cands = self.query(q, rerank.max(m));
+        let p = self.dec.p();
+        let mut exact: Vec<Neighbor> = cands
+            .into_iter()
+            .map(|c| Neighbor {
+                index: c.index,
+                distance: crate::baselines::exact::distance_f32(q, data.row(c.index), p),
+                exact: true,
+            })
+            .collect();
+        top_m(&mut exact, m)
+    }
+}
+
+/// Exact top-m by full scan (ground truth for recall).
+pub fn exact_knn(data: &RowMatrix, q: &[f32], m: usize, p: usize) -> Vec<Neighbor> {
+    let mut scored: Vec<Neighbor> = (0..data.n())
+        .map(|i| Neighbor {
+            index: i,
+            distance: crate::baselines::exact::distance_f32(q, data.row(i), p),
+            exact: true,
+        })
+        .collect();
+    top_m(&mut scored, m)
+}
+
+/// recall@m of `got` against ground truth `truth` (both top-m lists).
+pub fn recall(got: &[Neighbor], truth: &[Neighbor]) -> f64 {
+    if truth.is_empty() {
+        return 1.0;
+    }
+    let truth_set: std::collections::HashSet<usize> = truth.iter().map(|n| n.index).collect();
+    let hit = got.iter().filter(|n| truth_set.contains(&n.index)).count();
+    hit as f64 / truth.len() as f64
+}
+
+fn top_m(scored: &mut Vec<Neighbor>, m: usize) -> Vec<Neighbor> {
+    let m = m.min(scored.len());
+    scored.select_nth_unstable_by(m.saturating_sub(1), |a, b| {
+        a.distance.partial_cmp(&b.distance).unwrap()
+    });
+    scored.truncate(m);
+    scored.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+    scored.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{corpus, gen, DataDist};
+    use crate::projection::{ProjectionDist, Strategy};
+
+    fn spec(k: usize) -> ProjectionSpec {
+        ProjectionSpec::new(99, k, ProjectionDist::Normal, Strategy::Basic)
+    }
+
+    #[test]
+    fn exact_knn_finds_self_first() {
+        let data = gen::generate(DataDist::Uniform01, 30, 32, 4);
+        let got = exact_knn(&data, data.row(7), 3, 4);
+        assert_eq!(got[0].index, 7);
+        assert_eq!(got[0].distance, 0.0);
+    }
+
+    #[test]
+    fn rerank_recall_dominates_sketch_only() {
+        let data = corpus::generate(200, 128, 60, 11).tf;
+        let idx = KnnIndex::build(&data, spec(32), 4).unwrap();
+        let mut r_sketch = 0.0;
+        let mut r_rerank = 0.0;
+        let queries = 20;
+        for qi in 0..queries {
+            let q = data.row(qi * 7 % data.n()).to_vec();
+            let truth = exact_knn(&data, &q, 10, 4);
+            r_sketch += recall(&idx.query(&q, 10), &truth);
+            r_rerank += recall(&idx.query_rerank(&data, &q, 10, 40), &truth);
+        }
+        r_sketch /= queries as f64;
+        r_rerank /= queries as f64;
+        assert!(r_rerank >= r_sketch, "rerank {r_rerank} < sketch {r_sketch}");
+        assert!(r_rerank > 0.8, "rerank recall too low: {r_rerank}");
+    }
+
+    #[test]
+    fn wider_sketch_improves_recall() {
+        let data = corpus::generate(150, 128, 60, 13).tf;
+        let mut recalls = Vec::new();
+        for k in [8usize, 128] {
+            let idx = KnnIndex::build(&data, spec(k), 4).unwrap();
+            let mut r = 0.0;
+            let queries = 15;
+            for qi in 0..queries {
+                let q = data.row(qi * 5 % data.n()).to_vec();
+                let truth = exact_knn(&data, &q, 10, 4);
+                r += recall(&idx.query(&q, 10), &truth);
+            }
+            recalls.push(r / queries as f64);
+        }
+        assert!(
+            recalls[1] > recalls[0],
+            "recall should grow with k: {recalls:?}"
+        );
+    }
+
+    #[test]
+    fn index_bytes_scale_with_k_not_d() {
+        let data = gen::generate(DataDist::Uniform01, 20, 2048, 5);
+        let small = KnnIndex::build(&data, spec(16), 4).unwrap();
+        let big = KnnIndex::build(&data, spec(64), 4).unwrap();
+        assert!(big.bytes() > 3 * small.bytes());
+        assert!(big.bytes() < data.bytes(), "sketches must compress vs O(nD)");
+    }
+
+    #[test]
+    fn recall_of_identical_lists_is_one() {
+        let data = gen::generate(DataDist::Uniform01, 10, 16, 6);
+        let truth = exact_knn(&data, data.row(0), 5, 4);
+        assert_eq!(recall(&truth, &truth), 1.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! # lpsketch
+//!
+//! Production reproduction of **"On Approximating the l_p Distances for
+//! p > 2 (When p Is Even)"** (Ping Li, 2008): sketch-based approximation
+//! of pairwise l_p distances for even p ≥ 4 in massive data matrices,
+//! with a rust streaming coordinator executing JAX/Pallas AOT-compiled
+//! compute via PJRT.
+//!
+//! Layer map (DESIGN.md §2):
+//! * [`core`] — the paper's estimation theory (decomposition, estimators,
+//!   margin MLE, variance Lemmas 1–6).
+//! * [`projection`] — reproducible random projections (normal /
+//!   sub-Gaussian) and the pure-rust sketcher.
+//! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — streaming ingest pipeline, batching, routing,
+//!   sketch store, metrics.
+//! * [`data`], [`baselines`], [`knn`] — substrates: generators/IO/corpus,
+//!   exact & stable-projection & sampling baselines, sketch-based k-NN.
+//! * [`experiments`] — the E1..E11 reproduction harness (one per paper
+//!   claim; see DESIGN.md §4).
+
+pub mod baselines;
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod experiments;
+pub mod knn;
+pub mod projection;
+pub mod runtime;
+pub mod testkit;
+pub mod util;

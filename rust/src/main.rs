@@ -1,0 +1,229 @@
+//! `lpsketch` — CLI for the sketch-based even-p l_p distance pipeline.
+//!
+//! Subcommands:
+//!   ingest   — stream a matrix (file or synthetic) into sketches, report
+//!              the scan/storage accounting.
+//!   pairs    — ingest then export all-pairs estimated distances (CSV to
+//!              stdout or --out file).
+//!   query    — ingest then answer pair queries from the command line.
+//!   knn      — ingest then run k-NN queries with optional re-ranking.
+//!   exp      — run a paper experiment (e1..e11) or `all`.
+//!   platform — print the PJRT platform and artifact inventory.
+//!
+//! Global flags are [`lpsketch::config::Config`] keys (`--p 4 --k 128
+//! --strategy basic --dist normal --pjrt ...`); see README.
+
+use std::io::Write as _;
+use std::sync::Arc;
+
+use lpsketch::baselines::exact;
+use lpsketch::config::Config;
+use lpsketch::coordinator::Pipeline;
+use lpsketch::data::{corpus, gen, io, RowMatrix};
+use lpsketch::experiments;
+use lpsketch::knn::KnnIndex;
+use lpsketch::runtime::Engine;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: lpsketch [--key value ...] <ingest|pairs|query|knn|exp|platform> [args]\n\
+         \n\
+         data source: --data <file.bin|file.csv> | synthetic --data-dist --n --d | --data corpus\n\
+         persistence: ingest --save-sketches <file.lpsk> (O(nk) state; the matrix can be discarded)\n\
+         common keys: --p --k --strategy --dist --seed --workers --block-rows --mle --pjrt\n\
+         exp:         lpsketch exp <e1..e11|all> [--fast]\n\
+         query:       lpsketch query <a> <b> [more pairs...]\n\
+         knn:         lpsketch knn <row-id> <m> [--rerank N]"
+    );
+    std::process::exit(2);
+}
+
+fn load_data(cfg: &Config, source: Option<&str>) -> anyhow::Result<RowMatrix> {
+    match source {
+        Some("corpus") => Ok(corpus::generate(cfg.n, cfg.d, 80, cfg.seed).tf),
+        Some(path) => io::load(std::path::Path::new(path)),
+        None => Ok(gen::generate(cfg.data_dist, cfg.n, cfg.d, cfg.seed)),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    // Pull out --data/--out/--fast/--rerank before Config sees them.
+    let mut data_source: Option<String> = None;
+    let mut out_path: Option<String> = None;
+    let mut save_sketches: Option<String> = None;
+    let mut fast = false;
+    let mut rerank: usize = 0;
+    let mut args = Vec::new();
+    let mut it = raw.drain(..);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--data" => data_source = it.next(),
+            "--out" => out_path = it.next(),
+            "--save-sketches" => save_sketches = it.next(),
+            "--fast" => fast = true,
+            "--rerank" => rerank = it.next().and_then(|v| v.parse().ok()).unwrap_or(0),
+            _ => args.push(a),
+        }
+    }
+    let positional = match cfg.apply_args(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+        }
+    };
+    let Some(cmd) = positional.first() else { usage() };
+
+    match cmd.as_str() {
+        "platform" => {
+            let engine = Engine::start(&cfg.artifacts_dir)?;
+            let h = engine.handle();
+            println!("platform: {}", h.platform());
+            println!("artifacts ({}):", h.manifest().artifacts.len());
+            for a in &h.manifest().artifacts {
+                println!(
+                    "  {} op={} p={} b={} d={} k={}",
+                    a.name,
+                    a.op.as_str(),
+                    a.p,
+                    a.b,
+                    a.d,
+                    a.k
+                );
+            }
+        }
+        "ingest" => {
+            let data = load_data(&cfg, data_source.as_deref())?;
+            cfg.d = data.d();
+            cfg.n = data.n();
+            println!("config: {}", cfg.describe());
+            let pipeline = Pipeline::new(cfg)?;
+            let report = pipeline.ingest(&data)?;
+            println!(
+                "ingested {} rows ({} blocks) in {:.3}s — {:.0} rows/s, pjrt rows: {}",
+                report.rows,
+                report.blocks,
+                report.elapsed.as_secs_f64(),
+                report.rows as f64 / report.elapsed.as_secs_f64(),
+                report.pjrt_rows,
+            );
+            println!(
+                "storage: data {} B → sketches {} B ({:.1}x compression)",
+                report.data_bytes,
+                report.sketch_bytes,
+                report.data_bytes as f64 / report.sketch_bytes as f64
+            );
+            println!("metrics: {}", pipeline.metrics().render());
+            if let Some(path) = &save_sketches {
+                let header = lpsketch::coordinator::persist::save(
+                    pipeline.store(),
+                    pipeline.config().p,
+                    std::path::Path::new(path),
+                )?;
+                println!("saved {} sketch rows to {path} (p={} k={})", header.rows, header.p, header.k);
+            }
+        }
+        "pairs" => {
+            let data = load_data(&cfg, data_source.as_deref())?;
+            cfg.d = data.d();
+            cfg.n = data.n();
+            println!("config: {}", cfg.describe());
+            let pipeline = Pipeline::new(cfg)?;
+            pipeline.ingest(&data)?;
+            let est = pipeline.all_pairs_condensed();
+            let n = data.n();
+            let mut sink: Box<dyn std::io::Write> = match &out_path {
+                Some(p) => Box::new(std::io::BufWriter::new(std::fs::File::create(p)?)),
+                None => Box::new(std::io::BufWriter::new(std::io::stdout())),
+            };
+            writeln!(sink, "i,j,estimate")?;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    writeln!(sink, "{i},{j},{}", est[exact::condensed_index(n, i, j)])?;
+                }
+            }
+            sink.flush()?;
+            eprintln!("wrote {} pair estimates", est.len());
+        }
+        "query" => {
+            let pairs: Vec<u64> = positional[1..]
+                .iter()
+                .map(|s| s.parse().map_err(|_| anyhow::anyhow!("bad id {s:?}")))
+                .collect::<anyhow::Result<_>>()?;
+            anyhow::ensure!(
+                !pairs.is_empty() && pairs.len() % 2 == 0,
+                "query needs an even number of row ids"
+            );
+            let data = load_data(&cfg, data_source.as_deref())?;
+            cfg.d = data.d();
+            cfg.n = data.n();
+            let pipeline = Arc::new(Pipeline::new(cfg)?);
+            pipeline.ingest(&data)?;
+            let service = pipeline.spawn_query_service();
+            for pair in pairs.chunks(2) {
+                let (a, b) = (pair[0], pair[1]);
+                match service.query(a, b)? {
+                    Some(est) => {
+                        let exact = exact::distance_f32(
+                            data.row(a as usize),
+                            data.row(b as usize),
+                            pipeline.config().p,
+                        );
+                        println!(
+                            "d({a},{b}): estimate={est:.6e} exact={exact:.6e} rel={:.4}",
+                            (est - exact).abs() / exact.max(1e-300)
+                        );
+                    }
+                    None => println!("d({a},{b}): unknown id"),
+                }
+            }
+            println!("metrics: {}", pipeline.metrics().render());
+        }
+        "knn" => {
+            anyhow::ensure!(positional.len() >= 3, "knn needs <row-id> <m>");
+            let qid: usize = positional[1].parse()?;
+            let m: usize = positional[2].parse()?;
+            let data = load_data(&cfg, data_source.as_deref())?;
+            let index = KnnIndex::build(&data, cfg.projection_spec(), cfg.p)?;
+            let q = data.row(qid).to_vec();
+            let got = if rerank > 0 {
+                index.query_rerank(&data, &q, m, rerank)
+            } else {
+                index.query(&q, m)
+            };
+            let truth = lpsketch::knn::exact_knn(&data, &q, m, cfg.p);
+            println!(
+                "top-{m} for row {qid} (recall {:.2}):",
+                lpsketch::knn::recall(&got, &truth)
+            );
+            for nb in got {
+                println!(
+                    "  row {:>6}  d̂={:.6e}{}",
+                    nb.index,
+                    nb.distance,
+                    if nb.exact { " (exact)" } else { "" }
+                );
+            }
+        }
+        "exp" => {
+            let id = positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            if id == "all" {
+                let results = experiments::run_all(fast);
+                let failed: Vec<_> =
+                    results.iter().filter(|(_, ok)| !ok).map(|(id, _)| id.clone()).collect();
+                anyhow::ensure!(failed.is_empty(), "experiments failed: {failed:?}");
+            } else {
+                let acc = experiments::run(id, fast)?;
+                let ok = experiments::common::report(&acc);
+                anyhow::ensure!(ok, "experiment {id} failed");
+            }
+        }
+        other => {
+            eprintln!("unknown command {other:?}");
+            usage();
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! Reproducible projection matrices.
+//!
+//! R ∈ R^{D×k} is defined *functionally*: entry (i, j) is a pure function
+//! of (seed, i, j) via the counter-based RNG, so
+//!
+//! * any D-chunk of R can be (re)generated independently and in any
+//!   order — the streaming pipeline never holds more than a chunk;
+//! * the basic strategy uses one seed for every order, the alternative
+//!   strategy derives an independent seed per order (paper §2.2).
+//!
+//! [`ProjectionMatrix`] materializes a chunk row-major for the fast
+//! sketcher path; memory is `rows × k × 4` bytes.
+
+use super::subgaussian::ProjectionDist;
+use super::Strategy;
+
+/// Full description of a projection scheme — everything needed to rebuild
+/// sketches bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProjectionSpec {
+    pub seed: u64,
+    pub k: usize,
+    pub dist: ProjectionDist,
+    pub strategy: Strategy,
+}
+
+impl ProjectionSpec {
+    pub fn new(seed: u64, k: usize, dist: ProjectionDist, strategy: Strategy) -> Self {
+        ProjectionSpec { seed, k, dist, strategy }
+    }
+
+    /// Seed used for sketch order `m` (1-based). Basic: shared; the
+    /// alternative strategy decorrelates orders with distinct streams.
+    pub fn seed_for_order(&self, m: usize) -> u64 {
+        match self.strategy {
+            Strategy::Basic => self.seed,
+            Strategy::Alternative => self
+                .seed
+                .wrapping_add((m as u64).wrapping_mul(0xA076_1D64_78BD_642F)),
+        }
+    }
+
+    /// Entry R^(order m)[i, j].
+    #[inline]
+    pub fn entry(&self, m: usize, i: u64, j: u64) -> f64 {
+        self.dist.entry(self.seed_for_order(m), i, j)
+    }
+
+    /// Materialize rows `[row0, row0 + rows)` of R^(m), row-major f32.
+    pub fn materialize(&self, m: usize, row0: usize, rows: usize) -> ProjectionMatrix {
+        let seed = self.seed_for_order(m);
+        let mut data = Vec::with_capacity(rows * self.k);
+        for i in 0..rows {
+            for j in 0..self.k {
+                data.push(self.dist.entry(seed, (row0 + i) as u64, j as u64) as f32);
+            }
+        }
+        ProjectionMatrix { row0, rows, k: self.k, data }
+    }
+
+    /// Number of distinct matrices the strategy needs for `orders` orders.
+    pub fn matrix_count(&self, orders: usize) -> usize {
+        match self.strategy {
+            Strategy::Basic => 1,
+            Strategy::Alternative => orders,
+        }
+    }
+}
+
+/// A materialized row-chunk of a projection matrix (row-major).
+#[derive(Clone, Debug)]
+pub struct ProjectionMatrix {
+    pub row0: usize,
+    pub rows: usize,
+    pub k: usize,
+    pub data: Vec<f32>,
+}
+
+impl ProjectionMatrix {
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i >= self.row0 && i < self.row0 + self.rows);
+        let off = (i - self.row0) * self.k;
+        &self.data[off..off + self.k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(strategy: Strategy) -> ProjectionSpec {
+        ProjectionSpec::new(99, 8, ProjectionDist::Normal, strategy)
+    }
+
+    #[test]
+    fn chunked_equals_whole() {
+        let s = spec(Strategy::Basic);
+        let whole = s.materialize(1, 0, 32);
+        let a = s.materialize(1, 0, 16);
+        let b = s.materialize(1, 16, 16);
+        for i in 0..16 {
+            assert_eq!(whole.row(i), a.row(i));
+            assert_eq!(whole.row(16 + i), b.row(16 + i));
+        }
+    }
+
+    #[test]
+    fn basic_shares_matrix_across_orders() {
+        let s = spec(Strategy::Basic);
+        assert_eq!(s.materialize(1, 0, 4).data, s.materialize(3, 0, 4).data);
+        assert_eq!(s.matrix_count(3), 1);
+    }
+
+    #[test]
+    fn alternative_gives_independent_matrices() {
+        let s = spec(Strategy::Alternative);
+        assert_ne!(s.materialize(1, 0, 4).data, s.materialize(2, 0, 4).data);
+        assert_ne!(s.materialize(2, 0, 4).data, s.materialize(3, 0, 4).data);
+        assert_eq!(s.matrix_count(3), 3);
+    }
+
+    #[test]
+    fn seed_changes_everything() {
+        let a = spec(Strategy::Basic).materialize(1, 0, 4);
+        let b = ProjectionSpec::new(100, 8, ProjectionDist::Normal, Strategy::Basic)
+            .materialize(1, 0, 4);
+        assert_ne!(a.data, b.data);
+    }
+}

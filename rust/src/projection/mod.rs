@@ -1,0 +1,37 @@
+//! Random projection layer: distributions, reproducible chunked matrix
+//! generation, and the pure-rust sketcher (CPU fallback / baseline).
+
+pub mod matrix;
+pub mod sketcher;
+pub mod subgaussian;
+
+pub use matrix::{ProjectionMatrix, ProjectionSpec};
+pub use subgaussian::ProjectionDist;
+
+/// Which projection strategy (paper §2.1 vs §2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// One shared R for all sketch orders — simpler, lower variance on
+    /// non-negative data (Lemma 3).
+    Basic,
+    /// Independent R per order — cross-order covariances vanish, making
+    /// the analysis (and the margin MLE of Lemma 4) tractable.
+    Alternative,
+}
+
+impl Strategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Strategy::Basic => "basic",
+            Strategy::Alternative => "alternative",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "basic" => Ok(Strategy::Basic),
+            "alternative" | "alt" => Ok(Strategy::Alternative),
+            _ => anyhow::bail!("unknown strategy {s:?} (want basic|alternative)"),
+        }
+    }
+}

@@ -1,0 +1,503 @@
+//! Pure-rust power sketcher — the CPU mirror of the L1 Pallas kernel.
+//!
+//! Used (a) as the runtime fallback for shapes with no AOT artifact,
+//! (b) as the reference in PJRT cross-checks, and (c) by the Monte-Carlo
+//! experiments, which need millions of small sketches where PJRT dispatch
+//! overhead would dominate.
+//!
+//! The layout mirrors the kernel exactly: one pass over x per D-chunk,
+//! Hadamard power ladder in registers, all sketch orders updated from the
+//! same resident R chunk. Sparse three-point distributions take a skip
+//! path (zero entries never touch the accumulators).
+//!
+//! ## Sides (alternative strategy)
+//!
+//! Under the paper's alternative strategy (§2.2), each inner-product
+//! *pair* shares one matrix: u₂&v₂ use R⁽ᵃ⁾, u₃&v₁ use R⁽ᵇ⁾, u₁&v₃ use
+//! R⁽ᶜ⁾. So the left ("u") sketch of order m uses matrix id m while the
+//! right ("v") sketch of order m uses matrix id p−m. Since every stored
+//! row may appear on either side of a pair query, alternative-strategy
+//! rows carry TWO sketch sets — a real 2× storage overhead over the
+//! basic strategy that E2/E3 report alongside the variance comparison.
+//! (Basic strategy: the sides coincide and only one set is stored.)
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::matrix::{ProjectionMatrix, ProjectionSpec};
+use super::Strategy;
+use crate::core::marginals::Moments;
+
+/// Power sketches of one row for one side: `u(m)` is the k-vector
+/// (x^∘m)ᵀ R^(id), m = 1..=orders.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SketchSet {
+    pub orders: usize,
+    pub k: usize,
+    /// Row-major (orders × k), f32 to match the PJRT artifacts.
+    pub data: Vec<f32>,
+}
+
+impl SketchSet {
+    pub fn zeros(orders: usize, k: usize) -> Self {
+        SketchSet { orders, k, data: vec![0.0; orders * k] }
+    }
+
+    #[inline]
+    pub fn u(&self, m: usize) -> &[f32] {
+        debug_assert!(m >= 1 && m <= self.orders);
+        &self.data[(m - 1) * self.k..m * self.k]
+    }
+
+    #[inline]
+    pub fn u_mut(&mut self, m: usize) -> &mut [f32] {
+        &mut self.data[(m - 1) * self.k..m * self.k]
+    }
+
+    /// ‖u(m)‖² in f64 (the MLE cubic needs it).
+    pub fn norm2(&self, m: usize) -> f64 {
+        self.u(m).iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Sketches are additive over D-chunks (linearity invariant).
+    pub fn merge(&mut self, other: &SketchSet) {
+        assert_eq!((self.orders, self.k), (other.orders, other.k));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+}
+
+/// Sketches + marginal moments of one row — everything the estimators
+/// need, on both pair sides.
+#[derive(Clone, Debug)]
+pub struct RowSketch {
+    /// Left-side sketches: order m projected with matrix id m.
+    pub uside: SketchSet,
+    /// Right-side sketches (alternative strategy only): order m projected
+    /// with matrix id p−m. `None` ⇒ identical to `uside` (basic strategy).
+    pub vside_data: Option<SketchSet>,
+    /// Moments Σ x^m for m = 1..2(p-1), f64.
+    pub moments: Moments,
+}
+
+impl RowSketch {
+    /// The sketch set to use when this row is the *right* element of a
+    /// pair query.
+    #[inline]
+    pub fn vside(&self) -> &SketchSet {
+        self.vside_data.as_ref().unwrap_or(&self.uside)
+    }
+
+    /// Bytes of sketch payload (storage accounting for E7).
+    pub fn sketch_bytes(&self) -> usize {
+        let one = self.uside.data.len() * std::mem::size_of::<f32>();
+        let sides = if self.vside_data.is_some() { 2 } else { 1 };
+        one * sides + self.moments.0.len() * std::mem::size_of::<f64>()
+    }
+
+    pub fn merge(&mut self, other: &RowSketch) {
+        self.uside.merge(&other.uside);
+        match (&mut self.vside_data, &other.vside_data) {
+            (Some(a), Some(b)) => a.merge(b),
+            (None, None) => {}
+            _ => panic!("cannot merge sketches of different strategies"),
+        }
+        self.moments.merge(&other.moments);
+    }
+}
+
+/// One materialized chunk of every projection matrix (+ the sparse
+/// representation when the distribution is mostly zeros).
+struct Chunk {
+    mats: Vec<ProjectionMatrix>,
+    sparse: Option<Vec<SparseChunk>>,
+}
+
+/// Sketching engine: owns the spec and chunking policy.
+///
+/// Materialized R chunks are cached (R is a pure function of the spec,
+/// so blocks streaming through the pipeline reuse the same chunk instead
+/// of re-running the counter-based sampler per block — EXPERIMENTS.md
+/// §Perf iteration 2). The cache is keyed by chunk start and safe to
+/// share across worker threads via `&self`.
+#[derive(Debug)]
+pub struct Sketcher {
+    pub spec: ProjectionSpec,
+    pub p: usize,
+    /// D-chunk size for materializing R (bounds memory at chunk × k × 4B
+    /// per order-matrix).
+    pub chunk: usize,
+    cache: Mutex<HashMap<(usize, usize), Arc<Chunk>>>,
+}
+
+impl Clone for Sketcher {
+    fn clone(&self) -> Self {
+        // The cache is a derived artifact; clones start cold.
+        Sketcher { spec: self.spec.clone(), p: self.p, chunk: self.chunk, cache: Mutex::new(HashMap::new()) }
+    }
+}
+
+impl std::fmt::Debug for Chunk {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Chunk({} mats)", self.mats.len())
+    }
+}
+
+impl Sketcher {
+    pub fn new(spec: ProjectionSpec, p: usize) -> Self {
+        Sketcher { spec, p, chunk: 2048, cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// The materialized (and cached) chunk `[start, start+len)`.
+    fn chunk_at(&self, start: usize, len: usize) -> Arc<Chunk> {
+        if let Some(c) = self.cache.lock().unwrap().get(&(start, len)) {
+            return c.clone();
+        }
+        let n_mats = self.spec.matrix_count(self.orders());
+        let mats: Vec<_> = (1..=n_mats).map(|id| self.spec.materialize(id, start, len)).collect();
+        let sparse = (self.spec.dist.sparsity() > 0.5)
+            .then(|| mats.iter().map(SparseChunk::from_dense).collect());
+        let chunk = Arc::new(Chunk { mats, sparse });
+        self.cache.lock().unwrap().insert((start, len), chunk.clone());
+        chunk
+    }
+
+    pub fn orders(&self) -> usize {
+        self.p - 1
+    }
+
+    pub fn moment_orders(&self) -> usize {
+        2 * (self.p - 1)
+    }
+
+    /// Sketch a batch of rows (slices of equal length D). R chunks are
+    /// materialized once and shared across the whole batch — this is the
+    /// fast path the pipeline workers use.
+    pub fn sketch_rows(&self, rows: &[&[f32]]) -> Vec<RowSketch> {
+        let k = self.spec.k;
+        let orders = self.orders();
+        let two_sided = matches!(self.spec.strategy, Strategy::Alternative);
+        let d = rows.first().map_or(0, |r| r.len());
+        let mut out: Vec<RowSketch> = rows
+            .iter()
+            .map(|r| {
+                assert_eq!(r.len(), d, "ragged row batch");
+                RowSketch {
+                    uside: SketchSet::zeros(orders, k),
+                    vside_data: two_sided.then(|| SketchSet::zeros(orders, k)),
+                    moments: Moments(vec![0.0; self.moment_orders()]),
+                }
+            })
+            .collect();
+
+        let mut chunk_start = 0;
+        while chunk_start < d {
+            let rows_in_chunk = self.chunk.min(d - chunk_start);
+            // Materialize (or fetch the cached) chunk of each matrix.
+            // Sparse distributions (three-point with large s) carry a
+            // CSR-like nonzero list so the axpy touches only nonzeros.
+            let chunk = self.chunk_at(chunk_start, rows_in_chunk);
+            self.accumulate_chunk(
+                rows,
+                chunk_start,
+                rows_in_chunk,
+                &chunk.mats,
+                chunk.sparse.as_deref(),
+                &mut out,
+            );
+            chunk_start += rows_in_chunk;
+        }
+        out
+    }
+
+    /// Sketch a single row.
+    pub fn sketch_row(&self, row: &[f32]) -> RowSketch {
+        self.sketch_rows(&[row]).pop().unwrap()
+    }
+
+    /// Accumulate one D-chunk for the whole batch.
+    ///
+    /// Loop order is `t` (feature) outer, batch row inner — each R row
+    /// (k floats × orders) is loaded once per chunk step and reused
+    /// across every batch row while it sits in L1. The row-outer layout
+    /// re-streamed R per data row: ~`rows×` more R traffic, which made
+    /// the sketch path memory-bound and killed worker scaling (see
+    /// EXPERIMENTS.md §Perf, iteration 1).
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate_chunk(
+        &self,
+        rows: &[&[f32]],
+        start: usize,
+        len: usize,
+        mats: &[super::matrix::ProjectionMatrix],
+        sparse: Option<&[SparseChunk]>,
+        out: &mut [RowSketch],
+    ) {
+        let orders = self.orders();
+        let nm = self.moment_orders();
+        let k = self.spec.k;
+        let shared = matches!(self.spec.strategy, Strategy::Basic);
+        let mut powers = vec![0.0f32; nm];
+        for t in start..start + len {
+            for (row, rs) in rows.iter().zip(out.iter_mut()) {
+                let x = row[t];
+                if x == 0.0 {
+                    continue; // zero data entry contributes nothing
+                }
+                // Hadamard power ladder x, x², … x^{2(p-1)}; moments always.
+                let mut p = 1.0f32;
+                for slot in powers.iter_mut() {
+                    p *= x;
+                    *slot = p;
+                }
+                for (m, &pw) in (1..=nm).zip(powers.iter()) {
+                    rs.moments.0[m - 1] += pw as f64;
+                    if m > orders {
+                        continue;
+                    }
+                    if shared {
+                        match sparse {
+                            Some(sp) => axpy_sparse(rs.uside.u_mut(m), pw, sp[0].row(t)),
+                            None => axpy(rs.uside.u_mut(m), pw, mats[0].row(t), k),
+                        }
+                    } else {
+                        // u-side order m: matrix id m; v-side order m: id p−m.
+                        let vside = rs.vside_data.as_mut().unwrap();
+                        match sparse {
+                            Some(sp) => {
+                                axpy_sparse(rs.uside.u_mut(m), pw, sp[m - 1].row(t));
+                                axpy_sparse(vside.u_mut(m), pw, sp[self.p - m - 1].row(t));
+                            }
+                            None => {
+                                axpy(rs.uside.u_mut(m), pw, mats[m - 1].row(t), k);
+                                axpy(vside.u_mut(m), pw, mats[self.p - m - 1].row(t), k);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// CSR-like nonzero list of a materialized R chunk — built once per
+/// chunk, shared across every row in the batch (the sparse three-point
+/// distributions are 1−1/s zeros; touching only nonzeros is the paper's
+/// §4 "sparsity speedup").
+struct SparseChunk {
+    row0: usize,
+    /// Prefix offsets, len rows+1.
+    offsets: Vec<u32>,
+    /// (column, value) pairs of nonzeros, row-major.
+    nnz: Vec<(u32, f32)>,
+}
+
+impl SparseChunk {
+    fn from_dense(mat: &super::matrix::ProjectionMatrix) -> Self {
+        let mut offsets = Vec::with_capacity(mat.rows + 1);
+        let mut nnz = Vec::new();
+        offsets.push(0u32);
+        for i in 0..mat.rows {
+            let row = &mat.data[i * mat.k..(i + 1) * mat.k];
+            for (j, &r) in row.iter().enumerate() {
+                if r != 0.0 {
+                    nnz.push((j as u32, r));
+                }
+            }
+            offsets.push(nnz.len() as u32);
+        }
+        SparseChunk { row0: mat.row0, offsets, nnz }
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> &[(u32, f32)] {
+        let r = i - self.row0;
+        &self.nnz[self.offsets[r] as usize..self.offsets[r + 1] as usize]
+    }
+}
+
+/// u += pw * r_row (dense).
+#[inline]
+fn axpy(u: &mut [f32], pw: f32, r_row: &[f32], k: usize) {
+    for j in 0..k {
+        u[j] += pw * r_row[j];
+    }
+}
+
+/// u += pw * r_row over explicit nonzeros (sparse three-point path).
+#[inline]
+fn axpy_sparse(u: &mut [f32], pw: f32, nnz: &[(u32, f32)]) {
+    for &(j, r) in nnz {
+        u[j as usize] += pw * r;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::{ProjectionDist, Strategy};
+    use crate::testkit;
+
+    fn mk(strategy: Strategy, k: usize, p: usize) -> Sketcher {
+        Sketcher::new(ProjectionSpec::new(7, k, ProjectionDist::Normal, strategy), p)
+    }
+
+    /// Naive dense u-side sketch for comparison.
+    fn naive_uside(spec: &ProjectionSpec, p: usize, row: &[f32]) -> SketchSet {
+        let orders = p - 1;
+        let mut s = SketchSet::zeros(orders, spec.k);
+        for m in 1..=orders {
+            let id = match spec.strategy {
+                Strategy::Basic => 1,
+                Strategy::Alternative => m,
+            };
+            for (i, &x) in row.iter().enumerate() {
+                let pw = (x as f64).powi(m as i32);
+                for j in 0..spec.k {
+                    s.u_mut(m)[j] += (pw * spec.entry(id, i as u64, j as u64)) as f32;
+                }
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn matches_naive_dense() {
+        testkit::check(30, |g| {
+            let strategy = if g.bool() { Strategy::Basic } else { Strategy::Alternative };
+            let p = if g.bool() { 4 } else { 6 };
+            let sk = mk(strategy, 8, p);
+            let row = g.vec_f32(1..64, -1.0..1.0);
+            let got = sk.sketch_row(&row);
+            let want = naive_uside(&sk.spec, p, &row);
+            for m in 1..p {
+                for j in 0..8 {
+                    let (a, b) = (got.uside.u(m)[j], want.u(m)[j]);
+                    crate::prop_assert!(
+                        (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                        "m={m} j={j}: {a} vs {b}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pair_sides_share_matrices() {
+        // Alternative strategy invariant: the u-side of order m and the
+        // v-side of order p−m are projections with the SAME matrix, so for
+        // identical input rows they are identical vectors.
+        let sk = mk(Strategy::Alternative, 8, 4);
+        let row: Vec<f32> = (0..32).map(|i| 1.0 + (i as f32 * 0.3).sin()).collect();
+        let rs = sk.sketch_row(&row);
+        let v = rs.vside();
+        // u-side order m uses id m; v-side order p−m uses id p−(p−m)=m.
+        // With the same data powers they differ (x^m vs x^{p-m}) unless
+        // m = p−m; check the shared-matrix property via order 2 (p=4).
+        assert_eq!(rs.uside.u(2), v.u(2), "order p/2 must coincide");
+        assert_ne!(rs.uside.u(1), v.u(1));
+    }
+
+    #[test]
+    fn basic_strategy_single_sided() {
+        let sk = mk(Strategy::Basic, 8, 4);
+        let rs = sk.sketch_row(&[1.0, 2.0, 3.0]);
+        assert!(rs.vside_data.is_none());
+        assert_eq!(rs.vside(), &rs.uside);
+    }
+
+    #[test]
+    fn chunking_invariant() {
+        // Same sketch regardless of chunk size (linearity over D-chunks).
+        testkit::check(20, |g| {
+            let strategy = if g.bool() { Strategy::Basic } else { Strategy::Alternative };
+            let mut sk = mk(strategy, 6, 4);
+            let row = g.vec_f32(10..200, -1.0..1.0);
+            sk.chunk = 1 + g.usize_in(0, 16);
+            let a = sk.sketch_row(&row);
+            sk.chunk = 4096;
+            let b = sk.sketch_row(&row);
+            for (x, y) in a.uside.data.iter().zip(&b.uside.data) {
+                crate::prop_assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+            }
+            for (x, y) in a.vside().data.iter().zip(&b.vside().data) {
+                crate::prop_assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "vside");
+            }
+        });
+    }
+
+    #[test]
+    fn merge_equals_concatenation() {
+        testkit::check(20, |g| {
+            let sk = mk(Strategy::Basic, 6, 4);
+            let row = g.vec_f32(20..100, -1.0..1.0);
+            let split = g.usize_in(1, row.len());
+            let whole = sk.sketch_row(&row);
+            let mut left_row = row.clone();
+            left_row[split..].fill(0.0);
+            let mut right_row = row.clone();
+            right_row[..split].fill(0.0);
+            let mut merged = sk.sketch_row(&left_row);
+            merged.merge(&sk.sketch_row(&right_row));
+            for (x, y) in merged.uside.data.iter().zip(&whole.uside.data) {
+                crate::prop_assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "sketch merge");
+            }
+            for o in 1..=whole.moments.len() {
+                crate::prop_assert!(
+                    (merged.moments.get(o) - whole.moments.get(o)).abs()
+                        < 1e-6 * (1.0 + whole.moments.get(o).abs()),
+                    "moment {o}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn moments_match_scan() {
+        let sk = mk(Strategy::Basic, 4, 4);
+        let row: Vec<f32> = vec![0.5, -0.25, 1.5, 0.0, 2.0];
+        let rs = sk.sketch_row(&row);
+        let want = Moments::scan_f32(&row, 6);
+        for o in 1..=6 {
+            assert!((rs.moments.get(o) - want.get(o)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sparse_three_point_same_semantics() {
+        let spec = ProjectionSpec::new(3, 8, ProjectionDist::ThreePoint(16.0), Strategy::Basic);
+        let sk = Sketcher::new(spec.clone(), 4);
+        let row: Vec<f32> = (0..128).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+        let got = sk.sketch_row(&row);
+        let want = naive_uside(&spec, 4, &row);
+        for (a, b) in got.uside.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn batch_equals_individual() {
+        let sk = mk(Strategy::Alternative, 5, 4);
+        let r1: Vec<f32> = (0..50).map(|i| (i as f32 * 0.1).sin()).collect();
+        let r2: Vec<f32> = (0..50).map(|i| (i as f32 * 0.2).cos()).collect();
+        let batch = sk.sketch_rows(&[&r1, &r2]);
+        let a = sk.sketch_row(&r1);
+        let b = sk.sketch_row(&r2);
+        assert_eq!(batch[0].uside.data, a.uside.data);
+        assert_eq!(batch[1].uside.data, b.uside.data);
+        assert_eq!(batch[1].vside().data, b.vside().data);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let basic = mk(Strategy::Basic, 8, 4).sketch_row(&[1.0; 16]);
+        let alt = mk(Strategy::Alternative, 8, 4).sketch_row(&[1.0; 16]);
+        // alt pays 2× on the sketch payload (moments identical).
+        let moments_bytes = 6 * 8;
+        assert_eq!(
+            alt.sketch_bytes() - moments_bytes,
+            2 * (basic.sketch_bytes() - moments_bytes)
+        );
+    }
+}

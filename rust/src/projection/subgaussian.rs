@@ -1,0 +1,155 @@
+//! Projection-entry distributions (paper §2.1 and §4).
+//!
+//! All have mean 0, variance 1; they differ in the fourth moment
+//! `s = E r⁴`, the only distribution parameter the variance formulas see
+//! (Lemma 6). Supported:
+//!
+//! * `Normal` — N(0,1), s = 3 (§2).
+//! * `Uniform` — U(−√3, √3), s = 9/5 (§4, "simpler than normal").
+//! * `ThreePoint(s)` — Achlioptas-style sparse sub-Gaussian: ±√s with
+//!   probability 1/(2s) each, 0 otherwise, s ≥ 1 (§4). s = 1 is the
+//!   Rademacher ±1; s = 3 reproduces the classic 1/6–2/3–1/6 scheme;
+//!   large s gives 1−1/s sparsity and a proportional sketching speedup.
+
+use crate::util::normal::normal_at;
+use crate::util::rng::{counter_hash, u64_to_f64};
+
+const SQRT3: f64 = 1.732_050_807_568_877_2;
+
+/// Entry distribution of the projection matrix R.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProjectionDist {
+    Normal,
+    Uniform,
+    ThreePoint(f64),
+}
+
+impl ProjectionDist {
+    /// Fourth moment s = E r⁴ — the parameter of Lemma 6.
+    pub fn kurtosis(&self) -> f64 {
+        match self {
+            ProjectionDist::Normal => 3.0,
+            ProjectionDist::Uniform => 9.0 / 5.0,
+            ProjectionDist::ThreePoint(s) => *s,
+        }
+    }
+
+    /// Fraction of exactly-zero entries (sparsity exploited by the
+    /// sketcher's skip path).
+    pub fn sparsity(&self) -> f64 {
+        match self {
+            ProjectionDist::ThreePoint(s) => 1.0 - 1.0 / s,
+            _ => 0.0,
+        }
+    }
+
+    /// Entry value at lattice point `(i, j)` under `seed` — counter-based
+    /// so R is random-access reproducible (chunked streaming, any order).
+    #[inline]
+    pub fn entry(&self, seed: u64, i: u64, j: u64) -> f64 {
+        match self {
+            ProjectionDist::Normal => normal_at(seed, i, j),
+            ProjectionDist::Uniform => {
+                let u = u64_to_f64(counter_hash(seed, i, j));
+                (2.0 * u - 1.0) * SQRT3
+            }
+            ProjectionDist::ThreePoint(s) => {
+                let u = u64_to_f64(counter_hash(seed, i, j));
+                let half = 0.5 / s;
+                if u < half {
+                    s.sqrt()
+                } else if u < 2.0 * half {
+                    -s.sqrt()
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        match text {
+            "normal" => Ok(ProjectionDist::Normal),
+            "uniform" => Ok(ProjectionDist::Uniform),
+            _ => {
+                if let Some(sv) = text.strip_prefix("threepoint:") {
+                    let s: f64 = sv.parse()?;
+                    anyhow::ensure!(s >= 1.0, "three-point requires s >= 1, got {s}");
+                    Ok(ProjectionDist::ThreePoint(s))
+                } else {
+                    anyhow::bail!("unknown distribution {text:?} (normal|uniform|threepoint:<s>)")
+                }
+            }
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            ProjectionDist::Normal => "normal".into(),
+            ProjectionDist::Uniform => "uniform".into(),
+            ProjectionDist::ThreePoint(s) => format!("threepoint:{s}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Welford;
+
+    fn moments(dist: ProjectionDist, n: u64) -> (f64, f64, f64) {
+        let mut w = Welford::new();
+        let mut m4 = 0.0;
+        for i in 0..n {
+            let v = dist.entry(77, i, 5);
+            w.push(v);
+            m4 += v * v * v * v;
+        }
+        (w.mean(), w.variance(), m4 / n as f64)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let (m, v, k) = moments(ProjectionDist::Normal, 200_000);
+        assert!(m.abs() < 0.01 && (v - 1.0).abs() < 0.03 && (k - 3.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let (m, v, k) = moments(ProjectionDist::Uniform, 200_000);
+        assert!(m.abs() < 0.01, "mean {m}");
+        assert!((v - 1.0).abs() < 0.01, "var {v}");
+        assert!((k - 1.8).abs() < 0.02, "kurt {k} want 9/5");
+    }
+
+    #[test]
+    fn three_point_moments_various_s() {
+        for s in [1.0, 3.0, 10.0, 50.0] {
+            let (m, v, k) = moments(ProjectionDist::ThreePoint(s), 400_000);
+            assert!(m.abs() < 0.05 * s.sqrt(), "s={s} mean {m}");
+            assert!((v - 1.0).abs() < 0.05, "s={s} var {v}");
+            assert!((k - s).abs() < 0.15 * s, "s={s} kurt {k}");
+        }
+    }
+
+    #[test]
+    fn three_point_sparsity() {
+        let s = 10.0;
+        let d = ProjectionDist::ThreePoint(s);
+        let zeros = (0..100_000)
+            .filter(|&i| d.entry(3, i, 0) == 0.0)
+            .count() as f64
+            / 100_000.0;
+        assert!((zeros - d.sparsity()).abs() < 0.01, "zeros {zeros}");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for text in ["normal", "uniform", "threepoint:4.5"] {
+            let d = ProjectionDist::parse(text).unwrap();
+            assert_eq!(d.describe(), text);
+        }
+        assert!(ProjectionDist::parse("threepoint:0.5").is_err());
+        assert!(ProjectionDist::parse("cauchy").is_err());
+    }
+}

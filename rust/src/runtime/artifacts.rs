@@ -1,0 +1,198 @@
+//! Artifact manifest: what `make artifacts` produced and how to call it.
+//!
+//! The manifest is line-oriented `key=value` tokens (one artifact per
+//! line) written by `python/compile/aot.py`; see that file's docstring.
+//! Parsing it here keeps the rust side free of JSON dependencies.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// The operation an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Basic-strategy fused sketch: (x[b,d], r[d,k]) → (u[orders,b,k], m[moments,b]).
+    Sketch,
+    /// Alternative-strategy sketch: (x[b,d], r[orders,d,k]) → same outputs.
+    SketchAlt,
+    /// Pairwise combine: (u[orders,b,k], v[orders,b2,k], mx[b], my[b2]) → d̂[b,b2].
+    Estimate,
+    /// Exact pairwise l_p^p: (x[b,d], y[b2,d]) → d[b,b2].
+    Exact,
+}
+
+impl OpKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "sketch" => OpKind::Sketch,
+            "sketch_alt" => OpKind::SketchAlt,
+            "estimate" => OpKind::Estimate,
+            "exact" => OpKind::Exact,
+            _ => anyhow::bail!("unknown artifact op {s:?}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OpKind::Sketch => "sketch",
+            OpKind::SketchAlt => "sketch_alt",
+            OpKind::Estimate => "estimate",
+            OpKind::Exact => "exact",
+        }
+    }
+}
+
+/// One compiled-artifact description from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub op: OpKind,
+    pub p: usize,
+    /// Row-block size (left operand).
+    pub b: usize,
+    /// Right-operand block size (estimate/exact only; == b otherwise).
+    pub b2: usize,
+    /// Feature width (sketch/exact only; 0 for estimate).
+    pub d: usize,
+    /// Sketch width (0 for exact).
+    pub k: usize,
+    /// Sketch orders p−1 (sketch/estimate).
+    pub orders: usize,
+    /// Moment orders 2(p−1) (sketch only).
+    pub moments: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+}
+
+impl ArtifactMeta {
+    fn from_line(line: &str) -> anyhow::Result<Self> {
+        let mut kv = HashMap::new();
+        for tok in line.split_whitespace() {
+            let (key, value) = tok
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad manifest token {tok:?}"))?;
+            kv.insert(key, value);
+        }
+        let get = |key: &str| -> anyhow::Result<&str> {
+            kv.get(key)
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("manifest line missing {key}: {line:?}"))
+        };
+        let num = |key: &str| -> usize {
+            kv.get(key).and_then(|v| v.parse().ok()).unwrap_or(0)
+        };
+        let op = OpKind::parse(get("op")?)?;
+        let b = num("b");
+        Ok(ArtifactMeta {
+            name: get("name")?.to_string(),
+            op,
+            p: num("p"),
+            b,
+            b2: if kv.contains_key("b2") { num("b2") } else { b },
+            d: num("d"),
+            k: num("k"),
+            orders: num("orders"),
+            moments: num("moments"),
+            file: get("file")?.to_string(),
+        })
+    }
+}
+
+/// Parsed manifest + artifact directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e} (run `make artifacts`)"))?;
+        let mut artifacts = Vec::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            artifacts.push(ArtifactMeta::from_line(line)?);
+        }
+        anyhow::ensure!(!artifacts.is_empty(), "empty manifest {path:?}");
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the sketch artifact matching (op, p, k) exactly — block/d
+    /// mismatches are handled by padding/chunking in the pipeline, but p
+    /// and k change the math and must match.
+    pub fn find_sketch(&self, op: OpKind, p: usize, k: usize) -> Option<&ArtifactMeta> {
+        debug_assert!(matches!(op, OpKind::Sketch | OpKind::SketchAlt));
+        self.artifacts
+            .iter()
+            .find(|a| a.op == op && a.p == p && a.k == k)
+    }
+
+    pub fn find_estimate(&self, p: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.op == OpKind::Estimate && a.p == p && a.k == k)
+    }
+
+    pub fn find_exact(&self, p: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.op == OpKind::Exact && a.p == p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_line() {
+        let m = ArtifactMeta::from_line(
+            "name=sketch_p4_b64_d1024_k64 op=sketch p=4 b=64 d=1024 k=64 orders=3 moments=6 file=f.hlo.txt",
+        )
+        .unwrap();
+        assert_eq!(m.op, OpKind::Sketch);
+        assert_eq!((m.p, m.b, m.d, m.k), (4, 64, 1024, 64));
+        assert_eq!((m.orders, m.moments), (3, 6));
+        assert_eq!(m.b2, 64, "b2 defaults to b");
+    }
+
+    #[test]
+    fn estimate_line_has_b2() {
+        let m = ArtifactMeta::from_line(
+            "name=estimate_p4_b64_k64 op=estimate p=4 b=64 b2=32 k=64 orders=3 file=e.hlo.txt",
+        )
+        .unwrap();
+        assert_eq!(m.op, OpKind::Estimate);
+        assert_eq!(m.b2, 32);
+        assert_eq!(m.d, 0);
+    }
+
+    #[test]
+    fn missing_required_key_fails() {
+        assert!(ArtifactMeta::from_line("op=sketch p=4 file=f").is_err());
+        assert!(ArtifactMeta::from_line("name=x op=bogus file=f").is_err());
+    }
+
+    #[test]
+    fn loads_repo_manifest_if_present() {
+        // Integration smoke: if artifacts were built, the manifest parses
+        // and paths resolve.
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        for a in &m.artifacts {
+            assert!(m.hlo_path(a).exists(), "missing {:?}", a.file);
+        }
+        assert!(m.find_sketch(OpKind::Sketch, 4, 64).is_some());
+    }
+}

@@ -1,0 +1,216 @@
+//! PJRT engine actor: a dedicated thread owns the PJRT client and
+//! compiled executables (raw PJRT handles are not `Send`), and serves
+//! execution requests over channels.
+//!
+//! Cloneable [`EngineHandle`]s are handed to pipeline workers; the engine
+//! thread exits when every handle is dropped. Compilation happens inside
+//! the actor on first use (or eagerly via [`EngineHandle::warm`]), so the
+//! request path only pays dispatch + execution.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::artifacts::Manifest;
+use super::executor::{Executor, Input};
+
+/// An owned input buffer + shape, sendable across the channel.
+#[derive(Clone, Debug)]
+pub struct OwnedInput {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl OwnedInput {
+    pub fn new(data: Vec<f32>, dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        assert_eq!(data.len(), n, "input buffer/shape mismatch");
+        OwnedInput { data, dims: dims.to_vec() }
+    }
+}
+
+enum Job {
+    Run {
+        artifact: String,
+        inputs: Vec<OwnedInput>,
+        reply: mpsc::SyncSender<anyhow::Result<Vec<Vec<f32>>>>,
+    },
+    Warm {
+        artifact: String,
+        reply: mpsc::SyncSender<anyhow::Result<()>>,
+    },
+    /// Stop the actor (sent by `Engine::drop`; queued jobs before it are
+    /// still served).
+    Shutdown,
+}
+
+/// Cloneable handle to the engine actor.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Job>,
+    manifest: Arc<Manifest>,
+    platform: String,
+}
+
+impl EngineHandle {
+    /// The parsed artifact manifest (shared, immutable).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Execute `artifact` on `inputs`; blocks until the actor replies.
+    pub fn run(&self, artifact: &str, inputs: Vec<OwnedInput>) -> anyhow::Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Job::Run { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread is gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped the reply"))?
+    }
+
+    /// Compile `artifact` now (so later `run`s don't pay compile time).
+    pub fn warm(&self, artifact: &str) -> anyhow::Result<()> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Job::Warm { artifact: artifact.to_string(), reply })
+            .map_err(|_| anyhow::anyhow!("engine thread is gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped the reply"))?
+    }
+}
+
+/// The engine: spawns the actor thread and yields handles.
+pub struct Engine {
+    handle: EngineHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start the actor. Fails fast if the manifest is missing or the
+    /// PJRT client cannot be created.
+    pub fn start(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let dir = artifacts_dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (boot_tx, boot_rx) = mpsc::sync_channel::<anyhow::Result<(Arc<Manifest>, String)>>(1);
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let mut executor = match Executor::new(&dir) {
+                    Ok(ex) => {
+                        let boot = (Arc::new(ex.manifest().clone()), ex.platform());
+                        let _ = boot_tx.send(Ok(boot));
+                        ex
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Run { artifact, inputs, reply } => {
+                            let borrowed: Vec<Input<'_>> = inputs
+                                .iter()
+                                .map(|i| Input::new(&i.data, &i.dims))
+                                .collect();
+                            let _ = reply.send(executor.run(&artifact, &borrowed));
+                        }
+                        Job::Warm { artifact, reply } => {
+                            let _ = reply.send(executor.warm(&artifact).map(|_| ()));
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            })?;
+        let (manifest, platform) = boot_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        Ok(Engine { handle: EngineHandle { tx, manifest, platform }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // Explicit shutdown: jobs already queued are served, then the
+        // actor exits and we join. Surviving handles see send errors.
+        let _ = self.handle.tx.send(Job::Shutdown);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::fallback;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from("artifacts");
+        dir.join("manifest.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn engine_runs_from_multiple_threads() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::start(&dir).unwrap();
+        let meta = engine
+            .handle()
+            .manifest()
+            .find_sketch(crate::runtime::OpKind::Sketch, 4, 64)
+            .cloned();
+        let Some(meta) = meta else { return };
+        let (b, d, k, p) = (meta.b, meta.d, meta.k, meta.p);
+        let mut threads = Vec::new();
+        for t in 0..4u64 {
+            let h = engine.handle();
+            let name = meta.name.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                let x: Vec<f32> = (0..b * d).map(|_| (rng.next_f64() - 0.5) as f32).collect();
+                let r: Vec<f32> = (0..d * k).map(|_| (rng.next_f64() - 0.5) as f32).collect();
+                let outs = h
+                    .run(
+                        &name,
+                        vec![
+                            OwnedInput::new(x.clone(), &[b, d]),
+                            OwnedInput::new(r.clone(), &[d, k]),
+                        ],
+                    )
+                    .unwrap();
+                let (u_want, _) = fallback::sketch_block(&x, &r, b, d, k, p);
+                for (a, w) in outs[0].iter().zip(&u_want) {
+                    assert!((a - w).abs() < 1e-2 * (1.0 + w.abs()));
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn engine_shuts_down_cleanly() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::start(&dir).unwrap();
+        let h = engine.handle();
+        drop(engine);
+        // The surviving handle now points at a dead actor; calls error
+        // rather than hang.
+        assert!(h.warm("anything").is_err());
+    }
+
+    #[test]
+    fn missing_dir_fails_fast() {
+        assert!(Engine::start(Path::new("/definitely/not/here")).is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! Synchronous PJRT executor: loads HLO-text artifacts, compiles them on
+//! the CPU PJRT client, caches the executables, and runs them on f32
+//! buffers.
+//!
+//! Raw PJRT handles are not `Send`; this type is meant to be owned by a
+//! single thread — the [`engine`](super::engine) actor wraps it behind
+//! channels for the multi-threaded pipeline.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Context;
+
+use super::artifacts::{ArtifactMeta, Manifest};
+
+/// An input buffer with its shape (row-major f32).
+pub struct Input<'a> {
+    pub data: &'a [f32],
+    pub dims: Vec<i64>,
+}
+
+impl<'a> Input<'a> {
+    pub fn new(data: &'a [f32], dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        assert_eq!(data.len(), n, "input buffer/shape mismatch");
+        Input { data, dims: dims.iter().map(|&d| d as i64).collect() }
+    }
+}
+
+/// Compiled-artifact cache over one PJRT client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Executor { client, manifest, compiled: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure `name` is compiled; compiling is the expensive step
+    /// (hundreds of ms) so the pipeline warms its artifacts up-front.
+    pub fn warm(&mut self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        let meta = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        if !self.compiled.contains_key(name) {
+            let path = self.manifest.hlo_path(&meta);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(self.manifest.by_name(name).unwrap())
+    }
+
+    /// Execute artifact `name` on the given inputs; returns one flat f32
+    /// buffer per output (artifacts are lowered with `return_tuple=True`,
+    /// so the single result literal is a tuple we decompose).
+    pub fn run(&mut self, name: &str, inputs: &[Input<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.warm(name)?;
+        let exe = self.compiled.get(name).unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| {
+                xla::Literal::vec1(inp.data)
+                    .reshape(&inp.dims)
+                    .with_context(|| format!("reshaping input to {:?}", inp.dims))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple().context("decomposing output tuple")?;
+        outs.into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::fallback;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from("artifacts");
+        dir.join("manifest.txt").exists().then_some(dir)
+    }
+
+    /// 3-way check (DESIGN.md §7): PJRT artifact output == pure-rust
+    /// fallback (python ref is checked on the pytest side).
+    #[test]
+    fn pjrt_sketch_matches_fallback() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut ex = Executor::new(&dir).unwrap();
+        let Some(meta) = ex.manifest().find_sketch(super::super::artifacts::OpKind::Sketch, 4, 64)
+        else {
+            return;
+        };
+        let (name, b, d, k, p) = (meta.name.clone(), meta.b, meta.d, meta.k, meta.p);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..b * d).map(|_| (rng.next_f64() - 0.5) as f32).collect();
+        let r: Vec<f32> = (0..d * k).map(|_| (rng.next_f64() - 0.5) as f32).collect();
+        let outs = ex
+            .run(&name, &[Input::new(&x, &[b, d]), Input::new(&r, &[d, k])])
+            .unwrap();
+        let (u_want, m_want) = fallback::sketch_block(&x, &r, b, d, k, p);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].len(), u_want.len());
+        for (a, w) in outs[0].iter().zip(&u_want) {
+            assert!((a - w).abs() < 1e-2 * (1.0 + w.abs()), "u: {a} vs {w}");
+        }
+        for (a, w) in outs[1].iter().zip(&m_want) {
+            assert!((a - w).abs() < 1e-2 * (1.0 + w.abs()), "m: {a} vs {w}");
+        }
+    }
+
+    #[test]
+    fn pjrt_estimate_matches_fallback() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut ex = Executor::new(&dir).unwrap();
+        let Some(meta) = ex.manifest().find_estimate(4, 64) else { return };
+        let (name, b, b2, k, p) = (meta.name.clone(), meta.b, meta.b2, meta.k, meta.p);
+        let orders = p - 1;
+        let mut rng = Rng::new(4);
+        let u: Vec<f32> = (0..orders * b * k).map(|_| (rng.next_f64() - 0.5) as f32).collect();
+        let v: Vec<f32> = (0..orders * b2 * k).map(|_| (rng.next_f64() - 0.5) as f32).collect();
+        let mx: Vec<f32> = (0..b).map(|_| rng.next_f64() as f32).collect();
+        let my: Vec<f32> = (0..b2).map(|_| rng.next_f64() as f32).collect();
+        let outs = ex
+            .run(
+                &name,
+                &[
+                    Input::new(&u, &[orders, b, k]),
+                    Input::new(&v, &[orders, b2, k]),
+                    Input::new(&mx, &[b]),
+                    Input::new(&my, &[b2]),
+                ],
+            )
+            .unwrap();
+        let want = fallback::estimate_block(&u, &v, &mx, &my, b, b2, k, p);
+        assert_eq!(outs.len(), 1);
+        for (a, w) in outs[0].iter().zip(&want) {
+            assert!((a - w).abs() < 1e-2 * (1.0 + w.abs()), "{a} vs {w}");
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut ex = Executor::new(&dir).unwrap();
+        assert!(ex.run("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,258 @@
+//! Pure-rust implementations of every artifact op, with the exact same
+//! input/output layouts as the PJRT artifacts.
+//!
+//! Three jobs:
+//! 1. runtime fallback when no artifact matches the requested shape,
+//! 2. CPU baseline in the benchmarks,
+//! 3. oracle in the PJRT cross-check tests (artifact output == fallback
+//!    output == python ref, the 3-way invariant of DESIGN.md §7).
+//!
+//! Layouts (row-major, f32, matching `python/compile/model.py`):
+//!   sketch:   x (B·D), r (D·K)           → u (orders·B·K), m (moments·B)
+//!   sketch_alt: x (B·D), r (orders·D·K)  → same
+//!   estimate: u (orders·B·K), v (orders·B2·K), mx (B), my (B2) → (B·B2)
+//!   exact:    x (B·D), y (B2·D)          → (B·B2)
+
+use crate::core::decompose::Decomposition;
+
+/// Basic-strategy fused sketch (mirror of `kernels/sketch.py::sketch`).
+///
+/// Returns `(u, m)` with `u[(m-1)·B·K + i·K + j] = Σ_t x[i,t]^m r[t,j]`
+/// and `m[(o-1)·B + i] = Σ_t x[i,t]^o`.
+pub fn sketch_block(
+    x: &[f32],
+    r: &[f32],
+    b: usize,
+    d: usize,
+    k: usize,
+    p: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len(), b * d, "x shape");
+    assert_eq!(r.len(), d * k, "r shape");
+    let orders = p - 1;
+    let n_mom = 2 * (p - 1);
+    let mut u = vec![0.0f32; orders * b * k];
+    let mut m = vec![0.0f32; n_mom * b];
+    for i in 0..b {
+        let row = &x[i * d..(i + 1) * d];
+        for (t, &xv) in row.iter().enumerate() {
+            let rrow = &r[t * k..(t + 1) * k];
+            let mut pw = 1.0f32;
+            for o in 1..=n_mom {
+                pw *= xv;
+                m[(o - 1) * b + i] += pw;
+                if o <= orders && pw != 0.0 {
+                    let dst = &mut u[((o - 1) * b + i) * k..((o - 1) * b + i + 1) * k];
+                    for (uj, &rj) in dst.iter_mut().zip(rrow) {
+                        *uj += pw * rj;
+                    }
+                }
+            }
+        }
+    }
+    (u, m)
+}
+
+/// Alternative-strategy fused sketch (`r_stack` is orders × D × K).
+pub fn sketch_block_alt(
+    x: &[f32],
+    r_stack: &[f32],
+    b: usize,
+    d: usize,
+    k: usize,
+    p: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let orders = p - 1;
+    assert_eq!(x.len(), b * d, "x shape");
+    assert_eq!(r_stack.len(), orders * d * k, "r_stack shape");
+    let n_mom = 2 * (p - 1);
+    let mut u = vec![0.0f32; orders * b * k];
+    let mut m = vec![0.0f32; n_mom * b];
+    for i in 0..b {
+        let row = &x[i * d..(i + 1) * d];
+        for (t, &xv) in row.iter().enumerate() {
+            let mut pw = 1.0f32;
+            for o in 1..=n_mom {
+                pw *= xv;
+                m[(o - 1) * b + i] += pw;
+                if o <= orders && pw != 0.0 {
+                    let rrow = &r_stack[((o - 1) * d + t) * k..((o - 1) * d + t + 1) * k];
+                    let dst = &mut u[((o - 1) * b + i) * k..((o - 1) * b + i + 1) * k];
+                    for (uj, &rj) in dst.iter_mut().zip(rrow) {
+                        *uj += pw * rj;
+                    }
+                }
+            }
+        }
+    }
+    (u, m)
+}
+
+/// Pairwise combine (`kernels/estimate.py` mirror): B×B2 estimate matrix.
+pub fn estimate_block(
+    u: &[f32],
+    v: &[f32],
+    mx_p: &[f32],
+    my_p: &[f32],
+    b: usize,
+    b2: usize,
+    k: usize,
+    p: usize,
+) -> Vec<f32> {
+    let orders = p - 1;
+    assert_eq!(u.len(), orders * b * k, "u shape");
+    assert_eq!(v.len(), orders * b2 * k, "v shape");
+    assert_eq!(mx_p.len(), b);
+    assert_eq!(my_p.len(), b2);
+    let dec = Decomposition::new(p).expect("valid p");
+    let mut out = vec![0.0f32; b * b2];
+    for i in 0..b {
+        for j in 0..b2 {
+            out[i * b2 + j] = mx_p[i] + my_p[j];
+        }
+    }
+    // Accumulate c_m/k · U_m V_{p−m}ᵀ, matching the kernel's f32 order of
+    // operations closely enough for the cross-check tolerances.
+    for m in 1..p {
+        let c = (dec.coeff(m) / k as f64) as f32;
+        let um = &u[(m - 1) * b * k..m * b * k];
+        let vn = &v[(p - m - 1) * b2 * k..(p - m) * b2 * k];
+        for i in 0..b {
+            let ui = &um[i * k..(i + 1) * k];
+            for j in 0..b2 {
+                let vj = &vn[j * k..(j + 1) * k];
+                let mut dot = 0.0f32;
+                for t in 0..k {
+                    dot += ui[t] * vj[t];
+                }
+                out[i * b2 + j] += c * dot;
+            }
+        }
+    }
+    out
+}
+
+/// Exact pairwise l_p^p distances (`model.py::exact_block` mirror).
+pub fn exact_block(x: &[f32], y: &[f32], b: usize, b2: usize, d: usize, p: usize) -> Vec<f32> {
+    assert_eq!(x.len(), b * d, "x shape");
+    assert_eq!(y.len(), b2 * d, "y shape");
+    let half = (p / 2) as i32;
+    let mut out = vec![0.0f32; b * b2];
+    for i in 0..b {
+        let xi = &x[i * d..(i + 1) * d];
+        for j in 0..b2 {
+            let yj = &y[j * d..(j + 1) * d];
+            let mut acc = 0.0f32;
+            for t in 0..d {
+                let diff = xi[t] - yj[t];
+                // |diff|^p == (diff²)^(p/2) for even p — no abs/powf.
+                acc += (diff * diff).powi(half);
+            }
+            out[i * b2 + j] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::decompose::exact_distance;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn exact_block_matches_scalar() {
+        let mut rng = Rng::new(1);
+        let (b, b2, d, p) = (3, 4, 17, 4);
+        let x = rand_vec(&mut rng, b * d);
+        let y = rand_vec(&mut rng, b2 * d);
+        let out = exact_block(&x, &y, b, b2, d, p);
+        for i in 0..b {
+            for j in 0..b2 {
+                let xi: Vec<f64> = x[i * d..(i + 1) * d].iter().map(|&v| v as f64).collect();
+                let yj: Vec<f64> = y[j * d..(j + 1) * d].iter().map(|&v| v as f64).collect();
+                let want = exact_distance(&xi, &yj, p);
+                let got = out[i * b2 + j] as f64;
+                assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "{got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_block_matches_sketcher() {
+        // The fallback with an explicitly materialized R must agree with
+        // the chunked Sketcher using the same spec.
+        use crate::projection::sketcher::Sketcher;
+        use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+        let (b, d, k, p) = (4, 50, 8, 4);
+        let spec = ProjectionSpec::new(11, k, ProjectionDist::Normal, Strategy::Basic);
+        let mut rng = Rng::new(2);
+        let x = rand_vec(&mut rng, b * d);
+        // Materialize R the same way the pipeline feeds PJRT.
+        let mat = spec.materialize(1, 0, d);
+        let mut r = vec![0.0f32; d * k];
+        for t in 0..d {
+            r[t * k..(t + 1) * k].copy_from_slice(mat.row(t));
+        }
+        let (u, m) = sketch_block(&x, &r, b, d, k, p);
+        let sk = Sketcher::new(spec, p);
+        let rows: Vec<&[f32]> = (0..b).map(|i| &x[i * d..(i + 1) * d]).collect();
+        let want = sk.sketch_rows(&rows);
+        for i in 0..b {
+            for ord in 1..p {
+                for j in 0..k {
+                    let got = u[((ord - 1) * b + i) * k + j];
+                    let w = want[i].uside.u(ord)[j];
+                    assert!((got - w).abs() < 2e-3 * (1.0 + w.abs()), "i={i} ord={ord} j={j}: {got} vs {w}");
+                }
+            }
+            for o in 1..=2 * (p - 1) {
+                let got = m[(o - 1) * b + i] as f64;
+                let w = want[i].moments.get(o);
+                assert!((got - w).abs() < 1e-2 * (1.0 + w.abs()), "moment {o}");
+            }
+        }
+    }
+
+    #[test]
+    fn estimate_block_is_decomposition_combine() {
+        // With exact powers as "sketches" of width k=1 scaled by k, the
+        // estimate reduces to the exact decomposition identity.
+        let (p, b) = (4usize, 2usize);
+        let x = [0.5f32, -0.3];
+        let y = [0.2f32, 0.7];
+        // u_m[i] = x_i^m, v_m[j] = y_j^m with k=1: ⟨u_m, v_{p-m}⟩ = x^m y^{p-m}.
+        let mut u = vec![0.0f32; (p - 1) * b];
+        let mut v = vec![0.0f32; (p - 1) * b];
+        for m in 1..p {
+            for i in 0..b {
+                u[(m - 1) * b + i] = x[i].powi(m as i32);
+                v[(m - 1) * b + i] = y[i].powi(m as i32);
+            }
+        }
+        let mx: Vec<f32> = x.iter().map(|v| v.powi(p as i32)).collect();
+        let my: Vec<f32> = y.iter().map(|v| v.powi(p as i32)).collect();
+        let out = estimate_block(&u, &v, &mx, &my, b, b, 1, p);
+        for i in 0..b {
+            for j in 0..b {
+                let want = (x[i] - y[j]).powi(p as i32);
+                let got = out[i * b + j];
+                assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn alt_sketch_zero_row_gives_zero() {
+        let (b, d, k, p) = (2, 10, 4, 4);
+        let x = vec![0.0f32; b * d];
+        let r = vec![1.0f32; (p - 1) * d * k];
+        let (u, m) = sketch_block_alt(&x, &r, b, d, k, p);
+        assert!(u.iter().all(|&v| v == 0.0));
+        assert!(m.iter().all(|&v| v == 0.0));
+    }
+}

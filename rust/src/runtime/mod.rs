@@ -1,0 +1,17 @@
+//! Runtime layer: load and execute the AOT-compiled JAX/Pallas artifacts
+//! from rust via PJRT, with a pure-rust fallback for arbitrary shapes.
+//!
+//! * [`artifacts`] — `manifest.txt` parsing (what `make artifacts` built).
+//! * [`executor`] — single-threaded PJRT compile + execute cache.
+//! * [`engine`] — actor thread wrapping the executor behind cloneable
+//!   handles (raw PJRT handles are not `Send`).
+//! * [`fallback`] — pure-rust mirror of every artifact op (shape-generic
+//!   fallback, CPU baseline, and cross-check oracle).
+
+pub mod artifacts;
+pub mod engine;
+pub mod executor;
+pub mod fallback;
+
+pub use artifacts::{ArtifactMeta, Manifest, OpKind};
+pub use engine::{Engine, EngineHandle, OwnedInput};

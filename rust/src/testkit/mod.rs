@@ -1,0 +1,110 @@
+//! Minimal property-testing support (`proptest` is not in the vendored
+//! registry). Runs a closure over many seeded random cases and reports
+//! the failing seed, so failures reproduce with `CASE_SEED=<n>`.
+//!
+//! ```ignore
+//! testkit::check(200, |g| {
+//!     let xs = g.vec_f64(1..100, 0.0..1.0);
+//!     prop_assert(invariant(&xs), "invariant broke");
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to property closures.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: u64,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, hi).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.next_range(hi - lo)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector with length in `len` range and entries in `val` range.
+    pub fn vec_f64(
+        &mut self,
+        len: std::ops::Range<usize>,
+        val: std::ops::Range<f64>,
+    ) -> Vec<f64> {
+        let n = self.usize_in(len.start, len.end);
+        (0..n).map(|_| self.f64_in(val.start, val.end)).collect()
+    }
+
+    pub fn vec_f32(
+        &mut self,
+        len: std::ops::Range<usize>,
+        val: std::ops::Range<f64>,
+    ) -> Vec<f32> {
+        self.vec_f64(len, val).into_iter().map(|v| v as f32).collect()
+    }
+}
+
+/// Run `cases` random property cases. A failing case panics with its seed;
+/// rerun just that case by setting `CASE_SEED`.
+pub fn check<F: FnMut(&mut Gen)>(cases: u64, mut f: F) {
+    if let Ok(s) = std::env::var("CASE_SEED") {
+        let seed: u64 = s.parse().expect("CASE_SEED must be a u64");
+        let mut g = Gen { rng: Rng::new(seed), case: seed };
+        f(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (rerun with CASE_SEED={seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Assert with context, mirroring proptest's `prop_assert!`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            panic!("property violated: {}", format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_respect_ranges() {
+        check(50, |g| {
+            let n = g.usize_in(3, 10);
+            assert!((3..10).contains(&n));
+            let x = g.f64_in(-2.0, 5.0);
+            assert!((-2.0..5.0).contains(&x));
+            let v = g.vec_f64(1..20, 0.0..1.0);
+            assert!(!v.is_empty() && v.len() < 20);
+            assert!(v.iter().all(|&x| (0.0..1.0).contains(&x)));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property violated")]
+    fn failing_property_panics() {
+        check(10, |g| {
+            let v = g.vec_f64(5..6, 0.0..1.0);
+            prop_assert!(v.len() == 4, "len={}", v.len());
+        });
+    }
+}

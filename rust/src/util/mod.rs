@@ -1,0 +1,4 @@
+//! Shared utilities: PRNGs, normal sampling, streaming statistics.
+pub mod normal;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,111 @@
+//! Standard-normal sampling: Box–Muller (sequential, with cached spare)
+//! and a counter-based variant for random-access projection entries.
+
+use super::rng::{counter_hash, u64_to_f64, Rng};
+
+/// Sequential N(0,1) sampler wrapping [`Rng`]; caches the Box–Muller spare.
+#[derive(Clone, Debug)]
+pub struct NormalSampler {
+    rng: Rng,
+    spare: Option<f64>,
+}
+
+impl NormalSampler {
+    pub fn new(seed: u64) -> Self {
+        NormalSampler { rng: Rng::new(seed), spare: None }
+    }
+
+    pub fn from_rng(rng: Rng) -> Self {
+        NormalSampler { rng, spare: None }
+    }
+
+    #[inline]
+    pub fn sample(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        let (z0, z1) = box_muller(self.rng.next_f64_open(), self.rng.next_f64());
+        self.spare = Some(z1);
+        z0
+    }
+
+    pub fn fill(&mut self, out: &mut [f64]) {
+        for o in out {
+            *o = self.sample();
+        }
+    }
+}
+
+/// Classic Box–Muller: two uniforms -> two independent N(0,1).
+/// `u0` must be in (0, 1]; `u1` in [0, 1).
+#[inline]
+pub fn box_muller(u0: f64, u1: f64) -> (f64, f64) {
+    let r = (-2.0 * u0.ln()).sqrt();
+    let theta = 2.0 * std::f64::consts::PI * u1;
+    (r * theta.cos(), r * theta.sin())
+}
+
+/// Counter-based N(0,1): the value at lattice point `(a, b)` under `seed`.
+/// Random access with no state — the basis of reproducible chunked
+/// projection matrices (R entry (i, j) = `normal_at(seed, i, j)`).
+#[inline]
+pub fn normal_at(seed: u64, a: u64, b: u64) -> f64 {
+    let h0 = counter_hash(seed, a, b);
+    let h1 = counter_hash(seed ^ 0x6A09E667F3BCC909, a, b); // sqrt(2) bits
+    let u0 = 1.0 - u64_to_f64(h0); // (0,1]
+    let u1 = u64_to_f64(h1);
+    box_muller(u0, u1).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Welford;
+
+    #[test]
+    fn sequential_moments() {
+        let mut s = NormalSampler::new(11);
+        let mut w = Welford::new();
+        let mut kurt_acc = 0.0;
+        let n = 200_000;
+        for _ in 0..n {
+            let z = s.sample();
+            w.push(z);
+            kurt_acc += z * z * z * z;
+        }
+        assert!(w.mean().abs() < 0.01, "mean={}", w.mean());
+        assert!((w.variance() - 1.0).abs() < 0.02, "var={}", w.variance());
+        // E z^4 = 3 for a standard normal — the constant Lemma 1 relies on.
+        let k = kurt_acc / n as f64;
+        assert!((k - 3.0).abs() < 0.1, "kurtosis={k}");
+    }
+
+    #[test]
+    fn counter_based_moments_and_determinism() {
+        let n = 100_000u64;
+        let mut w = Welford::new();
+        for i in 0..n {
+            w.push(normal_at(5, i, 3));
+        }
+        assert!(w.mean().abs() < 0.02);
+        assert!((w.variance() - 1.0).abs() < 0.03);
+        assert_eq!(normal_at(5, 17, 3), normal_at(5, 17, 3));
+        assert_ne!(normal_at(5, 17, 3), normal_at(6, 17, 3));
+    }
+
+    #[test]
+    fn lattice_columns_uncorrelated() {
+        let n = 50_000u64;
+        let (mut sxy, mut sx, mut sy) = (0.0, 0.0, 0.0);
+        for i in 0..n {
+            let x = normal_at(2, i, 0);
+            let y = normal_at(2, i, 1);
+            sxy += x * y;
+            sx += x;
+            sy += y;
+        }
+        let nf = n as f64;
+        let cov = sxy / nf - (sx / nf) * (sy / nf);
+        assert!(cov.abs() < 0.02, "cov={cov}");
+    }
+}

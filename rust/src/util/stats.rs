@@ -1,0 +1,169 @@
+//! Streaming statistics used by the Monte-Carlo experiments and the
+//! bench harness: Welford mean/variance, percentiles, and a z-test for
+//! the unbiasedness checks.
+
+/// Welford online mean/variance (numerically stable).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (MC experiments divide by n; the estimators'
+    /// theoretical Var is an exact population quantity).
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Unbiased sample variance.
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            f64::INFINITY
+        } else {
+            (self.sample_variance() / self.n as f64).sqrt()
+        }
+    }
+
+    /// z statistic for H0: E[x] == mu0. |z| < ~3 accepts at MC scale.
+    pub fn z_against(&self, mu0: f64) -> f64 {
+        (self.mean - mu0) / self.sem()
+    }
+}
+
+/// Percentile of a sample (linear interpolation); `q` in [0, 1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Relative error |a - b| / max(|b|, eps).
+#[inline]
+pub fn rel_err(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-300)
+}
+
+/// Summary of a sample: mean, sd, p50, p95.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty());
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut w = Welford::new();
+    for &x in xs {
+        w.push(x);
+    }
+    Summary {
+        n: xs.len(),
+        mean: w.mean(),
+        sd: w.sample_variance().sqrt(),
+        p50: percentile(&sorted, 0.5),
+        p95: percentile(&sorted, 0.95),
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.5, -3.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean: f64 = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var: f64 = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints_and_median() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert!((percentile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn z_test_calibration() {
+        // Sample mean of U(0,1) should accept mu0=0.5 and reject mu0=0.6.
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut w = Welford::new();
+        for _ in 0..10_000 {
+            w.push(rng.next_f64());
+        }
+        assert!(w.z_against(0.5).abs() < 4.0);
+        assert!(w.z_against(0.6).abs() > 10.0);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = summarize(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Integration: the `lpsketch` binary's CLI surface, exercised through
+//! the real executable (CARGO_BIN_EXE_lpsketch).
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_lpsketch"))
+}
+
+#[test]
+fn ingest_synthetic_reports_storage() {
+    let out = bin()
+        .args(["--n", "64", "--d", "512", "--k", "64", "ingest"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("ingested 64 rows"), "{stdout}");
+    assert!(stdout.contains("compression"), "{stdout}");
+}
+
+#[test]
+fn query_prints_estimates() {
+    let out = bin()
+        .args(["--n", "32", "--d", "256", "--k", "64", "query", "0", "1", "2", "3"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("d(0,1):"), "{stdout}");
+    assert!(stdout.contains("d(2,3):"), "{stdout}");
+}
+
+#[test]
+fn pairs_writes_csv() {
+    let dir = std::env::temp_dir().join("lpsketch_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pairs.csv");
+    let out = bin()
+        .args([
+            "--n", "10", "--d", "128", "--k", "32", "pairs", "--out",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let csv = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines[0], "i,j,estimate");
+    assert_eq!(lines.len(), 1 + 10 * 9 / 2);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn knn_on_corpus() {
+    let out = bin()
+        .args([
+            "--n", "200", "--d", "256", "--k", "64", "knn", "3", "5", "--data", "corpus",
+            "--rerank", "20",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("top-5 for row 3"), "{stdout}");
+    // Self should be retrieved with exact distance 0 after reranking.
+    assert!(stdout.contains("row      3"), "{stdout}");
+}
+
+#[test]
+fn ingest_saves_loadable_sketches() {
+    let dir = std::env::temp_dir().join("lpsketch_cli_persist");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("s.lpsk");
+    let out = bin()
+        .args([
+            "--n", "24", "--d", "128", "--k", "16", "ingest", "--save-sketches",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let (store, header) = lpsketch::coordinator::persist::load(&path, 2).unwrap();
+    assert_eq!(header.rows, 24);
+    assert_eq!(header.k, 16);
+    assert_eq!(store.len(), 24);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn unknown_flag_fails_with_usage() {
+    let out = bin().args(["--bogus", "1", "ingest"]).output().unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("usage:"), "{stderr}");
+}
+
+#[test]
+fn bad_p_rejected() {
+    let out = bin().args(["--p", "5", "ingest"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn platform_lists_artifacts_when_built() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        return;
+    }
+    let out = bin().arg("platform").output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("platform:"), "{stdout}");
+    assert!(stdout.contains("sketch_p4"), "{stdout}");
+}

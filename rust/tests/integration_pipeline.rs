@@ -1,0 +1,170 @@
+//! Integration: the full coordinator stack (scheduler → workers → store
+//! → query paths) against the exact baseline, on the pure-rust backend.
+
+use std::sync::Arc;
+
+use lpsketch::baselines::exact;
+use lpsketch::config::Config;
+use lpsketch::coordinator::Pipeline;
+use lpsketch::data::{corpus, gen, DataDist};
+
+fn cfg(n: usize, d: usize, k: usize) -> Config {
+    let mut c = Config::default();
+    c.n = n;
+    c.d = d;
+    c.k = k;
+    c.workers = 4;
+    c.block_rows = 32;
+    c.queue_depth = 4;
+    c
+}
+
+/// Pearson correlation between two equal-length vectors.
+fn correlation(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let (ma, mb) = (
+        a.iter().sum::<f64>() / n,
+        b.iter().sum::<f64>() / n,
+    );
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (&x, &y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+#[test]
+fn all_pairs_estimates_correlate_with_exact() {
+    let c = cfg(96, 512, 96);
+    let data = gen::generate(DataDist::ZipfTf { exponent: 1.1, density: 0.1 }, c.n, c.d, 11);
+    let pipeline = Pipeline::new(c.clone()).unwrap();
+    pipeline.ingest(&data).unwrap();
+    let est = pipeline.all_pairs_condensed();
+    let exact = exact::pairwise_condensed(&data, c.p, 4);
+    assert_eq!(est.len(), exact.len());
+    let r = correlation(&est, &exact);
+    assert!(r > 0.9, "correlation {r}");
+}
+
+#[test]
+fn mle_improves_aggregate_error_on_corpus() {
+    // On similar non-negative rows the margin MLE (Lemma 4) should cut
+    // the aggregate relative error vs the plain estimator.
+    let base = cfg(64, 512, 64);
+    let data = corpus::generate(base.n, base.d, 80, 13).tf;
+    let exact = exact::pairwise_condensed(&data, base.p, 4);
+
+    let mean_rel = |use_mle: bool| {
+        let mut c = base.clone();
+        c.use_mle = use_mle;
+        let p = Pipeline::new(c).unwrap();
+        p.ingest(&data).unwrap();
+        let est = p.all_pairs_condensed();
+        let mut rel = 0.0;
+        let mut count = 0usize;
+        for (&e, &g) in exact.iter().zip(&est) {
+            if e > 0.0 {
+                rel += (g - e).abs() / e;
+                count += 1;
+            }
+        }
+        rel / count as f64
+    };
+    let plain = mean_rel(false);
+    let mle = mean_rel(true);
+    assert!(
+        mle < plain,
+        "MLE should reduce aggregate rel err: plain={plain:.4} mle={mle:.4}"
+    );
+}
+
+#[test]
+fn query_service_under_concurrent_load() {
+    let c = cfg(128, 256, 32);
+    let data = gen::generate(DataDist::Uniform01, c.n, c.d, 17);
+    let pipeline = Arc::new(Pipeline::new(c).unwrap());
+    pipeline.ingest(&data).unwrap();
+    let service = pipeline.spawn_query_service();
+    let mut threads = Vec::new();
+    for t in 0..8u64 {
+        let service = service.clone();
+        threads.push(std::thread::spawn(move || {
+            for i in 0..200u64 {
+                let a = (t * 37 + i) % 128;
+                let b = (t * 91 + i * 3 + 1) % 128;
+                let got = service.query(a, b).unwrap();
+                assert!(got.is_some());
+                if a != b {
+                    assert!(got.unwrap().is_finite());
+                }
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let snap = pipeline.metrics();
+    assert_eq!(snap.queries_served, 8 * 200);
+    assert!(snap.batches_flushed > 0);
+}
+
+#[test]
+fn ingest_is_deterministic_across_worker_counts() {
+    // Same seed ⇒ identical sketches regardless of parallelism (the
+    // projection is counter-based, not stateful).
+    let data = gen::generate(DataDist::Gaussian, 50, 128, 23);
+    let run = |workers: usize| {
+        let mut c = cfg(50, 128, 32);
+        c.workers = workers;
+        let p = Pipeline::new(c).unwrap();
+        p.ingest(&data).unwrap();
+        p.all_pairs_condensed()
+    };
+    let a = run(1);
+    let b = run(7);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn p6_pipeline_end_to_end() {
+    // Gaussian rows with per-row scales: pairwise distances then span
+    // orders of magnitude (scale⁶), so correlation against exact is
+    // meaningful despite the p=6 estimator's heavy noise. (On uniform
+    // non-negative rows all pairs are nearly equidistant and correlation
+    // measures pure noise.)
+    let mut c = cfg(48, 256, 128);
+    c.p = 6;
+    let mut data = gen::generate(DataDist::Gaussian, c.n, c.d, 29);
+    for i in 0..data.n() {
+        let s = 0.5 + 1.5 * i as f32 / 48.0;
+        for v in data.row_mut(i) {
+            *v *= s;
+        }
+    }
+    let pipeline = Pipeline::new(c.clone()).unwrap();
+    pipeline.ingest(&data).unwrap();
+    let est = pipeline.all_pairs_condensed();
+    let exact = exact::pairwise_condensed(&data, 6, 4);
+    let r = correlation(&est, &exact);
+    assert!(r > 0.7, "p=6 correlation {r}");
+}
+
+#[test]
+fn alternative_strategy_pipeline_end_to_end() {
+    let mut c = cfg(48, 512, 128);
+    c.strategy = lpsketch::projection::Strategy::Alternative;
+    let data = gen::generate(DataDist::ZipfTf { exponent: 1.1, density: 0.1 }, c.n, c.d, 31);
+    let pipeline = Pipeline::new(c).unwrap();
+    pipeline.ingest(&data).unwrap();
+    let est = pipeline.all_pairs_condensed();
+    let exact = exact::pairwise_condensed(&data, 4, 4);
+    let r = correlation(&est, &exact);
+    assert!(r > 0.8, "alt-strategy correlation {r}");
+}

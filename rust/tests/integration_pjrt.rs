@@ -1,0 +1,151 @@
+//! Integration: the PJRT path — AOT artifacts executed from the
+//! pipeline, cross-checked against the pure-rust backend (the 3-way
+//! invariant of DESIGN.md §7; the python side is checked by pytest).
+//!
+//! These tests no-op silently if `artifacts/` has not been built.
+
+use std::path::Path;
+
+use lpsketch::config::Config;
+use lpsketch::coordinator::Pipeline;
+use lpsketch::data::{gen, DataDist};
+use lpsketch::projection::Strategy;
+use lpsketch::runtime::{fallback, Engine, OpKind, OwnedInput};
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/manifest.txt").exists()
+}
+
+fn cfg_pjrt(n: usize, strategy: Strategy) -> Config {
+    let mut c = Config::default();
+    c.n = n;
+    c.d = 1024; // artifact grid width
+    c.k = 64; // artifact grid k
+    c.block_rows = 64; // artifact batch
+    c.workers = 2;
+    c.use_pjrt = true;
+    c.strategy = strategy;
+    c
+}
+
+#[test]
+fn pjrt_pipeline_matches_rust_pipeline() {
+    if !have_artifacts() {
+        return;
+    }
+    let data = gen::generate(DataDist::Uniform01, 96, 1024, 41);
+    let mut c_rust = cfg_pjrt(96, Strategy::Basic);
+    c_rust.use_pjrt = false;
+    let rust = Pipeline::new(c_rust).unwrap();
+    rust.ingest(&data).unwrap();
+    let pjrt = Pipeline::new(cfg_pjrt(96, Strategy::Basic)).unwrap();
+    let report = pjrt.ingest(&data).unwrap();
+    assert_eq!(report.pjrt_rows, 96, "all rows should take the PJRT path");
+    assert!(pjrt.metrics().pjrt_calls > 0);
+
+    let a = rust.all_pairs_condensed();
+    let b = pjrt.all_pairs_condensed();
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        // f32 artifact vs f64-moment rust path: tolerances are relative
+        // to the pair magnitude.
+        let tol = 1e-2 * (1.0 + x.abs());
+        assert!((x - y).abs() < tol, "pair {i}: rust={x} pjrt={y}");
+    }
+}
+
+#[test]
+fn pjrt_pipeline_alternative_strategy() {
+    if !have_artifacts() {
+        return;
+    }
+    let data = gen::generate(DataDist::Uniform01, 64, 1024, 43);
+    let mut c_rust = cfg_pjrt(64, Strategy::Alternative);
+    c_rust.use_pjrt = false;
+    let rust = Pipeline::new(c_rust).unwrap();
+    rust.ingest(&data).unwrap();
+    let pjrt = Pipeline::new(cfg_pjrt(64, Strategy::Alternative)).unwrap();
+    pjrt.ingest(&data).unwrap();
+    let a = rust.all_pairs_condensed();
+    let b = pjrt.all_pairs_condensed();
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        let tol = 1e-2 * (1.0 + x.abs());
+        assert!((x - y).abs() < tol, "pair {i}: rust={x} pjrt={y}");
+    }
+}
+
+#[test]
+fn pjrt_padded_tail_block_is_dropped() {
+    if !have_artifacts() {
+        return;
+    }
+    // 70 rows with block 64 ⇒ tail block of 6 rows padded to 64; the
+    // store must contain exactly 70.
+    let data = gen::generate(DataDist::Uniform01, 70, 1024, 47);
+    let pipeline = Pipeline::new(cfg_pjrt(70, Strategy::Basic)).unwrap();
+    pipeline.ingest(&data).unwrap();
+    assert_eq!(pipeline.rows(), 70);
+    assert_eq!(pipeline.store().ids().len(), 70);
+}
+
+#[test]
+fn exact_artifact_matches_fallback() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::start(Path::new("artifacts")).unwrap();
+    let h = engine.handle();
+    let Some(meta) = h.manifest().find_exact(4).cloned() else { return };
+    let x = gen::generate(DataDist::Gaussian, meta.b, meta.d, 51);
+    let y = gen::generate(DataDist::Gaussian, meta.b2, meta.d, 53);
+    let outs = h
+        .run(
+            &meta.name,
+            vec![
+                OwnedInput::new(x.data().to_vec(), &[meta.b, meta.d]),
+                OwnedInput::new(y.data().to_vec(), &[meta.b2, meta.d]),
+            ],
+        )
+        .unwrap();
+    let want = fallback::exact_block(x.data(), y.data(), meta.b, meta.b2, meta.d, meta.p);
+    assert_eq!(outs[0].len(), want.len());
+    for (a, w) in outs[0].iter().zip(&want) {
+        assert!((a - w).abs() < 1e-2 * (1.0 + w.abs()), "{a} vs {w}");
+    }
+}
+
+#[test]
+fn p6_artifacts_run() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::start(Path::new("artifacts")).unwrap();
+    let h = engine.handle();
+    let Some(meta) = h.manifest().find_sketch(OpKind::Sketch, 6, 64).cloned() else { return };
+    let x = gen::generate(DataDist::Uniform01, meta.b, meta.d, 59);
+    let spec = lpsketch::projection::ProjectionSpec::new(
+        9,
+        meta.k,
+        lpsketch::projection::ProjectionDist::Normal,
+        Strategy::Basic,
+    );
+    let r = spec.materialize(1, 0, meta.d).data;
+    let outs = h
+        .run(
+            &meta.name,
+            vec![
+                OwnedInput::new(x.data().to_vec(), &[meta.b, meta.d]),
+                OwnedInput::new(r.clone(), &[meta.d, meta.k]),
+            ],
+        )
+        .unwrap();
+    let (u_want, m_want) =
+        fallback::sketch_block(x.data(), &r, meta.b, meta.d, meta.k, meta.p);
+    for (a, w) in outs[0].iter().zip(&u_want) {
+        assert!((a - w).abs() < 5e-2 * (1.0 + w.abs()), "u: {a} vs {w}");
+    }
+    // p=6 moments reach x^10 — generous f32 tolerance.
+    for (a, w) in outs[1].iter().zip(&m_want) {
+        assert!((a - w).abs() < 5e-2 * (1.0 + w.abs()), "m: {a} vs {w}");
+    }
+}
