@@ -2,6 +2,9 @@
 //! (EXPERIMENTS.md). Measures each layer in isolation:
 //!   * L3 sketch path: pure-rust sketcher by distribution (dense/sparse)
 //!   * L3 estimate path: plain vs MLE combine, pairs/s
+//!   * arena vs per-row: blocked batch estimation + fused top-k on the
+//!     columnar arena against the per-row reference (the ISSUE 1
+//!     acceptance: ≥3× at n=10⁴, k=64, p=4)
 //!   * PJRT dispatch: artifact sketch/estimate per block (needs
 //!     `make artifacts`; skipped if absent)
 //!   * store: insert + pair-visit
@@ -11,6 +14,7 @@ use std::path::Path;
 use lpsketch::bench_support::{bench, fmt_duration, Table};
 use lpsketch::config::Config;
 use lpsketch::coordinator::{Pipeline, SketchStore};
+use lpsketch::core::arena::SketchArena;
 use lpsketch::core::decompose::Decomposition;
 use lpsketch::core::estimator;
 use lpsketch::core::mle::{self, Solve};
@@ -80,7 +84,126 @@ fn main() {
         format!("{:.2} Mpairs/s", m.throughput().unwrap() / 1e6),
     ]);
 
-    // End-to-end all-pairs through the pipeline.
+    // Arena vs per-row blocked kernels — the ISSUE 1 acceptance arm:
+    // batched all-pairs / top-k estimation at n=10⁴, k=64, p=4 must run
+    // ≥3× faster through the columnar arena than through per-row
+    // RowSketch scoring, with identical results within fp tolerance.
+    {
+        let fast = std::env::var("LPSKETCH_BENCH_FAST").as_deref() == Ok("1");
+        let (an, bq) = if fast { (2_000usize, 64usize) } else { (10_000, 256) };
+        let (ad, ak, top) = (128usize, 64usize, 10usize);
+        let workers = std::thread::available_parallelism().map_or(1, |w| w.get());
+        let adata = gen::generate(DataDist::LogNormal { sigma: 1.0 }, an, ad, 21);
+        let ask = Sketcher::new(
+            ProjectionSpec::new(2, ak, ProjectionDist::Normal, Strategy::Basic),
+            4,
+        );
+        let arefs: Vec<&[f32]> = (0..an).map(|i| adata.row(i)).collect();
+        let asketches = ask.sketch_rows(&arefs);
+        let tarena = SketchArena::from_rows(4, ak, &asketches);
+        let qarena = SketchArena::from_rows(4, ak, &asketches[..bq]);
+        let batch_pairs = (bq * an) as u64;
+
+        // Correctness guard: arena block == per-row block (fp-identical).
+        let want = estimator::estimate_block(&dec, &asketches[..bq.min(8)], &asketches[..64]);
+        let small_q = SketchArena::from_rows(4, ak, &asketches[..bq.min(8)]);
+        let small_t = SketchArena::from_rows(4, ak, &asketches[..64]);
+        let got = estimator::estimate_block_arena(&dec, &small_q, &small_t, workers);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-12 * w.abs().max(1.0), "arena mismatch: {g} vs {w}");
+        }
+
+        let m_pr = bench("arena/block_per_row", Some(batch_pairs), || {
+            std::hint::black_box(estimator::estimate_block(&dec, &asketches[..bq], &asketches));
+        });
+        table.row(&[
+            "arena".into(),
+            format!("block per-row B={bq} n={an} k={ak}"),
+            fmt_duration(m_pr.mean),
+            fmt_duration(m_pr.p95),
+            format!("{:.2} Mpairs/s", m_pr.throughput().unwrap() / 1e6),
+        ]);
+        // w=1 arm isolates the columnar layout's contribution; the
+        // w=workers arm is the arena path as deployed (layout + shards).
+        let m_a1 = bench("arena/block_arena_w1", Some(batch_pairs), || {
+            std::hint::black_box(estimator::estimate_block_arena(&dec, &qarena, &tarena, 1));
+        });
+        table.row(&[
+            "arena".into(),
+            format!("block arena B={bq} n={an} k={ak} w=1"),
+            fmt_duration(m_a1.mean),
+            fmt_duration(m_a1.p95),
+            format!("{:.2} Mpairs/s", m_a1.throughput().unwrap() / 1e6),
+        ]);
+        let m_ar = bench("arena/block_arena", Some(batch_pairs), || {
+            std::hint::black_box(estimator::estimate_block_arena(&dec, &qarena, &tarena, workers));
+        });
+        table.row(&[
+            "arena".into(),
+            format!("block arena B={bq} n={an} k={ak} w={workers}"),
+            fmt_duration(m_ar.mean),
+            fmt_duration(m_ar.p95),
+            format!("{:.2} Mpairs/s", m_ar.throughput().unwrap() / 1e6),
+        ]);
+        println!(
+            "arena block speedup: {:.1}x layout-only (w=1), {:.1}x with {workers} workers \
+             (per-row {})",
+            m_pr.mean.as_secs_f64() / m_a1.mean.as_secs_f64(),
+            m_pr.mean.as_secs_f64() / m_ar.mean.as_secs_f64(),
+            fmt_duration(m_pr.mean),
+        );
+
+        let m_tpr = bench("arena/topk_per_row", Some(batch_pairs), || {
+            for qi in 0..bq {
+                let mut scored: Vec<(usize, f64)> = asketches
+                    .iter()
+                    .enumerate()
+                    .map(|(j, r)| (j, estimator::estimate(&dec, &asketches[qi], r)))
+                    .collect();
+                scored.select_nth_unstable_by(top - 1, |a, b| a.1.total_cmp(&b.1));
+                scored.truncate(top);
+                scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+                std::hint::black_box(scored);
+            }
+        });
+        table.row(&[
+            "arena".into(),
+            format!("top-{top} per-row B={bq} n={an}"),
+            fmt_duration(m_tpr.mean),
+            fmt_duration(m_tpr.p95),
+            format!("{:.2} Mpairs/s", m_tpr.throughput().unwrap() / 1e6),
+        ]);
+        let m_t1 = bench("arena/topk_arena_w1", Some(batch_pairs), || {
+            std::hint::black_box(estimator::top_k_scan_arena(&dec, &qarena, &tarena, top, 1));
+        });
+        table.row(&[
+            "arena".into(),
+            format!("top-{top} arena B={bq} n={an} w=1"),
+            fmt_duration(m_t1.mean),
+            fmt_duration(m_t1.p95),
+            format!("{:.2} Mpairs/s", m_t1.throughput().unwrap() / 1e6),
+        ]);
+        let m_tar = bench("arena/topk_arena", Some(batch_pairs), || {
+            std::hint::black_box(estimator::top_k_scan_arena(&dec, &qarena, &tarena, top, workers));
+        });
+        table.row(&[
+            "arena".into(),
+            format!("top-{top} arena B={bq} n={an} w={workers}"),
+            fmt_duration(m_tar.mean),
+            fmt_duration(m_tar.p95),
+            format!("{:.2} Mpairs/s", m_tar.throughput().unwrap() / 1e6),
+        ]);
+        println!(
+            "arena top-k speedup: {:.1}x layout-only (w=1), {:.1}x with {workers} workers \
+             (per-row {})",
+            m_tpr.mean.as_secs_f64() / m_t1.mean.as_secs_f64(),
+            m_tpr.mean.as_secs_f64() / m_tar.mean.as_secs_f64(),
+            fmt_duration(m_tpr.mean),
+        );
+    }
+
+    // End-to-end all-pairs through the pipeline (arena path vs the
+    // per-row reference path).
     let mut cfg = Config::default();
     cfg.n = n;
     cfg.d = d;
@@ -92,7 +215,17 @@ fn main() {
     });
     table.row(&[
         "pipeline".into(),
-        format!("all-pairs n={n} k={k}"),
+        format!("all-pairs (arena) n={n} k={k}"),
+        fmt_duration(m.mean),
+        fmt_duration(m.p95),
+        format!("{:.2} Mpairs/s", m.throughput().unwrap() / 1e6),
+    ]);
+    let m = bench("pipeline/all_pairs_per_row", Some(pairs.len() as u64), || {
+        std::hint::black_box(pipeline.all_pairs_condensed_per_row());
+    });
+    table.row(&[
+        "pipeline".into(),
+        format!("all-pairs (per-row) n={n} k={k}"),
         fmt_duration(m.mean),
         fmt_duration(m.p95),
         format!("{:.2} Mpairs/s", m.throughput().unwrap() / 1e6),

@@ -19,14 +19,25 @@ impl Histogram {
     }
 
     pub fn record_us(&self, us: u64) {
-        let bucket = (64 - us.leading_zeros()) as usize; // 0 → 0, 1 → 1, 2..3 → 2, …
-        self.buckets[bucket.min(39)].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.record_us_many(us, 1);
     }
 
     pub fn record(&self, dur: std::time::Duration) {
         self.record_us(dur.as_micros() as u64);
+    }
+
+    /// Record `n` identical samples in O(1) — the batched query path
+    /// logs its amortized per-item latency once per item this way, so
+    /// `count` stays consistent with the per-item counters without n
+    /// atomic round-trips.
+    pub fn record_us_many(&self, us: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let bucket = (64 - us.leading_zeros()) as usize; // 0 → 0, 1 → 1, 2..3 → 2, …
+        self.buckets[bucket.min(39)].fetch_add(n, Ordering::Relaxed);
+        self.count.fetch_add(n, Ordering::Relaxed);
+        self.sum_us.fetch_add(us * n, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
@@ -161,6 +172,21 @@ mod tests {
         }
         let q = h.quantile_us(0.5);
         assert!((100..=256).contains(&q), "q={q}"); // ≤ 2× overestimate
+    }
+
+    #[test]
+    fn bulk_record_matches_repeated() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for _ in 0..5 {
+            a.record_us(7);
+        }
+        b.record_us_many(7, 5);
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean_us(), b.mean_us());
+        assert_eq!(a.quantile_us(0.5), b.quantile_us(0.5));
+        b.record_us_many(100, 0); // no-op
+        assert_eq!(b.count(), 5);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::config::Config;
+use crate::core::arena::SketchArena;
 use crate::core::decompose::Decomposition;
 use crate::core::estimator;
 use crate::core::marginals::Moments;
@@ -329,22 +330,55 @@ impl Pipeline {
     }
 
     /// Batch of pair estimates (None for unknown ids).
+    ///
+    /// Large plain-estimator batches take the arena path: one columnar
+    /// snapshot of the store, then lock-free contiguous scoring —
+    /// cheaper than per-pair shard locking once the batch is big enough
+    /// to amortize the O(n·k) snapshot copy. Small batches and the MLE
+    /// mode stay on the per-pair path.
     pub fn estimate_pairs(&self, pairs: &[(u64, u64)]) -> Vec<Option<f64>> {
+        let big_batch = pairs.len() >= 32 && pairs.len() * 4 >= self.store.len();
+        if !self.cfg.use_mle && big_batch {
+            let t = Instant::now();
+            let snap = self.store.arena_snapshot(self.cfg.p, self.cfg.k);
+            let out: Vec<Option<f64>> = pairs
+                .iter()
+                .map(|&(a, b)| match (snap.pos.get(&a), snap.pos.get(&b)) {
+                    (Some(&i), Some(&j)) => Some(estimator::estimate_arena(
+                        &self.dec, &snap.arena, i, &snap.arena, j,
+                    )),
+                    _ => None,
+                })
+                .collect();
+            let served = out.iter().filter(|o| o.is_some()).count() as u64;
+            self.metrics.queries_served.fetch_add(served, Ordering::Relaxed);
+            // query_latency holds per-pair samples; log the batch's
+            // amortized per-pair cost once per served pair (bulk, O(1))
+            // so count stays consistent with queries_served and the
+            // percentiles remain comparable with the single-pair path.
+            if served > 0 {
+                let per_pair_us = (t.elapsed().as_micros() as u64).div_ceil(served).max(1);
+                self.metrics.query_latency.record_us_many(per_pair_us, served);
+            }
+            return out;
+        }
         pairs.iter().map(|&(a, b)| self.estimate_pair(a, b)).collect()
     }
 
-    /// All pairwise estimates over ids `0..n` (condensed upper-triangle
-    /// order, matching [`crate::baselines::exact::condensed_index`]).
+    /// All pairwise estimates over the stored ids, ascending (condensed
+    /// upper-triangle order, matching
+    /// [`crate::baselines::exact::condensed_index`]).
     ///
-    /// Takes the PJRT estimate artifact (blocked MXU GEMMs) when
-    /// available and the plain estimator is requested; otherwise the
-    /// pure-rust path, parallelized over `workers`.
+    /// Backend preference for the plain estimator: the PJRT estimate
+    /// artifact (blocked MXU GEMMs) when available, else the cache-tiled
+    /// pure-rust arena kernel sharded over `cfg.workers`. The margin-MLE
+    /// mode uses the per-row path (the arena stores only what the plain
+    /// combine needs).
     pub fn all_pairs_condensed(&self) -> Vec<f64> {
         let ids = self.store.ids();
         let n = ids.len();
-        let mut out = vec![0.0f64; n * (n - 1) / 2];
         if n < 2 {
-            return out;
+            return Vec::new();
         }
         // Snapshot sketches once to avoid per-pair locking.
         let rows: Vec<RowSketch> = ids.iter().map(|&id| self.store.get(id).unwrap()).collect();
@@ -353,6 +387,7 @@ impl Pipeline {
                 if let Some(meta) =
                     pjrt.handle.manifest().find_estimate(self.cfg.p, self.cfg.k).cloned()
                 {
+                    let mut out = vec![0.0f64; n * (n - 1) / 2];
                     if let Ok(()) = self.all_pairs_pjrt(&rows, &meta, &mut out) {
                         self.metrics
                             .queries_served
@@ -361,27 +396,51 @@ impl Pipeline {
                     }
                 }
             }
+            let arena = SketchArena::from_rows(self.cfg.p, self.cfg.k, &rows);
+            let out = estimator::estimate_condensed_arena(
+                &self.dec,
+                &arena,
+                self.cfg.workers.max(1),
+            );
+            self.metrics
+                .queries_served
+                .fetch_add((n * (n - 1) / 2) as u64, Ordering::Relaxed);
+            return out;
         }
+        self.per_row_condensed(&rows)
+    }
+
+    /// Reference per-row all-pairs path (one `estimate`/`estimate_mle`
+    /// call per pair, row-sharded across workers). Kept as the oracle
+    /// and baseline the arena kernel is benchmarked against (E7,
+    /// `benches/hotpath.rs`); also serves the MLE mode.
+    pub fn all_pairs_condensed_per_row(&self) -> Vec<f64> {
+        let ids = self.store.ids();
+        if ids.len() < 2 {
+            return Vec::new();
+        }
+        let rows: Vec<RowSketch> = ids.iter().map(|&id| self.store.get(id).unwrap()).collect();
+        self.per_row_condensed(&rows)
+    }
+
+    fn per_row_condensed(&self, rows: &[RowSketch]) -> Vec<f64> {
+        let n = rows.len();
+        let mut out = vec![0.0f64; n * (n - 1) / 2];
         let workers = self.cfg.workers.max(1);
-        let chunks: Vec<&mut [f64]> = {
+        let chunks: Vec<(usize, &mut [f64])> = {
             // Split the condensed buffer by row ranges.
             let mut parts = Vec::new();
             let mut rest: &mut [f64] = &mut out;
             for i in 0..n - 1 {
                 let len = n - 1 - i;
                 let (head, tail) = rest.split_at_mut(len);
-                parts.push(head);
+                parts.push((i, head));
                 rest = tail;
             }
             parts
         };
         std::thread::scope(|scope| {
-            let rows = &rows;
-            let mut row_chunks: Vec<Vec<(usize, &mut [f64])>> = (0..workers).map(|_| Vec::new()).collect();
-            for (i, chunk) in chunks.into_iter().enumerate() {
-                row_chunks[i % workers].push((i, chunk));
-            }
-            for assigned in row_chunks {
+            for assigned in estimator::round_robin(chunks, workers) {
                 let dec = &self.dec;
                 let use_mle = self.cfg.use_mle;
                 scope.spawn(move || {
@@ -618,6 +677,54 @@ mod tests {
                 assert!((all[idx] - single).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn all_pairs_arena_matches_per_row_reference() {
+        let c = cfg(30, 64);
+        let data = gen::generate(DataDist::Gaussian, 30, 64, 15);
+        let p = Pipeline::new(c).unwrap();
+        p.ingest(&data).unwrap();
+        let arena = p.all_pairs_condensed();
+        let per_row = p.all_pairs_condensed_per_row();
+        assert_eq!(arena.len(), per_row.len());
+        for (a, b) in arena.iter().zip(&per_row) {
+            assert!((a - b).abs() <= 1e-12 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn all_pairs_on_tiny_stores_is_empty_not_a_panic() {
+        let c = cfg(5, 32);
+        let p = Pipeline::new(c.clone()).unwrap();
+        // Nothing ingested: n = 0.
+        assert!(p.all_pairs_condensed().is_empty());
+        assert!(p.all_pairs_condensed_per_row().is_empty());
+        // One row: no pairs.
+        let data = gen::generate(DataDist::Uniform01, 1, 32, 8);
+        p.ingest(&data).unwrap();
+        assert!(p.all_pairs_condensed().is_empty());
+    }
+
+    #[test]
+    fn batched_pairs_match_single_queries() {
+        let c = cfg(40, 64);
+        let data = gen::generate(DataDist::Uniform01, 40, 64, 9);
+        let p = Pipeline::new(c).unwrap();
+        p.ingest(&data).unwrap();
+        // Big batch (arena path), including unknown ids.
+        let mut pairs: Vec<(u64, u64)> = (0..40u64)
+            .flat_map(|i| (0..4u64).map(move |j| (i, (i * 3 + j + 1) % 40)))
+            .collect();
+        pairs.push((0, 999)); // unknown
+        pairs.push((999, 1)); // unknown
+        let batched = p.estimate_pairs(&pairs);
+        for (&(a, b), got) in pairs.iter().zip(&batched) {
+            assert_eq!(*got, p.estimate_pair(a, b), "pair ({a},{b})");
+        }
+        // Small batch (per-pair path) agrees too.
+        let small = p.estimate_pairs(&pairs[..3]);
+        assert_eq!(small, batched[..3].to_vec());
     }
 
     #[test]

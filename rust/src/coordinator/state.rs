@@ -9,11 +9,23 @@
 use std::collections::HashMap;
 use std::sync::RwLock;
 
+use crate::core::arena::SketchArena;
 use crate::projection::sketcher::RowSketch;
 
 /// Sharded row-id → sketch map.
 pub struct SketchStore {
     shards: Vec<RwLock<HashMap<u64, RowSketch>>>,
+}
+
+/// Result of [`SketchStore::arena_snapshot`]: the columnar arena plus
+/// both directions of the id ↔ arena-row mapping.
+pub struct ArenaSnapshot {
+    /// Row ids ascending; arena row `i` holds `ids[i]`.
+    pub ids: Vec<u64>,
+    /// id → arena row (the inverse of `ids`, built once here so batch
+    /// callers don't rebuild it).
+    pub pos: HashMap<u64, usize>,
+    pub arena: SketchArena,
 }
 
 impl SketchStore {
@@ -87,6 +99,40 @@ impl SketchStore {
             .sum()
     }
 
+    /// Columnar snapshot of the whole store: every row's sketches
+    /// transposed into a [`SketchArena`] (ids ascending, arena row i =
+    /// `ids[i]`, inverse map in `pos`). This is the view the pipeline's
+    /// blocked estimate / all-pairs export paths consume — one read
+    /// lock per shard, rows copied straight into the arena buffers (no
+    /// per-row clones, no per-pair locking on the hot path). `p`/`k`
+    /// come from the pipeline config (an empty store carries no shape
+    /// of its own).
+    pub fn arena_snapshot(&self, p: usize, k: usize) -> ArenaSnapshot {
+        let ids = self.ids();
+        let pos: HashMap<u64, usize> = ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        // Hold every shard's read lock together for a consistent copy
+        // (writers take exactly one shard lock, so no ordering cycle);
+        // sidedness is probed under the same guards. Rows inserted
+        // after the `ids()` pass are skipped; the store has no removal
+        // API, so every listed id is still present.
+        let guards: Vec<_> = self.shards.iter().map(|s| s.read().unwrap()).collect();
+        let two_sided = ids.first().is_some_and(|&id| {
+            guards[self.shard_of(id)]
+                .get(&id)
+                .is_some_and(|r| r.vside_data.is_some())
+        });
+        let arena = SketchArena::from_indexed(
+            p,
+            k,
+            ids.len(),
+            two_sided,
+            guards.iter().flat_map(|g| {
+                g.iter().filter_map(|(id, rs)| pos.get(id).map(|&i| (i, rs)))
+            }),
+        );
+        ArenaSnapshot { ids, pos, arena }
+    }
+
     /// All row ids, ascending (test/debug helper; takes all read locks).
     pub fn ids(&self) -> Vec<u64> {
         let mut ids: Vec<u64> = self
@@ -156,6 +202,31 @@ mod tests {
         assert_eq!(store.ids().len(), 200);
         assert_eq!(store.ids()[0], 0);
         assert_eq!(*store.ids().last().unwrap(), 199);
+    }
+
+    #[test]
+    fn arena_snapshot_mirrors_rows() {
+        let store = SketchStore::new(3);
+        for i in 0..7u64 {
+            store.insert(i * 2, sketch_of(i as f32 + 1.0)); // non-dense ids
+        }
+        let snap = store.arena_snapshot(4, 4);
+        assert_eq!(snap.ids, (0..7).map(|i| i * 2).collect::<Vec<u64>>());
+        assert_eq!(snap.arena.n(), 7);
+        for (pos, &id) in snap.ids.iter().enumerate() {
+            assert_eq!(snap.pos[&id], pos);
+            let rs = store.get(id).unwrap();
+            for m in 1..4 {
+                assert_eq!(snap.arena.u_row(m, pos), rs.uside.u(m), "id {id} m {m}");
+            }
+            assert_eq!(snap.arena.norm_p(pos), rs.moments.get(4));
+        }
+        // Empty store: well-shaped empty arena.
+        let empty = SketchStore::new(2);
+        let snap = empty.arena_snapshot(4, 4);
+        assert!(snap.ids.is_empty());
+        assert!(snap.pos.is_empty());
+        assert_eq!(snap.arena.n(), 0);
     }
 
     #[test]

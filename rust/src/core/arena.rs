@@ -1,0 +1,224 @@
+//! Columnar sketch arena — the structure-of-arrays mirror of a batch of
+//! [`RowSketch`]es, laid out for blocked (cache-tiled) estimation.
+//!
+//! Per-row sketches are ideal for streaming ingest (each worker owns its
+//! rows) but poor for the serving hot path: scoring a query against n
+//! rows chases n separate heap allocations and reloads the marginal
+//! moments per pair. The arena transposes that state into three dense
+//! buffers:
+//!
+//! ```text
+//! u      : orders × (n × k) f32   — order-major; block m holds every
+//!                                   row's u_m sketch contiguously
+//! v      : same layout (alternative strategy only; absent ⇒ u is both
+//!                                   sides, exactly like RowSketch::vside)
+//! norm_p : n f64                  — the marginal Σ x^p of each row
+//! ```
+//!
+//! With this layout the blocked kernels in [`crate::core::estimator`]
+//! (`estimate_block_arena`, `top_k_scan_arena`,
+//! `estimate_condensed_arena`) stream one order at a time through
+//! L1-sized row tiles, GEMM-style: a tile of query u_m rows is reused
+//! against a tile of target v_{p−m} rows before either leaves cache.
+//!
+//! The arena stores exactly what the *plain* estimator (§2.1/§2.2
+//! combine rule) needs. The margin MLE (Lemma 4) additionally consumes
+//! per-order norms and higher moments and stays on the per-row path.
+
+use crate::projection::sketcher::RowSketch;
+
+/// Columnar store of `n` rows' power sketches + marginal p-norms.
+#[derive(Clone, Debug)]
+pub struct SketchArena {
+    p: usize,
+    orders: usize,
+    k: usize,
+    n: usize,
+    /// Order-major u-side sketches: `u[((m-1)·n + i)·k ..][..k]` = u_m of row i.
+    u: Vec<f32>,
+    /// Order-major v-side sketches (alternative strategy); `None` ⇒ the
+    /// sides coincide (basic strategy), mirroring `RowSketch::vside()`.
+    v: Option<Vec<f32>>,
+    /// Marginal p-norms Σ x^p per row, f64.
+    norm_p: Vec<f64>,
+}
+
+impl SketchArena {
+    /// Build an arena from per-row sketches. `k` must be passed
+    /// explicitly so an empty row set still yields a well-shaped arena
+    /// (orders and k are not inferable from zero rows).
+    ///
+    /// Panics if any row disagrees on `k`, `orders`, or sidedness.
+    pub fn from_rows(p: usize, k: usize, rows: &[RowSketch]) -> Self {
+        let two_sided = rows.first().is_some_and(|r| r.vside_data.is_some());
+        Self::from_indexed(p, k, rows.len(), two_sided, rows.iter().enumerate())
+    }
+
+    /// Build an arena of `n` rows from `(position, row)` pairs in any
+    /// order — the store snapshot streams rows shard by shard, straight
+    /// into the arena buffers, with no intermediate per-row clones.
+    /// Every position in `[0, n)` must be supplied exactly once.
+    pub fn from_indexed<'a, I>(p: usize, k: usize, n: usize, two_sided: bool, rows: I) -> Self
+    where
+        I: IntoIterator<Item = (usize, &'a RowSketch)>,
+    {
+        let orders = p - 1;
+        let mut u = vec![0.0f32; orders * n * k];
+        let mut v = two_sided.then(|| vec![0.0f32; orders * n * k]);
+        let mut norm_p = vec![0.0f64; n];
+        let mut filled = 0usize;
+        for (i, rs) in rows {
+            assert!(i < n, "arena position {i} out of range (n={n})");
+            assert_eq!(rs.uside.k, k, "row {i}: sketch width mismatch");
+            assert_eq!(rs.uside.orders, orders, "row {i}: order count mismatch");
+            assert_eq!(
+                rs.vside_data.is_some(),
+                two_sided,
+                "row {i}: mixed one/two-sided rows"
+            );
+            for m in 1..=orders {
+                let off = ((m - 1) * n + i) * k;
+                u[off..off + k].copy_from_slice(rs.uside.u(m));
+                if let Some(vbuf) = v.as_mut() {
+                    vbuf[off..off + k]
+                        .copy_from_slice(rs.vside_data.as_ref().expect("two-sided").u(m));
+                }
+            }
+            norm_p[i] = rs.moments.get(p);
+            filled += 1;
+        }
+        assert_eq!(filled, n, "arena expects every position filled exactly once");
+        SketchArena { p, orders, k, n, u, v, norm_p }
+    }
+
+    /// Arena with zero rows (valid input to every kernel).
+    pub fn empty(p: usize, k: usize) -> Self {
+        Self::from_rows(p, k, &[])
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn orders(&self) -> usize {
+        self.orders
+    }
+
+    /// Whether separate v-side sketches are stored (alternative strategy).
+    pub fn is_two_sided(&self) -> bool {
+        self.v.is_some()
+    }
+
+    /// u_m sketch of row `i` (the left/query side of a pair).
+    #[inline]
+    pub fn u_row(&self, m: usize, i: usize) -> &[f32] {
+        debug_assert!(m >= 1 && m <= self.orders && i < self.n);
+        let off = ((m - 1) * self.n + i) * self.k;
+        &self.u[off..off + self.k]
+    }
+
+    /// v_m sketch of row `i` (the right/target side of a pair); falls
+    /// back to the u side under the basic strategy.
+    #[inline]
+    pub fn v_row(&self, m: usize, i: usize) -> &[f32] {
+        match &self.v {
+            Some(v) => {
+                debug_assert!(m >= 1 && m <= self.orders && i < self.n);
+                let off = ((m - 1) * self.n + i) * self.k;
+                &v[off..off + self.k]
+            }
+            None => self.u_row(m, i),
+        }
+    }
+
+    /// The contiguous `n × k` block of every row's u_m sketch.
+    pub fn u_order(&self, m: usize) -> &[f32] {
+        let off = (m - 1) * self.n * self.k;
+        &self.u[off..off + self.n * self.k]
+    }
+
+    /// Marginal p-norm Σ x^p of row `i`.
+    #[inline]
+    pub fn norm_p(&self, i: usize) -> f64 {
+        self.norm_p[i]
+    }
+
+    /// All marginal p-norms, row order.
+    pub fn norms(&self) -> &[f64] {
+        &self.norm_p
+    }
+
+    /// Payload bytes (storage accounting alongside `RowSketch::sketch_bytes`).
+    pub fn bytes(&self) -> usize {
+        let floats = self.u.len() + self.v.as_ref().map_or(0, |v| v.len());
+        floats * std::mem::size_of::<f32>() + self.norm_p.len() * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::sketcher::Sketcher;
+    use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+
+    fn sketch_rows(strategy: Strategy, p: usize, k: usize, n: usize) -> Vec<RowSketch> {
+        let sk = Sketcher::new(ProjectionSpec::new(7, k, ProjectionDist::Normal, strategy), p);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|i| (0..24).map(|t| ((i * 31 + t) as f32 * 0.11).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        sk.sketch_rows(&refs)
+    }
+
+    #[test]
+    fn arena_rows_match_per_row_sketches() {
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let (p, k, n) = (4, 8, 5);
+            let rows = sketch_rows(strategy, p, k, n);
+            let arena = SketchArena::from_rows(p, k, &rows);
+            assert_eq!(arena.n(), n);
+            assert_eq!(arena.is_two_sided(), matches!(strategy, Strategy::Alternative));
+            for (i, rs) in rows.iter().enumerate() {
+                for m in 1..p {
+                    assert_eq!(arena.u_row(m, i), rs.uside.u(m), "u m={m} i={i}");
+                    assert_eq!(arena.v_row(m, i), rs.vside().u(m), "v m={m} i={i}");
+                }
+                assert_eq!(arena.norm_p(i), rs.moments.get(p));
+            }
+        }
+    }
+
+    #[test]
+    fn order_blocks_are_contiguous() {
+        let rows = sketch_rows(Strategy::Basic, 4, 4, 3);
+        let arena = SketchArena::from_rows(4, 4, &rows);
+        let block = arena.u_order(2);
+        assert_eq!(block.len(), 3 * 4);
+        assert_eq!(&block[4..8], arena.u_row(2, 1));
+    }
+
+    #[test]
+    fn empty_arena_is_well_shaped() {
+        let a = SketchArena::empty(6, 16);
+        assert_eq!(a.n(), 0);
+        assert_eq!(a.k(), 16);
+        assert_eq!(a.orders(), 5);
+        assert!(a.norms().is_empty());
+        assert_eq!(a.bytes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sketch width mismatch")]
+    fn rejects_inconsistent_k() {
+        let rows = sketch_rows(Strategy::Basic, 4, 8, 2);
+        SketchArena::from_rows(4, 16, &rows);
+    }
+}

@@ -6,7 +6,38 @@
 //! ```text
 //! d̂ = Σx^p + Σy^p + (1/k) Σ_{m=1}^{p-1} c_m ⟨u_m, v_{p-m}⟩
 //! ```
+//!
+//! ## Per-row vs arena (blocked) kernels
+//!
+//! [`estimate`] / [`estimate_block`] score one pair at a time from
+//! [`RowSketch`]es — fine for a single lookup, wasteful for batched
+//! serving (every pair re-walks scattered heap allocations). The
+//! `*_arena` kernels consume a [`SketchArena`] (structure-of-arrays, see
+//! `core::arena`) and tile the work cache-consciously:
+//!
+//! * queries are processed in [`ARENA_TILE`]-row tiles, each tile owned
+//!   by one worker thread (`std::thread::scope`, round-robin);
+//! * within a tile, targets stream in [`ARENA_TILE`]-row tiles and the
+//!   combine runs order-major (GEMM-style): for each order m the tile of
+//!   query u_m rows is re-used against the resident tile of target
+//!   v_{p−m} rows — one (TILE×k + TILE×k) working set per order, sized
+//!   for L1/L2;
+//! * accumulation is f64 throughout, in *exactly* the same operation
+//!   order as [`estimate`], so arena and per-row results agree bitwise
+//!   (tiling only reorders which pairs are computed when, never the
+//!   arithmetic within a pair).
+//!
+//! Three arena entry points: [`estimate_block_arena`] (dense B×n
+//! matrix), [`top_k_scan_arena`] (fused top-k: streams tiles through a
+//! bounded per-query heap without materializing B×n), and
+//! [`estimate_condensed_arena`] (upper-triangle all-pairs, scipy
+//! `squareform` order). All take a `workers` thread count; results are
+//! deterministic in it.
 
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::arena::SketchArena;
 use super::decompose::Decomposition;
 use crate::projection::sketcher::{RowSketch, SketchSet};
 
@@ -88,6 +119,288 @@ pub fn estimate_block(dec: &Decomposition, xs: &[RowSketch], ys: &[RowSketch]) -
             out.push(estimate(dec, x, y));
         }
     }
+    out
+}
+
+/// Rows per tile in the blocked arena kernels. 64 rows × k floats × 4 B
+/// is 16 KiB at k=64 — a query tile plus a target tile of one order fit
+/// comfortably in L1/L2 together.
+pub const ARENA_TILE: usize = 64;
+
+/// Single-pair estimate from arena rows: row `i` of `q` (u side) against
+/// row `j` of `t` (v side). Bitwise-identical to [`estimate`] on the
+/// corresponding [`RowSketch`]es.
+pub fn estimate_arena(dec: &Decomposition, q: &SketchArena, i: usize, t: &SketchArena, j: usize) -> f64 {
+    let p = dec.p();
+    let kf = q.k() as f64;
+    let mut d = q.norm_p(i) + t.norm_p(j);
+    for m in 1..p {
+        d += dec.coeff(m) * dot(q.u_row(m, i), t.v_row(p - m, j)) / kf;
+    }
+    d
+}
+
+/// Shape/compat checks shared by the arena kernels (skipped when either
+/// side is empty — an empty arena carries no usable k).
+fn check_arena_compat(dec: &Decomposition, q: &SketchArena, t: &SketchArena) {
+    assert_eq!(q.p(), dec.p(), "query arena p mismatch");
+    assert_eq!(t.p(), dec.p(), "target arena p mismatch");
+    assert_eq!(q.k(), t.k(), "arena sketch widths differ");
+}
+
+/// Score one (query-tile × target-tile) block into `out` with row stride
+/// `stride`: `out[r·stride + j2]` = d̂(q row i0+r, t row j0+j2).
+///
+/// The accumulation sequence per slot — marginal norms first, then the
+/// c_m·⟨u_m, v_{p−m}⟩/k terms in ascending m — matches [`estimate`]
+/// exactly, so every downstream arena kernel is bitwise-consistent with
+/// the per-row path.
+#[allow(clippy::too_many_arguments)]
+fn score_tile(
+    dec: &Decomposition,
+    q: &SketchArena,
+    t: &SketchArena,
+    i0: usize,
+    rows: usize,
+    j0: usize,
+    width: usize,
+    out: &mut [f64],
+    stride: usize,
+) {
+    let p = dec.p();
+    let kf = q.k() as f64;
+    for r in 0..rows {
+        let base = q.norm_p(i0 + r);
+        let row = &mut out[r * stride..r * stride + width];
+        for (j2, slot) in row.iter_mut().enumerate() {
+            *slot = base + t.norm_p(j0 + j2);
+        }
+    }
+    for m in 1..p {
+        let c = dec.coeff(m);
+        let pm = p - m;
+        for r in 0..rows {
+            let urow = q.u_row(m, i0 + r);
+            let row = &mut out[r * stride..r * stride + width];
+            for (j2, slot) in row.iter_mut().enumerate() {
+                *slot += c * dot(urow, t.v_row(pm, j0 + j2)) / kf;
+            }
+        }
+    }
+}
+
+/// Round-robin assignment of work items to at most `ways` buckets.
+/// Empty buckets are dropped so callers never spawn idle threads.
+pub(crate) fn round_robin<T>(items: Vec<T>, ways: usize) -> Vec<Vec<T>> {
+    let ways = ways.max(1);
+    let mut parts: Vec<Vec<T>> = (0..ways).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        parts[i % ways].push(item);
+    }
+    parts.retain(|p| !p.is_empty());
+    parts
+}
+
+/// Run one closure per bundle: inline on the caller thread when there is
+/// a single bundle (a point query must not pay a thread spawn), scoped
+/// threads otherwise.
+fn run_bundles<T, F>(mut bundles: Vec<Vec<T>>, work: F)
+where
+    T: Send,
+    F: Fn(Vec<T>) + Sync,
+{
+    if bundles.len() == 1 {
+        work(bundles.pop().expect("one bundle"));
+        return;
+    }
+    std::thread::scope(|scope| {
+        let work = &work;
+        for bundle in bundles {
+            scope.spawn(move || work(bundle));
+        }
+    });
+}
+
+/// Blocked dense estimate matrix (row-major `q.n() × t.n()`) from two
+/// arenas — the cache-tiled, multi-threaded mirror of
+/// [`estimate_block`]. Results are bitwise-identical to the per-row path
+/// and independent of `workers`.
+pub fn estimate_block_arena(
+    dec: &Decomposition,
+    q: &SketchArena,
+    t: &SketchArena,
+    workers: usize,
+) -> Vec<f64> {
+    let (bn, tn) = (q.n(), t.n());
+    let mut out = vec![0.0f64; bn * tn];
+    if bn == 0 || tn == 0 {
+        return out;
+    }
+    check_arena_compat(dec, q, t);
+    let tiles: Vec<(usize, &mut [f64])> = out.chunks_mut(ARENA_TILE * tn).enumerate().collect();
+    run_bundles(round_robin(tiles, workers), |bundle| {
+        for (ti, chunk) in bundle {
+            let i0 = ti * ARENA_TILE;
+            let rows = chunk.len() / tn;
+            let mut j0 = 0;
+            while j0 < tn {
+                let width = ARENA_TILE.min(tn - j0);
+                score_tile(dec, q, t, i0, rows, j0, width, &mut chunk[j0..], tn);
+                j0 += width;
+            }
+        }
+    });
+    out
+}
+
+/// Max-heap entry ordered by (distance, index); the root is the worst
+/// retained candidate.
+struct HeapEntry {
+    d: f64,
+    idx: usize,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.d.total_cmp(&other.d).then_with(|| self.idx.cmp(&other.idx))
+    }
+}
+
+/// Push into a bounded max-heap, dropping NaN scores outright.
+fn push_bounded(heap: &mut BinaryHeap<HeapEntry>, cap: usize, idx: usize, d: f64) {
+    if d.is_nan() {
+        return;
+    }
+    let entry = HeapEntry { d, idx };
+    if heap.len() < cap {
+        heap.push(entry);
+    } else if let Some(worst) = heap.peek() {
+        if entry.cmp(worst) == Ordering::Less {
+            heap.pop();
+            heap.push(entry);
+        }
+    }
+}
+
+/// Fused top-k scan: for every query row, the `top` nearest target rows
+/// by estimated distance, ascending (ties broken by target index).
+///
+/// Target tiles stream through a bounded per-query heap, so memory is
+/// O(B·(top + TILE)) instead of the O(B·n) a materialize-then-select
+/// pass would need. NaN scores are filtered (never returned, never
+/// panic). Deterministic in `workers`.
+pub fn top_k_scan_arena(
+    dec: &Decomposition,
+    q: &SketchArena,
+    t: &SketchArena,
+    top: usize,
+    workers: usize,
+) -> Vec<Vec<(usize, f64)>> {
+    let (bn, tn) = (q.n(), t.n());
+    let mut out: Vec<Vec<(usize, f64)>> = (0..bn).map(|_| Vec::new()).collect();
+    if bn == 0 || tn == 0 || top == 0 {
+        return out;
+    }
+    check_arena_compat(dec, q, t);
+    let tiles: Vec<(usize, &mut [Vec<(usize, f64)>])> =
+        out.chunks_mut(ARENA_TILE).enumerate().collect();
+    run_bundles(round_robin(tiles, workers), |bundle| {
+        let mut buf = vec![0.0f64; ARENA_TILE * ARENA_TILE];
+        for (ti, slots) in bundle {
+            let i0 = ti * ARENA_TILE;
+            let rows = slots.len();
+            let mut heaps: Vec<BinaryHeap<HeapEntry>> =
+                (0..rows).map(|_| BinaryHeap::with_capacity(top + 1)).collect();
+            let mut j0 = 0;
+            while j0 < tn {
+                let width = ARENA_TILE.min(tn - j0);
+                score_tile(dec, q, t, i0, rows, j0, width, &mut buf, width);
+                for (r, heap) in heaps.iter_mut().enumerate() {
+                    for j2 in 0..width {
+                        push_bounded(heap, top, j0 + j2, buf[r * width + j2]);
+                    }
+                }
+                j0 += width;
+            }
+            for (slot, heap) in slots.iter_mut().zip(heaps) {
+                *slot = heap
+                    .into_sorted_vec()
+                    .into_iter()
+                    .map(|e| (e.idx, e.d))
+                    .collect();
+            }
+        }
+    });
+    out
+}
+
+/// Blocked all-pairs over one arena, condensed upper-triangle order
+/// (matching [`crate::baselines::exact::condensed_index`]). Row tiles
+/// own contiguous condensed regions, so workers write disjoint slices.
+pub fn estimate_condensed_arena(
+    dec: &Decomposition,
+    a: &SketchArena,
+    workers: usize,
+) -> Vec<f64> {
+    let n = a.n();
+    if n < 2 {
+        return Vec::new();
+    }
+    check_arena_compat(dec, a, a);
+    let mut out = vec![0.0f64; n * (n - 1) / 2];
+    let mut regions: Vec<(usize, &mut [f64])> = Vec::new();
+    {
+        // Rows [i0, i1) own condensed [base(i0), base(i1)) — contiguous.
+        let mut rest: &mut [f64] = &mut out;
+        let mut i0 = 0;
+        while i0 < n - 1 {
+            let i1 = (i0 + ARENA_TILE).min(n - 1);
+            let len = crate::baselines::exact::condensed_base(n, i1)
+                - crate::baselines::exact::condensed_base(n, i0);
+            let (head, tail) = rest.split_at_mut(len);
+            regions.push((i0, head));
+            rest = tail;
+            i0 = i1;
+        }
+    }
+    run_bundles(round_robin(regions, workers), |bundle| {
+        let mut buf = vec![0.0f64; ARENA_TILE * ARENA_TILE];
+        for (i0, region) in bundle {
+            let i1 = (i0 + ARENA_TILE).min(n - 1);
+            let rows = i1 - i0;
+            let base0 = crate::baselines::exact::condensed_base(n, i0);
+            let mut j0 = i0 + 1;
+            while j0 < n {
+                let width = ARENA_TILE.min(n - j0);
+                score_tile(dec, a, a, i0, rows, j0, width, &mut buf, width);
+                for r in 0..rows {
+                    let i = i0 + r;
+                    let row_off = crate::baselines::exact::condensed_base(n, i) - base0;
+                    for j2 in 0..width {
+                        let j = j0 + j2;
+                        if j > i {
+                            region[row_off + j - i - 1] = buf[r * width + j2];
+                        }
+                    }
+                }
+                j0 += width;
+            }
+        }
+    });
     out
 }
 
@@ -237,5 +550,151 @@ mod tests {
             w.push(estimate(&dec, &out[0], &out[1]));
         }
         assert!(w.z_against(0.0).abs() < 4.5, "mean={} sem={}", w.mean(), w.sem());
+    }
+
+    // ---- arena kernels -------------------------------------------------
+
+    use crate::core::arena::SketchArena;
+
+    fn sketch_batch(strategy: Strategy, p: usize, k: usize, n: usize, seed: u64) -> Vec<RowSketch> {
+        let sk = Sketcher::new(ProjectionSpec::new(seed, k, ProjectionDist::Normal, strategy), p);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|i| (0..20).map(|t| ((i * 37 + t) as f32 * 0.13).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        sk.sketch_rows(&refs)
+    }
+
+    fn assert_close(a: f64, b: f64, ctx: &str) {
+        assert!(
+            (a - b).abs() <= 1e-12 * b.abs().max(1.0),
+            "{ctx}: {a} vs {b}"
+        );
+    }
+
+    #[test]
+    fn arena_block_matches_per_row_across_strategies_and_p() {
+        // Cross the tile boundary (n > ARENA_TILE) and leave a ragged
+        // tail (n not a multiple of the tile).
+        let n = ARENA_TILE + 7;
+        let bq = 9;
+        for (strategy, p) in [
+            (Strategy::Basic, 4),
+            (Strategy::Alternative, 4),
+            (Strategy::Basic, 6),
+            (Strategy::Alternative, 6),
+        ] {
+            let rows = sketch_batch(strategy, p, 8, n, 3);
+            let dec = Decomposition::new(p).unwrap();
+            let tarena = SketchArena::from_rows(p, 8, &rows);
+            let qarena = SketchArena::from_rows(p, 8, &rows[..bq]);
+            let want = estimate_block(&dec, &rows[..bq], &rows);
+            let got = estimate_block_arena(&dec, &qarena, &tarena, 3);
+            assert_eq!(got.len(), want.len());
+            for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_close(*g, *w, &format!("{strategy:?} p={p} idx={idx}"));
+            }
+            // Single-pair arena accessor agrees too.
+            assert_close(
+                estimate_arena(&dec, &qarena, 2, &tarena, n - 1),
+                estimate(&dec, &rows[2], &rows[n - 1]),
+                "estimate_arena",
+            );
+        }
+    }
+
+    #[test]
+    fn arena_topk_matches_sorted_per_row_scores() {
+        let n = 2 * ARENA_TILE + 13;
+        let rows = sketch_batch(Strategy::Basic, 4, 8, n, 5);
+        let dec = Decomposition::new(4).unwrap();
+        let tarena = SketchArena::from_rows(4, 8, &rows);
+        let qarena = SketchArena::from_rows(4, 8, &rows[..4]);
+        let top = 10;
+        let got = top_k_scan_arena(&dec, &qarena, &tarena, top, 2);
+        assert_eq!(got.len(), 4);
+        for (qi, lst) in got.iter().enumerate() {
+            let mut scored: Vec<(usize, f64)> = rows
+                .iter()
+                .enumerate()
+                .map(|(j, r)| (j, estimate(&dec, &rows[qi], r)))
+                .collect();
+            scored.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+            scored.truncate(top);
+            assert_eq!(lst.len(), top);
+            for (g, w) in lst.iter().zip(&scored) {
+                assert_eq!(g.0, w.0, "query {qi}");
+                assert_close(g.1, w.1, &format!("query {qi} target {}", g.0));
+            }
+        }
+    }
+
+    #[test]
+    fn arena_condensed_matches_pairwise() {
+        let n = ARENA_TILE + 21;
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let rows = sketch_batch(strategy, 4, 8, n, 9);
+            let dec = Decomposition::new(4).unwrap();
+            let arena = SketchArena::from_rows(4, 8, &rows);
+            let got = estimate_condensed_arena(&dec, &arena, 3);
+            assert_eq!(got.len(), n * (n - 1) / 2);
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let idx = crate::baselines::exact::condensed_index(n, i, j);
+                    assert_close(
+                        got[idx],
+                        estimate(&dec, &rows[i], &rows[j]),
+                        &format!("{strategy:?} pair ({i},{j})"),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_kernels_are_worker_count_invariant() {
+        let n = ARENA_TILE * 2 + 3;
+        let rows = sketch_batch(Strategy::Basic, 4, 8, n, 11);
+        let dec = Decomposition::new(4).unwrap();
+        let arena = SketchArena::from_rows(4, 8, &rows);
+        let q = SketchArena::from_rows(4, 8, &rows[..6]);
+        assert_eq!(
+            estimate_block_arena(&dec, &q, &arena, 1),
+            estimate_block_arena(&dec, &q, &arena, 5)
+        );
+        assert_eq!(
+            top_k_scan_arena(&dec, &q, &arena, 7, 1),
+            top_k_scan_arena(&dec, &q, &arena, 7, 5)
+        );
+        assert_eq!(
+            estimate_condensed_arena(&dec, &arena, 1),
+            estimate_condensed_arena(&dec, &arena, 5)
+        );
+    }
+
+    #[test]
+    fn arena_edge_shapes_are_nan_free() {
+        let dec = Decomposition::new(4).unwrap();
+        let rows1 = sketch_batch(Strategy::Basic, 4, 8, 1, 13);
+        let one = SketchArena::from_rows(4, 8, &rows1);
+        let empty = SketchArena::empty(4, 8);
+
+        // n = 0 on either side: empty outputs, no panic, no NaN.
+        assert!(estimate_block_arena(&dec, &empty, &one, 2).is_empty());
+        assert!(estimate_block_arena(&dec, &one, &empty, 2).iter().all(|v| !v.is_nan()));
+        assert_eq!(estimate_block_arena(&dec, &one, &empty, 2).len(), 0);
+        assert!(top_k_scan_arena(&dec, &empty, &one, 5, 2).is_empty());
+        let lists = top_k_scan_arena(&dec, &one, &empty, 5, 2);
+        assert_eq!(lists.len(), 1);
+        assert!(lists[0].is_empty());
+        assert!(estimate_condensed_arena(&dec, &empty, 2).is_empty());
+        // n = 1: a 1×1 block, an empty condensed triangle.
+        let block = estimate_block_arena(&dec, &one, &one, 2);
+        assert_eq!(block.len(), 1);
+        assert!(!block[0].is_nan());
+        assert!(estimate_condensed_arena(&dec, &one, 2).is_empty());
+        // top = 0: empty lists, not a panic.
+        let lists = top_k_scan_arena(&dec, &one, &one, 0, 2);
+        assert!(lists[0].is_empty());
     }
 }

@@ -1,6 +1,7 @@
 //! The paper's estimation theory: decomposition, estimators, margin MLE,
 //! variance formulas (Lemmas 1–6), and supporting numerics.
 
+pub mod arena;
 pub mod cubic;
 pub mod decompose;
 pub mod estimator;

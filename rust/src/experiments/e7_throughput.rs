@@ -21,7 +21,12 @@ pub struct RowResult {
     pub d: usize,
     pub exact_s: f64,
     pub ingest_s: f64,
+    /// All-pairs wall-clock on the blocked arena path.
     pub pairs_s: f64,
+    /// All-pairs wall-clock on the per-row reference path.
+    pub pairs_per_row_s: f64,
+    /// Max |arena − per-row| over all pairs (must be fp-noise).
+    pub arena_abs_diff: f64,
     pub storage_ratio: f64,
     pub pair_speedup: f64,
 }
@@ -48,12 +53,23 @@ pub fn sweep(n: usize, k: usize, ds: &[usize], workers: usize) -> Vec<RowResult>
         let est = pipeline.all_pairs_condensed();
         let pairs_s = t2.elapsed().as_secs_f64();
         std::hint::black_box(&est);
+        let t3 = Instant::now();
+        let est_per_row = pipeline.all_pairs_condensed_per_row();
+        let pairs_per_row_s = t3.elapsed().as_secs_f64();
+        let arena_abs_diff = est
+            .iter()
+            .zip(&est_per_row)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        std::hint::black_box(&est_per_row);
 
         out.push(RowResult {
             d,
             exact_s,
             ingest_s,
             pairs_s,
+            pairs_per_row_s,
+            arena_abs_diff,
             storage_ratio: report.data_bytes as f64 / report.sketch_bytes as f64,
             pair_speedup: exact_s / pairs_s,
         });
@@ -70,7 +86,15 @@ pub fn run(fast: bool) -> Vec<Acceptance> {
     };
     let rows = sweep(n, k, &ds, workers);
     let mut table = Table::new(&[
-        "D", "exact_s", "ingest_s", "est_pairs_s", "pair_speedup", "D/k", "storage_ratio",
+        "D",
+        "exact_s",
+        "ingest_s",
+        "est_pairs_s",
+        "per_row_s",
+        "arena_gain",
+        "pair_speedup",
+        "D/k",
+        "storage_ratio",
     ]);
     for r in &rows {
         table.row(&[
@@ -78,6 +102,8 @@ pub fn run(fast: bool) -> Vec<Acceptance> {
             format!("{:.3}", r.exact_s),
             format!("{:.3}", r.ingest_s),
             format!("{:.3}", r.pairs_s),
+            format!("{:.3}", r.pairs_per_row_s),
+            format!("{:.1}x", r.pairs_per_row_s / r.pairs_s.max(1e-12)),
             format!("{:.1}x", r.pair_speedup),
             format!("{:.1}", r.d as f64 / k as f64),
             format!("{:.1}x", r.storage_ratio),
@@ -114,6 +140,23 @@ pub fn run(fast: bool) -> Vec<Acceptance> {
             last.ingest_s + last.pairs_s
         ),
     ));
+    // Arena kernel: identical results (fp noise at most) and not slower
+    // than the per-row reference (lenient bound — timing on shared CI
+    // boxes wobbles; hotpath.rs carries the strict ≥3× measurement).
+    let max_diff = rows.iter().map(|r| r.arena_abs_diff).fold(0.0f64, f64::max);
+    acc.push(Acceptance::check(
+        "arena all-pairs matches per-row results",
+        max_diff < 1e-9,
+        format!("max |Δ| = {max_diff:.3e}"),
+    ));
+    acc.push(Acceptance::check(
+        "arena all-pairs within 2x of per-row (timing, lenient)",
+        last.pairs_per_row_s / last.pairs_s.max(1e-12) > 0.5,
+        format!(
+            "arena {:.3}s vs per-row {:.3}s",
+            last.pairs_s, last.pairs_per_row_s
+        ),
+    ));
     acc
 }
 
@@ -128,7 +171,11 @@ mod tests {
         // the structural ones (speedup growth + storage) to hold.
         let structural: Vec<_> = acc
             .iter()
-            .filter(|a| a.label.contains("storage") || a.label.contains("grows"))
+            .filter(|a| {
+                a.label.contains("storage")
+                    || a.label.contains("grows")
+                    || a.label.contains("matches")
+            })
             .collect();
         assert!(structural.iter().all(|a| a.ok), "{structural:?}");
     }

@@ -1,6 +1,9 @@
 //! E8 — intro use-case: nearest-neighbor search under l_4 on TF vectors.
 //! recall@10 vs sketch width k, with and without exact re-ranking, plus
-//! the coordinate-sampling baseline at matched storage.
+//! the coordinate-sampling baseline at matched storage and the
+//! arena-batch vs per-row query-path comparison.
+
+use std::time::Instant;
 
 use crate::baselines::sampling::{self, CoordSampler};
 use crate::bench_support::Table;
@@ -27,6 +30,8 @@ pub fn run(fast: bool) -> Vec<Acceptance> {
     ]);
     let mut acc = Vec::new();
     let mut recalls = Vec::new();
+    let qs: Vec<Vec<f32>> = (0..queries).map(|qi| data.row((qi * 13) % n).to_vec()).collect();
+    let mut last_idx: Option<KnnIndex> = None;
     for &k in &ks {
         let mut idx = KnnIndex::build(
             &data,
@@ -39,18 +44,18 @@ pub fn run(fast: bool) -> Vec<Acceptance> {
         let coord_index: Vec<_> = (0..n).map(|i| sampler.sample(data.row(i))).collect();
         let (mut r_plain, mut r_mle, mut r_rerank, mut r_coord) = (0.0, 0.0, 0.0, 0.0);
         for qi in 0..queries {
-            let q = data.row((qi * 13) % n).to_vec();
-            let truth = exact_knn(&data, &q, m, p);
+            let q = &qs[qi];
+            let truth = exact_knn(&data, q, m, p);
             idx.use_mle = false;
-            r_plain += recall(&idx.query(&q, m), &truth);
+            r_plain += recall(&idx.query(q, m), &truth);
             // Lemma 4 margin MLE: on non-negative TF rows the margins are
             // highly informative — this is the paper's own fix for the
             // plain estimator's noise (E4) applied to the use-case.
             idx.use_mle = true;
-            r_mle += recall(&idx.query(&q, m), &truth);
-            r_rerank += recall(&idx.query_rerank(&data, &q, m, pool), &truth);
+            r_mle += recall(&idx.query(q, m), &truth);
+            r_rerank += recall(&idx.query_rerank(&data, q, m, pool), &truth);
             // Coordinate-sampling candidate ranking at matched storage.
-            let qs = sampler.sample(&q);
+            let qs = sampler.sample(q);
             let mut scored: Vec<(usize, f64)> = (0..n)
                 .map(|i| (i, sampling::estimate(&qs, &coord_index[i], p)))
                 .collect();
@@ -70,8 +75,38 @@ pub fn run(fast: bool) -> Vec<Acceptance> {
             format!("{:.3}", r_coord / qn),
         ]);
         recalls.push((k, r_plain / qn, r_rerank / qn, r_coord / qn, r_mle / qn));
+        idx.use_mle = false;
+        last_idx = Some(idx);
     }
     table.print();
+
+    // Arena-batch vs per-row query path at the largest k: one batched
+    // arena scan over every query vs a per-query per-row scoring loop —
+    // identical result sets, measurably cheaper.
+    let idx = last_idx.expect("at least one k swept");
+    let qrefs: Vec<&[f32]> = qs.iter().map(|v| v.as_slice()).collect();
+    let t0 = Instant::now();
+    let batch = idx.query_batch(&qrefs, m);
+    let batch_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let per_row: Vec<_> = qrefs.iter().map(|q| idx.query_per_row(q, m)).collect();
+    let per_row_s = t1.elapsed().as_secs_f64();
+    let mut result_diff = 0usize;
+    for (a, b) in batch.iter().zip(&per_row) {
+        if a.len() != b.len()
+            || a.iter().zip(b).any(|(x, y)| {
+                x.index != y.index
+                    || (x.distance - y.distance).abs() > 1e-12 * y.distance.abs().max(1.0)
+            })
+        {
+            result_diff += 1;
+        }
+    }
+    println!(
+        "arena batch: {queries} queries in {batch_s:.3}s vs per-row loop {per_row_s:.3}s \
+         ({:.1}x)",
+        per_row_s / batch_s.max(1e-12)
+    );
 
     let first = recalls.first().unwrap();
     let last = recalls.last().unwrap();
@@ -94,6 +129,11 @@ pub fn run(fast: bool) -> Vec<Acceptance> {
         "mle+rerank recall ≥ 0.85 at largest k (10% pool)",
         last.2 >= 0.85,
         format!("{:.3}", last.2),
+    ));
+    acc.push(Acceptance::check(
+        "arena batch matches per-row query results",
+        result_diff == 0,
+        format!("{result_diff}/{queries} queries differ"),
     ));
     // The coord-sample column is informational: with a *shared* index
     // set, sampling ranks by the exact distance restricted to a random

@@ -9,9 +9,28 @@
 //! 2. **Re-ranking (optional)** — recompute exact distances for the top
 //!    `rerank` candidates with a linear scan over just those rows.
 //!
+//! ## Index layout and the blocked query path
+//!
+//! The index keeps its sketches twice:
+//! * a [`SketchArena`] — columnar (order-major `orders × (n × k)`)
+//!   storage the plain-estimator queries run on. [`KnnIndex::query`] and
+//!   [`KnnIndex::query_batch`] route through
+//!   [`estimator::top_k_scan_arena`]: target rows stream in
+//!   cache-sized tiles through a bounded per-query heap, and query
+//!   batches are sharded across `workers` threads via
+//!   `std::thread::scope`. Scores are bitwise-identical to the per-row
+//!   reference path ([`KnnIndex::query_per_row`]).
+//! * the per-row [`RowSketch`]es — kept for the margin-MLE scoring mode
+//!   (`use_mle`), which consumes per-order norms and higher moments the
+//!   arena does not store.
+//!
+//! NaN scores (malformed input rows) are filtered, never returned; an
+//! empty index returns empty neighbor lists rather than panicking.
+//!
 //! E8 measures recall@m vs sketch width k, with and without re-ranking,
-//! against exact ground truth.
+//! against exact ground truth, plus the arena-vs-per-row batch timing.
 
+use crate::core::arena::SketchArena;
 use crate::core::decompose::Decomposition;
 use crate::core::estimator;
 use crate::core::mle::{self, Solve};
@@ -20,12 +39,23 @@ use crate::projection::sketcher::{RowSketch, Sketcher};
 use crate::projection::ProjectionSpec;
 
 /// A built sketch index over a fixed row set.
+///
+/// Memory note: the sketches are held twice — per-row (the MLE path
+/// consumes per-order norms/moments the arena does not store, and
+/// `use_mle` may be toggled on at any time after build) and columnar.
+/// That doubles the O(nk) payload; an MLE-free, single-copy index is a
+/// follow-up once `use_mle` becomes a build-time choice.
 pub struct KnnIndex {
     dec: Decomposition,
     sketcher: Sketcher,
     rows: Vec<RowSketch>,
-    /// Use the margin MLE (Lemma 4) when scoring candidates.
+    arena: SketchArena,
+    /// Use the margin MLE (Lemma 4) when scoring candidates (per-row
+    /// scoring path; the arena kernels serve the plain estimator).
     pub use_mle: bool,
+    /// Threads used to shard batched queries (defaults to the machine's
+    /// available parallelism).
+    pub workers: usize,
 }
 
 /// One scored neighbor.
@@ -38,13 +68,17 @@ pub struct Neighbor {
 }
 
 impl KnnIndex {
-    /// Sketch every row of `data` (the index build = one linear scan).
+    /// Sketch every row of `data` (the index build = one linear scan)
+    /// and transpose the sketches into the columnar arena.
     pub fn build(data: &RowMatrix, spec: ProjectionSpec, p: usize) -> anyhow::Result<Self> {
         let dec = Decomposition::new(p)?;
+        let k = spec.k;
         let sketcher = Sketcher::new(spec, p);
         let refs: Vec<&[f32]> = (0..data.n()).map(|i| data.row(i)).collect();
         let rows = sketcher.sketch_rows(&refs);
-        Ok(KnnIndex { dec, sketcher, rows, use_mle: false })
+        let arena = SketchArena::from_rows(p, k, &rows);
+        let workers = std::thread::available_parallelism().map_or(1, |n| n.get());
+        Ok(KnnIndex { dec, sketcher, rows, arena, use_mle: false, workers })
     }
 
     pub fn len(&self) -> usize {
@@ -55,14 +89,49 @@ impl KnnIndex {
         self.rows.is_empty()
     }
 
-    /// Sketch bytes held by the index (the O(nk) storage claim).
+    /// Sketch bytes held by the index (the O(nk) storage claim): per-row
+    /// sketches plus the columnar arena mirror.
     pub fn bytes(&self) -> usize {
-        self.rows.iter().map(|r| r.sketch_bytes()).sum()
+        self.rows.iter().map(|r| r.sketch_bytes()).sum::<usize>() + self.arena.bytes()
     }
 
     /// Phase-1 query: top `m` candidates by estimated distance.
     pub fn query(&self, q: &[f32], m: usize) -> Vec<Neighbor> {
+        self.query_batch(&[q], m).pop().unwrap_or_default()
+    }
+
+    /// Batched phase-1 queries: sketch the whole batch at once, then run
+    /// the fused arena top-k scan sharded across `self.workers` threads.
+    /// Equivalent to calling [`KnnIndex::query_per_row`] per query
+    /// (bitwise-identical scores), but tiled and parallel.
+    pub fn query_batch(&self, qs: &[&[f32]], m: usize) -> Vec<Vec<Neighbor>> {
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        let qsk = self.sketcher.sketch_rows(qs);
+        if self.use_mle {
+            return qsk.iter().map(|qrow| self.scored_per_row(qrow, m)).collect();
+        }
+        let qarena = SketchArena::from_rows(self.dec.p(), self.sketcher.spec.k, &qsk);
+        estimator::top_k_scan_arena(&self.dec, &qarena, &self.arena, m, self.workers.max(1))
+            .into_iter()
+            .map(|lst| {
+                lst.into_iter()
+                    .map(|(index, distance)| Neighbor { index, distance, exact: false })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Reference per-row query path: score every stored row one pair at
+    /// a time, then select. Used by the MLE mode, by tests as the arena
+    /// oracle, and by E8/hotpath as the per-row baseline arm.
+    pub fn query_per_row(&self, q: &[f32], m: usize) -> Vec<Neighbor> {
         let qs = self.sketcher.sketch_row(q);
+        self.scored_per_row(&qs, m)
+    }
+
+    fn scored_per_row(&self, qs: &RowSketch, m: usize) -> Vec<Neighbor> {
         let mut scored: Vec<Neighbor> = self
             .rows
             .iter()
@@ -70,9 +139,9 @@ impl KnnIndex {
             .map(|(i, r)| Neighbor {
                 index: i,
                 distance: if self.use_mle {
-                    mle::estimate_mle(&self.dec, &qs, r, Solve::OneStepNewton)
+                    mle::estimate_mle(&self.dec, qs, r, Solve::OneStepNewton)
                 } else {
-                    estimator::estimate(&self.dec, &qs, r)
+                    estimator::estimate(&self.dec, qs, r)
                 },
                 exact: false,
             })
@@ -127,14 +196,25 @@ pub fn recall(got: &[Neighbor], truth: &[Neighbor]) -> f64 {
     hit as f64 / truth.len() as f64
 }
 
+/// Select the `m` nearest of `scored`, ascending by distance (ties by
+/// index). NaN distances are dropped, and empty/short inputs yield an
+/// empty/short list instead of panicking (`select_nth_unstable_by` on an
+/// empty slice, or `partial_cmp().unwrap()` on NaN, were both seed
+/// crashes here).
 fn top_m(scored: &mut Vec<Neighbor>, m: usize) -> Vec<Neighbor> {
+    scored.retain(|n| !n.distance.is_nan());
     let m = m.min(scored.len());
-    scored.select_nth_unstable_by(m.saturating_sub(1), |a, b| {
-        a.distance.partial_cmp(&b.distance).unwrap()
-    });
+    if m == 0 {
+        return Vec::new();
+    }
+    if m < scored.len() {
+        scored.select_nth_unstable_by(m - 1, |a, b| {
+            a.distance.total_cmp(&b.distance).then(a.index.cmp(&b.index))
+        });
+    }
     scored.truncate(m);
-    scored.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
-    scored.clone()
+    scored.sort_by(|a, b| a.distance.total_cmp(&b.distance).then(a.index.cmp(&b.index)));
+    std::mem::take(scored)
 }
 
 #[cfg(test)]
@@ -209,5 +289,81 @@ mod tests {
         let data = gen::generate(DataDist::Uniform01, 10, 16, 6);
         let truth = exact_knn(&data, data.row(0), 5, 4);
         assert_eq!(recall(&truth, &truth), 1.0);
+    }
+
+    #[test]
+    fn arena_query_matches_per_row_reference() {
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let data = gen::generate(DataDist::LogNormal { sigma: 1.0 }, 90, 64, 17);
+            let idx = KnnIndex::build(
+                &data,
+                ProjectionSpec::new(3, 24, ProjectionDist::Normal, strategy),
+                4,
+            )
+            .unwrap();
+            let q = data.row(5).to_vec();
+            let arena = idx.query(&q, 12);
+            let per_row = idx.query_per_row(&q, 12);
+            assert_eq!(arena.len(), per_row.len());
+            for (a, b) in arena.iter().zip(&per_row) {
+                assert_eq!(a.index, b.index, "{strategy:?}");
+                assert!((a.distance - b.distance).abs() <= 1e-12 * b.distance.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_query_matches_individual_queries() {
+        let data = gen::generate(DataDist::Uniform01, 70, 48, 19);
+        let idx = KnnIndex::build(&data, spec(16), 4).unwrap();
+        let qs: Vec<Vec<f32>> = (0..7).map(|i| data.row(i * 9).to_vec()).collect();
+        let refs: Vec<&[f32]> = qs.iter().map(|v| v.as_slice()).collect();
+        let batch = idx.query_batch(&refs, 5);
+        assert_eq!(batch.len(), 7);
+        for (q, got) in refs.iter().zip(&batch) {
+            assert_eq!(got, &idx.query(q, 5));
+        }
+    }
+
+    #[test]
+    fn empty_index_returns_empty_results() {
+        let data = RowMatrix::zeros(0, 16);
+        let idx = KnnIndex::build(&data, spec(8), 4).unwrap();
+        assert!(idx.is_empty());
+        let q = vec![1.0f32; 16];
+        assert!(idx.query(&q, 5).is_empty());
+        assert!(idx.query_per_row(&q, 5).is_empty());
+        assert!(idx.query_rerank(&data, &q, 5, 10).is_empty());
+        let mut mle_idx = KnnIndex::build(&data, spec(8), 4).unwrap();
+        mle_idx.use_mle = true;
+        assert!(mle_idx.query(&q, 5).is_empty());
+    }
+
+    #[test]
+    fn top_m_filters_nan_and_handles_short_inputs() {
+        let nb = |index, distance| Neighbor { index, distance, exact: false };
+        // Empty input, any m.
+        assert!(top_m(&mut Vec::new(), 3).is_empty());
+        // NaNs dropped, remainder ordered, ties broken by index.
+        let mut scored = vec![
+            nb(0, f64::NAN),
+            nb(1, 2.0),
+            nb(2, 1.0),
+            nb(3, f64::NAN),
+            nb(4, 1.0),
+        ];
+        let got = top_m(&mut scored, 10);
+        assert_eq!(
+            got.iter().map(|n| n.index).collect::<Vec<_>>(),
+            vec![2, 4, 1]
+        );
+        // m = 0.
+        let mut scored = vec![nb(0, 1.0)];
+        assert!(top_m(&mut scored, 0).is_empty());
+        // m larger than the (post-filter) input.
+        let mut scored = vec![nb(0, f64::NAN), nb(1, 3.0)];
+        let got = top_m(&mut scored, 5);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].index, 1);
     }
 }

@@ -55,8 +55,13 @@ impl Welford {
     }
 
     /// Standard error of the mean.
+    ///
+    /// Convention: with fewer than two samples the SEM is undefined and
+    /// this returns `+∞` (no evidence about the spread yet) — it never
+    /// returns NaN. (The seed version returned `sqrt(0/1) = 0` at n = 1,
+    /// which made `z_against` blow up to ±∞ on a single sample.)
     pub fn sem(&self) -> f64 {
-        if self.n == 0 {
+        if self.n < 2 {
             f64::INFINITY
         } else {
             (self.sample_variance() / self.n as f64).sqrt()
@@ -64,14 +69,33 @@ impl Welford {
     }
 
     /// z statistic for H0: E[x] == mu0. |z| < ~3 accepts at MC scale.
+    ///
+    /// Convention, guarded so the result is never NaN:
+    /// * n < 2 — no evidence either way: returns 0.
+    /// * zero sample variance — returns 0 when the mean equals `mu0`
+    ///   exactly, ±∞ otherwise (a degenerate sample is infinitely
+    ///   inconsistent with any other mean).
     pub fn z_against(&self, mu0: f64) -> f64 {
-        (self.mean - mu0) / self.sem()
+        let diff = self.mean - mu0;
+        if self.n < 2 {
+            return 0.0;
+        }
+        let sem = self.sem();
+        if sem == 0.0 {
+            return if diff == 0.0 { 0.0 } else { f64::INFINITY.copysign(diff) };
+        }
+        diff / sem
     }
 }
 
 /// Percentile of a sample (linear interpolation); `q` in [0, 1].
+/// The input must already be sorted ascending (checked in debug builds).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     assert!(!sorted.is_empty());
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "percentile input must be sorted ascending"
+    );
     let pos = q * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -156,6 +180,26 @@ mod tests {
         }
         assert!(w.z_against(0.5).abs() < 4.0);
         assert!(w.z_against(0.6).abs() > 10.0);
+    }
+
+    #[test]
+    fn degenerate_samples_never_yield_nan() {
+        // n = 0 and n = 1: undefined SEM → ∞, z → 0 (no evidence).
+        let w = Welford::new();
+        assert_eq!(w.sem(), f64::INFINITY);
+        assert_eq!(w.z_against(3.0), 0.0);
+        let mut w = Welford::new();
+        w.push(1.5);
+        assert_eq!(w.sem(), f64::INFINITY);
+        assert_eq!(w.z_against(0.0), 0.0);
+        assert!(!w.z_against(1.5).is_nan());
+        // Zero variance at n >= 2: exact match → 0, mismatch → ±∞.
+        let mut w = Welford::new();
+        w.push(2.0);
+        w.push(2.0);
+        assert_eq!(w.z_against(2.0), 0.0);
+        assert_eq!(w.z_against(1.0), f64::INFINITY);
+        assert_eq!(w.z_against(3.0), f64::NEG_INFINITY);
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Vendored minimal `anyhow` shim — the subset of the real crate's API
+//! this repository uses, implemented over `std` only so the workspace
+//! builds with no registry access.
+//!
+//! Covered surface: [`Error`], [`Result`], the [`anyhow!`], [`bail!`]
+//! and [`ensure!`] macros, and the [`Context`] extension trait
+//! (`.context(..)` / `.with_context(..)` on `Result`). Error sources are
+//! flattened into the display string rather than kept as a chain — the
+//! repo only ever formats errors with `{}` / `{:?}`.
+
+use std::fmt::{self, Debug, Display};
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error value. Like the real `anyhow::Error`, it does
+/// NOT implement `std::error::Error` (that keeps the blanket
+/// `From<E: std::error::Error>` conversion coherent).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(&e)
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T, E> {
+    /// Wrap the error with a message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    /// Wrap the error with a lazily evaluated message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ctx(s: &str) -> Result<i32> {
+        let n: i32 = s.parse::<i32>().context("parsing int")?;
+        ensure!(n > 0, "expected positive, got {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        assert_eq!(parse_ctx("5").unwrap(), 5);
+        let e = parse_ctx("x").unwrap_err();
+        assert!(e.to_string().starts_with("parsing int:"), "{e}");
+        let e = parse_ctx("-3").unwrap_err();
+        assert_eq!(e.to_string(), "expected positive, got -3");
+        let val = 7;
+        let e = anyhow!("custom {val:?}");
+        assert_eq!(e.to_string(), "custom 7");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<i32, std::num::ParseIntError> = "3".parse();
+        let mut called = false;
+        let got = ok
+            .with_context(|| {
+                called = true;
+                "ctx"
+            })
+            .unwrap();
+        assert_eq!(got, 3);
+        assert!(!called, "context closure must not run on Ok");
+    }
+}
