@@ -1,6 +1,9 @@
 //! Hot-path micro-benchmarks — the instrument for the §Perf pass
 //! (EXPERIMENTS.md). Measures each layer in isolation:
-//!   * L3 sketch path: pure-rust sketcher by distribution (dense/sparse)
+//!   * L3 sketch-ingest path: per-row reference vs the register-tiled
+//!     GEMM block kernel, by distribution (dense/sparse) — the ISSUE 2
+//!     acceptance (GEMM ≥ 2× per-row at n=256, d=1024, k=128, p=4,
+//!     Normal), recorded machine-readably in `BENCH_ingest.json`
 //!   * L3 estimate path: plain vs MLE combine, pairs/s
 //!   * arena vs per-row: blocked batch estimation + fused top-k on the
 //!     columnar arena against the per-row reference (the ISSUE 1
@@ -29,24 +32,110 @@ fn main() {
     let data = gen::generate(DataDist::ZipfTf { exponent: 1.1, density: 0.1 }, n, d, 7);
     let rows: Vec<&[f32]> = (0..n).map(|i| data.row(i)).collect();
 
-    // L3 sketch throughput by projection distribution.
-    for (name, dist) in [
-        ("normal", ProjectionDist::Normal),
-        ("uniform", ProjectionDist::Uniform),
-        ("3pt s=3", ProjectionDist::ThreePoint(3.0)),
-        ("3pt s=100", ProjectionDist::ThreePoint(100.0)),
+    // L3 sketch-ingest throughput: the per-row reference path vs the
+    // GEMM block kernel (w=1 isolates the kernel; w=N is the standalone
+    // batch API as deployed). Dense (Gaussian) data exercises the
+    // register-tiled route — the ISSUE 2 acceptance (≥2× at n=256,
+    // d=1024, k=128, p=4, Normal) reads those rows; the ZipfTf arm
+    // exercises the sparse-data axpy route, where the block path must
+    // hold parity with the zero-skipping baseline. All arms land in
+    // BENCH_ingest.json for the perf trajectory.
+    let ingest_workers = std::thread::available_parallelism().map_or(1, |w| w.get());
+    let dense_data = gen::generate(DataDist::Gaussian, n, d, 8);
+    let dense_rows: Vec<&[f32]> = (0..n).map(|i| dense_data.row(i)).collect();
+    let mut ingest_json: Vec<String> = Vec::new();
+    let mut ingest_speedups: Vec<String> = Vec::new();
+    for (name, dist, batch) in [
+        ("normal", ProjectionDist::Normal, &dense_rows),
+        ("uniform", ProjectionDist::Uniform, &dense_rows),
+        ("3pt_s3", ProjectionDist::ThreePoint(3.0), &dense_rows),
+        ("3pt_s100", ProjectionDist::ThreePoint(100.0), &dense_rows),
+        ("normal_zipf", ProjectionDist::Normal, &rows),
     ] {
         let sk = Sketcher::new(ProjectionSpec::new(1, k, dist, Strategy::Basic), 4);
-        let m = bench(&format!("sketch/{name}"), Some((n * d) as u64), || {
-            std::hint::black_box(sk.sketch_rows(&rows));
-        });
-        table.row(&[
-            "sketch".into(),
-            format!("{name} n={n} d={d} k={k}"),
-            fmt_duration(m.mean),
-            fmt_duration(m.p95),
-            format!("{:.1} Melem/s", m.throughput().unwrap() / 1e6),
-        ]);
+        // Correctness guard before timing: the tiled kernel must agree
+        // with the per-row reference within f32 accumulation tolerance.
+        {
+            let probe = 8.min(n);
+            let want = sk.sketch_rows(&batch[..probe]);
+            let got = sk.sketch_block(&batch[..probe], 2);
+            for (r, rs) in want.iter().enumerate() {
+                for m in 1..4 {
+                    for (a, b) in got.u_row(m, r).iter().zip(rs.uside.u(m)) {
+                        assert!(
+                            (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                            "gemm mismatch {name} r={r} m={m}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+        let mut arms: Vec<(String, lpsketch::bench_support::Measurement)> = vec![
+            (
+                "per_row".to_string(),
+                bench(&format!("ingest/{name}/per_row"), Some((n * d) as u64), || {
+                    std::hint::black_box(sk.sketch_rows(batch));
+                }),
+            ),
+            (
+                "gemm_w1".to_string(),
+                bench(&format!("ingest/{name}/gemm_w1"), Some((n * d) as u64), || {
+                    std::hint::black_box(sk.sketch_block(batch, 1));
+                }),
+            ),
+        ];
+        // Only a distinct multi-worker arm — on a 1-CPU box it would
+        // duplicate the gemm_w1 label (and JSON keys) for no information.
+        if ingest_workers > 1 {
+            arms.push((
+                format!("gemm_w{ingest_workers}"),
+                bench(&format!("ingest/{name}/gemm_wN"), Some((n * d) as u64), || {
+                    std::hint::black_box(sk.sketch_block(batch, ingest_workers));
+                }),
+            ));
+        }
+        for (path, m) in &arms {
+            table.row(&[
+                "ingest".into(),
+                format!("{name} {path} n={n} d={d} k={k}"),
+                fmt_duration(m.mean),
+                fmt_duration(m.p95),
+                format!("{:.1} Melem/s", m.throughput().unwrap() / 1e6),
+            ]);
+            ingest_json.push(format!(
+                "    {{\"dist\": \"{name}\", \"path\": \"{path}\", \"mean_s\": {:.6e}, \
+                 \"rows_per_s\": {:.1}, \"melem_per_s\": {:.2}}}",
+                m.mean.as_secs_f64(),
+                n as f64 / m.mean.as_secs_f64(),
+                m.throughput().unwrap() / 1e6,
+            ));
+        }
+        let per_row_s = arms[0].1.mean.as_secs_f64();
+        let w1 = per_row_s / arms[1].1.mean.as_secs_f64();
+        if let Some(wn_arm) = arms.get(2) {
+            let wn = per_row_s / wn_arm.1.mean.as_secs_f64();
+            ingest_speedups.push(format!(
+                "    {{\"dist\": \"{name}\", \"gemm_w1\": {w1:.2}, \
+                 \"gemm_w{ingest_workers}\": {wn:.2}}}"
+            ));
+            println!("ingest {name}: gemm speedup {w1:.1}x (w=1), {wn:.1}x (w={ingest_workers})");
+        } else {
+            ingest_speedups.push(format!("    {{\"dist\": \"{name}\", \"gemm_w1\": {w1:.2}}}"));
+            println!("ingest {name}: gemm speedup {w1:.1}x (w=1)");
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"ingest\",\n  \"n\": {n},\n  \"d\": {d},\n  \"k\": {k},\n  \
+         \"p\": 4,\n  \"workers\": {ingest_workers},\n  \"data\": \
+         {{\"default\": \"gaussian (dense)\", \"normal_zipf\": \"zipf-tf density 0.1 (sparse)\"}},\n  \
+         \"results\": [\n{}\n  ],\n  \"speedup\": [\n{}\n  ]\n}}\n",
+        ingest_json.join(",\n"),
+        ingest_speedups.join(",\n"),
+    );
+    if let Err(e) = std::fs::write("BENCH_ingest.json", &json) {
+        eprintln!("(could not write BENCH_ingest.json: {e})");
+    } else {
+        println!("wrote BENCH_ingest.json");
     }
 
     // L3 estimate throughput: plain vs one-step MLE.

@@ -37,6 +37,11 @@ pub struct Config {
     pub batch_deadline_us: u64,
     /// Use the margin MLE (Lemma 4) on the query path.
     pub use_mle: bool,
+    /// Sketch ingest blocks through the register-tiled GEMM kernel into
+    /// columnar store segments (default). `false` keeps the per-row
+    /// reference path — the baseline the GEMM path is benchmarked and
+    /// equivalence-tested against.
+    pub ingest_gemm: bool,
     /// Prefer the PJRT engine when artifacts match; fall back to pure
     /// rust otherwise.
     pub use_pjrt: bool,
@@ -63,6 +68,7 @@ impl Default for Config {
             batch_max: 4096,
             batch_deadline_us: 200,
             use_mle: false,
+            ingest_gemm: true,
             use_pjrt: false,
             artifacts_dir: PathBuf::from("artifacts"),
             data_dist: DataDist::ZipfTf { exponent: 1.1, density: 0.1 },
@@ -91,6 +97,7 @@ impl Config {
             "batch-max" | "batch_max" => self.batch_max = parse_nonzero(key, value)?,
             "batch-deadline-us" | "batch_deadline_us" => self.batch_deadline_us = value.parse()?,
             "mle" | "use-mle" | "use_mle" => self.use_mle = parse_bool(value)?,
+            "ingest-gemm" | "ingest_gemm" => self.ingest_gemm = parse_bool(value)?,
             "pjrt" | "use-pjrt" | "use_pjrt" => self.use_pjrt = parse_bool(value)?,
             "artifacts-dir" | "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
             "data-dist" | "data_dist" => self.data_dist = DataDist::parse(value)?,
@@ -173,7 +180,7 @@ impl Config {
     /// One-line human summary (logged by the CLI and examples).
     pub fn describe(&self) -> String {
         format!(
-            "p={} k={} strategy={} dist={} n={} d={} workers={} block={} mle={} pjrt={}",
+            "p={} k={} strategy={} dist={} n={} d={} workers={} block={} mle={} gemm={} pjrt={}",
             self.p,
             self.k,
             self.strategy.as_str(),
@@ -183,6 +190,7 @@ impl Config {
             self.workers,
             self.block_rows,
             self.use_mle,
+            self.ingest_gemm,
             self.use_pjrt,
         )
     }
@@ -233,6 +241,16 @@ mod tests {
         c.apply_args(args(&["--mle", "--pjrt"])).unwrap();
         assert!(c.use_mle);
         assert!(c.use_pjrt);
+    }
+
+    #[test]
+    fn ingest_gemm_flag_parses() {
+        let mut c = Config::default();
+        assert!(c.ingest_gemm, "GEMM ingest is the default");
+        c.apply_args(args(&["--ingest-gemm", "false"])).unwrap();
+        assert!(!c.ingest_gemm);
+        c.set("ingest_gemm", "on").unwrap();
+        assert!(c.ingest_gemm);
     }
 
     #[test]

@@ -86,6 +86,9 @@ pub struct Metrics {
     pub batches_flushed: AtomicU64,
     pub batch_deadline_flushes: AtomicU64,
     pub pjrt_calls: AtomicU64,
+    /// Blocks sketched through the register-tiled GEMM ingest path.
+    pub gemm_calls: AtomicU64,
+    /// Blocks sketched through the per-row reference path.
     pub fallback_calls: AtomicU64,
     pub sketch_latency: Histogram,
     pub query_latency: Histogram,
@@ -104,6 +107,7 @@ impl Metrics {
             batches_flushed: self.batches_flushed.load(Ordering::Relaxed),
             batch_deadline_flushes: self.batch_deadline_flushes.load(Ordering::Relaxed),
             pjrt_calls: self.pjrt_calls.load(Ordering::Relaxed),
+            gemm_calls: self.gemm_calls.load(Ordering::Relaxed),
             fallback_calls: self.fallback_calls.load(Ordering::Relaxed),
             sketch_mean_us: self.sketch_latency.mean_us(),
             sketch_p95_us: self.sketch_latency.quantile_us(0.95),
@@ -122,6 +126,7 @@ pub struct Snapshot {
     pub batches_flushed: u64,
     pub batch_deadline_flushes: u64,
     pub pjrt_calls: u64,
+    pub gemm_calls: u64,
     pub fallback_calls: u64,
     pub sketch_mean_us: f64,
     pub sketch_p95_us: u64,
@@ -132,7 +137,7 @@ pub struct Snapshot {
 impl Snapshot {
     pub fn render(&self) -> String {
         format!(
-            "rows={} blocks={} queries={} batches={} (deadline={}) pjrt={} fallback={} \
+            "rows={} blocks={} queries={} batches={} (deadline={}) pjrt={} gemm={} fallback={} \
              sketch_mean={:.1}us sketch_p95={}us query_mean={:.1}us query_p95={}us",
             self.rows_ingested,
             self.blocks_sketched,
@@ -140,6 +145,7 @@ impl Snapshot {
             self.batches_flushed,
             self.batch_deadline_flushes,
             self.pjrt_calls,
+            self.gemm_calls,
             self.fallback_calls,
             self.sketch_mean_us,
             self.sketch_p95_us,

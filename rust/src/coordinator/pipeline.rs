@@ -11,14 +11,17 @@
 //! * **PJRT** (`use_pjrt`): blocks padded to the artifact's batch B,
 //!   executed on the AOT-compiled fused sketch kernel (L1/L2 of the
 //!   stack). Used when an artifact matches (p, k) and D.
-//! * **pure rust** fallback: the [`Sketcher`] mirror, any shape.
+//! * **pure rust GEMM** (`ingest_gemm`, default): the register-tiled
+//!   block kernel (`Sketcher::sketch_block`), landing columnar segments
+//!   in the store — no per-row AoS allocation, no store→arena repack.
+//! * **pure rust per-row**: the [`Sketcher`] reference mirror, any
+//!   shape; kept as the baseline the GEMM path is pinned against.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::config::Config;
-use crate::core::arena::SketchArena;
 use crate::core::decompose::Decomposition;
 use crate::core::estimator;
 use crate::core::marginals::Moments;
@@ -146,6 +149,7 @@ impl Pipeline {
         let t0 = Instant::now();
         let bytes_before = self.store.bytes();
         let use_pjrt = self.pjrt_usable(data.d());
+        let use_gemm = self.cfg.ingest_gemm;
         let pjrt_rows = AtomicU64::new(0);
         let errors: std::sync::Mutex<Vec<anyhow::Error>> = std::sync::Mutex::new(Vec::new());
 
@@ -163,21 +167,36 @@ impl Pipeline {
                     };
                     let Ok(block) = block else { break };
                     let t = Instant::now();
-                    let result = if use_pjrt {
-                        self.sketch_block_pjrt(&block).map(|rs| {
+                    let stored = if use_pjrt {
+                        self.sketch_block_pjrt(&block).map(|sketches| {
                             pjrt_rows.fetch_add(block.rows as u64, Ordering::Relaxed);
                             self.metrics.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-                            rs
-                        })
-                    } else {
-                        self.metrics.fallback_calls.fetch_add(1, Ordering::Relaxed);
-                        Ok(self.sketch_block_rust(&block))
-                    };
-                    match result {
-                        Ok(sketches) => {
                             for (i, rs) in sketches.into_iter().enumerate() {
                                 self.store.insert(base + block.row_id(i), rs);
                             }
+                        })
+                    } else if use_gemm {
+                        // GEMM hot path: power-expand once, project with
+                        // the register-tiled kernel, land the columnar
+                        // block in the store verbatim (no per-row AoS).
+                        // Intra-block workers stay at 1 — ingest
+                        // parallelism lives at the block level, in this
+                        // worker pool.
+                        self.metrics.gemm_calls.fetch_add(1, Ordering::Relaxed);
+                        self.store.insert_block_columnar(
+                            base + block.first_row,
+                            self.sketch_block_gemm(&block),
+                        );
+                        Ok(())
+                    } else {
+                        self.metrics.fallback_calls.fetch_add(1, Ordering::Relaxed);
+                        for (i, rs) in self.sketch_block_rust(&block).into_iter().enumerate() {
+                            self.store.insert(base + block.row_id(i), rs);
+                        }
+                        Ok(())
+                    };
+                    match stored {
+                        Ok(()) => {
                             self.metrics.rows_ingested.fetch_add(block.rows as u64, Ordering::Relaxed);
                             self.metrics.blocks_sketched.fetch_add(1, Ordering::Relaxed);
                             self.metrics.sketch_latency.record(t.elapsed());
@@ -210,10 +229,16 @@ impl Pipeline {
         })
     }
 
-    /// Pure-rust sketch of one block.
+    /// Pure-rust per-row sketch of one block (the reference baseline).
     fn sketch_block_rust(&self, block: &Block) -> Vec<RowSketch> {
         let rows: Vec<&[f32]> = (0..block.rows).map(|i| block.row(i)).collect();
         self.sketcher.sketch_rows(&rows)
+    }
+
+    /// Register-tiled GEMM sketch of one block, columnar output.
+    fn sketch_block_gemm(&self, block: &Block) -> crate::projection::sketcher::ColumnarBlock {
+        let rows: Vec<&[f32]> = (0..block.rows).map(|i| block.row(i)).collect();
+        self.sketcher.sketch_block(&rows, 1)
     }
 
     /// PJRT sketch of one block via the AOT artifact (padded to B).
@@ -313,15 +338,20 @@ impl Pipeline {
     }
 
     /// Estimate the distance between two stored rows (the query path).
+    ///
+    /// The plain estimator scores straight from wherever the rows live
+    /// (map rows by reference, columnar segments from their panels — no
+    /// materialization); the MLE consumes full per-row state and goes
+    /// through `with_pair`.
     pub fn estimate_pair(&self, a: u64, b: u64) -> Option<f64> {
         let t = Instant::now();
-        let out = self.store.with_pair(a, b, |ra, rb| {
-            if self.cfg.use_mle {
+        let out = if self.cfg.use_mle {
+            self.store.with_pair(a, b, |ra, rb| {
                 mle::estimate_mle(&self.dec, ra, rb, Solve::OneStepNewton)
-            } else {
-                estimator::estimate(&self.dec, ra, rb)
-            }
-        });
+            })
+        } else {
+            self.store.estimate_pair_plain(&self.dec, a, b)
+        };
         if out.is_some() {
             self.metrics.queries_served.fetch_add(1, Ordering::Relaxed);
             self.metrics.query_latency.record(t.elapsed());
@@ -375,18 +405,18 @@ impl Pipeline {
     /// mode uses the per-row path (the arena stores only what the plain
     /// combine needs).
     pub fn all_pairs_condensed(&self) -> Vec<f64> {
-        let ids = self.store.ids();
-        let n = ids.len();
-        if n < 2 {
-            return Vec::new();
-        }
-        // Snapshot sketches once to avoid per-pair locking.
-        let rows: Vec<RowSketch> = ids.iter().map(|&id| self.store.get(id).unwrap()).collect();
         if !self.cfg.use_mle {
             if let Some(pjrt) = &self.pjrt {
                 if let Some(meta) =
                     pjrt.handle.manifest().find_estimate(self.cfg.p, self.cfg.k).cloned()
                 {
+                    let ids = self.store.ids();
+                    let n = ids.len();
+                    if n < 2 {
+                        return Vec::new();
+                    }
+                    let rows: Vec<RowSketch> =
+                        ids.iter().map(|&id| self.store.get(id).unwrap()).collect();
                     let mut out = vec![0.0f64; n * (n - 1) / 2];
                     if let Ok(()) = self.all_pairs_pjrt(&rows, &meta, &mut out) {
                         self.metrics
@@ -396,10 +426,17 @@ impl Pipeline {
                     }
                 }
             }
-            let arena = SketchArena::from_rows(self.cfg.p, self.cfg.k, &rows);
+            // Columnar snapshot straight off the store: GEMM-ingested
+            // segments land by contiguous copy, map rows by one
+            // transpose each — no intermediate Vec<RowSketch>.
+            let snap = self.store.arena_snapshot(self.cfg.p, self.cfg.k);
+            let n = snap.arena.n();
+            if n < 2 {
+                return Vec::new();
+            }
             let out = estimator::estimate_condensed_arena(
                 &self.dec,
-                &arena,
+                &snap.arena,
                 self.cfg.workers.max(1),
             );
             self.metrics
@@ -407,6 +444,13 @@ impl Pipeline {
                 .fetch_add((n * (n - 1) / 2) as u64, Ordering::Relaxed);
             return out;
         }
+        let ids = self.store.ids();
+        if ids.len() < 2 {
+            return Vec::new();
+        }
+        // MLE consumes per-order norms/moments the arena does not hold;
+        // snapshot per-row sketches once to avoid per-pair locking.
+        let rows: Vec<RowSketch> = ids.iter().map(|&id| self.store.get(id).unwrap()).collect();
         self.per_row_condensed(&rows)
     }
 
@@ -750,6 +794,74 @@ mod tests {
         let snap = p.metrics();
         assert!(snap.batches_flushed >= 1);
         assert_eq!(snap.queries_served, 20);
+    }
+
+    #[test]
+    fn gemm_ingest_matches_per_row_ingest() {
+        // End-to-end old-path vs new-path equivalence: same ids, same
+        // sketches within f32 accumulation tolerance, same moments to
+        // f64 precision, same estimates — only the counters differ.
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let mut c = cfg(60, 128);
+            c.k = 32;
+            c.strategy = strategy;
+            let data = gen::generate(DataDist::Gaussian, c.n, c.d, 33);
+            let gemm = Pipeline::new(c.clone()).unwrap();
+            gemm.ingest(&data).unwrap();
+            let mut c2 = c.clone();
+            c2.ingest_gemm = false;
+            let per_row = Pipeline::new(c2).unwrap();
+            per_row.ingest(&data).unwrap();
+            assert_eq!(gemm.store().ids(), per_row.store().ids());
+            for id in gemm.store().ids() {
+                let a = gemm.store().get(id).unwrap();
+                let b = per_row.store().get(id).unwrap();
+                for (x, y) in a.uside.data.iter().zip(&b.uside.data) {
+                    assert!((x - y).abs() <= 1e-3 * (1.0 + y.abs()), "id {id}: {x} vs {y}");
+                }
+                for (x, y) in a.vside().data.iter().zip(&b.vside().data) {
+                    assert!((x - y).abs() <= 1e-3 * (1.0 + y.abs()), "id {id} vside");
+                }
+                for o in 1..=a.moments.len() {
+                    let (x, y) = (a.moments.get(o), b.moments.get(o));
+                    assert!((x - y).abs() <= 1e-9 * (1.0 + y.abs()), "id {id} moment {o}");
+                }
+            }
+            let ga = gemm.all_pairs_condensed();
+            let pa = per_row.all_pairs_condensed();
+            assert_eq!(ga.len(), pa.len());
+            for (x, y) in ga.iter().zip(&pa) {
+                assert!((x - y).abs() <= 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
+            }
+            assert!(gemm.metrics().gemm_calls > 0);
+            assert_eq!(gemm.metrics().fallback_calls, 0);
+            assert!(per_row.metrics().fallback_calls > 0);
+            assert_eq!(per_row.metrics().gemm_calls, 0);
+        }
+    }
+
+    #[test]
+    fn gemm_ingest_serves_every_query_path() {
+        // Columnar segments must serve single-pair, batched, and MLE
+        // queries (materialized per-row views) identically to the
+        // snapshot-driven paths.
+        let mut c = cfg(40, 64);
+        c.k = 32;
+        let data = gen::generate(DataDist::Uniform01, c.n, c.d, 41);
+        let p = Pipeline::new(c.clone()).unwrap();
+        p.ingest(&data).unwrap();
+        assert!(p.estimate_pair(0, 39).unwrap().is_finite());
+        let pairs: Vec<(u64, u64)> = (0..40u64).map(|i| (i, (i + 7) % 40)).collect();
+        let batched = p.estimate_pairs(&pairs);
+        for (&(a, b), got) in pairs.iter().zip(&batched) {
+            assert_eq!(*got, p.estimate_pair(a, b), "pair ({a},{b})");
+        }
+        // MLE mode on GEMM-ingested sketches.
+        let mut cm = c.clone();
+        cm.use_mle = true;
+        let pm = Pipeline::new(cm).unwrap();
+        pm.ingest(&data).unwrap();
+        assert!(pm.estimate_pair(1, 2).unwrap().is_finite());
     }
 
     #[test]

@@ -27,11 +27,21 @@ pub struct RebalanceReport {
 
 /// Build a store with `new_shards` shards containing exactly the rows of
 /// `store`. Returns the new store and a movement report.
+///
+/// Columnar segments are shard-independent (sharding only partitions
+/// the hashmap rows), so they carry over verbatim — re-sharding must
+/// not degrade the GEMM-ingested columnar layout into per-row AoS
+/// entries. `moved` therefore counts map rows only: segment rows never
+/// had a shard assignment to move from.
 pub fn rebalance(store: &SketchStore, new_shards: usize) -> (SketchStore, RebalanceReport) {
     let new = SketchStore::new(new_shards);
     let mut moved = 0usize;
     let mut rows = 0usize;
-    for id in store.ids() {
+    for (base, block) in store.segments_snapshot() {
+        rows += block.rows();
+        new.insert_block_columnar(base, block);
+    }
+    for id in store.map_ids() {
         let sketch: RowSketch = store.get(id).expect("id listed but missing");
         rows += 1;
         if store.shard_of(id) != new.shard_of(id) {
@@ -115,6 +125,32 @@ mod tests {
         assert_eq!(new.shard_count(), 1);
         assert_eq!(new.len(), 20);
         assert!(report.moved > 0);
+    }
+
+    #[test]
+    fn rebalance_preserves_columnar_segments() {
+        // Segment-backed rows survive re-sharding verbatim (still
+        // columnar, not degraded to map entries) and count as unmoved.
+        let sk = Sketcher::new(
+            ProjectionSpec::new(1, 8, ProjectionDist::Normal, Strategy::Basic),
+            4,
+        );
+        let store = store_with(10, 3); // map ids 0..10
+        let rows: Vec<Vec<f32>> = (0..5)
+            .map(|i| (0..16).map(|t| ((i * 7 + t) as f32 * 0.21).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        store.insert_block_columnar(100, sk.sketch_block(&refs, 1)); // ids 100..105
+        let (new, report) = rebalance(&store, 7);
+        assert_eq!(report.rows, 15);
+        assert_eq!(new.len(), 15);
+        assert_eq!(new.ids(), store.ids());
+        assert_eq!(new.segments_snapshot().len(), 1);
+        assert!(new.map_ids().iter().all(|&id| id < 10));
+        assert_eq!(
+            new.get(103).unwrap().uside.data,
+            store.get(103).unwrap().uside.data
+        );
     }
 
     #[test]

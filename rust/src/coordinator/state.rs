@@ -2,19 +2,105 @@
 //! + marginal moments, sharded for concurrent writes.
 //!
 //! This is the O(nk) object that replaces the O(nD) matrix (and the
-//! O(n²) distance cache) in the paper's storage claim. Shards are
-//! written by the pipeline workers in parallel and read lock-free-ish
-//! (RwLock read path) by the query side.
+//! O(n²) distance cache) in the paper's storage claim. Two internal
+//! representations coexist:
+//!
+//! * **sharded per-row map** — `id → RowSketch` hashmap shards, written
+//!   by the per-row / PJRT ingest paths and by explicit `insert`s
+//!   (rebalance, persistence load). The classic random-access view.
+//! * **columnar segments** — whole [`ColumnarBlock`]s from the GEMM
+//!   ingest path, covering a contiguous id range each
+//!   ([`SketchStore::insert_block_columnar`]). Already arena-shaped, so
+//!   [`SketchStore::arena_snapshot`] lands a segment with one memcpy
+//!   per (order, side) instead of transposing n per-row sketches, and
+//!   ingest never allocates AoS rows at all.
+//!
+//! Per-row reads (`get`, `with_pair`) serve map rows by reference and
+//! materialize segment rows on demand; the plain pair estimator
+//! ([`SketchStore::estimate_pair_plain`]) scores segment rows straight
+//! from their panels with no materialization at all. Ids must be unique
+//! across both representations (the pipeline's monotone id counter
+//! guarantees it) — collisions fail loudly at block insertion and again
+//! in the snapshot's duplicate-id backstop.
 
 use std::collections::HashMap;
 use std::sync::RwLock;
 
-use crate::core::arena::SketchArena;
-use crate::projection::sketcher::RowSketch;
+use crate::core::arena::{ArenaBuilder, SketchArena};
+use crate::core::decompose::Decomposition;
+use crate::core::estimator::dot;
+use crate::projection::sketcher::{ColumnarBlock, RowSketch};
 
-/// Sharded row-id → sketch map.
+/// Sharded row-id → sketch map + columnar block segments.
 pub struct SketchStore {
     shards: Vec<RwLock<HashMap<u64, RowSketch>>>,
+    /// Columnar ingest segments, sorted by base id; each covers ids
+    /// `base .. base + block.rows()` (ranges never overlap).
+    segments: RwLock<Vec<Segment>>,
+}
+
+struct Segment {
+    base: u64,
+    block: ColumnarBlock,
+}
+
+impl Segment {
+    #[inline]
+    fn end(&self) -> u64 {
+        self.base + self.block.rows() as u64
+    }
+
+    #[inline]
+    fn contains(&self, id: u64) -> bool {
+        id >= self.base && id < self.end()
+    }
+}
+
+/// Where one side of a pair query lives: a map row (borrowed) or a
+/// (block, row) coordinate inside a columnar segment.
+enum Side<'x> {
+    Map(&'x RowSketch),
+    Seg(&'x ColumnarBlock, usize),
+}
+
+/// Locate `id` in the sorted segment list.
+fn seg_side<'x>(segs: &'x [Segment], id: u64) -> Option<Side<'x>> {
+    let pos = segs.partition_point(|s| s.base <= id);
+    (pos > 0 && segs[pos - 1].contains(id))
+        .then(|| Side::Seg(&segs[pos - 1].block, (id - segs[pos - 1].base) as usize))
+}
+
+/// Score two resolved sides with *exactly* the `estimator::estimate`
+/// accumulation sequence — marginal norms first, then the
+/// c_m·⟨u_m, v_{p−m}⟩/k terms in ascending m — so the answer is bitwise
+/// identical to the per-row path whichever representation holds a row.
+fn score_sides(dec: &Decomposition, x: &Side<'_>, y: &Side<'_>) -> f64 {
+    let p = dec.p();
+    let kf = match x {
+        Side::Map(rs) => rs.uside.k,
+        Side::Seg(block, _) => block.k(),
+    } as f64;
+    let x_norm = match x {
+        Side::Map(rs) => rs.moments.get(p),
+        Side::Seg(block, r) => block.moment(*r, p),
+    };
+    let y_norm = match y {
+        Side::Map(rs) => rs.moments.get(p),
+        Side::Seg(block, r) => block.moment(*r, p),
+    };
+    let mut est = x_norm + y_norm;
+    for m in 1..p {
+        let u = match x {
+            Side::Map(rs) => rs.uside.u(m),
+            Side::Seg(block, r) => block.u_row(m, *r),
+        };
+        let v = match y {
+            Side::Map(rs) => rs.vside().u(p - m),
+            Side::Seg(block, r) => block.v_row(p - m, *r),
+        };
+        est += dec.coeff(m) * dot(u, v) / kf;
+    }
+    est
 }
 
 /// Result of [`SketchStore::arena_snapshot`]: the columnar arena plus
@@ -33,6 +119,7 @@ impl SketchStore {
         let shards = shards.max(1);
         SketchStore {
             shards: (0..shards).map(|_| RwLock::new(HashMap::new())).collect(),
+            segments: RwLock::new(Vec::new()),
         }
     }
 
@@ -47,14 +134,77 @@ impl SketchStore {
     }
 
     pub fn insert(&self, id: u64, sketch: RowSketch) {
+        // Debug-only mirror of insert_block_columnar's collision check
+        // (release ingest stays one shard lock per row; the snapshot's
+        // duplicate-id backstop still catches release-mode collisions).
+        debug_assert!(
+            !self.segment_covers(id),
+            "map insert at id {id} collides with a columnar segment"
+        );
         self.shards[self.shard_of(id)].write().unwrap().insert(id, sketch);
     }
 
-    pub fn get(&self, id: u64) -> Option<RowSketch> {
-        self.shards[self.shard_of(id)].read().unwrap().get(&id).cloned()
+    /// Whether some columnar segment covers `id`.
+    fn segment_covers(&self, id: u64) -> bool {
+        seg_side(&self.segments.read().unwrap(), id).is_some()
     }
 
-    /// Visit a pair without cloning (the query hot path).
+    /// Land a whole columnar ingest block covering ids
+    /// `base .. base + block.rows()` — no per-row allocation, no
+    /// transpose; the block is stored as-is and serves arena snapshots
+    /// by contiguous copy. Panics if the id range overlaps an existing
+    /// segment or a map row already present at insertion time (a silent
+    /// duplicate would corrupt `arena_snapshot`'s contiguous landing);
+    /// concurrent `insert`s into the range after this check remain the
+    /// caller's responsibility, as with double `insert`s, and are caught
+    /// by the snapshot's duplicate-id backstop.
+    pub fn insert_block_columnar(&self, base: u64, block: ColumnarBlock) {
+        if block.rows() == 0 {
+            return;
+        }
+        let end = base + block.rows() as u64;
+        // Map-collision check before taking the segment lock (the
+        // shard→segment order every path uses); one lock acquisition
+        // per shard, not per id.
+        let shard_count = self.shards.len() as u64;
+        for (s, shard) in self.shards.iter().enumerate() {
+            let guard = shard.read().unwrap();
+            for id in (base..end).filter(|id| id % shard_count == s as u64) {
+                assert!(
+                    !guard.contains_key(&id),
+                    "columnar segment [{base}, {end}) collides with existing map row {id}"
+                );
+            }
+        }
+        let mut segs = self.segments.write().unwrap();
+        let pos = segs.partition_point(|s| s.base < base);
+        let disjoint = (pos == 0 || segs[pos - 1].end() <= base)
+            && (pos == segs.len() || end <= segs[pos].base);
+        assert!(disjoint, "columnar segment [{base}, {end}) overlaps an existing segment");
+        segs.insert(pos, Segment { base, block });
+    }
+
+    /// Materialize a row from the columnar segments, if one covers `id`.
+    fn get_segment(&self, id: u64) -> Option<RowSketch> {
+        let segs = self.segments.read().unwrap();
+        match seg_side(&segs, id) {
+            Some(Side::Seg(block, r)) => Some(block.to_row_sketch(r)),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, id: u64) -> Option<RowSketch> {
+        self.shards[self.shard_of(id)]
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .or_else(|| self.get_segment(id))
+    }
+
+    /// Visit a pair without cloning when both rows live in the hashmap
+    /// shards (the query hot path); rows held in columnar segments are
+    /// materialized on demand.
     pub fn with_pair<T>(
         &self,
         a: u64,
@@ -62,25 +212,69 @@ impl SketchStore {
         f: impl FnOnce(&RowSketch, &RowSketch) -> T,
     ) -> Option<T> {
         let (sa, sb) = (self.shard_of(a), self.shard_of(b));
+        let mut f = Some(f);
         if sa == sb {
             let guard = self.shards[sa].read().unwrap();
-            let ra = guard.get(&a)?;
-            let rb = guard.get(&b)?;
-            Some(f(ra, rb))
+            if let (Some(ra), Some(rb)) = (guard.get(&a), guard.get(&b)) {
+                return Some(f.take().expect("unused")(ra, rb));
+            }
         } else {
             // Lock in shard order to avoid deadlock with concurrent pairs.
             let (first, second) = if sa < sb { (sa, sb) } else { (sb, sa) };
             let g1 = self.shards[first].read().unwrap();
             let g2 = self.shards[second].read().unwrap();
             let (ga, gb) = if sa < sb { (&g1, &g2) } else { (&g2, &g1) };
-            let ra = ga.get(&a)?;
-            let rb = gb.get(&b)?;
-            Some(f(ra, rb))
+            if let (Some(ra), Some(rb)) = (ga.get(&a), gb.get(&b)) {
+                return Some(f.take().expect("unused")(ra, rb));
+            }
         }
+        // Slow path: at least one row lives in a columnar segment (or
+        // is absent entirely) — materialize owned copies.
+        let ra = self.get(a)?;
+        let rb = self.get(b)?;
+        Some(f.take().expect("unused")(&ra, &rb))
+    }
+
+    /// Plain §2.1/§2.2 estimate of a pair served without materializing
+    /// rows: map rows are scored by reference, segment rows straight
+    /// from their columnar panels — the single-pair query hot path
+    /// stays allocation-free whichever representation holds the rows.
+    /// Bitwise identical to `estimator::estimate` on the corresponding
+    /// [`RowSketch`]es (same accumulation sequence, same `dot`).
+    pub fn estimate_pair_plain(&self, dec: &Decomposition, a: u64, b: u64) -> Option<f64> {
+        // Lock shards in index order (single lock when they collide).
+        let (sa, sb) = (self.shard_of(a), self.shard_of(b));
+        let (first, second) = if sa <= sb { (sa, sb) } else { (sb, sa) };
+        let g1 = self.shards[first].read().unwrap();
+        let g2 = (second != first).then(|| self.shards[second].read().unwrap());
+        let map_a: &HashMap<u64, RowSketch> =
+            if sa == first { &g1 } else { g2.as_ref().expect("two shards") };
+        let map_b: &HashMap<u64, RowSketch> =
+            if sb == first { &g1 } else { g2.as_ref().expect("two shards") };
+        // Map-resident pairs never touch the store-wide segment lock —
+        // point queries on a per-row-ingested store contend only on
+        // their two shards, exactly like the old with_pair hot path.
+        if let (Some(ra), Some(rb)) = (map_a.get(&a), map_b.get(&b)) {
+            return Some(score_sides(dec, &Side::Map(ra), &Side::Map(rb)));
+        }
+        // Shard→segment lock order, as everywhere else.
+        let segs = self.segments.read().unwrap();
+        let x = match map_a.get(&a) {
+            Some(rs) => Side::Map(rs),
+            None => seg_side(&segs, a)?,
+        };
+        let y = match map_b.get(&b) {
+            Some(rs) => Side::Map(rs),
+            None => seg_side(&segs, b)?,
+        };
+        Some(score_sides(dec, &x, &y))
     }
 
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+        let mapped: usize = self.shards.iter().map(|s| s.read().unwrap().len()).sum();
+        let segmented: usize =
+            self.segments.read().unwrap().iter().map(|s| s.block.rows()).sum();
+        mapped + segmented
     }
 
     pub fn is_empty(&self) -> bool {
@@ -89,57 +283,111 @@ impl SketchStore {
 
     pub fn contains(&self, id: u64) -> bool {
         self.shards[self.shard_of(id)].read().unwrap().contains_key(&id)
+            || self.segment_covers(id)
     }
 
     /// Total sketch payload bytes (the paper's O(nk) storage number).
     pub fn bytes(&self) -> usize {
-        self.shards
+        let mapped: usize = self
+            .shards
             .iter()
             .map(|s| s.read().unwrap().values().map(|r| r.sketch_bytes()).sum::<usize>())
-            .sum()
+            .sum();
+        let segmented: usize =
+            self.segments.read().unwrap().iter().map(|s| s.block.bytes()).sum();
+        mapped + segmented
     }
 
-    /// Columnar snapshot of the whole store: every row's sketches
-    /// transposed into a [`SketchArena`] (ids ascending, arena row i =
-    /// `ids[i]`, inverse map in `pos`). This is the view the pipeline's
-    /// blocked estimate / all-pairs export paths consume — one read
-    /// lock per shard, rows copied straight into the arena buffers (no
-    /// per-row clones, no per-pair locking on the hot path). `p`/`k`
-    /// come from the pipeline config (an empty store carries no shape
-    /// of its own).
+    /// Columnar snapshot of the whole store: every row's sketches in a
+    /// [`SketchArena`] (ids ascending, arena row i = `ids[i]`, inverse
+    /// map in `pos`). This is the view the pipeline's blocked estimate /
+    /// all-pairs export paths consume. Map rows are copied straight into
+    /// the arena buffers (no per-row clones); columnar segments are
+    /// already arena-shaped, so each lands as one contiguous copy per
+    /// (order, side) — the ingest→arena repack is gone. `p`/`k` come
+    /// from the pipeline config (an empty store carries no shape of its
+    /// own).
     pub fn arena_snapshot(&self, p: usize, k: usize) -> ArenaSnapshot {
-        let ids = self.ids();
-        let pos: HashMap<u64, usize> = ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
-        // Hold every shard's read lock together for a consistent copy
-        // (writers take exactly one shard lock, so no ordering cycle);
-        // sidedness is probed under the same guards. Rows inserted
-        // after the `ids()` pass are skipped; the store has no removal
-        // API, so every listed id is still present.
+        // Hold every shard's read lock + the segment lock together for
+        // a consistent copy (writers take exactly one shard lock or the
+        // segment lock, so no ordering cycle); sidedness is probed
+        // under the same guards.
         let guards: Vec<_> = self.shards.iter().map(|s| s.read().unwrap()).collect();
+        let segs = self.segments.read().unwrap();
+        let mut ids: Vec<u64> = guards
+            .iter()
+            .flat_map(|g| g.keys().copied().collect::<Vec<_>>())
+            .collect();
+        for s in segs.iter() {
+            ids.extend(s.base..s.end());
+        }
+        ids.sort_unstable();
+        // Backstop against map/segment id collisions (insertion-time
+        // checks can be raced past): a duplicate here would land a
+        // segment at shifted positions and silently corrupt the arena.
+        if let Some(w) = ids.windows(2).find(|w| w[0] == w[1]) {
+            panic!("store id {} present in both map and columnar segments", w[0]);
+        }
+        let pos: HashMap<u64, usize> = ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
         let two_sided = ids.first().is_some_and(|&id| {
             guards[self.shard_of(id)]
                 .get(&id)
-                .is_some_and(|r| r.vside_data.is_some())
+                .map(|r| r.vside_data.is_some())
+                .or_else(|| {
+                    segs.iter().find(|s| s.contains(id)).map(|s| s.block.is_two_sided())
+                })
+                .unwrap_or(false)
         });
-        let arena = SketchArena::from_indexed(
-            p,
-            k,
-            ids.len(),
-            two_sided,
-            guards.iter().flat_map(|g| {
-                g.iter().filter_map(|(id, rs)| pos.get(id).map(|&i| (i, rs)))
-            }),
-        );
+        let mut b = ArenaBuilder::new(p, k, ids.len(), two_sided);
+        for g in guards.iter() {
+            for (id, rs) in g.iter() {
+                b.set_row(pos[id], rs);
+            }
+        }
+        for s in segs.iter() {
+            // Segment ids are contiguous and unique, so their positions
+            // in the sorted id list are consecutive: one block landing.
+            b.set_block(pos[&s.base], &s.block);
+        }
+        let arena = b.finish();
         ArenaSnapshot { ids, pos, arena }
     }
 
-    /// All row ids, ascending (test/debug helper; takes all read locks).
+    /// `(base, block)` clones of every columnar segment, base ascending.
+    /// Rebalance carries segments over verbatim — they are
+    /// shard-independent, so re-sharding must not degrade them to
+    /// per-row map entries.
+    pub fn segments_snapshot(&self) -> Vec<(u64, ColumnarBlock)> {
+        self.segments
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| (s.base, s.block.clone()))
+            .collect()
+    }
+
+    /// Ids held in the hashmap shards only (segment-backed ids
+    /// excluded), ascending.
+    pub fn map_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.read().unwrap().keys().copied().collect::<Vec<_>>())
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// All row ids, ascending (takes all read locks).
     pub fn ids(&self) -> Vec<u64> {
         let mut ids: Vec<u64> = self
             .shards
             .iter()
             .flat_map(|s| s.read().unwrap().keys().copied().collect::<Vec<_>>())
             .collect();
+        for s in self.segments.read().unwrap().iter() {
+            ids.extend(s.base..s.end());
+        }
         ids.sort_unstable();
         ids
     }
@@ -227,6 +475,107 @@ mod tests {
         assert!(snap.ids.is_empty());
         assert!(snap.pos.is_empty());
         assert_eq!(snap.arena.n(), 0);
+    }
+
+    fn block_of(n: usize) -> crate::projection::sketcher::ColumnarBlock {
+        let sk = Sketcher::new(
+            ProjectionSpec::new(1, 4, ProjectionDist::Normal, Strategy::Basic),
+            4,
+        );
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|i| (0..12).map(|t| ((i * 7 + t) as f32 * 0.31).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        sk.sketch_block(&refs, 1)
+    }
+
+    #[test]
+    fn columnar_segments_roundtrip() {
+        let store = SketchStore::new(3);
+        let block = block_of(6);
+        store.insert_block_columnar(10, block.clone());
+        store.insert(3, sketch_of(1.0));
+        assert_eq!(store.len(), 7);
+        assert!(store.contains(3) && store.contains(10) && store.contains(15));
+        assert!(!store.contains(9) && !store.contains(16));
+        assert_eq!(store.ids(), vec![3, 10, 11, 12, 13, 14, 15]);
+        // Per-row reads materialize segment rows.
+        let rs = store.get(12).unwrap();
+        assert_eq!(rs.uside.u(1), block.u_row(1, 2));
+        assert_eq!(rs.moments.0.as_slice(), block.moments_row(2));
+        // Pair visits across map and segment rows.
+        assert!(store.with_pair(3, 12, |a, b| (a.moments.get(4), b.moments.get(4))).is_some());
+        assert!(store.with_pair(12, 14, |_, _| ()).is_some());
+        assert!(store.with_pair(12, 99, |_, _| ()).is_none());
+        // Storage accounting covers both representations.
+        assert_eq!(store.bytes(), sketch_of(1.0).sketch_bytes() + block.bytes());
+    }
+
+    #[test]
+    fn segment_snapshot_lands_blocks_contiguously() {
+        let store = SketchStore::new(2);
+        store.insert(0, sketch_of(1.0));
+        store.insert_block_columnar(5, block_of(4)); // ids 5..9
+        store.insert(20, sketch_of(2.0));
+        store.insert_block_columnar(9, block_of(2)); // ids 9..11, adjacent
+        let snap = store.arena_snapshot(4, 4);
+        assert_eq!(snap.ids, vec![0, 5, 6, 7, 8, 9, 10, 20]);
+        assert_eq!(snap.arena.n(), 8);
+        for (pos, &id) in snap.ids.iter().enumerate() {
+            assert_eq!(snap.pos[&id], pos);
+            let rs = store.get(id).unwrap();
+            for m in 1..4 {
+                assert_eq!(snap.arena.u_row(m, pos), rs.uside.u(m), "id {id} m {m}");
+            }
+            assert_eq!(snap.arena.norm_p(pos), rs.moments.get(4));
+        }
+    }
+
+    #[test]
+    fn estimate_pair_plain_matches_materialized_estimate() {
+        use crate::core::decompose::Decomposition;
+        use crate::core::estimator;
+        let dec = Decomposition::new(4).unwrap();
+        let store = SketchStore::new(3);
+        store.insert(1, sketch_of(1.5));
+        store.insert(2, sketch_of(-0.75));
+        store.insert_block_columnar(10, block_of(4)); // ids 10..14
+        // map×map, map×segment, segment×segment — all bitwise equal to
+        // the per-row estimator on materialized rows.
+        for (a, b) in [(1u64, 2u64), (1, 12), (12, 1), (10, 13)] {
+            let want = {
+                let (ra, rb) = (store.get(a).unwrap(), store.get(b).unwrap());
+                estimator::estimate(&dec, &ra, &rb)
+            };
+            let got = store.estimate_pair_plain(&dec, a, b).unwrap();
+            assert_eq!(got, want, "pair ({a},{b})");
+        }
+        assert!(store.estimate_pair_plain(&dec, 1, 99).is_none());
+        assert!(store.estimate_pair_plain(&dec, 99, 1).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "overlaps an existing segment")]
+    fn overlapping_segments_rejected() {
+        let store = SketchStore::new(1);
+        store.insert_block_columnar(10, block_of(4));
+        store.insert_block_columnar(12, block_of(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "collides with existing map row")]
+    fn segment_colliding_with_map_row_rejected() {
+        let store = SketchStore::new(2);
+        store.insert(12, sketch_of(1.0));
+        store.insert_block_columnar(10, block_of(6));
+    }
+
+    #[test]
+    fn empty_block_is_a_noop() {
+        let store = SketchStore::new(1);
+        store.insert_block_columnar(10, block_of(0));
+        assert!(store.is_empty());
+        assert!(store.ids().is_empty());
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! combine rule) needs. The margin MLE (Lemma 4) additionally consumes
 //! per-order norms and higher moments and stays on the per-row path.
 
-use crate::projection::sketcher::RowSketch;
+use crate::projection::sketcher::{ColumnarBlock, RowSketch};
 
 /// Columnar store of `n` rows' power sketches + marginal p-norms.
 #[derive(Clone, Debug)]
@@ -62,33 +62,11 @@ impl SketchArena {
     where
         I: IntoIterator<Item = (usize, &'a RowSketch)>,
     {
-        let orders = p - 1;
-        let mut u = vec![0.0f32; orders * n * k];
-        let mut v = two_sided.then(|| vec![0.0f32; orders * n * k]);
-        let mut norm_p = vec![0.0f64; n];
-        let mut filled = 0usize;
+        let mut b = ArenaBuilder::new(p, k, n, two_sided);
         for (i, rs) in rows {
-            assert!(i < n, "arena position {i} out of range (n={n})");
-            assert_eq!(rs.uside.k, k, "row {i}: sketch width mismatch");
-            assert_eq!(rs.uside.orders, orders, "row {i}: order count mismatch");
-            assert_eq!(
-                rs.vside_data.is_some(),
-                two_sided,
-                "row {i}: mixed one/two-sided rows"
-            );
-            for m in 1..=orders {
-                let off = ((m - 1) * n + i) * k;
-                u[off..off + k].copy_from_slice(rs.uside.u(m));
-                if let Some(vbuf) = v.as_mut() {
-                    vbuf[off..off + k]
-                        .copy_from_slice(rs.vside_data.as_ref().expect("two-sided").u(m));
-                }
-            }
-            norm_p[i] = rs.moments.get(p);
-            filled += 1;
+            b.set_row(i, rs);
         }
-        assert_eq!(filled, n, "arena expects every position filled exactly once");
-        SketchArena { p, orders, k, n, u, v, norm_p }
+        b.finish()
     }
 
     /// Arena with zero rows (valid input to every kernel).
@@ -163,6 +141,105 @@ impl SketchArena {
     }
 }
 
+/// Incremental [`SketchArena`] constructor: rows land either one at a
+/// time from per-row [`RowSketch`]es ([`ArenaBuilder::set_row`]) or as
+/// whole columnar ingest blocks ([`ArenaBuilder::set_block`] — one
+/// contiguous copy per order per side, since [`ColumnarBlock`] already
+/// uses the arena's order-major layout). Every position in `[0, n)`
+/// must be supplied exactly once before [`ArenaBuilder::finish`].
+pub struct ArenaBuilder {
+    p: usize,
+    orders: usize,
+    k: usize,
+    n: usize,
+    u: Vec<f32>,
+    v: Option<Vec<f32>>,
+    norm_p: Vec<f64>,
+    filled: usize,
+}
+
+impl ArenaBuilder {
+    pub fn new(p: usize, k: usize, n: usize, two_sided: bool) -> Self {
+        let orders = p - 1;
+        ArenaBuilder {
+            p,
+            orders,
+            k,
+            n,
+            u: vec![0.0f32; orders * n * k],
+            v: two_sided.then(|| vec![0.0f32; orders * n * k]),
+            norm_p: vec![0.0f64; n],
+            filled: 0,
+        }
+    }
+
+    /// Land one per-row sketch at arena position `i`.
+    pub fn set_row(&mut self, i: usize, rs: &RowSketch) {
+        let (n, k, orders) = (self.n, self.k, self.orders);
+        assert!(i < n, "arena position {i} out of range (n={n})");
+        assert_eq!(rs.uside.k, k, "row {i}: sketch width mismatch");
+        assert_eq!(rs.uside.orders, orders, "row {i}: order count mismatch");
+        assert_eq!(
+            rs.vside_data.is_some(),
+            self.v.is_some(),
+            "row {i}: mixed one/two-sided rows"
+        );
+        for m in 1..=orders {
+            let off = ((m - 1) * n + i) * k;
+            self.u[off..off + k].copy_from_slice(rs.uside.u(m));
+            if let Some(vbuf) = self.v.as_mut() {
+                vbuf[off..off + k]
+                    .copy_from_slice(rs.vside_data.as_ref().expect("two-sided").u(m));
+            }
+        }
+        self.norm_p[i] = rs.moments.get(self.p);
+        self.filled += 1;
+    }
+
+    /// Land a whole columnar block at arena positions
+    /// `[i0, i0 + block.rows())` — the ingest fast path: the block's
+    /// order panels are already arena-shaped, so each (order, side) is
+    /// a single `memcpy` and only the marginal p-norms are gathered
+    /// per row.
+    pub fn set_block(&mut self, i0: usize, block: &ColumnarBlock) {
+        let rows = block.rows();
+        let (n, k, orders) = (self.n, self.k, self.orders);
+        assert!(i0 + rows <= n, "block [{i0}, {}) out of range (n={n})", i0 + rows);
+        assert_eq!(block.k(), k, "block sketch width mismatch");
+        assert_eq!(block.orders(), orders, "block order count mismatch");
+        assert_eq!(
+            block.is_two_sided(),
+            self.v.is_some(),
+            "mixed one/two-sided blocks"
+        );
+        assert!(block.moment_orders() >= self.p, "block moments too short for p");
+        for m in 1..=orders {
+            let off = ((m - 1) * n + i0) * k;
+            self.u[off..off + rows * k].copy_from_slice(block.u_order(m));
+            if let Some(vbuf) = self.v.as_mut() {
+                vbuf[off..off + rows * k].copy_from_slice(block.v_order(m).expect("two-sided"));
+            }
+        }
+        for r in 0..rows {
+            self.norm_p[i0 + r] = block.moment(r, self.p);
+        }
+        self.filled += rows;
+    }
+
+    pub fn finish(self) -> SketchArena {
+        assert_eq!(self.filled, self.n, "arena expects every position filled exactly once");
+        SketchArena {
+            p: self.p,
+            orders: self.orders,
+            k: self.k,
+            n: self.n,
+            u: self.u,
+            v: self.v,
+            norm_p: self.norm_p,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,5 +297,69 @@ mod tests {
     fn rejects_inconsistent_k() {
         let rows = sketch_rows(Strategy::Basic, 4, 8, 2);
         SketchArena::from_rows(4, 16, &rows);
+    }
+
+    fn block_of(strategy: Strategy, p: usize, k: usize, n: usize) -> ColumnarBlock {
+        let sk = Sketcher::new(ProjectionSpec::new(7, k, ProjectionDist::Normal, strategy), p);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|i| (0..24).map(|t| ((i * 31 + t) as f32 * 0.11).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        sk.sketch_block(&refs, 2)
+    }
+
+    #[test]
+    fn builder_block_lands_verbatim() {
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let (p, k, n) = (4, 8, 5);
+            let block = block_of(strategy, p, k, n);
+            let mut b = ArenaBuilder::new(p, k, n, block.is_two_sided());
+            b.set_block(0, &block);
+            let arena = b.finish();
+            for r in 0..n {
+                for m in 1..p {
+                    assert_eq!(arena.u_row(m, r), block.u_row(m, r), "u m={m} r={r}");
+                    assert_eq!(arena.v_row(m, r), block.v_row(m, r), "v m={m} r={r}");
+                }
+                assert_eq!(arena.norm_p(r), block.moment(r, p));
+            }
+        }
+    }
+
+    #[test]
+    fn builder_mixes_blocks_and_rows() {
+        // A columnar block landed at an offset, per-row sketches around
+        // it — the store-snapshot shape (segments + hashmap rows).
+        let (p, k) = (4, 8);
+        let block = block_of(Strategy::Basic, p, k, 3);
+        let rows = sketch_rows(Strategy::Basic, p, k, 2);
+        let mut b = ArenaBuilder::new(p, k, 5, false);
+        b.set_row(0, &rows[0]);
+        b.set_block(1, &block);
+        b.set_row(4, &rows[1]);
+        let arena = b.finish();
+        assert_eq!(arena.u_row(2, 0), rows[0].uside.u(2));
+        for r in 0..3 {
+            assert_eq!(arena.u_row(2, 1 + r), block.u_row(2, r));
+        }
+        assert_eq!(arena.u_row(2, 4), rows[1].uside.u(2));
+        assert_eq!(arena.norm_p(2), block.moment(1, p));
+    }
+
+    #[test]
+    #[should_panic(expected = "filled exactly once")]
+    fn builder_rejects_partial_fill() {
+        let block = block_of(Strategy::Basic, 4, 8, 3);
+        let mut b = ArenaBuilder::new(4, 8, 5, false);
+        b.set_block(0, &block);
+        let _ = b.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed one/two-sided")]
+    fn builder_rejects_mixed_sidedness() {
+        let block = block_of(Strategy::Alternative, 4, 8, 3);
+        let mut b = ArenaBuilder::new(4, 8, 3, false);
+        b.set_block(0, &block);
     }
 }

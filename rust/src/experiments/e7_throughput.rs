@@ -20,7 +20,10 @@ use super::common::Acceptance;
 pub struct RowResult {
     pub d: usize,
     pub exact_s: f64,
+    /// Ingest wall-clock on the GEMM block path (the default).
     pub ingest_s: f64,
+    /// Ingest wall-clock on the per-row reference path.
+    pub ingest_per_row_s: f64,
     /// All-pairs wall-clock on the blocked arena path.
     pub pairs_s: f64,
     /// All-pairs wall-clock on the per-row reference path.
@@ -45,10 +48,20 @@ pub fn sweep(n: usize, k: usize, ds: &[usize], workers: usize) -> Vec<RowResult>
         cfg.d = d;
         cfg.n = n;
         cfg.workers = workers;
-        let pipeline = Pipeline::new(cfg).unwrap();
+        let pipeline = Pipeline::new(cfg.clone()).unwrap();
         let t1 = Instant::now();
         let report = pipeline.ingest(&data).unwrap();
         let ingest_s = t1.elapsed().as_secs_f64();
+        // Per-row reference ingest (old path) on an identical pipeline —
+        // the GEMM-vs-baseline ingest column.
+        let ingest_per_row_s = {
+            let mut cfg_pr = cfg.clone();
+            cfg_pr.ingest_gemm = false;
+            let per_row = Pipeline::new(cfg_pr).unwrap();
+            let t = Instant::now();
+            per_row.ingest(&data).unwrap();
+            t.elapsed().as_secs_f64()
+        };
         let t2 = Instant::now();
         let est = pipeline.all_pairs_condensed();
         let pairs_s = t2.elapsed().as_secs_f64();
@@ -67,6 +80,7 @@ pub fn sweep(n: usize, k: usize, ds: &[usize], workers: usize) -> Vec<RowResult>
             d,
             exact_s,
             ingest_s,
+            ingest_per_row_s,
             pairs_s,
             pairs_per_row_s,
             arena_abs_diff,
@@ -89,6 +103,8 @@ pub fn run(fast: bool) -> Vec<Acceptance> {
         "D",
         "exact_s",
         "ingest_s",
+        "ingest_pr_s",
+        "ingest_gain",
         "est_pairs_s",
         "per_row_s",
         "arena_gain",
@@ -101,6 +117,8 @@ pub fn run(fast: bool) -> Vec<Acceptance> {
             r.d.to_string(),
             format!("{:.3}", r.exact_s),
             format!("{:.3}", r.ingest_s),
+            format!("{:.3}", r.ingest_per_row_s),
+            format!("{:.1}x", r.ingest_per_row_s / r.ingest_s.max(1e-12)),
             format!("{:.3}", r.pairs_s),
             format!("{:.3}", r.pairs_per_row_s),
             format!("{:.1}x", r.pairs_per_row_s / r.pairs_s.max(1e-12)),
@@ -155,6 +173,16 @@ pub fn run(fast: bool) -> Vec<Acceptance> {
         format!(
             "arena {:.3}s vs per-row {:.3}s",
             last.pairs_s, last.pairs_per_row_s
+        ),
+    ));
+    // GEMM ingest vs per-row reference ingest (timing-based; the strict
+    // ≥2× measurement lives in benches/hotpath.rs → BENCH_ingest.json).
+    acc.push(Acceptance::check(
+        "gemm ingest not slower than per-row (timing, lenient)",
+        last.ingest_per_row_s / last.ingest_s.max(1e-12) > 0.5,
+        format!(
+            "gemm {:.3}s vs per-row {:.3}s at D={}",
+            last.ingest_s, last.ingest_per_row_s, last.d
         ),
     ));
     acc

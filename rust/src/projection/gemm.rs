@@ -1,0 +1,394 @@
+//! Register-tiled GEMM kernels for the sketch ingest hot path.
+//!
+//! The projection step (x^∘m)ᵀR (§2.1–2.2) is exactly a matmul of the
+//! power-expanded data block against R. The per-row reference path in
+//! [`super::sketcher`] walks it as a feature-outer axpy loop — one
+//! Hadamard ladder *per order touch* and one k-wide read-modify-write
+//! per (entry, order). This module restructures it GEMM-style:
+//!
+//! 1. [`expand_powers`] walks the ladder **once per data entry** (in
+//!    f64, so the marginal moments keep full precision) and lays the
+//!    f32 sketch powers out as an order-major `(orders·rows) × chunk`
+//!    matrix — `P_m` is a contiguous `rows × chunk` row-major panel.
+//! 2. [`gemm`] drives `C_m += P_m · R_chunk` through a 4-row × 8-lane
+//!    register micro-kernel ([`MR`]×[`NR`]) with the depth dimension
+//!    tiled by [`KC`]: the 4×8 accumulator block lives entirely in
+//!    registers across a depth tile, each `R` row is loaded once per
+//!    4 data rows, and each power is loaded once per 8 sketch lanes —
+//!    versus 2 loads + 1 store per FMA in the axpy formulation.
+//! 3. [`gemm_sparse`] is the CSR variant for sparse three-point
+//!    distributions: `R` nonzeros are walked row-by-row (the paper's §4
+//!    sparsity speedup), with the precomputed powers replacing the
+//!    per-order ladder recomputation.
+//!
+//! ## Loop order and determinism
+//!
+//! `gemm` nests depth-tile → lane-tile → row-strip, so the `R` panel of
+//! one (depth, lane) tile (≤ [`KC`]·[`NR`] floats ≈ 16 KiB) stays L1-
+//! resident while every row strip streams past it. For any output slot
+//! `(row, lane)` the accumulation sequence is: partial products in
+//! ascending feature order within a depth tile (in the register
+//! accumulator), tiles flushed to `C` in ascending depth order. That
+//! sequence depends only on the slot — not on which rows share a strip
+//! or lanes share a tile — so results are **bitwise independent of row
+//! banding**, which is what makes the worker-sharded block sketcher
+//! deterministic in its worker count.
+
+use super::matrix::ProjectionMatrix;
+
+/// Micro-kernel rows (register-blocked data rows per strip).
+pub const MR: usize = 4;
+/// Micro-kernel lanes (register-blocked sketch columns per tile).
+pub const NR: usize = 8;
+/// Depth (feature) tile: bounds the L1-resident `R` panel at
+/// `KC × NR` f32s and keeps the register accumulators hot across it.
+pub const KC: usize = 512;
+
+/// One entry's Hadamard ladder step, shared by every CPU sketch path
+/// (per-row reference, GEMM expansion, sparse-data axpy) so the f64
+/// moment / f32 sketch-power semantics can never diverge between the
+/// oracle and the tiled kernels: walk x, x², …, x^nm in f64, add each
+/// rung to the entry's moment row (`mrow`, length nm), and record the
+/// f32 casts of the first `orders` rungs in `pw`.
+///
+/// Callers are responsible for the `x == 0.0` skip (zero entries
+/// contribute nothing and each path handles the powers output shape
+/// differently).
+#[inline]
+pub(crate) fn power_ladder_update(x: f32, orders: usize, mrow: &mut [f64], pw: &mut [f32]) {
+    let xf = x as f64;
+    let mut ladder = 1.0f64;
+    for (m, slot) in mrow.iter_mut().enumerate() {
+        ladder *= xf;
+        if m < orders {
+            pw[m] = ladder as f32;
+        }
+        *slot += ladder;
+    }
+}
+
+/// Expand one D-chunk of every row into the order-major powers matrix
+/// and fold the chunk into the marginal moments.
+///
+/// * `powers[((m-1)·rows + r)·cl + t]` ← `x_r[start+t]^m` (f32) for
+///   m = 1..=orders — each `P_m` a contiguous `rows × cl` panel.
+/// * `moments[r·nm + (m-1)]` += `x_r[start+t]^m` (f64) for m = 1..=nm.
+///
+/// The ladder runs once per entry in f64: sketch powers are the f32
+/// casts of its rungs, while the high-order moments feeding the MLE
+/// cubic (`core::mle`) accumulate at full precision — an f32 ladder
+/// visibly loses digits by order 2(p−1) once |x| strays far from 1.
+pub fn expand_powers(
+    rows: &[&[f32]],
+    start: usize,
+    cl: usize,
+    orders: usize,
+    nm: usize,
+    powers: &mut [f32],
+    moments: &mut [f64],
+) {
+    let n = rows.len();
+    debug_assert!(powers.len() >= orders * n * cl);
+    debug_assert!(moments.len() >= n * nm);
+    debug_assert!(nm >= orders);
+    let mut pw = vec![0.0f32; orders];
+    for (r, row) in rows.iter().enumerate() {
+        let mrow = &mut moments[r * nm..(r + 1) * nm];
+        for (t, &x) in row[start..start + cl].iter().enumerate() {
+            if x == 0.0 {
+                // Zero entries contribute nothing; the powers slot still
+                // needs a write because the buffer is reused across chunks.
+                for m in 0..orders {
+                    powers[(m * n + r) * cl + t] = 0.0;
+                }
+                continue;
+            }
+            power_ladder_update(x, orders, mrow, &mut pw);
+            for m in 0..orders {
+                powers[(m * n + r) * cl + t] = pw[m];
+            }
+        }
+    }
+}
+
+/// `C += A · B`: C is `m × n` row-major, A `m × depth` row-major, B
+/// `depth × n` row-major. Register-tiled (see module docs); handles
+/// ragged edges (`m % MR != 0`, `n % NR != 0`) through an edge kernel
+/// with the identical per-slot accumulation sequence.
+pub fn gemm(c: &mut [f32], a: &[f32], b: &[f32], m: usize, depth: usize, n: usize) {
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert_eq!(a.len(), m * depth);
+    debug_assert_eq!(b.len(), depth * n);
+    let mut t0 = 0;
+    while t0 < depth {
+        let tc = KC.min(depth - t0);
+        let mut j0 = 0;
+        while j0 < n {
+            let jc = NR.min(n - j0);
+            let mut i0 = 0;
+            while i0 < m {
+                let ic = MR.min(m - i0);
+                if ic == MR && jc == NR {
+                    kernel_full(c, a, b, i0, j0, t0, tc, depth, n);
+                } else {
+                    kernel_edge(c, a, b, i0, ic, j0, jc, t0, tc, depth, n);
+                }
+                i0 += MR;
+            }
+            j0 += NR;
+        }
+        t0 += KC;
+    }
+}
+
+/// Full MR×NR micro-kernel: 32 f32 accumulators in registers across the
+/// depth tile, one B row load per 4 data rows.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn kernel_full(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    i0: usize,
+    j0: usize,
+    t0: usize,
+    tc: usize,
+    depth: usize,
+    n: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    let a0 = &a[i0 * depth + t0..][..tc];
+    let a1 = &a[(i0 + 1) * depth + t0..][..tc];
+    let a2 = &a[(i0 + 2) * depth + t0..][..tc];
+    let a3 = &a[(i0 + 3) * depth + t0..][..tc];
+    for t in 0..tc {
+        let bt = &b[(t0 + t) * n + j0..][..NR];
+        let (x0, x1, x2, x3) = (a0[t], a1[t], a2[t], a3[t]);
+        for j in 0..NR {
+            let bv = bt[j];
+            acc[0][j] += x0 * bv;
+            acc[1][j] += x1 * bv;
+            acc[2][j] += x2 * bv;
+            acc[3][j] += x3 * bv;
+        }
+    }
+    for (i, acc_row) in acc.iter().enumerate() {
+        let crow = &mut c[(i0 + i) * n + j0..][..NR];
+        for j in 0..NR {
+            crow[j] += acc_row[j];
+        }
+    }
+}
+
+/// Ragged-edge kernel (`ic ≤ MR` rows, `jc ≤ NR` lanes). Same per-slot
+/// accumulation sequence as [`kernel_full`] so tiling stays bitwise
+/// consistent across shapes.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn kernel_edge(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    i0: usize,
+    ic: usize,
+    j0: usize,
+    jc: usize,
+    t0: usize,
+    tc: usize,
+    depth: usize,
+    n: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for t in 0..tc {
+        let bt = &b[(t0 + t) * n + j0..][..jc];
+        for i in 0..ic {
+            let x = a[(i0 + i) * depth + t0 + t];
+            for j in 0..jc {
+                acc[i][j] += x * bt[j];
+            }
+        }
+    }
+    for i in 0..ic {
+        let crow = &mut c[(i0 + i) * n + j0..][..jc];
+        for j in 0..jc {
+            crow[j] += acc[i][j];
+        }
+    }
+}
+
+/// CSR-like nonzero list of a materialized R chunk — built once per
+/// chunk, shared across every row in the batch (the sparse three-point
+/// distributions are 1−1/s zeros; touching only nonzeros is the paper's
+/// §4 "sparsity speedup").
+#[derive(Debug)]
+pub(crate) struct SparseChunk {
+    row0: usize,
+    /// Prefix offsets, len rows+1.
+    offsets: Vec<u32>,
+    /// (column, value) pairs of nonzeros, row-major.
+    nnz: Vec<(u32, f32)>,
+}
+
+impl SparseChunk {
+    pub(crate) fn from_dense(mat: &ProjectionMatrix) -> Self {
+        let mut offsets = Vec::with_capacity(mat.rows + 1);
+        let mut nnz = Vec::new();
+        offsets.push(0u32);
+        for i in 0..mat.rows {
+            let row = &mat.data[i * mat.k..(i + 1) * mat.k];
+            for (j, &r) in row.iter().enumerate() {
+                if r != 0.0 {
+                    nnz.push((j as u32, r));
+                }
+            }
+            offsets.push(nnz.len() as u32);
+        }
+        SparseChunk { row0: mat.row0, offsets, nnz }
+    }
+
+    /// Nonzeros of absolute feature row `i` (offset by the chunk start).
+    #[inline]
+    pub(crate) fn row(&self, i: usize) -> &[(u32, f32)] {
+        let r = i - self.row0;
+        &self.nnz[self.offsets[r] as usize..self.offsets[r + 1] as usize]
+    }
+}
+
+/// Sparse counterpart of [`gemm`]: `C += P · R` where `R`'s chunk rows
+/// `[start, start+cl)` are given as CSR nonzeros. `P` is the `rows × cl`
+/// powers panel of one order; rows with an underflowed (exactly zero)
+/// power skip the R row entirely.
+pub(crate) fn gemm_sparse(
+    c: &mut [f32],
+    a: &[f32],
+    sp: &SparseChunk,
+    start: usize,
+    rows: usize,
+    cl: usize,
+    k: usize,
+) {
+    debug_assert_eq!(c.len(), rows * k);
+    debug_assert_eq!(a.len(), rows * cl);
+    for r in 0..rows {
+        let arow = &a[r * cl..(r + 1) * cl];
+        let crow = &mut c[r * k..(r + 1) * k];
+        for (t, &pw) in arow.iter().enumerate() {
+            if pw == 0.0 {
+                continue;
+            }
+            for &(j, v) in sp.row(start + t) {
+                crow[j as usize] += pw * v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive triple loop C += A·B in the exact per-slot order the tiled
+    /// kernel uses within one depth tile (t ascending).
+    fn naive_gemm(c: &mut [f32], a: &[f32], b: &[f32], m: usize, depth: usize, n: usize) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for t in 0..depth {
+                    acc += (a[i * depth + t] as f64) * (b[t * n + j] as f64);
+                }
+                c[i * n + j] += acc as f32;
+            }
+        }
+    }
+
+    fn pattern(len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|i| ((i * 37 % 23) as f32 - 11.0) * scale).collect()
+    }
+
+    #[test]
+    fn tiled_matches_naive_over_ragged_shapes() {
+        // Shapes straddle every tile edge: m % MR, n % NR, depth % KC.
+        for &(m, depth, n) in &[
+            (1usize, 1usize, 1usize),
+            (4, 16, 8),
+            (5, 17, 9),
+            (3, 600, 7),
+            (8, 513, 16),
+            (13, 1025, 12),
+        ] {
+            let a = pattern(m * depth, 0.01);
+            let b = pattern(depth * n, 0.02);
+            let mut c = pattern(m * n, 0.5);
+            let mut want = c.clone();
+            gemm(&mut c, &a, &b, m, depth, n);
+            naive_gemm(&mut want, &a, &b, m, depth, n);
+            for (i, (&g, &w)) in c.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-3 * (1.0 + w.abs()),
+                    "shape ({m},{depth},{n}) slot {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn expand_powers_walks_the_ladder_once() {
+        let r0: Vec<f32> = vec![0.5, -2.0, 0.0, 3.0];
+        let r1: Vec<f32> = vec![1.5, 0.25, -1.0, 0.0];
+        let rows: Vec<&[f32]> = vec![&r0, &r1];
+        let (orders, nm, cl) = (3usize, 6usize, 4usize);
+        let mut powers = vec![f32::NAN; orders * 2 * cl];
+        let mut moments = vec![0.0f64; 2 * nm];
+        expand_powers(&rows, 0, cl, orders, nm, &mut powers, &mut moments);
+        for (r, row) in rows.iter().enumerate() {
+            for m in 1..=orders {
+                for (t, &x) in row.iter().enumerate() {
+                    let want = (x as f64).powi(m as i32) as f32;
+                    let got = powers[((m - 1) * 2 + r) * cl + t];
+                    assert!((got - want).abs() <= 1e-6 * (1.0 + want.abs()), "r={r} m={m} t={t}");
+                }
+            }
+            for m in 1..=nm {
+                let want: f64 = row.iter().map(|&x| (x as f64).powi(m as i32)).sum();
+                let got = moments[r * nm + (m - 1)];
+                assert!((got - want).abs() <= 1e-9 * (1.0 + want.abs()), "moment r={r} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn expand_powers_overwrites_reused_buffer() {
+        // Buffer reuse across chunks must not leak stale values through
+        // the zero-entry skip path.
+        let row: Vec<f32> = vec![0.0, 0.0];
+        let rows: Vec<&[f32]> = vec![&row];
+        let mut powers = vec![7.0f32; 2 * 2];
+        let mut moments = vec![0.0f64; 4];
+        expand_powers(&rows, 0, 2, 2, 4, &mut powers, &mut moments);
+        assert!(powers.iter().all(|&p| p == 0.0));
+        assert!(moments.iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn sparse_matches_dense_gemm() {
+        // A mostly-zero B in both dense and CSR form.
+        let (rows, cl, k) = (5usize, 40usize, 9usize);
+        let mut bdata = vec![0.0f32; cl * k];
+        for t in 0..cl {
+            if t % 3 == 0 {
+                bdata[t * k + (t * 7) % k] = 1.5;
+                bdata[t * k + (t * 5 + 2) % k] = -0.5;
+            }
+        }
+        let mat = ProjectionMatrix { row0: 100, rows: cl, k, data: bdata.clone() };
+        let sp = SparseChunk::from_dense(&mat);
+        let a = pattern(rows * cl, 0.1);
+        let mut dense = vec![0.0f32; rows * k];
+        let mut sparse = vec![0.0f32; rows * k];
+        gemm(&mut dense, &a, &bdata, rows, cl, k);
+        gemm_sparse(&mut sparse, &a, &sp, 100, rows, cl, k);
+        for (i, (&s, &d)) in sparse.iter().zip(&dense).enumerate() {
+            assert!((s - d).abs() <= 1e-4 * (1.0 + d.abs()), "slot {i}: {s} vs {d}");
+        }
+    }
+}

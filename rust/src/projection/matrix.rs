@@ -48,14 +48,28 @@ impl ProjectionSpec {
 
     /// Materialize rows `[row0, row0 + rows)` of R^(m), row-major f32.
     pub fn materialize(&self, m: usize, row0: usize, rows: usize) -> ProjectionMatrix {
+        let mut data = vec![0.0f32; rows * self.k];
+        self.materialize_into(m, row0, rows, &mut data);
+        ProjectionMatrix { row0, rows, k: self.k, data }
+    }
+
+    /// Row-batched generation: fill `out` (`rows × k` row-major,
+    /// preallocated) with rows `[row0, row0 + rows)` of R^(m). This is
+    /// the path that feeds the GEMM sketch tiles — counter-hash output
+    /// lands by direct slice writes, with no per-entry `Vec::push`
+    /// capacity checks on the generation hot loop.
+    pub fn materialize_into(&self, m: usize, row0: usize, rows: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), rows * self.k, "materialize_into buffer shape");
+        if self.k == 0 {
+            return;
+        }
         let seed = self.seed_for_order(m);
-        let mut data = Vec::with_capacity(rows * self.k);
-        for i in 0..rows {
-            for j in 0..self.k {
-                data.push(self.dist.entry(seed, (row0 + i) as u64, j as u64) as f32);
+        for (i, row) in out.chunks_mut(self.k).enumerate() {
+            let gi = (row0 + i) as u64;
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = self.dist.entry(seed, gi, j as u64) as f32;
             }
         }
-        ProjectionMatrix { row0, rows, k: self.k, data }
     }
 
     /// Number of distinct matrices the strategy needs for `orders` orders.
@@ -118,6 +132,25 @@ mod tests {
         assert_ne!(s.materialize(1, 0, 4).data, s.materialize(2, 0, 4).data);
         assert_ne!(s.materialize(2, 0, 4).data, s.materialize(3, 0, 4).data);
         assert_eq!(s.matrix_count(3), 3);
+    }
+
+    #[test]
+    fn materialize_into_matches_materialize() {
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let s = spec(strategy);
+            let whole = s.materialize(2, 5, 12);
+            let mut buf = vec![f32::NAN; 12 * s.k];
+            s.materialize_into(2, 5, 12, &mut buf);
+            assert_eq!(whole.data, buf);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer shape")]
+    fn materialize_into_rejects_misshaped_buffer() {
+        let s = spec(Strategy::Basic);
+        let mut buf = vec![0.0f32; 7];
+        s.materialize_into(1, 0, 4, &mut buf);
     }
 
     #[test]

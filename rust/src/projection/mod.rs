@@ -1,6 +1,8 @@
 //! Random projection layer: distributions, reproducible chunked matrix
-//! generation, and the pure-rust sketcher (CPU fallback / baseline).
+//! generation, the register-tiled GEMM sketch kernels, and the pure-rust
+//! sketcher (CPU fallback / baseline).
 
+pub mod gemm;
 pub mod matrix;
 pub mod sketcher;
 pub mod subgaussian;

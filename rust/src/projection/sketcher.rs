@@ -5,10 +5,24 @@
 //! experiments, which need millions of small sketches where PJRT dispatch
 //! overhead would dominate.
 //!
-//! The layout mirrors the kernel exactly: one pass over x per D-chunk,
-//! Hadamard power ladder in registers, all sketch orders updated from the
-//! same resident R chunk. Sparse three-point distributions take a skip
-//! path (zero entries never touch the accumulators).
+//! Two CPU paths share the chunked-R machinery:
+//!
+//! * [`Sketcher::sketch_rows`] — the per-row reference path: one pass
+//!   over x per D-chunk, Hadamard power ladder per entry, feature-outer
+//!   axpy into per-row [`RowSketch`]es. Kept as the oracle the tiled
+//!   path is property-tested and benchmarked against.
+//! * [`Sketcher::sketch_block`] / [`Sketcher::sketch_block_into`] — the
+//!   ingest hot path: per D-chunk the data block is power-expanded
+//!   *once* into an order-major powers matrix, then the register-tiled
+//!   GEMM micro-kernels in [`super::gemm`] project it against the
+//!   materialized R chunk (CSR variant for sparse three-point R),
+//!   sharded row-band-wise across worker threads. Output lands directly
+//!   in a [`ColumnarBlock`] — the `SketchArena` order-major layout — so
+//!   block ingest never allocates per-row AoS sketches and the
+//!   store→arena repack disappears.
+//!
+//! Sparse three-point distributions take a skip path on both routes
+//! (zero R entries never touch the accumulators).
 //!
 //! ## Sides (alternative strategy)
 //!
@@ -22,8 +36,9 @@
 //! (Basic strategy: the sides coincide and only one set is stored.)
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
+use super::gemm::{self, SparseChunk};
 use super::matrix::{ProjectionMatrix, ProjectionSpec};
 use super::Strategy;
 use crate::core::marginals::Moments;
@@ -107,11 +122,191 @@ impl RowSketch {
     }
 }
 
+/// Columnar (arena-layout) sketches + moments of one ingested block:
+/// the structure-of-arrays output of [`Sketcher::sketch_block_into`].
+///
+/// Layout matches [`crate::core::arena::SketchArena`] exactly —
+/// order-major sketch panels (`u[((m-1)·rows + r)·k ..][..k]` is u_m of
+/// block row `r`) — so landing a block in the arena (or a store
+/// segment) is one contiguous copy per order per side, with no per-row
+/// AoS allocation in between. Moments are row-major f64 (`rows × nm`,
+/// nm = 2(p−1)), everything `core/mle.rs` consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnarBlock {
+    orders: usize,
+    k: usize,
+    /// Moment orders per row (2(p−1)).
+    nm: usize,
+    rows: usize,
+    /// Order-major u-side sketches.
+    u: Vec<f32>,
+    /// Order-major v-side sketches (alternative strategy only); `None`
+    /// ⇒ the sides coincide, mirroring [`RowSketch::vside`].
+    v: Option<Vec<f32>>,
+    /// Row-major marginal moments Σ x^m, m = 1..=nm, f64.
+    moments: Vec<f64>,
+}
+
+impl ColumnarBlock {
+    pub fn zeros(orders: usize, k: usize, nm: usize, rows: usize, two_sided: bool) -> Self {
+        ColumnarBlock {
+            orders,
+            k,
+            nm,
+            rows,
+            u: vec![0.0; orders * rows * k],
+            v: two_sided.then(|| vec![0.0; orders * rows * k]),
+            moments: vec![0.0; rows * nm],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn orders(&self) -> usize {
+        self.orders
+    }
+
+    pub fn moment_orders(&self) -> usize {
+        self.nm
+    }
+
+    pub fn is_two_sided(&self) -> bool {
+        self.v.is_some()
+    }
+
+    /// u_m sketch of block row `r`.
+    #[inline]
+    pub fn u_row(&self, m: usize, r: usize) -> &[f32] {
+        debug_assert!(m >= 1 && m <= self.orders && r < self.rows);
+        let off = ((m - 1) * self.rows + r) * self.k;
+        &self.u[off..off + self.k]
+    }
+
+    /// v_m sketch of block row `r`; falls back to the u side under the
+    /// basic strategy (the sides coincide).
+    #[inline]
+    pub fn v_row(&self, m: usize, r: usize) -> &[f32] {
+        match &self.v {
+            Some(v) => {
+                debug_assert!(m >= 1 && m <= self.orders && r < self.rows);
+                let off = ((m - 1) * self.rows + r) * self.k;
+                &v[off..off + self.k]
+            }
+            None => self.u_row(m, r),
+        }
+    }
+
+    /// The contiguous `rows × k` u-side panel of order `m`.
+    pub fn u_order(&self, m: usize) -> &[f32] {
+        debug_assert!(m >= 1 && m <= self.orders);
+        let off = (m - 1) * self.rows * self.k;
+        &self.u[off..off + self.rows * self.k]
+    }
+
+    /// The contiguous `rows × k` v-side panel of order `m`
+    /// (`None` under the basic strategy).
+    pub fn v_order(&self, m: usize) -> Option<&[f32]> {
+        self.v.as_ref().map(|v| {
+            debug_assert!(m >= 1 && m <= self.orders);
+            let off = (m - 1) * self.rows * self.k;
+            &v[off..off + self.rows * self.k]
+        })
+    }
+
+    /// All moments of block row `r` (orders 1..=nm).
+    #[inline]
+    pub fn moments_row(&self, r: usize) -> &[f64] {
+        &self.moments[r * self.nm..(r + 1) * self.nm]
+    }
+
+    /// Σ x^order of block row `r` (order >= 1).
+    #[inline]
+    pub fn moment(&self, r: usize, order: usize) -> f64 {
+        self.moments_row(r)[order - 1]
+    }
+
+    /// Materialize block row `r` as a per-row [`RowSketch`] (the
+    /// reference/AoS view — MLE queries and persistence use it).
+    pub fn to_row_sketch(&self, r: usize) -> RowSketch {
+        assert!(r < self.rows, "block row {r} out of range ({})", self.rows);
+        let mut uside = SketchSet::zeros(self.orders, self.k);
+        for m in 1..=self.orders {
+            uside.u_mut(m).copy_from_slice(self.u_row(m, r));
+        }
+        let vside_data = self.v.as_ref().map(|_| {
+            let mut s = SketchSet::zeros(self.orders, self.k);
+            for m in 1..=self.orders {
+                s.u_mut(m).copy_from_slice(self.v_row(m, r));
+            }
+            s
+        });
+        RowSketch { uside, vside_data, moments: Moments(self.moments_row(r).to_vec()) }
+    }
+
+    /// Payload bytes (storage accounting, mirrors
+    /// [`RowSketch::sketch_bytes`] summed over the block).
+    pub fn bytes(&self) -> usize {
+        let floats = self.u.len() + self.v.as_ref().map_or(0, |v| v.len());
+        floats * std::mem::size_of::<f32>() + self.moments.len() * std::mem::size_of::<f64>()
+    }
+}
+
+/// Split each order-major `n × k` panel of `buf` into per-worker row
+/// bands: `result[w][m-1]` is worker `w`'s `counts[w] × k` slice of
+/// order `m` — the disjoint mutable views the banded GEMM workers write.
+fn split_order_bands<'a>(
+    buf: &'a mut [f32],
+    n: usize,
+    k: usize,
+    counts: &[usize],
+) -> Vec<Vec<&'a mut [f32]>> {
+    let mut bands: Vec<Vec<&'a mut [f32]>> = counts.iter().map(|_| Vec::new()).collect();
+    for order_panel in buf.chunks_mut(n * k) {
+        let mut rest = order_panel;
+        for (w, &count) in counts.iter().enumerate() {
+            let (head, tail) = rest.split_at_mut(count * k);
+            bands[w].push(head);
+            rest = tail;
+        }
+    }
+    bands
+}
+
 /// One materialized chunk of every projection matrix (+ the sparse
 /// representation when the distribution is mostly zeros).
 struct Chunk {
     mats: Vec<ProjectionMatrix>,
     sparse: Option<Vec<SparseChunk>>,
+}
+
+/// Default memory budget for cached R chunks (estimated bytes). At the
+/// default chunk = 2048 and k = 128 (basic strategy) one chunk is ~1 MiB,
+/// so the budget covers D up to ~512k fully cached.
+const CHUNK_CACHE_BUDGET_BYTES: usize = 256 << 20;
+
+/// Chunk cache: each key maps to a once-cell so exactly one thread
+/// materializes a chunk while concurrent requesters block on the cell —
+/// not on the map lock, which is only held to look up / register keys.
+///
+/// Admission is budgeted, not evicting: chunks are cached first-come
+/// until the byte budget is spent, and later chunks are materialized
+/// uncached. For the pipeline's cyclic access pattern (every block walks
+/// chunks 0..D/chunk in order) a pinned prefix keeps a `budget/total`
+/// hit rate where LRU/FIFO eviction would degrade to zero hits the
+/// moment one pass exceeds the capacity — and varying chunk sizes
+/// (tests, reconfigured sketchers) still cannot grow the map without
+/// bound.
+#[derive(Debug, Default)]
+struct ChunkCache {
+    map: HashMap<(usize, usize), Arc<OnceLock<Arc<Chunk>>>>,
+    /// Estimated bytes admitted so far.
+    bytes: usize,
 }
 
 /// Sketching engine: owns the spec and chunking policy.
@@ -120,7 +315,11 @@ struct Chunk {
 /// so blocks streaming through the pipeline reuse the same chunk instead
 /// of re-running the counter-based sampler per block — EXPERIMENTS.md
 /// §Perf iteration 2). The cache is keyed by chunk start and safe to
-/// share across worker threads via `&self`.
+/// share across worker threads via `&self`: the entry-style once-cells
+/// guarantee a chunk is materialized exactly once even under races, and
+/// budgeted first-come admission ([`Sketcher::cache_budget`], no
+/// eviction — see [`ChunkCache`]) bounds resident bytes even when chunk
+/// sizes vary.
 #[derive(Debug)]
 pub struct Sketcher {
     pub spec: ProjectionSpec,
@@ -128,13 +327,22 @@ pub struct Sketcher {
     /// D-chunk size for materializing R (bounds memory at chunk × k × 4B
     /// per order-matrix).
     pub chunk: usize,
-    cache: Mutex<HashMap<(usize, usize), Arc<Chunk>>>,
+    /// Byte budget for the chunk cache (see [`ChunkCache`]); chunks past
+    /// the budget are materialized uncached.
+    pub cache_budget: usize,
+    cache: Mutex<ChunkCache>,
 }
 
 impl Clone for Sketcher {
     fn clone(&self) -> Self {
         // The cache is a derived artifact; clones start cold.
-        Sketcher { spec: self.spec.clone(), p: self.p, chunk: self.chunk, cache: Mutex::new(HashMap::new()) }
+        Sketcher {
+            spec: self.spec.clone(),
+            p: self.p,
+            chunk: self.chunk,
+            cache_budget: self.cache_budget,
+            cache: Mutex::new(ChunkCache::default()),
+        }
     }
 }
 
@@ -146,21 +354,75 @@ impl std::fmt::Debug for Chunk {
 
 impl Sketcher {
     pub fn new(spec: ProjectionSpec, p: usize) -> Self {
-        Sketcher { spec, p, chunk: 2048, cache: Mutex::new(HashMap::new()) }
+        Sketcher {
+            spec,
+            p,
+            chunk: 2048,
+            cache_budget: CHUNK_CACHE_BUDGET_BYTES,
+            cache: Mutex::new(ChunkCache::default()),
+        }
     }
 
-    /// The materialized (and cached) chunk `[start, start+len)`.
-    fn chunk_at(&self, start: usize, len: usize) -> Arc<Chunk> {
-        if let Some(c) = self.cache.lock().unwrap().get(&(start, len)) {
-            return c.clone();
+    /// Estimated resident bytes of one materialized chunk of `len` rows
+    /// (dense matrices per order + the CSR mirror for sparse
+    /// distributions), used for cache admission.
+    fn chunk_bytes_estimate(&self, len: usize) -> usize {
+        let mats = self.spec.matrix_count(self.orders());
+        let dense = mats * len * self.spec.k * std::mem::size_of::<f32>();
+        if self.spec.dist.sparsity() > 0.5 {
+            // CSR offsets + (col, val) pairs; nonzeros ≤ dense entries.
+            dense + dense / 2
+        } else {
+            dense
         }
+    }
+
+    fn materialize_chunk(&self, start: usize, len: usize) -> Arc<Chunk> {
         let n_mats = self.spec.matrix_count(self.orders());
         let mats: Vec<_> = (1..=n_mats).map(|id| self.spec.materialize(id, start, len)).collect();
         let sparse = (self.spec.dist.sparsity() > 0.5)
             .then(|| mats.iter().map(SparseChunk::from_dense).collect());
-        let chunk = Arc::new(Chunk { mats, sparse });
-        self.cache.lock().unwrap().insert((start, len), chunk.clone());
-        chunk
+        Arc::new(Chunk { mats, sparse })
+    }
+
+    /// The materialized (and, budget permitting, cached) chunk
+    /// `[start, start+len)`.
+    ///
+    /// A single critical section resolves the cache entry;
+    /// materialization itself happens inside the entry's once-cell, so
+    /// two workers racing on the same chunk never materialize it twice,
+    /// and workers needing *different* chunks don't serialize behind
+    /// each other's materialization. Past [`Sketcher::cache_budget`]
+    /// chunks are materialized uncached (see [`ChunkCache`] for why the
+    /// pinned prefix beats eviction here).
+    fn chunk_at(&self, start: usize, len: usize) -> Arc<Chunk> {
+        let admitted = {
+            let mut cache = self.cache.lock().unwrap();
+            match cache.map.get(&(start, len)) {
+                Some(cell) => Some(cell.clone()),
+                None => {
+                    let est = self.chunk_bytes_estimate(len);
+                    if cache.bytes + est <= self.cache_budget {
+                        let cell: Arc<OnceLock<Arc<Chunk>>> = Arc::new(OnceLock::new());
+                        cache.map.insert((start, len), cell.clone());
+                        cache.bytes += est;
+                        Some(cell)
+                    } else {
+                        None
+                    }
+                }
+            }
+        };
+        match admitted {
+            Some(cell) => cell.get_or_init(|| self.materialize_chunk(start, len)).clone(),
+            None => self.materialize_chunk(start, len),
+        }
+    }
+
+    /// Estimated bytes currently admitted to the chunk cache (test hook).
+    #[cfg(test)]
+    fn cached_bytes(&self) -> usize {
+        self.cache.lock().unwrap().bytes
     }
 
     pub fn orders(&self) -> usize {
@@ -216,6 +478,219 @@ impl Sketcher {
         self.sketch_rows(&[row]).pop().unwrap()
     }
 
+    /// Sketch a batch of rows through the register-tiled GEMM path into
+    /// a freshly allocated [`ColumnarBlock`] (arena layout). `workers`
+    /// shards the batch row-band-wise via `std::thread::scope`; results
+    /// are bitwise independent of the worker count.
+    pub fn sketch_block(&self, rows: &[&[f32]], workers: usize) -> ColumnarBlock {
+        let two_sided = matches!(self.spec.strategy, Strategy::Alternative);
+        let mut out = ColumnarBlock::zeros(
+            self.orders(),
+            self.spec.k,
+            self.moment_orders(),
+            rows.len(),
+            two_sided,
+        );
+        self.sketch_block_into(rows, workers, &mut out);
+        out
+    }
+
+    /// GEMM-sketch `rows` into a caller-owned [`ColumnarBlock`]
+    /// (overwritten, not accumulated). See [`super::gemm`] for the
+    /// kernel structure; per D-chunk the data is power-expanded once and
+    /// every order is projected from the same resident R chunk.
+    ///
+    /// Panics if `out`'s shape (rows, orders, k, moment orders,
+    /// sidedness) disagrees with this sketcher / batch.
+    pub fn sketch_block_into(&self, rows: &[&[f32]], workers: usize, out: &mut ColumnarBlock) {
+        let n = rows.len();
+        let orders = self.orders();
+        let nm = self.moment_orders();
+        let k = self.spec.k;
+        let two_sided = matches!(self.spec.strategy, Strategy::Alternative);
+        assert_eq!(out.rows, n, "block row count mismatch");
+        assert_eq!(out.orders, orders, "block order count mismatch");
+        assert_eq!(out.k, k, "block sketch width mismatch");
+        assert_eq!(out.nm, nm, "block moment count mismatch");
+        assert_eq!(out.v.is_some(), two_sided, "block sidedness mismatch");
+        out.u.fill(0.0);
+        if let Some(v) = out.v.as_mut() {
+            v.fill(0.0);
+        }
+        out.moments.fill(0.0);
+        if n == 0 {
+            return;
+        }
+        let d = rows[0].len();
+        for r in rows {
+            assert_eq!(r.len(), d, "ragged row batch");
+        }
+        if d == 0 {
+            return;
+        }
+        // Route selection: a dense GEMM spends an FMA on every (entry,
+        // order, lane) — zeros included. On mostly-zero data (sparse
+        // term-frequency rows are the project's default workload) the
+        // per-entry axpy route skips zero entries outright, which the
+        // per-row baseline also does; matching it keeps the block path
+        // a strict win on both dense and sparse data. The counting pass
+        // is cheap next to sketching, and skipped entirely for sparse R
+        // (its CSR kernel already skips zero powers per entry, so
+        // `data_sparse` would never be consulted).
+        let data_sparse = self.spec.dist.sparsity() <= 0.5 && {
+            let nnz: usize = rows
+                .iter()
+                .map(|r| r.iter().filter(|&&x| x != 0.0).count())
+                .sum();
+            2 * nnz < n * d
+        };
+        let nw = workers.max(1).min(n);
+        // Row bands, as even as possible (the first `rem` get one extra).
+        let per = n / nw;
+        let rem = n % nw;
+        let counts: Vec<usize> = (0..nw).map(|w| per + usize::from(w < rem)).collect();
+        let u_bands = split_order_bands(&mut out.u, n, k, &counts);
+        let v_bands = out.v.as_mut().map(|v| split_order_bands(v, n, k, &counts));
+        let mut mom_bands: Vec<&mut [f64]> = Vec::with_capacity(nw);
+        {
+            let mut rest: &mut [f64] = &mut out.moments;
+            for &c in &counts {
+                let (head, tail) = rest.split_at_mut(c * nm);
+                mom_bands.push(head);
+                rest = tail;
+            }
+        }
+        if nw == 1 {
+            let u = u_bands.into_iter().next().unwrap();
+            let v = v_bands.map(|b| b.into_iter().next().unwrap());
+            let m = mom_bands.into_iter().next().unwrap();
+            self.sketch_band(rows, u, v, m, data_sparse);
+            return;
+        }
+        std::thread::scope(|scope| {
+            let mut v_iter = v_bands.map(|b| b.into_iter());
+            let mut row0 = 0usize;
+            for ((&count, u), m) in counts.iter().zip(u_bands).zip(mom_bands) {
+                let band = &rows[row0..row0 + count];
+                let v = v_iter.as_mut().map(|it| it.next().unwrap());
+                scope.spawn(move || self.sketch_band(band, u, v, m, data_sparse));
+                row0 += count;
+            }
+        });
+    }
+
+    /// Matrix index (into a [`Chunk`]'s `mats`) for matrix id `id`:
+    /// the basic strategy shares one matrix, the alternative strategy
+    /// materializes one per order.
+    #[inline]
+    fn mat_index(&self, id: usize) -> usize {
+        match self.spec.strategy {
+            Strategy::Basic => 0,
+            Strategy::Alternative => id - 1,
+        }
+    }
+
+    /// GEMM-sketch one contiguous row band: per D-chunk, expand the
+    /// band's powers once, then one `P_m · R` product per (order, side).
+    /// `u`/`v` hold one `band_rows × k` output panel per order.
+    ///
+    /// `data_sparse` routes mostly-zero data (with a dense R) through a
+    /// per-entry axpy that skips zeros — the ladder is still computed
+    /// once per entry, the output is still columnar, only the matmul
+    /// shape changes. Sparse R ([`gemm::gemm_sparse`]) already skips
+    /// zero powers per entry, so it keeps the GEMM route.
+    fn sketch_band(
+        &self,
+        rows: &[&[f32]],
+        mut u: Vec<&mut [f32]>,
+        mut v: Option<Vec<&mut [f32]>>,
+        moments: &mut [f64],
+        data_sparse: bool,
+    ) {
+        let orders = self.orders();
+        let nm = self.moment_orders();
+        let k = self.spec.k;
+        let br = rows.len();
+        if br == 0 {
+            return;
+        }
+        let d = rows[0].len();
+        let mut powers = vec![0.0f32; orders * br * self.chunk.min(d)];
+        let mut start = 0usize;
+        while start < d {
+            let cl = self.chunk.min(d - start);
+            let chunk = self.chunk_at(start, cl);
+            if data_sparse && chunk.sparse.is_none() {
+                self.axpy_chunk_columnar(rows, start, cl, &chunk.mats, &mut u, &mut v, moments);
+                start += cl;
+                continue;
+            }
+            gemm::expand_powers(rows, start, cl, orders, nm, &mut powers, moments);
+            for m in 1..=orders {
+                let panel = &powers[(m - 1) * br * cl..m * br * cl];
+                let ui = self.mat_index(m);
+                match &chunk.sparse {
+                    Some(sp) => {
+                        gemm::gemm_sparse(&mut u[m - 1], panel, &sp[ui], start, br, cl, k);
+                        if let Some(vb) = v.as_mut() {
+                            let vi = self.mat_index(self.p - m);
+                            gemm::gemm_sparse(&mut vb[m - 1], panel, &sp[vi], start, br, cl, k);
+                        }
+                    }
+                    None => {
+                        gemm::gemm(&mut u[m - 1], panel, &chunk.mats[ui].data, br, cl, k);
+                        if let Some(vb) = v.as_mut() {
+                            let vi = self.mat_index(self.p - m);
+                            gemm::gemm(&mut vb[m - 1], panel, &chunk.mats[vi].data, br, cl, k);
+                        }
+                    }
+                }
+            }
+            start += cl;
+        }
+    }
+
+    /// Sparse-data route of [`Sketcher::sketch_band`]: for each nonzero
+    /// entry, one f64 ladder + one k-wide axpy per (order, side) into
+    /// the columnar panels. Per-(row, lane) accumulation runs in
+    /// ascending feature order, so this route is also bitwise
+    /// independent of the worker banding.
+    #[allow(clippy::too_many_arguments)]
+    fn axpy_chunk_columnar(
+        &self,
+        rows: &[&[f32]],
+        start: usize,
+        cl: usize,
+        mats: &[ProjectionMatrix],
+        u: &mut [&mut [f32]],
+        v: &mut Option<Vec<&mut [f32]>>,
+        moments: &mut [f64],
+    ) {
+        let orders = self.orders();
+        let nm = self.moment_orders();
+        let k = self.spec.k;
+        let mut pw = vec![0.0f32; orders];
+        for (r, row) in rows.iter().enumerate() {
+            let mrow = &mut moments[r * nm..(r + 1) * nm];
+            let off = r * k;
+            for t in start..start + cl {
+                let x = row[t];
+                if x == 0.0 {
+                    continue;
+                }
+                gemm::power_ladder_update(x, orders, mrow, &mut pw);
+                for m in 1..=orders {
+                    let urow = &mut u[m - 1][off..off + k];
+                    axpy(urow, pw[m - 1], mats[self.mat_index(m)].row(t), k);
+                    if let Some(vb) = v.as_mut() {
+                        let vrow = &mut vb[m - 1][off..off + k];
+                        axpy(vrow, pw[m - 1], mats[self.mat_index(self.p - m)].row(t), k);
+                    }
+                }
+            }
+        }
+    }
+
     /// Accumulate one D-chunk for the whole batch.
     ///
     /// Loop order is `t` (feature) outer, batch row inner — each R row
@@ -235,27 +710,22 @@ impl Sketcher {
         out: &mut [RowSketch],
     ) {
         let orders = self.orders();
-        let nm = self.moment_orders();
         let k = self.spec.k;
         let shared = matches!(self.spec.strategy, Strategy::Basic);
-        let mut powers = vec![0.0f32; nm];
+        let mut powers = vec![0.0f32; orders];
         for t in start..start + len {
             for (row, rs) in rows.iter().zip(out.iter_mut()) {
                 let x = row[t];
                 if x == 0.0 {
                     continue; // zero data entry contributes nothing
                 }
-                // Hadamard power ladder x, x², … x^{2(p-1)}; moments always.
-                let mut p = 1.0f32;
-                for slot in powers.iter_mut() {
-                    p *= x;
-                    *slot = p;
-                }
-                for (m, &pw) in (1..=nm).zip(powers.iter()) {
-                    rs.moments.0[m - 1] += pw as f64;
-                    if m > orders {
-                        continue;
-                    }
+                // Hadamard power ladder x, x², … x^{2(p-1)}, walked in
+                // f64 (shared with the GEMM paths): high-order moments
+                // feeding `core/mle.rs` accumulate at full precision,
+                // while the sketch powers stay the f32 casts of its
+                // rungs.
+                gemm::power_ladder_update(x, orders, &mut rs.moments.0, &mut powers);
+                for (m, &pw) in (1..=orders).zip(powers.iter()) {
                     if shared {
                         match sparse {
                             Some(sp) => axpy_sparse(rs.uside.u_mut(m), pw, sp[0].row(t)),
@@ -278,42 +748,6 @@ impl Sketcher {
                 }
             }
         }
-    }
-}
-
-/// CSR-like nonzero list of a materialized R chunk — built once per
-/// chunk, shared across every row in the batch (the sparse three-point
-/// distributions are 1−1/s zeros; touching only nonzeros is the paper's
-/// §4 "sparsity speedup").
-struct SparseChunk {
-    row0: usize,
-    /// Prefix offsets, len rows+1.
-    offsets: Vec<u32>,
-    /// (column, value) pairs of nonzeros, row-major.
-    nnz: Vec<(u32, f32)>,
-}
-
-impl SparseChunk {
-    fn from_dense(mat: &super::matrix::ProjectionMatrix) -> Self {
-        let mut offsets = Vec::with_capacity(mat.rows + 1);
-        let mut nnz = Vec::new();
-        offsets.push(0u32);
-        for i in 0..mat.rows {
-            let row = &mat.data[i * mat.k..(i + 1) * mat.k];
-            for (j, &r) in row.iter().enumerate() {
-                if r != 0.0 {
-                    nnz.push((j as u32, r));
-                }
-            }
-            offsets.push(nnz.len() as u32);
-        }
-        SparseChunk { row0: mat.row0, offsets, nnz }
-    }
-
-    #[inline]
-    fn row(&self, i: usize) -> &[(u32, f32)] {
-        let r = i - self.row0;
-        &self.nnz[self.offsets[r] as usize..self.offsets[r + 1] as usize]
     }
 }
 
@@ -487,6 +921,276 @@ mod tests {
         assert_eq!(batch[0].uside.data, a.uside.data);
         assert_eq!(batch[1].uside.data, b.uside.data);
         assert_eq!(batch[1].vside().data, b.vside().data);
+    }
+
+    /// Shared comparison: GEMM block output vs the per-row reference,
+    /// within relative f32 tolerance on sketches and tight f64 tolerance
+    /// on moments.
+    fn assert_block_matches_rows(sk: &Sketcher, got: &ColumnarBlock, want: &[RowSketch]) {
+        assert_eq!(got.rows(), want.len());
+        for (r, rs) in want.iter().enumerate() {
+            for m in 1..=sk.orders() {
+                for (j, (a, b)) in got.u_row(m, r).iter().zip(rs.uside.u(m)).enumerate() {
+                    crate::prop_assert!(
+                        (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                        "u m={m} r={r} j={j}: {a} vs {b}"
+                    );
+                }
+                for (j, (a, b)) in got.v_row(m, r).iter().zip(rs.vside().u(m)).enumerate() {
+                    crate::prop_assert!(
+                        (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                        "v m={m} r={r} j={j}: {a} vs {b}"
+                    );
+                }
+            }
+            for o in 1..=sk.moment_orders() {
+                let (a, b) = (got.moment(r, o), rs.moments.get(o));
+                crate::prop_assert!(
+                    (a - b).abs() <= 1e-9 * (1.0 + b.abs()),
+                    "moment {o} r={r}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_block_matches_per_row_reference() {
+        // Strategies × distributions × p ∈ {4, 6} × random (n, k, d,
+        // chunk, workers) — n and k ranges deliberately straddle the
+        // MR=4 / NR=8 tile edges.
+        testkit::check(40, |g| {
+            let strategy = if g.bool() { Strategy::Basic } else { Strategy::Alternative };
+            let p = if g.bool() { 4 } else { 6 };
+            let dist = match g.usize_in(0, 4) {
+                0 => ProjectionDist::Normal,
+                1 => ProjectionDist::Uniform,
+                2 => ProjectionDist::ThreePoint(3.0),
+                _ => ProjectionDist::ThreePoint(30.0),
+            };
+            let k = 1 + g.usize_in(0, 20);
+            let n = 1 + g.usize_in(0, 13);
+            let d = 1 + g.usize_in(0, 150);
+            let mut sk = Sketcher::new(ProjectionSpec::new(11, k, dist, strategy), p);
+            sk.chunk = 1 + g.usize_in(0, 64);
+            let data: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(d..d + 1, -2.0..2.0)).collect();
+            let refs: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+            let want = sk.sketch_rows(&refs);
+            let workers = 1 + g.usize_in(0, 4);
+            let got = sk.sketch_block(&refs, workers);
+            assert_eq!(got.is_two_sided(), matches!(strategy, Strategy::Alternative));
+            assert_block_matches_rows(&sk, &got, &want);
+        });
+    }
+
+    #[test]
+    fn gemm_block_tile_edges() {
+        // Deterministic ragged shapes around the 4×8 micro-kernel.
+        for &(n, k) in &[(1usize, 1usize), (3, 7), (4, 8), (5, 9), (6, 8), (4, 5), (9, 16)] {
+            let sk = mk(Strategy::Basic, k, 4);
+            let data: Vec<Vec<f32>> = (0..n)
+                .map(|r| (0..100).map(|t| ((r * 53 + t) as f32 * 0.17).sin()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+            let want = sk.sketch_rows(&refs);
+            let got = sk.sketch_block(&refs, 3);
+            assert_block_matches_rows(&sk, &got, &want);
+        }
+    }
+
+    #[test]
+    fn gemm_block_worker_count_invariant_bitwise() {
+        // Banding only regroups rows into strips; every (row, lane)
+        // accumulation sequence is fixed, so outputs are bitwise equal.
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let sk = mk(strategy, 13, 4);
+            let data: Vec<Vec<f32>> = (0..11)
+                .map(|r| (0..300).map(|t| ((r * 31 + t) as f32 * 0.07).cos()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+            let base = sk.sketch_block(&refs, 1);
+            for w in [2usize, 3, 5, 64] {
+                assert_eq!(base, sk.sketch_block(&refs, w), "workers={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_block_chunk_size_invariant() {
+        // Linearity over D-chunks: same sketches whatever the chunk size.
+        testkit::check(15, |g| {
+            let mut sk = mk(Strategy::Alternative, 6, 4);
+            let row = g.vec_f32(30..200, -1.0..1.0);
+            let refs: Vec<&[f32]> = vec![&row];
+            sk.chunk = 1 + g.usize_in(0, 24);
+            let a = sk.sketch_block(&refs, 1);
+            sk.chunk = 4096;
+            let b = sk.sketch_block(&refs, 1);
+            for m in 1..=3 {
+                for (x, y) in a.u_row(m, 0).iter().zip(b.u_row(m, 0)) {
+                    crate::prop_assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+                }
+                for (x, y) in a.v_row(m, 0).iter().zip(b.v_row(m, 0)) {
+                    crate::prop_assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "vside");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gemm_block_sparse_three_point() {
+        // The CSR path must agree with the dense naive oracle.
+        let spec = ProjectionSpec::new(3, 8, ProjectionDist::ThreePoint(16.0), Strategy::Basic);
+        let sk = Sketcher::new(spec.clone(), 4);
+        let row: Vec<f32> = (0..128).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+        let got = sk.sketch_block(&[&row], 2);
+        let want = naive_uside(&spec, 4, &row);
+        for m in 1..4 {
+            for (a, b) in got.u_row(m, 0).iter().zip(want.u(m)) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "m={m}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_block_sparse_data_route() {
+        // Mostly-zero rows with a dense R take the per-entry axpy route;
+        // it must match the per-row reference and stay worker-invariant.
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let sk = mk(strategy, 9, 4);
+            let data: Vec<Vec<f32>> = (0..6)
+                .map(|r| {
+                    (0..200)
+                        .map(|t| {
+                            if (r + t) % 10 == 0 {
+                                ((r * 3 + t) as f32 * 0.13).sin()
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let refs: Vec<&[f32]> = data.iter().map(|x| x.as_slice()).collect();
+            let want = sk.sketch_rows(&refs);
+            let got = sk.sketch_block(&refs, 2);
+            assert_block_matches_rows(&sk, &got, &want);
+            assert_eq!(got, sk.sketch_block(&refs, 5));
+        }
+    }
+
+    #[test]
+    fn gemm_block_empty_and_zero_width() {
+        let sk = mk(Strategy::Basic, 8, 4);
+        let no_rows: [&[f32]; 0] = [];
+        let empty = sk.sketch_block(&no_rows, 4);
+        assert_eq!(empty.rows(), 0);
+        assert_eq!(empty.bytes(), 0);
+        let zero_width_rows: [&[f32]; 2] = [&[], &[]];
+        let zero_width = sk.sketch_block(&zero_width_rows, 4);
+        assert_eq!(zero_width.rows(), 2);
+        assert!(zero_width.u_order(1).iter().all(|&x| x == 0.0));
+        assert!(zero_width.moments_row(1).iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn block_into_reuses_buffer() {
+        let sk = mk(Strategy::Basic, 8, 4);
+        let r1: Vec<f32> = (0..40).map(|i| (i as f32 * 0.2).sin()).collect();
+        let r2: Vec<f32> = (0..40).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut buf = sk.sketch_block(&[&r1], 1);
+        let direct = sk.sketch_block(&[&r2], 1);
+        // Overwrite semantics: landing a new row erases the old content.
+        sk.sketch_block_into(&[&r2], 1, &mut buf);
+        assert_eq!(buf, direct);
+    }
+
+    #[test]
+    fn to_row_sketch_round_trips() {
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let sk = mk(strategy, 8, 4);
+            let rows: Vec<Vec<f32>> = (0..3)
+                .map(|r| (0..32).map(|t| ((r + 2 * t) as f32 * 0.11).sin()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let block = sk.sketch_block(&refs, 1);
+            for r in 0..3 {
+                let rs = block.to_row_sketch(r);
+                for m in 1..4 {
+                    assert_eq!(rs.uside.u(m), block.u_row(m, r));
+                    assert_eq!(rs.vside().u(m), block.v_row(m, r));
+                }
+                assert_eq!(rs.moments.0.as_slice(), block.moments_row(r));
+                // Homogeneous rows: block bytes = Σ per-row bytes.
+                assert_eq!(rs.sketch_bytes() * 3, block.bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn moments_accumulate_in_f64() {
+        // |x| far from 1: by order 2(p−1) an f32 ladder visibly loses
+        // precision; both CPU paths must match the f64 ladder of
+        // `Moments::scan_f32` to full f64 accuracy.
+        let row: Vec<f32> = (0..64).map(|i| 20.0 + (i as f32) * 0.37).collect();
+        let sk = mk(Strategy::Basic, 4, 4);
+        let want = Moments::scan_f32(&row, 6);
+        let per_row = sk.sketch_row(&row);
+        let block = sk.sketch_block(&[&row], 1);
+        for o in 1..=6 {
+            let w = want.get(o);
+            assert!(
+                (per_row.moments.get(o) - w).abs() <= 1e-12 * w.abs(),
+                "per-row order {o}: {} vs {w}",
+                per_row.moments.get(o)
+            );
+            assert!(
+                (block.moment(0, o) - w).abs() <= 1e-12 * w.abs(),
+                "block order {o}: {} vs {w}",
+                block.moment(0, o)
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_cache_is_bounded() {
+        // Varying chunk sizes used to grow the (start, len)-keyed map
+        // without bound; budgeted admission keeps the estimated resident
+        // bytes at or under the configured budget, while over-budget
+        // chunks still materialize (uncached) with identical results.
+        let mut sk = mk(Strategy::Basic, 4, 4);
+        sk.cache_budget = 4 * sk.chunk_bytes_estimate(64);
+        let row = vec![1.0f32; 600];
+        let want = sk.sketch_row(&row);
+        for chunk in (7..120).step_by(13) {
+            sk.chunk = chunk;
+            let got = sk.sketch_row(&row);
+            for (a, b) in got.uside.data.iter().zip(&want.uside.data) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        }
+        assert!(sk.cached_bytes() <= sk.cache_budget, "{}", sk.cached_bytes());
+    }
+
+    #[test]
+    fn chunk_cache_concurrent_sketchers_agree() {
+        // Entry-style cells: concurrent workers racing on a cold cache
+        // still see exactly one materialization each and identical R.
+        let sk = mk(Strategy::Alternative, 8, 4);
+        let row: Vec<f32> = (0..256).map(|i| (i as f32 * 0.05).sin()).collect();
+        let serial = sk.sketch_row(&row);
+        let results: Vec<RowSketch> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let (sk, row) = (&sk, &row);
+                    scope.spawn(move || sk.sketch_row(row))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in results {
+            assert_eq!(r.uside.data, serial.uside.data);
+            assert_eq!(r.vside().data, serial.vside().data);
+        }
     }
 
     #[test]
