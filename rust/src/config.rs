@@ -42,6 +42,15 @@ pub struct Config {
     /// reference path — the baseline the GEMM path is benchmarked and
     /// equivalence-tested against.
     pub ingest_gemm: bool,
+    /// Segment compaction: merge adjacent columnar segments smaller than
+    /// this after each ingest (and on rebalance). `0` disables the pass.
+    /// Compaction is estimate-invariant (panels move by contiguous
+    /// copy), so this is purely a segment-count/locality knob for
+    /// deployments running small `block_rows`.
+    pub compact_min_rows: usize,
+    /// Segment compaction: merged segments grow to at most this many
+    /// rows.
+    pub compact_target_rows: usize,
     /// Prefer the PJRT engine when artifacts match; fall back to pure
     /// rust otherwise.
     pub use_pjrt: bool,
@@ -69,6 +78,8 @@ impl Default for Config {
             batch_deadline_us: 200,
             use_mle: false,
             ingest_gemm: true,
+            compact_min_rows: 0,
+            compact_target_rows: 8192,
             use_pjrt: false,
             artifacts_dir: PathBuf::from("artifacts"),
             data_dist: DataDist::ZipfTf { exponent: 1.1, density: 0.1 },
@@ -98,6 +109,10 @@ impl Config {
             "batch-deadline-us" | "batch_deadline_us" => self.batch_deadline_us = value.parse()?,
             "mle" | "use-mle" | "use_mle" => self.use_mle = parse_bool(value)?,
             "ingest-gemm" | "ingest_gemm" => self.ingest_gemm = parse_bool(value)?,
+            "compact-min-rows" | "compact_min_rows" => self.compact_min_rows = value.parse()?,
+            "compact-target-rows" | "compact_target_rows" => {
+                self.compact_target_rows = parse_nonzero(key, value)?
+            }
             "pjrt" | "use-pjrt" | "use_pjrt" => self.use_pjrt = parse_bool(value)?,
             "artifacts-dir" | "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
             "data-dist" | "data_dist" => self.data_dist = DataDist::parse(value)?,
@@ -168,6 +183,12 @@ impl Config {
             "k ({}) must not exceed d ({}) — sketches must compress",
             self.k,
             self.d
+        );
+        anyhow::ensure!(
+            self.compact_min_rows <= self.compact_target_rows,
+            "compact-min-rows ({}) must not exceed compact-target-rows ({})",
+            self.compact_min_rows,
+            self.compact_target_rows
         );
         Ok(())
     }
@@ -251,6 +272,19 @@ mod tests {
         assert!(!c.ingest_gemm);
         c.set("ingest_gemm", "on").unwrap();
         assert!(c.ingest_gemm);
+    }
+
+    #[test]
+    fn compaction_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.compact_min_rows, 0, "compaction is opt-in");
+        c.apply_args(args(&["--compact-min-rows", "128", "--compact-target-rows", "4096"]))
+            .unwrap();
+        assert_eq!(c.compact_min_rows, 128);
+        assert_eq!(c.compact_target_rows, 4096);
+        // min above target is rejected; target must be nonzero.
+        assert!(c.apply_args(args(&["--compact-min-rows", "8192"])).is_err());
+        assert!(c.set("compact-target-rows", "0").is_err());
     }
 
     #[test]

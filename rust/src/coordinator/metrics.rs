@@ -90,6 +90,11 @@ pub struct Metrics {
     pub gemm_calls: AtomicU64,
     /// Blocks sketched through the per-row reference path.
     pub fallback_calls: AtomicU64,
+    /// Segment-merge operations performed by compaction passes.
+    pub compactions: AtomicU64,
+    /// Gauge: columnar segments currently resident in the store
+    /// (refreshed by the pipeline after ingest / compaction / adoption).
+    pub segment_count: AtomicU64,
     pub sketch_latency: Histogram,
     pub query_latency: Histogram,
 }
@@ -109,6 +114,8 @@ impl Metrics {
             pjrt_calls: self.pjrt_calls.load(Ordering::Relaxed),
             gemm_calls: self.gemm_calls.load(Ordering::Relaxed),
             fallback_calls: self.fallback_calls.load(Ordering::Relaxed),
+            compactions: self.compactions.load(Ordering::Relaxed),
+            segment_count: self.segment_count.load(Ordering::Relaxed),
             sketch_mean_us: self.sketch_latency.mean_us(),
             sketch_p95_us: self.sketch_latency.quantile_us(0.95),
             query_mean_us: self.query_latency.mean_us(),
@@ -128,6 +135,8 @@ pub struct Snapshot {
     pub pjrt_calls: u64,
     pub gemm_calls: u64,
     pub fallback_calls: u64,
+    pub compactions: u64,
+    pub segment_count: u64,
     pub sketch_mean_us: f64,
     pub sketch_p95_us: u64,
     pub query_mean_us: f64,
@@ -138,7 +147,8 @@ impl Snapshot {
     pub fn render(&self) -> String {
         format!(
             "rows={} blocks={} queries={} batches={} (deadline={}) pjrt={} gemm={} fallback={} \
-             sketch_mean={:.1}us sketch_p95={}us query_mean={:.1}us query_p95={}us",
+             compactions={} segments={} sketch_mean={:.1}us sketch_p95={}us query_mean={:.1}us \
+             query_p95={}us",
             self.rows_ingested,
             self.blocks_sketched,
             self.queries_served,
@@ -147,6 +157,8 @@ impl Snapshot {
             self.pjrt_calls,
             self.gemm_calls,
             self.fallback_calls,
+            self.compactions,
+            self.segment_count,
             self.sketch_mean_us,
             self.sketch_p95_us,
             self.query_mean_us,

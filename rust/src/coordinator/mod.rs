@@ -24,4 +24,4 @@ pub use metrics::{Metrics, Snapshot};
 pub use pipeline::{IngestReport, Pipeline, QueryHandle};
 pub use router::Router;
 pub use scheduler::{Block, BlockScheduler};
-pub use state::{ArenaSnapshot, SketchStore};
+pub use state::{ArenaSnapshot, CompactionReport, SegmentPanels, SketchStore};

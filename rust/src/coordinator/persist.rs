@@ -3,26 +3,66 @@
 //! claim (after the linear scan, the sketches *are* the dataset; the
 //! O(nD) matrix can be discarded).
 //!
-//! Format (little-endian, versioned):
-//! ```text
-//! magic "LPSK" | u32 version | u32 p | u32 k | u32 orders |
-//! u32 moment_orders | u8 two_sided | u64 row_count |
-//! per row: u64 id | uside f32[orders*k] | (vside f32[orders*k])? |
-//!          moments f64[moment_orders]
-//! ```
-//! The header captures everything needed to validate compatibility with
-//! a [`crate::config::Config`] before any row is read.
+//! ## Format v2 (little-endian, current)
+//!
+//! The store's two internal representations are persisted as they are
+//! held: per-row map entries row-wise, columnar segments as contiguous
+//! panels (one bulk f32 write per (order, side) per segment), so a
+//! save/load cycle preserves the columnar layout — and with it the
+//! memcpy `arena_snapshot` / segment-native query fast paths — instead
+//! of degrading every row to a map entry.
+//!
+//! | field                | type                  | notes                              |
+//! |----------------------|-----------------------|------------------------------------|
+//! | magic                | `b"LPSK"`             |                                    |
+//! | version              | `u32` = 2             |                                    |
+//! | p                    | `u32`                 | distance order (validation)        |
+//! | k                    | `u32`                 | sketch width                       |
+//! | orders               | `u32`                 | sketch orders (p−1)                |
+//! | moment_orders        | `u32`                 | moments per row (2(p−1))           |
+//! | two_sided            | `u8`                  | alternative strategy ⇒ 1           |
+//! | rows                 | `u64`                 | total rows (map + segments)        |
+//! | map_rows             | `u64`                 | per-row map entries                |
+//! | segments             | `u64`                 | columnar segment count             |
+//! | *per map row*        |                       | *id ascending*                     |
+//! |   id                 | `u64`                 |                                    |
+//! |   uside              | `f32[orders·k]`       |                                    |
+//! |   vside              | `f32[orders·k]`       | only if two_sided                  |
+//! |   moments            | `f64[moment_orders]`  |                                    |
+//! | *per segment*        |                       | *base ascending, ranges disjoint*  |
+//! |   base               | `u64`                 | first covered id                   |
+//! |   seg_rows           | `u64`                 |                                    |
+//! |   u panels           | `f32[orders·rows·k]`  | one contiguous panel per order     |
+//! |   v panels           | `f32[orders·rows·k]`  | only if two_sided                  |
+//! |   moments            | `f64[rows·nm]`        | row-major                          |
+//!
+//! ## Format v1 (read-only compatibility)
+//!
+//! `magic | u32 1 | p | k | orders | moment_orders | u8 two_sided |
+//! u64 rows | per row: id, uside, (vside)?, moments` — every row loads
+//! into the per-row map (v1 had no segment section).
+//!
+//! Corrupt input fails with an error, never a panic: declared sizes are
+//! validated against hard caps and the file's actual length before any
+//! buffer is allocated, and segment ranges are checked for overlap
+//! before touching the store.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use crate::core::marginals::Moments;
-use crate::projection::sketcher::{RowSketch, SketchSet};
+use crate::projection::sketcher::{ColumnarBlock, RowSketch, SketchSet};
 
 use super::state::SketchStore;
 
 const MAGIC: &[u8; 4] = b"LPSK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+
+/// Hard caps on declared shapes — a corrupt header must error, not
+/// drive a multi-gigabyte allocation.
+const MAX_K: usize = 1 << 24;
+const MAX_ORDERS: usize = 64;
+const MAX_MOMENT_ORDERS: usize = 256;
 
 /// Header of a sketch file.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,7 +72,12 @@ pub struct SketchFileHeader {
     pub orders: u32,
     pub moment_orders: u32,
     pub two_sided: bool,
+    /// Total rows (map + segment-resident).
     pub rows: u64,
+    /// Rows held in the per-row map (= `rows` for v1 files).
+    pub map_rows: u64,
+    /// Columnar segments (0 for v1 files).
+    pub segments: u64,
 }
 
 fn w_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
@@ -55,46 +100,87 @@ fn r_u64(r: &mut impl Read) -> anyhow::Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
+/// One bulk write: serialize the whole slice into a byte buffer first so
+/// each (order, side) panel hits the writer as a single `write_all`.
 fn w_f32s(w: &mut impl Write, xs: &[f32]) -> std::io::Result<()> {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
     for x in xs {
-        w.write_all(&x.to_le_bytes())?;
+        bytes.extend_from_slice(&x.to_le_bytes());
     }
-    Ok(())
+    w.write_all(&bytes)
+}
+
+fn w_f64s(w: &mut impl Write, xs: &[f64]) -> std::io::Result<()> {
+    let mut bytes = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&bytes)
 }
 
 fn r_f32s(r: &mut impl Read, n: usize) -> anyhow::Result<Vec<f32>> {
-    let mut out = Vec::with_capacity(n);
-    let mut b = [0u8; 4];
-    for _ in 0..n {
-        r.read_exact(&mut b)?;
-        out.push(f32::from_le_bytes(b));
-    }
-    Ok(out)
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+        .collect())
 }
 
-/// Save every row of `store` to `path`. `p` is the distance order the
-/// sketches were built for (recorded for load-time validation).
+fn r_f64s(r: &mut impl Read, n: usize) -> anyhow::Result<Vec<f64>> {
+    let mut bytes = vec![0u8; n * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+        .collect())
+}
+
+/// Per-row shape of one side, validated for homogeneity at save time.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct Shape {
+    k: usize,
+    orders: usize,
+    nm: usize,
+    two_sided: bool,
+}
+
+/// Save every row of `store` to `path` (format v2: map rows row-wise,
+/// columnar segments as contiguous panels). `p` is the distance order
+/// the sketches were built for (recorded for load-time validation).
 pub fn save(store: &SketchStore, p: usize, path: &Path) -> anyhow::Result<SketchFileHeader> {
-    let ids = store.ids();
-    // Probe shape from the first row (empty stores save an empty file
-    // with zeroed shape — loadable, yields an empty store).
-    let probe = ids.first().map(|&id| store.get(id).unwrap());
-    let (k, orders, nm, two_sided) = match &probe {
-        Some(rs) => (
-            rs.uside.k as u32,
-            rs.uside.orders as u32,
-            rs.moments.len() as u32,
-            rs.vside_data.is_some(),
-        ),
-        None => (0, 0, 0, false),
+    let map_ids = store.map_ids();
+    let segments = store.segments_snapshot();
+    // Probe shape from the first map row or the first segment (empty
+    // stores save an empty file with zeroed shape — loadable, yields an
+    // empty store).
+    let probe_row = map_ids.first().map(|&id| store.get(id).expect("listed id"));
+    let shape = match (&probe_row, segments.first()) {
+        (Some(rs), _) => Some(Shape {
+            k: rs.uside.k,
+            orders: rs.uside.orders,
+            nm: rs.moments.len(),
+            two_sided: rs.vside_data.is_some(),
+        }),
+        (None, Some((_, block))) => Some(Shape {
+            k: block.k(),
+            orders: block.orders(),
+            nm: block.moment_orders(),
+            two_sided: block.is_two_sided(),
+        }),
+        (None, None) => None,
     };
+    let shape = shape.unwrap_or(Shape { k: 0, orders: 0, nm: 0, two_sided: false });
+    let seg_rows: usize = segments.iter().map(|(_, b)| b.rows()).sum();
     let header = SketchFileHeader {
         p: p as u32,
-        k,
-        orders,
-        moment_orders: nm,
-        two_sided,
-        rows: ids.len() as u64,
+        k: shape.k as u32,
+        orders: shape.orders as u32,
+        moment_orders: shape.nm as u32,
+        two_sided: shape.two_sided,
+        rows: (map_ids.len() + seg_rows) as u64,
+        map_rows: map_ids.len() as u64,
+        segments: segments.len() as u64,
     };
     let mut w = BufWriter::new(std::fs::File::create(path)?);
     w.write_all(MAGIC)?;
@@ -105,93 +191,223 @@ pub fn save(store: &SketchStore, p: usize, path: &Path) -> anyhow::Result<Sketch
     w_u32(&mut w, header.moment_orders)?;
     w.write_all(&[header.two_sided as u8])?;
     w_u64(&mut w, header.rows)?;
-    for id in ids {
+    w_u64(&mut w, header.map_rows)?;
+    w_u64(&mut w, header.segments)?;
+    for id in map_ids {
         let rs = store.get(id).expect("listed id");
-        anyhow::ensure!(
-            rs.uside.k as u32 == k && rs.uside.orders as u32 == orders,
-            "heterogeneous store (row {id})"
-        );
+        let row_shape = Shape {
+            k: rs.uside.k,
+            orders: rs.uside.orders,
+            nm: rs.moments.len(),
+            two_sided: rs.vside_data.is_some(),
+        };
+        anyhow::ensure!(row_shape == shape, "heterogeneous store (row {id})");
         w_u64(&mut w, id)?;
         w_f32s(&mut w, &rs.uside.data)?;
-        match (&rs.vside_data, two_sided) {
-            (Some(v), true) => w_f32s(&mut w, &v.data)?,
-            (None, false) => {}
-            _ => anyhow::bail!("mixed one/two-sided rows (row {id})"),
+        if let Some(v) = &rs.vside_data {
+            w_f32s(&mut w, &v.data)?;
         }
-        for o in 1..=rs.moments.len() {
-            w.write_all(&rs.moments.get(o).to_le_bytes())?;
+        w_f64s(&mut w, &rs.moments.0)?;
+    }
+    for (base, block) in &segments {
+        let block_shape = Shape {
+            k: block.k(),
+            orders: block.orders(),
+            nm: block.moment_orders(),
+            two_sided: block.is_two_sided(),
+        };
+        anyhow::ensure!(block_shape == shape, "heterogeneous store (segment at {base})");
+        w_u64(&mut w, *base)?;
+        w_u64(&mut w, block.rows() as u64)?;
+        for m in 1..=block.orders() {
+            w_f32s(&mut w, block.u_order(m))?;
         }
+        if block.is_two_sided() {
+            for m in 1..=block.orders() {
+                w_f32s(&mut w, block.v_order(m).expect("two-sided"))?;
+            }
+        }
+        w_f64s(&mut w, block.moments_all())?;
     }
     w.flush()?;
     Ok(header)
 }
 
-/// Read just the header (cheap compatibility probe).
-pub fn read_header(path: &Path) -> anyhow::Result<SketchFileHeader> {
-    let mut r = BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "not a sketch file");
-    let version = r_u32(&mut r)?;
-    anyhow::ensure!(version == VERSION, "unsupported sketch-file version {version}");
-    let p = r_u32(&mut r)?;
-    let k = r_u32(&mut r)?;
-    let orders = r_u32(&mut r)?;
-    let moment_orders = r_u32(&mut r)?;
+/// Parse the fixed header fields after the version word.
+fn read_header_body(r: &mut impl Read, version: u32) -> anyhow::Result<SketchFileHeader> {
+    let p = r_u32(r)?;
+    let k = r_u32(r)?;
+    let orders = r_u32(r)?;
+    let moment_orders = r_u32(r)?;
     let mut flag = [0u8; 1];
     r.read_exact(&mut flag)?;
-    let rows = r_u64(&mut r)?;
-    Ok(SketchFileHeader { p, k, orders, moment_orders, two_sided: flag[0] != 0, rows })
+    let rows = r_u64(r)?;
+    let (map_rows, segments) = if version >= 2 { (r_u64(r)?, r_u64(r)?) } else { (rows, 0) };
+    let header = SketchFileHeader {
+        p,
+        k,
+        orders,
+        moment_orders,
+        two_sided: flag[0] != 0,
+        rows,
+        map_rows,
+        segments,
+    };
+    anyhow::ensure!(header.k as usize <= MAX_K, "implausible sketch width {}", header.k);
+    anyhow::ensure!(
+        header.orders as usize <= MAX_ORDERS,
+        "implausible order count {}",
+        header.orders
+    );
+    anyhow::ensure!(
+        header.moment_orders as usize <= MAX_MOMENT_ORDERS,
+        "implausible moment count {}",
+        header.moment_orders
+    );
+    anyhow::ensure!(header.map_rows <= header.rows, "map rows exceed total rows");
+    if header.rows > 0 {
+        // Every writer (v1 and v2) produces moments = 2·orders with
+        // nonzero k and orders; anything else would index out of bounds
+        // at query time (`norm_p` reads moment p = orders + 1), so
+        // reject it here with an error. (`p` itself is advisory — the
+        // serving config decides the decomposition.)
+        anyhow::ensure!(
+            header.orders >= 1 && header.k >= 1 && header.moment_orders == 2 * header.orders,
+            "inconsistent sketch shape (orders={}, k={}, moments={})",
+            header.orders,
+            header.k,
+            header.moment_orders
+        );
+    } else {
+        anyhow::ensure!(header.segments == 0, "zero-row file declares segments");
+    }
+    Ok(header)
 }
 
-/// Load a sketch file into a fresh store with `shards` shards.
-pub fn load(path: &Path, shards: usize) -> anyhow::Result<(SketchStore, SketchFileHeader)> {
-    let mut r = BufReader::new(std::fs::File::open(path)?);
+fn read_magic_version(r: &mut impl Read) -> anyhow::Result<u32> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     anyhow::ensure!(&magic == MAGIC, "not a sketch file");
-    let version = r_u32(&mut r)?;
-    anyhow::ensure!(version == VERSION, "unsupported sketch-file version {version}");
-    let p = r_u32(&mut r)?;
-    let k = r_u32(&mut r)? as usize;
-    let orders = r_u32(&mut r)? as usize;
-    let nm = r_u32(&mut r)? as usize;
-    let mut flag = [0u8; 1];
-    r.read_exact(&mut flag)?;
-    let two_sided = flag[0] != 0;
-    let rows = r_u64(&mut r)?;
+    let version = r_u32(r)?;
+    anyhow::ensure!(
+        version >= 1 && version <= VERSION,
+        "unsupported sketch-file version {version}"
+    );
+    Ok(version)
+}
+
+/// Read just the header (cheap compatibility probe). Handles v1 and v2.
+pub fn read_header(path: &Path) -> anyhow::Result<SketchFileHeader> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let version = read_magic_version(&mut r)?;
+    read_header_body(&mut r, version)
+}
+
+/// Read one row-wise map entry (shared by the v1 body and the v2 map
+/// section).
+fn read_map_row(r: &mut impl Read, h: &SketchFileHeader) -> anyhow::Result<(u64, RowSketch)> {
+    let (orders, k, nm) = (h.orders as usize, h.k as usize, h.moment_orders as usize);
+    let id = r_u64(r)?;
+    let udata = r_f32s(r, orders * k)?;
+    let vside_data = if h.two_sided {
+        Some(SketchSet { orders, k, data: r_f32s(r, orders * k)? })
+    } else {
+        None
+    };
+    let moments = Moments(r_f64s(r, nm)?);
+    Ok((id, RowSketch { uside: SketchSet { orders, k, data: udata }, vside_data, moments }))
+}
+
+/// Load a sketch file into a fresh store with `shards` shards. v2 files
+/// reconstruct their columnar segments verbatim (panels land through
+/// [`SketchStore::insert_block_columnar`], so the memcpy snapshot and
+/// segment-native query paths survive the round-trip); v1 files load
+/// every row into the per-row map, as they were saved.
+pub fn load(path: &Path, shards: usize) -> anyhow::Result<(SketchStore, SketchFileHeader)> {
+    let file = std::fs::File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    let version = read_magic_version(&mut r)?;
+    let header = read_header_body(&mut r, version)?;
+    let (orders, k, nm) = (
+        header.orders as usize,
+        header.k as usize,
+        header.moment_orders as usize,
+    );
+    // Every declared payload must fit in the file: catches truncation
+    // and garbage counts before any large allocation.
+    let row_bytes = 8
+        + (orders * k * 4) as u64 * if header.two_sided { 2 } else { 1 }
+        + (nm * 8) as u64;
+    anyhow::ensure!(
+        header.map_rows.saturating_mul(row_bytes) <= file_len,
+        "declared map rows exceed file size (truncated or corrupt)"
+    );
     let store = SketchStore::new(shards);
-    for _ in 0..rows {
-        let id = r_u64(&mut r)?;
-        let udata = r_f32s(&mut r, orders * k)?;
-        let vside_data = if two_sided {
-            Some(SketchSet { orders, k, data: r_f32s(&mut r, orders * k)? })
+    let mut map_ids: Vec<u64> = Vec::with_capacity(header.map_rows as usize);
+    for _ in 0..header.map_rows {
+        let (id, rs) = read_map_row(&mut r, &header)?;
+        map_ids.push(id);
+        store.insert(id, rs);
+    }
+    map_ids.sort_unstable();
+    // A duplicate id would silently collapse via insert-overwrite and
+    // leave the store with fewer rows than the header declares.
+    anyhow::ensure!(
+        map_ids.windows(2).all(|w| w[0] != w[1]),
+        "duplicate map row id (corrupt file)"
+    );
+    let mut seg_rows_total = 0u64;
+    let mut prev_end = 0u64;
+    // Bytes one segment row occupies in the panels section.
+    let seg_row_bytes =
+        (orders * k * 4) as u64 * if header.two_sided { 2 } else { 1 } + (nm * 8) as u64;
+    for s in 0..header.segments {
+        let base = r_u64(&mut r)?;
+        let rows = r_u64(&mut r)?;
+        anyhow::ensure!(rows > 0, "segment {s} is empty");
+        anyhow::ensure!(
+            rows.checked_mul(seg_row_bytes).is_some_and(|b| b <= file_len),
+            "segment {s} declares more rows than the file holds (truncated or corrupt)"
+        );
+        let end = base
+            .checked_add(rows)
+            .ok_or_else(|| anyhow::anyhow!("segment {s} id range overflows"))?;
+        anyhow::ensure!(
+            s == 0 || base >= prev_end,
+            "segment {s} overlaps its predecessor (corrupt segment directory)"
+        );
+        // A map row inside the segment's range would trip the store's
+        // collision panic; reject the file with an error instead.
+        let lo = map_ids.partition_point(|&id| id < base);
+        anyhow::ensure!(
+            !map_ids.get(lo).is_some_and(|&id| id < end),
+            "segment {s} range [{base}, {end}) collides with a map row"
+        );
+        prev_end = end;
+        let rows = rows as usize;
+        // The per-order u panels are stored consecutively, so the whole
+        // u (and v) buffer reads as one contiguous chunk — exactly the
+        // block's internal layout.
+        let u = r_f32s(&mut r, orders * rows * k)?;
+        let v = if header.two_sided {
+            Some(r_f32s(&mut r, orders * rows * k)?)
         } else {
             None
         };
-        let mut moments = Vec::with_capacity(nm);
-        let mut b = [0u8; 8];
-        for _ in 0..nm {
-            r.read_exact(&mut b)?;
-            moments.push(f64::from_le_bytes(b));
-        }
-        store.insert(
-            id,
-            RowSketch {
-                uside: SketchSet { orders, k, data: udata },
-                vside_data,
-                moments: Moments(moments),
-            },
+        let moments = r_f64s(&mut r, rows * nm)?;
+        store.insert_block_columnar(
+            base,
+            ColumnarBlock::from_parts(orders, k, nm, rows, u, v, moments),
         );
+        seg_rows_total += rows as u64;
     }
-    let header = SketchFileHeader {
-        p,
-        k: k as u32,
-        orders: orders as u32,
-        moment_orders: nm as u32,
-        two_sided,
-        rows,
-    };
+    anyhow::ensure!(
+        header.map_rows + seg_rows_total == header.rows,
+        "row count mismatch: header declares {} rows, body holds {}",
+        header.rows,
+        header.map_rows + seg_rows_total
+    );
     Ok((store, header))
 }
 
@@ -225,6 +441,8 @@ mod tests {
         let path = tmp("basic.lpsk");
         let saved = save(&store, 4, &path).unwrap();
         assert_eq!(saved.rows, 17);
+        assert_eq!(saved.map_rows, 17);
+        assert_eq!(saved.segments, 0);
         assert!(!saved.two_sided);
         let (loaded, header) = load(&path, 5).unwrap();
         assert_eq!(header, saved);
@@ -252,6 +470,41 @@ mod tests {
             assert_eq!(a.moments.0, b.moments.0);
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrip_preserves_columnar_segments() {
+        // The PR-3 regression pin: before this, save de-columnarized
+        // every row and load rebuilt the map, silently losing the
+        // segment layout (and with it the memcpy snapshot path).
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let sk = Sketcher::new(
+                ProjectionSpec::new(5, 8, ProjectionDist::Normal, strategy),
+                4,
+            );
+            let store = SketchStore::new(3);
+            store.insert(2, sk.sketch_row(&[0.4, -0.1, 0.9]));
+            let rows: Vec<Vec<f32>> = (0..7)
+                .map(|i| (0..20).map(|t| ((i * 13 + t) as f32 * 0.17).sin()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            store.insert_block_columnar(10, sk.sketch_block(&refs[..4], 1)); // 10..14
+            store.insert_block_columnar(14, sk.sketch_block(&refs[4..], 1)); // 14..17
+            let path = tmp(&format!("segments_{strategy:?}.lpsk"));
+            let saved = save(&store, 4, &path).unwrap();
+            assert_eq!(saved.rows, 8);
+            assert_eq!(saved.map_rows, 1);
+            assert_eq!(saved.segments, 2);
+            let (loaded, header) = load(&path, 4).unwrap();
+            assert_eq!(header, saved);
+            // Columnar layout survives verbatim: same segment directory,
+            // bitwise-equal blocks, same byte accounting.
+            assert_eq!(loaded.segments_snapshot(), store.segments_snapshot());
+            assert_eq!(loaded.bytes(), store.bytes());
+            assert_eq!(loaded.map_ids(), vec![2]);
+            assert_eq!(loaded.ids(), store.ids());
+            std::fs::remove_file(&path).ok();
+        }
     }
 
     #[test]

@@ -115,6 +115,44 @@ impl Pipeline {
         })
     }
 
+    /// Build a pipeline serving an existing store — the persistence
+    /// restore path (`persist::load` → queries, no re-ingest; the O(nD)
+    /// matrix is gone). Fresh ids continue past the store's maximum, and
+    /// the store's sketch shape must match the config. Refreshes the
+    /// `segment_count` gauge so a restore that silently lost its
+    /// columnar segments is observable.
+    pub fn with_store(cfg: Config, store: SketchStore) -> anyhow::Result<Self> {
+        let mut pipeline = Self::new(cfg)?;
+        let ids = store.ids();
+        if let Some(&first) = ids.first() {
+            let rs = store.get(first).expect("listed id");
+            anyhow::ensure!(
+                rs.uside.k == pipeline.cfg.k && rs.uside.orders == pipeline.cfg.p - 1,
+                "store shape (k={}, orders={}) does not match config (k={}, p={})",
+                rs.uside.k,
+                rs.uside.orders,
+                pipeline.cfg.k,
+                pipeline.cfg.p,
+            );
+            // Sidedness must match too: adopting two-sided rows under a
+            // basic-strategy config (or vice versa) would sketch queries
+            // with the wrong projection pairing and silently mis-score.
+            let two_sided = rs.vside_data.is_some();
+            anyhow::ensure!(
+                two_sided == matches!(pipeline.cfg.strategy, Strategy::Alternative),
+                "store sidedness (two_sided={two_sided}) does not match config strategy {}",
+                pipeline.cfg.strategy.as_str(),
+            );
+            pipeline.next_id = AtomicU64::new(ids.last().unwrap() + 1);
+        }
+        pipeline.store = store;
+        pipeline
+            .metrics
+            .segment_count
+            .store(pipeline.store.segment_count() as u64, Ordering::Relaxed);
+        Ok(pipeline)
+    }
+
     pub fn config(&self) -> &Config {
         &self.cfg
     }
@@ -219,6 +257,16 @@ impl Pipeline {
         if let Some(e) = errs.into_iter().next() {
             return Err(e);
         }
+        // Lifecycle hook: small `block_rows` lands one segment per
+        // block; merge small adjacent segments so the segment count
+        // stays bounded (estimate-invariant — panels move by contiguous
+        // copy). `compact-min-rows = 0` (the default) disables it.
+        if self.cfg.compact_min_rows > 0 {
+            self.compact();
+        }
+        self.metrics
+            .segment_count
+            .store(self.store.segment_count() as u64, Ordering::Relaxed);
         Ok(IngestReport {
             rows: n,
             blocks: n.div_ceil(self.cfg.block_rows),
@@ -227,6 +275,20 @@ impl Pipeline {
             data_bytes: data.bytes(),
             pjrt_rows: pjrt_rows.load(Ordering::Relaxed) as usize,
         })
+    }
+
+    /// Run one segment-compaction pass over the store with the
+    /// configured `compact-min-rows` / `compact-target-rows` knobs,
+    /// recording `compactions` and the `segment_count` gauge.
+    pub fn compact(&self) -> super::state::CompactionReport {
+        let report = self
+            .store
+            .compact_segments(self.cfg.compact_min_rows, self.cfg.compact_target_rows);
+        self.metrics.compactions.fetch_add(report.merges as u64, Ordering::Relaxed);
+        self.metrics
+            .segment_count
+            .store(self.store.segment_count() as u64, Ordering::Relaxed);
+        report
     }
 
     /// Pure-rust per-row sketch of one block (the reference baseline).
@@ -361,25 +423,45 @@ impl Pipeline {
 
     /// Batch of pair estimates (None for unknown ids).
     ///
-    /// Large plain-estimator batches take the arena path: one columnar
-    /// snapshot of the store, then lock-free contiguous scoring —
-    /// cheaper than per-pair shard locking once the batch is big enough
-    /// to amortize the O(n·k) snapshot copy. Small batches and the MLE
-    /// mode stay on the per-pair path.
+    /// Large plain-estimator batches take a columnar path: when the
+    /// store is fully columnar the pairs are scored *in place* on the
+    /// segment panels (no copy at all); otherwise one arena snapshot of
+    /// the store, then lock-free contiguous scoring — cheaper than
+    /// per-pair shard locking once the batch is big enough to amortize
+    /// the O(n·k) snapshot copy. Small batches and the MLE mode stay on
+    /// the per-pair path. All three routes are bitwise-identical.
     pub fn estimate_pairs(&self, pairs: &[(u64, u64)]) -> Vec<Option<f64>> {
         let big_batch = pairs.len() >= 32 && pairs.len() * 4 >= self.store.len();
         if !self.cfg.use_mle && big_batch {
             let t = Instant::now();
-            let snap = self.store.arena_snapshot(self.cfg.p, self.cfg.k);
-            let out: Vec<Option<f64>> = pairs
-                .iter()
-                .map(|&(a, b)| match (snap.pos.get(&a), snap.pos.get(&b)) {
-                    (Some(&i), Some(&j)) => Some(estimator::estimate_arena(
-                        &self.dec, &snap.arena, i, &snap.arena, j,
-                    )),
-                    _ => None,
+            // Segment-native fast path: score straight from the panels.
+            let out: Vec<Option<f64>> = self
+                .store
+                .with_columnar_view(self.cfg.p, |view| {
+                    view.map(|v| {
+                        pairs
+                            .iter()
+                            .map(|&(a, b)| match (v.pos_of(a), v.pos_of(b)) {
+                                (Some(i), Some(j)) => {
+                                    Some(estimator::estimate_arena(&self.dec, v, i, v, j))
+                                }
+                                _ => None,
+                            })
+                            .collect()
+                    })
                 })
-                .collect();
+                .unwrap_or_else(|| {
+                    let snap = self.store.arena_snapshot(self.cfg.p, self.cfg.k);
+                    pairs
+                        .iter()
+                        .map(|&(a, b)| match (snap.pos.get(&a), snap.pos.get(&b)) {
+                            (Some(&i), Some(&j)) => Some(estimator::estimate_arena(
+                                &self.dec, &snap.arena, i, &snap.arena, j,
+                            )),
+                            _ => None,
+                        })
+                        .collect()
+                });
             let served = out.iter().filter(|o| o.is_some()).count() as u64;
             self.metrics.queries_served.fetch_add(served, Ordering::Relaxed);
             // query_latency holds per-pair samples; log the batch's
@@ -393,6 +475,41 @@ impl Pipeline {
             return out;
         }
         pairs.iter().map(|&(a, b)| self.estimate_pair(a, b)).collect()
+    }
+
+    /// Store-served batch KNN: sketch `queries`, then stream the store's
+    /// rows through the fused arena top-k kernel. Returns per query the
+    /// `top` nearest stored rows as `(id, estimated distance)`,
+    /// ascending. A fully-columnar store is scanned segment-natively
+    /// (no snapshot copy); otherwise one arena snapshot serves the scan.
+    /// Plain estimator only, like all blocked paths (the MLE consumes
+    /// per-row state).
+    pub fn top_k(&self, queries: &[&[f32]], top: usize) -> Vec<Vec<(u64, f64)>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let qsk = self.sketcher.sketch_rows(queries);
+        let qarena = crate::core::arena::SketchArena::from_rows(self.cfg.p, self.cfg.k, &qsk);
+        let workers = self.cfg.workers.max(1);
+        let out = self
+            .store
+            .with_columnar_view(self.cfg.p, |view| {
+                view.map(|v| {
+                    estimator::top_k_scan_arena(&self.dec, &qarena, v, top, workers)
+                        .into_iter()
+                        .map(|lst| lst.into_iter().map(|(i, d)| (v.id_at(i), d)).collect())
+                        .collect::<Vec<Vec<(u64, f64)>>>()
+                })
+            })
+            .unwrap_or_else(|| {
+                let snap = self.store.arena_snapshot(self.cfg.p, self.cfg.k);
+                estimator::top_k_scan_arena(&self.dec, &qarena, &snap.arena, top, workers)
+                    .into_iter()
+                    .map(|lst| lst.into_iter().map(|(i, d)| (snap.ids[i], d)).collect())
+                    .collect()
+            });
+        self.metrics.queries_served.fetch_add(queries.len() as u64, Ordering::Relaxed);
+        out
     }
 
     /// All pairwise estimates over the stored ids, ascending (condensed
@@ -426,22 +543,26 @@ impl Pipeline {
                     }
                 }
             }
-            // Columnar snapshot straight off the store: GEMM-ingested
-            // segments land by contiguous copy, map rows by one
-            // transpose each — no intermediate Vec<RowSketch>.
-            let snap = self.store.arena_snapshot(self.cfg.p, self.cfg.k);
-            let n = snap.arena.n();
-            if n < 2 {
-                return Vec::new();
-            }
-            let out = estimator::estimate_condensed_arena(
-                &self.dec,
-                &snap.arena,
-                self.cfg.workers.max(1),
-            );
+            // Fully-columnar store: run the condensed kernel straight on
+            // the segment panels (zero-copy). Otherwise one columnar
+            // snapshot: GEMM-ingested segments land by contiguous copy,
+            // map rows by one transpose each — no intermediate
+            // Vec<RowSketch>. Both orders rows by ascending id, so the
+            // outputs are bitwise-identical.
+            let workers = self.cfg.workers.max(1);
+            let out = self
+                .store
+                .with_columnar_view(self.cfg.p, |view| {
+                    view.map(|v| estimator::estimate_condensed_arena(&self.dec, v, workers))
+                })
+                .unwrap_or_else(|| {
+                    let snap = self.store.arena_snapshot(self.cfg.p, self.cfg.k);
+                    estimator::estimate_condensed_arena(&self.dec, &snap.arena, workers)
+                });
+            let n = self.store.len();
             self.metrics
                 .queries_served
-                .fetch_add((n * (n - 1) / 2) as u64, Ordering::Relaxed);
+                .fetch_add((n.saturating_sub(1) * n / 2) as u64, Ordering::Relaxed);
             return out;
         }
         let ids = self.store.ids();
@@ -862,6 +983,96 @@ mod tests {
         let pm = Pipeline::new(cm).unwrap();
         pm.ingest(&data).unwrap();
         assert!(pm.estimate_pair(1, 2).unwrap().is_finite());
+    }
+
+    #[test]
+    fn ingest_compaction_hook_bounds_segments_and_keeps_estimates() {
+        let mut c = cfg(64, 64);
+        c.k = 16;
+        c.block_rows = 8; // 8 tiny segments without compaction
+        let data = gen::generate(DataDist::Gaussian, c.n, c.d, 51);
+        let plain = Pipeline::new(c.clone()).unwrap();
+        plain.ingest(&data).unwrap();
+        assert_eq!(plain.metrics().segment_count, 8);
+        assert_eq!(plain.metrics().compactions, 0);
+        let mut cc = c.clone();
+        cc.compact_min_rows = 64;
+        let compacted = Pipeline::new(cc).unwrap();
+        compacted.ingest(&data).unwrap();
+        // Adjacent 8-row segments merge into one 64-row segment.
+        assert_eq!(compacted.metrics().segment_count, 1);
+        assert!(compacted.metrics().compactions >= 1);
+        assert_eq!(compacted.store().segments_snapshot()[0].1.rows(), 64);
+        // Compaction is estimate-invariant: both stores hold the same
+        // sketches, so every estimate matches bitwise.
+        assert_eq!(plain.all_pairs_condensed(), compacted.all_pairs_condensed());
+        for (a, b) in [(0u64, 63u64), (5, 40), (62, 63)] {
+            assert_eq!(plain.estimate_pair(a, b), compacted.estimate_pair(a, b));
+        }
+    }
+
+    #[test]
+    fn with_store_restores_queries_ids_and_segment_metric() {
+        let c = cfg(30, 64);
+        let data = gen::generate(DataDist::Uniform01, c.n, c.d, 61);
+        let p1 = Pipeline::new(c.clone()).unwrap();
+        p1.ingest(&data).unwrap();
+        let want = p1.all_pairs_condensed();
+        // Hand the store to a fresh pipeline (the persistence-restore
+        // shape; rebalance produces an identical copy).
+        let (copy, _) = crate::coordinator::rebalance::rebalance(p1.store(), 5);
+        let p2 = Pipeline::with_store(c.clone(), copy).unwrap();
+        assert!(p2.metrics().segment_count > 0, "columnar layout lost in adoption");
+        assert_eq!(p2.all_pairs_condensed(), want);
+        // Fresh ingest continues past the adopted ids.
+        p2.ingest(&data).unwrap();
+        assert_eq!(p2.store().ids(), (0..60).collect::<Vec<u64>>());
+        // Shape mismatch is an error, not silent corruption.
+        let (copy2, _) = crate::coordinator::rebalance::rebalance(p1.store(), 2);
+        let mut bad = c.clone();
+        bad.k = 16;
+        assert!(Pipeline::with_store(bad, copy2).is_err());
+        // So is sidedness mismatch (one-sided rows under an
+        // alternative-strategy config would mis-pair query sketches).
+        let (copy3, _) = crate::coordinator::rebalance::rebalance(p1.store(), 2);
+        let mut alt = c.clone();
+        alt.strategy = Strategy::Alternative;
+        assert!(Pipeline::with_store(alt, copy3).is_err());
+    }
+
+    #[test]
+    fn top_k_is_consistent_across_batching_and_workers() {
+        let mut c = cfg(50, 64);
+        c.k = 32;
+        let data = gen::generate(DataDist::Gaussian, c.n, c.d, 71);
+        let p = Pipeline::new(c.clone()).unwrap();
+        p.ingest(&data).unwrap();
+        let queries: Vec<&[f32]> = (0..4).map(|i| data.row(i * 11)).collect();
+        let batch = p.top_k(&queries, 5);
+        assert_eq!(batch.len(), 4);
+        for (qi, lst) in batch.iter().enumerate() {
+            assert_eq!(lst.len(), 5);
+            // Ascending distances, valid store ids.
+            for w in lst.windows(2) {
+                assert!(w[0].1 <= w[1].1);
+            }
+            assert!(lst.iter().all(|&(id, _)| p.store().contains(id)));
+            // Batch equals the single-query call.
+            assert_eq!(&batch[qi], &p.top_k(&queries[qi..qi + 1], 5)[0]);
+        }
+        // Worker count never changes results (same data, same seed ⇒
+        // bitwise-identical store on both pipelines).
+        let mut cw = c.clone();
+        cw.workers = 1;
+        let pw = Pipeline::new(cw).unwrap();
+        pw.ingest(&data).unwrap();
+        assert_eq!(pw.top_k(&queries, 5), batch);
+        // Empty query batch and empty store are fine.
+        assert!(p.top_k(&[], 5).is_empty());
+        let empty = Pipeline::new(c.clone()).unwrap();
+        let lists = empty.top_k(&queries[..1], 5);
+        assert_eq!(lists.len(), 1);
+        assert!(lists[0].is_empty());
     }
 
     #[test]

@@ -14,7 +14,7 @@
 
 use crate::projection::sketcher::RowSketch;
 
-use super::state::SketchStore;
+use super::state::{CompactionReport, SketchStore};
 
 /// Report of one rebalance operation.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -56,6 +56,22 @@ pub fn rebalance(store: &SketchStore, new_shards: usize) -> (SketchStore, Rebala
         new_shards: new.shard_count(),
     };
     (new, report)
+}
+
+/// [`rebalance`] followed by a segment-compaction pass on the new store
+/// — the natural moment to merge small segments, since rebalancing
+/// already rebuilds the whole store and quiesces queries around it.
+/// `min_rows == 0` makes the compaction a no-op (see
+/// [`SketchStore::compact_segments`]).
+pub fn rebalance_compacted(
+    store: &SketchStore,
+    new_shards: usize,
+    min_rows: usize,
+    target_rows: usize,
+) -> (SketchStore, RebalanceReport, CompactionReport) {
+    let (new, report) = rebalance(store, new_shards);
+    let compaction = new.compact_segments(min_rows, target_rows);
+    (new, report, compaction)
 }
 
 /// Expected fraction of rows that change shards when going old → new
@@ -151,6 +167,36 @@ mod tests {
             new.get(103).unwrap().uside.data,
             store.get(103).unwrap().uside.data
         );
+    }
+
+    #[test]
+    fn rebalance_compacted_merges_segments_and_keeps_rows() {
+        let sk = Sketcher::new(
+            ProjectionSpec::new(1, 8, ProjectionDist::Normal, Strategy::Basic),
+            4,
+        );
+        let store = SketchStore::new(2);
+        for b in 0..4u64 {
+            let rows: Vec<Vec<f32>> = (0..3)
+                .map(|i| (0..16).map(|t| ((b * 3 + i + t) as f32 * 0.19).sin()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            store.insert_block_columnar(100 + b * 3, sk.sketch_block(&refs, 1));
+        }
+        assert_eq!(store.segment_count(), 4);
+        let (new, report, compaction) = rebalance_compacted(&store, 5, 64, 1024);
+        assert_eq!(report.rows, 12);
+        assert_eq!(compaction.merges, 1);
+        assert_eq!(new.segment_count(), 1);
+        assert_eq!(new.ids(), store.ids());
+        assert_eq!(
+            new.get(105).unwrap().uside.data,
+            store.get(105).unwrap().uside.data
+        );
+        // min_rows = 0: rebalance alone, no merging.
+        let (plain, _, compaction) = rebalance_compacted(&store, 3, 0, 1024);
+        assert_eq!(compaction.merges, 0);
+        assert_eq!(plain.segment_count(), 4);
     }
 
     #[test]

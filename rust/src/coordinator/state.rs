@@ -28,7 +28,7 @@ use std::sync::RwLock;
 
 use crate::core::arena::{ArenaBuilder, SketchArena};
 use crate::core::decompose::Decomposition;
-use crate::core::estimator::dot;
+use crate::core::estimator::{dot, SketchPanels};
 use crate::projection::sketcher::{ColumnarBlock, RowSketch};
 
 /// Sharded row-id → sketch map + columnar block segments.
@@ -101,6 +101,86 @@ fn score_sides(dec: &Decomposition, x: &Side<'_>, y: &Side<'_>) -> f64 {
         est += dec.coeff(m) * dot(u, v) / kf;
     }
     est
+}
+
+/// Outcome of one [`SketchStore::compact_segments`] pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompactionReport {
+    /// Merge operations performed (each collapses ≥ 2 segments into 1).
+    pub merges: usize,
+    /// Rows copied into merged blocks.
+    pub rows_merged: usize,
+    pub segments_before: usize,
+    pub segments_after: usize,
+}
+
+/// Zero-copy [`SketchPanels`] view over a store's columnar segments:
+/// row `i` of the view is the `i`-th segment-resident row in ascending
+/// id order, served straight from its segment's panels. Built (and
+/// only valid) under the store's segment read lock — see
+/// [`SketchStore::with_columnar_view`]. Row → segment resolution is a
+/// binary search over segment offsets, amortized to nothing next to the
+/// k-wide dot each access feeds.
+pub struct SegmentPanels<'x> {
+    p: usize,
+    k: usize,
+    n: usize,
+    /// Per segment: (first view row, base id, block), offsets ascending.
+    parts: Vec<(usize, u64, &'x ColumnarBlock)>,
+}
+
+impl SegmentPanels<'_> {
+    /// The segment holding view row `i`, plus the row's offset in it.
+    #[inline]
+    fn locate(&self, i: usize) -> (&ColumnarBlock, usize) {
+        debug_assert!(i < self.n);
+        let pos = self.parts.partition_point(|&(off, _, _)| off <= i);
+        let (off, _, block) = self.parts[pos - 1];
+        (block, i - off)
+    }
+
+    /// Store id of view row `i`.
+    pub fn id_at(&self, i: usize) -> u64 {
+        let pos = self.parts.partition_point(|&(off, _, _)| off <= i);
+        let (off, base, _) = self.parts[pos - 1];
+        base + (i - off) as u64
+    }
+
+    /// View row holding store id `id`, if a segment covers it.
+    pub fn pos_of(&self, id: u64) -> Option<usize> {
+        let pos = self.parts.partition_point(|&(_, base, _)| base <= id);
+        let &(off, base, block) = self.parts.get(pos.checked_sub(1)?)?;
+        (id < base + block.rows() as u64).then(|| off + (id - base) as usize)
+    }
+}
+
+impl SketchPanels for SegmentPanels<'_> {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn u_row(&self, m: usize, i: usize) -> &[f32] {
+        let (block, r) = self.locate(i);
+        block.u_row(m, r)
+    }
+
+    fn v_row(&self, m: usize, i: usize) -> &[f32] {
+        let (block, r) = self.locate(i);
+        block.v_row(m, r)
+    }
+
+    fn norm_p(&self, i: usize) -> f64 {
+        let (block, r) = self.locate(i);
+        block.moment(r, self.p)
+    }
 }
 
 /// Result of [`SketchStore::arena_snapshot`]: the columnar arena plus
@@ -353,6 +433,100 @@ impl SketchStore {
         ArenaSnapshot { ids, pos, arena }
     }
 
+    /// Number of columnar segments currently held (the
+    /// `segment_count` metric; small `block_rows` without compaction
+    /// makes this grow linearly with ingest).
+    pub fn segment_count(&self) -> usize {
+        self.segments.read().unwrap().len()
+    }
+
+    /// Merge runs of small *adjacent* segments (contiguous id ranges)
+    /// into larger arena-layout blocks via [`ColumnarBlock::concat`] —
+    /// one contiguous copy per (order, side) per input segment, so the
+    /// merged panels are bitwise-identical to the originals and every
+    /// estimate is unchanged.
+    ///
+    /// Policy: a segment is *small* when it has fewer than `min_rows`
+    /// rows; an adjacent segment joins the current merge group while the
+    /// group or the candidate is small and the merged size stays at or
+    /// under `target_rows`. `min_rows == 0` disables compaction (nothing
+    /// is small). Non-adjacent segments (id gaps) never merge — the
+    /// segment invariant is that covered ranges are exactly the ingested
+    /// blocks' ranges, with gaps preserved.
+    pub fn compact_segments(&self, min_rows: usize, target_rows: usize) -> CompactionReport {
+        let mut segs = self.segments.write().unwrap();
+        let before = segs.len();
+        let old = std::mem::take(&mut *segs);
+        let mut merges = 0usize;
+        let mut rows_merged = 0usize;
+        let mut group: Vec<Segment> = Vec::new();
+        let mut flush = |group: &mut Vec<Segment>, out: &mut Vec<Segment>| {
+            if group.len() >= 2 {
+                let blocks: Vec<&ColumnarBlock> = group.iter().map(|s| &s.block).collect();
+                let merged = ColumnarBlock::concat(&blocks);
+                merges += 1;
+                rows_merged += merged.rows();
+                out.push(Segment { base: group[0].base, block: merged });
+            } else {
+                out.append(group);
+            }
+            group.clear();
+        };
+        for seg in old {
+            let group_rows: usize = group.iter().map(|s| s.block.rows()).sum();
+            let adjacent = group.last().is_some_and(|g| g.end() == seg.base);
+            let joinable = adjacent
+                && (seg.block.rows() < min_rows || group_rows < min_rows)
+                && group_rows + seg.block.rows() <= target_rows;
+            if !joinable {
+                flush(&mut group, &mut *segs);
+            }
+            group.push(seg);
+        }
+        flush(&mut group, &mut *segs);
+        CompactionReport {
+            merges,
+            rows_merged,
+            segments_before: before,
+            segments_after: segs.len(),
+        }
+    }
+
+    /// Run `f` on a zero-copy [`SegmentPanels`] view of the store when
+    /// it is *fully columnar* (every row segment-resident, at least one
+    /// row) — the segment-native batch-query fast path: blocked kernels
+    /// score the panels in place, skipping the `arena_snapshot` copy
+    /// entirely. Stores with map rows (or empty stores) get `None` and
+    /// must take the snapshot path.
+    ///
+    /// Locking: shard + segment read locks are held for the *whole* of
+    /// `f` — for a long kernel (an all-pairs scan) that is much longer
+    /// than a snapshot's copy phase, and writers (ingest, compaction)
+    /// block until it finishes. That matches how the pipeline already
+    /// treats bulk scans (offline-ish, like rebalance); callers needing
+    /// ingest concurrency during long scans should prefer
+    /// [`SketchStore::arena_snapshot`], which pays the copy to release
+    /// the locks early.
+    pub fn with_columnar_view<R>(
+        &self,
+        p: usize,
+        f: impl FnOnce(Option<&SegmentPanels<'_>>) -> R,
+    ) -> R {
+        let guards: Vec<_> = self.shards.iter().map(|s| s.read().unwrap()).collect();
+        let segs = self.segments.read().unwrap();
+        if segs.is_empty() || guards.iter().any(|g| !g.is_empty()) {
+            return f(None);
+        }
+        let mut parts = Vec::with_capacity(segs.len());
+        let mut off = 0usize;
+        for s in segs.iter() {
+            parts.push((off, s.base, &s.block));
+            off += s.block.rows();
+        }
+        let view = SegmentPanels { p, k: segs[0].block.k(), n: off, parts };
+        f(Some(&view))
+    }
+
     /// `(base, block)` clones of every columnar segment, base ascending.
     /// Rebalance carries segments over verbatim — they are
     /// shard-independent, so re-sharding must not degrade them to
@@ -586,5 +760,111 @@ mod tests {
             store.insert(i, sketch_of(i as f32));
         }
         assert_eq!(store.bytes(), 7 * one);
+    }
+
+    #[test]
+    fn compaction_merges_adjacent_small_segments() {
+        let store = SketchStore::new(2);
+        store.insert_block_columnar(10, block_of(4)); // 10..14
+        store.insert_block_columnar(14, block_of(2)); // 14..16, adjacent
+        store.insert_block_columnar(16, block_of(3)); // 16..19, adjacent
+        store.insert_block_columnar(40, block_of(2)); // gapped: never merges
+        assert_eq!(store.segment_count(), 4);
+        let ids = store.ids();
+        let bytes = store.bytes();
+        let report = store.compact_segments(8, 100);
+        assert_eq!(report.segments_before, 4);
+        assert_eq!(report.segments_after, 2);
+        assert_eq!(report.merges, 1);
+        assert_eq!(report.rows_merged, 9);
+        assert_eq!(store.segment_count(), 2);
+        // Content unchanged: same ids, same bytes, same row payloads.
+        assert_eq!(store.ids(), ids);
+        assert_eq!(store.bytes(), bytes);
+        let snap = store.segments_snapshot();
+        assert_eq!(snap[0].0, 10);
+        assert_eq!(snap[0].1.rows(), 9);
+        assert_eq!(snap[1].0, 40);
+    }
+
+    #[test]
+    fn compaction_respects_target_rows_and_zero_min() {
+        let store = SketchStore::new(1);
+        for i in 0..6u64 {
+            store.insert_block_columnar(i * 3, block_of(3)); // 0..18, adjacent
+        }
+        // min 0 disables the pass entirely.
+        let report = store.compact_segments(0, 100);
+        assert_eq!(report.merges, 0);
+        assert_eq!(store.segment_count(), 6);
+        // Target caps merged size: 3-row segments pack to ≤ 7 rows
+        // (two per group), leaving 3 merged pairs.
+        let report = store.compact_segments(100, 7);
+        assert_eq!(report.merges, 3);
+        assert_eq!(store.segment_count(), 3);
+        assert_eq!(
+            store.segments_snapshot().iter().map(|(b, blk)| (*b, blk.rows())).collect::<Vec<_>>(),
+            vec![(0, 6), (6, 6), (12, 6)]
+        );
+        // Idempotent once nothing is small enough to join.
+        let report = store.compact_segments(4, 7);
+        assert_eq!(report.merges, 0);
+    }
+
+    #[test]
+    fn compaction_is_estimate_invariant_bitwise() {
+        use crate::core::decompose::Decomposition;
+        let dec = Decomposition::new(4).unwrap();
+        let store = SketchStore::new(3);
+        store.insert(2, sketch_of(0.5));
+        store.insert_block_columnar(10, block_of(5)); // 10..15
+        store.insert_block_columnar(15, block_of(4)); // 15..19
+        let pairs = [(2u64, 11u64), (10, 18), (14, 15), (11, 11)];
+        let before: Vec<f64> =
+            pairs.iter().map(|&(a, b)| store.estimate_pair_plain(&dec, a, b).unwrap()).collect();
+        let report = store.compact_segments(64, 1024);
+        assert_eq!(report.merges, 1);
+        let after: Vec<f64> =
+            pairs.iter().map(|&(a, b)| store.estimate_pair_plain(&dec, a, b).unwrap()).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn columnar_view_engages_only_when_fully_columnar() {
+        let store = SketchStore::new(2);
+        // Empty store: no view.
+        assert!(store.with_columnar_view(4, |v| v.is_none()));
+        store.insert_block_columnar(10, block_of(4));
+        assert!(store.with_columnar_view(4, |v| v.is_some()));
+        // One map row degrades to the snapshot path.
+        store.insert(0, sketch_of(1.0));
+        assert!(store.with_columnar_view(4, |v| v.is_none()));
+    }
+
+    #[test]
+    fn columnar_view_mirrors_arena_snapshot() {
+        let store = SketchStore::new(2);
+        store.insert_block_columnar(10, block_of(4)); // 10..14
+        store.insert_block_columnar(20, block_of(3)); // 20..23 (gap)
+        let snap = store.arena_snapshot(4, 4);
+        store.with_columnar_view(4, |view| {
+            let v = view.expect("fully columnar");
+            assert_eq!(v.n(), 7);
+            assert_eq!(v.k(), 4);
+            assert_eq!(v.p(), 4);
+            for i in 0..7 {
+                assert_eq!(v.id_at(i), snap.ids[i]);
+                assert_eq!(v.pos_of(snap.ids[i]), Some(i));
+                for m in 1..4 {
+                    assert_eq!(v.u_row(m, i), snap.arena.u_row(m, i), "m={m} i={i}");
+                    assert_eq!(v.v_row(m, i), snap.arena.v_row(m, i), "m={m} i={i}");
+                }
+                assert_eq!(v.norm_p(i), snap.arena.norm_p(i));
+            }
+            // Ids outside any segment resolve to None.
+            for missing in [0u64, 9, 14, 19, 23, 99] {
+                assert_eq!(v.pos_of(missing), None, "id {missing}");
+            }
+        });
     }
 }

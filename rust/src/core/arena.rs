@@ -347,6 +347,36 @@ mod tests {
     }
 
     #[test]
+    fn concat_block_lands_like_sequential_blocks() {
+        // Compaction invariant at the arena layer: landing
+        // `ColumnarBlock::concat(&[a, b])` as one block is
+        // bitwise-identical to landing `a` and `b` sequentially — the
+        // store may merge segments at any time without changing any
+        // arena-served estimate.
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let (p, k) = (4, 8);
+            let a = block_of(strategy, p, k, 3);
+            let b = block_of(strategy, p, k, 2);
+            let merged = ColumnarBlock::concat(&[&a, &b]);
+            assert_eq!(merged.rows(), 5);
+            let mut seq = ArenaBuilder::new(p, k, 5, a.is_two_sided());
+            seq.set_block(0, &a);
+            seq.set_block(3, &b);
+            let seq = seq.finish();
+            let mut one = ArenaBuilder::new(p, k, 5, merged.is_two_sided());
+            one.set_block(0, &merged);
+            let one = one.finish();
+            for r in 0..5 {
+                for m in 1..p {
+                    assert_eq!(one.u_row(m, r), seq.u_row(m, r), "u m={m} r={r}");
+                    assert_eq!(one.v_row(m, r), seq.v_row(m, r), "v m={m} r={r}");
+                }
+                assert_eq!(one.norm_p(r), seq.norm_p(r), "norm r={r}");
+            }
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "filled exactly once")]
     fn builder_rejects_partial_fill() {
         let block = block_of(Strategy::Basic, 4, 8, 3);

@@ -127,10 +127,66 @@ pub fn estimate_block(dec: &Decomposition, xs: &[RowSketch], ys: &[RowSketch]) -
 /// comfortably in L1/L2 together.
 pub const ARENA_TILE: usize = 64;
 
-/// Single-pair estimate from arena rows: row `i` of `q` (u side) against
+/// Read-only view of columnar sketch panels — the shape every blocked
+/// kernel consumes. Implemented by [`SketchArena`] (the owned
+/// transposed copy) and by the store's zero-copy segment view
+/// (`coordinator::state::SegmentPanels`), so batch queries over a
+/// fully-columnar store score segment rows straight from their panels
+/// without paying the `arena_snapshot` copy first. Accessors mirror
+/// `SketchArena`'s; a conforming implementation must return the same
+/// f32 slices / f64 norms the equivalent arena would, which makes every
+/// kernel bitwise-identical across implementations by construction.
+pub trait SketchPanels: Sync {
+    /// Number of rows.
+    fn n(&self) -> usize;
+    /// Sketch width.
+    fn k(&self) -> usize;
+    /// Distance order the sketches were built for.
+    fn p(&self) -> usize;
+    /// u_m sketch of row `i` (the left/query side of a pair).
+    fn u_row(&self, m: usize, i: usize) -> &[f32];
+    /// v_m sketch of row `i` (the right/target side of a pair).
+    fn v_row(&self, m: usize, i: usize) -> &[f32];
+    /// Marginal p-norm Σ x^p of row `i`.
+    fn norm_p(&self, i: usize) -> f64;
+}
+
+impl SketchPanels for SketchArena {
+    fn n(&self) -> usize {
+        SketchArena::n(self)
+    }
+
+    fn k(&self) -> usize {
+        SketchArena::k(self)
+    }
+
+    fn p(&self) -> usize {
+        SketchArena::p(self)
+    }
+
+    fn u_row(&self, m: usize, i: usize) -> &[f32] {
+        SketchArena::u_row(self, m, i)
+    }
+
+    fn v_row(&self, m: usize, i: usize) -> &[f32] {
+        SketchArena::v_row(self, m, i)
+    }
+
+    fn norm_p(&self, i: usize) -> f64 {
+        SketchArena::norm_p(self, i)
+    }
+}
+
+/// Single-pair estimate from panel rows: row `i` of `q` (u side) against
 /// row `j` of `t` (v side). Bitwise-identical to [`estimate`] on the
 /// corresponding [`RowSketch`]es.
-pub fn estimate_arena(dec: &Decomposition, q: &SketchArena, i: usize, t: &SketchArena, j: usize) -> f64 {
+pub fn estimate_arena<Q: SketchPanels + ?Sized, T: SketchPanels + ?Sized>(
+    dec: &Decomposition,
+    q: &Q,
+    i: usize,
+    t: &T,
+    j: usize,
+) -> f64 {
     let p = dec.p();
     let kf = q.k() as f64;
     let mut d = q.norm_p(i) + t.norm_p(j);
@@ -142,7 +198,11 @@ pub fn estimate_arena(dec: &Decomposition, q: &SketchArena, i: usize, t: &Sketch
 
 /// Shape/compat checks shared by the arena kernels (skipped when either
 /// side is empty — an empty arena carries no usable k).
-fn check_arena_compat(dec: &Decomposition, q: &SketchArena, t: &SketchArena) {
+fn check_arena_compat<Q: SketchPanels + ?Sized, T: SketchPanels + ?Sized>(
+    dec: &Decomposition,
+    q: &Q,
+    t: &T,
+) {
     assert_eq!(q.p(), dec.p(), "query arena p mismatch");
     assert_eq!(t.p(), dec.p(), "target arena p mismatch");
     assert_eq!(q.k(), t.k(), "arena sketch widths differ");
@@ -156,10 +216,10 @@ fn check_arena_compat(dec: &Decomposition, q: &SketchArena, t: &SketchArena) {
 /// exactly, so every downstream arena kernel is bitwise-consistent with
 /// the per-row path.
 #[allow(clippy::too_many_arguments)]
-fn score_tile(
+fn score_tile<Q: SketchPanels + ?Sized, T: SketchPanels + ?Sized>(
     dec: &Decomposition,
-    q: &SketchArena,
-    t: &SketchArena,
+    q: &Q,
+    t: &T,
     i0: usize,
     rows: usize,
     j0: usize,
@@ -222,13 +282,13 @@ where
 }
 
 /// Blocked dense estimate matrix (row-major `q.n() × t.n()`) from two
-/// arenas — the cache-tiled, multi-threaded mirror of
+/// panel sources — the cache-tiled, multi-threaded mirror of
 /// [`estimate_block`]. Results are bitwise-identical to the per-row path
 /// and independent of `workers`.
-pub fn estimate_block_arena(
+pub fn estimate_block_arena<Q: SketchPanels + ?Sized, T: SketchPanels + ?Sized>(
     dec: &Decomposition,
-    q: &SketchArena,
-    t: &SketchArena,
+    q: &Q,
+    t: &T,
     workers: usize,
 ) -> Vec<f64> {
     let (bn, tn) = (q.n(), t.n());
@@ -303,10 +363,10 @@ fn push_bounded(heap: &mut BinaryHeap<HeapEntry>, cap: usize, idx: usize, d: f64
 /// O(B·(top + TILE)) instead of the O(B·n) a materialize-then-select
 /// pass would need. NaN scores are filtered (never returned, never
 /// panic). Deterministic in `workers`.
-pub fn top_k_scan_arena(
+pub fn top_k_scan_arena<Q: SketchPanels + ?Sized, T: SketchPanels + ?Sized>(
     dec: &Decomposition,
-    q: &SketchArena,
-    t: &SketchArena,
+    q: &Q,
+    t: &T,
     top: usize,
     workers: usize,
 ) -> Vec<Vec<(usize, f64)>> {
@@ -348,12 +408,13 @@ pub fn top_k_scan_arena(
     out
 }
 
-/// Blocked all-pairs over one arena, condensed upper-triangle order
-/// (matching [`crate::baselines::exact::condensed_index`]). Row tiles
-/// own contiguous condensed regions, so workers write disjoint slices.
-pub fn estimate_condensed_arena(
+/// Blocked all-pairs over one panel source, condensed upper-triangle
+/// order (matching [`crate::baselines::exact::condensed_index`]). Row
+/// tiles own contiguous condensed regions, so workers write disjoint
+/// slices.
+pub fn estimate_condensed_arena<A: SketchPanels + ?Sized>(
     dec: &Decomposition,
-    a: &SketchArena,
+    a: &A,
     workers: usize,
 ) -> Vec<f64> {
     let n = a.n();

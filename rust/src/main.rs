@@ -30,6 +30,7 @@ fn usage() -> ! {
          \n\
          data source: --data <file.bin|file.csv> | synthetic --data-dist --n --d | --data corpus\n\
          persistence: ingest --save-sketches <file.lpsk> (O(nk) state; the matrix can be discarded)\n\
+                      pairs --load-sketches <file.lpsk> (serve straight from saved sketches)\n\
          common keys: --p --k --strategy --dist --seed --workers --block-rows --mle --pjrt\n\
          exp:         lpsketch exp <e1..e11|all> [--fast]\n\
          query:       lpsketch query <a> <b> [more pairs...]\n\
@@ -53,6 +54,7 @@ fn main() -> anyhow::Result<()> {
     let mut data_source: Option<String> = None;
     let mut out_path: Option<String> = None;
     let mut save_sketches: Option<String> = None;
+    let mut load_sketches: Option<String> = None;
     let mut fast = false;
     let mut rerank: usize = 0;
     let mut args = Vec::new();
@@ -62,6 +64,7 @@ fn main() -> anyhow::Result<()> {
             "--data" => data_source = it.next(),
             "--out" => out_path = it.next(),
             "--save-sketches" => save_sketches = it.next(),
+            "--load-sketches" => load_sketches = it.next(),
             "--fast" => fast = true,
             "--rerank" => rerank = it.next().and_then(|v| v.parse().ok()).unwrap_or(0),
             _ => args.push(a),
@@ -126,14 +129,47 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "pairs" => {
-            let data = load_data(&cfg, data_source.as_deref())?;
-            cfg.d = data.d();
-            cfg.n = data.n();
-            println!("config: {}", cfg.describe());
-            let pipeline = Pipeline::new(cfg)?;
-            pipeline.ingest(&data)?;
+            // With --load-sketches the saved O(nk) state serves the
+            // export directly — no data matrix, no re-ingest (the
+            // paper's storage claim as an operation).
+            let pipeline = match &load_sketches {
+                Some(path) => {
+                    let path = std::path::Path::new(path);
+                    let header = lpsketch::coordinator::persist::read_header(path)?;
+                    cfg.p = header.p as usize;
+                    cfg.k = header.k as usize;
+                    cfg.d = cfg.d.max(cfg.k);
+                    // The header records sidedness; restore the matching
+                    // strategy so query sketching pairs up correctly.
+                    cfg.strategy = if header.two_sided {
+                        lpsketch::projection::Strategy::Alternative
+                    } else {
+                        lpsketch::projection::Strategy::Basic
+                    };
+                    let (store, _) =
+                        lpsketch::coordinator::persist::load(path, cfg.workers)?;
+                    cfg.n = store.len();
+                    println!(
+                        "config: {} (restored {} rows, {} segments)",
+                        cfg.describe(),
+                        store.len(),
+                        store.segment_count()
+                    );
+                    Pipeline::with_store(cfg, store)?
+                }
+                None => {
+                    let data = load_data(&cfg, data_source.as_deref())?;
+                    cfg.d = data.d();
+                    cfg.n = data.n();
+                    println!("config: {}", cfg.describe());
+                    let pipeline = Pipeline::new(cfg)?;
+                    pipeline.ingest(&data)?;
+                    pipeline
+                }
+            };
             let est = pipeline.all_pairs_condensed();
-            let n = data.n();
+            let ids = pipeline.store().ids();
+            let n = ids.len();
             let mut sink: Box<dyn std::io::Write> = match &out_path {
                 Some(p) => Box::new(std::io::BufWriter::new(std::fs::File::create(p)?)),
                 None => Box::new(std::io::BufWriter::new(std::io::stdout())),
@@ -141,7 +177,13 @@ fn main() -> anyhow::Result<()> {
             writeln!(sink, "i,j,estimate")?;
             for i in 0..n {
                 for j in (i + 1)..n {
-                    writeln!(sink, "{i},{j},{}", est[exact::condensed_index(n, i, j)])?;
+                    writeln!(
+                        sink,
+                        "{},{},{}",
+                        ids[i],
+                        ids[j],
+                        est[exact::condensed_index(n, i, j)]
+                    )?;
                 }
             }
             sink.flush()?;

@@ -225,6 +225,71 @@ impl ColumnarBlock {
         &self.moments[r * self.nm..(r + 1) * self.nm]
     }
 
+    /// The whole row-major `rows × nm` moment buffer (bulk persistence).
+    pub fn moments_all(&self) -> &[f64] {
+        &self.moments
+    }
+
+    /// Reassemble a block from raw buffers — the persistence-v2 load
+    /// path, which reads each (order, side) panel as one contiguous
+    /// chunk and must land it verbatim. Panics on shape/length mismatch
+    /// (callers validate declared sizes before reading the buffers).
+    pub fn from_parts(
+        orders: usize,
+        k: usize,
+        nm: usize,
+        rows: usize,
+        u: Vec<f32>,
+        v: Option<Vec<f32>>,
+        moments: Vec<f64>,
+    ) -> Self {
+        assert_eq!(u.len(), orders * rows * k, "u panel length mismatch");
+        if let Some(v) = &v {
+            assert_eq!(v.len(), orders * rows * k, "v panel length mismatch");
+        }
+        assert_eq!(moments.len(), rows * nm, "moment buffer length mismatch");
+        ColumnarBlock { orders, k, nm, rows, u, v, moments }
+    }
+
+    /// Concatenate blocks covering consecutive row ranges into one
+    /// block — the segment-compaction kernel. Per (order, side) each
+    /// input panel lands with a single contiguous copy at its row
+    /// offset (the [`crate::core::arena::ArenaBuilder::set_block`]
+    /// pattern), so the merged block holds bitwise-identical sketches
+    /// and moments. Panics if the blocks disagree on shape/sidedness or
+    /// if `blocks` is empty.
+    pub fn concat(blocks: &[&ColumnarBlock]) -> ColumnarBlock {
+        let first = blocks.first().expect("concat of zero blocks");
+        let (orders, k, nm) = (first.orders, first.k, first.nm);
+        let two_sided = first.is_two_sided();
+        let rows: usize = blocks
+            .iter()
+            .map(|b| {
+                assert_eq!(
+                    (b.orders, b.k, b.nm, b.is_two_sided()),
+                    (orders, k, nm, two_sided),
+                    "heterogeneous blocks in concat"
+                );
+                b.rows
+            })
+            .sum();
+        let mut out = ColumnarBlock::zeros(orders, k, nm, rows, two_sided);
+        let mut r0 = 0usize;
+        for b in blocks {
+            for m in 1..=orders {
+                let off = ((m - 1) * rows + r0) * k;
+                out.u[off..off + b.rows * k].copy_from_slice(b.u_order(m));
+                if let Some(vbuf) = out.v.as_mut() {
+                    vbuf[off..off + b.rows * k]
+                        .copy_from_slice(b.v_order(m).expect("two-sided"));
+                }
+            }
+            out.moments[r0 * nm..(r0 + b.rows) * nm].copy_from_slice(&b.moments);
+            r0 += b.rows;
+        }
+        out
+    }
+
     /// Σ x^order of block row `r` (order >= 1).
     #[inline]
     pub fn moment(&self, r: usize, order: usize) -> f64 {

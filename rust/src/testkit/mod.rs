@@ -11,6 +11,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod store;
+
 /// Case generator handed to property closures.
 pub struct Gen {
     pub rng: Rng,

@@ -1,0 +1,162 @@
+//! Random store populations for the columnar-lifecycle property suites:
+//! map rows × segment blocks × ragged sizes straddling the kernels'
+//! tile edges, p ∈ {4, 6}, one/two-sided. Generated once per case and
+//! reused by the compaction-invariance, persistence-round-trip, and
+//! segment-native-query tests, which all need the same two views of one
+//! population: the mixed map+segment store under test and its all-map
+//! per-row mirror (the reference path).
+
+use crate::coordinator::SketchStore;
+use crate::projection::sketcher::{ColumnarBlock, RowSketch, Sketcher};
+use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+
+use super::Gen;
+
+/// One drawn population: the raw rows/blocks, so callers can
+/// materialize as many stores (with any shard count) as a test needs.
+pub struct StorePop {
+    pub p: usize,
+    pub k: usize,
+    pub strategy: Strategy,
+    /// Scattered per-row map entries (ids < 100).
+    pub map_rows: Vec<(u64, RowSketch)>,
+    /// Columnar segments `(base, block)`, base ascending, ranges
+    /// disjoint and ≥ 100. Adjacency between consecutive blocks is
+    /// randomized so compaction sees both mergeable runs and id gaps.
+    pub blocks: Vec<(u64, ColumnarBlock)>,
+}
+
+impl StorePop {
+    /// Materialize the population as a store: map rows in the shard
+    /// maps, blocks as columnar segments.
+    pub fn build(&self, shards: usize) -> SketchStore {
+        let store = SketchStore::new(shards);
+        for (id, rs) in &self.map_rows {
+            store.insert(*id, rs.clone());
+        }
+        for (base, block) in &self.blocks {
+            store.insert_block_columnar(*base, block.clone());
+        }
+        store
+    }
+
+    /// The per-row reference mirror: every row — including
+    /// segment-resident ones — lands as a map entry, so queries take the
+    /// map/snapshot paths end to end. Row payloads are bitwise-identical
+    /// to [`StorePop::build`]'s (segment rows materialize through
+    /// [`ColumnarBlock::to_row_sketch`], a verbatim copy).
+    pub fn build_per_row(&self, shards: usize) -> SketchStore {
+        let store = SketchStore::new(shards);
+        for (id, rs) in &self.map_rows {
+            store.insert(*id, rs.clone());
+        }
+        for (base, block) in &self.blocks {
+            for r in 0..block.rows() {
+                store.insert(base + r as u64, block.to_row_sketch(r));
+            }
+        }
+        store
+    }
+
+    /// Every id in the population, ascending.
+    pub fn ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.map_rows.iter().map(|(id, _)| *id).collect();
+        for (base, block) in &self.blocks {
+            ids.extend(*base..*base + block.rows() as u64);
+        }
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.map_rows.len() + self.blocks.iter().map(|(_, b)| b.rows()).sum::<usize>()
+    }
+}
+
+/// Draw a random population. `map_rows_max = 0` forces a fully-columnar
+/// store — the shape where the segment-native query paths engage.
+pub fn random_store_pop(g: &mut Gen, map_rows_max: usize) -> StorePop {
+    let p = if g.bool() { 4 } else { 6 };
+    let strategy = if g.bool() { Strategy::Basic } else { Strategy::Alternative };
+    // k straddles the 8-lane micro-kernel edge.
+    let k = 1 + g.usize_in(0, 12);
+    let d = 8 + g.usize_in(0, 24);
+    let seed = g.usize_in(0, 1 << 16) as u64;
+    let sk = Sketcher::new(ProjectionSpec::new(seed, k, ProjectionDist::Normal, strategy), p);
+    let mut map_rows = Vec::new();
+    if map_rows_max > 0 {
+        let n_map = g.usize_in(0, map_rows_max + 1);
+        let mut used = std::collections::BTreeSet::new();
+        while used.len() < n_map {
+            used.insert(g.usize_in(0, 50) as u64);
+        }
+        for id in used {
+            let row = g.vec_f32(d..d + 1, -2.0..2.0);
+            map_rows.push((id, sk.sketch_row(&row)));
+        }
+    }
+    // Segment blocks: ragged sizes, sometimes straddling the
+    // ARENA_TILE = 64 tile edge, sketched through the GEMM block path
+    // with a random worker count (bitwise worker-invariant).
+    let n_blocks = 1 + g.usize_in(0, 4);
+    let mut base = 100u64;
+    let mut blocks = Vec::new();
+    for _ in 0..n_blocks {
+        let rows = match g.usize_in(0, 6) {
+            0 => 1,
+            1 => 2 + g.usize_in(0, 6),
+            2 => 63 + g.usize_in(0, 3), // 63 | 64 | 65
+            _ => 3 + g.usize_in(0, 30),
+        };
+        let data: Vec<Vec<f32>> = (0..rows).map(|_| g.vec_f32(d..d + 1, -2.0..2.0)).collect();
+        let refs: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+        let block = sk.sketch_block(&refs, 1 + g.usize_in(0, 3));
+        if g.bool() {
+            // Gap: a compaction barrier between this block and the last.
+            base += 1 + g.usize_in(0, 20) as u64;
+        }
+        blocks.push((base, block));
+        base += rows as u64;
+    }
+    StorePop { p, k, strategy, map_rows, blocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn populations_are_well_formed() {
+        testkit::check(20, |g| {
+            let pop = random_store_pop(g, 4);
+            let store = pop.build(3);
+            let mirror = pop.build_per_row(2);
+            assert_eq!(store.len(), pop.total_rows());
+            assert_eq!(store.ids(), pop.ids());
+            assert_eq!(mirror.ids(), pop.ids());
+            assert_eq!(store.bytes(), mirror.bytes());
+            assert!(store.segment_count() >= 1);
+            assert_eq!(mirror.segment_count(), 0);
+            // Row payloads identical across the two views.
+            for &id in pop.ids().iter().take(5) {
+                let a = store.get(id).unwrap();
+                let b = mirror.get(id).unwrap();
+                assert_eq!(a.uside.data, b.uside.data);
+                assert_eq!(a.vside().data, b.vside().data);
+                assert_eq!(a.moments.0, b.moments.0);
+            }
+        });
+    }
+
+    #[test]
+    fn fully_columnar_populations_have_no_map_rows() {
+        testkit::check(10, |g| {
+            let pop = random_store_pop(g, 0);
+            assert!(pop.map_rows.is_empty());
+            let store = pop.build(2);
+            assert!(store.map_ids().is_empty());
+            assert_eq!(store.len(), pop.total_rows());
+        });
+    }
+}

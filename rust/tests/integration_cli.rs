@@ -88,6 +88,38 @@ fn ingest_saves_loadable_sketches() {
 }
 
 #[test]
+fn pairs_serves_from_saved_sketches() {
+    // ingest --save-sketches then pairs --load-sketches: the saved
+    // O(nk) state serves the export without the data matrix.
+    let dir = std::env::temp_dir().join("lpsketch_cli_load");
+    std::fs::create_dir_all(&dir).unwrap();
+    let sketches = dir.join("s.lpsk");
+    let csv_path = dir.join("pairs.csv");
+    let out = bin()
+        .args([
+            "--n", "12", "--d", "128", "--k", "16", "ingest", "--save-sketches",
+            sketches.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = bin()
+        .args([
+            "pairs", "--load-sketches", sketches.to_str().unwrap(), "--out",
+            csv_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("restored 12 rows"), "{stdout}");
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert_eq!(csv.lines().count(), 1 + 12 * 11 / 2);
+    std::fs::remove_file(&sketches).ok();
+    std::fs::remove_file(&csv_path).ok();
+}
+
+#[test]
 fn unknown_flag_fails_with_usage() {
     let out = bin().args(["--bogus", "1", "ingest"]).output().unwrap();
     assert!(!out.status.success());

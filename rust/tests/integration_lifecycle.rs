@@ -1,0 +1,344 @@
+//! Lifecycle property suite: the columnar segment lifecycle —
+//! persistence v2, compaction, and segment-native queries — pinned
+//! against the per-row reference path over random store populations
+//! (map rows × segment blocks × ragged sizes, p ∈ {4, 6},
+//! one/two-sided; see `testkit::store`).
+//!
+//! The invariant everywhere is *bitwise* equality: segments hold the
+//! same f32 panels wherever they travel (disk, compaction, snapshots),
+//! and every query kernel runs the same accumulation sequence, so
+//! save → load → compact → query must reproduce the in-memory per-row
+//! reference exactly — not approximately.
+
+use lpsketch::config::Config;
+use lpsketch::coordinator::{persist, Pipeline};
+use lpsketch::data::{gen, DataDist};
+use lpsketch::testkit::{self, store::StorePop};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("lpsketch_lifecycle_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn cfg_for(pop: &StorePop, workers: usize) -> Config {
+    let mut c = Config::default();
+    c.p = pop.p;
+    c.k = pop.k;
+    c.strategy = pop.strategy;
+    c.workers = workers;
+    c
+}
+
+/// A pair batch large enough to engage the blocked/batched query path,
+/// cycling through the population's ids, plus unknown-id probes.
+fn pair_batch(ids: &[u64]) -> Vec<(u64, u64)> {
+    let n = ids.len();
+    let mut pairs: Vec<(u64, u64)> = (0..n.max(40))
+        .map(|i| (ids[i % n], ids[(i * 7 + 3) % n]))
+        .collect();
+    pairs.push((ids[0], u64::MAX));
+    pairs.push((u64::MAX, ids[n - 1]));
+    pairs
+}
+
+#[test]
+fn compaction_and_segment_native_queries_match_per_row_reference() {
+    // The core lifecycle property: for random fully-columnar stores,
+    // estimate_pairs, top-k KNN, and all_pairs_condensed are
+    // bitwise-identical (1) before vs after compact_segments, (2) on the
+    // segment-native path vs the all-map per-row mirror, and (3) across
+    // worker counts.
+    testkit::check(10, |g| {
+        let pop = testkit::store::random_store_pop(g, 0);
+        let ids = pop.ids();
+        let pairs = pair_batch(&ids);
+        let queries: Vec<Vec<f32>> = (0..3).map(|_| g.vec_f32(8..24, -2.0..2.0)).collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let mut runs = Vec::new();
+        for workers in [1usize, 3] {
+            let native = Pipeline::with_store(cfg_for(&pop, workers), pop.build(workers)).unwrap();
+            let mirror =
+                Pipeline::with_store(cfg_for(&pop, workers), pop.build_per_row(workers)).unwrap();
+            assert!(native.metrics().segment_count > 0);
+            assert_eq!(mirror.metrics().segment_count, 0);
+            let before = (
+                native.estimate_pairs(&pairs),
+                native.all_pairs_condensed(),
+                native.top_k(&qrefs, 7),
+            );
+            // Compact (merge everything adjacent), then re-query.
+            native.store().compact_segments(1 << 20, 1 << 22);
+            let after = (
+                native.estimate_pairs(&pairs),
+                native.all_pairs_condensed(),
+                native.top_k(&qrefs, 7),
+            );
+            assert_eq!(before, after, "compaction changed an estimate");
+            let mirrored = (
+                mirror.estimate_pairs(&pairs),
+                mirror.all_pairs_condensed(),
+                mirror.top_k(&qrefs, 7),
+            );
+            assert_eq!(before, mirrored, "segment-native diverged from per-row mirror");
+            runs.push(before);
+        }
+        assert_eq!(runs[0], runs[1], "worker count changed an estimate");
+    });
+}
+
+#[test]
+fn persist_v2_round_trip_preserves_layout_and_estimates() {
+    testkit::check(10, |g| {
+        let pop = testkit::store::random_store_pop(g, 5);
+        let store = pop.build(3);
+        let path = tmp(&format!("roundtrip_{}.lpsk", g.case));
+        let saved = persist::save(&store, pop.p, &path).unwrap();
+        assert_eq!(saved.rows as usize, pop.total_rows());
+        assert_eq!(saved.map_rows as usize, pop.map_rows.len());
+        assert_eq!(saved.segments as usize, pop.blocks.len());
+        let header = persist::read_header(&path).unwrap();
+        assert_eq!(header, saved);
+        let (loaded, _) = persist::load(&path, 2).unwrap();
+        // Columnar layout preserved verbatim: same segment directory,
+        // bitwise-equal blocks, same map rows, same byte accounting.
+        assert_eq!(loaded.segments_snapshot(), store.segments_snapshot());
+        assert_eq!(loaded.map_ids(), store.map_ids());
+        assert_eq!(loaded.ids(), store.ids());
+        assert_eq!(loaded.bytes(), store.bytes());
+        // And the same estimates, bitwise.
+        let dec = lpsketch::core::decompose::Decomposition::new(pop.p).unwrap();
+        let ids = pop.ids();
+        for (i, &a) in ids.iter().enumerate().take(8) {
+            let b = ids[(i * 5 + 1) % ids.len()];
+            assert_eq!(
+                loaded.estimate_pair_plain(&dec, a, b),
+                store.estimate_pair_plain(&dec, a, b),
+                "pair ({a},{b})"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn corrupt_and_truncated_files_error_never_panic() {
+    // Build one representative v2 file (map rows + segments), then
+    // attack it: every truncation point and a set of header corruptions
+    // must produce an error — never a panic, never an abort-scale
+    // allocation.
+    let mut g = testkit::Gen { rng: lpsketch::util::rng::Rng::new(7), case: 0 };
+    let pop = testkit::store::random_store_pop(&mut g, 4);
+    let store = pop.build(2);
+    let path = tmp("attack.lpsk");
+    persist::save(&store, pop.p, &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let attack = tmp("attacked.lpsk");
+    // Truncations: every prefix length across the header plus strides
+    // through the body.
+    let mut cuts: Vec<usize> = (0..49.min(bytes.len())).collect();
+    cuts.extend((49..bytes.len()).step_by(37));
+    for cut in cuts {
+        std::fs::write(&attack, &bytes[..cut]).unwrap();
+        assert!(persist::load(&attack, 1).is_err(), "truncation at {cut} must error");
+    }
+    // Header corruptions: (offset, little-endian u32 value).
+    for (off, val, what) in [
+        (4usize, 99u32, "unsupported version"),
+        (12, u32::MAX, "implausible k"),
+        (16, u32::MAX, "implausible orders"),
+        (20, u32::MAX, "implausible moment count"),
+    ] {
+        let mut b = bytes.clone();
+        b[off..off + 4].copy_from_slice(&val.to_le_bytes());
+        std::fs::write(&attack, &b).unwrap();
+        assert!(persist::load(&attack, 1).is_err(), "{what} must error");
+        assert!(persist::read_header(&attack).is_err() || off >= 25, "{what} header probe");
+    }
+    // Body corruptions via the u64 counters: map_rows (offset 33) and
+    // segment count (offset 41) inflated far past the file size.
+    for off in [25usize, 33, 41] {
+        let mut b = bytes.clone();
+        b[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&attack, &b).unwrap();
+        assert!(persist::load(&attack, 1).is_err(), "inflated counter at {off} must error");
+    }
+    // Internally inconsistent shape: moments must be 2·orders (a short
+    // moment buffer would index out of bounds at query time).
+    {
+        let mut b = bytes.clone();
+        b[20..24].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&attack, &b).unwrap();
+        assert!(persist::load(&attack, 1).is_err(), "short moment count must error");
+    }
+    // Duplicate map-row id: must be rejected, not silently collapsed.
+    {
+        let p2 = std::iter::repeat_with(|| testkit::store::random_store_pop(&mut g, 4))
+            .take(100)
+            .find(|p| p.map_rows.len() >= 2)
+            .expect("a population with >= 2 map rows");
+        let s2 = p2.build(2);
+        persist::save(&s2, p2.p, &attack).unwrap();
+        let mut b = std::fs::read(&attack).unwrap();
+        let sides = if matches!(p2.strategy, lpsketch::projection::Strategy::Alternative) {
+            2
+        } else {
+            1
+        };
+        let row_bytes = 8 + (p2.p - 1) * p2.k * 4 * sides + 2 * (p2.p - 1) * 8;
+        // Overwrite the second row's id with the first's.
+        let (id0_off, id1_off) = (49usize, 49 + row_bytes);
+        let first_id = b[id0_off..id0_off + 8].to_vec();
+        b[id1_off..id1_off + 8].copy_from_slice(&first_id);
+        std::fs::write(&attack, &b).unwrap();
+        assert!(persist::load(&attack, 1).is_err(), "duplicate map id must error");
+    }
+    std::fs::remove_file(&attack).ok();
+}
+
+/// Hand-rolled v1 writer (the pre-PR-3 row-wise format) so the
+/// compatibility path is exercised against files we fully control.
+fn write_v1(store: &lpsketch::coordinator::SketchStore, p: usize, path: &std::path::Path) {
+    let ids = store.ids();
+    let probe = store.get(ids[0]).unwrap();
+    let (k, orders, nm) = (probe.uside.k, probe.uside.orders, probe.moments.len());
+    let two_sided = probe.vside_data.is_some();
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(b"LPSK");
+    for v in [1u32, p as u32, k as u32, orders as u32, nm as u32] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.push(two_sided as u8);
+    out.extend_from_slice(&(ids.len() as u64).to_le_bytes());
+    for id in ids {
+        let rs = store.get(id).unwrap();
+        out.extend_from_slice(&id.to_le_bytes());
+        for x in &rs.uside.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        if let Some(v) = &rs.vside_data {
+            for x in &v.data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        for o in 1..=nm {
+            out.extend_from_slice(&rs.moments.get(o).to_le_bytes());
+        }
+    }
+    std::fs::write(path, out).unwrap();
+}
+
+#[test]
+fn v1_files_still_load_into_the_map_path() {
+    testkit::check(6, |g| {
+        let pop = testkit::store::random_store_pop(g, 6);
+        // v1 never held segments: write the per-row mirror.
+        let mirror = pop.build_per_row(2);
+        let path = tmp(&format!("v1_{}.lpsk", g.case));
+        write_v1(&mirror, pop.p, &path);
+        let header = persist::read_header(&path).unwrap();
+        assert_eq!(header.segments, 0);
+        assert_eq!(header.rows, header.map_rows);
+        let (loaded, _) = persist::load(&path, 3).unwrap();
+        assert_eq!(loaded.ids(), mirror.ids());
+        assert!(loaded.segments_snapshot().is_empty());
+        for &id in loaded.ids().iter().take(6) {
+            let a = loaded.get(id).unwrap();
+            let b = mirror.get(id).unwrap();
+            assert_eq!(a.uside.data, b.uside.data);
+            assert_eq!(a.vside().data, b.vside().data);
+            assert_eq!(a.moments.0, b.moments.0);
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn v1_golden_fixture_loads() {
+    // An on-disk v1 file committed with the repo: guards the
+    // compatibility path against both format drift and writer drift
+    // (`write_v1` above shares no code with the fixture).
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/v1_golden.lpsk");
+    let header = persist::read_header(&path).unwrap();
+    assert_eq!(header.p, 4);
+    assert_eq!(header.k, 4);
+    assert_eq!(header.orders, 3);
+    assert_eq!(header.moment_orders, 6);
+    assert!(!header.two_sided);
+    assert_eq!(header.rows, 3);
+    assert_eq!(header.segments, 0);
+    let (store, _) = persist::load(&path, 2).unwrap();
+    assert_eq!(store.ids(), vec![0, 5, 9]);
+    assert!(store.segments_snapshot().is_empty());
+    // Payload values are the fixture generator's exact pattern:
+    // u[m][j] = id + m + j/10, moments[o] = id + o/100 (f32 → f64 for
+    // sketches, exact f64 for moments).
+    for &id in &[0u64, 5, 9] {
+        let rs = store.get(id).unwrap();
+        assert_eq!(rs.uside.orders, 3);
+        assert_eq!(rs.uside.k, 4);
+        for m in 1..=3usize {
+            for j in 0..4usize {
+                let want = (id as f64 + m as f64 + j as f64 / 10.0) as f32;
+                assert_eq!(rs.uside.u(m)[j], want, "id {id} m {m} j {j}");
+            }
+        }
+        for o in 1..=6usize {
+            let want = id as f64 + o as f64 / 100.0;
+            assert_eq!(rs.moments.get(o), want, "id {id} moment {o}");
+        }
+    }
+}
+
+#[test]
+fn save_load_compact_query_cycle_from_gemm_ingest() {
+    // The acceptance cycle: GEMM ingest → save → load → adopt → compact
+    // → every query path, bitwise-identical to the in-memory per-row
+    // reference scoring on the original pipeline.
+    let mut c = Config::default();
+    c.n = 60;
+    c.d = 96;
+    c.k = 24;
+    c.block_rows = 8;
+    c.workers = 3;
+    let data = gen::generate(DataDist::Gaussian, c.n, c.d, 97);
+    let origin = Pipeline::new(c.clone()).unwrap();
+    origin.ingest(&data).unwrap();
+    assert!(origin.metrics().segment_count > 1);
+    // In-memory per-row reference: one estimate() per pair over
+    // materialized RowSketches.
+    let reference = origin.all_pairs_condensed_per_row();
+
+    let path = tmp("cycle.lpsk");
+    persist::save(origin.store(), c.p, &path).unwrap();
+    let (loaded, header) = persist::load(&path, c.workers).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(header.segments as usize, origin.store().segment_count());
+    // The regression pin: columnar layout must survive the round-trip
+    // (the old format de-columnarized every row here).
+    assert_eq!(
+        loaded.segments_snapshot().is_empty(),
+        origin.store().segments_snapshot().is_empty()
+    );
+
+    let mut cc = c.clone();
+    cc.compact_min_rows = 64;
+    let restored = Pipeline::with_store(cc, loaded).unwrap();
+    assert!(restored.metrics().segment_count > 1);
+    let compaction = restored.compact();
+    assert!(compaction.merges >= 1);
+    assert_eq!(restored.metrics().segment_count, 1);
+
+    // Every query path reproduces the reference bitwise.
+    assert_eq!(restored.all_pairs_condensed(), reference);
+    let pairs = pair_batch(&restored.store().ids());
+    let batched = restored.estimate_pairs(&pairs);
+    for (&(a, b), got) in pairs.iter().zip(&batched) {
+        assert_eq!(*got, origin.estimate_pair(a, b), "pair ({a},{b})");
+    }
+    let queries: Vec<&[f32]> = (0..3).map(|i| data.row(i * 17)).collect();
+    assert_eq!(restored.top_k(&queries, 6), origin.top_k(&queries, 6));
+}
