@@ -456,6 +456,144 @@ fn main() {
         }
     }
 
+    // Concurrent serving: snapshot-served pair batches vs the legacy
+    // lock-pinned columnar view, with 0 vs 1 concurrent ingest writer.
+    // The snapshot path must hold its queries/s under ingest AND let
+    // the writer keep landing blocks (the legacy path queues the writer
+    // behind every scan). Recorded machine-readably in BENCH_serve.json.
+    {
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        let qstore = pipeline.store();
+        let serve_pairs: Vec<(u64, u64)> =
+            (0..512u64).map(|i| ((i * 7) % n as u64, (i * 13 + 1) % n as u64)).collect();
+        // Writer payload: one pre-sketched block (same shape as the
+        // store), re-landed by Arc handle at fresh gapped bases — the
+        // writer arm measures store contention, not sketch kernels.
+        let wsk =
+            Sketcher::new(ProjectionSpec::new(5, k, ProjectionDist::Normal, Strategy::Basic), 4);
+        let wrows: Vec<Vec<f32>> = (0..64)
+            .map(|i| (0..32).map(|t| ((i * 3 + t) as f32 * 0.17).sin()).collect())
+            .collect();
+        let wrefs: Vec<&[f32]> = wrows.iter().map(|r| r.as_slice()).collect();
+        let wblock = std::sync::Arc::new(wsk.sketch_block(&wrefs, 1));
+        let next_base = AtomicU64::new(1 << 32);
+        // Equality guard before timing: snapshot path == legacy locked
+        // path, bitwise, on the same pair batch.
+        {
+            let snap = qstore.snapshot();
+            let via_snap: Vec<Option<f64>> = serve_pairs
+                .iter()
+                .map(|&(a, b)| snap.estimate_pair_plain(&dec, a, b))
+                .collect();
+            let via_locked: Vec<Option<f64>> = qstore.with_columnar_view_locked(4, |v| {
+                let v = v.expect("fully columnar store");
+                serve_pairs
+                    .iter()
+                    .map(|&(a, b)| match (v.pos_of(a), v.pos_of(b)) {
+                        (Some(i), Some(j)) => Some(estimator::estimate_arena(&dec, v, i, v, j)),
+                        _ => None,
+                    })
+                    .collect()
+            });
+            assert_eq!(via_snap, via_locked, "snapshot vs legacy locked path mismatch");
+        }
+        let arm = |locked: bool, writers: usize| -> (f64, f64) {
+            // Fresh store copy per arm (panels shared by Arc, so the
+            // copy is cheap): every arm starts from the identical
+            // baseline state — writer arms grow only their own copy,
+            // never a later arm's.
+            let (astore, _) =
+                lpsketch::coordinator::rebalance::rebalance(qstore, pipeline.config().workers);
+            let astore = &astore;
+            let stop = AtomicBool::new(false);
+            let queries = AtomicU64::new(0);
+            let blocks = AtomicU64::new(0);
+            let window = std::time::Duration::from_millis(250);
+            std::thread::scope(|s| {
+                for _ in 0..writers {
+                    s.spawn(|| {
+                        while !stop.load(Ordering::Relaxed) {
+                            let base = next_base
+                                .fetch_add(wblock.rows() as u64 + 1, Ordering::Relaxed);
+                            astore.insert_block_shared(base, std::sync::Arc::clone(&wblock));
+                            blocks.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                }
+                for _ in 0..2 {
+                    s.spawn(|| {
+                        while !stop.load(Ordering::Relaxed) {
+                            let mut acc = 0.0f64;
+                            if locked {
+                                astore.with_columnar_view_locked(4, |v| {
+                                    if let Some(v) = v {
+                                        for &(a, b) in &serve_pairs {
+                                            if let (Some(i), Some(j)) = (v.pos_of(a), v.pos_of(b))
+                                            {
+                                                acc += estimator::estimate_arena(&dec, v, i, v, j);
+                                            }
+                                        }
+                                    }
+                                });
+                            } else {
+                                let snap = astore.snapshot();
+                                if let Some(v) = snap.columnar_panels(4) {
+                                    for &(a, b) in &serve_pairs {
+                                        if let (Some(i), Some(j)) = (v.pos_of(a), v.pos_of(b)) {
+                                            acc += estimator::estimate_arena(&dec, &v, i, &v, j);
+                                        }
+                                    }
+                                }
+                            }
+                            std::hint::black_box(acc);
+                            queries.fetch_add(serve_pairs.len() as u64, Ordering::Relaxed);
+                        }
+                    });
+                }
+                std::thread::sleep(window);
+                stop.store(true, Ordering::Relaxed);
+            });
+            let secs = window.as_secs_f64();
+            (
+                queries.load(Ordering::Relaxed) as f64 / secs,
+                blocks.load(Ordering::Relaxed) as f64 / secs,
+            )
+        };
+        let mut results: Vec<String> = Vec::new();
+        for (name, locked, writers) in [
+            ("snapshot", false, 0usize),
+            ("snapshot_ingest", false, 1),
+            ("locked", true, 0),
+            ("locked_ingest", true, 1),
+        ] {
+            let (qps, bps) = arm(locked, writers);
+            table.row(&[
+                "serve".into(),
+                format!("{name} batch={} writers={writers} n={n} k={k}", serve_pairs.len()),
+                "-".into(),
+                "-".into(),
+                format!("{:.2} Mpairs/s", qps / 1e6),
+            ]);
+            results.push(format!(
+                "    {{\"path\": \"{name}\", \"writers\": {writers}, \
+                 \"pairs_per_s\": {qps:.1}, \"ingest_blocks_per_s\": {bps:.1}}}"
+            ));
+            println!("serve {name}: {:.2} Mpairs/s, {bps:.0} ingest blocks/s", qps / 1e6);
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"serve\",\n  \"n\": {n},\n  \"d\": {d},\n  \"k\": {k},\n  \
+             \"p\": 4,\n  \"pairs_per_batch\": {},\n  \"reader_threads\": 2,\n  \
+             \"window_s\": 0.25,\n  \"results\": [\n{}\n  ]\n}}\n",
+            serve_pairs.len(),
+            results.join(",\n"),
+        );
+        if let Err(e) = std::fs::write("BENCH_serve.json", &json) {
+            eprintln!("(could not write BENCH_serve.json: {e})");
+        } else {
+            println!("wrote BENCH_serve.json");
+        }
+    }
+
     // Store ops.
     let store = SketchStore::new(4);
     for (i, s) in sketches.iter().enumerate() {

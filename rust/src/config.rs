@@ -35,6 +35,10 @@ pub struct Config {
     /// Query batcher: deadline in microseconds before a partial batch is
     /// flushed.
     pub batch_deadline_us: u64,
+    /// Query-service worker threads: how many batches can be *served*
+    /// concurrently (each from its own store snapshot; draining the
+    /// batcher itself is serialized).
+    pub query_workers: usize,
     /// Use the margin MLE (Lemma 4) on the query path.
     pub use_mle: bool,
     /// Sketch ingest blocks through the register-tiled GEMM kernel into
@@ -43,10 +47,12 @@ pub struct Config {
     /// equivalence-tested against.
     pub ingest_gemm: bool,
     /// Segment compaction: merge adjacent columnar segments smaller than
-    /// this after each ingest (and on rebalance). `0` disables the pass.
-    /// Compaction is estimate-invariant (panels move by contiguous
-    /// copy), so this is purely a segment-count/locality knob for
-    /// deployments running small `block_rows`.
+    /// this after each ingest (incrementally — only the run the ingest
+    /// appended) and on rebalance. `0` disables the pass. Compaction is
+    /// estimate-invariant (panels move by contiguous copy) and
+    /// copy-on-write (live snapshots keep serving the pre-merge
+    /// blocks), so it defaults on: small `block_rows` deployments get
+    /// bounded segment counts for free.
     pub compact_min_rows: usize,
     /// Segment compaction: merged segments grow to at most this many
     /// rows.
@@ -76,9 +82,10 @@ impl Default for Config {
             queue_depth: 8,
             batch_max: 4096,
             batch_deadline_us: 200,
+            query_workers: 2,
             use_mle: false,
             ingest_gemm: true,
-            compact_min_rows: 0,
+            compact_min_rows: 1024,
             compact_target_rows: 8192,
             use_pjrt: false,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -107,6 +114,7 @@ impl Config {
             "queue-depth" | "queue_depth" => self.queue_depth = parse_nonzero(key, value)?,
             "batch-max" | "batch_max" => self.batch_max = parse_nonzero(key, value)?,
             "batch-deadline-us" | "batch_deadline_us" => self.batch_deadline_us = value.parse()?,
+            "query-workers" | "query_workers" => self.query_workers = parse_nonzero(key, value)?,
             "mle" | "use-mle" | "use_mle" => self.use_mle = parse_bool(value)?,
             "ingest-gemm" | "ingest_gemm" => self.ingest_gemm = parse_bool(value)?,
             "compact-min-rows" | "compact_min_rows" => self.compact_min_rows = value.parse()?,
@@ -184,12 +192,10 @@ impl Config {
             self.k,
             self.d
         );
-        anyhow::ensure!(
-            self.compact_min_rows <= self.compact_target_rows,
-            "compact-min-rows ({}) must not exceed compact-target-rows ({})",
-            self.compact_min_rows,
-            self.compact_target_rows
-        );
+        // compact_min_rows > compact_target_rows is allowed: "small" is
+        // then every segment and the target alone caps merged size —
+        // which also keeps `--compact-target-rows X` (X < the default
+        // min) working without forcing users to retune both knobs.
         Ok(())
     }
 
@@ -277,14 +283,33 @@ mod tests {
     #[test]
     fn compaction_knobs_parse_and_validate() {
         let mut c = Config::default();
-        assert_eq!(c.compact_min_rows, 0, "compaction is opt-in");
+        assert_eq!(
+            c.compact_min_rows, 1024,
+            "copy-on-write compaction defaults on with a sane threshold"
+        );
+        assert!(c.compact_min_rows <= c.compact_target_rows);
         c.apply_args(args(&["--compact-min-rows", "128", "--compact-target-rows", "4096"]))
             .unwrap();
         assert_eq!(c.compact_min_rows, 128);
         assert_eq!(c.compact_target_rows, 4096);
-        // min above target is rejected; target must be nonzero.
-        assert!(c.apply_args(args(&["--compact-min-rows", "8192"])).is_err());
+        // 0 still parses (the opt-out).
+        c.set("compact-min-rows", "0").unwrap();
+        assert_eq!(c.compact_min_rows, 0);
+        // Lowering the target below the default min must keep working
+        // (target alone caps merged size) — only target = 0 is invalid.
+        let mut low = Config::default();
+        low.apply_args(args(&["--compact-target-rows", "512"])).unwrap();
+        assert_eq!(low.compact_target_rows, 512);
         assert!(c.set("compact-target-rows", "0").is_err());
+    }
+
+    #[test]
+    fn query_workers_parse_and_default() {
+        let mut c = Config::default();
+        assert_eq!(c.query_workers, 2);
+        c.apply_args(args(&["--query-workers", "8"])).unwrap();
+        assert_eq!(c.query_workers, 8);
+        assert!(c.set("query-workers", "0").is_err());
     }
 
     #[test]

@@ -12,6 +12,17 @@
 //!   the deadline), or
 //! * `deadline` has elapsed since the *oldest* queued query (upper
 //!   bound under a continuous trickle that never goes idle).
+//!
+//! ## Concurrent draining
+//!
+//! The batcher itself is single-consumer (it owns the mpsc receiver),
+//! but the query service runs **N serving workers** over one batcher by
+//! wrapping it in a `Mutex`: exactly one worker blocks in
+//! [`Batcher::drain`] at a time, releases the lock the moment a batch
+//! is out, and serves it while the next worker drains. Draining is
+//! cheap (channel hops) and serving is the expensive part (estimate
+//! kernels over a store snapshot), so serialized draining costs nothing
+//! while batch *execution* overlaps fully.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};

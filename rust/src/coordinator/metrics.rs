@@ -95,6 +95,19 @@ pub struct Metrics {
     /// Gauge: columnar segments currently resident in the store
     /// (refreshed by the pipeline after ingest / compaction / adoption).
     pub segment_count: AtomicU64,
+    /// Gauge: pair queries currently being served by the query-service
+    /// workers (incremented per drained batch, decremented when its
+    /// replies are sent).
+    pub queries_in_flight: AtomicU64,
+    /// Gauge: store-epoch bumps between the query service's previous
+    /// serving snapshot and its current one — i.e. how many writes
+    /// landed while the last batch was being served (or the service
+    /// idled). 0 = nothing changed between batches; the first batch
+    /// reports 0.
+    pub snapshot_age: AtomicU64,
+    /// Epoch of the query service's most recent serving snapshot
+    /// (internal bookkeeping for `snapshot_age`; not exported).
+    pub last_serve_epoch: AtomicU64,
     pub sketch_latency: Histogram,
     pub query_latency: Histogram,
 }
@@ -116,6 +129,8 @@ impl Metrics {
             fallback_calls: self.fallback_calls.load(Ordering::Relaxed),
             compactions: self.compactions.load(Ordering::Relaxed),
             segment_count: self.segment_count.load(Ordering::Relaxed),
+            queries_in_flight: self.queries_in_flight.load(Ordering::Relaxed),
+            snapshot_age: self.snapshot_age.load(Ordering::Relaxed),
             sketch_mean_us: self.sketch_latency.mean_us(),
             sketch_p95_us: self.sketch_latency.quantile_us(0.95),
             query_mean_us: self.query_latency.mean_us(),
@@ -137,6 +152,8 @@ pub struct Snapshot {
     pub fallback_calls: u64,
     pub compactions: u64,
     pub segment_count: u64,
+    pub queries_in_flight: u64,
+    pub snapshot_age: u64,
     pub sketch_mean_us: f64,
     pub sketch_p95_us: u64,
     pub query_mean_us: f64,
@@ -147,8 +164,8 @@ impl Snapshot {
     pub fn render(&self) -> String {
         format!(
             "rows={} blocks={} queries={} batches={} (deadline={}) pjrt={} gemm={} fallback={} \
-             compactions={} segments={} sketch_mean={:.1}us sketch_p95={}us query_mean={:.1}us \
-             query_p95={}us",
+             compactions={} segments={} in_flight={} snapshot_age={} sketch_mean={:.1}us \
+             sketch_p95={}us query_mean={:.1}us query_p95={}us",
             self.rows_ingested,
             self.blocks_sketched,
             self.queries_served,
@@ -159,6 +176,8 @@ impl Snapshot {
             self.fallback_calls,
             self.compactions,
             self.segment_count,
+            self.queries_in_flight,
+            self.snapshot_age,
             self.sketch_mean_us,
             self.sketch_p95_us,
             self.query_mean_us,

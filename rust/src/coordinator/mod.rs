@@ -8,7 +8,8 @@
 //! * [`batcher`] — deadline+size dynamic batching for pair queries.
 //! * [`router`] — row-id → shard assignment (a partition, by invariant).
 //! * [`state`] — the sharded SketchStore (the O(nk) replacement for the
-//!   O(nD) matrix).
+//!   O(nD) matrix), read through epoch snapshots so scans never pin the
+//!   write path.
 //! * [`metrics`] — counters + latency histograms.
 
 pub mod batcher;
@@ -24,4 +25,4 @@ pub use metrics::{Metrics, Snapshot};
 pub use pipeline::{IngestReport, Pipeline, QueryHandle};
 pub use router::Router;
 pub use scheduler::{Block, BlockScheduler};
-pub use state::{ArenaSnapshot, CompactionReport, SegmentPanels, SketchStore};
+pub use state::{ArenaSnapshot, CompactionReport, Segment, SegmentPanels, SketchStore, StoreSnapshot};

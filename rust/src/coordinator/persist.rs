@@ -49,6 +49,7 @@
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::core::marginals::Moments;
 use crate::projection::sketcher::{ColumnarBlock, RowSketch, SketchSet};
@@ -148,13 +149,20 @@ struct Shape {
 /// Save every row of `store` to `path` (format v2: map rows row-wise,
 /// columnar segments as contiguous panels). `p` is the distance order
 /// the sketches were built for (recorded for load-time validation).
+///
+/// The whole file is written from **one epoch snapshot**: ids, rows,
+/// and segments all come from the same consistent cut, ingest is never
+/// paused for the write, and a concurrent insert can neither tear the
+/// row count nor slip between the header and the body.
 pub fn save(store: &SketchStore, p: usize, path: &Path) -> anyhow::Result<SketchFileHeader> {
-    let map_ids = store.map_ids();
-    let segments = store.segments_snapshot();
+    let snap = store.snapshot();
+    let map_ids = snap.map_ids();
+    let segments: Vec<_> =
+        snap.segments().iter().map(|s| (s.base, Arc::clone(&s.block))).collect();
     // Probe shape from the first map row or the first segment (empty
     // stores save an empty file with zeroed shape — loadable, yields an
     // empty store).
-    let probe_row = map_ids.first().map(|&id| store.get(id).expect("listed id"));
+    let probe_row = map_ids.first().map(|&id| snap.get(id).expect("listed id"));
     let shape = match (&probe_row, segments.first()) {
         (Some(rs), _) => Some(Shape {
             k: rs.uside.k,
@@ -194,7 +202,7 @@ pub fn save(store: &SketchStore, p: usize, path: &Path) -> anyhow::Result<Sketch
     w_u64(&mut w, header.map_rows)?;
     w_u64(&mut w, header.segments)?;
     for id in map_ids {
-        let rs = store.get(id).expect("listed id");
+        let rs = snap.get(id).expect("listed id");
         let row_shape = Shape {
             k: rs.uside.k,
             orders: rs.uside.orders,

@@ -7,10 +7,24 @@
 //! retained, and pairwise distances are answered on the fly from the
 //! sketches — never stored O(n²), never recomputed O(D).
 //!
+//! Every batch reader (pair batches, top-k, all-pairs, the query
+//! service) runs on a [`StoreSnapshot`]: an O(segments) capture of the
+//! store's `Arc`-held state, so scans never pin the store locks and
+//! ingest proceeds concurrently — the serving side of the epoch design
+//! in [`super::state`]. The query service
+//! ([`Pipeline::spawn_query_service`]) is a real concurrent layer:
+//! `query_workers` threads drain the [`Batcher`] in turn, each batch
+//! served from a fresh-enough snapshot (re-captured only when ingest
+//! advanced the store epoch), with `snapshot_age` / `queries_in_flight`
+//! gauges observing it.
+//!
 //! Compute backends per block:
 //! * **PJRT** (`use_pjrt`): blocks padded to the artifact's batch B,
 //!   executed on the AOT-compiled fused sketch kernel (L1/L2 of the
-//!   stack). Used when an artifact matches (p, k) and D.
+//!   stack). Used when an artifact matches (p, k) and D. Outputs land
+//!   columnar (the artifact stacks are already order-major, so each
+//!   (order, side) panel is one contiguous slice) unless `ingest_gemm`
+//!   is off, which keeps the pinned per-row unpack reference.
 //! * **pure rust GEMM** (`ingest_gemm`, default): the register-tiled
 //!   block kernel (`Sketcher::sketch_block`), landing columnar segments
 //!   in the store — no per-row AoS allocation, no store→arena repack.
@@ -18,7 +32,7 @@
 //!   shape; kept as the baseline the GEMM path is pinned against.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::Config;
@@ -27,7 +41,7 @@ use crate::core::estimator;
 use crate::core::marginals::Moments;
 use crate::core::mle::{self, Solve};
 use crate::data::RowMatrix;
-use crate::projection::sketcher::{RowSketch, SketchSet, Sketcher};
+use crate::projection::sketcher::{ColumnarBlock, RowSketch, SketchSet, Sketcher};
 use crate::projection::Strategy;
 use crate::runtime::{ArtifactMeta, Engine, EngineHandle, OpKind, OwnedInput};
 
@@ -35,7 +49,7 @@ use super::batcher::{Batcher, Drained, FlushReason, PairQuery};
 use super::metrics::{Metrics, Snapshot};
 use super::router::Router;
 use super::scheduler::{Block, BlockScheduler};
-use super::state::SketchStore;
+use super::state::{SketchStore, StoreSnapshot};
 
 /// Outcome of one `ingest` call.
 #[derive(Clone, Debug)]
@@ -69,6 +83,9 @@ struct PjrtPath {
     handle: EngineHandle,
     meta: ArtifactMeta,
 }
+
+/// Raw sketch-artifact outputs: (u stack, moment stack, v stack?).
+type PjrtRaw = (Vec<f32>, Vec<f32>, Option<Vec<f32>>);
 
 impl Pipeline {
     /// Build a pipeline. With `use_pjrt`, starts the engine and warms
@@ -205,7 +222,19 @@ impl Pipeline {
                     };
                     let Ok(block) = block else { break };
                     let t = Instant::now();
-                    let stored = if use_pjrt {
+                    let stored = if use_pjrt && use_gemm {
+                        // PJRT columnar path: the artifact stacks are
+                        // already order-major, so the block lands in
+                        // the store as contiguous panels — no per-row
+                        // AoS sketches, same as the GEMM path.
+                        self.sketch_block_pjrt_columnar(&block).map(|cb| {
+                            pjrt_rows.fetch_add(block.rows as u64, Ordering::Relaxed);
+                            self.metrics.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+                            self.store.insert_block_columnar(base + block.first_row, cb);
+                        })
+                    } else if use_pjrt {
+                        // Pinned reference: per-row unpack of the same
+                        // artifact outputs (`ingest-gemm false`).
                         self.sketch_block_pjrt(&block).map(|sketches| {
                             pjrt_rows.fetch_add(block.rows as u64, Ordering::Relaxed);
                             self.metrics.pjrt_calls.fetch_add(1, Ordering::Relaxed);
@@ -260,9 +289,19 @@ impl Pipeline {
         // Lifecycle hook: small `block_rows` lands one segment per
         // block; merge small adjacent segments so the segment count
         // stays bounded (estimate-invariant — panels move by contiguous
-        // copy). `compact-min-rows = 0` (the default) disables it.
+        // copy). Incremental: only the run of segments this ingest
+        // appended (`base .. base + n`) is considered, so the hook's
+        // cost scales with the ingest, not the store, and compaction
+        // being copy-on-write means readers are never paused for it.
+        // `compact-min-rows = 0` disables it.
         if self.cfg.compact_min_rows > 0 {
-            self.compact();
+            let report = self.store.compact_range(
+                self.cfg.compact_min_rows,
+                self.cfg.compact_target_rows,
+                base,
+                base + n as u64,
+            );
+            self.metrics.compactions.fetch_add(report.merges as u64, Ordering::Relaxed);
         }
         self.metrics
             .segment_count
@@ -303,8 +342,12 @@ impl Pipeline {
         self.sketcher.sketch_block(&rows, 1)
     }
 
-    /// PJRT sketch of one block via the AOT artifact (padded to B).
-    fn sketch_block_pjrt(&self, block: &Block) -> anyhow::Result<Vec<RowSketch>> {
+    /// Run the sketch artifact(s) on one block and return the raw
+    /// stacked outputs: `u` (orders × B × K, order-major), `m`
+    /// (moments × B), and the v-side stack under the alternative
+    /// strategy (second artifact pass with the order-reversed matrix
+    /// stack: order m paired with matrix id p−m).
+    fn pjrt_raw(&self, block: &Block) -> anyhow::Result<PjrtRaw> {
         let pjrt = self.pjrt.as_ref().expect("pjrt path");
         let meta = &pjrt.meta;
         anyhow::ensure!(block.rows <= meta.b, "block exceeds artifact batch");
@@ -344,10 +387,7 @@ impl Pipeline {
                 (it.next().unwrap(), it.next().unwrap())
             }
         };
-        let mut sketches = self.unpack_sketches(block, meta, &u, &m);
-        // Alternative strategy: second pass with the order-reversed stack
-        // gives the v-side (order m with matrix id p−m).
-        if matches!(self.cfg.strategy, Strategy::Alternative) {
+        let v = if matches!(self.cfg.strategy, Strategy::Alternative) {
             let p = self.dec.p();
             let x = block.padded(meta.b);
             let mut r_stack = Vec::with_capacity(orders * meta.d * meta.k);
@@ -361,17 +401,55 @@ impl Pipeline {
                     OwnedInput::new(r_stack, &[orders, meta.d, meta.k]),
                 ],
             )?;
-            let v = &outs[0];
+            anyhow::ensure!(!outs.is_empty(), "v-side artifact returns (u, ..)");
+            Some(outs.into_iter().next().unwrap())
+        } else {
+            None
+        };
+        Ok((u, m, v))
+    }
+
+    /// PJRT sketch of one block, per-row AoS output — the pinned
+    /// reference unpack (`ingest-gemm false`), mirroring the pure-rust
+    /// per-row baseline. The deployed path is
+    /// [`Pipeline::sketch_block_pjrt_columnar`].
+    fn sketch_block_pjrt(&self, block: &Block) -> anyhow::Result<Vec<RowSketch>> {
+        let (u, m, v) = self.pjrt_raw(block)?;
+        let meta = &self.pjrt.as_ref().expect("pjrt path").meta;
+        let orders = self.dec.orders();
+        let mut sketches = self.unpack_sketches(block, meta, &u, &m);
+        if let Some(v) = v {
             for (i, rs) in sketches.iter_mut().enumerate() {
                 let mut vset = SketchSet::zeros(orders, meta.k);
                 for ord in 1..=orders {
-                    let src = &v[((ord - 1) * meta.b + i) * meta.k..((ord - 1) * meta.b + i + 1) * meta.k];
+                    let src = &v
+                        [((ord - 1) * meta.b + i) * meta.k..((ord - 1) * meta.b + i + 1) * meta.k];
                     vset.u_mut(ord).copy_from_slice(src);
                 }
                 rs.vside_data = Some(vset);
             }
         }
         Ok(sketches)
+    }
+
+    /// PJRT sketch of one block, columnar output: the artifact stacks
+    /// are already order-major with the padded batch rows leading each
+    /// order panel, so assembly is one contiguous slice per
+    /// (order, side) plus a moment-column gather — no per-row AoS
+    /// sketches, exactly like the GEMM ingest path.
+    fn sketch_block_pjrt_columnar(&self, block: &Block) -> anyhow::Result<ColumnarBlock> {
+        let (u, m, v) = self.pjrt_raw(block)?;
+        let meta = &self.pjrt.as_ref().expect("pjrt path").meta;
+        Ok(assemble_columnar(
+            self.dec.orders(),
+            meta.k,
+            self.dec.moment_orders(),
+            block.rows,
+            meta.b,
+            &u,
+            &m,
+            v.as_deref(),
+        ))
     }
 
     /// Slice artifact outputs (u: orders×B×K, m: moments×B) into
@@ -423,45 +501,48 @@ impl Pipeline {
 
     /// Batch of pair estimates (None for unknown ids).
     ///
-    /// Large plain-estimator batches take a columnar path: when the
-    /// store is fully columnar the pairs are scored *in place* on the
-    /// segment panels (no copy at all); otherwise one arena snapshot of
-    /// the store, then lock-free contiguous scoring — cheaper than
-    /// per-pair shard locking once the batch is big enough to amortize
-    /// the O(n·k) snapshot copy. Small batches and the MLE mode stay on
-    /// the per-pair path. All three routes are bitwise-identical.
+    /// Large plain-estimator batches run on one epoch snapshot: when
+    /// the store is fully columnar the pairs are scored *in place* on
+    /// the snapshot's segment panels (no copy at all); otherwise one
+    /// arena copy of the snapshot, then contiguous scoring — cheaper
+    /// than per-pair resolution once the batch is big enough to
+    /// amortize the O(n·k) copy. Either way no store lock is held while
+    /// scoring, so ingest proceeds concurrently. Small batches and the
+    /// MLE mode stay on the per-pair path. All routes are
+    /// bitwise-identical.
     pub fn estimate_pairs(&self, pairs: &[(u64, u64)]) -> Vec<Option<f64>> {
-        let big_batch = pairs.len() >= 32 && pairs.len() * 4 >= self.store.len();
-        if !self.cfg.use_mle && big_batch {
+        // One capture serves both the size gate and the scan, so the
+        // two always agree on one epoch (and a write-heavy store pays
+        // one O(segments) capture, not two).
+        let snap = (!self.cfg.use_mle && pairs.len() >= 32).then(|| self.store.snapshot());
+        let big_batch = snap.as_ref().is_some_and(|s| pairs.len() * 4 >= s.len());
+        if big_batch {
+            let snap = snap.expect("gated above");
             let t = Instant::now();
             // Segment-native fast path: score straight from the panels.
-            let out: Vec<Option<f64>> = self
-                .store
-                .with_columnar_view(self.cfg.p, |view| {
-                    view.map(|v| {
-                        pairs
-                            .iter()
-                            .map(|&(a, b)| match (v.pos_of(a), v.pos_of(b)) {
-                                (Some(i), Some(j)) => {
-                                    Some(estimator::estimate_arena(&self.dec, v, i, v, j))
-                                }
-                                _ => None,
-                            })
-                            .collect()
+            let out: Vec<Option<f64>> = match snap.columnar_panels(self.cfg.p) {
+                Some(v) => pairs
+                    .iter()
+                    .map(|&(a, b)| match (v.pos_of(a), v.pos_of(b)) {
+                        (Some(i), Some(j)) => {
+                            Some(estimator::estimate_arena(&self.dec, &v, i, &v, j))
+                        }
+                        _ => None,
                     })
-                })
-                .unwrap_or_else(|| {
-                    let snap = self.store.arena_snapshot(self.cfg.p, self.cfg.k);
+                    .collect(),
+                None => {
+                    let arena = snap.arena(self.cfg.p, self.cfg.k);
                     pairs
                         .iter()
-                        .map(|&(a, b)| match (snap.pos.get(&a), snap.pos.get(&b)) {
+                        .map(|&(a, b)| match (arena.pos.get(&a), arena.pos.get(&b)) {
                             (Some(&i), Some(&j)) => Some(estimator::estimate_arena(
-                                &self.dec, &snap.arena, i, &snap.arena, j,
+                                &self.dec, &arena.arena, i, &arena.arena, j,
                             )),
                             _ => None,
                         })
                         .collect()
-                });
+                }
+            };
             let served = out.iter().filter(|o| o.is_some()).count() as u64;
             self.metrics.queries_served.fetch_add(served, Ordering::Relaxed);
             // query_latency holds per-pair samples; log the batch's
@@ -477,13 +558,15 @@ impl Pipeline {
         pairs.iter().map(|&(a, b)| self.estimate_pair(a, b)).collect()
     }
 
-    /// Store-served batch KNN: sketch `queries`, then stream the store's
-    /// rows through the fused arena top-k kernel. Returns per query the
-    /// `top` nearest stored rows as `(id, estimated distance)`,
-    /// ascending. A fully-columnar store is scanned segment-natively
-    /// (no snapshot copy); otherwise one arena snapshot serves the scan.
-    /// Plain estimator only, like all blocked paths (the MLE consumes
-    /// per-row state).
+    /// Store-served batch KNN: sketch `queries`, then stream one epoch
+    /// snapshot of the store through the fused arena top-k kernel.
+    /// Returns per query the `top` nearest stored rows as
+    /// `(id, estimated distance)`, ascending. A fully-columnar snapshot
+    /// is scanned segment-natively (no copy); otherwise one arena copy
+    /// serves the scan. No store lock is held during the kernel —
+    /// ingest runs concurrently and the scan serves the epoch it
+    /// captured. Plain estimator only, like all blocked paths (the MLE
+    /// consumes per-row state).
     pub fn top_k(&self, queries: &[&[f32]], top: usize) -> Vec<Vec<(u64, f64)>> {
         if queries.is_empty() {
             return Vec::new();
@@ -491,23 +574,20 @@ impl Pipeline {
         let qsk = self.sketcher.sketch_rows(queries);
         let qarena = crate::core::arena::SketchArena::from_rows(self.cfg.p, self.cfg.k, &qsk);
         let workers = self.cfg.workers.max(1);
-        let out = self
-            .store
-            .with_columnar_view(self.cfg.p, |view| {
-                view.map(|v| {
-                    estimator::top_k_scan_arena(&self.dec, &qarena, v, top, workers)
-                        .into_iter()
-                        .map(|lst| lst.into_iter().map(|(i, d)| (v.id_at(i), d)).collect())
-                        .collect::<Vec<Vec<(u64, f64)>>>()
-                })
-            })
-            .unwrap_or_else(|| {
-                let snap = self.store.arena_snapshot(self.cfg.p, self.cfg.k);
-                estimator::top_k_scan_arena(&self.dec, &qarena, &snap.arena, top, workers)
+        let snap = self.store.snapshot();
+        let out = match snap.columnar_panels(self.cfg.p) {
+            Some(v) => estimator::top_k_scan_arena(&self.dec, &qarena, &v, top, workers)
+                .into_iter()
+                .map(|lst| lst.into_iter().map(|(i, d)| (v.id_at(i), d)).collect())
+                .collect::<Vec<Vec<(u64, f64)>>>(),
+            None => {
+                let arena = snap.arena(self.cfg.p, self.cfg.k);
+                estimator::top_k_scan_arena(&self.dec, &qarena, &arena.arena, top, workers)
                     .into_iter()
-                    .map(|lst| lst.into_iter().map(|(i, d)| (snap.ids[i], d)).collect())
+                    .map(|lst| lst.into_iter().map(|(i, d)| (arena.ids[i], d)).collect())
                     .collect()
-            });
+            }
+        };
         self.metrics.queries_served.fetch_add(queries.len() as u64, Ordering::Relaxed);
         out
     }
@@ -522,18 +602,22 @@ impl Pipeline {
     /// mode uses the per-row path (the arena stores only what the plain
     /// combine needs).
     pub fn all_pairs_condensed(&self) -> Vec<f64> {
+        // One epoch snapshot serves the whole scan — ids, rows, and
+        // panels all come from the same consistent cut, and the store
+        // is never pinned while the kernel runs.
+        let snap = self.store.snapshot();
         if !self.cfg.use_mle {
             if let Some(pjrt) = &self.pjrt {
                 if let Some(meta) =
                     pjrt.handle.manifest().find_estimate(self.cfg.p, self.cfg.k).cloned()
                 {
-                    let ids = self.store.ids();
+                    let ids = snap.ids();
                     let n = ids.len();
                     if n < 2 {
                         return Vec::new();
                     }
                     let rows: Vec<RowSketch> =
-                        ids.iter().map(|&id| self.store.get(id).unwrap()).collect();
+                        ids.iter().map(|&id| snap.get(id).unwrap()).collect();
                     let mut out = vec![0.0f64; n * (n - 1) / 2];
                     if let Ok(()) = self.all_pairs_pjrt(&rows, &meta, &mut out) {
                         self.metrics
@@ -543,35 +627,33 @@ impl Pipeline {
                     }
                 }
             }
-            // Fully-columnar store: run the condensed kernel straight on
-            // the segment panels (zero-copy). Otherwise one columnar
-            // snapshot: GEMM-ingested segments land by contiguous copy,
-            // map rows by one transpose each — no intermediate
-            // Vec<RowSketch>. Both orders rows by ascending id, so the
-            // outputs are bitwise-identical.
+            // Fully-columnar snapshot: run the condensed kernel straight
+            // on the segment panels (zero-copy). Otherwise one arena
+            // copy: segments land by contiguous copy, map rows by one
+            // transpose each — no intermediate Vec<RowSketch>. Both
+            // order rows by ascending id, so the outputs are
+            // bitwise-identical.
             let workers = self.cfg.workers.max(1);
-            let out = self
-                .store
-                .with_columnar_view(self.cfg.p, |view| {
-                    view.map(|v| estimator::estimate_condensed_arena(&self.dec, v, workers))
-                })
-                .unwrap_or_else(|| {
-                    let snap = self.store.arena_snapshot(self.cfg.p, self.cfg.k);
-                    estimator::estimate_condensed_arena(&self.dec, &snap.arena, workers)
-                });
-            let n = self.store.len();
+            let out = match snap.columnar_panels(self.cfg.p) {
+                Some(v) => estimator::estimate_condensed_arena(&self.dec, &v, workers),
+                None => {
+                    let arena = snap.arena(self.cfg.p, self.cfg.k);
+                    estimator::estimate_condensed_arena(&self.dec, &arena.arena, workers)
+                }
+            };
+            let n = snap.len();
             self.metrics
                 .queries_served
                 .fetch_add((n.saturating_sub(1) * n / 2) as u64, Ordering::Relaxed);
             return out;
         }
-        let ids = self.store.ids();
+        let ids = snap.ids();
         if ids.len() < 2 {
             return Vec::new();
         }
         // MLE consumes per-order norms/moments the arena does not hold;
-        // snapshot per-row sketches once to avoid per-pair locking.
-        let rows: Vec<RowSketch> = ids.iter().map(|&id| self.store.get(id).unwrap()).collect();
+        // materialize per-row sketches once from the snapshot.
+        let rows: Vec<RowSketch> = ids.iter().map(|&id| snap.get(id).unwrap()).collect();
         self.per_row_condensed(&rows)
     }
 
@@ -580,11 +662,12 @@ impl Pipeline {
     /// and baseline the arena kernel is benchmarked against (E7,
     /// `benches/hotpath.rs`); also serves the MLE mode.
     pub fn all_pairs_condensed_per_row(&self) -> Vec<f64> {
-        let ids = self.store.ids();
+        let snap = self.store.snapshot();
+        let ids = snap.ids();
         if ids.len() < 2 {
             return Vec::new();
         }
-        let rows: Vec<RowSketch> = ids.iter().map(|&id| self.store.get(id).unwrap()).collect();
+        let rows: Vec<RowSketch> = ids.iter().map(|&id| snap.get(id).unwrap()).collect();
         self.per_row_condensed(&rows)
     }
 
@@ -694,20 +777,30 @@ impl Pipeline {
         Ok(())
     }
 
-    /// Spawn a batched query service (size+deadline batching, one worker
-    /// thread). The returned handle is cloneable; the service stops when
-    /// every handle is dropped.
+    /// Spawn the batched query service: `query_workers` threads take
+    /// turns draining the [`Batcher`] (one drainer at a time behind a
+    /// mutex; the lock is released before a batch is *served*, so
+    /// batches execute concurrently across workers). Each batch is
+    /// answered from an epoch snapshot that refreshes automatically
+    /// when ingest advances the store — a quiescent store reuses the
+    /// cached snapshot in O(1), a busy one pays one O(segments)
+    /// capture per batch. The `snapshot_age` gauge records how many
+    /// writes behind the serving snapshot was; `queries_in_flight`
+    /// counts queries currently being answered. The returned handle is
+    /// cloneable; the service stops when every handle is dropped.
     pub fn spawn_query_service(self: &Arc<Self>) -> QueryHandle {
         let (tx, rx) = mpsc::channel::<PairQuery<Option<f64>>>();
-        let pipeline = Arc::clone(self);
-        std::thread::spawn(move || {
-            let batcher = Batcher::new(
-                rx,
-                pipeline.cfg.batch_max,
-                Duration::from_micros(pipeline.cfg.batch_deadline_us),
-            );
-            loop {
-                match batcher.drain() {
+        let batcher = Arc::new(Mutex::new(Batcher::new(
+            rx,
+            self.cfg.batch_max,
+            Duration::from_micros(self.cfg.batch_deadline_us),
+        )));
+        for _ in 0..self.cfg.query_workers.max(1) {
+            let pipeline = Arc::clone(self);
+            let batcher = Arc::clone(&batcher);
+            std::thread::spawn(move || loop {
+                let drained = batcher.lock().unwrap().drain();
+                match drained {
                     Drained::Batch(batch, reason) => {
                         pipeline.metrics.batches_flushed.fetch_add(1, Ordering::Relaxed);
                         if reason == FlushReason::Deadline {
@@ -716,17 +809,103 @@ impl Pipeline {
                                 .batch_deadline_flushes
                                 .fetch_add(1, Ordering::Relaxed);
                         }
-                        for q in batch {
-                            let ans = pipeline.estimate_pair(q.a, q.b);
-                            let _ = q.reply.send(ans);
-                        }
+                        pipeline
+                            .metrics
+                            .queries_in_flight
+                            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                        pipeline.serve_batch(batch);
                     }
                     Drained::Closed => break,
                 }
-            }
-        });
+            });
+        }
         QueryHandle { tx }
     }
+
+    /// Answer one drained batch from a per-batch snapshot. The
+    /// `queries_in_flight` gauge (incremented by the caller for the
+    /// whole batch) is decremented per query *before* its reply is
+    /// sent, so a client that has received every answer observes the
+    /// gauge already drained.
+    fn serve_batch(&self, batch: Vec<PairQuery<Option<f64>>>) {
+        let t = Instant::now();
+        let snap = self.store.snapshot();
+        // Staleness gauge: epoch distance from the previous serving
+        // snapshot to this one — the writes that landed while the last
+        // batch was in flight (a just-captured snapshot is always
+        // current w.r.t. the store, so comparing against the *live*
+        // epoch would read ~0 forever).
+        let prev = self.metrics.last_serve_epoch.swap(snap.epoch(), Ordering::Relaxed);
+        let age = if prev == 0 { 0 } else { snap.epoch().saturating_sub(prev) };
+        self.metrics.snapshot_age.store(age, Ordering::Relaxed);
+        let mut served = 0u64;
+        for q in batch {
+            let ans = if self.cfg.use_mle {
+                snap.with_pair(q.a, q.b, |ra, rb| {
+                    mle::estimate_mle(&self.dec, ra, rb, Solve::OneStepNewton)
+                })
+            } else {
+                snap.estimate_pair_plain(&self.dec, q.a, q.b)
+            };
+            if ans.is_some() {
+                served += 1;
+            }
+            self.metrics.queries_in_flight.fetch_sub(1, Ordering::Relaxed);
+            let _ = q.reply.send(ans);
+        }
+        if served > 0 {
+            self.metrics.queries_served.fetch_add(served, Ordering::Relaxed);
+            // Amortized per-pair latency, recorded once per served pair
+            // (bulk, O(1)) so percentiles stay comparable with the
+            // single-pair path.
+            let per_pair_us = (t.elapsed().as_micros() as u64).div_ceil(served).max(1);
+            self.metrics.query_latency.record_us_many(per_pair_us, served);
+        }
+    }
+
+    /// Current store snapshot — the serving-side entry point for
+    /// callers that want to run several reads against one consistent
+    /// cut (e.g. KNN index rebuilds via
+    /// [`crate::knn::KnnIndex::from_snapshot`]).
+    pub fn store_snapshot(&self) -> Arc<StoreSnapshot> {
+        self.store.snapshot()
+    }
+}
+
+/// Assemble a [`ColumnarBlock`] from raw PJRT artifact outputs:
+/// `u`/`v` stacks are order-major `orders × b × k` with the block's
+/// `rows` logical rows leading each order panel (padding trails), so
+/// each (order, side) panel is one contiguous slice; moments arrive
+/// column-major (`nm × b`) and are gathered row-major. Kept as a free
+/// function so the assembly is unit-testable without a PJRT engine.
+#[allow(clippy::too_many_arguments)]
+fn assemble_columnar(
+    orders: usize,
+    k: usize,
+    nm: usize,
+    rows: usize,
+    b: usize,
+    u: &[f32],
+    m: &[f32],
+    v: Option<&[f32]>,
+) -> ColumnarBlock {
+    let take = |stack: &[f32]| -> Vec<f32> {
+        let mut out = Vec::with_capacity(orders * rows * k);
+        for ord in 0..orders {
+            let off = ord * b * k;
+            out.extend_from_slice(&stack[off..off + rows * k]);
+        }
+        out
+    };
+    let u_panels = take(u);
+    let v_panels = v.map(take);
+    let mut moments = vec![0.0f64; rows * nm];
+    for r in 0..rows {
+        for o in 1..=nm {
+            moments[r * nm + o - 1] = m[(o - 1) * b + r] as f64;
+        }
+    }
+    ColumnarBlock::from_parts(orders, k, nm, rows, u_panels, v_panels, moments)
 }
 
 /// Client handle to the batched query service.
@@ -990,6 +1169,7 @@ mod tests {
         let mut c = cfg(64, 64);
         c.k = 16;
         c.block_rows = 8; // 8 tiny segments without compaction
+        c.compact_min_rows = 0; // baseline: hook disabled
         let data = gen::generate(DataDist::Gaussian, c.n, c.d, 51);
         let plain = Pipeline::new(c.clone()).unwrap();
         plain.ingest(&data).unwrap();
@@ -1073,6 +1253,116 @@ mod tests {
         let lists = empty.top_k(&queries[..1], 5);
         assert_eq!(lists.len(), 1);
         assert!(lists[0].is_empty());
+    }
+
+    #[test]
+    fn ingest_compaction_is_incremental_per_run() {
+        // The post-ingest hook only compacts the run of segments the
+        // current ingest appended: two ingests leave two (internally
+        // merged) segments; a full-store pass may still merge across
+        // runs.
+        let mut c = cfg(32, 64);
+        c.k = 16;
+        c.block_rows = 8;
+        c.compact_min_rows = 1024; // everything is "small"
+        let data = gen::generate(DataDist::Gaussian, c.n, c.d, 77);
+        let p = Pipeline::new(c.clone()).unwrap();
+        p.ingest(&data).unwrap();
+        assert_eq!(p.metrics().segment_count, 1, "run of 4 blocks merges to 1");
+        p.ingest(&data).unwrap();
+        assert_eq!(
+            p.metrics().segment_count,
+            2,
+            "second run compacts itself but never reaches back across runs"
+        );
+        let before = p.all_pairs_condensed();
+        // Full-store compaction (the explicit knob) merges across runs
+        // and changes no estimate.
+        let report = p.compact();
+        assert_eq!(report.merges, 1);
+        assert_eq!(p.metrics().segment_count, 1);
+        assert_eq!(p.all_pairs_condensed(), before);
+    }
+
+    #[test]
+    fn query_service_answers_while_ingest_runs() {
+        // The serving claim end-to-end: pair batches keep being
+        // answered while a writer streams new rows in. Every answer
+        // must come from a consistent snapshot (ids 0..20 are fully
+        // ingested before the service starts, so they are present in
+        // every epoch the service can capture).
+        let c = cfg(20, 32);
+        let data = gen::generate(DataDist::Uniform01, 20, 32, 29);
+        let p = Arc::new(Pipeline::new(c).unwrap());
+        p.ingest(&data).unwrap();
+        let h = p.spawn_query_service();
+        std::thread::scope(|s| {
+            let writer = {
+                let p = Arc::clone(&p);
+                s.spawn(move || {
+                    for _ in 0..3 {
+                        p.ingest(&data).unwrap();
+                    }
+                })
+            };
+            for t in 0..3u64 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..40u64 {
+                        let got = h.query((t * 7 + i) % 20, (t * 3 + i * 5 + 1) % 20).unwrap();
+                        assert!(got.is_some(), "pre-ingested ids must always resolve");
+                    }
+                });
+            }
+            writer.join().unwrap();
+        });
+        assert_eq!(p.rows(), 80);
+        let snap = p.metrics();
+        assert_eq!(snap.queries_in_flight, 0, "gauge must return to zero");
+        assert!(snap.queries_served >= 3 * 40);
+    }
+
+    #[test]
+    fn assemble_columnar_matches_per_row_unpack() {
+        // The PJRT columnar assembly vs the pinned per-row unpack
+        // layout, on synthetic artifact outputs (no engine needed):
+        // u[ord][row][j] = ord·1000 + row·10 + j, padded to b rows;
+        // moments column-major m[o][row] = o + row/100.
+        let (orders, k, nm, rows, b) = (3usize, 4usize, 6usize, 5usize, 8usize);
+        let mut u = vec![0.0f32; orders * b * k];
+        for ord in 0..orders {
+            for r in 0..b {
+                for j in 0..k {
+                    u[(ord * b + r) * k + j] = (ord * 1000 + r * 10 + j) as f32;
+                }
+            }
+        }
+        let mut m = vec![0.0f32; nm * b];
+        for o in 0..nm {
+            for r in 0..b {
+                m[o * b + r] = o as f32 + r as f32 / 100.0;
+            }
+        }
+        let v: Vec<f32> = u.iter().map(|x| -x).collect();
+        let block = assemble_columnar(orders, k, nm, rows, b, &u, &m, Some(&v));
+        assert_eq!(block.rows(), rows);
+        assert!(block.is_two_sided());
+        for r in 0..rows {
+            for ord in 1..=orders {
+                // Exactly the slice the per-row unpack would copy.
+                let want = &u[((ord - 1) * b + r) * k..((ord - 1) * b + r + 1) * k];
+                assert_eq!(block.u_row(ord, r), want, "u ord {ord} row {r}");
+                let wantv = &v[((ord - 1) * b + r) * k..((ord - 1) * b + r + 1) * k];
+                assert_eq!(block.v_row(ord, r), wantv, "v ord {ord} row {r}");
+            }
+            for o in 1..=nm {
+                assert_eq!(block.moment(r, o), m[(o - 1) * b + r] as f64, "moment {o} row {r}");
+            }
+        }
+        // One-sided assembly mirrors the u side only.
+        let one = assemble_columnar(orders, k, nm, rows, b, &u, &m, None);
+        assert!(!one.is_two_sided());
+        assert_eq!(one.u_row(2, 3), block.u_row(2, 3));
     }
 
     #[test]

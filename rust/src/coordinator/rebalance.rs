@@ -12,6 +12,8 @@
 //! instead of re-ingesting the data (the whole point is that the raw
 //! O(nD) matrix is gone after the scan).
 
+use std::sync::Arc;
+
 use crate::projection::sketcher::RowSketch;
 
 use super::state::{CompactionReport, SketchStore};
@@ -28,21 +30,25 @@ pub struct RebalanceReport {
 /// Build a store with `new_shards` shards containing exactly the rows of
 /// `store`. Returns the new store and a movement report.
 ///
-/// Columnar segments are shard-independent (sharding only partitions
-/// the hashmap rows), so they carry over verbatim — re-sharding must
-/// not degrade the GEMM-ingested columnar layout into per-row AoS
-/// entries. `moved` therefore counts map rows only: segment rows never
-/// had a shard assignment to move from.
+/// Runs on one epoch snapshot of the source store — a consistent cut,
+/// taken without pausing ingest. Columnar segments are
+/// shard-independent (sharding only partitions the hashmap rows), so
+/// they carry over by `Arc` handle: the new store *shares* the source's
+/// panels instead of copying them (copy-on-write — a later compaction
+/// in either store publishes fresh blocks without disturbing the
+/// other). `moved` counts map rows only: segment rows never had a
+/// shard assignment to move from.
 pub fn rebalance(store: &SketchStore, new_shards: usize) -> (SketchStore, RebalanceReport) {
+    let snap = store.snapshot();
     let new = SketchStore::new(new_shards);
     let mut moved = 0usize;
     let mut rows = 0usize;
-    for (base, block) in store.segments_snapshot() {
-        rows += block.rows();
-        new.insert_block_columnar(base, block);
+    for seg in snap.segments() {
+        rows += seg.block.rows();
+        new.insert_block_shared(seg.base, Arc::clone(&seg.block));
     }
-    for id in store.map_ids() {
-        let sketch: RowSketch = store.get(id).expect("id listed but missing");
+    for id in snap.map_ids() {
+        let sketch: RowSketch = snap.get(id).expect("id listed but missing");
         rows += 1;
         if store.shard_of(id) != new.shard_of(id) {
             moved += 1;
@@ -167,6 +173,23 @@ mod tests {
             new.get(103).unwrap().uside.data,
             store.get(103).unwrap().uside.data
         );
+    }
+
+    #[test]
+    fn rebalance_shares_segment_panels_instead_of_copying() {
+        let sk = Sketcher::new(
+            ProjectionSpec::new(1, 8, ProjectionDist::Normal, Strategy::Basic),
+            4,
+        );
+        let store = SketchStore::new(2);
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..16).map(|t| ((i * 5 + t) as f32 * 0.23).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        store.insert_block_columnar(100, sk.sketch_block(&refs, 1));
+        let (new, _) = rebalance(&store, 5);
+        let (a, b) = (store.segments_snapshot(), new.segments_snapshot());
+        assert!(Arc::ptr_eq(&a[0].1, &b[0].1), "rebalance must share panels by Arc");
     }
 
     #[test]

@@ -1,47 +1,78 @@
 //! SketchStore: the coordinator's state — every ingested row's sketches
-//! + marginal moments, sharded for concurrent writes.
+//! + marginal moments, served to readers through cheap immutable
+//! **epoch snapshots** so scans never pin the write path.
 //!
 //! This is the O(nk) object that replaces the O(nD) matrix (and the
 //! O(n²) distance cache) in the paper's storage claim. Two internal
 //! representations coexist:
 //!
 //! * **sharded per-row map** — `id → RowSketch` hashmap shards, written
-//!   by the per-row / PJRT ingest paths and by explicit `insert`s
-//!   (rebalance, persistence load). The classic random-access view.
-//! * **columnar segments** — whole [`ColumnarBlock`]s from the GEMM
-//!   ingest path, covering a contiguous id range each
-//!   ([`SketchStore::insert_block_columnar`]). Already arena-shaped, so
-//!   [`SketchStore::arena_snapshot`] lands a segment with one memcpy
-//!   per (order, side) instead of transposing n per-row sketches, and
-//!   ingest never allocates AoS rows at all.
+//!   by the per-row ingest path and by explicit `insert`s (rebalance,
+//!   persistence load). Each shard holds an `Arc<HashMap<..>>` of
+//!   `Arc<RowSketch>` payloads: writers mutate through
+//!   `Arc::make_mut`, so a shard whose map is pinned by a live snapshot
+//!   is cloned **at pointer level** (the row payloads are shared, never
+//!   deep-copied) on the first write after the snapshot — classic
+//!   copy-on-write epoch publishing.
+//! * **columnar segments** — whole [`ColumnarBlock`]s from the GEMM /
+//!   PJRT ingest paths, covering a contiguous id range each
+//!   ([`SketchStore::insert_block_columnar`]), held behind `Arc` so a
+//!   snapshot captures a segment by handle, never by panel copy.
+//!
+//! ## Snapshots
+//!
+//! [`SketchStore::snapshot`] returns an [`Arc<StoreSnapshot>`]: the
+//! per-shard map `Arc`s plus the segment directory (`Vec` of
+//! `(base, Arc<ColumnarBlock>)`). Capture cost is **O(shards +
+//! segments)** — the shard/segment read locks are held only for the
+//! pointer clones, and a monotone store **epoch** (bumped inside every
+//! writer's critical section) lets repeated captures of a quiescent
+//! store return the cached `Arc` in O(1) without touching any shard
+//! lock. Writers are therefore never blocked longer than one capture;
+//! every bulk reader (batch queries, all-pairs, top-k, persistence
+//! `save`, rebalance) runs entirely on its snapshot.
+//!
+//! **What a snapshot pins:** the shard maps and segment blocks that
+//! were live at capture. Later inserts/compactions publish new `Arc`s
+//! in the store; the snapshot keeps serving its frozen view (ids,
+//! bytes, estimates are all answered from the same consistent cut) and
+//! frees the shared state when dropped. **Staleness:** a snapshot's
+//! [`StoreSnapshot::epoch`] against [`SketchStore::epoch`] measures how
+//! many writes it is behind (the query service's `snapshot_age` gauge).
+//!
+//! **Copy-on-write compaction:** [`SketchStore::compact_range`] plans
+//! merge groups from a snapshot, builds the merged blocks entirely
+//! off-lock, then swaps them into the directory under one brief write
+//! lock. Live snapshots keep serving the pre-merge blocks (their `Arc`s
+//! stay alive); new snapshots see the merged blocks. Both views score
+//! bitwise-identically — panels move only by contiguous copy.
 //!
 //! Per-row reads (`get`, `with_pair`) serve map rows by reference and
 //! materialize segment rows on demand; the plain pair estimator
-//! ([`SketchStore::estimate_pair_plain`]) scores segment rows straight
-//! from their panels with no materialization at all. Ids must be unique
-//! across both representations (the pipeline's monotone id counter
-//! guarantees it) — collisions fail loudly at block insertion and again
-//! in the snapshot's duplicate-id backstop.
+//! ([`StoreSnapshot::estimate_pair_plain`]) scores segment rows
+//! straight from their panels with no materialization at all. Ids must
+//! be unique across both representations (the pipeline's monotone id
+//! counter guarantees it) — collisions fail loudly at block insertion
+//! and again in the arena build's duplicate-id backstop.
 
 use std::collections::HashMap;
-use std::sync::RwLock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::core::arena::{ArenaBuilder, SketchArena};
 use crate::core::decompose::Decomposition;
 use crate::core::estimator::{dot, SketchPanels};
 use crate::projection::sketcher::{ColumnarBlock, RowSketch};
 
-/// Sharded row-id → sketch map + columnar block segments.
-pub struct SketchStore {
-    shards: Vec<RwLock<HashMap<u64, RowSketch>>>,
-    /// Columnar ingest segments, sorted by base id; each covers ids
-    /// `base .. base + block.rows()` (ranges never overlap).
-    segments: RwLock<Vec<Segment>>,
-}
+type ShardMap = HashMap<u64, Arc<RowSketch>>;
 
-struct Segment {
-    base: u64,
-    block: ColumnarBlock,
+/// One columnar segment: ids `base .. base + block.rows()`, panels
+/// shared by handle between the store and every snapshot that captured
+/// them.
+#[derive(Clone)]
+pub struct Segment {
+    pub base: u64,
+    pub block: Arc<ColumnarBlock>,
 }
 
 impl Segment {
@@ -56,6 +87,25 @@ impl Segment {
     }
 }
 
+/// Sharded row-id → sketch map + columnar block segments, epoch-ed for
+/// lock-free snapshot reads.
+pub struct SketchStore {
+    shards: Vec<RwLock<Arc<ShardMap>>>,
+    /// Columnar ingest segments, sorted by base id; ranges never
+    /// overlap.
+    segments: RwLock<Vec<Segment>>,
+    /// Monotone write epoch; bumped inside each writer's critical
+    /// section, so any capture that holds all read locks observes a
+    /// stable value consistent with the content it clones.
+    epoch: AtomicU64,
+    /// Last published snapshot; reused (O(1), no shard locks) while the
+    /// epoch has not advanced.
+    cached: RwLock<Option<Arc<StoreSnapshot>>>,
+    /// Serializes compaction passes, so a planned merge run can never
+    /// be mutated by a rival compactor between plan and swap.
+    compaction: Mutex<()>,
+}
+
 /// Where one side of a pair query lives: a map row (borrowed) or a
 /// (block, row) coordinate inside a columnar segment.
 enum Side<'x> {
@@ -67,7 +117,7 @@ enum Side<'x> {
 fn seg_side<'x>(segs: &'x [Segment], id: u64) -> Option<Side<'x>> {
     let pos = segs.partition_point(|s| s.base <= id);
     (pos > 0 && segs[pos - 1].contains(id))
-        .then(|| Side::Seg(&segs[pos - 1].block, (id - segs[pos - 1].base) as usize))
+        .then(|| Side::Seg(segs[pos - 1].block.as_ref(), (id - segs[pos - 1].base) as usize))
 }
 
 /// Score two resolved sides with *exactly* the `estimator::estimate`
@@ -114,47 +164,262 @@ pub struct CompactionReport {
     pub segments_after: usize,
 }
 
-/// Zero-copy [`SketchPanels`] view over a store's columnar segments:
-/// row `i` of the view is the `i`-th segment-resident row in ascending
-/// id order, served straight from its segment's panels. Built (and
-/// only valid) under the store's segment read lock — see
-/// [`SketchStore::with_columnar_view`]. Row → segment resolution is a
+/// Immutable point-in-time view of a [`SketchStore`]: the per-shard map
+/// `Arc`s plus the segment directory, captured in O(shards + segments)
+/// with no panel copies. Every read method answers from this frozen
+/// cut, with no locks and no coordination — the store may ingest and
+/// compact freely underneath.
+pub struct StoreSnapshot {
+    epoch: u64,
+    map: Vec<Arc<ShardMap>>,
+    segments: Vec<Segment>,
+}
+
+impl StoreSnapshot {
+    /// Store epoch at capture time (compare with
+    /// [`SketchStore::epoch`] for staleness).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.map.len()
+    }
+
+    #[inline]
+    fn shard_of(&self, id: u64) -> usize {
+        (id % self.map.len() as u64) as usize
+    }
+
+    /// The captured segment directory, base ascending. The `Arc`s are
+    /// the very allocations the store held at capture (pointer-shared,
+    /// never copied).
+    pub fn segments(&self) -> &[Segment] {
+        &self.segments
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Rows in this view (map + segment-resident).
+    pub fn len(&self) -> usize {
+        let mapped: usize = self.map.iter().map(|m| m.len()).sum();
+        let segmented: usize = self.segments.iter().map(|s| s.block.rows()).sum();
+        mapped + segmented
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.map[self.shard_of(id)].contains_key(&id) || seg_side(&self.segments, id).is_some()
+    }
+
+    /// Total sketch payload bytes (the paper's O(nk) storage number) —
+    /// one consistent cut, immune to concurrent inserts.
+    pub fn bytes(&self) -> usize {
+        let mapped: usize = self
+            .map
+            .iter()
+            .map(|m| m.values().map(|r| r.sketch_bytes()).sum::<usize>())
+            .sum();
+        let segmented: usize = self.segments.iter().map(|s| s.block.bytes()).sum();
+        mapped + segmented
+    }
+
+    /// Ids held in the hashmap shards only (segment-backed excluded),
+    /// ascending.
+    pub fn map_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> =
+            self.map.iter().flat_map(|m| m.keys().copied()).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// All row ids, ascending.
+    pub fn ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> =
+            self.map.iter().flat_map(|m| m.keys().copied()).collect();
+        for s in &self.segments {
+            ids.extend(s.base..s.end());
+        }
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Materialize a row (map rows cloned, segment rows assembled).
+    pub fn get(&self, id: u64) -> Option<RowSketch> {
+        if let Some(rs) = self.map[self.shard_of(id)].get(&id) {
+            return Some(rs.as_ref().clone());
+        }
+        match seg_side(&self.segments, id) {
+            Some(Side::Seg(block, r)) => Some(block.to_row_sketch(r)),
+            _ => None,
+        }
+    }
+
+    /// Visit a pair without cloning when both rows live in the map
+    /// shards; segment rows are materialized on demand. Lock-free —
+    /// resolution happens on the frozen view.
+    pub fn with_pair<T>(
+        &self,
+        a: u64,
+        b: u64,
+        f: impl FnOnce(&RowSketch, &RowSketch) -> T,
+    ) -> Option<T> {
+        let ma = self.map[self.shard_of(a)].get(&a);
+        let mb = self.map[self.shard_of(b)].get(&b);
+        let oa;
+        let ob;
+        let ra: &RowSketch = match ma {
+            Some(rs) => rs.as_ref(),
+            None => {
+                oa = match seg_side(&self.segments, a)? {
+                    Side::Seg(block, r) => block.to_row_sketch(r),
+                    Side::Map(_) => unreachable!("seg_side never yields Map"),
+                };
+                &oa
+            }
+        };
+        let rb: &RowSketch = match mb {
+            Some(rs) => rs.as_ref(),
+            None => {
+                ob = match seg_side(&self.segments, b)? {
+                    Side::Seg(block, r) => block.to_row_sketch(r),
+                    Side::Map(_) => unreachable!("seg_side never yields Map"),
+                };
+                &ob
+            }
+        };
+        Some(f(ra, rb))
+    }
+
+    /// Plain §2.1/§2.2 estimate of a pair served without materializing
+    /// rows: map rows are scored by reference, segment rows straight
+    /// from their columnar panels — allocation-free and lock-free.
+    /// Bitwise identical to `estimator::estimate` on the corresponding
+    /// [`RowSketch`]es (same accumulation sequence, same `dot`).
+    pub fn estimate_pair_plain(&self, dec: &Decomposition, a: u64, b: u64) -> Option<f64> {
+        let x = match self.map[self.shard_of(a)].get(&a) {
+            Some(rs) => Side::Map(rs.as_ref()),
+            None => seg_side(&self.segments, a)?,
+        };
+        let y = match self.map[self.shard_of(b)].get(&b) {
+            Some(rs) => Side::Map(rs.as_ref()),
+            None => seg_side(&self.segments, b)?,
+        };
+        Some(score_sides(dec, &x, &y))
+    }
+
+    /// Columnar arena copy of the whole view: every row's sketches in a
+    /// [`SketchArena`] (ids ascending, arena row i = `ids[i]`, inverse
+    /// map in `pos`). Map rows are copied straight into the arena
+    /// buffers (no per-row clones); columnar segments are already
+    /// arena-shaped, so each lands as one contiguous copy per
+    /// (order, side). The copy runs entirely off-lock — the store is
+    /// never pinned. `p`/`k` come from the caller's config (an empty
+    /// view carries no shape of its own).
+    pub fn arena(&self, p: usize, k: usize) -> ArenaSnapshot {
+        let ids = self.ids();
+        // Backstop against map/segment id collisions (insertion-time
+        // checks can be raced past): a duplicate here would land a
+        // segment at shifted positions and silently corrupt the arena.
+        if let Some(w) = ids.windows(2).find(|w| w[0] == w[1]) {
+            panic!("store id {} present in both map and columnar segments", w[0]);
+        }
+        let pos: HashMap<u64, usize> = ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        let two_sided = ids.first().is_some_and(|&id| {
+            self.map[self.shard_of(id)]
+                .get(&id)
+                .map(|r| r.vside_data.is_some())
+                .or_else(|| {
+                    self.segments
+                        .iter()
+                        .find(|s| s.contains(id))
+                        .map(|s| s.block.is_two_sided())
+                })
+                .unwrap_or(false)
+        });
+        let mut b = ArenaBuilder::new(p, k, ids.len(), two_sided);
+        for m in &self.map {
+            for (id, rs) in m.iter() {
+                b.set_row(pos[id], rs);
+            }
+        }
+        for s in &self.segments {
+            // Segment ids are contiguous and unique, so their positions
+            // in the sorted id list are consecutive: one block landing.
+            b.set_block(pos[&s.base], &s.block);
+        }
+        let arena = b.finish();
+        ArenaSnapshot { ids, pos, arena }
+    }
+
+    /// Zero-copy [`SegmentPanels`] over this view when it is *fully
+    /// columnar* (every row segment-resident, at least one row) — the
+    /// segment-native batch-query fast path. The panels own `Arc`
+    /// handles (no borrowed lifetimes), so the view outlives any store
+    /// mutation and a kernel may run on it for as long as it likes
+    /// without blocking a single writer. Views with map rows (or empty
+    /// views) get `None` and must take the [`StoreSnapshot::arena`]
+    /// path.
+    pub fn columnar_panels(&self, p: usize) -> Option<SegmentPanels> {
+        if self.segments.is_empty() || self.map.iter().any(|m| !m.is_empty()) {
+            return None;
+        }
+        let mut parts = Vec::with_capacity(self.segments.len());
+        let mut off = 0usize;
+        for s in &self.segments {
+            parts.push((off, s.base, s.block.clone()));
+            off += s.block.rows();
+        }
+        Some(SegmentPanels { p, k: self.segments[0].block.k(), n: off, parts })
+    }
+}
+
+/// Owned [`SketchPanels`] view over a snapshot's columnar segments: row
+/// `i` of the view is the `i`-th segment-resident row in ascending id
+/// order, served straight from its segment's panels. Holds `Arc`
+/// handles — no borrowed lifetimes, no locks; build one with
+/// [`StoreSnapshot::columnar_panels`]. Row → segment resolution is a
 /// binary search over segment offsets, amortized to nothing next to the
 /// k-wide dot each access feeds.
-pub struct SegmentPanels<'x> {
+pub struct SegmentPanels {
     p: usize,
     k: usize,
     n: usize,
     /// Per segment: (first view row, base id, block), offsets ascending.
-    parts: Vec<(usize, u64, &'x ColumnarBlock)>,
+    parts: Vec<(usize, u64, Arc<ColumnarBlock>)>,
 }
 
-impl SegmentPanels<'_> {
+impl SegmentPanels {
     /// The segment holding view row `i`, plus the row's offset in it.
     #[inline]
     fn locate(&self, i: usize) -> (&ColumnarBlock, usize) {
         debug_assert!(i < self.n);
         let pos = self.parts.partition_point(|&(off, _, _)| off <= i);
-        let (off, _, block) = self.parts[pos - 1];
-        (block, i - off)
+        let (off, _, block) = &self.parts[pos - 1];
+        (block.as_ref(), i - off)
     }
 
     /// Store id of view row `i`.
     pub fn id_at(&self, i: usize) -> u64 {
         let pos = self.parts.partition_point(|&(off, _, _)| off <= i);
-        let (off, base, _) = self.parts[pos - 1];
+        let (off, base, _) = &self.parts[pos - 1];
         base + (i - off) as u64
     }
 
     /// View row holding store id `id`, if a segment covers it.
     pub fn pos_of(&self, id: u64) -> Option<usize> {
         let pos = self.parts.partition_point(|&(_, base, _)| base <= id);
-        let &(off, base, block) = self.parts.get(pos.checked_sub(1)?)?;
+        let (off, base, block) = self.parts.get(pos.checked_sub(1)?)?;
         (id < base + block.rows() as u64).then(|| off + (id - base) as usize)
     }
 }
 
-impl SketchPanels for SegmentPanels<'_> {
+impl SketchPanels for SegmentPanels {
     fn n(&self) -> usize {
         self.n
     }
@@ -198,8 +463,11 @@ impl SketchStore {
     pub fn new(shards: usize) -> Self {
         let shards = shards.max(1);
         SketchStore {
-            shards: (0..shards).map(|_| RwLock::new(HashMap::new())).collect(),
+            shards: (0..shards).map(|_| RwLock::new(Arc::new(HashMap::new()))).collect(),
             segments: RwLock::new(Vec::new()),
+            epoch: AtomicU64::new(0),
+            cached: RwLock::new(None),
+            compaction: Mutex::new(()),
         }
     }
 
@@ -213,15 +481,36 @@ impl SketchStore {
         (id % self.shards.len() as u64) as usize
     }
 
+    /// Current write epoch. `epoch() - snapshot.epoch()` is how many
+    /// writes a snapshot is behind (the `snapshot_age` metric).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
     pub fn insert(&self, id: u64, sketch: RowSketch) {
         // Debug-only mirror of insert_block_columnar's collision check
-        // (release ingest stays one shard lock per row; the snapshot's
-        // duplicate-id backstop still catches release-mode collisions).
+        // (release ingest stays one shard lock per row; the arena
+        // build's duplicate-id backstop still catches release-mode
+        // collisions).
         debug_assert!(
             !self.segment_covers(id),
             "map insert at id {id} collides with a columnar segment"
         );
-        self.shards[self.shard_of(id)].write().unwrap().insert(id, sketch);
+        let mut guard = self.shards[self.shard_of(id)].write().unwrap();
+        // Drop the cached snapshot first (non-blocking; skipped if a
+        // capture is mid-flight): it is stale the moment this insert
+        // lands, and releasing its pin on the shard maps lets the
+        // make_mut below mutate in place instead of cloning a map that
+        // no reader is actually holding. Snapshots held by live readers
+        // still pin their maps — that clone is the real COW cost.
+        if let Ok(mut cache) = self.cached.try_write() {
+            *cache = None;
+        }
+        // COW publish: if a live snapshot pinned this shard's map,
+        // make_mut clones it at pointer level (payloads stay shared)
+        // and later inserts mutate the fresh copy in place.
+        Arc::make_mut(&mut guard).insert(id, Arc::new(sketch));
+        self.epoch.fetch_add(1, Ordering::Release);
     }
 
     /// Whether some columnar segment covers `id`.
@@ -231,14 +520,21 @@ impl SketchStore {
 
     /// Land a whole columnar ingest block covering ids
     /// `base .. base + block.rows()` — no per-row allocation, no
-    /// transpose; the block is stored as-is and serves arena snapshots
-    /// by contiguous copy. Panics if the id range overlaps an existing
-    /// segment or a map row already present at insertion time (a silent
-    /// duplicate would corrupt `arena_snapshot`'s contiguous landing);
-    /// concurrent `insert`s into the range after this check remain the
-    /// caller's responsibility, as with double `insert`s, and are caught
-    /// by the snapshot's duplicate-id backstop.
+    /// transpose. See [`SketchStore::insert_block_shared`].
     pub fn insert_block_columnar(&self, base: u64, block: ColumnarBlock) {
+        self.insert_block_shared(base, Arc::new(block));
+    }
+
+    /// Land an `Arc`-held columnar block — the zero-copy variant used
+    /// by rebalance and snapshot replays, which share panels with the
+    /// source store instead of copying them. Panics if the id range
+    /// overlaps an existing segment or a map row already present at
+    /// insertion time (a silent duplicate would corrupt the arena
+    /// build's contiguous landing); concurrent `insert`s into the range
+    /// after this check remain the caller's responsibility, as with
+    /// double `insert`s, and are caught by the arena duplicate-id
+    /// backstop.
+    pub fn insert_block_shared(&self, base: u64, block: Arc<ColumnarBlock>) {
         if block.rows() == 0 {
             return;
         }
@@ -262,99 +558,78 @@ impl SketchStore {
             && (pos == segs.len() || end <= segs[pos].base);
         assert!(disjoint, "columnar segment [{base}, {end}) overlaps an existing segment");
         segs.insert(pos, Segment { base, block });
+        self.epoch.fetch_add(1, Ordering::Release);
     }
 
-    /// Materialize a row from the columnar segments, if one covers `id`.
-    fn get_segment(&self, id: u64) -> Option<RowSketch> {
-        let segs = self.segments.read().unwrap();
-        match seg_side(&segs, id) {
-            Some(Side::Seg(block, r)) => Some(block.to_row_sketch(r)),
-            _ => None,
+    /// Capture an immutable snapshot: O(shards + segments) pointer
+    /// clones under briefly-held read locks — no panel copies, no map
+    /// copies. A quiescent store (epoch unchanged since the last
+    /// capture) returns the cached `Arc` in O(1) without touching any
+    /// shard lock, which is what makes point reads on an idle store
+    /// effectively lock-free.
+    pub fn snapshot(&self) -> Arc<StoreSnapshot> {
+        let now = self.epoch.load(Ordering::Acquire);
+        if let Some(s) = self.cached.read().unwrap().as_ref() {
+            if s.epoch == now {
+                return Arc::clone(s);
+            }
         }
+        // Double-checked: one capturer at a time holds the cache write
+        // lock; rivals that queued behind it find the fresh snapshot on
+        // re-check instead of each re-capturing the same epoch (the
+        // thundering-herd case under concurrent point reads).
+        let mut cache = self.cached.write().unwrap();
+        let now = self.epoch.load(Ordering::Acquire);
+        if let Some(s) = cache.as_ref() {
+            if s.epoch == now {
+                return Arc::clone(s);
+            }
+        }
+        let snap = {
+            // Hold every shard's read lock + the segment lock together
+            // for a consistent cut (writers bump the epoch inside their
+            // critical sections, so the epoch read here matches the
+            // content exactly). Lock order cache → shards → segments;
+            // writers take shard/segment locks without the cache lock
+            // (insert's cache purge is a non-blocking try_write), so no
+            // cycle exists.
+            let guards: Vec<_> = self.shards.iter().map(|s| s.read().unwrap()).collect();
+            let segs = self.segments.read().unwrap();
+            Arc::new(StoreSnapshot {
+                epoch: self.epoch.load(Ordering::Acquire),
+                map: guards.iter().map(|g| Arc::clone(g)).collect(),
+                segments: segs.clone(),
+            })
+        };
+        *cache = Some(Arc::clone(&snap));
+        snap
     }
 
     pub fn get(&self, id: u64) -> Option<RowSketch> {
-        self.shards[self.shard_of(id)]
-            .read()
-            .unwrap()
-            .get(&id)
-            .cloned()
-            .or_else(|| self.get_segment(id))
+        self.snapshot().get(id)
     }
 
     /// Visit a pair without cloning when both rows live in the hashmap
     /// shards (the query hot path); rows held in columnar segments are
-    /// materialized on demand.
+    /// materialized on demand. Served from a snapshot — consistent and
+    /// lock-free on a quiescent store.
     pub fn with_pair<T>(
         &self,
         a: u64,
         b: u64,
         f: impl FnOnce(&RowSketch, &RowSketch) -> T,
     ) -> Option<T> {
-        let (sa, sb) = (self.shard_of(a), self.shard_of(b));
-        let mut f = Some(f);
-        if sa == sb {
-            let guard = self.shards[sa].read().unwrap();
-            if let (Some(ra), Some(rb)) = (guard.get(&a), guard.get(&b)) {
-                return Some(f.take().expect("unused")(ra, rb));
-            }
-        } else {
-            // Lock in shard order to avoid deadlock with concurrent pairs.
-            let (first, second) = if sa < sb { (sa, sb) } else { (sb, sa) };
-            let g1 = self.shards[first].read().unwrap();
-            let g2 = self.shards[second].read().unwrap();
-            let (ga, gb) = if sa < sb { (&g1, &g2) } else { (&g2, &g1) };
-            if let (Some(ra), Some(rb)) = (ga.get(&a), gb.get(&b)) {
-                return Some(f.take().expect("unused")(ra, rb));
-            }
-        }
-        // Slow path: at least one row lives in a columnar segment (or
-        // is absent entirely) — materialize owned copies.
-        let ra = self.get(a)?;
-        let rb = self.get(b)?;
-        Some(f.take().expect("unused")(&ra, &rb))
+        self.snapshot().with_pair(a, b, f)
     }
 
-    /// Plain §2.1/§2.2 estimate of a pair served without materializing
-    /// rows: map rows are scored by reference, segment rows straight
-    /// from their columnar panels — the single-pair query hot path
-    /// stays allocation-free whichever representation holds the rows.
-    /// Bitwise identical to `estimator::estimate` on the corresponding
-    /// [`RowSketch`]es (same accumulation sequence, same `dot`).
+    /// Plain pair estimate from the current snapshot — see
+    /// [`StoreSnapshot::estimate_pair_plain`].
     pub fn estimate_pair_plain(&self, dec: &Decomposition, a: u64, b: u64) -> Option<f64> {
-        // Lock shards in index order (single lock when they collide).
-        let (sa, sb) = (self.shard_of(a), self.shard_of(b));
-        let (first, second) = if sa <= sb { (sa, sb) } else { (sb, sa) };
-        let g1 = self.shards[first].read().unwrap();
-        let g2 = (second != first).then(|| self.shards[second].read().unwrap());
-        let map_a: &HashMap<u64, RowSketch> =
-            if sa == first { &g1 } else { g2.as_ref().expect("two shards") };
-        let map_b: &HashMap<u64, RowSketch> =
-            if sb == first { &g1 } else { g2.as_ref().expect("two shards") };
-        // Map-resident pairs never touch the store-wide segment lock —
-        // point queries on a per-row-ingested store contend only on
-        // their two shards, exactly like the old with_pair hot path.
-        if let (Some(ra), Some(rb)) = (map_a.get(&a), map_b.get(&b)) {
-            return Some(score_sides(dec, &Side::Map(ra), &Side::Map(rb)));
-        }
-        // Shard→segment lock order, as everywhere else.
-        let segs = self.segments.read().unwrap();
-        let x = match map_a.get(&a) {
-            Some(rs) => Side::Map(rs),
-            None => seg_side(&segs, a)?,
-        };
-        let y = match map_b.get(&b) {
-            Some(rs) => Side::Map(rs),
-            None => seg_side(&segs, b)?,
-        };
-        Some(score_sides(dec, &x, &y))
+        self.snapshot().estimate_pair_plain(dec, a, b)
     }
 
     pub fn len(&self) -> usize {
-        let mapped: usize = self.shards.iter().map(|s| s.read().unwrap().len()).sum();
-        let segmented: usize =
-            self.segments.read().unwrap().iter().map(|s| s.block.rows()).sum();
-        mapped + segmented
+        self.snapshot().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -362,75 +637,20 @@ impl SketchStore {
     }
 
     pub fn contains(&self, id: u64) -> bool {
-        self.shards[self.shard_of(id)].read().unwrap().contains_key(&id)
-            || self.segment_covers(id)
+        self.snapshot().contains(id)
     }
 
     /// Total sketch payload bytes (the paper's O(nk) storage number).
+    /// One consistent snapshot — a concurrent insert can no longer be
+    /// double-counted or missed mid-iteration.
     pub fn bytes(&self) -> usize {
-        let mapped: usize = self
-            .shards
-            .iter()
-            .map(|s| s.read().unwrap().values().map(|r| r.sketch_bytes()).sum::<usize>())
-            .sum();
-        let segmented: usize =
-            self.segments.read().unwrap().iter().map(|s| s.block.bytes()).sum();
-        mapped + segmented
+        self.snapshot().bytes()
     }
 
-    /// Columnar snapshot of the whole store: every row's sketches in a
-    /// [`SketchArena`] (ids ascending, arena row i = `ids[i]`, inverse
-    /// map in `pos`). This is the view the pipeline's blocked estimate /
-    /// all-pairs export paths consume. Map rows are copied straight into
-    /// the arena buffers (no per-row clones); columnar segments are
-    /// already arena-shaped, so each lands as one contiguous copy per
-    /// (order, side) — the ingest→arena repack is gone. `p`/`k` come
-    /// from the pipeline config (an empty store carries no shape of its
-    /// own).
+    /// Columnar snapshot of the whole store, copied off-lock from an
+    /// epoch snapshot — see [`StoreSnapshot::arena`].
     pub fn arena_snapshot(&self, p: usize, k: usize) -> ArenaSnapshot {
-        // Hold every shard's read lock + the segment lock together for
-        // a consistent copy (writers take exactly one shard lock or the
-        // segment lock, so no ordering cycle); sidedness is probed
-        // under the same guards.
-        let guards: Vec<_> = self.shards.iter().map(|s| s.read().unwrap()).collect();
-        let segs = self.segments.read().unwrap();
-        let mut ids: Vec<u64> = guards
-            .iter()
-            .flat_map(|g| g.keys().copied().collect::<Vec<_>>())
-            .collect();
-        for s in segs.iter() {
-            ids.extend(s.base..s.end());
-        }
-        ids.sort_unstable();
-        // Backstop against map/segment id collisions (insertion-time
-        // checks can be raced past): a duplicate here would land a
-        // segment at shifted positions and silently corrupt the arena.
-        if let Some(w) = ids.windows(2).find(|w| w[0] == w[1]) {
-            panic!("store id {} present in both map and columnar segments", w[0]);
-        }
-        let pos: HashMap<u64, usize> = ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
-        let two_sided = ids.first().is_some_and(|&id| {
-            guards[self.shard_of(id)]
-                .get(&id)
-                .map(|r| r.vside_data.is_some())
-                .or_else(|| {
-                    segs.iter().find(|s| s.contains(id)).map(|s| s.block.is_two_sided())
-                })
-                .unwrap_or(false)
-        });
-        let mut b = ArenaBuilder::new(p, k, ids.len(), two_sided);
-        for g in guards.iter() {
-            for (id, rs) in g.iter() {
-                b.set_row(pos[id], rs);
-            }
-        }
-        for s in segs.iter() {
-            // Segment ids are contiguous and unique, so their positions
-            // in the sorted id list are consecutive: one block landing.
-            b.set_block(pos[&s.base], &s.block);
-        }
-        let arena = b.finish();
-        ArenaSnapshot { ids, pos, arena }
+        self.snapshot().arena(p, k)
     }
 
     /// Number of columnar segments currently held (the
@@ -440,77 +660,136 @@ impl SketchStore {
         self.segments.read().unwrap().len()
     }
 
-    /// Merge runs of small *adjacent* segments (contiguous id ranges)
-    /// into larger arena-layout blocks via [`ColumnarBlock::concat`] —
-    /// one contiguous copy per (order, side) per input segment, so the
-    /// merged panels are bitwise-identical to the originals and every
-    /// estimate is unchanged.
+    /// Merge runs of small *adjacent* segments across the whole id
+    /// space — [`SketchStore::compact_range`] with an unbounded range.
+    pub fn compact_segments(&self, min_rows: usize, target_rows: usize) -> CompactionReport {
+        self.compact_range(min_rows, target_rows, 0, u64::MAX)
+    }
+
+    /// Copy-on-write compaction over segments fully inside
+    /// `[lo, hi)`: merge runs of small *adjacent* segments (contiguous
+    /// id ranges) into larger arena-layout blocks via
+    /// [`ColumnarBlock::concat`] — one contiguous copy per
+    /// (order, side) per input segment, so the merged panels are
+    /// bitwise-identical to the originals and every estimate is
+    /// unchanged.
+    ///
+    /// The pass plans its merge groups from a snapshot of the
+    /// directory, builds every merged block **off-lock** (readers and
+    /// writers proceed freely), then swaps the groups in under one
+    /// brief write lock. Old snapshots keep serving the pre-merge
+    /// blocks. Concurrent compactions are serialized by an internal
+    /// mutex; concurrent ingest can only append disjoint segments,
+    /// which never invalidates a planned run.
     ///
     /// Policy: a segment is *small* when it has fewer than `min_rows`
-    /// rows; an adjacent segment joins the current merge group while the
-    /// group or the candidate is small and the merged size stays at or
-    /// under `target_rows`. `min_rows == 0` disables compaction (nothing
-    /// is small). Non-adjacent segments (id gaps) never merge — the
-    /// segment invariant is that covered ranges are exactly the ingested
-    /// blocks' ranges, with gaps preserved.
-    pub fn compact_segments(&self, min_rows: usize, target_rows: usize) -> CompactionReport {
-        let mut segs = self.segments.write().unwrap();
-        let before = segs.len();
-        let old = std::mem::take(&mut *segs);
-        let mut merges = 0usize;
-        let mut rows_merged = 0usize;
+    /// rows; an adjacent segment joins the current merge group while
+    /// the group or the candidate is small and the merged size stays at
+    /// or under `target_rows`. `min_rows == 0` disables compaction
+    /// (nothing is small). Non-adjacent segments (id gaps) never merge
+    /// — the segment invariant is that covered ranges are exactly the
+    /// ingested blocks' ranges, with gaps preserved. Segments
+    /// straddling the range boundary act as barriers and are left
+    /// untouched, which is what makes the post-ingest hook incremental:
+    /// it passes the ingest's own id range and never re-touches older
+    /// segments.
+    pub fn compact_range(
+        &self,
+        min_rows: usize,
+        target_rows: usize,
+        lo: u64,
+        hi: u64,
+    ) -> CompactionReport {
+        let _serial = self.compaction.lock().unwrap();
+        // Plan from a directory snapshot (Arc handles, no panel copies).
+        let plan: Vec<Segment> = self.segments.read().unwrap().clone();
+        let before = plan.len();
+        let mut groups: Vec<Vec<Segment>> = Vec::new();
         let mut group: Vec<Segment> = Vec::new();
-        let mut flush = |group: &mut Vec<Segment>, out: &mut Vec<Segment>| {
+        let flush = |group: &mut Vec<Segment>, groups: &mut Vec<Vec<Segment>>| {
             if group.len() >= 2 {
-                let blocks: Vec<&ColumnarBlock> = group.iter().map(|s| &s.block).collect();
-                let merged = ColumnarBlock::concat(&blocks);
-                merges += 1;
-                rows_merged += merged.rows();
-                out.push(Segment { base: group[0].base, block: merged });
+                groups.push(std::mem::take(group));
             } else {
-                out.append(group);
+                group.clear();
             }
-            group.clear();
         };
-        for seg in old {
+        for seg in plan {
+            if seg.base < lo || seg.end() > hi {
+                // Out-of-range segment: a barrier, never a member.
+                flush(&mut group, &mut groups);
+                continue;
+            }
             let group_rows: usize = group.iter().map(|s| s.block.rows()).sum();
             let adjacent = group.last().is_some_and(|g| g.end() == seg.base);
             let joinable = adjacent
                 && (seg.block.rows() < min_rows || group_rows < min_rows)
                 && group_rows + seg.block.rows() <= target_rows;
             if !joinable {
-                flush(&mut group, &mut *segs);
+                flush(&mut group, &mut groups);
             }
             group.push(seg);
         }
-        flush(&mut group, &mut *segs);
-        CompactionReport {
-            merges,
-            rows_merged,
-            segments_before: before,
-            segments_after: segs.len(),
-        }
+        flush(&mut group, &mut groups);
+        // Build merged blocks entirely off-lock.
+        let mut merges = 0usize;
+        let mut rows_merged = 0usize;
+        let merged: Vec<(Vec<u64>, Segment)> = groups
+            .iter()
+            .map(|g| {
+                let blocks: Vec<&ColumnarBlock> =
+                    g.iter().map(|s| s.block.as_ref()).collect();
+                let block = ColumnarBlock::concat(&blocks);
+                merges += 1;
+                rows_merged += block.rows();
+                let bases = g.iter().map(|s| s.base).collect();
+                (bases, Segment { base: g[0].base, block: Arc::new(block) })
+            })
+            .collect();
+        // Swap each run atomically. Planned runs are still intact:
+        // compaction is serialized, and ingest can only add segments
+        // outside a run's contiguous id range.
+        let after = {
+            let mut segs = self.segments.write().unwrap();
+            for (bases, seg) in merged {
+                let pos = segs.partition_point(|s| s.base < seg.base);
+                for (i, &base) in bases.iter().enumerate() {
+                    assert!(
+                        segs.get(pos + i).is_some_and(|s| s.base == base),
+                        "compaction plan invalidated at segment base {base}"
+                    );
+                }
+                segs.splice(pos..pos + bases.len(), std::iter::once(seg));
+            }
+            if merges > 0 {
+                self.epoch.fetch_add(1, Ordering::Release);
+            }
+            segs.len()
+        };
+        CompactionReport { merges, rows_merged, segments_before: before, segments_after: after }
     }
 
-    /// Run `f` on a zero-copy [`SegmentPanels`] view of the store when
-    /// it is *fully columnar* (every row segment-resident, at least one
-    /// row) — the segment-native batch-query fast path: blocked kernels
-    /// score the panels in place, skipping the `arena_snapshot` copy
-    /// entirely. Stores with map rows (or empty stores) get `None` and
-    /// must take the snapshot path.
-    ///
-    /// Locking: shard + segment read locks are held for the *whole* of
-    /// `f` — for a long kernel (an all-pairs scan) that is much longer
-    /// than a snapshot's copy phase, and writers (ingest, compaction)
-    /// block until it finishes. That matches how the pipeline already
-    /// treats bulk scans (offline-ish, like rebalance); callers needing
-    /// ingest concurrency during long scans should prefer
-    /// [`SketchStore::arena_snapshot`], which pays the copy to release
-    /// the locks early.
+    /// Run `f` on an owned [`SegmentPanels`] view captured from a
+    /// snapshot when the store is *fully columnar* — see
+    /// [`StoreSnapshot::columnar_panels`]. No lock is held while `f`
+    /// runs: a long kernel (an all-pairs scan) no longer blocks ingest
+    /// or compaction, it just serves the epoch it captured.
     pub fn with_columnar_view<R>(
         &self,
         p: usize,
-        f: impl FnOnce(Option<&SegmentPanels<'_>>) -> R,
+        f: impl FnOnce(Option<&SegmentPanels>) -> R,
+    ) -> R {
+        let snap = self.snapshot();
+        f(snap.columnar_panels(p).as_ref())
+    }
+
+    /// The pre-snapshot behavior, kept as the measurable baseline for
+    /// `benches/hotpath.rs`' concurrent-serving arm: shard + segment
+    /// read locks are pinned for the *whole* of `f`, so writers queue
+    /// behind the scan. Not used by any serving path.
+    pub fn with_columnar_view_locked<R>(
+        &self,
+        p: usize,
+        f: impl FnOnce(Option<&SegmentPanels>) -> R,
     ) -> R {
         let guards: Vec<_> = self.shards.iter().map(|s| s.read().unwrap()).collect();
         let segs = self.segments.read().unwrap();
@@ -520,50 +799,30 @@ impl SketchStore {
         let mut parts = Vec::with_capacity(segs.len());
         let mut off = 0usize;
         for s in segs.iter() {
-            parts.push((off, s.base, &s.block));
+            parts.push((off, s.base, s.block.clone()));
             off += s.block.rows();
         }
         let view = SegmentPanels { p, k: segs[0].block.k(), n: off, parts };
         f(Some(&view))
     }
 
-    /// `(base, block)` clones of every columnar segment, base ascending.
-    /// Rebalance carries segments over verbatim — they are
-    /// shard-independent, so re-sharding must not degrade them to
-    /// per-row map entries.
-    pub fn segments_snapshot(&self) -> Vec<(u64, ColumnarBlock)> {
-        self.segments
-            .read()
-            .unwrap()
-            .iter()
-            .map(|s| (s.base, s.block.clone()))
-            .collect()
+    /// `(base, block)` handles of every columnar segment, base
+    /// ascending — `Arc` clones, no panel copies. Rebalance carries
+    /// these over verbatim: segments are shard-independent, so
+    /// re-sharding shares panels instead of copying them.
+    pub fn segments_snapshot(&self) -> Vec<(u64, Arc<ColumnarBlock>)> {
+        self.snapshot().segments().iter().map(|s| (s.base, Arc::clone(&s.block))).collect()
     }
 
     /// Ids held in the hashmap shards only (segment-backed ids
-    /// excluded), ascending.
+    /// excluded), ascending. One consistent snapshot.
     pub fn map_ids(&self) -> Vec<u64> {
-        let mut ids: Vec<u64> = self
-            .shards
-            .iter()
-            .flat_map(|s| s.read().unwrap().keys().copied().collect::<Vec<_>>())
-            .collect();
-        ids.sort_unstable();
-        ids
+        self.snapshot().map_ids()
     }
 
-    /// All row ids, ascending (takes all read locks).
+    /// All row ids, ascending. One consistent snapshot.
     pub fn ids(&self) -> Vec<u64> {
-        let mut ids: Vec<u64> = self
-            .shards
-            .iter()
-            .flat_map(|s| s.read().unwrap().keys().copied().collect::<Vec<_>>())
-            .collect();
-        for s in self.segments.read().unwrap().iter() {
-            ids.extend(s.base..s.end());
-        }
-        ids.sort_unstable();
-        ids
+        self.snapshot().ids()
     }
 }
 
@@ -812,6 +1071,26 @@ mod tests {
     }
 
     #[test]
+    fn compact_range_only_touches_the_given_id_window() {
+        let store = SketchStore::new(1);
+        for i in 0..6u64 {
+            store.insert_block_columnar(i * 3, block_of(3)); // 0..18, adjacent
+        }
+        // Only segments fully inside [6, 15) merge: bases 6, 9, 12.
+        let report = store.compact_range(100, 1024, 6, 15);
+        assert_eq!(report.merges, 1);
+        assert_eq!(report.rows_merged, 9);
+        assert_eq!(store.segment_count(), 4);
+        assert_eq!(
+            store.segments_snapshot().iter().map(|(b, blk)| (*b, blk.rows())).collect::<Vec<_>>(),
+            vec![(0, 3), (3, 3), (6, 9), (15, 3)]
+        );
+        // A window covering nothing fully is a no-op.
+        let report = store.compact_range(100, 1024, 1, 5);
+        assert_eq!(report.merges, 0);
+    }
+
+    #[test]
     fn compaction_is_estimate_invariant_bitwise() {
         use crate::core::decompose::Decomposition;
         let dec = Decomposition::new(4).unwrap();
@@ -839,6 +1118,8 @@ mod tests {
         // One map row degrades to the snapshot path.
         store.insert(0, sketch_of(1.0));
         assert!(store.with_columnar_view(4, |v| v.is_none()));
+        // The legacy locked baseline agrees on engagement.
+        assert!(store.with_columnar_view_locked(4, |v| v.is_none()));
     }
 
     #[test]
@@ -866,5 +1147,103 @@ mod tests {
                 assert_eq!(v.pos_of(missing), None, "id {missing}");
             }
         });
+    }
+
+    // ---- epoch snapshots ------------------------------------------------
+
+    #[test]
+    fn snapshot_shares_segment_panels_by_pointer() {
+        // The O(segments) acceptance: a snapshot's segment panels are
+        // the very Arc allocations the store holds — capture copies
+        // handles, never panels.
+        let store = SketchStore::new(2);
+        store.insert_block_columnar(10, block_of(4));
+        store.insert_block_columnar(30, block_of(3));
+        let snap = store.snapshot();
+        let direct = store.segments_snapshot();
+        assert_eq!(snap.segments().len(), 2);
+        for (s, (base, block)) in snap.segments().iter().zip(&direct) {
+            assert_eq!(s.base, *base);
+            assert!(Arc::ptr_eq(&s.block, block), "segment at {base} was copied, not shared");
+        }
+        // The owned panels view shares the same allocations too.
+        let panels = snap.columnar_panels(4).expect("fully columnar");
+        assert_eq!(panels.n(), 7);
+        for (i, (_, base, block)) in panels.parts.iter().enumerate() {
+            assert_eq!(*base, snap.segments()[i].base);
+            assert!(Arc::ptr_eq(block, &snap.segments()[i].block));
+        }
+    }
+
+    #[test]
+    fn quiescent_snapshots_hit_the_cache_and_writes_invalidate_it() {
+        let store = SketchStore::new(2);
+        store.insert_block_columnar(10, block_of(4));
+        let a = store.snapshot();
+        let b = store.snapshot();
+        assert!(Arc::ptr_eq(&a, &b), "quiescent capture must reuse the cached snapshot");
+        assert_eq!(a.epoch(), store.epoch());
+        store.insert(0, sketch_of(1.0));
+        let c = store.snapshot();
+        assert!(!Arc::ptr_eq(&a, &c), "a write must invalidate the cached snapshot");
+        assert!(c.epoch() > a.epoch());
+        // The old snapshot still serves its frozen view.
+        assert_eq!(a.len(), 4);
+        assert!(!a.contains(0));
+        assert_eq!(c.len(), 5);
+        assert!(c.contains(0));
+    }
+
+    #[test]
+    fn old_snapshots_survive_cow_compaction_and_score_identically() {
+        use crate::core::decompose::Decomposition;
+        let dec = Decomposition::new(4).unwrap();
+        let store = SketchStore::new(2);
+        store.insert_block_columnar(10, block_of(5)); // 10..15
+        store.insert_block_columnar(15, block_of(4)); // 15..19
+        let before = store.snapshot();
+        let report = store.compact_segments(64, 1024);
+        assert_eq!(report.merges, 1);
+        let after = store.snapshot();
+        // Directory swapped: old snapshot pins the pre-merge blocks.
+        assert_eq!(before.segment_count(), 2);
+        assert_eq!(after.segment_count(), 1);
+        assert!(!Arc::ptr_eq(&before.segments()[0].block, &after.segments()[0].block));
+        // Both cuts score every pair bitwise-identically.
+        for (a, b) in [(10u64, 18u64), (11, 15), (14, 14)] {
+            assert_eq!(
+                before.estimate_pair_plain(&dec, a, b),
+                after.estimate_pair_plain(&dec, a, b),
+                "pair ({a},{b})"
+            );
+        }
+        assert_eq!(before.ids(), after.ids());
+        assert_eq!(before.bytes(), after.bytes());
+    }
+
+    #[test]
+    fn snapshot_map_rows_are_cow_isolated_from_later_inserts() {
+        let store = SketchStore::new(2);
+        store.insert(0, sketch_of(1.0));
+        store.insert(1, sketch_of(2.0));
+        let snap = store.snapshot();
+        store.insert(2, sketch_of(3.0));
+        store.insert(3, sketch_of(4.0));
+        assert_eq!(snap.ids(), vec![0, 1]);
+        assert_eq!(store.ids(), vec![0, 1, 2, 3]);
+        // Payloads are shared, not copied: the snapshot's row is the
+        // same Arc the store still holds.
+        let in_snap = snap.map[0].get(&0).unwrap();
+        let in_store = store.snapshot().map[0].get(&0).unwrap().clone();
+        assert!(Arc::ptr_eq(in_snap, &in_store));
+    }
+
+    #[test]
+    fn insert_block_shared_shares_panels() {
+        let store = SketchStore::new(2);
+        let block = Arc::new(block_of(4));
+        store.insert_block_shared(10, Arc::clone(&block));
+        let held = store.segments_snapshot();
+        assert!(Arc::ptr_eq(&held[0].1, &block));
     }
 }

@@ -30,6 +30,7 @@
 //! E8 measures recall@m vs sketch width k, with and without re-ranking,
 //! against exact ground truth, plus the arena-vs-per-row batch timing.
 
+use crate::coordinator::StoreSnapshot;
 use crate::core::arena::SketchArena;
 use crate::core::decompose::Decomposition;
 use crate::core::estimator;
@@ -79,6 +80,49 @@ impl KnnIndex {
         let arena = SketchArena::from_rows(p, k, &rows);
         let workers = std::thread::available_parallelism().map_or(1, |n| n.get());
         Ok(KnnIndex { dec, sketcher, rows, arena, use_mle: false, workers })
+    }
+
+    /// Rebuild an index from a store snapshot — the serving-side
+    /// rebuild: the index is assembled entirely from the O(nk) sketch
+    /// state of one consistent epoch cut, while ingest keeps writing to
+    /// the live store underneath. Returns the index plus the store id
+    /// of every index row (`Neighbor::index` i ↔ `ids[i]`).
+    ///
+    /// `spec` must be the projection the store's sketches were built
+    /// with (queries are sketched through it); shape mismatches fail
+    /// with an error rather than silently mis-scoring.
+    pub fn from_snapshot(
+        snap: &StoreSnapshot,
+        spec: ProjectionSpec,
+        p: usize,
+    ) -> anyhow::Result<(Self, Vec<u64>)> {
+        let dec = Decomposition::new(p)?;
+        let k = spec.k;
+        let sketcher = Sketcher::new(spec, p);
+        let ids = snap.ids();
+        // Shape check before the arena build (which would panic on a
+        // mismatched row).
+        if let Some(rs) = ids.first().map(|&id| snap.get(id).expect("snapshot listed id")) {
+            anyhow::ensure!(
+                rs.uside.k == k && rs.uside.orders == p - 1,
+                "snapshot shape (k={}, orders={}) does not match index spec (k={}, p={})",
+                rs.uside.k,
+                rs.uside.orders,
+                k,
+                p,
+            );
+        }
+        let arena_snap = snap.arena(p, k);
+        let rows: Vec<RowSketch> = arena_snap
+            .ids
+            .iter()
+            .map(|&id| snap.get(id).expect("snapshot listed id"))
+            .collect();
+        let workers = std::thread::available_parallelism().map_or(1, |n| n.get());
+        Ok((
+            KnnIndex { dec, sketcher, rows, arena: arena_snap.arena, use_mle: false, workers },
+            arena_snap.ids,
+        ))
     }
 
     pub fn len(&self) -> usize {
@@ -323,6 +367,40 @@ mod tests {
         for (q, got) in refs.iter().zip(&batch) {
             assert_eq!(got, &idx.query(q, 5));
         }
+    }
+
+    #[test]
+    fn snapshot_rebuild_matches_store_served_top_k() {
+        // An index rebuilt from a pipeline's store snapshot must rank
+        // exactly like the pipeline's own store-served top-k — same
+        // ids, same distances — and keep serving that epoch even while
+        // the store ingests more rows.
+        let mut c = crate::config::Config::default();
+        c.n = 60;
+        c.d = 64;
+        c.k = 24;
+        c.block_rows = 16;
+        c.workers = 2;
+        let data = gen::generate(DataDist::Gaussian, c.n, c.d, 31);
+        let pipeline = crate::coordinator::Pipeline::new(c.clone()).unwrap();
+        pipeline.ingest(&data).unwrap();
+        let snap = pipeline.store_snapshot();
+        let (idx, ids) = KnnIndex::from_snapshot(&snap, c.projection_spec(), c.p).unwrap();
+        assert_eq!(idx.len(), 60);
+        let queries: Vec<&[f32]> = (0..3).map(|i| data.row(i * 19)).collect();
+        let want = pipeline.top_k(&queries, 8);
+        // The store keeps ingesting; the rebuilt index still serves the
+        // captured epoch.
+        pipeline.ingest(&data).unwrap();
+        let got = idx.query_batch(&queries, 8);
+        for (qi, lst) in got.iter().enumerate() {
+            let mapped: Vec<(u64, f64)> =
+                lst.iter().map(|nb| (ids[nb.index], nb.distance)).collect();
+            assert_eq!(mapped, want[qi], "query {qi}");
+        }
+        // Shape mismatch is an error, not silent mis-scoring.
+        let bad = ProjectionSpec::new(1, c.k / 2, ProjectionDist::Normal, Strategy::Basic);
+        assert!(KnnIndex::from_snapshot(&snap, bad, c.p).is_err());
     }
 
     #[test]

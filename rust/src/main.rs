@@ -6,6 +6,10 @@
 //!   pairs    — ingest then export all-pairs estimated distances (CSV to
 //!              stdout or --out file).
 //!   query    — ingest then answer pair queries from the command line.
+//!   serve    — concurrent-serving demo: answer pair batches through the
+//!              query service *while* a writer streams more rows in
+//!              (epoch snapshots keep readers and writers out of each
+//!              other's way).
 //!   knn      — ingest then run k-NN queries with optional re-ranking.
 //!   exp      — run a paper experiment (e1..e11) or `all`.
 //!   platform — print the PJRT platform and artifact inventory.
@@ -26,7 +30,7 @@ use lpsketch::runtime::Engine;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: lpsketch [--key value ...] <ingest|pairs|query|knn|exp|platform> [args]\n\
+        "usage: lpsketch [--key value ...] <ingest|pairs|query|serve|knn|exp|platform> [args]\n\
          \n\
          data source: --data <file.bin|file.csv> | synthetic --data-dist --n --d | --data corpus\n\
          persistence: ingest --save-sketches <file.lpsk> (O(nk) state; the matrix can be discarded)\n\
@@ -34,6 +38,7 @@ fn usage() -> ! {
          common keys: --p --k --strategy --dist --seed --workers --block-rows --mle --pjrt\n\
          exp:         lpsketch exp <e1..e11|all> [--fast]\n\
          query:       lpsketch query <a> <b> [more pairs...]\n\
+         serve:       lpsketch serve [clients] (default 4; --query-workers N sizes the service)\n\
          knn:         lpsketch knn <row-id> <m> [--rerank N]"
     );
     std::process::exit(2);
@@ -221,6 +226,67 @@ fn main() -> anyhow::Result<()> {
                     None => println!("d({a},{b}): unknown id"),
                 }
             }
+            println!("metrics: {}", pipeline.metrics().render());
+        }
+        "serve" => {
+            // Ingest-during-serve demo: populate the store, start the
+            // query service, then answer pair batches from `clients`
+            // threads while a writer concurrently streams the same
+            // matrix in again (fresh ids). Snapshot serving means the
+            // writer never waits on a scan and every answer comes from
+            // one consistent epoch.
+            let clients: usize = positional
+                .get(1)
+                .map(|s| s.parse())
+                .transpose()
+                .map_err(|_| anyhow::anyhow!("serve [clients] must be a number"))?
+                .unwrap_or(4)
+                .max(1);
+            let data = load_data(&cfg, data_source.as_deref())?;
+            cfg.d = data.d();
+            cfg.n = data.n();
+            println!("config: {} query_workers={}", cfg.describe(), cfg.query_workers);
+            let pipeline = Arc::new(Pipeline::new(cfg)?);
+            pipeline.ingest(&data)?;
+            let service = pipeline.spawn_query_service();
+            let n0 = pipeline.rows() as u64;
+            let queries_per_client = 500u64;
+            let t0 = std::time::Instant::now();
+            let served = std::sync::atomic::AtomicU64::new(0);
+            std::thread::scope(|s| -> anyhow::Result<()> {
+                let writer = {
+                    let pipeline = Arc::clone(&pipeline);
+                    s.spawn(move || pipeline.ingest(&data))
+                };
+                let mut readers = Vec::new();
+                for t in 0..clients as u64 {
+                    let service = service.clone();
+                    let served = &served;
+                    readers.push(s.spawn(move || -> anyhow::Result<()> {
+                        for i in 0..queries_per_client {
+                            let a = (t * 131 + i * 7) % n0;
+                            let b = (t * 17 + i * 13 + 1) % n0;
+                            if service.query(a, b)?.is_some() {
+                                served.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                        Ok(())
+                    }));
+                }
+                for r in readers {
+                    r.join().expect("client thread panicked")?;
+                }
+                writer.join().expect("writer thread panicked")?;
+                Ok(())
+            })?;
+            let secs = t0.elapsed().as_secs_f64();
+            let served = served.load(std::sync::atomic::Ordering::Relaxed);
+            println!(
+                "served {served} pair queries from {clients} clients in {secs:.3}s \
+                 ({:.0} q/s) while ingesting {} rows concurrently",
+                served as f64 / secs,
+                pipeline.rows() as u64 - n0,
+            );
             println!("metrics: {}", pipeline.metrics().render());
         }
         "knn" => {

@@ -52,6 +52,21 @@ fn pairs_writes_csv() {
 }
 
 #[test]
+fn serve_answers_queries_during_concurrent_ingest() {
+    let out = bin()
+        .args([
+            "--n", "48", "--d", "128", "--k", "32", "--query-workers", "2", "serve", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("served 1000 pair queries"), "{stdout}");
+    assert!(stdout.contains("while ingesting 48 rows concurrently"), "{stdout}");
+    assert!(stdout.contains("in_flight=0"), "{stdout}");
+}
+
+#[test]
 fn knn_on_corpus() {
     let out = bin()
         .args([
