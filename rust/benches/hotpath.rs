@@ -8,6 +8,9 @@
 //!   * arena vs per-row: blocked batch estimation + fused top-k on the
 //!     columnar arena against the per-row reference (the ISSUE 1
 //!     acceptance: ≥3× at n=10⁴, k=64, p=4)
+//!   * typed API: one pair batch through the direct path, the typed
+//!     in-process dispatch, the batched query service, and a TCP
+//!     loopback client (equality-guarded; `BENCH_api.json`)
 //!   * PJRT dispatch: artifact sketch/estimate per block (needs
 //!     `make artifacts`; skipped if absent)
 //!   * store: insert + pair-visit
@@ -292,12 +295,13 @@ fn main() {
     }
 
     // End-to-end all-pairs through the pipeline (arena path vs the
-    // per-row reference path).
+    // per-row reference path). Arc-wrapped so the API arm below can
+    // spawn the query service over the same pipeline.
     let mut cfg = Config::default();
     cfg.n = n;
     cfg.d = d;
     cfg.k = k;
-    let pipeline = Pipeline::new(cfg).unwrap();
+    let pipeline = std::sync::Arc::new(Pipeline::new(cfg).unwrap());
     pipeline.ingest(&data).unwrap();
     let m = bench("pipeline/all_pairs", Some(pairs.len() as u64), || {
         std::hint::black_box(pipeline.all_pairs_condensed());
@@ -384,7 +388,7 @@ fn main() {
         let top = 10usize;
         let qsk = Sketcher::new(pipeline.config().projection_spec(), 4);
         {
-            let native = pipeline.top_k(&topq[..4], top);
+            let native = pipeline.top_k(&topq[..4], top).unwrap();
             let snap = qstore.arena_snapshot(4, k);
             let qarena = SketchArena::from_rows(4, k, &qsk.sketch_rows(&topq[..4]));
             let want: Vec<Vec<(u64, f64)>> =
@@ -396,7 +400,7 @@ fn main() {
         }
         let topk_elems = (topq.len() * n) as u64;
         let m_topk_native = bench("query/topk_native", Some(topk_elems), || {
-            std::hint::black_box(pipeline.top_k(&topq, top));
+            std::hint::black_box(pipeline.top_k(&topq, top).unwrap());
         });
         let m_topk_snap = bench("query/topk_snapshot", Some(topk_elems), || {
             let snap = qstore.arena_snapshot(4, k);
@@ -592,6 +596,92 @@ fn main() {
         } else {
             println!("wrote BENCH_serve.json");
         }
+    }
+
+    // Typed-API arm: the same pair batch through (a) the legacy direct
+    // estimate path, (b) the typed in-process dispatch
+    // (Pipeline::answer), (c) the batched query service, and (d) a TCP
+    // loopback client — equality-guarded, recorded machine-readably in
+    // BENCH_api.json. The service/wire arms price the unified surface
+    // against PR-4's raw snapshot serving.
+    {
+        use lpsketch::api::{Client, Request, Response, Server};
+        let api_pairs: Vec<(u64, u64)> =
+            (0..1024u64).map(|i| ((i * 7) % n as u64, (i * 13 + 1) % n as u64)).collect();
+        let service = pipeline.spawn_query_service();
+        let guard = Server::bind("127.0.0.1:0", service.clone())
+            .expect("bind loopback")
+            .spawn()
+            .expect("spawn server");
+        let mut client = Client::connect(guard.addr()).expect("connect loopback");
+        // Equality guard before timing: all four routes agree bitwise.
+        {
+            let direct = pipeline.estimate_pairs(&api_pairs);
+            let typed = match pipeline.answer(Request::PairBatch(api_pairs.clone())) {
+                Response::PairBatch(v) => v,
+                other => panic!("unexpected response {other:?}"),
+            };
+            assert_eq!(typed, direct, "typed dispatch diverged from direct path");
+            let served = match service.call(Request::PairBatch(api_pairs.clone())).unwrap() {
+                Response::PairBatch(v) => v,
+                other => panic!("unexpected response {other:?}"),
+            };
+            assert_eq!(served, direct, "batched service diverged from direct path");
+            let remote = client.pairs(&api_pairs).unwrap();
+            assert_eq!(remote, direct, "TCP loopback diverged from direct path");
+        }
+        let batch_len = api_pairs.len() as u64;
+        let m_direct = bench("api/pairs_direct", Some(batch_len), || {
+            std::hint::black_box(pipeline.estimate_pairs(&api_pairs));
+        });
+        let m_typed = bench("api/pairs_typed", Some(batch_len), || {
+            std::hint::black_box(pipeline.answer(Request::PairBatch(api_pairs.clone())));
+        });
+        let m_service = bench("api/pairs_service", Some(batch_len), || {
+            std::hint::black_box(service.call(Request::PairBatch(api_pairs.clone())).unwrap());
+        });
+        let m_tcp = bench("api/pairs_tcp", Some(batch_len), || {
+            std::hint::black_box(client.pairs(&api_pairs).unwrap());
+        });
+        let mut results: Vec<String> = Vec::new();
+        for (path, m) in [
+            ("direct", &m_direct),
+            ("typed_inprocess", &m_typed),
+            ("service_batched", &m_service),
+            ("tcp_loopback", &m_tcp),
+        ] {
+            table.row(&[
+                "api".into(),
+                format!("pairs {path} batch={} n={n} k={k}", api_pairs.len()),
+                fmt_duration(m.mean),
+                fmt_duration(m.p95),
+                format!("{:.2} Mpairs/s", m.throughput().unwrap() / 1e6),
+            ]);
+            results.push(format!(
+                "    {{\"path\": \"{path}\", \"mean_s\": {:.6e}, \"pairs_per_s\": {:.1}}}",
+                m.mean.as_secs_f64(),
+                m.throughput().unwrap(),
+            ));
+        }
+        let typed_vs_direct = m_direct.mean.as_secs_f64() / m_typed.mean.as_secs_f64();
+        let tcp_vs_typed = m_typed.mean.as_secs_f64() / m_tcp.mean.as_secs_f64();
+        println!(
+            "api pairs: typed {typed_vs_direct:.2}x of direct, tcp loopback {:.2} Mpairs/s \
+             ({tcp_vs_typed:.2}x of typed)",
+            m_tcp.throughput().unwrap() / 1e6,
+        );
+        let json = format!(
+            "{{\n  \"bench\": \"api\",\n  \"n\": {n},\n  \"d\": {d},\n  \"k\": {k},\n  \
+             \"p\": 4,\n  \"pairs_per_batch\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+            api_pairs.len(),
+            results.join(",\n"),
+        );
+        if let Err(e) = std::fs::write("BENCH_api.json", &json) {
+            eprintln!("(could not write BENCH_api.json: {e})");
+        } else {
+            println!("wrote BENCH_api.json");
+        }
+        guard.stop();
     }
 
     // Store ops.

@@ -1,0 +1,32 @@
+//! Unified typed query API — the single serving surface.
+//!
+//! The paper's operating model is a server that holds only the O(nk)
+//! sketch state and answers distance queries, *including queries for
+//! points that were never ingested* (the stable-projection workload of
+//! Li 2006 / Li & Mahoney 2008). This module is that server's contract:
+//!
+//! * [`protocol`] — the typed [`Request`]/[`Response`] enums: pair
+//!   batches, top-k by stored id or by fresh vector, fresh-vector
+//!   distances, stats, ping.
+//! * [`wire`] — the versioned, length-prefixed binary codec (no crates;
+//!   persist-v2-style corruption discipline: caps and length checks
+//!   before any allocation).
+//! * [`service`] — the batched in-process service: [`ApiHandle`] →
+//!   [`crate::coordinator::batcher::Batcher`] → `query-workers` threads
+//!   serving each batch from one epoch snapshot.
+//! * [`server`] — [`Server`] (std `TcpListener` accept loop feeding the
+//!   same service) and the blocking [`Client`].
+//!
+//! Every entry point — `lpsketch query`, `lpsketch knn`, the `serve`
+//! stress demo, `serve --listen` + `client`, tests, benches — goes
+//! through these types, and every route returns bitwise-identical
+//! estimates to a direct [`crate::coordinator::Pipeline`] call.
+
+pub mod protocol;
+pub mod server;
+pub mod service;
+pub mod wire;
+
+pub use protocol::{ApiStats, Request, Response, TopKTarget};
+pub use server::{Client, Server, ServerGuard};
+pub use service::{ApiHandle, ApiJob};

@@ -1,0 +1,103 @@
+//! The typed request/response protocol — the one vocabulary every query
+//! surface speaks.
+//!
+//! A [`Request`] names *what* is being asked (a pair batch, a top-k
+//! scan, a fresh-vector distance, stats, a ping); a [`Response`] is the
+//! typed answer or a [`Response::Error`]. The same enums travel three
+//! ways:
+//!
+//! * **in-process, direct** — [`crate::coordinator::Pipeline::answer`]
+//!   dispatches a request against one store snapshot;
+//! * **in-process, batched** — [`super::ApiHandle::call`] enqueues the
+//!   request into the query service's batcher, where `query-workers`
+//!   threads serve whole batches from per-batch epoch snapshots;
+//! * **remote** — [`super::Client`] frames the request with the
+//!   [`super::wire`] codec and sends it to an [`super::Server`] over
+//!   TCP, which feeds the very same service.
+//!
+//! All three produce bitwise-identical estimates: the wire codec moves
+//! f32/f64 values by their IEEE bit patterns, and every serving path
+//! runs the same estimator kernels on the same snapshot machinery.
+
+/// One typed query. Estimate semantics per kind:
+///
+/// * [`Request::PairBatch`] — plain (or MLE, per config) pairwise
+///   estimates between stored rows; unknown ids answer `None`.
+/// * [`Request::TopK`] — the `top` nearest stored rows by estimated
+///   distance, for a stored row id *or* a fresh query vector that was
+///   never ingested (the paper's stable-projection query model). Served
+///   from the epoch-cached serving index
+///   ([`crate::knn::KnnIndex::from_snapshot`]).
+/// * [`Request::VectorDistance`] — sketch an out-of-store vector with
+///   the pipeline's projection and score it against the given stored
+///   ids.
+/// * [`Request::Stats`] — metrics counters + store shape, one snapshot.
+/// * [`Request::Ping`] — liveness + protocol version echo.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Stats,
+    PairBatch(Vec<(u64, u64)>),
+    TopK { target: TopKTarget, top: u32 },
+    VectorDistance { vector: Vec<f32>, ids: Vec<u64> },
+}
+
+/// What a [`Request::TopK`] ranks against the store.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TopKTarget {
+    /// A row already in the store (served from its stored sketch — no
+    /// raw data, no re-sketching, works even when the projection
+    /// parameters are unknown).
+    StoredId(u64),
+    /// A fresh vector, sketched on the fly with the pipeline's
+    /// projection spec. Requires known projection parameters (rejected
+    /// with a clear error on stores restored from files that don't
+    /// record them).
+    Vector(Vec<f32>),
+}
+
+/// Typed answer to a [`Request`]. Variants pair 1:1 with request kinds;
+/// [`Response::Error`] carries any serving-side failure (unknown id on
+/// top-k, unknown projection on fresh-vector queries, …) instead of a
+/// transport-level disconnect.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Pong { version: u32 },
+    Stats(ApiStats),
+    PairBatch(Vec<Option<f64>>),
+    /// `(store id, estimated distance)` ascending; at most `top` rows.
+    TopK(Vec<(u64, f64)>),
+    VectorDistance(Vec<Option<f64>>),
+    Error(String),
+}
+
+/// Metrics counters + store shape, captured from one epoch snapshot
+/// (the `Stats` reply body).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ApiStats {
+    /// Rows in the store (map + segment-resident).
+    pub rows: u64,
+    /// Rows held in the per-row map shards.
+    pub map_rows: u64,
+    /// Columnar segments.
+    pub segments: u64,
+    /// Store write epoch at capture.
+    pub epoch: u64,
+    pub rows_ingested: u64,
+    pub queries_served: u64,
+    pub batches_flushed: u64,
+    pub compactions: u64,
+    pub queries_in_flight: u64,
+    pub snapshot_age: u64,
+    /// Distance order p.
+    pub p: u32,
+    /// Sketch width k.
+    pub k: u32,
+    /// Alternative (two-sided) strategy?
+    pub two_sided: bool,
+    /// Whether the serving pipeline knows its projection parameters
+    /// (false only for stores restored from sketch files that predate
+    /// the recorded-projection header, where fresh-vector queries are
+    /// rejected).
+    pub projection_known: bool,
+}

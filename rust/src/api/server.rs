@@ -1,0 +1,319 @@
+//! TCP wire server and blocking client for the typed query API.
+//!
+//! The [`Server`] is deliberately thin: an accept loop plus one thread
+//! per connection that decodes [`wire`] frames and forwards the typed
+//! requests into the shared [`ApiHandle`] — i.e. into the very same
+//! batcher and `query-workers` pool that serves in-process callers.
+//! Remote clients therefore get the identical snapshot discipline (and
+//! bitwise-identical estimates) as a local `pipeline.answer(..)` call;
+//! the wire adds framing, never semantics.
+//!
+//! A malformed frame gets a best-effort `Error` response and the
+//! connection is dropped (a corrupt length prefix leaves no resync
+//! point). Clean client shutdown is just closing the socket.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::protocol::{ApiStats, Request, Response, TopKTarget};
+use super::service::ApiHandle;
+use super::wire;
+
+/// A bound-but-not-yet-serving TCP server for the typed API.
+pub struct Server {
+    listener: TcpListener,
+    handle: ApiHandle,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:4100`, or port `0` for an
+    /// OS-assigned port) and attach the query-service handle every
+    /// connection will be served from.
+    pub fn bind(addr: &str, handle: ApiHandle) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
+        Ok(Server { listener, handle })
+    }
+
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve forever on the calling thread (the `serve --listen` mode):
+    /// one spawned thread per accepted connection.
+    pub fn run(self) -> anyhow::Result<()> {
+        for conn in self.listener.incoming() {
+            match conn {
+                Ok(stream) => {
+                    let handle = self.handle.clone();
+                    std::thread::spawn(move || {
+                        let _ = serve_conn(stream, handle);
+                    });
+                }
+                Err(e) => eprintln!("accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve on a background thread and return a guard that can stop
+    /// the accept loop — the embedded/test mode.
+    pub fn spawn(self) -> anyhow::Result<ServerGuard> {
+        let addr = self.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let handle = self.handle;
+        let listener = self.listener;
+        let join = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if accept_stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    let handle = handle.clone();
+                    std::thread::spawn(move || {
+                        let _ = serve_conn(stream, handle);
+                    });
+                }
+            }
+        });
+        Ok(ServerGuard { addr, stop, join: Some(join) })
+    }
+}
+
+/// Handle for a background [`Server::spawn`] accept loop.
+pub struct ServerGuard {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerGuard {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread. Connections already
+    /// being served drain on their own threads.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Poke the blocking accept so the loop observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+fn serve_conn(stream: TcpStream, handle: ApiHandle) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let req = match wire::read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return Ok(()), // client closed cleanly
+            Err(e) => {
+                let _ = wire::write_response(
+                    &mut writer,
+                    &Response::Error(format!("bad request frame: {e}")),
+                );
+                let _ = writer.flush();
+                return Err(e);
+            }
+        };
+        let resp = match handle.call(req) {
+            Ok(resp) => resp,
+            Err(e) => Response::Error(e.to_string()),
+        };
+        wire::write_response(&mut writer, &resp)?;
+        writer.flush()?;
+    }
+}
+
+/// Blocking client for the typed API over TCP — the remote counterpart
+/// of [`ApiHandle`]. One request in flight at a time per connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> anyhow::Result<Self> {
+        let stream = TcpStream::connect(&addr)
+            .map_err(|e| anyhow::anyhow!("connecting {addr:?}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// Send one request and block for its response.
+    pub fn call(&mut self, req: &Request) -> anyhow::Result<Response> {
+        wire::write_request(&mut self.writer, req)?;
+        self.writer.flush()?;
+        wire::read_response(&mut self.reader)?
+            .ok_or_else(|| anyhow::anyhow!("server closed the connection"))
+    }
+
+    /// Liveness probe; returns the server's protocol version.
+    pub fn ping(&mut self) -> anyhow::Result<u32> {
+        match self.call(&Request::Ping)? {
+            Response::Pong { version } => Ok(version),
+            other => Self::unexpected("ping", other),
+        }
+    }
+
+    pub fn stats(&mut self) -> anyhow::Result<ApiStats> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => Self::unexpected("stats", other),
+        }
+    }
+
+    /// Batch of pair estimates (`None` per unknown id).
+    pub fn pairs(&mut self, pairs: &[(u64, u64)]) -> anyhow::Result<Vec<Option<f64>>> {
+        match self.call(&Request::PairBatch(pairs.to_vec()))? {
+            Response::PairBatch(ests) => Ok(ests),
+            other => Self::unexpected("pair batch", other),
+        }
+    }
+
+    /// Top-k nearest stored rows for a stored id.
+    pub fn top_k_id(&mut self, id: u64, top: u32) -> anyhow::Result<Vec<(u64, f64)>> {
+        match self.call(&Request::TopK { target: TopKTarget::StoredId(id), top })? {
+            Response::TopK(list) => Ok(list),
+            other => Self::unexpected("top-k", other),
+        }
+    }
+
+    /// Top-k nearest stored rows for a fresh (never-ingested) vector.
+    pub fn top_k_vector(&mut self, vector: &[f32], top: u32) -> anyhow::Result<Vec<(u64, f64)>> {
+        let target = TopKTarget::Vector(vector.to_vec());
+        match self.call(&Request::TopK { target, top })? {
+            Response::TopK(list) => Ok(list),
+            other => Self::unexpected("top-k", other),
+        }
+    }
+
+    /// Distances from a fresh vector to the given stored ids.
+    pub fn vector_distances(
+        &mut self,
+        vector: &[f32],
+        ids: &[u64],
+    ) -> anyhow::Result<Vec<Option<f64>>> {
+        let req = Request::VectorDistance { vector: vector.to_vec(), ids: ids.to_vec() };
+        match self.call(&req)? {
+            Response::VectorDistance(ests) => Ok(ests),
+            other => Self::unexpected("vector distance", other),
+        }
+    }
+
+    fn unexpected<T>(what: &str, resp: Response) -> anyhow::Result<T> {
+        match resp {
+            Response::Error(e) => anyhow::bail!("server error on {what}: {e}"),
+            other => anyhow::bail!("unexpected response to {what}: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::Pipeline;
+    use crate::data::{gen, DataDist};
+
+    fn served_pipeline() -> (Arc<Pipeline>, crate::data::RowMatrix) {
+        let mut cfg = Config::default();
+        cfg.n = 24;
+        cfg.d = 48;
+        cfg.k = 16;
+        cfg.block_rows = 8;
+        cfg.workers = 2;
+        let data = gen::generate(DataDist::Gaussian, cfg.n, cfg.d, 404);
+        let pipeline = Arc::new(Pipeline::new(cfg).unwrap());
+        pipeline.ingest(&data).unwrap();
+        (pipeline, data)
+    }
+
+    #[test]
+    fn loopback_round_trips_every_request_kind() {
+        let (pipeline, data) = served_pipeline();
+        let handle = pipeline.spawn_query_service();
+        let guard = Server::bind("127.0.0.1:0", handle).unwrap().spawn().unwrap();
+        let mut client = Client::connect(guard.addr()).unwrap();
+
+        assert_eq!(client.ping().unwrap(), wire::WIRE_VERSION as u32);
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.rows, 24);
+        assert!(stats.projection_known);
+
+        let pairs: Vec<(u64, u64)> = (0..24).map(|i| (i, (i + 5) % 24)).collect();
+        assert_eq!(client.pairs(&pairs).unwrap(), pipeline.estimate_pairs(&pairs));
+
+        let direct = pipeline.top_k_ids(&[3], 5);
+        assert_eq!(client.top_k_id(3, 5).unwrap(), direct[0].clone().unwrap());
+        assert!(client
+            .top_k_id(9999, 5)
+            .unwrap_err()
+            .to_string()
+            .contains("unknown id"));
+
+        let q = data.row(7);
+        assert_eq!(
+            client.top_k_vector(q, 4).unwrap(),
+            pipeline.top_k(&[q], 4).unwrap()[0]
+        );
+        let ids: Vec<u64> = (0..24).collect();
+        assert_eq!(
+            client.vector_distances(q, &ids).unwrap(),
+            pipeline.vector_distances(q, &ids).unwrap()
+        );
+        guard.stop();
+    }
+
+    #[test]
+    fn malformed_frame_gets_an_error_and_a_hangup() {
+        let (pipeline, _) = served_pipeline();
+        let handle = pipeline.spawn_query_service();
+        let guard = Server::bind("127.0.0.1:0", handle).unwrap().spawn().unwrap();
+        let mut stream = TcpStream::connect(guard.addr()).unwrap();
+        stream.write_all(b"garbage that is not a frame at all").unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        match wire::read_response(&mut reader).unwrap() {
+            Some(Response::Error(e)) => assert!(e.contains("bad request frame"), "{e}"),
+            other => panic!("expected an error response, got {other:?}"),
+        }
+        // Server hangs up after an unrecoverable frame.
+        assert_eq!(wire::read_response(&mut reader).unwrap(), None);
+        guard.stop();
+    }
+
+    #[test]
+    fn two_clients_share_one_service() {
+        let (pipeline, _) = served_pipeline();
+        let handle = pipeline.spawn_query_service();
+        let guard = Server::bind("127.0.0.1:0", handle).unwrap().spawn().unwrap();
+        let addr = guard.addr();
+        let want = pipeline.estimate_pairs(&[(0, 1)])[0];
+        let threads: Vec<_> = (0..3)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    for _ in 0..20 {
+                        assert_eq!(client.pairs(&[(0, 1)]).unwrap(), vec![want]);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        guard.stop();
+    }
+}

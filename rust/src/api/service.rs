@@ -1,0 +1,83 @@
+//! The batched query service: the in-process serving layer of the
+//! unified API.
+//!
+//! [`spawn`] wires one [`Batcher`] (now generic over request kinds, not
+//! just id pairs) to `query-workers` serving threads. Workers take
+//! turns draining the batcher — one drainer at a time behind a mutex,
+//! the lock released before a batch is *served*, so batches execute
+//! concurrently — and each drained batch is answered by
+//! [`Pipeline::serve_api_batch`] from a single per-batch epoch
+//! snapshot. A pair query, a top-k scan, and a stats probe that land in
+//! the same batch therefore all observe the same consistent cut.
+//!
+//! The [`ApiHandle`] is the client side: cloneable, blocking, used
+//! directly by the CLI (`query`, `knn`, the `serve` demo) and by every
+//! TCP connection the [`super::Server`] accepts — remote and local
+//! callers share one queue, one worker pool, one snapshot discipline.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::batcher::{Batcher, Drained};
+use crate::coordinator::Pipeline;
+
+use super::protocol::{Request, Response};
+
+/// One queued request with its reply slot.
+pub struct ApiJob {
+    pub request: Request,
+    pub reply: mpsc::SyncSender<Response>,
+}
+
+/// Cloneable client handle to the batched query service. The service
+/// stops when every handle is dropped.
+#[derive(Clone)]
+pub struct ApiHandle {
+    tx: mpsc::Sender<ApiJob>,
+}
+
+impl ApiHandle {
+    /// Blocking typed call through the batcher.
+    pub fn call(&self, request: Request) -> anyhow::Result<Response> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(ApiJob { request, reply })
+            .map_err(|_| anyhow::anyhow!("query service stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("query service dropped reply"))
+    }
+
+    /// Single pair query (the historical `QueryHandle::query` shape):
+    /// `None` for unknown ids, `Err` only on transport/service failure.
+    pub fn query(&self, a: u64, b: u64) -> anyhow::Result<Option<f64>> {
+        match self.call(Request::PairBatch(vec![(a, b)]))? {
+            Response::PairBatch(mut ests) => Ok(ests.pop().flatten()),
+            Response::Error(e) => anyhow::bail!("service error: {e}"),
+            other => anyhow::bail!("unexpected response to pair query: {other:?}"),
+        }
+    }
+}
+
+/// Start `query-workers` serving threads over one shared batcher.
+/// Called by [`Pipeline::spawn_query_service`]; see the module doc.
+pub fn spawn(pipeline: Arc<Pipeline>) -> ApiHandle {
+    let (tx, rx) = mpsc::channel::<ApiJob>();
+    let cfg = pipeline.config();
+    let workers = cfg.query_workers.max(1);
+    let batcher = Arc::new(Mutex::new(Batcher::new(
+        rx,
+        cfg.batch_max,
+        Duration::from_micros(cfg.batch_deadline_us),
+    )));
+    for _ in 0..workers {
+        let pipeline = Arc::clone(&pipeline);
+        let batcher = Arc::clone(&batcher);
+        std::thread::spawn(move || loop {
+            let drained = batcher.lock().unwrap().drain();
+            match drained {
+                Drained::Batch(batch, reason) => pipeline.serve_api_batch(batch, reason),
+                Drained::Closed => break,
+            }
+        });
+    }
+    ApiHandle { tx }
+}

@@ -1,0 +1,735 @@
+//! Hand-rolled, versioned, length-prefixed binary codec for the typed
+//! query protocol — no serialization crates, symmetric encode/decode,
+//! and the same corruption discipline as persistence v2: every declared
+//! length is validated against hard caps and the bytes actually present
+//! *before* any buffer is allocated, so a hostile or truncated frame
+//! returns an error — never a panic, never an abort-scale allocation.
+//!
+//! ## Frame layout (little-endian)
+//!
+//! | field       | type     | notes                                  |
+//! |-------------|----------|----------------------------------------|
+//! | magic       | `b"LPA1"`|                                        |
+//! | version     | `u8` = 1 | bumped on any layout change            |
+//! | kind        | `u8`     | request 0x01–0x05, response 0x81–0xFF  |
+//! | payload_len | `u32`    | bytes that follow, ≤ 64 MiB            |
+//! | payload     | bytes    | kind-specific body (tables below)      |
+//!
+//! Request payloads:
+//! * `Ping` (0x01), `Stats` (0x02) — empty.
+//! * `PairBatch` (0x03) — `u32 count`, then `count × (u64 a, u64 b)`.
+//! * `TopK` (0x04) — `u8 tag` (0 = stored id → `u64 id`; 1 = vector →
+//!   `u32 dim`, `dim × f32`), then `u32 top`.
+//! * `VectorDistance` (0x05) — `u32 dim`, `dim × f32`, `u32 ids`,
+//!   `ids × u64`.
+//!
+//! Response payloads:
+//! * `Pong` (0x81) — `u32 version`.
+//! * `Stats` (0x82) — the fixed [`ApiStats`] field block (ten `u64`s,
+//!   two `u32`s, two `u8` bools, in struct order).
+//! * `PairBatch` (0x83) / `VectorDistance` (0x85) — `u32 count`, then
+//!   `count × (u8 tag, f64 if tag = 1)` (`Option<f64>`; estimates move
+//!   by IEEE bit pattern, so answers are bitwise-identical across the
+//!   wire).
+//! * `TopK` (0x84) — `u32 len`, then `len × (u64 id, f64 distance)`.
+//! * `Error` (0xFF) — the message as raw UTF-8 (the whole payload).
+//!
+//! Frames are self-delimiting, so concatenated frames stream cleanly
+//! through [`read_request`]/[`read_response`]; the one-shot
+//! [`request_from_bytes`]/[`response_from_bytes`] parsers are strict
+//! and reject trailing bytes (a concatenated buffer is a stream, not a
+//! frame).
+
+use std::io::{Read, Write};
+
+use super::protocol::{ApiStats, Request, Response, TopKTarget};
+
+pub const MAGIC: [u8; 4] = *b"LPA1";
+pub const WIRE_VERSION: u8 = 1;
+/// Hard cap on one frame's payload: large enough for any realistic
+/// batch (a 64 MiB pair batch is 4M pairs), small enough that a corrupt
+/// length can never drive an abort-scale allocation.
+pub const MAX_FRAME_PAYLOAD: usize = 64 << 20;
+const HEADER_LEN: usize = 10;
+
+const K_PING: u8 = 0x01;
+const K_STATS: u8 = 0x02;
+const K_PAIR_BATCH: u8 = 0x03;
+const K_TOP_K: u8 = 0x04;
+const K_VECTOR_DISTANCE: u8 = 0x05;
+const K_PONG: u8 = 0x81;
+const K_STATS_REPLY: u8 = 0x82;
+const K_PAIR_REPLY: u8 = 0x83;
+const K_TOP_K_REPLY: u8 = 0x84;
+const K_VECTOR_REPLY: u8 = 0x85;
+const K_ERROR: u8 = 0xFF;
+
+// ---- encode ---------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_opt_f64s(out: &mut Vec<u8>, xs: &[Option<f64>]) {
+    put_u32(out, xs.len() as u32);
+    for x in xs {
+        match x {
+            Some(v) => {
+                out.push(1);
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            None => out.push(0),
+        }
+    }
+}
+
+fn frame(kind: u8, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(kind);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Encode one request as a complete frame.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let (kind, mut payload) = (
+        match req {
+            Request::Ping => K_PING,
+            Request::Stats => K_STATS,
+            Request::PairBatch(_) => K_PAIR_BATCH,
+            Request::TopK { .. } => K_TOP_K,
+            Request::VectorDistance { .. } => K_VECTOR_DISTANCE,
+        },
+        Vec::new(),
+    );
+    match req {
+        Request::Ping | Request::Stats => {}
+        Request::PairBatch(pairs) => {
+            put_u32(&mut payload, pairs.len() as u32);
+            for &(a, b) in pairs {
+                put_u64(&mut payload, a);
+                put_u64(&mut payload, b);
+            }
+        }
+        Request::TopK { target, top } => {
+            match target {
+                TopKTarget::StoredId(id) => {
+                    payload.push(0);
+                    put_u64(&mut payload, *id);
+                }
+                TopKTarget::Vector(v) => {
+                    payload.push(1);
+                    put_u32(&mut payload, v.len() as u32);
+                    put_f32s(&mut payload, v);
+                }
+            }
+            put_u32(&mut payload, *top);
+        }
+        Request::VectorDistance { vector, ids } => {
+            put_u32(&mut payload, vector.len() as u32);
+            put_f32s(&mut payload, vector);
+            put_u32(&mut payload, ids.len() as u32);
+            for &id in ids {
+                put_u64(&mut payload, id);
+            }
+        }
+    }
+    frame(kind, payload)
+}
+
+/// Encode one response as a complete frame.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut payload = Vec::new();
+    let kind = match resp {
+        Response::Pong { version } => {
+            put_u32(&mut payload, *version);
+            K_PONG
+        }
+        Response::Stats(s) => {
+            for v in [
+                s.rows,
+                s.map_rows,
+                s.segments,
+                s.epoch,
+                s.rows_ingested,
+                s.queries_served,
+                s.batches_flushed,
+                s.compactions,
+                s.queries_in_flight,
+                s.snapshot_age,
+            ] {
+                put_u64(&mut payload, v);
+            }
+            put_u32(&mut payload, s.p);
+            put_u32(&mut payload, s.k);
+            payload.push(s.two_sided as u8);
+            payload.push(s.projection_known as u8);
+            K_STATS_REPLY
+        }
+        Response::PairBatch(ests) => {
+            put_opt_f64s(&mut payload, ests);
+            K_PAIR_REPLY
+        }
+        Response::TopK(list) => {
+            put_u32(&mut payload, list.len() as u32);
+            for &(id, d) in list {
+                put_u64(&mut payload, id);
+                payload.extend_from_slice(&d.to_le_bytes());
+            }
+            K_TOP_K_REPLY
+        }
+        Response::VectorDistance(ests) => {
+            put_opt_f64s(&mut payload, ests);
+            K_VECTOR_REPLY
+        }
+        Response::Error(msg) => {
+            // The whole payload is the message; a pathologically long
+            // one is truncated at the frame cap rather than rejected.
+            let bytes = msg.as_bytes();
+            let take = bytes.len().min(MAX_FRAME_PAYLOAD);
+            payload.extend_from_slice(&bytes[..take]);
+            K_ERROR
+        }
+    };
+    frame(kind, payload)
+}
+
+// ---- decode ---------------------------------------------------------
+
+/// Bounds-checked little-endian reader over a payload slice. Every
+/// accessor errors on overrun instead of panicking.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, off: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(n <= self.remaining(), "truncated frame payload");
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// A `u32` element count, validated against the bytes actually left
+    /// in the payload (`elem_bytes` each) before any allocation.
+    fn count(&mut self, elem_bytes: usize, what: &str) -> anyhow::Result<usize> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(
+            n.checked_mul(elem_bytes.max(1))
+                .is_some_and(|bytes| bytes <= self.remaining()),
+            "declared {what} count {n} exceeds the frame payload"
+        );
+        Ok(n)
+    }
+
+    fn f32s(&mut self, n: usize) -> anyhow::Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+            .collect())
+    }
+
+    fn opt_f64s(&mut self) -> anyhow::Result<Vec<Option<f64>>> {
+        // Each entry is ≥ 1 byte, so `count` bounds the allocation.
+        let n = self.count(1, "estimate")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(match self.u8()? {
+                0 => None,
+                1 => Some(self.f64()?),
+                t => anyhow::bail!("bad option tag {t}"),
+            });
+        }
+        Ok(out)
+    }
+
+    fn finish(&self, what: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(self.remaining() == 0, "trailing bytes in {what} payload");
+        Ok(())
+    }
+}
+
+/// Validate one 10-byte frame header (magic, version, length cap) and
+/// return `(kind, payload_len)`. The single source of truth for both
+/// the byte-slice and the stream decode paths.
+fn parse_header(header: &[u8; HEADER_LEN]) -> anyhow::Result<(u8, usize)> {
+    anyhow::ensure!(header[..4] == MAGIC, "not a wire-protocol frame (bad magic)");
+    let version = header[4];
+    anyhow::ensure!(
+        version == WIRE_VERSION,
+        "unsupported wire version {version} (this build speaks {WIRE_VERSION})"
+    );
+    let kind = header[5];
+    let len = u32::from_le_bytes(header[6..10].try_into().expect("4 bytes")) as usize;
+    anyhow::ensure!(
+        len <= MAX_FRAME_PAYLOAD,
+        "implausible frame length {len} (cap {MAX_FRAME_PAYLOAD})"
+    );
+    Ok((kind, len))
+}
+
+/// Parse and validate one frame header + payload out of `buf`; returns
+/// `(kind, payload, bytes consumed)`. Errors on short input, bad
+/// magic/version, or a declared length that exceeds the cap or the
+/// buffer.
+fn frame_from_bytes(buf: &[u8]) -> anyhow::Result<(u8, &[u8], usize)> {
+    anyhow::ensure!(buf.len() >= HEADER_LEN, "truncated frame header");
+    let header: &[u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().expect("checked length");
+    let (kind, len) = parse_header(header)?;
+    anyhow::ensure!(buf.len() - HEADER_LEN >= len, "truncated frame payload");
+    Ok((kind, &buf[HEADER_LEN..HEADER_LEN + len], HEADER_LEN + len))
+}
+
+fn decode_request_payload(kind: u8, payload: &[u8]) -> anyhow::Result<Request> {
+    let mut cur = Cur::new(payload);
+    let req = match kind {
+        K_PING => Request::Ping,
+        K_STATS => Request::Stats,
+        K_PAIR_BATCH => {
+            let n = cur.count(16, "pair")?;
+            let mut pairs = Vec::with_capacity(n);
+            for _ in 0..n {
+                pairs.push((cur.u64()?, cur.u64()?));
+            }
+            Request::PairBatch(pairs)
+        }
+        K_TOP_K => {
+            let target = match cur.u8()? {
+                0 => TopKTarget::StoredId(cur.u64()?),
+                1 => {
+                    let dim = cur.count(4, "vector entry")?;
+                    TopKTarget::Vector(cur.f32s(dim)?)
+                }
+                t => anyhow::bail!("bad top-k target tag {t}"),
+            };
+            let top = cur.u32()?;
+            Request::TopK { target, top }
+        }
+        K_VECTOR_DISTANCE => {
+            let dim = cur.count(4, "vector entry")?;
+            let vector = cur.f32s(dim)?;
+            let n = cur.count(8, "id")?;
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(cur.u64()?);
+            }
+            Request::VectorDistance { vector, ids }
+        }
+        other => anyhow::bail!("unknown request kind 0x{other:02x}"),
+    };
+    cur.finish("request")?;
+    Ok(req)
+}
+
+fn decode_response_payload(kind: u8, payload: &[u8]) -> anyhow::Result<Response> {
+    let mut cur = Cur::new(payload);
+    let resp = match kind {
+        K_PONG => Response::Pong { version: cur.u32()? },
+        K_STATS_REPLY => {
+            let mut s = ApiStats::default();
+            for slot in [
+                &mut s.rows,
+                &mut s.map_rows,
+                &mut s.segments,
+                &mut s.epoch,
+                &mut s.rows_ingested,
+                &mut s.queries_served,
+                &mut s.batches_flushed,
+                &mut s.compactions,
+                &mut s.queries_in_flight,
+                &mut s.snapshot_age,
+            ] {
+                *slot = cur.u64()?;
+            }
+            s.p = cur.u32()?;
+            s.k = cur.u32()?;
+            s.two_sided = cur.u8()? != 0;
+            s.projection_known = cur.u8()? != 0;
+            Response::Stats(s)
+        }
+        K_PAIR_REPLY => Response::PairBatch(cur.opt_f64s()?),
+        K_TOP_K_REPLY => {
+            let n = cur.count(16, "neighbor")?;
+            let mut list = Vec::with_capacity(n);
+            for _ in 0..n {
+                list.push((cur.u64()?, cur.f64()?));
+            }
+            Response::TopK(list)
+        }
+        K_VECTOR_REPLY => Response::VectorDistance(cur.opt_f64s()?),
+        K_ERROR => {
+            let msg = String::from_utf8(payload.to_vec())
+                .map_err(|_| anyhow::anyhow!("error message is not UTF-8"))?;
+            cur.take(payload.len())?; // the whole payload is consumed
+            Response::Error(msg)
+        }
+        other => anyhow::bail!("unknown response kind 0x{other:02x}"),
+    };
+    cur.finish("response")?;
+    Ok(resp)
+}
+
+/// Strict one-shot request parser: exactly one frame, no trailing
+/// bytes (concatenated frames must go through [`read_request`]).
+pub fn request_from_bytes(buf: &[u8]) -> anyhow::Result<Request> {
+    let (kind, payload, used) = frame_from_bytes(buf)?;
+    anyhow::ensure!(
+        used == buf.len(),
+        "trailing bytes after frame (concatenated frames must be read as a stream)"
+    );
+    decode_request_payload(kind, payload)
+}
+
+/// Strict one-shot response parser (see [`request_from_bytes`]).
+pub fn response_from_bytes(buf: &[u8]) -> anyhow::Result<Response> {
+    let (kind, payload, used) = frame_from_bytes(buf)?;
+    anyhow::ensure!(
+        used == buf.len(),
+        "trailing bytes after frame (concatenated frames must be read as a stream)"
+    );
+    decode_response_payload(kind, payload)
+}
+
+/// Read one frame from a stream. `Ok(None)` on clean EOF at a frame
+/// boundary; an EOF mid-frame is a truncation error. The payload
+/// buffer is allocated only after the declared length passes the cap
+/// check.
+fn read_frame(r: &mut impl Read) -> anyhow::Result<Option<(u8, Vec<u8>)>> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        let n = r.read(&mut header[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None); // clean end of stream
+            }
+            anyhow::bail!("truncated frame header (EOF mid-frame)");
+        }
+        got += n;
+    }
+    let (kind, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow::anyhow!("truncated frame payload: {e}"))?;
+    Ok(Some((kind, payload)))
+}
+
+/// Read the next request from a stream (`Ok(None)` on clean EOF).
+pub fn read_request(r: &mut impl Read) -> anyhow::Result<Option<Request>> {
+    match read_frame(r)? {
+        Some((kind, payload)) => decode_request_payload(kind, &payload).map(Some),
+        None => Ok(None),
+    }
+}
+
+/// Read the next response from a stream (`Ok(None)` on clean EOF).
+pub fn read_response(r: &mut impl Read) -> anyhow::Result<Option<Response>> {
+    match read_frame(r)? {
+        Some((kind, payload)) => decode_response_payload(kind, &payload).map(Some),
+        None => Ok(None),
+    }
+}
+
+/// A frame that cannot legally cross the wire (its receiver would
+/// reject the declared length) must fail on the *sender* with a clear
+/// error, not as an opaque peer hangup.
+fn ensure_frame_fits(bytes: &[u8]) -> anyhow::Result<()> {
+    let payload = bytes.len().saturating_sub(HEADER_LEN);
+    anyhow::ensure!(
+        payload <= MAX_FRAME_PAYLOAD,
+        "frame payload {payload} B exceeds the {MAX_FRAME_PAYLOAD} B cap — split the batch"
+    );
+    Ok(())
+}
+
+/// Write one request frame (errors on payloads past the frame cap).
+pub fn write_request(w: &mut impl Write, req: &Request) -> anyhow::Result<()> {
+    let bytes = encode_request(req);
+    ensure_frame_fits(&bytes)?;
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Write one response frame (errors on payloads past the frame cap).
+pub fn write_response(w: &mut impl Write, resp: &Response) -> anyhow::Result<()> {
+    let bytes = encode_response(resp);
+    ensure_frame_fits(&bytes)?;
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_requests() -> Vec<Request> {
+        vec![
+            Request::Ping,
+            Request::Stats,
+            Request::PairBatch(vec![]),
+            Request::PairBatch(vec![(0, 1), (u64::MAX, 42), (7, 7)]),
+            Request::TopK { target: TopKTarget::StoredId(99), top: 10 },
+            Request::TopK {
+                target: TopKTarget::Vector(vec![1.5, -0.25, f32::MIN_POSITIVE, 0.0]),
+                top: 3,
+            },
+            Request::VectorDistance {
+                vector: vec![0.5; 7],
+                ids: vec![1, 2, 3, u64::MAX],
+            },
+            Request::VectorDistance { vector: vec![], ids: vec![] },
+        ]
+    }
+
+    fn sample_responses() -> Vec<Response> {
+        vec![
+            Response::Pong { version: 1 },
+            Response::Stats(ApiStats {
+                rows: 10,
+                map_rows: 3,
+                segments: 2,
+                epoch: 99,
+                rows_ingested: 10,
+                queries_served: 55,
+                batches_flushed: 4,
+                compactions: 1,
+                queries_in_flight: 0,
+                snapshot_age: 2,
+                p: 4,
+                k: 64,
+                two_sided: true,
+                projection_known: false,
+            }),
+            Response::PairBatch(vec![Some(1.25), None, Some(-0.0), Some(f64::MAX)]),
+            Response::PairBatch(vec![]),
+            Response::TopK(vec![(3, 0.5), (9, 1.75)]),
+            Response::TopK(vec![]),
+            Response::VectorDistance(vec![None, Some(2.5)]),
+            Response::Error("unknown id 42".into()),
+        ]
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        for req in sample_requests() {
+            let bytes = encode_request(&req);
+            assert_eq!(request_from_bytes(&bytes).unwrap(), req, "{req:?}");
+            // Stream read agrees and consumes the full frame.
+            let mut cursor = std::io::Cursor::new(bytes);
+            assert_eq!(read_request(&mut cursor).unwrap(), Some(req));
+            assert_eq!(read_request(&mut cursor).unwrap(), None);
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        for resp in sample_responses() {
+            let bytes = encode_response(&resp);
+            assert_eq!(response_from_bytes(&bytes).unwrap(), resp, "{resp:?}");
+            let mut cursor = std::io::Cursor::new(bytes);
+            assert_eq!(read_response(&mut cursor).unwrap(), Some(resp));
+            assert_eq!(read_response(&mut cursor).unwrap(), None);
+        }
+    }
+
+    #[test]
+    fn estimates_cross_the_wire_by_bit_pattern() {
+        // NaN payloads can't use assert_eq; compare the re-encoded
+        // bytes — bit-identical f64s must produce bit-identical frames.
+        let nan = f64::from_bits(0x7ff8_dead_beef_0001);
+        let resp = Response::PairBatch(vec![Some(nan), Some(-0.0), None]);
+        let bytes = encode_response(&resp);
+        let back = response_from_bytes(&bytes).unwrap();
+        assert_eq!(encode_response(&back), bytes);
+        let Response::PairBatch(ests) = back else { panic!("wrong kind") };
+        assert_eq!(ests[0].unwrap().to_bits(), nan.to_bits());
+        assert_eq!(ests[1].unwrap().to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn every_truncation_errors_never_panics() {
+        for req in sample_requests() {
+            let bytes = encode_request(&req);
+            for cut in 0..bytes.len() {
+                assert!(
+                    request_from_bytes(&bytes[..cut]).is_err(),
+                    "{req:?} truncated at {cut} must error"
+                );
+                // Stream reads see either a clean EOF (cut 0) or an error.
+                let mut cursor = std::io::Cursor::new(&bytes[..cut]);
+                let got = read_request(&mut cursor);
+                if cut == 0 {
+                    assert!(matches!(got, Ok(None)));
+                } else {
+                    assert!(got.is_err(), "{req:?} stream-truncated at {cut}");
+                }
+            }
+        }
+        for resp in sample_responses() {
+            let bytes = encode_response(&resp);
+            for cut in 0..bytes.len() {
+                assert!(response_from_bytes(&bytes[..cut]).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_and_kind_are_errors() {
+        let good = encode_request(&Request::Ping);
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(request_from_bytes(&bad).unwrap_err().to_string().contains("magic"));
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(request_from_bytes(&bad)
+            .unwrap_err()
+            .to_string()
+            .contains("unsupported wire version"));
+        let mut bad = good.clone();
+        bad[5] = 0x77;
+        assert!(request_from_bytes(&bad).unwrap_err().to_string().contains("kind"));
+        // A request kind is not a valid response kind and vice versa.
+        assert!(response_from_bytes(&good).is_err());
+        assert!(request_from_bytes(&encode_response(&Response::Pong { version: 1 })).is_err());
+    }
+
+    #[test]
+    fn oversized_declared_lengths_error_before_allocation() {
+        // Frame length far past the cap: must be rejected from the
+        // 10-byte header alone (the 4 GiB payload is never allocated).
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&MAGIC);
+        hdr.push(WIRE_VERSION);
+        hdr.push(0x03);
+        hdr.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = request_from_bytes(&hdr).unwrap_err().to_string();
+        assert!(err.contains("implausible frame length"), "{err}");
+        let mut cursor = std::io::Cursor::new(hdr);
+        assert!(read_request(&mut cursor).is_err());
+
+        // Inner count far past the payload: a PairBatch declaring 2³⁰
+        // pairs inside a 12-byte payload must error without allocating
+        // the 16 GiB vector.
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1 << 30);
+        payload.extend_from_slice(&[0u8; 8]);
+        let framed = frame(0x03, payload);
+        let err = request_from_bytes(&framed).unwrap_err().to_string();
+        assert!(err.contains("exceeds the frame payload"), "{err}");
+
+        // Same discipline on the vector dim and the option-list count.
+        let mut payload = Vec::new();
+        put_u32(&mut payload, u32::MAX);
+        let framed = frame(0x05, payload);
+        assert!(request_from_bytes(&framed).is_err());
+        let mut payload = Vec::new();
+        put_u32(&mut payload, u32::MAX);
+        let framed = frame(0x83, payload);
+        assert!(response_from_bytes(&framed).is_err());
+    }
+
+    #[test]
+    fn concatenated_frames_stream_but_do_not_parse_as_one() {
+        let a = Request::PairBatch(vec![(1, 2)]);
+        let b = Request::TopK { target: TopKTarget::StoredId(5), top: 2 };
+        let mut joined = encode_request(&a);
+        joined.extend_from_slice(&encode_request(&b));
+        // One-shot parse of a concatenated buffer is an error...
+        let err = request_from_bytes(&joined).unwrap_err().to_string();
+        assert!(err.contains("trailing bytes"), "{err}");
+        // ...but the stream reader hands the frames out in order.
+        let mut cursor = std::io::Cursor::new(joined);
+        assert_eq!(read_request(&mut cursor).unwrap(), Some(a));
+        assert_eq!(read_request(&mut cursor).unwrap(), Some(b));
+        assert_eq!(read_request(&mut cursor).unwrap(), None);
+    }
+
+    #[test]
+    fn trailing_garbage_inside_payload_is_rejected() {
+        // A well-formed body followed by junk *inside* the declared
+        // payload must error (symmetry: every encoder output decodes,
+        // nothing else does).
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1);
+        put_u64(&mut payload, 3);
+        put_u64(&mut payload, 4);
+        payload.push(0xAB);
+        let framed = frame(0x03, payload);
+        let err = request_from_bytes(&framed).unwrap_err().to_string();
+        assert!(err.contains("trailing bytes in request payload"), "{err}");
+    }
+
+    #[test]
+    fn oversized_outgoing_frames_fail_on_the_sender() {
+        // 4M+ pairs push the payload past the 64 MiB cap: the writer
+        // must error clearly instead of shipping a frame every receiver
+        // would reject (an opaque hangup from the client's viewpoint).
+        let too_big = Request::PairBatch(vec![(0, 0); 4_194_304]);
+        let mut sink = Vec::new();
+        let err = write_request(&mut sink, &too_big).unwrap_err().to_string();
+        assert!(err.contains("exceeds the"), "{err}");
+        assert!(sink.is_empty(), "nothing may be written on failure");
+        // The largest batch under the cap still goes through.
+        let fits = Request::PairBatch(vec![(0, 0); 4_194_291]);
+        write_request(&mut sink, &fits).unwrap();
+        let mut cursor = std::io::Cursor::new(sink);
+        assert_eq!(read_request(&mut cursor).unwrap(), Some(fits));
+    }
+
+    #[test]
+    fn error_response_requires_utf8() {
+        let framed = frame(K_ERROR, vec![0xFF, 0xFE, 0x80]);
+        assert!(response_from_bytes(&framed).unwrap_err().to_string().contains("UTF-8"));
+    }
+
+    #[test]
+    fn bad_option_and_target_tags_error() {
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1);
+        payload.push(7); // neither 0 nor 1
+        assert!(response_from_bytes(&frame(K_PAIR_REPLY, payload)).is_err());
+        let mut payload = Vec::new();
+        payload.push(9); // bad top-k target tag
+        put_u32(&mut payload, 1);
+        assert!(request_from_bytes(&frame(K_TOP_K, payload)).is_err());
+    }
+}

@@ -204,10 +204,13 @@ impl Config {
         crate::projection::ProjectionSpec::new(self.seed, self.k, self.dist, self.strategy)
     }
 
-    /// One-line human summary (logged by the CLI and examples).
+    /// One-line human summary (logged by the CLI and examples). Covers
+    /// every serving-relevant knob — including `query_workers` and the
+    /// compaction thresholds — so no caller needs to hand-append them.
     pub fn describe(&self) -> String {
         format!(
-            "p={} k={} strategy={} dist={} n={} d={} workers={} block={} mle={} gemm={} pjrt={}",
+            "p={} k={} strategy={} dist={} n={} d={} workers={} qworkers={} block={} \
+             compact={}/{} mle={} gemm={} pjrt={}",
             self.p,
             self.k,
             self.strategy.as_str(),
@@ -215,7 +218,10 @@ impl Config {
             self.n,
             self.d,
             self.workers,
+            self.query_workers,
             self.block_rows,
+            self.compact_min_rows,
+            self.compact_target_rows,
             self.use_mle,
             self.ingest_gemm,
             self.use_pjrt,
@@ -310,6 +316,19 @@ mod tests {
         c.apply_args(args(&["--query-workers", "8"])).unwrap();
         assert_eq!(c.query_workers, 8);
         assert!(c.set("query-workers", "0").is_err());
+    }
+
+    #[test]
+    fn describe_covers_serving_knobs() {
+        // `serve` used to hand-append query_workers; the one-line
+        // summary must carry every serving-relevant knob itself.
+        let mut c = Config::default();
+        c.query_workers = 5;
+        c.compact_min_rows = 7;
+        c.compact_target_rows = 9;
+        let line = c.describe();
+        assert!(line.contains("qworkers=5"), "{line}");
+        assert!(line.contains("compact=7/9"), "{line}");
     }
 
     #[test]

@@ -1,6 +1,12 @@
-//! Query batcher: coalesces individual pair queries into batches — the
-//! dynamic-batching pattern of serving systems, applied to distance
-//! queries.
+//! Query batcher: coalesces individual queries into batches — the
+//! dynamic-batching pattern of serving systems, applied to the typed
+//! query API.
+//!
+//! The batcher is generic over the queued item: the query service runs
+//! it over [`crate::api::ApiJob`]s (any typed request — pair batches,
+//! top-k, stats — shares one queue and one per-batch store snapshot);
+//! [`PairQuery`] is the original id-pair item shape, kept as the
+//! minimal example and unit-test vehicle.
 //!
 //! Rationale: the estimate op amortizes (one artifact dispatch / one
 //! cache-warm pass over the sketch store serves the whole batch), so
@@ -27,17 +33,18 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// One pair query with its reply slot.
+/// One pair query with its reply slot — the original (pre-typed-API)
+/// item shape, kept as the minimal batching example and test vehicle.
 pub struct PairQuery<T> {
     pub a: u64,
     pub b: u64,
     pub reply: mpsc::SyncSender<T>,
 }
 
-/// Outcome of one drain step.
-pub enum Drained<T> {
+/// Outcome of one drain step over items of type `Q`.
+pub enum Drained<Q> {
     /// A batch ready to execute.
-    Batch(Vec<PairQuery<T>>, FlushReason),
+    Batch(Vec<Q>, FlushReason),
     /// Channel closed and nothing pending — shut down.
     Closed,
 }
@@ -54,9 +61,9 @@ pub enum FlushReason {
     Drain,
 }
 
-/// Batching policy over an mpsc receiver.
-pub struct Batcher<T> {
-    rx: mpsc::Receiver<PairQuery<T>>,
+/// Batching policy over an mpsc receiver of any queued item type.
+pub struct Batcher<Q> {
+    rx: mpsc::Receiver<Q>,
     pub max_batch: usize,
     pub deadline: Duration,
     /// How long an empty queue is polled before flushing a partial
@@ -65,14 +72,14 @@ pub struct Batcher<T> {
     pub idle_tick: Duration,
 }
 
-impl<T> Batcher<T> {
-    pub fn new(rx: mpsc::Receiver<PairQuery<T>>, max_batch: usize, deadline: Duration) -> Self {
+impl<Q> Batcher<Q> {
+    pub fn new(rx: mpsc::Receiver<Q>, max_batch: usize, deadline: Duration) -> Self {
         assert!(max_batch > 0);
         Batcher { rx, max_batch, deadline, idle_tick: Duration::from_micros(20) }
     }
 
     /// Block until a batch is ready (or the channel closes).
-    pub fn drain(&self) -> Drained<T> {
+    pub fn drain(&self) -> Drained<Q> {
         // Block for the first query.
         let first = match self.rx.recv() {
             Ok(q) => q,

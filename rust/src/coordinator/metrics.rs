@@ -107,6 +107,10 @@ pub struct Metrics {
     pub snapshot_age: AtomicU64,
     /// Epoch of the query service's most recent serving snapshot
     /// (internal bookkeeping for `snapshot_age`; not exported).
+    /// `u64::MAX` = no batch served yet — epoch 0 is a legitimate
+    /// serve point on an empty store, so 0 cannot double as the
+    /// sentinel (it would under-report staleness after an empty-store
+    /// start).
     pub last_serve_epoch: AtomicU64,
     pub sketch_latency: Histogram,
     pub query_latency: Histogram,
@@ -114,7 +118,9 @@ pub struct Metrics {
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        let m = Self::default();
+        m.last_serve_epoch.store(u64::MAX, Ordering::Relaxed);
+        m
     }
 
     pub fn snapshot(&self) -> Snapshot {

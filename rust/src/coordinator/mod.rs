@@ -5,7 +5,8 @@
 //!   bounded channels as backpressure; query side (single / batched /
 //!   all-pairs).
 //! * [`scheduler`] — slices row streams into fixed-size blocks.
-//! * [`batcher`] — deadline+size dynamic batching for pair queries.
+//! * [`batcher`] — deadline+size dynamic batching, generic over the
+//!   queued item (the query service batches typed API requests).
 //! * [`router`] — row-id → shard assignment (a partition, by invariant).
 //! * [`state`] — the sharded SketchStore (the O(nk) replacement for the
 //!   O(nD) matrix), read through epoch snapshots so scans never pin the
@@ -22,7 +23,7 @@ pub mod scheduler;
 pub mod state;
 
 pub use metrics::{Metrics, Snapshot};
-pub use pipeline::{IngestReport, Pipeline, QueryHandle};
+pub use pipeline::{IngestReport, Pipeline};
 pub use router::Router;
 pub use scheduler::{Block, BlockScheduler};
 pub use state::{ArenaSnapshot, CompactionReport, Segment, SegmentPanels, SketchStore, StoreSnapshot};

@@ -3,7 +3,7 @@
 //! claim (after the linear scan, the sketches *are* the dataset; the
 //! O(nD) matrix can be discarded).
 //!
-//! ## Format v2 (little-endian, current)
+//! ## Format v3 (little-endian, current)
 //!
 //! The store's two internal representations are persisted as they are
 //! held: per-row map entries row-wise, columnar segments as contiguous
@@ -15,7 +15,7 @@
 //! | field                | type                  | notes                              |
 //! |----------------------|-----------------------|------------------------------------|
 //! | magic                | `b"LPSK"`             |                                    |
-//! | version              | `u32` = 2             |                                    |
+//! | version              | `u32` = 3             |                                    |
 //! | p                    | `u32`                 | distance order (validation)        |
 //! | k                    | `u32`                 | sketch width                       |
 //! | orders               | `u32`                 | sketch orders (p−1)                |
@@ -24,6 +24,10 @@
 //! | rows                 | `u64`                 | total rows (map + segments)        |
 //! | map_rows             | `u64`                 | per-row map entries                |
 //! | segments             | `u64`                 | columnar segment count             |
+//! | has_projection       | `u8`                  | v3+: projection recorded ⇒ 1       |
+//! |   proj_seed          | `u64`                 | only if has_projection             |
+//! |   proj_dist          | `u8`                  | 0 normal, 1 uniform, 2 three-point |
+//! |   proj_param         | `f64`                 | three-point s (0 otherwise)        |
 //! | *per map row*        |                       | *id ascending*                     |
 //! |   id                 | `u64`                 |                                    |
 //! |   uside              | `f32[orders·k]`       |                                    |
@@ -35,6 +39,19 @@
 //! |   u panels           | `f32[orders·rows·k]`  | one contiguous panel per order     |
 //! |   v panels           | `f32[orders·rows·k]`  | only if two_sided                  |
 //! |   moments            | `f64[rows·nm]`        | row-major                          |
+//!
+//! The recorded projection (seed + distribution; strategy is already
+//! implied by `two_sided`) is what lets a store restored via
+//! `--load-sketches` sketch **fresh query vectors** consistently with
+//! its stored rows — the paper's out-of-store query model. Files
+//! without it (v1/v2, or a v3 writer given no spec) still load, but
+//! the restored pipeline rejects fresh-vector queries with a clear
+//! error instead of silently mis-sketching.
+//!
+//! ## Format v2 (read-only compatibility)
+//!
+//! v3 without the `has_projection` trailer — the header ends at the
+//! `segments` count.
 //!
 //! ## Format v1 (read-only compatibility)
 //!
@@ -53,11 +70,12 @@ use std::sync::Arc;
 
 use crate::core::marginals::Moments;
 use crate::projection::sketcher::{ColumnarBlock, RowSketch, SketchSet};
+use crate::projection::ProjectionDist;
 
 use super::state::SketchStore;
 
 const MAGIC: &[u8; 4] = b"LPSK";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 /// Hard caps on declared shapes — a corrupt header must error, not
 /// drive a multi-gigabyte allocation.
@@ -65,8 +83,18 @@ const MAX_K: usize = 1 << 24;
 const MAX_ORDERS: usize = 64;
 const MAX_MOMENT_ORDERS: usize = 256;
 
+/// The projection parameters a sketch file can record (v3+): together
+/// with the strategy (implied by `two_sided`) and `k`, everything
+/// needed to re-sketch fresh query vectors bit-identically to the rows
+/// already in the file.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProjectionInfo {
+    pub seed: u64,
+    pub dist: ProjectionDist,
+}
+
 /// Header of a sketch file.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SketchFileHeader {
     pub p: u32,
     pub k: u32,
@@ -79,7 +107,15 @@ pub struct SketchFileHeader {
     pub map_rows: u64,
     /// Columnar segments (0 for v1 files).
     pub segments: u64,
+    /// Projection parameters (None for v1/v2 files, which predate the
+    /// field — fresh-vector queries are disabled on such restores).
+    pub projection: Option<ProjectionInfo>,
 }
+
+/// Distribution tags for the projection trailer.
+const DIST_NORMAL: u8 = 0;
+const DIST_UNIFORM: u8 = 1;
+const DIST_THREE_POINT: u8 = 2;
 
 fn w_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
     w.write_all(&v.to_le_bytes())
@@ -146,15 +182,24 @@ struct Shape {
     two_sided: bool,
 }
 
-/// Save every row of `store` to `path` (format v2: map rows row-wise,
+/// Save every row of `store` to `path` (format v3: map rows row-wise,
 /// columnar segments as contiguous panels). `p` is the distance order
-/// the sketches were built for (recorded for load-time validation).
+/// the sketches were built for (recorded for load-time validation);
+/// `projection` records the projection seed + distribution so the
+/// restored store can sketch fresh query vectors consistently (pass
+/// `None` only when the parameters are genuinely unknown, e.g. when
+/// re-saving a store restored from a pre-v3 file).
 ///
 /// The whole file is written from **one epoch snapshot**: ids, rows,
 /// and segments all come from the same consistent cut, ingest is never
 /// paused for the write, and a concurrent insert can neither tear the
 /// row count nor slip between the header and the body.
-pub fn save(store: &SketchStore, p: usize, path: &Path) -> anyhow::Result<SketchFileHeader> {
+pub fn save(
+    store: &SketchStore,
+    p: usize,
+    projection: Option<ProjectionInfo>,
+    path: &Path,
+) -> anyhow::Result<SketchFileHeader> {
     let snap = store.snapshot();
     let map_ids = snap.map_ids();
     let segments: Vec<_> =
@@ -189,6 +234,7 @@ pub fn save(store: &SketchStore, p: usize, path: &Path) -> anyhow::Result<Sketch
         rows: (map_ids.len() + seg_rows) as u64,
         map_rows: map_ids.len() as u64,
         segments: segments.len() as u64,
+        projection,
     };
     let mut w = BufWriter::new(std::fs::File::create(path)?);
     w.write_all(MAGIC)?;
@@ -201,6 +247,20 @@ pub fn save(store: &SketchStore, p: usize, path: &Path) -> anyhow::Result<Sketch
     w_u64(&mut w, header.rows)?;
     w_u64(&mut w, header.map_rows)?;
     w_u64(&mut w, header.segments)?;
+    match &header.projection {
+        Some(info) => {
+            w.write_all(&[1u8])?;
+            w_u64(&mut w, info.seed)?;
+            let (tag, param) = match info.dist {
+                ProjectionDist::Normal => (DIST_NORMAL, 0.0),
+                ProjectionDist::Uniform => (DIST_UNIFORM, 0.0),
+                ProjectionDist::ThreePoint(s) => (DIST_THREE_POINT, s),
+            };
+            w.write_all(&[tag])?;
+            w.write_all(&param.to_le_bytes())?;
+        }
+        None => w.write_all(&[0u8])?,
+    }
     for id in map_ids {
         let rs = snap.get(id).expect("listed id");
         let row_shape = Shape {
@@ -251,6 +311,39 @@ fn read_header_body(r: &mut impl Read, version: u32) -> anyhow::Result<SketchFil
     r.read_exact(&mut flag)?;
     let rows = r_u64(r)?;
     let (map_rows, segments) = if version >= 2 { (r_u64(r)?, r_u64(r)?) } else { (rows, 0) };
+    // v3 appends the projection trailer; older files simply don't have
+    // it (backward-compatible field append, gated by the version word).
+    let projection = if version >= 3 {
+        let mut has = [0u8; 1];
+        r.read_exact(&mut has)?;
+        match has[0] {
+            0 => None,
+            1 => {
+                let seed = r_u64(r)?;
+                let mut tag = [0u8; 1];
+                r.read_exact(&mut tag)?;
+                let mut param = [0u8; 8];
+                r.read_exact(&mut param)?;
+                let param = f64::from_le_bytes(param);
+                let dist = match tag[0] {
+                    DIST_NORMAL => ProjectionDist::Normal,
+                    DIST_UNIFORM => ProjectionDist::Uniform,
+                    DIST_THREE_POINT => {
+                        anyhow::ensure!(
+                            param.is_finite() && param >= 1.0,
+                            "corrupt three-point parameter {param}"
+                        );
+                        ProjectionDist::ThreePoint(param)
+                    }
+                    t => anyhow::bail!("unknown projection distribution tag {t}"),
+                };
+                Some(ProjectionInfo { seed, dist })
+            }
+            f => anyhow::bail!("corrupt projection flag {f}"),
+        }
+    } else {
+        None
+    };
     let header = SketchFileHeader {
         p,
         k,
@@ -260,6 +353,7 @@ fn read_header_body(r: &mut impl Read, version: u32) -> anyhow::Result<SketchFil
         rows,
         map_rows,
         segments,
+        projection,
     };
     anyhow::ensure!(header.k as usize <= MAX_K, "implausible sketch width {}", header.k);
     anyhow::ensure!(
@@ -443,15 +537,22 @@ mod tests {
         store
     }
 
+    /// The projection the `filled_store` sketcher uses — what a real
+    /// caller records so the restore can sketch fresh vectors.
+    fn proj() -> ProjectionInfo {
+        ProjectionInfo { seed: 5, dist: ProjectionDist::Normal }
+    }
+
     #[test]
     fn roundtrip_basic_strategy() {
         let store = filled_store(Strategy::Basic, 17);
         let path = tmp("basic.lpsk");
-        let saved = save(&store, 4, &path).unwrap();
+        let saved = save(&store, 4, Some(proj()), &path).unwrap();
         assert_eq!(saved.rows, 17);
         assert_eq!(saved.map_rows, 17);
         assert_eq!(saved.segments, 0);
         assert!(!saved.two_sided);
+        assert_eq!(saved.projection, Some(proj()));
         let (loaded, header) = load(&path, 5).unwrap();
         assert_eq!(header, saved);
         assert_eq!(loaded.ids(), store.ids());
@@ -467,7 +568,7 @@ mod tests {
     fn roundtrip_alternative_strategy() {
         let store = filled_store(Strategy::Alternative, 9);
         let path = tmp("alt.lpsk");
-        let saved = save(&store, 4, &path).unwrap();
+        let saved = save(&store, 4, Some(proj()), &path).unwrap();
         assert!(saved.two_sided);
         let (loaded, _) = load(&path, 2).unwrap();
         for id in 0..9u64 {
@@ -499,7 +600,7 @@ mod tests {
             store.insert_block_columnar(10, sk.sketch_block(&refs[..4], 1)); // 10..14
             store.insert_block_columnar(14, sk.sketch_block(&refs[4..], 1)); // 14..17
             let path = tmp(&format!("segments_{strategy:?}.lpsk"));
-            let saved = save(&store, 4, &path).unwrap();
+            let saved = save(&store, 4, Some(proj()), &path).unwrap();
             assert_eq!(saved.rows, 8);
             assert_eq!(saved.map_rows, 1);
             assert_eq!(saved.segments, 2);
@@ -519,7 +620,7 @@ mod tests {
     fn header_probe_without_full_read() {
         let store = filled_store(Strategy::Basic, 4);
         let path = tmp("probe.lpsk");
-        save(&store, 6, &path).unwrap();
+        save(&store, 6, Some(proj()), &path).unwrap();
         let h = read_header(&path).unwrap();
         assert_eq!(h.p, 6);
         assert_eq!(h.rows, 4);
@@ -539,10 +640,104 @@ mod tests {
     fn empty_store_roundtrips() {
         let store = SketchStore::new(2);
         let path = tmp("empty.lpsk");
-        let saved = save(&store, 4, &path).unwrap();
+        let saved = save(&store, 4, None, &path).unwrap();
         assert_eq!(saved.rows, 0);
         let (loaded, _) = load(&path, 2).unwrap();
         assert!(loaded.is_empty());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn projection_trailer_roundtrips_every_distribution() {
+        let store = filled_store(Strategy::Basic, 3);
+        for (name, info) in [
+            ("none", None),
+            ("normal", Some(ProjectionInfo { seed: 42, dist: ProjectionDist::Normal })),
+            ("uniform", Some(ProjectionInfo { seed: 7, dist: ProjectionDist::Uniform })),
+            (
+                "threepoint",
+                Some(ProjectionInfo { seed: u64::MAX, dist: ProjectionDist::ThreePoint(16.0) }),
+            ),
+        ] {
+            let path = tmp(&format!("proj_{name}.lpsk"));
+            let saved = save(&store, 4, info, &path).unwrap();
+            assert_eq!(saved.projection, info);
+            assert_eq!(read_header(&path).unwrap().projection, info);
+            let (loaded, header) = load(&path, 2).unwrap();
+            assert_eq!(header.projection, info);
+            assert_eq!(loaded.ids(), store.ids());
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn legacy_v2_files_load_with_unknown_projection() {
+        // Hand-rolled old-v2 writer (header ends at the segment count;
+        // no projection trailer): such files must keep loading, with
+        // `projection: None` telling the restore that fresh-vector
+        // queries are off the table.
+        let store = filled_store(Strategy::Basic, 5);
+        let ids = store.ids();
+        let probe = store.get(ids[0]).unwrap();
+        let (k, orders, nm) = (probe.uside.k, probe.uside.orders, probe.moments.len());
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(b"LPSK");
+        for v in [2u32, 4, k as u32, orders as u32, nm as u32] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.push(0u8); // one-sided
+        for v in [ids.len() as u64, ids.len() as u64, 0u64] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for id in ids {
+            let rs = store.get(id).unwrap();
+            out.extend_from_slice(&id.to_le_bytes());
+            for x in &rs.uside.data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            for o in 1..=nm {
+                out.extend_from_slice(&rs.moments.get(o).to_le_bytes());
+            }
+        }
+        let path = tmp("legacy_v2.lpsk");
+        std::fs::write(&path, out).unwrap();
+        let header = read_header(&path).unwrap();
+        assert_eq!(header.projection, None);
+        assert_eq!(header.rows, 5);
+        let (loaded, _) = load(&path, 3).unwrap();
+        assert_eq!(loaded.ids(), store.ids());
+        for id in loaded.ids() {
+            assert_eq!(loaded.get(id).unwrap().uside.data, store.get(id).unwrap().uside.data);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_projection_trailer_errors() {
+        let store = filled_store(Strategy::Basic, 2);
+        let path = tmp("proj_attack.lpsk");
+        save(&store, 4, Some(proj()), &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Header layout: magic(4) version(4) p(4) k(4) orders(4) nm(4)
+        // flag(1) rows(8) map_rows(8) segments(8) → has_projection at 49.
+        let attack = tmp("proj_attacked.lpsk");
+        for (off, val, what) in [
+            (49usize, 7u8, "bad projection flag"),
+            (58, 9, "bad distribution tag"),
+        ] {
+            let mut b = bytes.clone();
+            b[off] = val;
+            std::fs::write(&attack, &b).unwrap();
+            assert!(load(&attack, 1).is_err(), "{what} must error");
+            assert!(read_header(&attack).is_err(), "{what} header probe must error");
+        }
+        // A three-point tag with a garbage parameter must error too.
+        let mut b = bytes.clone();
+        b[58] = DIST_THREE_POINT;
+        b[59..67].copy_from_slice(&f64::NAN.to_le_bytes());
+        std::fs::write(&attack, &b).unwrap();
+        assert!(load(&attack, 1).is_err(), "NaN three-point parameter must error");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&attack).ok();
     }
 }

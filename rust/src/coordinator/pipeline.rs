@@ -11,12 +11,25 @@
 //! service) runs on a [`StoreSnapshot`]: an O(segments) capture of the
 //! store's `Arc`-held state, so scans never pin the store locks and
 //! ingest proceeds concurrently — the serving side of the epoch design
-//! in [`super::state`]. The query service
-//! ([`Pipeline::spawn_query_service`]) is a real concurrent layer:
-//! `query_workers` threads drain the [`Batcher`] in turn, each batch
-//! served from a fresh-enough snapshot (re-captured only when ingest
-//! advanced the store epoch), with `snapshot_age` / `queries_in_flight`
-//! gauges observing it.
+//! in [`super::state`].
+//!
+//! ## The unified query surface
+//!
+//! Every query enters as a typed [`Request`] and leaves as a typed
+//! [`Response`] (see [`crate::api`]). [`Pipeline::answer`] is the
+//! direct, single-snapshot dispatch; the query service
+//! ([`Pipeline::spawn_query_service`]) is the batched concurrent layer:
+//! `query_workers` threads drain one [`super::batcher::Batcher`] of
+//! [`crate::api::ApiJob`]s in turn, each drained batch served by
+//! [`Pipeline::serve_api_batch`] from one per-batch epoch snapshot
+//! (re-captured only when ingest advanced the store), with
+//! `snapshot_age` / `queries_in_flight` gauges observing it. Top-k
+//! requests are served from an epoch-cached
+//! [`crate::knn::KnnIndex::from_snapshot`] rebuild — by stored id
+//! (straight from the stored sketch) or by fresh vector (sketched with
+//! the pipeline's projection; rejected with a clear error when the
+//! store was restored from a file that does not record the projection
+//! parameters). All routes produce bitwise-identical estimates.
 //!
 //! Compute backends per block:
 //! * **PJRT** (`use_pjrt`): blocks padded to the artifact's batch B,
@@ -35,17 +48,20 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::api::{ApiHandle, ApiJob, ApiStats, Request, Response, TopKTarget};
 use crate::config::Config;
+use crate::core::arena::SketchArena;
 use crate::core::decompose::Decomposition;
 use crate::core::estimator;
 use crate::core::marginals::Moments;
 use crate::core::mle::{self, Solve};
 use crate::data::RowMatrix;
+use crate::knn::KnnIndex;
 use crate::projection::sketcher::{ColumnarBlock, RowSketch, SketchSet, Sketcher};
 use crate::projection::Strategy;
 use crate::runtime::{ArtifactMeta, Engine, EngineHandle, OpKind, OwnedInput};
 
-use super::batcher::{Batcher, Drained, FlushReason, PairQuery};
+use super::batcher::FlushReason;
 use super::metrics::{Metrics, Snapshot};
 use super::router::Router;
 use super::scheduler::{Block, BlockScheduler};
@@ -74,9 +90,31 @@ pub struct Pipeline {
     metrics: Metrics,
     router: Router,
     next_id: AtomicU64,
+    /// Serving-side KNN index, rebuilt from a store snapshot whenever a
+    /// top-k request observes a newer epoch than the cached build.
+    knn_cache: Mutex<Option<(u64, Arc<ServingIndex>)>>,
+    /// Row width of the first ingested block (0 = nothing ingested,
+    /// e.g. a store restored from a sketch file, which does not record
+    /// d). Fresh-vector queries validate against it when known — a
+    /// client sending a wrong-width vector must get an error, not
+    /// plausible-but-wrong estimates.
+    ingest_d: AtomicU64,
+    /// False only when the store was restored from a sketch file that
+    /// does not record its projection parameters — fresh-vector queries
+    /// (top-k by vector, vector distance) are then rejected with an
+    /// error instead of sketching with the wrong projection and
+    /// silently mis-scoring.
+    projection_known: bool,
     /// PJRT state, present when `cfg.use_pjrt` and the engine started.
     pjrt: Option<PjrtPath>,
     _engine: Option<Engine>,
+}
+
+/// One epoch's serving index: the snapshot-rebuilt [`KnnIndex`] plus
+/// the store id of every index row.
+struct ServingIndex {
+    index: KnnIndex,
+    ids: Vec<u64>,
 }
 
 struct PjrtPath {
@@ -126,6 +164,9 @@ impl Pipeline {
             metrics: Metrics::new(),
             router: Router::new_mod(workers),
             next_id: AtomicU64::new(0),
+            knn_cache: Mutex::new(None),
+            ingest_d: AtomicU64::new(0),
+            projection_known: true,
             pjrt,
             _engine: engine,
             cfg,
@@ -170,6 +211,55 @@ impl Pipeline {
         Ok(pipeline)
     }
 
+    /// [`Pipeline::with_store`] for stores restored from a sketch file:
+    /// `projection_known = false` marks a file that predates the
+    /// recorded-projection header, disabling fresh-vector queries
+    /// (which would otherwise sketch with an unrelated projection and
+    /// return silently wrong estimates). Stored-id queries — pairs,
+    /// top-k by id, all-pairs — are unaffected.
+    pub fn with_store_restored(
+        cfg: Config,
+        store: SketchStore,
+        projection_known: bool,
+    ) -> anyhow::Result<Self> {
+        let mut pipeline = Self::with_store(cfg, store)?;
+        pipeline.projection_known = projection_known;
+        Ok(pipeline)
+    }
+
+    /// Whether this pipeline can sketch fresh query vectors
+    /// consistently with its stored sketches.
+    pub fn projection_known(&self) -> bool {
+        self.projection_known
+    }
+
+    fn ensure_projection_known(&self, what: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.projection_known,
+            "{what} requires the store's projection parameters, but this store was restored \
+             from a sketch file that does not record them (restore with --assume-projection \
+             plus the original --seed/--dist if you know them, or re-ingest and save with \
+             the current version)"
+        );
+        Ok(())
+    }
+
+    /// Reject fresh query vectors whose width cannot match the stored
+    /// sketches: empty always, and any width other than the ingested
+    /// one when this pipeline ingested data itself (restored stores
+    /// don't record d, so only the emptiness check applies there).
+    fn ensure_query_dim(&self, len: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(len > 0, "empty query vector");
+        let d = self.ingest_d.load(Ordering::Relaxed);
+        anyhow::ensure!(
+            d == 0 || len as u64 == d,
+            "query vector has {len} entries but the store was ingested at d={d} — \
+             a mismatched width would be sketched as if zero-padded/truncated and \
+             score silently wrong"
+        );
+        Ok(())
+    }
+
     pub fn config(&self) -> &Config {
         &self.cfg
     }
@@ -200,6 +290,15 @@ impl Pipeline {
     /// Returns ids `base..base+n` in row order.
     pub fn ingest(&self, data: &RowMatrix) -> anyhow::Result<IngestReport> {
         let n = data.n();
+        // First ingest pins the row width fresh-vector queries are
+        // validated against (later ingests with the same pipeline use
+        // the same matrix shape by construction of the CLI/callers).
+        let _ = self.ingest_d.compare_exchange(
+            0,
+            data.d() as u64,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
         let base = self.next_id.fetch_add(n as u64, Ordering::Relaxed);
         let t0 = Instant::now();
         let bytes_before = self.store.bytes();
@@ -515,50 +614,69 @@ impl Pipeline {
         // two always agree on one epoch (and a write-heavy store pays
         // one O(segments) capture, not two).
         let snap = (!self.cfg.use_mle && pairs.len() >= 32).then(|| self.store.snapshot());
-        let big_batch = snap.as_ref().is_some_and(|s| pairs.len() * 4 >= s.len());
-        if big_batch {
-            let snap = snap.expect("gated above");
+        if let Some(snap) = snap {
             let t = Instant::now();
-            // Segment-native fast path: score straight from the panels.
-            let out: Vec<Option<f64>> = match snap.columnar_panels(self.cfg.p) {
-                Some(v) => pairs
-                    .iter()
-                    .map(|&(a, b)| match (v.pos_of(a), v.pos_of(b)) {
-                        (Some(i), Some(j)) => {
-                            Some(estimator::estimate_arena(&self.dec, &v, i, &v, j))
-                        }
-                        _ => None,
-                    })
-                    .collect(),
-                None => {
-                    let arena = snap.arena(self.cfg.p, self.cfg.k);
-                    pairs
-                        .iter()
-                        .map(|&(a, b)| match (arena.pos.get(&a), arena.pos.get(&b)) {
-                            (Some(&i), Some(&j)) => Some(estimator::estimate_arena(
-                                &self.dec, &arena.arena, i, &arena.arena, j,
-                            )),
-                            _ => None,
-                        })
-                        .collect()
+            if let Some(out) = self.pairs_big_batch_on(&snap, pairs) {
+                let served = out.iter().filter(|o| o.is_some()).count() as u64;
+                self.metrics.queries_served.fetch_add(served, Ordering::Relaxed);
+                // query_latency holds per-pair samples; log the batch's
+                // amortized per-pair cost once per served pair (bulk,
+                // O(1)) so count stays consistent with queries_served
+                // and the percentiles remain comparable with the
+                // single-pair path.
+                if served > 0 {
+                    let per_pair_us = (t.elapsed().as_micros() as u64).div_ceil(served).max(1);
+                    self.metrics.query_latency.record_us_many(per_pair_us, served);
                 }
-            };
-            let served = out.iter().filter(|o| o.is_some()).count() as u64;
-            self.metrics.queries_served.fetch_add(served, Ordering::Relaxed);
-            // query_latency holds per-pair samples; log the batch's
-            // amortized per-pair cost once per served pair (bulk, O(1))
-            // so count stays consistent with queries_served and the
-            // percentiles remain comparable with the single-pair path.
-            if served > 0 {
-                let per_pair_us = (t.elapsed().as_micros() as u64).div_ceil(served).max(1);
-                self.metrics.query_latency.record_us_many(per_pair_us, served);
+                return out;
             }
-            return out;
         }
         pairs.iter().map(|&(a, b)| self.estimate_pair(a, b)).collect()
     }
 
-    /// Store-served batch KNN: sketch `queries`, then stream one epoch
+    /// The blocked batch fast path, shared by [`Pipeline::estimate_pairs`]
+    /// and the typed-API service: when the batch is big enough to
+    /// amortize (≥ 1/4 of the view), score the pairs straight from the
+    /// snapshot's columnar panels — or one arena copy when map rows
+    /// exist. `None` when the batch is too small (or MLE is on) and the
+    /// per-pair route should serve instead. Bitwise-identical to the
+    /// per-pair path (pinned by `batched_pairs_match_single_queries`).
+    /// Records no metrics — callers own their accounting.
+    fn pairs_big_batch_on(
+        &self,
+        snap: &StoreSnapshot,
+        pairs: &[(u64, u64)],
+    ) -> Option<Vec<Option<f64>>> {
+        if self.cfg.use_mle || pairs.len() < 32 || pairs.len() * 4 < snap.len() {
+            return None;
+        }
+        Some(match snap.columnar_panels(self.cfg.p) {
+            Some(v) => pairs
+                .iter()
+                .map(|&(a, b)| match (v.pos_of(a), v.pos_of(b)) {
+                    (Some(i), Some(j)) => {
+                        Some(estimator::estimate_arena(&self.dec, &v, i, &v, j))
+                    }
+                    _ => None,
+                })
+                .collect(),
+            None => {
+                let arena = snap.arena(self.cfg.p, self.cfg.k);
+                pairs
+                    .iter()
+                    .map(|&(a, b)| match (arena.pos.get(&a), arena.pos.get(&b)) {
+                        (Some(&i), Some(&j)) => Some(estimator::estimate_arena(
+                            &self.dec, &arena.arena, i, &arena.arena, j,
+                        )),
+                        _ => None,
+                    })
+                    .collect()
+            }
+        })
+    }
+
+    /// Store-served batch KNN for fresh query vectors: sketch
+    /// `queries` with the pipeline's projection, then stream one epoch
     /// snapshot of the store through the fused arena top-k kernel.
     /// Returns per query the `top` nearest stored rows as
     /// `(id, estimated distance)`, ascending. A fully-columnar snapshot
@@ -566,20 +684,65 @@ impl Pipeline {
     /// serves the scan. No store lock is held during the kernel —
     /// ingest runs concurrently and the scan serves the epoch it
     /// captured. Plain estimator only, like all blocked paths (the MLE
-    /// consumes per-row state).
-    pub fn top_k(&self, queries: &[&[f32]], top: usize) -> Vec<Vec<(u64, f64)>> {
+    /// consumes per-row state). Errors when the projection parameters
+    /// are unknown (store restored from a pre-v3 sketch file): a fresh
+    /// vector cannot be sketched consistently then.
+    pub fn top_k(&self, queries: &[&[f32]], top: usize) -> anyhow::Result<Vec<Vec<(u64, f64)>>> {
         if queries.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
+        }
+        self.ensure_projection_known("top-k by fresh vector")?;
+        for q in queries {
+            self.ensure_query_dim(q.len())?;
         }
         let qsk = self.sketcher.sketch_rows(queries);
-        let qarena = crate::core::arena::SketchArena::from_rows(self.cfg.p, self.cfg.k, &qsk);
-        let workers = self.cfg.workers.max(1);
         let snap = self.store.snapshot();
-        let out = match snap.columnar_panels(self.cfg.p) {
+        let out = self.top_k_sketched(&snap, &qsk, top);
+        self.metrics.queries_served.fetch_add(queries.len() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Store-served batch KNN for *stored* rows: each query is a row id
+    /// whose stored sketch ranks the rest of the store — no raw data,
+    /// no re-sketching, so this works even when the projection
+    /// parameters are unknown. Unknown ids answer `None`. Same kernel,
+    /// same snapshot discipline, bitwise-identical scores to
+    /// [`Pipeline::top_k`] on the vector that produced the stored
+    /// sketch.
+    pub fn top_k_ids(&self, ids: &[u64], top: usize) -> Vec<Option<Vec<(u64, f64)>>> {
+        if ids.is_empty() {
+            return Vec::new();
+        }
+        let snap = self.store.snapshot();
+        let rows: Vec<Option<RowSketch>> = ids.iter().map(|&id| snap.get(id)).collect();
+        let present: Vec<bool> = rows.iter().map(|r| r.is_some()).collect();
+        let known: Vec<RowSketch> = rows.into_iter().flatten().collect();
+        if known.is_empty() {
+            return vec![None; ids.len()];
+        }
+        let lists = self.top_k_sketched(&snap, &known, top);
+        self.metrics.queries_served.fetch_add(known.len() as u64, Ordering::Relaxed);
+        let mut it = lists.into_iter();
+        present
+            .into_iter()
+            .map(|p| p.then(|| it.next().expect("one list per known query")))
+            .collect()
+    }
+
+    /// Shared top-k scan: already-sketched queries against one snapshot.
+    fn top_k_sketched(
+        &self,
+        snap: &StoreSnapshot,
+        qsk: &[RowSketch],
+        top: usize,
+    ) -> Vec<Vec<(u64, f64)>> {
+        let qarena = SketchArena::from_rows(self.cfg.p, self.cfg.k, qsk);
+        let workers = self.cfg.workers.max(1);
+        match snap.columnar_panels(self.cfg.p) {
             Some(v) => estimator::top_k_scan_arena(&self.dec, &qarena, &v, top, workers)
                 .into_iter()
                 .map(|lst| lst.into_iter().map(|(i, d)| (v.id_at(i), d)).collect())
-                .collect::<Vec<Vec<(u64, f64)>>>(),
+                .collect(),
             None => {
                 let arena = snap.arena(self.cfg.p, self.cfg.k);
                 estimator::top_k_scan_arena(&self.dec, &qarena, &arena.arena, top, workers)
@@ -587,9 +750,22 @@ impl Pipeline {
                     .map(|lst| lst.into_iter().map(|(i, d)| (arena.ids[i], d)).collect())
                     .collect()
             }
-        };
-        self.metrics.queries_served.fetch_add(queries.len() as u64, Ordering::Relaxed);
-        out
+        }
+    }
+
+    /// Distances from a fresh (never-ingested) vector to the given
+    /// stored ids — the paper's out-of-store query model: the vector is
+    /// sketched once with the pipeline's projection, then scored
+    /// against each stored row's sketch (`None` per unknown id; the
+    /// margin MLE applies when configured). Errors when the projection
+    /// parameters are unknown.
+    pub fn vector_distances(
+        &self,
+        vector: &[f32],
+        ids: &[u64],
+    ) -> anyhow::Result<Vec<Option<f64>>> {
+        let snap = self.store.snapshot();
+        self.serve_vector_distance_on(&snap, vector, ids)
     }
 
     /// All pairwise estimates over the stored ids, ascending (condensed
@@ -778,57 +954,43 @@ impl Pipeline {
     }
 
     /// Spawn the batched query service: `query_workers` threads take
-    /// turns draining the [`Batcher`] (one drainer at a time behind a
-    /// mutex; the lock is released before a batch is *served*, so
-    /// batches execute concurrently across workers). Each batch is
-    /// answered from an epoch snapshot that refreshes automatically
-    /// when ingest advances the store — a quiescent store reuses the
-    /// cached snapshot in O(1), a busy one pays one O(segments)
-    /// capture per batch. The `snapshot_age` gauge records how many
-    /// writes behind the serving snapshot was; `queries_in_flight`
-    /// counts queries currently being answered. The returned handle is
-    /// cloneable; the service stops when every handle is dropped.
-    pub fn spawn_query_service(self: &Arc<Self>) -> QueryHandle {
-        let (tx, rx) = mpsc::channel::<PairQuery<Option<f64>>>();
-        let batcher = Arc::new(Mutex::new(Batcher::new(
-            rx,
-            self.cfg.batch_max,
-            Duration::from_micros(self.cfg.batch_deadline_us),
-        )));
-        for _ in 0..self.cfg.query_workers.max(1) {
-            let pipeline = Arc::clone(self);
-            let batcher = Arc::clone(&batcher);
-            std::thread::spawn(move || loop {
-                let drained = batcher.lock().unwrap().drain();
-                match drained {
-                    Drained::Batch(batch, reason) => {
-                        pipeline.metrics.batches_flushed.fetch_add(1, Ordering::Relaxed);
-                        if reason == FlushReason::Deadline {
-                            pipeline
-                                .metrics
-                                .batch_deadline_flushes
-                                .fetch_add(1, Ordering::Relaxed);
-                        }
-                        pipeline
-                            .metrics
-                            .queries_in_flight
-                            .fetch_add(batch.len() as u64, Ordering::Relaxed);
-                        pipeline.serve_batch(batch);
-                    }
-                    Drained::Closed => break,
-                }
-            });
-        }
-        QueryHandle { tx }
+    /// turns draining one [`crate::coordinator::batcher::Batcher`] of
+    /// typed [`ApiJob`]s (one drainer at a time behind a mutex; the
+    /// lock is released before a batch is *served*, so batches execute
+    /// concurrently across workers). Each batch is answered from an
+    /// epoch snapshot that refreshes automatically when ingest advances
+    /// the store — a quiescent store reuses the cached snapshot in
+    /// O(1), a busy one pays one O(segments) capture per batch. The
+    /// `snapshot_age` gauge records how many writes behind the serving
+    /// snapshot was; `queries_in_flight` counts requests currently
+    /// being answered. The returned handle is cloneable; the service
+    /// stops when every handle is dropped. The same handle backs the
+    /// TCP server ([`crate::api::Server`]), so remote and in-process
+    /// clients share one queue and one snapshot discipline.
+    pub fn spawn_query_service(self: &Arc<Self>) -> ApiHandle {
+        crate::api::service::spawn(Arc::clone(self))
     }
 
-    /// Answer one drained batch from a per-batch snapshot. The
-    /// `queries_in_flight` gauge (incremented by the caller for the
-    /// whole batch) is decremented per query *before* its reply is
+    /// Answer one typed request directly, from one fresh store
+    /// snapshot — the unbatched entry point of the unified API (used by
+    /// tests and benches as the "direct" arm; the service and the wire
+    /// server route through [`Pipeline::serve_api_batch`] instead).
+    pub fn answer(&self, request: Request) -> Response {
+        let snap = self.store.snapshot();
+        self.serve_request_on(&snap, request)
+    }
+
+    /// Answer one drained batch of typed requests from a per-batch
+    /// snapshot. The `queries_in_flight` gauge counts the batch's
+    /// requests and is decremented per request *before* its reply is
     /// sent, so a client that has received every answer observes the
     /// gauge already drained.
-    fn serve_batch(&self, batch: Vec<PairQuery<Option<f64>>>) {
-        let t = Instant::now();
+    pub(crate) fn serve_api_batch(&self, batch: Vec<ApiJob>, reason: FlushReason) {
+        self.metrics.batches_flushed.fetch_add(1, Ordering::Relaxed);
+        if reason == FlushReason::Deadline {
+            self.metrics.batch_deadline_flushes.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.queries_in_flight.fetch_add(batch.len() as u64, Ordering::Relaxed);
         let snap = self.store.snapshot();
         // Staleness gauge: epoch distance from the previous serving
         // snapshot to this one — the writes that landed while the last
@@ -836,23 +998,67 @@ impl Pipeline {
         // current w.r.t. the store, so comparing against the *live*
         // epoch would read ~0 forever).
         let prev = self.metrics.last_serve_epoch.swap(snap.epoch(), Ordering::Relaxed);
-        let age = if prev == 0 { 0 } else { snap.epoch().saturating_sub(prev) };
+        let age = if prev == u64::MAX { 0 } else { snap.epoch().saturating_sub(prev) };
         self.metrics.snapshot_age.store(age, Ordering::Relaxed);
-        let mut served = 0u64;
-        for q in batch {
-            let ans = if self.cfg.use_mle {
-                snap.with_pair(q.a, q.b, |ra, rb| {
-                    mle::estimate_mle(&self.dec, ra, rb, Solve::OneStepNewton)
-                })
-            } else {
-                snap.estimate_pair_plain(&self.dec, q.a, q.b)
-            };
-            if ans.is_some() {
-                served += 1;
-            }
+        for job in batch {
+            let resp = self.serve_request_on(&snap, job.request);
             self.metrics.queries_in_flight.fetch_sub(1, Ordering::Relaxed);
-            let _ = q.reply.send(ans);
+            let _ = job.reply.send(resp);
         }
+    }
+
+    /// The single dispatch point of the unified API: every request
+    /// kind, answered from the given snapshot. Serving-side failures
+    /// become [`Response::Error`] — the connection/channel stays
+    /// healthy.
+    fn serve_request_on(&self, snap: &Arc<StoreSnapshot>, request: Request) -> Response {
+        match request {
+            Request::Ping => {
+                Response::Pong { version: crate::api::wire::WIRE_VERSION as u32 }
+            }
+            Request::Stats => Response::Stats(self.api_stats_on(snap)),
+            Request::PairBatch(pairs) => {
+                Response::PairBatch(self.serve_pairs_on(snap, &pairs))
+            }
+            Request::TopK { target, top } => {
+                match self.serve_top_k_on(snap, target, top as usize) {
+                    Ok(list) => Response::TopK(list),
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Request::VectorDistance { vector, ids } => {
+                match self.serve_vector_distance_on(snap, &vector, &ids) {
+                    Ok(ests) => Response::VectorDistance(ests),
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+        }
+    }
+
+    /// Pair estimates from one snapshot (plain or MLE per config),
+    /// `None` per unknown id — with the per-pair serving metrics the
+    /// pre-API query service recorded. Large plain batches (a remote
+    /// client can legally send millions of pairs in one frame) take
+    /// the same blocked columnar fast path as
+    /// [`Pipeline::estimate_pairs`]; small batches and MLE resolve
+    /// per pair. All routes are bitwise-identical.
+    fn serve_pairs_on(&self, snap: &StoreSnapshot, pairs: &[(u64, u64)]) -> Vec<Option<f64>> {
+        let t = Instant::now();
+        let out: Vec<Option<f64>> = self.pairs_big_batch_on(snap, pairs).unwrap_or_else(|| {
+            pairs
+                .iter()
+                .map(|&(a, b)| {
+                    if self.cfg.use_mle {
+                        snap.with_pair(a, b, |ra, rb| {
+                            mle::estimate_mle(&self.dec, ra, rb, Solve::OneStepNewton)
+                        })
+                    } else {
+                        snap.estimate_pair_plain(&self.dec, a, b)
+                    }
+                })
+                .collect()
+        });
+        let served = out.iter().filter(|o| o.is_some()).count() as u64;
         if served > 0 {
             self.metrics.queries_served.fetch_add(served, Ordering::Relaxed);
             // Amortized per-pair latency, recorded once per served pair
@@ -861,6 +1067,116 @@ impl Pipeline {
             let per_pair_us = (t.elapsed().as_micros() as u64).div_ceil(served).max(1);
             self.metrics.query_latency.record_us_many(per_pair_us, served);
         }
+        out
+    }
+
+    /// Serve one top-k request from the epoch-cached serving index
+    /// ([`KnnIndex::from_snapshot`] — assembled entirely from the
+    /// snapshot's O(nk) sketch state, never from raw data).
+    fn serve_top_k_on(
+        &self,
+        snap: &Arc<StoreSnapshot>,
+        target: TopKTarget,
+        top: usize,
+    ) -> anyhow::Result<Vec<(u64, f64)>> {
+        // Reject doomed fresh-vector requests before paying the O(nk)
+        // index rebuild (and before taking the cache lock at all).
+        if let TopKTarget::Vector(v) = &target {
+            self.ensure_projection_known("top-k by fresh vector")?;
+            self.ensure_query_dim(v.len())?;
+        }
+        let serving = self.serving_index(snap)?;
+        let lists = match target {
+            TopKTarget::StoredId(id) => {
+                let pos = serving
+                    .ids
+                    .binary_search(&id)
+                    .map_err(|_| anyhow::anyhow!("unknown id {id}"))?;
+                let q = serving.index.sketch_at(pos).clone();
+                serving.index.query_sketches(&[q], top)
+            }
+            TopKTarget::Vector(v) => serving.index.query_batch(&[v.as_slice()], top),
+        };
+        self.metrics.queries_served.fetch_add(1, Ordering::Relaxed);
+        Ok(lists
+            .into_iter()
+            .next()
+            .unwrap_or_default()
+            .into_iter()
+            .map(|nb| (serving.ids[nb.index], nb.distance))
+            .collect())
+    }
+
+    fn serve_vector_distance_on(
+        &self,
+        snap: &StoreSnapshot,
+        vector: &[f32],
+        ids: &[u64],
+    ) -> anyhow::Result<Vec<Option<f64>>> {
+        self.ensure_projection_known("fresh-vector distance")?;
+        self.ensure_query_dim(vector.len())?;
+        let t = Instant::now();
+        let qs = self.sketcher.sketch_row(vector);
+        let out: Vec<Option<f64>> = ids
+            .iter()
+            .map(|&id| {
+                snap.get(id).map(|rs| {
+                    if self.cfg.use_mle {
+                        mle::estimate_mle(&self.dec, &qs, &rs, Solve::OneStepNewton)
+                    } else {
+                        estimator::estimate(&self.dec, &qs, &rs)
+                    }
+                })
+            })
+            .collect();
+        let served = out.iter().filter(|o| o.is_some()).count() as u64;
+        if served > 0 {
+            self.metrics.queries_served.fetch_add(served, Ordering::Relaxed);
+            let per_us = (t.elapsed().as_micros() as u64).div_ceil(served).max(1);
+            self.metrics.query_latency.record_us_many(per_us, served);
+        }
+        Ok(out)
+    }
+
+    /// Metrics counters + store shape from one snapshot (the `Stats`
+    /// reply body).
+    fn api_stats_on(&self, snap: &StoreSnapshot) -> ApiStats {
+        let m = self.metrics.snapshot();
+        ApiStats {
+            rows: snap.len() as u64,
+            map_rows: snap.map_ids().len() as u64,
+            segments: snap.segment_count() as u64,
+            epoch: snap.epoch(),
+            rows_ingested: m.rows_ingested,
+            queries_served: m.queries_served,
+            batches_flushed: m.batches_flushed,
+            compactions: m.compactions,
+            queries_in_flight: m.queries_in_flight,
+            snapshot_age: m.snapshot_age,
+            p: self.cfg.p as u32,
+            k: self.cfg.k as u32,
+            two_sided: matches!(self.cfg.strategy, Strategy::Alternative),
+            projection_known: self.projection_known,
+        }
+    }
+
+    /// The serving index for `snap`'s epoch: reused while the store is
+    /// quiescent, rebuilt from the snapshot (one materialization pass
+    /// over the O(nk) sketch state) the first time a top-k request
+    /// observes a newer epoch. The cache lock is held across a rebuild,
+    /// so racing top-k requests build each epoch's index exactly once.
+    fn serving_index(&self, snap: &Arc<StoreSnapshot>) -> anyhow::Result<Arc<ServingIndex>> {
+        let mut cache = self.knn_cache.lock().unwrap();
+        if let Some((epoch, serving)) = cache.as_ref() {
+            if *epoch == snap.epoch() {
+                return Ok(Arc::clone(serving));
+            }
+        }
+        let (index, ids) =
+            KnnIndex::from_snapshot(snap, self.cfg.projection_spec(), self.cfg.p)?;
+        let built = Arc::new(ServingIndex { index, ids });
+        *cache = Some((snap.epoch(), Arc::clone(&built)));
+        Ok(built)
     }
 
     /// Current store snapshot — the serving-side entry point for
@@ -906,23 +1222,6 @@ fn assemble_columnar(
         }
     }
     ColumnarBlock::from_parts(orders, k, nm, rows, u_panels, v_panels, moments)
-}
-
-/// Client handle to the batched query service.
-#[derive(Clone)]
-pub struct QueryHandle {
-    tx: mpsc::Sender<PairQuery<Option<f64>>>,
-}
-
-impl QueryHandle {
-    /// Blocking pair query through the batcher.
-    pub fn query(&self, a: u64, b: u64) -> anyhow::Result<Option<f64>> {
-        let (reply, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(PairQuery { a, b, reply })
-            .map_err(|_| anyhow::anyhow!("query service stopped"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("query service dropped reply"))
-    }
 }
 
 #[cfg(test)]
@@ -1228,7 +1527,7 @@ mod tests {
         let p = Pipeline::new(c.clone()).unwrap();
         p.ingest(&data).unwrap();
         let queries: Vec<&[f32]> = (0..4).map(|i| data.row(i * 11)).collect();
-        let batch = p.top_k(&queries, 5);
+        let batch = p.top_k(&queries, 5).unwrap();
         assert_eq!(batch.len(), 4);
         for (qi, lst) in batch.iter().enumerate() {
             assert_eq!(lst.len(), 5);
@@ -1238,7 +1537,7 @@ mod tests {
             }
             assert!(lst.iter().all(|&(id, _)| p.store().contains(id)));
             // Batch equals the single-query call.
-            assert_eq!(&batch[qi], &p.top_k(&queries[qi..qi + 1], 5)[0]);
+            assert_eq!(&batch[qi], &p.top_k(&queries[qi..qi + 1], 5).unwrap()[0]);
         }
         // Worker count never changes results (same data, same seed ⇒
         // bitwise-identical store on both pipelines).
@@ -1246,13 +1545,127 @@ mod tests {
         cw.workers = 1;
         let pw = Pipeline::new(cw).unwrap();
         pw.ingest(&data).unwrap();
-        assert_eq!(pw.top_k(&queries, 5), batch);
+        assert_eq!(pw.top_k(&queries, 5).unwrap(), batch);
         // Empty query batch and empty store are fine.
-        assert!(p.top_k(&[], 5).is_empty());
+        assert!(p.top_k(&[], 5).unwrap().is_empty());
         let empty = Pipeline::new(c.clone()).unwrap();
-        let lists = empty.top_k(&queries[..1], 5);
+        let lists = empty.top_k(&queries[..1], 5).unwrap();
         assert_eq!(lists.len(), 1);
         assert!(lists[0].is_empty());
+    }
+
+    #[test]
+    fn top_k_ids_matches_top_k_on_the_ingested_vector() {
+        // A stored id's top-k (served from its stored sketch) must rank
+        // bitwise-identically to top-k on the raw vector that produced
+        // that sketch — the two entry points share the kernel and the
+        // query sketch.
+        let mut c = cfg(40, 64);
+        c.k = 32;
+        let data = gen::generate(DataDist::Gaussian, c.n, c.d, 81);
+        let p = Pipeline::new(c).unwrap();
+        p.ingest(&data).unwrap();
+        let ids = [0u64, 7, 39];
+        let by_id = p.top_k_ids(&ids, 6);
+        let queries: Vec<&[f32]> = ids.iter().map(|&id| data.row(id as usize)).collect();
+        let by_vec = p.top_k(&queries, 6).unwrap();
+        for (i, lst) in by_id.iter().enumerate() {
+            assert_eq!(lst.as_ref().unwrap(), &by_vec[i], "id {}", ids[i]);
+        }
+        // Unknown ids answer None without disturbing known ones.
+        let mixed = p.top_k_ids(&[7, 9999], 6);
+        assert_eq!(mixed[0].as_ref().unwrap(), &by_vec[1]);
+        assert!(mixed[1].is_none());
+        assert!(p.top_k_ids(&[], 6).is_empty());
+        assert_eq!(p.top_k_ids(&[12345], 6), vec![None]);
+    }
+
+    #[test]
+    fn typed_api_answers_match_direct_calls() {
+        use crate::api::{Request, Response, TopKTarget};
+        let mut c = cfg(32, 64);
+        c.k = 32;
+        let data = gen::generate(DataDist::Uniform01, c.n, c.d, 91);
+        let p = Pipeline::new(c).unwrap();
+        p.ingest(&data).unwrap();
+        let pairs: Vec<(u64, u64)> = (0..32u64).map(|i| (i, (i + 3) % 32)).collect();
+        match p.answer(Request::PairBatch(pairs.clone())) {
+            Response::PairBatch(got) => assert_eq!(got, p.estimate_pairs(&pairs)),
+            other => panic!("unexpected {other:?}"),
+        }
+        match p.answer(Request::TopK { target: TopKTarget::StoredId(5), top: 4 }) {
+            Response::TopK(got) => {
+                assert_eq!(got, p.top_k_ids(&[5], 4)[0].clone().unwrap())
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let q = data.row(9);
+        match p.answer(Request::TopK { target: TopKTarget::Vector(q.to_vec()), top: 4 }) {
+            Response::TopK(got) => assert_eq!(got, p.top_k(&[q], 4).unwrap()[0]),
+            other => panic!("unexpected {other:?}"),
+        }
+        let ids: Vec<u64> = (0..32).chain([999]).collect();
+        match p.answer(Request::VectorDistance { vector: q.to_vec(), ids: ids.clone() }) {
+            Response::VectorDistance(got) => {
+                assert_eq!(got, p.vector_distances(q, &ids).unwrap())
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match p.answer(Request::Stats) {
+            Response::Stats(s) => {
+                assert_eq!(s.rows, 32);
+                assert!(s.projection_known);
+                assert_eq!(s.p, 4);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(p.answer(Request::Ping), Response::Pong { .. }));
+        // Unknown id on top-k is a typed error, not a panic.
+        match p.answer(Request::TopK { target: TopKTarget::StoredId(777), top: 2 }) {
+            Response::Error(e) => assert!(e.contains("unknown id"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // A fresh vector of the wrong width is rejected, not sketched
+        // as if zero-padded and silently mis-scored.
+        match p.answer(Request::VectorDistance { vector: vec![1.0; 7], ids: vec![0] }) {
+            Response::Error(e) => assert!(e.contains("ingested at d="), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(p.vector_distances(&[1.0; 7], &[0]).is_err());
+        assert!(p.top_k(&[&[1.0; 7][..]], 3).is_err());
+        match p.answer(Request::TopK { target: TopKTarget::Vector(vec![]), top: 2 }) {
+            Response::Error(e) => assert!(e.contains("empty query vector"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_projection_rejects_fresh_vector_queries_only() {
+        use crate::api::{Request, Response, TopKTarget};
+        let c = cfg(20, 64);
+        let data = gen::generate(DataDist::Uniform01, c.n, c.d, 95);
+        let origin = Pipeline::new(c.clone()).unwrap();
+        origin.ingest(&data).unwrap();
+        let (copy, _) = crate::coordinator::rebalance::rebalance(origin.store(), 3);
+        let restored = Pipeline::with_store_restored(c, copy, false).unwrap();
+        assert!(!restored.projection_known());
+        // Stored-id queries still work, bitwise.
+        assert_eq!(restored.estimate_pair(0, 5), origin.estimate_pair(0, 5));
+        assert_eq!(restored.top_k_ids(&[3], 4), origin.top_k_ids(&[3], 4));
+        // Fresh-vector queries fail loudly.
+        let q = data.row(2);
+        let err = restored.top_k(&[q], 4).unwrap_err().to_string();
+        assert!(err.contains("projection parameters"), "{err}");
+        assert!(restored.vector_distances(q, &[0, 1]).is_err());
+        match restored.answer(Request::TopK { target: TopKTarget::Vector(q.to_vec()), top: 3 }) {
+            Response::Error(e) => assert!(e.contains("projection parameters"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // Stats advertises the limitation.
+        match restored.answer(Request::Stats) {
+            Response::Stats(s) => assert!(!s.projection_known),
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]

@@ -139,24 +139,41 @@ impl KnnIndex {
         self.rows.iter().map(|r| r.sketch_bytes()).sum::<usize>() + self.arena.bytes()
     }
 
+    /// The stored sketch of index row `i` (`Neighbor::index` space) —
+    /// the query payload for by-stored-id top-k, where the row's own
+    /// sketch ranks the rest of the index with no raw data and no
+    /// re-sketching.
+    pub fn sketch_at(&self, i: usize) -> &RowSketch {
+        &self.rows[i]
+    }
+
     /// Phase-1 query: top `m` candidates by estimated distance.
     pub fn query(&self, q: &[f32], m: usize) -> Vec<Neighbor> {
         self.query_batch(&[q], m).pop().unwrap_or_default()
     }
 
-    /// Batched phase-1 queries: sketch the whole batch at once, then run
-    /// the fused arena top-k scan sharded across `self.workers` threads.
-    /// Equivalent to calling [`KnnIndex::query_per_row`] per query
-    /// (bitwise-identical scores), but tiled and parallel.
+    /// Batched phase-1 queries: sketch the whole batch at once, then
+    /// run [`KnnIndex::query_sketches`].
     pub fn query_batch(&self, qs: &[&[f32]], m: usize) -> Vec<Vec<Neighbor>> {
         if qs.is_empty() {
             return Vec::new();
         }
-        let qsk = self.sketcher.sketch_rows(qs);
+        self.query_sketches(&self.sketcher.sketch_rows(qs), m)
+    }
+
+    /// Batched phase-1 queries from *already-sketched* rows (a stored
+    /// row's sketch, a sketch that arrived over the wire, …): the fused
+    /// arena top-k scan sharded across `self.workers` threads.
+    /// Equivalent to calling [`KnnIndex::query_per_row`] per query
+    /// (bitwise-identical scores), but tiled and parallel.
+    pub fn query_sketches(&self, qsk: &[RowSketch], m: usize) -> Vec<Vec<Neighbor>> {
+        if qsk.is_empty() {
+            return Vec::new();
+        }
         if self.use_mle {
             return qsk.iter().map(|qrow| self.scored_per_row(qrow, m)).collect();
         }
-        let qarena = SketchArena::from_rows(self.dec.p(), self.sketcher.spec.k, &qsk);
+        let qarena = SketchArena::from_rows(self.dec.p(), self.sketcher.spec.k, qsk);
         estimator::top_k_scan_arena(&self.dec, &qarena, &self.arena, m, self.workers.max(1))
             .into_iter()
             .map(|lst| {
@@ -370,6 +387,24 @@ mod tests {
     }
 
     #[test]
+    fn query_sketches_matches_vector_queries() {
+        // Pre-sketched queries (the by-stored-id serving path) must
+        // rank bitwise-identically to sketching the raw vector — the
+        // stored row's own sketch IS the query payload.
+        let data = gen::generate(DataDist::Gaussian, 50, 48, 23);
+        let idx = KnnIndex::build(&data, spec(16), 4).unwrap();
+        let q5 = idx.sketch_at(5).clone();
+        let q11 = idx.sketch_at(11).clone();
+        let by_sketch = idx.query_sketches(&[q5, q11], 6);
+        assert_eq!(by_sketch[0], idx.query(data.row(5), 6));
+        assert_eq!(by_sketch[1], idx.query(data.row(11), 6));
+        // Self is its own nearest neighbor by stored sketch (distance
+        // exactly the estimator's self-distance).
+        assert_eq!(by_sketch[0][0].index, 5);
+        assert!(idx.query_sketches(&[], 6).is_empty());
+    }
+
+    #[test]
     fn snapshot_rebuild_matches_store_served_top_k() {
         // An index rebuilt from a pipeline's store snapshot must rank
         // exactly like the pipeline's own store-served top-k — same
@@ -388,7 +423,7 @@ mod tests {
         let (idx, ids) = KnnIndex::from_snapshot(&snap, c.projection_spec(), c.p).unwrap();
         assert_eq!(idx.len(), 60);
         let queries: Vec<&[f32]> = (0..3).map(|i| data.row(i * 19)).collect();
-        let want = pipeline.top_k(&queries, 8);
+        let want = pipeline.top_k(&queries, 8).unwrap();
         // The store keeps ingesting; the rebuilt index still serves the
         // captured epoch.
         pipeline.ingest(&data).unwrap();

@@ -14,11 +14,14 @@
 //! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`.
 //! * [`coordinator`] — streaming ingest pipeline, batching, routing,
 //!   sketch store, metrics.
+//! * [`api`] — the unified typed query surface: request/response
+//!   protocol, wire codec, batched service, TCP server + client.
 //! * [`data`], [`baselines`], [`knn`] — substrates: generators/IO/corpus,
 //!   exact & stable-projection & sampling baselines, sketch-based k-NN.
 //! * [`experiments`] — the E1..E11 reproduction harness (one per paper
 //!   claim; see DESIGN.md §4).
 
+pub mod api;
 pub mod baselines;
 pub mod bench_support;
 pub mod config;

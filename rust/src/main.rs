@@ -1,16 +1,30 @@
 //! `lpsketch` — CLI for the sketch-based even-p l_p distance pipeline.
 //!
+//! Every query-shaped subcommand routes through the **unified typed
+//! API** ([`lpsketch::api`]): requests are `PairBatch` / `TopK` (by
+//! stored id or fresh vector) / `VectorDistance` / `Stats` / `Ping`,
+//! answered by the batched query service from per-batch epoch
+//! snapshots — in-process or over TCP, with bitwise-identical
+//! estimates either way.
+//!
 //! Subcommands:
 //!   ingest   — stream a matrix (file or synthetic) into sketches, report
-//!              the scan/storage accounting.
-//!   pairs    — ingest then export all-pairs estimated distances (CSV to
-//!              stdout or --out file).
-//!   query    — ingest then answer pair queries from the command line.
-//!   serve    — concurrent-serving demo: answer pair batches through the
-//!              query service *while* a writer streams more rows in
-//!              (epoch snapshots keep readers and writers out of each
-//!              other's way).
-//!   knn      — ingest then run k-NN queries with optional re-ranking.
+//!              the scan/storage accounting (`--save-sketches` persists
+//!              the O(nk) state, projection parameters included).
+//!   pairs    — ingest (or `--load-sketches`) then export all-pairs
+//!              estimated distances (CSV to stdout or --out file).
+//!   query    — ingest then answer pair queries through the typed API.
+//!   serve    — the serving surface. Without `--listen`: the concurrent
+//!              stress demo (client threads drive pair batches through
+//!              the query service *while* a writer streams more rows
+//!              in). With `--listen <addr>`: a real TCP server speaking
+//!              the wire protocol (see README), populated from a data
+//!              source or `--load-sketches`.
+//!   client   — drive a remote `serve --listen` server: `ping`,
+//!              `stats`, `query a b [a b ...]`, `knn <id> <m>`.
+//!   knn      — ingest then run k-NN through the typed API (top-k by
+//!              stored id, served from the snapshot-rebuilt index; no
+//!              raw-data index rebuild), with optional exact re-ranking.
 //!   exp      — run a paper experiment (e1..e11) or `all`.
 //!   platform — print the PJRT platform and artifact inventory.
 //!
@@ -20,25 +34,30 @@
 use std::io::Write as _;
 use std::sync::Arc;
 
+use lpsketch::api::{self, Request, Response, TopKTarget};
 use lpsketch::baselines::exact;
 use lpsketch::config::Config;
-use lpsketch::coordinator::Pipeline;
+use lpsketch::coordinator::{persist, Pipeline};
 use lpsketch::data::{corpus, gen, io, RowMatrix};
 use lpsketch::experiments;
-use lpsketch::knn::KnnIndex;
+use lpsketch::knn::{self, Neighbor};
 use lpsketch::runtime::Engine;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: lpsketch [--key value ...] <ingest|pairs|query|serve|knn|exp|platform> [args]\n\
+        "usage: lpsketch [--key value ...] <ingest|pairs|query|serve|client|knn|exp|platform> [args]\n\
          \n\
          data source: --data <file.bin|file.csv> | synthetic --data-dist --n --d | --data corpus\n\
          persistence: ingest --save-sketches <file.lpsk> (O(nk) state; the matrix can be discarded)\n\
-                      pairs --load-sketches <file.lpsk> (serve straight from saved sketches)\n\
+                      pairs|serve --load-sketches <file.lpsk> (serve straight from saved sketches;\n\
+                      pre-v3 files: --assume-projection + the original --seed/--dist re-enables\n\
+                      fresh-vector queries)\n\
          common keys: --p --k --strategy --dist --seed --workers --block-rows --mle --pjrt\n\
          exp:         lpsketch exp <e1..e11|all> [--fast]\n\
          query:       lpsketch query <a> <b> [more pairs...]\n\
-         serve:       lpsketch serve [clients] (default 4; --query-workers N sizes the service)\n\
+         serve:       lpsketch serve [clients] (in-process stress demo; --query-workers N)\n\
+                      lpsketch serve --listen <addr> [--load-sketches f.lpsk] (TCP server)\n\
+         client:      lpsketch client --connect <addr> <ping|stats|query a b ...|knn <id> <m>>\n\
          knn:         lpsketch knn <row-id> <m> [--rerank N]"
     );
     std::process::exit(2);
@@ -52,28 +71,104 @@ fn load_data(cfg: &Config, source: Option<&str>) -> anyhow::Result<RowMatrix> {
     }
 }
 
+/// Restore a pipeline from a sketch file: shape and strategy from the
+/// header, projection parameters too when the file records them (v3+).
+/// Without recorded parameters the restore still serves every
+/// stored-id query, but fresh-vector queries are disabled (loudly) —
+/// unless `--assume-projection` asserts that the configured
+/// `--seed`/`--dist` are the originals the file was sketched with.
+fn restore_pipeline(
+    mut cfg: Config,
+    path: &std::path::Path,
+    assume_projection: bool,
+) -> anyhow::Result<Pipeline> {
+    let header = persist::read_header(path)?;
+    cfg.p = header.p as usize;
+    cfg.k = header.k as usize;
+    cfg.d = cfg.d.max(cfg.k);
+    // The header records sidedness; restore the matching strategy so
+    // query sketching pairs up correctly.
+    cfg.strategy = if header.two_sided {
+        lpsketch::projection::Strategy::Alternative
+    } else {
+        lpsketch::projection::Strategy::Basic
+    };
+    if let Some(info) = header.projection {
+        cfg.seed = info.seed;
+        cfg.dist = info.dist;
+    }
+    // Pre-v3 files don't record the projection; --assume-projection
+    // lets the operator vouch for the configured --seed/--dist (which
+    // were left untouched above) instead of losing fresh-vector
+    // queries.
+    let known = header.projection.is_some() || assume_projection;
+    let (store, _) = persist::load(path, cfg.workers)?;
+    cfg.n = store.len();
+    println!(
+        "config: {} (restored {} rows, {} segments{})",
+        cfg.describe(),
+        store.len(),
+        store.segment_count(),
+        if known {
+            ""
+        } else {
+            "; projection unknown — fresh-vector queries disabled \
+             (--assume-projection + the original --seed/--dist overrides)"
+        }
+    );
+    Pipeline::with_store_restored(cfg, store, known)
+}
+
 fn main() -> anyhow::Result<()> {
     let mut cfg = Config::default();
     let mut raw: Vec<String> = std::env::args().skip(1).collect();
-    // Pull out --data/--out/--fast/--rerank before Config sees them.
+    // Pull out the non-Config flags before Config sees them.
     let mut data_source: Option<String> = None;
     let mut out_path: Option<String> = None;
     let mut save_sketches: Option<String> = None;
     let mut load_sketches: Option<String> = None;
+    let mut listen: Option<String> = None;
+    let mut connect: Option<String> = None;
+    let mut assume_projection = false;
     let mut fast = false;
     let mut rerank: usize = 0;
     let mut args = Vec::new();
     let mut it = raw.drain(..);
+    let mut flag_err: Option<String> = None;
     while let Some(a) = it.next() {
         match a.as_str() {
             "--data" => data_source = it.next(),
             "--out" => out_path = it.next(),
             "--save-sketches" => save_sketches = it.next(),
             "--load-sketches" => load_sketches = it.next(),
+            "--listen" => listen = it.next(),
+            "--connect" => connect = it.next(),
+            "--assume-projection" => assume_projection = true,
             "--fast" => fast = true,
-            "--rerank" => rerank = it.next().and_then(|v| v.parse().ok()).unwrap_or(0),
+            "--rerank" => {
+                // A bad value must error loudly, like every config key
+                // (`--rerank abc` used to silently mean "no rerank").
+                match it.next() {
+                    Some(v) => match v.parse() {
+                        Ok(n) => rerank = n,
+                        Err(_) => {
+                            flag_err = Some(format!("--rerank must be a number, got {v:?}"));
+                            break;
+                        }
+                    },
+                    None => {
+                        flag_err = Some("--rerank needs a value".to_string());
+                        break;
+                    }
+                }
+            }
             _ => args.push(a),
         }
+    }
+    drop(it);
+    if let Some(e) = flag_err {
+        eprintln!("error: {e}");
+        usage();
     }
     let positional = match cfg.apply_args(args) {
         Ok(p) => p,
@@ -125,9 +220,11 @@ fn main() -> anyhow::Result<()> {
             );
             println!("metrics: {}", pipeline.metrics().render());
             if let Some(path) = &save_sketches {
-                let header = lpsketch::coordinator::persist::save(
+                let cfg = pipeline.config();
+                let header = persist::save(
                     pipeline.store(),
-                    pipeline.config().p,
+                    cfg.p,
+                    Some(persist::ProjectionInfo { seed: cfg.seed, dist: cfg.dist }),
                     std::path::Path::new(path),
                 )?;
                 println!("saved {} sketch rows to {path} (p={} k={})", header.rows, header.p, header.k);
@@ -139,28 +236,7 @@ fn main() -> anyhow::Result<()> {
             // paper's storage claim as an operation).
             let pipeline = match &load_sketches {
                 Some(path) => {
-                    let path = std::path::Path::new(path);
-                    let header = lpsketch::coordinator::persist::read_header(path)?;
-                    cfg.p = header.p as usize;
-                    cfg.k = header.k as usize;
-                    cfg.d = cfg.d.max(cfg.k);
-                    // The header records sidedness; restore the matching
-                    // strategy so query sketching pairs up correctly.
-                    cfg.strategy = if header.two_sided {
-                        lpsketch::projection::Strategy::Alternative
-                    } else {
-                        lpsketch::projection::Strategy::Basic
-                    };
-                    let (store, _) =
-                        lpsketch::coordinator::persist::load(path, cfg.workers)?;
-                    cfg.n = store.len();
-                    println!(
-                        "config: {} (restored {} rows, {} segments)",
-                        cfg.describe(),
-                        store.len(),
-                        store.segment_count()
-                    );
-                    Pipeline::with_store(cfg, store)?
+                    restore_pipeline(cfg, std::path::Path::new(path), assume_projection)?
                 }
                 None => {
                     let data = load_data(&cfg, data_source.as_deref())?;
@@ -195,23 +271,30 @@ fn main() -> anyhow::Result<()> {
             eprintln!("wrote {} pair estimates", est.len());
         }
         "query" => {
-            let pairs: Vec<u64> = positional[1..]
+            let ids: Vec<u64> = positional[1..]
                 .iter()
                 .map(|s| s.parse().map_err(|_| anyhow::anyhow!("bad id {s:?}")))
                 .collect::<anyhow::Result<_>>()?;
             anyhow::ensure!(
-                !pairs.is_empty() && pairs.len() % 2 == 0,
+                !ids.is_empty() && ids.len() % 2 == 0,
                 "query needs an even number of row ids"
             );
+            let pairs: Vec<(u64, u64)> = ids.chunks(2).map(|c| (c[0], c[1])).collect();
             let data = load_data(&cfg, data_source.as_deref())?;
             cfg.d = data.d();
             cfg.n = data.n();
             let pipeline = Arc::new(Pipeline::new(cfg)?);
             pipeline.ingest(&data)?;
+            // One typed request through the batched service — the same
+            // surface a remote client hits over TCP.
             let service = pipeline.spawn_query_service();
-            for pair in pairs.chunks(2) {
-                let (a, b) = (pair[0], pair[1]);
-                match service.query(a, b)? {
+            let ests = match service.call(Request::PairBatch(pairs.clone()))? {
+                Response::PairBatch(ests) => ests,
+                Response::Error(e) => anyhow::bail!("service error: {e}"),
+                other => anyhow::bail!("unexpected response: {other:?}"),
+            };
+            for (&(a, b), est) in pairs.iter().zip(&ests) {
+                match est {
                     Some(est) => {
                         let exact = exact::distance_f32(
                             data.row(a as usize),
@@ -228,13 +311,41 @@ fn main() -> anyhow::Result<()> {
             }
             println!("metrics: {}", pipeline.metrics().render());
         }
+        "serve" if listen.is_some() => {
+            // Real server mode: populate the store (ingest a data
+            // source, or restore a sketch file — the paper's model of
+            // serving from O(nk) state alone), then speak the wire
+            // protocol until killed.
+            let pipeline = Arc::new(match &load_sketches {
+                Some(path) => {
+                    restore_pipeline(cfg, std::path::Path::new(path), assume_projection)?
+                }
+                None => {
+                    let data = load_data(&cfg, data_source.as_deref())?;
+                    cfg.d = data.d();
+                    cfg.n = data.n();
+                    println!("config: {}", cfg.describe());
+                    let pipeline = Pipeline::new(cfg)?;
+                    pipeline.ingest(&data)?;
+                    pipeline
+                }
+            });
+            let service = pipeline.spawn_query_service();
+            let server = api::Server::bind(listen.as_deref().expect("guarded"), service)?;
+            println!("listening on {}", server.local_addr()?);
+            // Parent processes (tests, orchestrators) parse the line
+            // above to learn the bound port — get it out before the
+            // blocking accept loop.
+            std::io::stdout().flush()?;
+            server.run()?;
+        }
         "serve" => {
-            // Ingest-during-serve demo: populate the store, start the
-            // query service, then answer pair batches from `clients`
-            // threads while a writer concurrently streams the same
-            // matrix in again (fresh ids). Snapshot serving means the
-            // writer never waits on a scan and every answer comes from
-            // one consistent epoch.
+            // Ingest-during-serve stress demo: populate the store,
+            // start the query service, then answer pair batches from
+            // `clients` threads while a writer concurrently streams the
+            // same matrix in again (fresh ids). Snapshot serving means
+            // the writer never waits on a scan and every answer comes
+            // from one consistent epoch.
             let clients: usize = positional
                 .get(1)
                 .map(|s| s.parse())
@@ -245,7 +356,7 @@ fn main() -> anyhow::Result<()> {
             let data = load_data(&cfg, data_source.as_deref())?;
             cfg.d = data.d();
             cfg.n = data.n();
-            println!("config: {} query_workers={}", cfg.describe(), cfg.query_workers);
+            println!("config: {}", cfg.describe());
             let pipeline = Arc::new(Pipeline::new(cfg)?);
             pipeline.ingest(&data)?;
             let service = pipeline.spawn_query_service();
@@ -289,22 +400,115 @@ fn main() -> anyhow::Result<()> {
             );
             println!("metrics: {}", pipeline.metrics().render());
         }
+        "client" => {
+            let addr = connect
+                .ok_or_else(|| anyhow::anyhow!("client needs --connect <addr>"))?;
+            let mut client = api::Client::connect(addr.as_str())?;
+            let action = positional.get(1).map(|s| s.as_str()).unwrap_or("ping");
+            match action {
+                "ping" => println!("pong (protocol v{})", client.ping()?),
+                "stats" => {
+                    let s = client.stats()?;
+                    println!(
+                        "rows={} map_rows={} segments={} epoch={} p={} k={} two_sided={} \
+                         projection_known={}",
+                        s.rows, s.map_rows, s.segments, s.epoch, s.p, s.k, s.two_sided,
+                        s.projection_known,
+                    );
+                    println!(
+                        "served={} ingested={} batches={} compactions={} in_flight={} \
+                         snapshot_age={}",
+                        s.queries_served,
+                        s.rows_ingested,
+                        s.batches_flushed,
+                        s.compactions,
+                        s.queries_in_flight,
+                        s.snapshot_age,
+                    );
+                }
+                "query" => {
+                    let ids: Vec<u64> = positional[2..]
+                        .iter()
+                        .map(|s| s.parse().map_err(|_| anyhow::anyhow!("bad id {s:?}")))
+                        .collect::<anyhow::Result<_>>()?;
+                    anyhow::ensure!(
+                        !ids.is_empty() && ids.len() % 2 == 0,
+                        "client query needs an even number of row ids"
+                    );
+                    let pairs: Vec<(u64, u64)> = ids.chunks(2).map(|c| (c[0], c[1])).collect();
+                    for (&(a, b), est) in pairs.iter().zip(client.pairs(&pairs)?.iter()) {
+                        match est {
+                            Some(est) => println!("d({a},{b}): estimate={est:.6e}"),
+                            None => println!("d({a},{b}): unknown id"),
+                        }
+                    }
+                }
+                "knn" => {
+                    anyhow::ensure!(positional.len() >= 4, "client knn needs <id> <m>");
+                    let id: u64 = positional[2].parse()?;
+                    let m: u32 = positional[3].parse()?;
+                    let list = client.top_k_id(id, m)?;
+                    println!("top-{m} for stored row {id}:");
+                    for (nid, d) in list {
+                        println!("  row {nid:>6}  d̂={d:.6e}");
+                    }
+                }
+                other => {
+                    eprintln!("unknown client action {other:?}");
+                    usage();
+                }
+            }
+        }
         "knn" => {
             anyhow::ensure!(positional.len() >= 3, "knn needs <row-id> <m>");
-            let qid: usize = positional[1].parse()?;
+            let qid: u64 = positional[1].parse()?;
             let m: usize = positional[2].parse()?;
             let data = load_data(&cfg, data_source.as_deref())?;
-            let index = KnnIndex::build(&data, cfg.projection_spec(), cfg.p)?;
-            let q = data.row(qid).to_vec();
-            let got = if rerank > 0 {
-                index.query_rerank(&data, &q, m, rerank)
-            } else {
-                index.query(&q, m)
+            cfg.d = data.d();
+            cfg.n = data.n();
+            let pipeline = Arc::new(Pipeline::new(cfg)?);
+            pipeline.ingest(&data)?;
+            let p = pipeline.config().p;
+            // Top-k through the typed API: the stored row's sketch is
+            // the query, served from the snapshot-rebuilt index — the
+            // raw matrix is only consulted for exact re-ranking and the
+            // recall report below.
+            let service = pipeline.spawn_query_service();
+            let fetch = m.max(rerank) as u32;
+            let target = TopKTarget::StoredId(qid);
+            let cands = match service.call(Request::TopK { target, top: fetch })? {
+                Response::TopK(cands) => cands,
+                Response::Error(e) => anyhow::bail!("service error: {e}"),
+                other => anyhow::bail!("unexpected response: {other:?}"),
             };
-            let truth = lpsketch::knn::exact_knn(&data, &q, m, cfg.p);
+            let got: Vec<Neighbor> = if rerank > 0 {
+                // Exact re-rank of the sketch candidates (two-phase
+                // search; the candidate list came from the API).
+                let q = data.row(qid as usize);
+                let mut scored: Vec<Neighbor> = cands
+                    .iter()
+                    .map(|&(id, _)| Neighbor {
+                        index: id as usize,
+                        distance: exact::distance_f32(q, data.row(id as usize), p),
+                        exact: true,
+                    })
+                    .collect();
+                scored.sort_by(|a, b| {
+                    a.distance.total_cmp(&b.distance).then(a.index.cmp(&b.index))
+                });
+                scored.truncate(m);
+                scored
+            } else {
+                cands
+                    .iter()
+                    .take(m)
+                    .map(|&(id, distance)| Neighbor { index: id as usize, distance, exact: false })
+                    .collect()
+            };
+            let truth = knn::exact_knn(&data, data.row(qid as usize), m, p);
             println!(
                 "top-{m} for row {qid} (recall {:.2}):",
-                lpsketch::knn::recall(&got, &truth)
+                knn::recall(&got, &truth)
             );
             for nb in got {
                 println!(

@@ -159,3 +159,176 @@ fn platform_lists_artifacts_when_built() {
     assert!(stdout.contains("platform:"), "{stdout}");
     assert!(stdout.contains("sketch_p4"), "{stdout}");
 }
+
+#[test]
+fn rerank_bad_value_errors_loudly() {
+    // `--rerank abc` used to parse as "no rerank" via .ok().unwrap_or(0);
+    // bad values must error like every config key.
+    let out = bin()
+        .args(["--n", "32", "--d", "64", "--k", "16", "knn", "1", "3", "--rerank", "abc"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--rerank"), "{stderr}");
+    // A missing value errors too.
+    let out = bin().args(["knn", "1", "3", "--rerank"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn api_loopback_matches_direct_pipeline_calls_under_concurrent_ingest() {
+    // The unified-API acceptance: every request kind answered over a
+    // TCP loopback (and through the in-process service) must be
+    // bitwise-identical to direct Pipeline calls — pair batches while a
+    // writer ingests concurrently (estimates between pre-ingested rows
+    // are write-invariant), the rest on the quiesced store.
+    use std::sync::Arc;
+
+    let mut cfg = lpsketch::config::Config::default();
+    cfg.n = 48;
+    cfg.d = 64;
+    cfg.k = 32;
+    cfg.block_rows = 16;
+    cfg.workers = 2;
+    let data = lpsketch::data::gen::generate(lpsketch::data::DataDist::Gaussian, 48, 64, 7);
+    let pipeline = Arc::new(lpsketch::coordinator::Pipeline::new(cfg).unwrap());
+    pipeline.ingest(&data).unwrap();
+
+    let pairs: Vec<(u64, u64)> = (0..48u64).map(|i| (i, (i * 5 + 1) % 48)).collect();
+    let pairs_direct = pipeline.estimate_pairs(&pairs);
+
+    let service = pipeline.spawn_query_service();
+    let guard = lpsketch::api::Server::bind("127.0.0.1:0", service.clone())
+        .unwrap()
+        .spawn()
+        .unwrap();
+    let addr = guard.addr();
+
+    std::thread::scope(|s| {
+        let writer = {
+            let pipeline = Arc::clone(&pipeline);
+            let data = &data;
+            s.spawn(move || {
+                for _ in 0..2 {
+                    pipeline.ingest(data).unwrap();
+                }
+            })
+        };
+        // Remote client and in-process handle race the writer; answers
+        // for pre-ingested ids must stay bitwise-stable throughout.
+        let mut client = lpsketch::api::Client::connect(addr).unwrap();
+        for _ in 0..20 {
+            assert_eq!(client.pairs(&pairs).unwrap(), pairs_direct, "TCP loopback diverged");
+            match service.call(lpsketch::api::Request::PairBatch(pairs.clone())).unwrap() {
+                lpsketch::api::Response::PairBatch(got) => {
+                    assert_eq!(got, pairs_direct, "in-process service diverged")
+                }
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+        writer.join().unwrap();
+    });
+    assert_eq!(pipeline.rows(), 3 * 48);
+
+    // Quiesced: the remaining request kinds, bitwise vs direct calls.
+    let mut client = lpsketch::api::Client::connect(addr).unwrap();
+    assert_eq!(client.pairs(&pairs).unwrap(), pipeline.estimate_pairs(&pairs));
+    let by_id_direct = pipeline.top_k_ids(&[7], 6);
+    assert_eq!(client.top_k_id(7, 6).unwrap(), by_id_direct[0].clone().unwrap());
+    let q = data.row(11);
+    assert_eq!(
+        client.top_k_vector(q, 6).unwrap(),
+        pipeline.top_k(&[q], 6).unwrap()[0]
+    );
+    let ids: Vec<u64> = (0..48).chain([9999]).collect();
+    assert_eq!(
+        client.vector_distances(q, &ids).unwrap(),
+        pipeline.vector_distances(q, &ids).unwrap()
+    );
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.rows, 3 * 48);
+    assert!(stats.projection_known);
+    assert_eq!(client.ping().unwrap(), 1);
+    // Unknown-id top-k is a typed error over the wire, not a hangup.
+    let err = client.top_k_id(424242, 3).unwrap_err().to_string();
+    assert!(err.contains("unknown id"), "{err}");
+    // The connection survives the error response.
+    assert_eq!(client.pairs(&pairs[..2]).unwrap(), pipeline.estimate_pairs(&pairs[..2]));
+    // Metrics drained: no queries left in flight once all replies landed.
+    assert_eq!(pipeline.metrics().queries_in_flight, 0);
+    guard.stop();
+}
+
+#[test]
+fn serve_listen_speaks_the_wire_protocol_to_the_client_subcommand() {
+    // End-to-end over two processes: `serve --listen` prints its bound
+    // address, the `client` subcommand drives it remotely, and a typed
+    // api::Client gets answers bitwise-identical to a local pipeline
+    // built from the same deterministic config + data.
+    use std::io::BufRead;
+
+    let mut child = bin()
+        .args(["--n", "32", "--d", "64", "--k", "16", "serve", "--listen", "127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut addr = String::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap() == 0 {
+            let _ = child.kill();
+            panic!("server exited before printing its address");
+        }
+        if let Some(rest) = line.trim().strip_prefix("listening on ") {
+            addr = rest.to_string();
+            break;
+        }
+    }
+
+    // CLI client round-trips.
+    let out = bin().args(["client", "--connect", &addr, "ping"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("pong (protocol v1)"));
+    let out = bin().args(["client", "--connect", &addr, "stats"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("rows=32"), "{stdout}");
+    let out = bin()
+        .args(["client", "--connect", &addr, "query", "0", "1", "2", "3"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("d(0,1): estimate="), "{stdout}");
+    assert!(stdout.contains("d(2,3): estimate="), "{stdout}");
+    let out = bin()
+        .args(["client", "--connect", &addr, "knn", "3", "4"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("top-4 for stored row 3"));
+
+    // Typed client vs a local pipeline on the identical deterministic
+    // workload: bitwise equality across the process boundary.
+    let mut cfg = lpsketch::config::Config::default();
+    cfg.n = 32;
+    cfg.d = 64;
+    cfg.k = 16;
+    let data = lpsketch::data::gen::generate(cfg.data_dist, cfg.n, cfg.d, cfg.seed);
+    let local = lpsketch::coordinator::Pipeline::new(cfg).unwrap();
+    local.ingest(&data).unwrap();
+    let mut client = lpsketch::api::Client::connect(addr.as_str()).unwrap();
+    let pairs: Vec<(u64, u64)> = (0..32u64).map(|i| (i, (i + 9) % 32)).collect();
+    assert_eq!(client.pairs(&pairs).unwrap(), local.estimate_pairs(&pairs));
+    assert_eq!(
+        client.top_k_id(5, 4).unwrap(),
+        local.top_k_ids(&[5], 4)[0].clone().unwrap()
+    );
+
+    let _ = child.kill();
+    let _ = child.wait();
+}

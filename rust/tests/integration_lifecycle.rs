@@ -69,20 +69,20 @@ fn compaction_and_segment_native_queries_match_per_row_reference() {
             let before = (
                 native.estimate_pairs(&pairs),
                 native.all_pairs_condensed(),
-                native.top_k(&qrefs, 7),
+                native.top_k(&qrefs, 7).unwrap(),
             );
             // Compact (merge everything adjacent), then re-query.
             native.store().compact_segments(1 << 20, 1 << 22);
             let after = (
                 native.estimate_pairs(&pairs),
                 native.all_pairs_condensed(),
-                native.top_k(&qrefs, 7),
+                native.top_k(&qrefs, 7).unwrap(),
             );
             assert_eq!(before, after, "compaction changed an estimate");
             let mirrored = (
                 mirror.estimate_pairs(&pairs),
                 mirror.all_pairs_condensed(),
-                mirror.top_k(&qrefs, 7),
+                mirror.top_k(&qrefs, 7).unwrap(),
             );
             assert_eq!(before, mirrored, "segment-native diverged from per-row mirror");
             // Snapshot-served view vs the pre-refactor lock-pinned
@@ -113,7 +113,7 @@ fn persist_v2_round_trip_preserves_layout_and_estimates() {
         let pop = testkit::store::random_store_pop(g, 5);
         let store = pop.build(3);
         let path = tmp(&format!("roundtrip_{}.lpsk", g.case));
-        let saved = persist::save(&store, pop.p, &path).unwrap();
+        let saved = persist::save(&store, pop.p, None, &path).unwrap();
         assert_eq!(saved.rows as usize, pop.total_rows());
         assert_eq!(saved.map_rows as usize, pop.map_rows.len());
         assert_eq!(saved.segments as usize, pop.blocks.len());
@@ -151,15 +151,19 @@ fn corrupt_and_truncated_files_error_never_panic() {
     let pop = testkit::store::random_store_pop(&mut g, 4);
     let store = pop.build(2);
     let path = tmp("attack.lpsk");
-    persist::save(&store, pop.p, &path).unwrap();
+    let proj = persist::ProjectionInfo {
+        seed: 11,
+        dist: lpsketch::projection::ProjectionDist::Normal,
+    };
+    persist::save(&store, pop.p, Some(proj), &path).unwrap();
     let bytes = std::fs::read(&path).unwrap();
     std::fs::remove_file(&path).ok();
 
     let attack = tmp("attacked.lpsk");
     // Truncations: every prefix length across the header plus strides
     // through the body.
-    let mut cuts: Vec<usize> = (0..49.min(bytes.len())).collect();
-    cuts.extend((49..bytes.len()).step_by(37));
+    let mut cuts: Vec<usize> = (0..67.min(bytes.len())).collect();
+    cuts.extend((67..bytes.len()).step_by(37));
     for cut in cuts {
         std::fs::write(&attack, &bytes[..cut]).unwrap();
         assert!(persist::load(&attack, 1).is_err(), "truncation at {cut} must error");
@@ -200,7 +204,7 @@ fn corrupt_and_truncated_files_error_never_panic() {
             .find(|p| p.map_rows.len() >= 2)
             .expect("a population with >= 2 map rows");
         let s2 = p2.build(2);
-        persist::save(&s2, p2.p, &attack).unwrap();
+        persist::save(&s2, p2.p, Some(proj), &attack).unwrap();
         let mut b = std::fs::read(&attack).unwrap();
         let sides = if matches!(p2.strategy, lpsketch::projection::Strategy::Alternative) {
             2
@@ -209,7 +213,7 @@ fn corrupt_and_truncated_files_error_never_panic() {
         };
         let row_bytes = 8 + (p2.p - 1) * p2.k * 4 * sides + 2 * (p2.p - 1) * 8;
         // Overwrite the second row's id with the first's.
-        let (id0_off, id1_off) = (49usize, 49 + row_bytes);
+        let (id0_off, id1_off) = (67usize, 67 + row_bytes);
         let first_id = b[id0_off..id0_off + 8].to_vec();
         b[id1_off..id1_off + 8].copy_from_slice(&first_id);
         std::fs::write(&attack, &b).unwrap();
@@ -334,7 +338,13 @@ fn save_load_compact_query_cycle_from_gemm_ingest() {
     let reference = origin.all_pairs_condensed_per_row();
 
     let path = tmp("cycle.lpsk");
-    persist::save(origin.store(), c.p, &path).unwrap();
+    persist::save(
+        origin.store(),
+        c.p,
+        Some(persist::ProjectionInfo { seed: c.seed, dist: c.dist }),
+        &path,
+    )
+    .unwrap();
     let (loaded, header) = persist::load(&path, c.workers).unwrap();
     std::fs::remove_file(&path).ok();
     assert_eq!(header.segments as usize, origin.store().segment_count());
@@ -361,7 +371,7 @@ fn save_load_compact_query_cycle_from_gemm_ingest() {
         assert_eq!(*got, origin.estimate_pair(a, b), "pair ({a},{b})");
     }
     let queries: Vec<&[f32]> = (0..3).map(|i| data.row(i * 17)).collect();
-    assert_eq!(restored.top_k(&queries, 6), origin.top_k(&queries, 6));
+    assert_eq!(restored.top_k(&queries, 6).unwrap(), origin.top_k(&queries, 6).unwrap());
 }
 
 /// (ids, pair estimates, condensed all-pairs, top-k lists) of one scan.
@@ -485,4 +495,80 @@ fn writers_are_never_blocked_behind_a_scan() {
         tx_done.send(()).unwrap();
     });
     assert_eq!(store.len(), n_before + spare.rows());
+}
+
+#[test]
+fn restored_store_answers_fresh_vector_queries_like_the_origin() {
+    // Satellite pin for the recorded projection: a store restored from
+    // a v3 sketch file (seed + distribution in the header) must sketch
+    // never-ingested query vectors bit-identically to the original
+    // pipeline — top-k by fresh vector and vector distances included.
+    // A file without the recorded projection must refuse those queries
+    // instead of answering them wrong.
+    let mut c = Config::default();
+    c.n = 48;
+    c.d = 80;
+    c.k = 16;
+    c.block_rows = 16;
+    c.workers = 2;
+    c.seed = 1234;
+    c.dist = lpsketch::projection::ProjectionDist::ThreePoint(3.0);
+    let data = gen::generate(DataDist::Gaussian, c.n, c.d, 55);
+    let origin = Pipeline::new(c.clone()).unwrap();
+    origin.ingest(&data).unwrap();
+    let path = tmp("fresh_vectors.lpsk");
+    persist::save(
+        origin.store(),
+        c.p,
+        Some(persist::ProjectionInfo { seed: c.seed, dist: c.dist }),
+        &path,
+    )
+    .unwrap();
+    let header = persist::read_header(&path).unwrap();
+    let info = header.projection.expect("v3 files record the projection");
+    assert_eq!(info.seed, c.seed);
+    assert_eq!(info.dist, c.dist);
+    // Restore the way the CLI does: shape + projection from the header.
+    let mut rc = Config::default();
+    rc.p = header.p as usize;
+    rc.k = header.k as usize;
+    rc.d = rc.d.max(rc.k);
+    rc.workers = 2;
+    rc.seed = info.seed;
+    rc.dist = info.dist;
+    let (store, _) = persist::load(&path, rc.workers).unwrap();
+    rc.n = store.len();
+    let restored = Pipeline::with_store_restored(rc, store, true).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(restored.projection_known());
+    // Fresh (never-ingested) query vectors: the stable-projection
+    // workload. Bitwise equality with the origin pipeline.
+    let queries: Vec<Vec<f32>> = (0..3)
+        .map(|q| (0..80).map(|t| ((q * 31 + t) as f32 * 0.13).sin()).collect())
+        .collect();
+    let qrefs: Vec<&[f32]> = queries.iter().map(|v| v.as_slice()).collect();
+    assert_eq!(restored.top_k(&qrefs, 6).unwrap(), origin.top_k(&qrefs, 6).unwrap());
+    let ids: Vec<u64> = (0..48).collect();
+    assert_eq!(
+        restored.vector_distances(&queries[0], &ids).unwrap(),
+        origin.vector_distances(&queries[0], &ids).unwrap()
+    );
+    // The same store restored as projection-unknown refuses, loudly.
+    let (store2, _) = {
+        let path2 = tmp("fresh_vectors2.lpsk");
+        persist::save(origin.store(), c.p, None, &path2).unwrap();
+        assert_eq!(persist::read_header(&path2).unwrap().projection, None);
+        let out = persist::load(&path2, 2).unwrap();
+        std::fs::remove_file(&path2).ok();
+        out
+    };
+    let mut rc2 = c.clone();
+    rc2.n = store2.len();
+    let blind = Pipeline::with_store_restored(rc2, store2, false).unwrap();
+    let err = blind.top_k(&qrefs, 6).unwrap_err().to_string();
+    assert!(err.contains("projection parameters"), "{err}");
+    assert!(blind.vector_distances(&queries[0], &ids).is_err());
+    // Stored-id queries are unaffected by the missing projection.
+    assert_eq!(blind.top_k_ids(&[5], 6), origin.top_k_ids(&[5], 6));
+    assert_eq!(blind.estimate_pairs(&[(1, 2)]), origin.estimate_pairs(&[(1, 2)]));
 }
