@@ -1,0 +1,480 @@
+//! Lexical preprocessing for pallas-lint.
+//!
+//! [`strip`] produces a copy of a Rust source file with comments,
+//! string literals, and char literals blanked to spaces — **same byte
+//! length, newlines preserved** — so every byte offset and line number
+//! in the stripped text maps 1:1 onto the original file. Rule matching
+//! then runs over the stripped text and can never fire on `unwrap()`
+//! inside a doc comment or an error message.
+//!
+//! Handled Rust lexical forms: line comments, nested block comments,
+//! plain / escaped strings, byte strings, raw (byte) strings with any
+//! `#` count, char and byte-char literals, and the char-literal vs
+//! lifetime (`'a`) ambiguity. Raw identifiers (`r#fn`) pass through as
+//! code. Known simplification: a multi-byte char literal (`'→'`) is
+//! left as code — it cannot contain a rule token, so this is harmless.
+//!
+//! Allow pragmas are extracted from line comments during the same scan:
+//!
+//! ```text
+//! // pallas-lint: allow(<rule>) -- <reason>
+//! ```
+//!
+//! The reason clause is mandatory; a pragma without one is itself
+//! reported by the engine. A pragma suppresses matching findings on its
+//! own line or on the next non-blank code line.
+
+/// One `// pallas-lint: allow(..)` comment found during stripping.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// Rule name inside `allow(..)`; `None` when the pragma is
+    /// syntactically malformed.
+    pub rule: Option<String>,
+    /// Text after `--`; `None` when the mandatory reason is missing.
+    pub reason: Option<String>,
+}
+
+/// Result of [`strip`]: blank-stripped source plus extracted pragmas.
+#[derive(Debug)]
+pub struct Stripped {
+    /// Same byte length as the input; comments/strings/chars are
+    /// spaces, newlines are preserved.
+    pub code: String,
+    pub pragmas: Vec<Pragma>,
+}
+
+const PRAGMA_MARKER: &str = "pallas-lint:";
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+fn blank(out: &mut [u8], from: usize, to: usize) {
+    for c in out.iter_mut().take(to).skip(from) {
+        if *c != b'\n' {
+            *c = b' ';
+        }
+    }
+}
+
+/// Strip comments, strings, and char literals from `src`, extracting
+/// pragmas along the way. Output is byte-length-identical to the input.
+pub fn strip(src: &str) -> Stripped {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut pragmas = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            let mut j = i + 2;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            // Doc comments (`///`, `//!`) never carry pragmas — they
+            // *describe* the syntax (as this module's docs do).
+            let doc = matches!(b.get(i + 2), Some(b'/') | Some(b'!'));
+            if !doc {
+                if let Some(p) = parse_pragma(&src[start..j], line) {
+                    pragmas.push(p);
+                }
+            }
+            blank(&mut out, start, j);
+            i = j;
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            blank(&mut out, start, j);
+            i = j;
+            continue;
+        }
+        if c == b'"' {
+            let j = skip_string(b, i, &mut line);
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        let fresh = i == 0 || !is_ident_byte(b[i - 1]);
+        if c == b'r' && fresh {
+            if let Some(j) = skip_raw_string(b, i + 1, &mut line) {
+                blank(&mut out, i, j);
+                i = j;
+                continue;
+            }
+        }
+        if c == b'b' && fresh && i + 1 < n {
+            if b[i + 1] == b'"' {
+                let j = skip_string(b, i + 1, &mut line);
+                blank(&mut out, i, j);
+                i = j;
+                continue;
+            }
+            if b[i + 1] == b'r' {
+                if let Some(j) = skip_raw_string(b, i + 2, &mut line) {
+                    blank(&mut out, i, j);
+                    i = j;
+                    continue;
+                }
+            }
+            if b[i + 1] == b'\'' {
+                let j = skip_char(b, i + 1);
+                blank(&mut out, i, j);
+                i = j;
+                continue;
+            }
+        }
+        if c == b'\'' && is_char_literal(b, i) {
+            let j = skip_char(b, i);
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    // Blanking only ever touches non-newline bytes inside literal /
+    // comment spans, so the output stays valid UTF-8: multi-byte
+    // sequences are replaced whole, never split.
+    let code = String::from_utf8(out).unwrap_or_else(|e| {
+        String::from_utf8_lossy(e.as_bytes()).into_owned()
+    });
+    Stripped { code, pragmas }
+}
+
+/// `i` points at the opening quote; returns the index one past the
+/// closing quote (or end of input for an unterminated string).
+fn skip_string(b: &[u8], i: usize, line: &mut usize) -> usize {
+    let n = b.len();
+    let mut j = i + 1;
+    while j < n {
+        match b[j] {
+            // An escape pair may hide a line-continuation newline —
+            // count it, or every later line number drifts.
+            b'\\' => {
+                if b.get(j + 1) == Some(&b'\n') {
+                    *line += 1;
+                }
+                j += 2;
+            }
+            b'"' => return j + 1,
+            b'\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// `j` points just past the `r` (or `br`) prefix. Returns the index one
+/// past the closing delimiter, or `None` if this is not a raw string
+/// (e.g. a raw identifier like `r#fn`).
+fn skip_raw_string(b: &[u8], j: usize, line: &mut usize) -> Option<usize> {
+    let n = b.len();
+    let mut hashes = 0usize;
+    let mut k = j;
+    while k < n && b[k] == b'#' {
+        hashes += 1;
+        k += 1;
+    }
+    if k >= n || b[k] != b'"' {
+        return None;
+    }
+    k += 1;
+    while k < n {
+        if b[k] == b'\n' {
+            *line += 1;
+        } else if b[k] == b'"' {
+            let close = &b[k + 1..];
+            if close.len() >= hashes && close[..hashes].iter().all(|&c| c == b'#') {
+                return Some(k + 1 + hashes);
+            }
+        }
+        k += 1;
+    }
+    Some(n)
+}
+
+/// `i` points at a `'` in code position: char literal or lifetime?
+fn is_char_literal(b: &[u8], i: usize) -> bool {
+    let n = b.len();
+    if i + 1 >= n {
+        return false;
+    }
+    if b[i + 1] == b'\\' {
+        return true; // '\n', '\'', '\u{..}' — always a literal
+    }
+    // 'x' is a literal; 'x anything-else (lifetime, loop label) is not.
+    b[i + 1] != b'\'' && i + 2 < n && b[i + 2] == b'\''
+}
+
+/// `i` points at the opening quote of a (validated) char literal.
+fn skip_char(b: &[u8], i: usize) -> usize {
+    let n = b.len();
+    let mut j = i + 1;
+    if j < n && b[j] == b'\\' {
+        j += 2;
+    } else {
+        j += 1;
+    }
+    while j < n && b[j] != b'\'' && j - i < 12 {
+        j += 1; // escapes like '\u{1F600}' span several bytes
+    }
+    (j + 1).min(n)
+}
+
+/// Parse one line comment as a pragma. `None` when the comment does not
+/// mention the pragma marker at all.
+fn parse_pragma(comment: &str, line: usize) -> Option<Pragma> {
+    let at = comment.find(PRAGMA_MARKER)?;
+    let rest = comment[at + PRAGMA_MARKER.len()..].trim();
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return Some(Pragma { line, rule: None, reason: None });
+    };
+    let Some(close) = body.find(')') else {
+        return Some(Pragma { line, rule: None, reason: None });
+    };
+    let rule = body[..close].trim().to_string();
+    let rule = (!rule.is_empty()).then_some(rule);
+    let tail = body[close + 1..].trim();
+    let reason = tail
+        .strip_prefix("--")
+        .map(str::trim)
+        .filter(|r| !r.is_empty())
+        .map(str::to_string);
+    Some(Pragma { line, rule, reason })
+}
+
+/// 1-based inclusive line ranges of `#[cfg(test)]` items (their whole
+/// brace-delimited bodies) in **stripped** code. Rules skip these
+/// lines: tests unwrap freely by design.
+pub fn test_spans(code: &str) -> Vec<(usize, usize)> {
+    let b = code.as_bytes();
+    let n = b.len();
+    let mut spans = Vec::new();
+    let mut search = 0usize;
+    while let Some(rel) = code[search..].find("#[cfg(test)]") {
+        let attr = search + rel;
+        let mut j = attr + "#[cfg(test)]".len();
+        // Skip whitespace and any further attributes, then find the
+        // item's opening brace (a `;` first means a bodyless item).
+        loop {
+            while j < n && (b[j] as char).is_whitespace() {
+                j += 1;
+            }
+            if j < n && b[j] == b'#' {
+                while j < n && b[j] != b']' {
+                    j += 1;
+                }
+                j += 1;
+                continue;
+            }
+            break;
+        }
+        let mut open = None;
+        let mut k = j;
+        while k < n {
+            match b[k] {
+                b'{' => {
+                    open = Some(k);
+                    break;
+                }
+                b';' => break,
+                _ => k += 1,
+            }
+        }
+        if let Some(open) = open {
+            let mut depth = 0isize;
+            let mut end = open;
+            while end < n {
+                match b[end] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                end += 1;
+            }
+            spans.push((line_of(code, attr), line_of(code, end.min(n - 1))));
+            search = end.min(n - 1) + 1;
+        } else {
+            search = j.max(attr + 1);
+        }
+        if search >= n {
+            break;
+        }
+    }
+    spans
+}
+
+/// 1-based line number of byte offset `at`.
+pub fn line_of(code: &str, at: usize) -> usize {
+    code.as_bytes()[..at.min(code.len())]
+        .iter()
+        .filter(|&&c| c == b'\n')
+        .count()
+        + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked_to_same_length() {
+        let src = r#"let x = "unwrap() in a string"; // unwrap() in a comment
+let y = 1; /* block unwrap() */ let z = 2;
+"#;
+        let s = strip(src);
+        assert_eq!(s.code.len(), src.len());
+        assert!(!s.code.contains("unwrap"), "{}", s.code);
+        assert!(s.code.contains("let x ="));
+        assert!(s.code.contains("let z = 2;"));
+        // Newlines survive so line numbers still map.
+        assert_eq!(s.code.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* outer /* inner unwrap() */ still comment */ b";
+        let s = strip(src);
+        assert!(!s.code.contains("unwrap"));
+        assert!(s.code.starts_with('a'));
+        assert!(s.code.ends_with('b'));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let src = r####"let a = r#"raw "quoted" unwrap()"#; let b = "esc \" unwrap()"; let c = br##"bytes unwrap()"##;"####;
+        let s = strip(src);
+        assert!(!s.code.contains("unwrap"), "{}", s.code);
+        assert!(s.code.contains("let a ="));
+        assert!(s.code.contains("let b ="));
+        assert!(s.code.contains("let c ="));
+    }
+
+    #[test]
+    fn raw_identifier_is_not_a_string() {
+        let src = "fn r#type() { r#match.unwrap() }";
+        let s = strip(src);
+        assert!(s.code.contains("unwrap"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let c = '\\''; let d = 'x'; 'outer: loop { break 'outer; } }";
+        let s = strip(src);
+        assert_eq!(s.code.len(), src.len());
+        assert!(s.code.contains("'a>"), "lifetime kept: {}", s.code);
+        assert!(s.code.contains("'outer: loop"), "label kept: {}", s.code);
+        assert!(!s.code.contains("'x'"), "char blanked: {}", s.code);
+    }
+
+    #[test]
+    fn pragma_with_reason_parses() {
+        let src = "x(); // pallas-lint: allow(serving-no-panic) -- checked two lines up\n";
+        let s = strip(src);
+        assert_eq!(
+            s.pragmas,
+            vec![Pragma {
+                line: 1,
+                rule: Some("serving-no-panic".into()),
+                reason: Some("checked two lines up".into()),
+            }]
+        );
+    }
+
+    #[test]
+    fn pragma_without_reason_has_none() {
+        let src = "// pallas-lint: allow(len-before-alloc)\n// pallas-lint: allow(x) --   \n";
+        let s = strip(src);
+        assert_eq!(s.pragmas.len(), 2);
+        assert!(s.pragmas.iter().all(|p| p.reason.is_none()));
+        assert_eq!(s.pragmas[0].rule.as_deref(), Some("len-before-alloc"));
+        assert_eq!(s.pragmas[1].line, 2);
+    }
+
+    #[test]
+    fn malformed_pragma_is_surfaced_not_dropped() {
+        let src = "// pallas-lint: allo(typo)\n";
+        let s = strip(src);
+        assert_eq!(s.pragmas.len(), 1);
+        assert!(s.pragmas[0].rule.is_none());
+    }
+
+    #[test]
+    fn doc_comments_never_carry_pragmas() {
+        // Rule docs quote pragma syntax in `///` blocks; only plain
+        // `//` comments may carry live pragmas.
+        let src = "/// pallas-lint: allow(serving-no-panic) -- quoted in docs\n//! pallas-lint: allo(typo)\n// pallas-lint: allow(pragma) -- the real one\n";
+        let s = strip(src);
+        assert_eq!(s.pragmas.len(), 1);
+        assert_eq!(s.pragmas[0].line, 3);
+        assert_eq!(s.pragmas[0].rule.as_deref(), Some("pragma"));
+    }
+
+    #[test]
+    fn line_continuation_escape_keeps_line_numbers_exact() {
+        // A `\` at end of a string line escapes the newline; the lexer
+        // must still count that line or every later number drifts.
+        let src = "let s = \"one \\\n    two\";\nx(); // pallas-lint: allow(serving-no-panic) -- after the continuation\n";
+        let s = strip(src);
+        assert_eq!(s.pragmas.len(), 1);
+        assert_eq!(s.pragmas[0].line, 3);
+    }
+
+    #[test]
+    fn ordinary_comments_are_not_pragmas() {
+        let src = "// just a note about allow(foo)\n";
+        assert!(strip(src).pragmas.is_empty());
+    }
+
+    #[test]
+    fn test_mod_span_covers_body() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let s = strip(src);
+        let spans = test_spans(&s.code);
+        assert_eq!(spans.len(), 1);
+        let (a, b) = spans[0];
+        assert!(a <= 2 && b >= 5, "span {a}..{b}");
+        assert!(b < 6, "span must not swallow code after the mod");
+    }
+
+    #[test]
+    fn cfg_test_on_bodyless_item_yields_no_span() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn live() {}\n";
+        let s = strip(src);
+        assert!(test_spans(&s.code).is_empty());
+    }
+}

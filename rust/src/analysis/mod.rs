@@ -1,0 +1,349 @@
+//! pallas-lint: in-repo static analysis enforcing the crate's serving
+//! conventions.
+//!
+//! PRs 1–5 built a concurrent serving system whose correctness rests
+//! on hand-maintained disciplines — panic-free serving paths,
+//! "validate declared counts before any allocation" in the wire and
+//! persist codecs, and the epoch/COW lock order of the snapshot store.
+//! This module machine-checks them: a [`lexer`] that strips comments,
+//! strings, and char literals (byte-length-preserving, so offsets map
+//! to lines), and a [`rules`] engine with module-scoped rule sets and
+//! an inline allow-pragma syntax:
+//!
+//! ```text
+//! // pallas-lint: allow(serving-no-panic) -- length checked two lines up
+//! ```
+//!
+//! The reason clause after `--` is mandatory; stale or malformed
+//! pragmas are themselves findings. Run it as `lpsketch lint` or via
+//! the `lint_gate` integration test, both of which walk `rust/src/`
+//! and fail on any un-pragma'd violation. Rule inventory and scoping
+//! live in [`rules`]; the README has the operator-facing summary.
+//!
+//! The analyzer is deliberately lexical (no syn, no rustc internals —
+//! the crate stays dependency-free): precise enough for this
+//! codebase's rustfmt-shaped sources, and every heuristic limit is
+//! documented where it lives.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{analyze_source, analyze_tree, count_rs_files, rules_for, Finding};
+pub use rules::{
+    GUARD_ACROSS_BLOCKING, LEN_BEFORE_ALLOC, NO_INDEX_UNTRUSTED, PRAGMA_RULE, SERVING_NO_PANIC,
+    WRITER_BUMPS_EPOCH,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fires(findings: &[Finding], rule: &str) -> bool {
+        findings.iter().any(|f| f.rule == rule)
+    }
+
+    // -- serving-no-panic ---------------------------------------------------
+
+    #[test]
+    fn no_panic_fires_on_unwrap_expect_and_macros() {
+        let src = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n\
+                   pub fn g(x: Option<u32>) -> u32 { x.expect(\"present\") }\n\
+                   pub fn h() { panic!(\"boom\") }\n\
+                   pub fn i() { unreachable!() }\n";
+        let f = analyze_source("core/estimator.rs", src);
+        assert_eq!(f.iter().filter(|x| x.rule == SERVING_NO_PANIC).count(), 4, "{f:?}");
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn no_panic_passes_on_fallible_style() {
+        let src = "pub fn f(x: Option<u32>) -> anyhow::Result<u32> {\n\
+                       x.ok_or_else(|| anyhow::anyhow!(\"missing\"))\n\
+                   }\n\
+                   pub fn g(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n";
+        let f = analyze_source("core/estimator.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn no_panic_is_scoped_to_serving_modules() {
+        let src = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert!(fires(&analyze_source("api/service.rs", src), SERVING_NO_PANIC));
+        assert!(fires(&analyze_source("coordinator/pipeline.rs", src), SERVING_NO_PANIC));
+        assert!(!fires(&analyze_source("experiments/mod.rs", src), SERVING_NO_PANIC));
+        assert!(!fires(&analyze_source("main.rs", src), SERVING_NO_PANIC));
+    }
+
+    #[test]
+    fn no_panic_ignores_test_mods_strings_and_comments() {
+        let src = "pub fn f() -> u32 { 1 } // the old code called unwrap() here\n\
+                   pub fn g() -> &'static str { \"never unwrap() in serving\" }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       #[test]\n\
+                       fn t() { Some(1).unwrap(); panic!(\"fine in tests\"); }\n\
+                   }\n";
+        let f = analyze_source("api/wire.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    // -- no-index-untrusted -------------------------------------------------
+
+    #[test]
+    fn index_fires_on_slice_indexing() {
+        let src = "pub fn kind(b: &[u8]) -> u8 { b[4] }\n\
+                   pub fn window(b: &[u8]) -> &[u8] { &b[2..6] }\n";
+        let f = analyze_source("api/protocol.rs", src);
+        assert_eq!(f.iter().filter(|x| x.rule == NO_INDEX_UNTRUSTED).count(), 2, "{f:?}");
+    }
+
+    #[test]
+    fn index_passes_on_get_and_type_position() {
+        let src = "pub fn kind(b: &[u8]) -> Option<u8> { b.get(4).copied() }\n\
+                   pub fn fill(buf: &mut [u8], arr: [u8; 4]) -> Vec<[f32; 2]> { Vec::new() }\n";
+        let f = analyze_source("api/protocol.rs", src);
+        assert!(!fires(&f, NO_INDEX_UNTRUSTED), "{f:?}");
+    }
+
+    #[test]
+    fn index_is_scoped_to_the_api_boundary() {
+        let src = "pub fn dot(a: &[f32], b: &[f32]) -> f32 { a[0] * b[0] }\n";
+        assert!(!fires(&analyze_source("core/estimator.rs", src), NO_INDEX_UNTRUSTED));
+        assert!(fires(&analyze_source("api/wire.rs", src), NO_INDEX_UNTRUSTED));
+    }
+
+    // -- len-before-alloc ---------------------------------------------------
+
+    #[test]
+    fn alloc_fires_without_validation() {
+        let src = "fn decode(cur: &mut Cur) -> anyhow::Result<Vec<u64>> {\n\
+                       let n = cur.u32()? as usize;\n\
+                       let mut v = Vec::with_capacity(n);\n\
+                       Ok(v)\n\
+                   }\n";
+        let f = analyze_source("api/wire.rs", src);
+        assert!(fires(&f, LEN_BEFORE_ALLOC), "{f:?}");
+    }
+
+    #[test]
+    fn alloc_passes_with_count_check_or_benign_size() {
+        let src = "fn decode(cur: &mut Cur) -> anyhow::Result<Vec<u64>> {\n\
+                       let n = cur.count(8, \"pairs\")?;\n\
+                       let mut v = Vec::with_capacity(n);\n\
+                       Ok(v)\n\
+                   }\n\
+                   fn encode(xs: &[u64]) -> Vec<u8> {\n\
+                       let mut out = Vec::with_capacity(xs.len() * 8);\n\
+                       let head = vec![0u8; HEADER_LEN];\n\
+                       out\n\
+                   }\n";
+        let f = analyze_source("api/wire.rs", src);
+        assert!(!fires(&f, LEN_BEFORE_ALLOC), "{f:?}");
+    }
+
+    #[test]
+    fn alloc_fires_on_vec_macro_and_reserve() {
+        let src = "fn a(n: usize) -> Vec<u8> { vec![0u8; n * 4] }\n\
+                   fn b(v: &mut Vec<u8>, n: usize) { v.reserve(n); }\n";
+        let f = analyze_source("coordinator/persist.rs", src);
+        assert_eq!(f.iter().filter(|x| x.rule == LEN_BEFORE_ALLOC).count(), 2, "{f:?}");
+    }
+
+    #[test]
+    fn alloc_validator_must_precede_the_allocation() {
+        let src = "fn decode(cur: &mut Cur) -> anyhow::Result<Vec<u64>> {\n\
+                       let n = cur.u32()? as usize;\n\
+                       let mut v = Vec::with_capacity(n);\n\
+                       ensure!(n <= 10, \"late\");\n\
+                       Ok(v)\n\
+                   }\n";
+        let f = analyze_source("api/wire.rs", src);
+        assert!(fires(&f, LEN_BEFORE_ALLOC), "checks after the alloc don't count: {f:?}");
+    }
+
+    // -- guard-across-blocking ----------------------------------------------
+
+    #[test]
+    fn guard_fires_on_send_while_live() {
+        let src = "fn f(&self) {\n\
+                       let g = self.state.lock_recover();\n\
+                       self.tx.send(1);\n\
+                   }\n";
+        let f = analyze_source("coordinator/scheduler.rs", src);
+        assert!(fires(&f, GUARD_ACROSS_BLOCKING), "{f:?}");
+        assert!(f[0].message.contains('g'), "names the guard: {f:?}");
+    }
+
+    #[test]
+    fn guard_fires_on_second_blocking_lock() {
+        let src = "fn f(&self) {\n\
+                       let a = self.x.read_recover();\n\
+                       let b = self.y.write_recover();\n\
+                   }\n";
+        let f = analyze_source("coordinator/scheduler.rs", src);
+        assert!(fires(&f, GUARD_ACROSS_BLOCKING), "{f:?}");
+    }
+
+    #[test]
+    fn guard_passes_when_scoped_before_blocking() {
+        let src = "fn f(&self) {\n\
+                       {\n\
+                           let g = self.state.lock_recover();\n\
+                           g.bump();\n\
+                       }\n\
+                       self.tx.send(1);\n\
+                   }\n\
+                   fn h(&self) {\n\
+                       let g = self.state.lock_recover();\n\
+                       drop(g);\n\
+                       self.tx.send(2);\n\
+                   }\n";
+        let f = analyze_source("coordinator/scheduler.rs", src);
+        assert!(!fires(&f, GUARD_ACROSS_BLOCKING), "{f:?}");
+    }
+
+    #[test]
+    fn guard_ignores_temporaries_and_try_locks() {
+        // A chained temporary dies at the `;`; try_* never blocks.
+        let src = "fn f(&self) {\n\
+                       self.errors.lock_recover().push(1);\n\
+                       self.tx.send(1);\n\
+                   }\n\
+                   fn g(&self) {\n\
+                       let shard = self.shard.write_recover();\n\
+                       if let Ok(mut c) = self.cached.try_write() {\n\
+                           c.clear();\n\
+                       }\n\
+                   }\n";
+        let f = analyze_source("coordinator/state_helpers.rs", src);
+        assert!(!fires(&f, GUARD_ACROSS_BLOCKING), "{f:?}");
+    }
+
+    // -- writer-bumps-epoch -------------------------------------------------
+
+    const STORE_OK: &str = "impl SketchStore {\n\
+        pub fn insert(&self) {\n\
+            let mut shard = self.shards.write_recover();\n\
+            shard.push(1);\n\
+            self.epoch.fetch_add(1, Ordering::Release);\n\
+        }\n\
+        pub fn insert_block_shared(&self) {\n\
+            let mut shard = self.shards.write_recover();\n\
+            shard.push(2);\n\
+            self.epoch.fetch_add(1, Ordering::Release);\n\
+        }\n\
+        pub fn compact_range(&self) {\n\
+            let mut segs = self.segments.write_recover();\n\
+            segs.clear();\n\
+            self.epoch.fetch_add(1, Ordering::Release);\n\
+        }\n\
+    }\n";
+
+    #[test]
+    fn epoch_passes_when_every_mutator_bumps_in_section() {
+        let f = analyze_source("coordinator/state.rs", STORE_OK);
+        assert!(!fires(&f, WRITER_BUMPS_EPOCH), "{f:?}");
+    }
+
+    #[test]
+    fn epoch_fires_on_missing_bump() {
+        let src = STORE_OK.replacen("self.epoch.fetch_add(1, Ordering::Release);\n", "", 1);
+        let f = analyze_source("coordinator/state.rs", &src);
+        assert!(fires(&f, WRITER_BUMPS_EPOCH), "{f:?}");
+        assert!(f.iter().any(|x| x.message.contains("insert")), "{f:?}");
+    }
+
+    #[test]
+    fn epoch_fires_on_manifest_drift() {
+        let src = STORE_OK.replace("compact_range", "compact_ranges_v2");
+        let f = analyze_source("coordinator/state.rs", &src);
+        assert!(
+            f.iter().any(|x| x.rule == WRITER_BUMPS_EPOCH && x.message.contains("not found")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn epoch_fires_on_bump_outside_critical_section() {
+        let src = "impl SketchStore {\n\
+            pub fn insert(&self) {\n\
+                self.epoch.fetch_add(1, Ordering::Release);\n\
+                let mut shard = self.shards.write_recover();\n\
+                shard.push(1);\n\
+            }\n\
+            pub fn insert_block_shared(&self) {\n\
+                let mut shard = self.shards.write_recover();\n\
+                self.epoch.fetch_add(1, Ordering::Release);\n\
+            }\n\
+            pub fn compact_range(&self) {\n\
+                let mut segs = self.segments.write_recover();\n\
+                self.epoch.fetch_add(1, Ordering::Release);\n\
+            }\n\
+        }\n";
+        let f = analyze_source("coordinator/state.rs", src);
+        assert!(
+            f.iter().any(|x| x.rule == WRITER_BUMPS_EPOCH && x.message.contains("outside")),
+            "{f:?}"
+        );
+    }
+
+    // -- pragmas ------------------------------------------------------------
+
+    #[test]
+    fn pragma_with_reason_suppresses_on_same_line() {
+        let src = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() } \
+                   // pallas-lint: allow(serving-no-panic) -- x is Some by construction\n";
+        let f = analyze_source("core/estimator.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn pragma_with_reason_suppresses_on_next_line() {
+        let src = "// pallas-lint: allow(serving-no-panic) -- guarded by the match above\n\
+                   pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let f = analyze_source("core/estimator.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn pragma_without_reason_does_not_suppress() {
+        let src = "// pallas-lint: allow(serving-no-panic)\n\
+                   pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let f = analyze_source("core/estimator.rs", src);
+        assert!(fires(&f, SERVING_NO_PANIC), "violation still reported: {f:?}");
+        assert!(
+            f.iter().any(|x| x.rule == PRAGMA_RULE && x.message.contains("missing")),
+            "missing reason reported: {f:?}"
+        );
+    }
+
+    #[test]
+    fn stale_pragma_is_reported() {
+        let src = "// pallas-lint: allow(serving-no-panic) -- left behind after a refactor\n\
+                   pub fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n";
+        let f = analyze_source("core/estimator.rs", src);
+        assert!(
+            f.iter().any(|x| x.rule == PRAGMA_RULE && x.message.contains("stale")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn pragma_for_wrong_rule_does_not_suppress() {
+        let src = "// pallas-lint: allow(len-before-alloc) -- wrong rule\n\
+                   pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let f = analyze_source("core/estimator.rs", src);
+        assert!(fires(&f, SERVING_NO_PANIC), "{f:?}");
+    }
+
+    #[test]
+    fn render_is_click_through_formatted() {
+        let f = Finding {
+            file: "api/wire.rs".into(),
+            line: 7,
+            rule: SERVING_NO_PANIC,
+            message: "msg".into(),
+        };
+        assert_eq!(f.render(), "api/wire.rs:7: [serving-no-panic] msg");
+    }
+}

@@ -1,0 +1,818 @@
+//! The pallas-lint rule engine: module-scoped rules over stripped
+//! source (see [`super::lexer`]), with pragma suppression.
+//!
+//! Rules and scopes (paths relative to `rust/src/`):
+//!
+//! | rule | scope | enforces |
+//! |------|-------|----------|
+//! | `serving-no-panic` | `api/`, `coordinator/state.rs`, `coordinator/pipeline.rs`, `core/estimator.rs` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` on serving paths |
+//! | `no-index-untrusted` | `api/` | no `x[..]` indexing at the untrusted-input boundary — use `get(..)` |
+//! | `len-before-alloc` | `api/wire.rs`, `coordinator/persist.rs` | decoded-count allocations need a cap/bytes-present check earlier in the same function |
+//! | `guard-across-blocking` | `api/`, `coordinator/` | lock guards must not be live across channel ops, thread scopes, or a second blocking lock |
+//! | `writer-bumps-epoch` | `coordinator/state.rs` | every manifest mutator bumps the store epoch inside its write critical section |
+//!
+//! `no-index-untrusted` is deliberately **not** applied to the numeric
+//! kernels (`core/estimator.rs`): they index with loop-bounded offsets
+//! pervasively and rewriting them around `get()` would obscure the
+//! tiling structure; the panic tokens themselves are still banned
+//! there by `serving-no-panic`.
+//!
+//! `#[cfg(test)]` items are exempt from every rule — tests unwrap
+//! freely by design. The engine is lexical, line-oriented for the
+//! guard rule (a guard binding and its acquire are assumed to share a
+//! line, which matches rustfmt output for every real site in-tree).
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use super::lexer;
+
+pub const SERVING_NO_PANIC: &str = "serving-no-panic";
+pub const NO_INDEX_UNTRUSTED: &str = "no-index-untrusted";
+pub const LEN_BEFORE_ALLOC: &str = "len-before-alloc";
+pub const GUARD_ACROSS_BLOCKING: &str = "guard-across-blocking";
+pub const WRITER_BUMPS_EPOCH: &str = "writer-bumps-epoch";
+/// Diagnostics about the pragmas themselves (malformed / missing
+/// reason / stale). Not suppressible.
+pub const PRAGMA_RULE: &str = "pragma";
+
+/// `SketchStore` mutators that must bump the epoch inside their write
+/// critical section. Extend this list when adding a mutator; a listed
+/// name that no longer exists is itself reported (manifest drift).
+const MUTATOR_MANIFEST: &[&str] = &["insert", "insert_block_shared", "compact_range"];
+
+/// One rule violation (or pragma diagnostic).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Which rules apply to a file, by its root-relative path.
+pub fn rules_for(rel: &str) -> Vec<&'static str> {
+    let rel = rel.replace('\\', "/");
+    let mut rules = Vec::new();
+    let serving = rel.starts_with("api/")
+        || rel == "coordinator/state.rs"
+        || rel == "coordinator/pipeline.rs"
+        || rel == "core/estimator.rs";
+    if serving {
+        rules.push(SERVING_NO_PANIC);
+    }
+    if rel.starts_with("api/") {
+        rules.push(NO_INDEX_UNTRUSTED);
+    }
+    if rel == "api/wire.rs" || rel == "coordinator/persist.rs" {
+        rules.push(LEN_BEFORE_ALLOC);
+    }
+    if rel.starts_with("api/") || rel.starts_with("coordinator/") {
+        rules.push(GUARD_ACROSS_BLOCKING);
+    }
+    if rel == "coordinator/state.rs" {
+        rules.push(WRITER_BUMPS_EPOCH);
+    }
+    rules
+}
+
+/// Analyze one file's source under its root-relative path.
+pub fn analyze_source(rel: &str, src: &str) -> Vec<Finding> {
+    let stripped = lexer::strip(src);
+    let code = stripped.code.as_str();
+    let spans = lexer::test_spans(code);
+    let in_test = |line: usize| spans.iter().any(|&(a, b)| a <= line && line <= b);
+
+    let mut raw = Vec::new();
+    for rule in rules_for(rel) {
+        match rule {
+            SERVING_NO_PANIC => serving_no_panic(rel, code, &mut raw),
+            NO_INDEX_UNTRUSTED => no_index_untrusted(rel, code, &mut raw),
+            LEN_BEFORE_ALLOC => len_before_alloc(rel, code, &mut raw),
+            GUARD_ACROSS_BLOCKING => guard_across_blocking(rel, code, &mut raw),
+            WRITER_BUMPS_EPOCH => writer_bumps_epoch(rel, code, &mut raw),
+            _ => {}
+        }
+    }
+    raw.retain(|f| !in_test(f.line));
+    // One finding per (rule, line): `a[0][1]` is one problem, not two.
+    let mut seen = HashSet::new();
+    raw.retain(|f| seen.insert((f.rule, f.line)));
+
+    let lines: Vec<&str> = code.lines().collect();
+    let mut used = vec![false; stripped.pragmas.len()];
+    let mut findings = Vec::new();
+    for f in raw {
+        let suppressed = stripped.pragmas.iter().enumerate().any(|(pi, p)| {
+            let hit = p.rule.as_deref() == Some(f.rule)
+                && p.reason.is_some()
+                && pragma_covers(p.line, f.line, &lines);
+            if hit {
+                used[pi] = true;
+            }
+            hit
+        });
+        if !suppressed {
+            findings.push(f);
+        }
+    }
+    for (pi, p) in stripped.pragmas.iter().enumerate() {
+        if in_test(p.line) {
+            continue;
+        }
+        let message = match (&p.rule, &p.reason) {
+            (None, _) => {
+                "malformed pragma — expected `pallas-lint: allow(<rule>) -- <reason>`".to_string()
+            }
+            (Some(rule), None) => {
+                format!("allow({rule}) is missing its mandatory `-- <reason>` clause")
+            }
+            (Some(rule), Some(_)) if !used[pi] => {
+                format!("stale allow({rule}) — no matching finding on this or the next line")
+            }
+            _ => continue,
+        };
+        findings.push(Finding { file: rel.to_string(), line: p.line, rule: PRAGMA_RULE, message });
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// A pragma on line `p` covers findings on `p` itself or on the next
+/// non-blank line (the standalone-comment-above-the-statement form).
+fn pragma_covers(p: usize, finding: usize, lines: &[&str]) -> bool {
+    if finding == p {
+        return true;
+    }
+    let mut q = p + 1;
+    while q <= lines.len() && lines[q - 1].trim().is_empty() {
+        q += 1;
+    }
+    finding == q
+}
+
+/// Recursively analyze every `.rs` file under `root` (usually
+/// `rust/src`). Findings are ordered by path, then line.
+pub fn analyze_tree(root: &Path) -> anyhow::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(root, root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for rel in &files {
+        let src = std::fs::read_to_string(root.join(rel))
+            .map_err(|e| anyhow::anyhow!("reading {rel}: {e}"))?;
+        findings.extend(analyze_source(rel, &src));
+    }
+    Ok(findings)
+}
+
+/// Number of `.rs` files [`analyze_tree`] would scan — for reporting.
+pub fn count_rs_files(root: &Path) -> anyhow::Result<usize> {
+    let mut files = Vec::new();
+    collect_rs(root, root, &mut files)?;
+    Ok(files.len())
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> anyhow::Result<()> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| anyhow::anyhow!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow::anyhow!("walking {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Token scanning helpers (over stripped code).
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Byte offsets of `tok` occurrences with identifier boundaries on any
+/// end of `tok` that is itself an identifier byte.
+fn token_positions(code: &str, tok: &str) -> Vec<usize> {
+    let b = code.as_bytes();
+    let t = tok.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(tok) {
+        let at = from + rel;
+        let left_ok = !is_ident_byte(t[0]) || at == 0 || !is_ident_byte(b[at - 1]);
+        let end = at + t.len();
+        let right_ok =
+            !is_ident_byte(t[t.len() - 1]) || end >= b.len() || !is_ident_byte(b[end]);
+        if left_ok && right_ok {
+            out.push(at);
+        }
+        from = at + 1;
+    }
+    out
+}
+
+fn next_non_space(b: &[u8], mut i: usize) -> Option<u8> {
+    while i < b.len() {
+        if !b[i].is_ascii_whitespace() {
+            return Some(b[i]);
+        }
+        i += 1;
+    }
+    None
+}
+
+fn prev_non_space(b: &[u8], i: usize) -> Option<u8> {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if !b[j].is_ascii_whitespace() {
+            return Some(b[j]);
+        }
+    }
+    None
+}
+
+/// Offset of the delimiter closing the one at `open` (same line or
+/// beyond); `code.len()` when unbalanced.
+fn match_delim(code: &str, open: usize, oc: u8, cc: u8) -> usize {
+    let b = code.as_bytes();
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < b.len() {
+        if b[i] == oc {
+            depth += 1;
+        } else if b[i] == cc {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    code.len()
+}
+
+/// Maximal identifier tokens in `s`.
+fn idents(s: &str) -> Vec<&str> {
+    let b = s.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if (b[i] == b'_' || b[i].is_ascii_alphabetic()) && (i == 0 || !is_ident_byte(b[i - 1])) {
+            let start = i;
+            while i < b.len() && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            out.push(&s[start..i]);
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// serving-no-panic
+
+fn serving_no_panic(rel: &str, code: &str, out: &mut Vec<Finding>) {
+    let b = code.as_bytes();
+    const METHODS: &[&str] = &["unwrap", "expect"];
+    const MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+    for tok in METHODS {
+        for at in token_positions(code, tok) {
+            if prev_non_space(b, at) == Some(b'.') && next_non_space(b, at + tok.len()) == Some(b'(')
+            {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: lexer::line_of(code, at),
+                    rule: SERVING_NO_PANIC,
+                    message: format!(
+                        "`.{tok}(..)` on a serving path — return an error instead, or add \
+                         `// pallas-lint: allow(serving-no-panic) -- <why infallible>`"
+                    ),
+                });
+            }
+        }
+    }
+    for tok in MACROS {
+        for at in token_positions(code, tok) {
+            if next_non_space(b, at + tok.len()) == Some(b'!') {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: lexer::line_of(code, at),
+                    rule: SERVING_NO_PANIC,
+                    message: format!("`{tok}!` on a serving path — serving code must not abort"),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// no-index-untrusted
+
+fn no_index_untrusted(rel: &str, code: &str, out: &mut Vec<Finding>) {
+    let b = code.as_bytes();
+    for (i, &c) in b.iter().enumerate() {
+        if c != b'[' {
+            continue;
+        }
+        let Some(prev) = prev_non_space(b, i) else { continue };
+        // A keyword or lifetime before `[` means type/expression
+        // position (`&mut [u8]`, `&'a [u8]`, `return [..]`), not
+        // indexing.
+        if is_ident_byte(prev) && preceding_word_is_keyword_or_lifetime(b, i) {
+            continue;
+        }
+        if is_ident_byte(prev) || prev == b')' || prev == b']' || prev == b'?' {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: lexer::line_of(code, i),
+                rule: NO_INDEX_UNTRUSTED,
+                message: "`[..]` indexing at the wire boundary can panic on malformed input — \
+                          use `get(..)` / `split_at_checked`-style accessors"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Is the identifier ending just before offset `i` (after skipping
+/// whitespace) a keyword or a lifetime (`&'a [u8]`) rather than an
+/// indexable expression?
+fn preceding_word_is_keyword_or_lifetime(b: &[u8], i: usize) -> bool {
+    let mut end = i;
+    while end > 0 && b[end - 1].is_ascii_whitespace() {
+        end -= 1;
+    }
+    let mut start = end;
+    while start > 0 && is_ident_byte(b[start - 1]) {
+        start -= 1;
+    }
+    if start > 0 && b[start - 1] == b'\'' {
+        return true;
+    }
+    matches!(
+        std::str::from_utf8(&b[start..end]).unwrap_or(""),
+        "mut" | "dyn" | "impl" | "else" | "return" | "in" | "as" | "move" | "where" | "const"
+            | "static" | "ref" | "box" | "match" | "if" | "break" | "let"
+    )
+}
+
+// ---------------------------------------------------------------------------
+// len-before-alloc
+
+struct FnSpan {
+    body_start: usize,
+    body_end: usize,
+    name_at: usize,
+    name: String,
+}
+
+/// Brace-delimited function bodies, including nested fns.
+fn fn_spans(code: &str) -> Vec<FnSpan> {
+    let b = code.as_bytes();
+    let mut spans = Vec::new();
+    for at in token_positions(code, "fn") {
+        let mut i = at + 2;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let name_at = i;
+        while i < b.len() && is_ident_byte(b[i]) {
+            i += 1;
+        }
+        if i == name_at {
+            continue; // `fn` in e.g. a closure type — not an item
+        }
+        let name = code[name_at..i].to_string();
+        // Body `{` at bracket/paren depth 0; a `;` first means no body.
+        let mut depth = 0isize;
+        let mut body_start = None;
+        let mut j = i;
+        while j < b.len() {
+            match b[j] {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b'{' if depth == 0 => {
+                    body_start = Some(j);
+                    break;
+                }
+                b';' if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if let Some(start) = body_start {
+            spans.push(FnSpan {
+                body_start: start,
+                body_end: match_delim(code, start, b'{', b'}'),
+                name_at,
+                name,
+            });
+        }
+    }
+    spans
+}
+
+/// Innermost function body containing `at`.
+fn enclosing_fn(spans: &[FnSpan], at: usize) -> Option<&FnSpan> {
+    spans
+        .iter()
+        .filter(|s| s.body_start < at && at < s.body_end)
+        .min_by_key(|s| s.body_end - s.body_start)
+}
+
+/// Size expressions that cannot come from a decoded count: literal /
+/// const-only arithmetic, or sizes measured off in-memory data via
+/// `.len()`.
+fn alloc_size_is_benign(arg: &str) -> bool {
+    if arg.contains(".len(") {
+        return true;
+    }
+    const PRIMS: &[&str] = &[
+        "as", "usize", "isize", "u8", "u16", "u32", "u64", "i8", "i16", "i32", "i64", "f32", "f64",
+    ];
+    idents(arg).iter().all(|id| {
+        PRIMS.contains(id)
+            || id
+                .chars()
+                .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+    })
+}
+
+/// Tokens accepted as "a cap / bytes-present check happened".
+const VALIDATORS: &[&str] = &[
+    "ensure!",
+    "bail!",
+    ".count(",
+    "checked_mul",
+    "checked_add",
+    "parse_header",
+    "ensure_frame_fits",
+    "MAX_",
+];
+
+fn has_validator_before(code: &str, from: usize, to: usize) -> bool {
+    let window = &code[from..to];
+    VALIDATORS.iter().any(|v| {
+        let mut search = 0;
+        while let Some(rel) = window[search..].find(v) {
+            let at = search + rel;
+            let first = v.as_bytes()[0];
+            let left_ok = !is_ident_byte(first)
+                || at == 0
+                || !is_ident_byte(window.as_bytes()[at - 1]);
+            if left_ok {
+                return true;
+            }
+            search = at + 1;
+        }
+        false
+    })
+}
+
+fn len_before_alloc(rel: &str, code: &str, out: &mut Vec<Finding>) {
+    let spans = fn_spans(code);
+    let b = code.as_bytes();
+    let mut sites: Vec<(usize, String)> = Vec::new();
+    for at in token_positions(code, "with_capacity") {
+        let Some(open_rel) = code[at..].find('(') else { continue };
+        let open = at + open_rel;
+        let close = match_delim(code, open, b'(', b')');
+        sites.push((at, code[open + 1..close.min(code.len())].to_string()));
+    }
+    for at in token_positions(code, "reserve") {
+        if prev_non_space(b, at) != Some(b'.') {
+            continue;
+        }
+        let Some(open_rel) = code[at..].find('(') else { continue };
+        let open = at + open_rel;
+        let close = match_delim(code, open, b'(', b')');
+        sites.push((at, code[open + 1..close.min(code.len())].to_string()));
+    }
+    for at in token_positions(code, "vec") {
+        if next_non_space(b, at + 3) != Some(b'!') {
+            continue;
+        }
+        let Some(open_rel) = code[at..].find('[') else { continue };
+        let open = at + open_rel;
+        let close = match_delim(code, open, b'[', b']');
+        let body = &code[open + 1..close.min(code.len())];
+        // `vec![elem; size]` — only the repeat form declares a size.
+        let Some(semi) = top_level_semi(body) else { continue };
+        sites.push((at, body[semi + 1..].to_string()));
+    }
+    for (at, arg) in sites {
+        if alloc_size_is_benign(&arg) {
+            continue;
+        }
+        let Some(span) = enclosing_fn(&spans, at) else { continue };
+        if has_validator_before(code, span.body_start, at) {
+            continue;
+        }
+        out.push(Finding {
+            file: rel.to_string(),
+            line: lexer::line_of(code, at),
+            rule: LEN_BEFORE_ALLOC,
+            message: format!(
+                "allocation sized by `{}` with no cap/bytes-present check earlier in `{}` — \
+                 validate the decoded count first",
+                arg.trim(),
+                span.name
+            ),
+        });
+    }
+}
+
+/// Offset of the last `;` at bracket depth 0 in `s`, if any.
+fn top_level_semi(s: &str) -> Option<usize> {
+    let b = s.as_bytes();
+    let mut depth = 0isize;
+    let mut found = None;
+    for (i, &c) in b.iter().enumerate() {
+        match c {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth -= 1,
+            b';' if depth == 0 => found = Some(i),
+            _ => {}
+        }
+    }
+    found
+}
+
+// ---------------------------------------------------------------------------
+// guard-across-blocking
+
+/// Lock acquisitions that produce a guard.
+const ACQUIRES: &[&str] = &[
+    ".lock()",
+    ".read()",
+    ".write()",
+    ".lock_recover()",
+    ".read_recover()",
+    ".write_recover()",
+    ".try_read()",
+    ".try_write()",
+];
+/// The blocking subset: acquiring one of these while another guard is
+/// live risks deadlock; `try_*` never blocks and is exempt (it is the
+/// sanctioned non-blocking pattern, e.g. the insert-path cache purge).
+const BLOCKING_ACQUIRES: &[&str] = &[
+    ".lock()",
+    ".read()",
+    ".write()",
+    ".lock_recover()",
+    ".read_recover()",
+    ".write_recover()",
+];
+/// Blocking operations a guard must not be live across. `.join()` is
+/// the no-arg thread-join form (`path.join("..")` takes an argument
+/// and never matches); `thread::spawn` covers the non-method form.
+const BLOCKING_OPS: &[&str] = &[
+    "thread::scope",
+    "thread::spawn",
+    ".spawn(",
+    ".send(",
+    ".recv(",
+    ".recv_timeout(",
+    ".join()",
+];
+
+fn guard_across_blocking(rel: &str, code: &str, out: &mut Vec<Finding>) {
+    struct Guard {
+        name: String,
+        depth: isize,
+        line: usize,
+    }
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0isize;
+    for (ln0, line) in code.lines().enumerate() {
+        let ln = ln0 + 1;
+        if let Some(g) = guards.last() {
+            let tok = BLOCKING_OPS
+                .iter()
+                .chain(BLOCKING_ACQUIRES)
+                .find(|t| line.contains(*t));
+            if let Some(tok) = tok {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: ln,
+                    rule: GUARD_ACROSS_BLOCKING,
+                    message: format!(
+                        "lock guard `{}` (bound on line {}) is live across `{}` — scope the \
+                         guard to end first, or pragma the documented lock order",
+                        g.name, g.line, tok
+                    ),
+                });
+            }
+        } else {
+            // Two blocking acquisitions inside one statement.
+            let hits: usize =
+                BLOCKING_ACQUIRES.iter().map(|t| line.matches(t).count()).sum();
+            if hits >= 2 {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: ln,
+                    rule: GUARD_ACROSS_BLOCKING,
+                    message: "two blocking lock acquisitions in one statement — acquire in a \
+                              documented order, one at a time"
+                        .to_string(),
+                });
+            }
+        }
+        let opens = line.bytes().filter(|&c| c == b'{').count() as isize;
+        let closes = line.bytes().filter(|&c| c == b'}').count() as isize;
+        depth += opens - closes;
+        guards.retain(|g| g.depth <= depth);
+        if !line.is_empty() {
+            guards.retain(|g| !line.contains(&format!("drop({})", g.name)));
+        }
+        if token_positions(line, "let").is_empty() {
+            continue;
+        }
+        let acquire = ACQUIRES
+            .iter()
+            .filter_map(|t| line.find(t).map(|p| (p, *t)))
+            .min();
+        if let Some((pos, tok)) = acquire {
+            if binds_guard(line, pos + tok.len()) {
+                guards.push(Guard {
+                    name: binding_name(line).unwrap_or_else(|| "_".to_string()),
+                    depth,
+                    line: ln,
+                });
+            }
+        }
+    }
+}
+
+/// After an acquire token: does this statement keep the guard (true)
+/// or immediately extract a value through it (false → temporary whose
+/// guard dies at the `;`)?
+fn binds_guard(line: &str, mut i: usize) -> bool {
+    let b = line.as_bytes();
+    loop {
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i >= b.len() {
+            return true; // statement continues on the next line — assume guard
+        }
+        match b[i] {
+            b'?' => i += 1,
+            b'.' => {
+                let rest = &line[i..];
+                // Poison/Option adapters still yield the guard itself.
+                if let Some(skip) = chained_adapter_len(rest) {
+                    i += skip;
+                } else {
+                    return false;
+                }
+            }
+            _ => return true,
+        }
+    }
+}
+
+/// If `rest` starts with an adapter that returns the guard
+/// (`.unwrap()`, `.expect(..)`, `.unwrap_or_else(..)`, `.ok()`),
+/// return its length on this line.
+fn chained_adapter_len(rest: &str) -> Option<usize> {
+    for prefix in [".unwrap()", ".ok()"] {
+        if rest.starts_with(prefix) {
+            return Some(prefix.len());
+        }
+    }
+    for prefix in [".expect(", ".unwrap_or_else("] {
+        if rest.starts_with(prefix) {
+            let open = prefix.len() - 1;
+            let close = match_delim(rest, open, b'(', b')');
+            return Some(if close >= rest.len() { rest.len() } else { close + 1 });
+        }
+    }
+    None
+}
+
+/// Identifier bound by a `let` on this line (last ident of the pattern,
+/// skipping `mut`/`ref` and enum constructors).
+fn binding_name(line: &str) -> Option<String> {
+    let let_at = token_positions(line, "let").first().copied()?;
+    let eq = assignment_eq(line, let_at + 3)?;
+    let pat = &line[let_at + 3..eq];
+    idents(pat)
+        .into_iter()
+        .filter(|id| !matches!(*id, "mut" | "ref" | "Some" | "Ok" | "Err"))
+        .next_back()
+        .map(str::to_string)
+}
+
+/// First plain `=` (not `==`, `=>`, `<=`, `>=`, `!=`, `+=`, …).
+fn assignment_eq(line: &str, from: usize) -> Option<usize> {
+    let b = line.as_bytes();
+    let mut i = from;
+    while i < b.len() {
+        if b[i] == b'='
+            && b.get(i + 1) != Some(&b'=')
+            && b.get(i + 1) != Some(&b'>')
+            && (i == 0 || !matches!(b[i - 1], b'=' | b'!' | b'<' | b'>' | b'+' | b'-' | b'*' | b'/' | b'&' | b'|' | b'^' | b'%'))
+        {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// writer-bumps-epoch
+
+fn writer_bumps_epoch(rel: &str, code: &str, out: &mut Vec<Finding>) {
+    let spans = fn_spans(code);
+    let test_spans = lexer::test_spans(code);
+    let in_test =
+        |at: usize| test_spans.iter().any(|&(a, b)| a <= lexer::line_of(code, at) && lexer::line_of(code, at) <= b);
+    for name in MUTATOR_MANIFEST {
+        let Some(span) = spans.iter().find(|s| s.name == *name && !in_test(s.name_at)) else {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: 1,
+                rule: WRITER_BUMPS_EPOCH,
+                message: format!(
+                    "manifest mutator `{name}` not found — update MUTATOR_MANIFEST in \
+                     analysis/rules.rs if it was renamed or removed"
+                ),
+            });
+            continue;
+        };
+        let body = &code[span.body_start..span.body_end];
+        let Some(bump) = body.find("epoch.fetch_add(") else {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: lexer::line_of(code, span.name_at),
+                rule: WRITER_BUMPS_EPOCH,
+                message: format!(
+                    "mutator `{name}` never bumps the store epoch — snapshot readers would \
+                     not observe its write"
+                ),
+            });
+            continue;
+        };
+        let bump_depth = brace_depth(body, bump);
+        let ok = ["write(", "write_recover(", "lock(", "lock_recover("].iter().any(|acq| {
+            let mut search = 0;
+            while let Some(rel_at) = body[search..bump].find(acq) {
+                let at = search + rel_at;
+                let dotted = at > 0 && body.as_bytes()[at - 1] == b'.';
+                if dotted && brace_depth(body, at) <= bump_depth {
+                    return true;
+                }
+                search = at + 1;
+                if search >= bump {
+                    break;
+                }
+            }
+            false
+        });
+        if !ok {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: lexer::line_of(code, span.body_start + bump),
+                rule: WRITER_BUMPS_EPOCH,
+                message: format!(
+                    "`{name}` bumps the epoch outside its write critical section — readers \
+                     could snapshot the new epoch without the write"
+                ),
+            });
+        }
+    }
+}
+
+fn brace_depth(s: &str, at: usize) -> isize {
+    s.as_bytes()[..at]
+        .iter()
+        .map(|&c| match c {
+            b'{' => 1,
+            b'}' => -1,
+            _ => 0,
+        })
+        .sum()
+}

@@ -22,6 +22,10 @@
 //! through these types, and every route returns bitwise-identical
 //! estimates to a direct [`crate::coordinator::Pipeline`] call.
 
+// The serving surface must degrade, never die: clippy backs the
+// pallas-lint serving-no-panic rule here. Test modules opt back in.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod protocol;
 pub mod server;
 pub mod service;

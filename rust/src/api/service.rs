@@ -20,6 +20,7 @@ use std::time::Duration;
 
 use crate::coordinator::batcher::{Batcher, Drained};
 use crate::coordinator::Pipeline;
+use crate::util::sync::MutexExt;
 
 use super::protocol::{Request, Response};
 
@@ -72,7 +73,7 @@ pub fn spawn(pipeline: Arc<Pipeline>) -> ApiHandle {
         let pipeline = Arc::clone(&pipeline);
         let batcher = Arc::clone(&batcher);
         std::thread::spawn(move || loop {
-            let drained = batcher.lock().unwrap().drain();
+            let drained = batcher.lock_recover().drain();
             match drained {
                 Drained::Batch(batch, reason) => pipeline.serve_api_batch(batch, reason),
                 Drained::Closed => break,

@@ -200,7 +200,7 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             // one is truncated at the frame cap rather than rejected.
             let bytes = msg.as_bytes();
             let take = bytes.len().min(MAX_FRAME_PAYLOAD);
-            payload.extend_from_slice(&bytes[..take]);
+            payload.extend(bytes.iter().take(take));
             K_ERROR
         }
     };
@@ -227,25 +227,41 @@ impl<'a> Cur<'a> {
 
     fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
         anyhow::ensure!(n <= self.remaining(), "truncated frame payload");
-        let s = &self.buf[self.off..self.off + n];
-        self.off += n;
+        let end = self.off + n;
+        let s = self
+            .buf
+            .get(self.off..end)
+            .ok_or_else(|| anyhow::anyhow!("truncated frame payload"))?;
+        self.off = end;
         Ok(s)
     }
 
+    /// Fixed-width read: exactly `N` bytes as an array. The conversion
+    /// is checked, not asserted — a `Cur` must never panic, whatever
+    /// the input bytes.
+    fn array<const N: usize>(&mut self) -> anyhow::Result<[u8; N]> {
+        let arr: [u8; N] = self
+            .take(N)?
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("internal: take({N}) width mismatch"))?;
+        Ok(arr)
+    }
+
     fn u8(&mut self) -> anyhow::Result<u8> {
-        Ok(self.take(1)?[0])
+        let [b] = self.array()?;
+        Ok(b)
     }
 
     fn u32(&mut self) -> anyhow::Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+        Ok(u32::from_le_bytes(self.array()?))
     }
 
     fn u64(&mut self) -> anyhow::Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+        Ok(u64::from_le_bytes(self.array()?))
     }
 
     fn f64(&mut self) -> anyhow::Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+        Ok(f64::from_le_bytes(self.array()?))
     }
 
     /// A `u32` element count, validated against the bytes actually left
@@ -261,11 +277,18 @@ impl<'a> Cur<'a> {
     }
 
     fn f32s(&mut self, n: usize) -> anyhow::Result<Vec<f32>> {
-        let raw = self.take(n * 4)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
-            .collect())
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("vector length overflow"))?;
+        let raw = self.take(bytes)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            let arr: [u8; 4] = c
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("internal: misaligned f32 chunk"))?;
+            out.push(f32::from_le_bytes(arr));
+        }
+        Ok(out)
     }
 
     fn opt_f64s(&mut self) -> anyhow::Result<Vec<Option<f64>>> {
@@ -292,14 +315,16 @@ impl<'a> Cur<'a> {
 /// return `(kind, payload_len)`. The single source of truth for both
 /// the byte-slice and the stream decode paths.
 fn parse_header(header: &[u8; HEADER_LEN]) -> anyhow::Result<(u8, usize)> {
-    anyhow::ensure!(header[..4] == MAGIC, "not a wire-protocol frame (bad magic)");
-    let version = header[4];
+    // Destructuring makes the 10-byte layout explicit and leaves no
+    // indexing to get wrong (the pattern length is checked at compile
+    // time against HEADER_LEN).
+    let [m0, m1, m2, m3, version, kind, l0, l1, l2, l3] = *header;
+    anyhow::ensure!([m0, m1, m2, m3] == MAGIC, "not a wire-protocol frame (bad magic)");
     anyhow::ensure!(
         version == WIRE_VERSION,
         "unsupported wire version {version} (this build speaks {WIRE_VERSION})"
     );
-    let kind = header[5];
-    let len = u32::from_le_bytes(header[6..10].try_into().expect("4 bytes")) as usize;
+    let len = u32::from_le_bytes([l0, l1, l2, l3]) as usize;
     anyhow::ensure!(
         len <= MAX_FRAME_PAYLOAD,
         "implausible frame length {len} (cap {MAX_FRAME_PAYLOAD})"
@@ -312,11 +337,15 @@ fn parse_header(header: &[u8; HEADER_LEN]) -> anyhow::Result<(u8, usize)> {
 /// magic/version, or a declared length that exceeds the cap or the
 /// buffer.
 fn frame_from_bytes(buf: &[u8]) -> anyhow::Result<(u8, &[u8], usize)> {
-    anyhow::ensure!(buf.len() >= HEADER_LEN, "truncated frame header");
-    let header: &[u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().expect("checked length");
+    let header: &[u8; HEADER_LEN] = buf
+        .get(..HEADER_LEN)
+        .and_then(|s| s.try_into().ok())
+        .ok_or_else(|| anyhow::anyhow!("truncated frame header"))?;
     let (kind, len) = parse_header(header)?;
-    anyhow::ensure!(buf.len() - HEADER_LEN >= len, "truncated frame payload");
-    Ok((kind, &buf[HEADER_LEN..HEADER_LEN + len], HEADER_LEN + len))
+    let payload = buf
+        .get(HEADER_LEN..HEADER_LEN + len)
+        .ok_or_else(|| anyhow::anyhow!("truncated frame payload"))?;
+    Ok((kind, payload, HEADER_LEN + len))
 }
 
 fn decode_request_payload(kind: u8, payload: &[u8]) -> anyhow::Result<Request> {
@@ -437,6 +466,7 @@ fn read_frame(r: &mut impl Read) -> anyhow::Result<Option<(u8, Vec<u8>)>> {
     let mut header = [0u8; HEADER_LEN];
     let mut got = 0usize;
     while got < HEADER_LEN {
+        // pallas-lint: allow(no-index-untrusted) -- `got` is bounded below HEADER_LEN by the loop condition
         let n = r.read(&mut header[got..])?;
         if n == 0 {
             if got == 0 {
@@ -498,6 +528,7 @@ pub fn write_response(w: &mut impl Write, resp: &Response) -> anyhow::Result<()>
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -156,7 +156,8 @@ fn w_f64s(w: &mut impl Write, xs: &[f64]) -> std::io::Result<()> {
 }
 
 fn r_f32s(r: &mut impl Read, n: usize) -> anyhow::Result<Vec<f32>> {
-    let mut bytes = vec![0u8; n * 4];
+    let len = n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("panel length overflow"))?;
+    let mut bytes = vec![0u8; len];
     r.read_exact(&mut bytes)?;
     Ok(bytes
         .chunks_exact(4)
@@ -165,7 +166,8 @@ fn r_f32s(r: &mut impl Read, n: usize) -> anyhow::Result<Vec<f32>> {
 }
 
 fn r_f64s(r: &mut impl Read, n: usize) -> anyhow::Result<Vec<f64>> {
-    let mut bytes = vec![0u8; n * 8];
+    let len = n.checked_mul(8).ok_or_else(|| anyhow::anyhow!("panel length overflow"))?;
+    let mut bytes = vec![0u8; len];
     r.read_exact(&mut bytes)?;
     Ok(bytes
         .chunks_exact(8)

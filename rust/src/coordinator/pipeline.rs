@@ -44,6 +44,9 @@
 //! * **pure rust per-row**: the [`Sketcher`] reference mirror, any
 //!   shape; kept as the baseline the GEMM path is pinned against.
 
+// Serving path: clippy backs the pallas-lint serving-no-panic rule.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -55,6 +58,7 @@ use crate::core::decompose::Decomposition;
 use crate::core::estimator;
 use crate::core::marginals::Moments;
 use crate::core::mle::{self, Solve};
+use crate::util::sync::MutexExt;
 use crate::data::RowMatrix;
 use crate::knn::KnnIndex;
 use crate::projection::sketcher::{ColumnarBlock, RowSketch, SketchSet, Sketcher};
@@ -183,7 +187,9 @@ impl Pipeline {
         let mut pipeline = Self::new(cfg)?;
         let ids = store.ids();
         if let Some(&first) = ids.first() {
-            let rs = store.get(first).expect("listed id");
+            let rs = store
+                .get(first)
+                .ok_or_else(|| anyhow::anyhow!("store lists id {first} but cannot serve it"))?;
             anyhow::ensure!(
                 rs.uside.k == pipeline.cfg.k && rs.uside.orders == pipeline.cfg.p - 1,
                 "store shape (k={}, orders={}) does not match config (k={}, p={})",
@@ -201,7 +207,7 @@ impl Pipeline {
                 "store sidedness (two_sided={two_sided}) does not match config strategy {}",
                 pipeline.cfg.strategy.as_str(),
             );
-            pipeline.next_id = AtomicU64::new(ids.last().unwrap() + 1);
+            pipeline.next_id = AtomicU64::new(ids.last().copied().unwrap_or(first) + 1);
         }
         pipeline.store = store;
         pipeline
@@ -316,7 +322,8 @@ impl Pipeline {
                 let errors = &errors;
                 scope.spawn(move || loop {
                     let block = {
-                        let guard = rx.lock().unwrap();
+                        let guard = rx.lock_recover();
+                        // pallas-lint: allow(guard-across-blocking) -- shared-Receiver idiom: this mutex exists to serialize recv; senders never take it
                         guard.recv()
                     };
                     let Ok(block) = block else { break };
@@ -367,7 +374,7 @@ impl Pipeline {
                             self.metrics.blocks_sketched.fetch_add(1, Ordering::Relaxed);
                             self.metrics.sketch_latency.record(t.elapsed());
                         }
-                        Err(e) => errors.lock().unwrap().push(e),
+                        Err(e) => errors.lock_recover().push(e),
                     }
                 });
             }
@@ -381,7 +388,7 @@ impl Pipeline {
             drop(tx);
         });
 
-        let errs = errors.into_inner().unwrap();
+        let errs = errors.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
         if let Some(e) = errs.into_iter().next() {
             return Err(e);
         }
@@ -447,7 +454,10 @@ impl Pipeline {
     /// strategy (second artifact pass with the order-reversed matrix
     /// stack: order m paired with matrix id p−m).
     fn pjrt_raw(&self, block: &Block) -> anyhow::Result<PjrtRaw> {
-        let pjrt = self.pjrt.as_ref().expect("pjrt path");
+        let pjrt = self
+            .pjrt
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("pjrt path invoked without a loaded artifact"))?;
         let meta = &pjrt.meta;
         anyhow::ensure!(block.rows <= meta.b, "block exceeds artifact batch");
         anyhow::ensure!(block.d == meta.d, "block width mismatch");
@@ -464,9 +474,11 @@ impl Pipeline {
                         OwnedInput::new(r, &[meta.d, meta.k]),
                     ],
                 )?;
-                anyhow::ensure!(outs.len() == 2, "sketch artifact returns (u, m)");
                 let mut it = outs.into_iter();
-                (it.next().unwrap(), it.next().unwrap())
+                match (it.next(), it.next()) {
+                    (Some(u), Some(m)) => (u, m),
+                    _ => anyhow::bail!("sketch artifact returns (u, m)"),
+                }
             }
             Strategy::Alternative => {
                 // u-side: order m uses matrix id m.
@@ -481,9 +493,11 @@ impl Pipeline {
                         OwnedInput::new(r_stack, &[orders, meta.d, meta.k]),
                     ],
                 )?;
-                anyhow::ensure!(outs.len() == 2, "sketch artifact returns (u, m)");
                 let mut it = outs.into_iter();
-                (it.next().unwrap(), it.next().unwrap())
+                match (it.next(), it.next()) {
+                    (Some(u), Some(m)) => (u, m),
+                    _ => anyhow::bail!("sketch artifact returns (u, m)"),
+                }
             }
         };
         let v = if matches!(self.cfg.strategy, Strategy::Alternative) {
@@ -500,8 +514,11 @@ impl Pipeline {
                     OwnedInput::new(r_stack, &[orders, meta.d, meta.k]),
                 ],
             )?;
-            anyhow::ensure!(!outs.is_empty(), "v-side artifact returns (u, ..)");
-            Some(outs.into_iter().next().unwrap())
+            let vout = outs
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("v-side artifact returns (u, ..)"))?;
+            Some(vout)
         } else {
             None
         };
@@ -514,7 +531,11 @@ impl Pipeline {
     /// [`Pipeline::sketch_block_pjrt_columnar`].
     fn sketch_block_pjrt(&self, block: &Block) -> anyhow::Result<Vec<RowSketch>> {
         let (u, m, v) = self.pjrt_raw(block)?;
-        let meta = &self.pjrt.as_ref().expect("pjrt path").meta;
+        let meta = &self
+            .pjrt
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("pjrt path invoked without a loaded artifact"))?
+            .meta;
         let orders = self.dec.orders();
         let mut sketches = self.unpack_sketches(block, meta, &u, &m);
         if let Some(v) = v {
@@ -538,7 +559,11 @@ impl Pipeline {
     /// sketches, exactly like the GEMM ingest path.
     fn sketch_block_pjrt_columnar(&self, block: &Block) -> anyhow::Result<ColumnarBlock> {
         let (u, m, v) = self.pjrt_raw(block)?;
-        let meta = &self.pjrt.as_ref().expect("pjrt path").meta;
+        let meta = &self
+            .pjrt
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("pjrt path invoked without a loaded artifact"))?
+            .meta;
         Ok(assemble_columnar(
             self.dec.orders(),
             meta.k,
@@ -722,11 +747,11 @@ impl Pipeline {
         }
         let lists = self.top_k_sketched(&snap, &known, top);
         self.metrics.queries_served.fetch_add(known.len() as u64, Ordering::Relaxed);
+        // `lists` carries exactly one entry per true flag in `present`;
+        // `flatten` (rather than an assertion) keeps the serving path
+        // panic-free even if that invariant were ever broken.
         let mut it = lists.into_iter();
-        present
-            .into_iter()
-            .map(|p| p.then(|| it.next().expect("one list per known query")))
-            .collect()
+        present.into_iter().map(|p| p.then(|| it.next()).flatten()).collect()
     }
 
     /// Shared top-k scan: already-sketched queries against one snapshot.
@@ -793,7 +818,7 @@ impl Pipeline {
                         return Vec::new();
                     }
                     let rows: Vec<RowSketch> =
-                        ids.iter().map(|&id| snap.get(id).unwrap()).collect();
+                        ids.iter().filter_map(|&id| snap.get(id)).collect();
                     let mut out = vec![0.0f64; n * (n - 1) / 2];
                     if let Ok(()) = self.all_pairs_pjrt(&rows, &meta, &mut out) {
                         self.metrics
@@ -829,7 +854,7 @@ impl Pipeline {
         }
         // MLE consumes per-order norms/moments the arena does not hold;
         // materialize per-row sketches once from the snapshot.
-        let rows: Vec<RowSketch> = ids.iter().map(|&id| snap.get(id).unwrap()).collect();
+        let rows: Vec<RowSketch> = ids.iter().filter_map(|&id| snap.get(id)).collect();
         self.per_row_condensed(&rows)
     }
 
@@ -843,7 +868,7 @@ impl Pipeline {
         if ids.len() < 2 {
             return Vec::new();
         }
-        let rows: Vec<RowSketch> = ids.iter().map(|&id| snap.get(id).unwrap()).collect();
+        let rows: Vec<RowSketch> = ids.iter().filter_map(|&id| snap.get(id)).collect();
         self.per_row_condensed(&rows)
     }
 
@@ -899,7 +924,11 @@ impl Pipeline {
         let (b, k, p) = (meta.b, meta.k, self.dec.p());
         let orders = self.dec.orders();
         anyhow::ensure!(meta.b2 == b, "estimate artifact must be square-blocked");
-        self.pjrt.as_ref().unwrap().handle.warm(&meta.name)?;
+        let pjrt = self
+            .pjrt
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("pjrt path invoked without a loaded artifact"))?;
+        pjrt.handle.warm(&meta.name)?;
         // Pack per-block stacks once: U from uside, V from vside, plus
         // marginal p-norms.
         let blocks = n.div_ceil(b);
@@ -922,7 +951,7 @@ impl Pipeline {
             for bj in bi..blocks {
                 let (u, mx) = &packed_u[bi];
                 let (v, my) = &packed_v[bj];
-                let outs = self.pjrt.as_ref().unwrap().handle.run(
+                let outs = pjrt.handle.run(
                     &meta.name,
                     vec![
                         OwnedInput::new(u.clone(), &[orders, b, k]),
@@ -1166,7 +1195,7 @@ impl Pipeline {
     /// observes a newer epoch. The cache lock is held across a rebuild,
     /// so racing top-k requests build each epoch's index exactly once.
     fn serving_index(&self, snap: &Arc<StoreSnapshot>) -> anyhow::Result<Arc<ServingIndex>> {
-        let mut cache = self.knn_cache.lock().unwrap();
+        let mut cache = self.knn_cache.lock_recover();
         if let Some((epoch, serving)) = cache.as_ref() {
             if *epoch == snap.epoch() {
                 return Ok(Arc::clone(serving));
@@ -1225,6 +1254,7 @@ fn assemble_columnar(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::core::decompose::exact_distance;

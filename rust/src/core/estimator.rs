@@ -34,6 +34,9 @@
 //! `squareform` order). All take a `workers` thread count; results are
 //! deterministic in it.
 
+// Serving path: clippy backs the pallas-lint serving-no-panic rule.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -270,7 +273,9 @@ where
     F: Fn(Vec<T>) + Sync,
 {
     if bundles.len() == 1 {
-        work(bundles.pop().expect("one bundle"));
+        if let Some(only) = bundles.pop() {
+            work(only);
+        }
         return;
     }
     std::thread::scope(|scope| {
@@ -466,6 +471,7 @@ pub fn estimate_condensed_arena<A: SketchPanels + ?Sized>(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::core::decompose::exact_distance;

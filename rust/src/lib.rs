@@ -21,6 +21,7 @@
 //! * [`experiments`] — the E1..E11 reproduction harness (one per paper
 //!   claim; see DESIGN.md §4).
 
+pub mod analysis;
 pub mod api;
 pub mod baselines;
 pub mod bench_support;

@@ -27,6 +27,9 @@
 //!              raw-data index rebuild), with optional exact re-ranking.
 //!   exp      — run a paper experiment (e1..e11) or `all`.
 //!   platform — print the PJRT platform and artifact inventory.
+//!   lint     — run pallas-lint ([`lpsketch::analysis`]) over the
+//!              crate sources: the serving-path panic, codec
+//!              allocation, and lock/epoch discipline gate.
 //!
 //! Global flags are [`lpsketch::config::Config`] keys (`--p 4 --k 128
 //! --strategy basic --dist normal --pjrt ...`); see README.
@@ -45,7 +48,7 @@ use lpsketch::runtime::Engine;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: lpsketch [--key value ...] <ingest|pairs|query|serve|client|knn|exp|platform> [args]\n\
+        "usage: lpsketch [--key value ...] <ingest|pairs|query|serve|client|knn|exp|platform|lint> [args]\n\
          \n\
          data source: --data <file.bin|file.csv> | synthetic --data-dist --n --d | --data corpus\n\
          persistence: ingest --save-sketches <file.lpsk> (O(nk) state; the matrix can be discarded)\n\
@@ -58,7 +61,8 @@ fn usage() -> ! {
          serve:       lpsketch serve [clients] (in-process stress demo; --query-workers N)\n\
                       lpsketch serve --listen <addr> [--load-sketches f.lpsk] (TCP server)\n\
          client:      lpsketch client --connect <addr> <ping|stats|query a b ...|knn <id> <m>>\n\
-         knn:         lpsketch knn <row-id> <m> [--rerank N]"
+         knn:         lpsketch knn <row-id> <m> [--rerank N]\n\
+         lint:        lpsketch lint [src-root] (default rust/src; exits 1 on findings)"
     );
     std::process::exit(2);
 }
@@ -180,6 +184,28 @@ fn main() -> anyhow::Result<()> {
     let Some(cmd) = positional.first() else { usage() };
 
     match cmd.as_str() {
+        "lint" => {
+            let root = positional
+                .get(1)
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(|| std::path::PathBuf::from("rust/src"));
+            anyhow::ensure!(
+                root.is_dir(),
+                "lint root {} is not a directory (run from the repo root, or pass one)",
+                root.display()
+            );
+            let files = lpsketch::analysis::count_rs_files(&root)?;
+            let findings = lpsketch::analysis::analyze_tree(&root)?;
+            if findings.is_empty() {
+                println!("pallas-lint: {files} files clean");
+            } else {
+                for f in &findings {
+                    println!("{}", f.render());
+                }
+                eprintln!("pallas-lint: {} finding(s) across {files} files", findings.len());
+                std::process::exit(1);
+            }
+        }
         "platform" => {
             let engine = Engine::start(&cfg.artifacts_dir)?;
             let h = engine.handle();

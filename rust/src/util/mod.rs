@@ -1,4 +1,6 @@
-//! Shared utilities: PRNGs, normal sampling, streaming statistics.
+//! Shared utilities: PRNGs, normal sampling, streaming statistics,
+//! poison-recovering lock acquisition.
 pub mod normal;
 pub mod rng;
 pub mod stats;
+pub mod sync;

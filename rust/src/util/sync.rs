@@ -1,0 +1,93 @@
+//! Poison-recovering lock acquisition.
+//!
+//! Every critical section in the store/pipeline upholds its invariants
+//! at each intermediate point (epoch bumps happen inside the guard,
+//! shard maps are replaced atomically via `Arc` swaps), so a thread
+//! that panicked while holding a lock leaves the protected data in a
+//! *consistent* state — the poison flag records that a panic happened,
+//! not that the data is torn. Propagating the `PoisonError` (the old
+//! `.lock().unwrap()` idiom) therefore converts one crashed worker
+//! into a permanent denial of service: every later `lock()` panics
+//! forever. These helpers recover the guard instead, which is the
+//! behavior `std` itself recommends for consistent-by-construction
+//! data (`PoisonError::into_inner`).
+//!
+//! Serving-path code uses these exclusively; `pallas-lint`'s
+//! `serving-no-panic` rule flags the raw `.lock().unwrap()` form.
+
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// [`Mutex`] acquisition that recovers from poisoning.
+pub trait MutexExt<T> {
+    /// Lock, recovering the guard if a previous holder panicked.
+    fn lock_recover(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> MutexExt<T> for Mutex<T> {
+    fn lock_recover(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// [`RwLock`] acquisition that recovers from poisoning.
+pub trait RwLockExt<T> {
+    /// Shared-read, recovering the guard if a writer panicked.
+    fn read_recover(&self) -> RwLockReadGuard<'_, T>;
+    /// Exclusive-write, recovering the guard if a holder panicked.
+    fn write_recover(&self) -> RwLockWriteGuard<'_, T>;
+}
+
+impl<T> RwLockExt<T> for RwLock<T> {
+    fn read_recover(&self) -> RwLockReadGuard<'_, T> {
+        self.read().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn write_recover(&self) -> RwLockWriteGuard<'_, T> {
+        self.write().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn mutex_recovers_after_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*m.lock_recover(), 7);
+        *m.lock_recover() = 9;
+        assert_eq!(*m.lock_recover(), 9);
+    }
+
+    #[test]
+    fn rwlock_recovers_after_poison() {
+        let l = Arc::new(RwLock::new(1u32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(l.read().is_err(), "rwlock should be poisoned");
+        assert_eq!(*l.read_recover(), 1);
+        *l.write_recover() = 2;
+        assert_eq!(*l.read_recover(), 2);
+    }
+
+    #[test]
+    fn unpoisoned_path_is_transparent() {
+        let m = Mutex::new(3u32);
+        assert_eq!(*m.lock_recover(), 3);
+        let l = RwLock::new(4u32);
+        assert_eq!(*l.read_recover(), 4);
+        assert_eq!(*l.write_recover(), 4);
+    }
+}

@@ -1,0 +1,45 @@
+//! The pallas-lint gate: the whole `rust/src/` tree must be free of
+//! un-pragma'd serving-discipline violations. This is the tier-1 /
+//! CI enforcement point for the conventions the analyzer encodes —
+//! see `rust/src/analysis/` and the README's "Static analysis" section.
+
+use std::path::Path;
+
+use lpsketch::analysis;
+
+fn src_root() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src"))
+}
+
+#[test]
+fn tree_is_clean() {
+    let findings = analysis::analyze_tree(src_root()).expect("walking rust/src");
+    assert!(
+        findings.is_empty(),
+        "pallas-lint found {} violation(s):\n{}\n\
+         fix the site, or (only when provably infallible) add\n\
+         `// pallas-lint: allow(<rule>) -- <reason>` on or above the line",
+        findings.len(),
+        findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn gate_actually_walked_the_crate() {
+    // A refactor that moves the sources (or a walker bug) must not let
+    // the gate pass vacuously.
+    let files = analysis::count_rs_files(src_root()).expect("walking rust/src");
+    assert!(files >= 30, "expected the full crate, saw only {files} .rs files");
+}
+
+#[test]
+fn gate_catches_a_planted_violation() {
+    // End-to-end sanity: the same entry point the gate uses does fail
+    // on a violating file under a scoped path.
+    let bad = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    let findings = analysis::analyze_source("api/wire.rs", bad);
+    assert!(
+        findings.iter().any(|f| f.rule == analysis::SERVING_NO_PANIC),
+        "{findings:?}"
+    );
+}
