@@ -1,0 +1,176 @@
+//! Durability-layer benchmarks — the ISSUE 7 acceptance numbers,
+//! recorded machine-readably in `BENCH_durability.json`:
+//!
+//!   * ingest throughput with the WAL off vs on (the per-batch
+//!     append+fsync is the entire price of the ack guarantee)
+//!   * recovery (`Durability::open`) time as a function of WAL length,
+//!     for an unsealed WAL tail (full replay) and for the same rows
+//!     after a seal (segment-file adoption, near-empty WAL)
+//!
+//! Works against scratch directories under the system temp dir;
+//! `LPSKETCH_BENCH_FAST=1` shrinks sizes for CI.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use lpsketch::bench_support::{bench, fmt_duration, Table};
+use lpsketch::config::Config;
+use lpsketch::coordinator::{Durability, MetaShape, Pipeline, RealFs};
+use lpsketch::data::{gen, DataDist};
+use lpsketch::projection::sketcher::Sketcher;
+
+fn fresh_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("lpsketch_durability_bench")
+        .join(format!("{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn wal_files(root: &std::path::Path) -> HashSet<PathBuf> {
+    std::fs::read_dir(root.join("wal"))
+        .map(|rd| rd.filter_map(|e| e.ok().map(|e| e.path())).collect())
+        .unwrap_or_default()
+}
+
+/// Remove WAL files a benchmarked reopen created beyond `baseline`, so
+/// repeated recoveries measure a stable directory instead of an
+/// ever-growing pile of header-only logs.
+fn prune_wal(root: &std::path::Path, baseline: &HashSet<PathBuf>) {
+    for path in wal_files(root) {
+        if !baseline.contains(&path) {
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+fn main() {
+    let fast = std::env::var("LPSKETCH_BENCH_FAST").as_deref() == Ok("1");
+    let mut table = Table::new(&["path", "config", "mean", "p95", "throughput"]);
+
+    let mut cfg = Config::default();
+    let (n, d, k) = if fast { (128usize, 64usize, 16usize) } else { (256, 64, 32) };
+    cfg.n = n;
+    cfg.d = d;
+    cfg.k = k;
+    cfg.p = 4;
+    cfg.block_rows = 32;
+    cfg.workers = 2;
+    cfg.compact_min_rows = 0; // isolate the append path from compaction
+    let shape = MetaShape::from_config(&cfg);
+    let data = gen::generate(DataDist::Gaussian, n, d, 7);
+
+    // -- Ingest throughput, WAL off vs on ---------------------------------
+    // Both arms repeatedly ingest the same batch into a growing store, so
+    // the only difference between them is the durability append+fsync per
+    // acknowledged batch.
+    let plain = Pipeline::new(cfg.clone()).unwrap();
+    let m_off = bench("ingest/wal_off", Some(n as u64), || {
+        plain.ingest(&data).unwrap();
+    });
+    table.row(&[
+        "ingest".into(),
+        format!("wal off n={n} d={d} k={k}"),
+        fmt_duration(m_off.mean),
+        fmt_duration(m_off.p95),
+        format!("{:.1} Krows/s", m_off.throughput().unwrap() / 1e3),
+    ]);
+
+    let ingest_root = fresh_root("ingest_on");
+    let opened = Durability::open(Arc::new(RealFs), &ingest_root, shape, cfg.workers).unwrap();
+    let mut durable_pipeline =
+        Pipeline::with_store_restored(cfg.clone(), opened.store, true).unwrap();
+    durable_pipeline.attach_durability(Arc::new(opened.durability));
+    let m_on = bench("ingest/wal_on", Some(n as u64), || {
+        durable_pipeline.ingest(&data).unwrap();
+    });
+    table.row(&[
+        "ingest".into(),
+        format!("wal on n={n} d={d} k={k}"),
+        fmt_duration(m_on.mean),
+        fmt_duration(m_on.p95),
+        format!("{:.1} Krows/s", m_on.throughput().unwrap() / 1e3),
+    ]);
+    let overhead = m_on.mean.as_secs_f64() / m_off.mean.as_secs_f64();
+    println!(
+        "durable ingest overhead: {overhead:.2}x ({} -> {})",
+        fmt_duration(m_off.mean),
+        fmt_duration(m_on.mean),
+    );
+    drop(durable_pipeline);
+    let _ = std::fs::remove_dir_all(&ingest_root);
+
+    // -- Recovery time vs WAL length --------------------------------------
+    // One pre-sketched block logged at disjoint bases; `nblocks` scales
+    // the log. The sealed arm recovers the same rows from segment files
+    // (the post-compaction steady state), pricing what the seal buys.
+    let block_rows = 64usize;
+    let sk = Sketcher::new(cfg.projection_spec(), cfg.p);
+    let bdata = gen::generate(DataDist::Gaussian, block_rows, d, 9);
+    let brefs: Vec<&[f32]> = (0..block_rows).map(|i| bdata.row(i)).collect();
+    let block = sk.sketch_block(&brefs, 1);
+    let block_counts: &[usize] = if fast { &[2, 8] } else { &[2, 8, 32] };
+    let mut recovery_json: Vec<String> = Vec::new();
+    for &nblocks in block_counts {
+        let rows = nblocks * block_rows;
+        let root = fresh_root(&format!("rc_{nblocks}"));
+        {
+            let o = Durability::open(Arc::new(RealFs), &root, shape, cfg.workers).unwrap();
+            for b in 0..nblocks {
+                let base = (b * block_rows) as u64;
+                o.store.insert_block_columnar(base, block.clone());
+                o.durability.log_block(base, &block).unwrap();
+            }
+        }
+        for sealed in [false, true] {
+            if sealed {
+                let o = Durability::open(Arc::new(RealFs), &root, shape, cfg.workers).unwrap();
+                o.durability.seal(&o.store).unwrap();
+            }
+            let state = if sealed { "sealed" } else { "wal_tail" };
+            let baseline = wal_files(&root);
+            let m = bench(&format!("recover/{state}_{nblocks}"), Some(rows as u64), || {
+                let o = Durability::open(Arc::new(RealFs), &root, shape, cfg.workers).unwrap();
+                assert_eq!(o.store.len(), rows);
+                drop(o);
+                prune_wal(&root, &baseline);
+            });
+            table.row(&[
+                "recover".into(),
+                format!("{state} blocks={nblocks} rows={rows}"),
+                fmt_duration(m.mean),
+                fmt_duration(m.p95),
+                format!("{:.1} Krows/s", m.throughput().unwrap() / 1e3),
+            ]);
+            recovery_json.push(format!(
+                "    {{\"state\": \"{state}\", \"blocks\": {nblocks}, \"rows\": {rows}, \
+                 \"mean_s\": {:.6e}, \"rows_per_s\": {:.1}}}",
+                m.mean.as_secs_f64(),
+                m.throughput().unwrap(),
+            ));
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"durability\",\n  \"n\": {n},\n  \"d\": {d},\n  \"k\": {k},\n  \
+         \"p\": 4,\n  \"block_rows_recovery\": {block_rows},\n  \"ingest\": [\n    \
+         {{\"path\": \"wal_off\", \"mean_s\": {:.6e}, \"rows_per_s\": {:.1}}},\n    \
+         {{\"path\": \"wal_on\", \"mean_s\": {:.6e}, \"rows_per_s\": {:.1}}}\n  ],\n  \
+         \"wal_overhead_x\": {overhead:.2},\n  \"recovery\": [\n{}\n  ]\n}}\n",
+        m_off.mean.as_secs_f64(),
+        m_off.throughput().unwrap(),
+        m_on.mean.as_secs_f64(),
+        m_on.throughput().unwrap(),
+        recovery_json.join(",\n"),
+    );
+    if let Err(e) = std::fs::write("BENCH_durability.json", &json) {
+        eprintln!("(could not write BENCH_durability.json: {e})");
+    } else {
+        println!("wrote BENCH_durability.json");
+    }
+
+    table.print();
+}

@@ -287,6 +287,50 @@ mod tests {
         );
     }
 
+    #[test]
+    fn epoch_foreign_mode_bans_store_internals() {
+        // Outside state.rs the rule has no mutator definitions to check;
+        // it bans direct store-internals access instead.
+        let src = "pub fn pass(store: &SketchStore) {\n\
+                store.epoch.fetch_add(1, Ordering::Release);\n\
+            }\n";
+        let f = analyze_source("coordinator/compactor.rs", src);
+        assert!(fires(&f, WRITER_BUMPS_EPOCH), "{f:?}");
+        assert!(f.iter().any(|x| x.message.contains("manifest mutator")), "{f:?}");
+        // Going through the sanctioned mutators is clean.
+        let ok = "pub fn pass(store: &SketchStore) {\n\
+                store.compact_segments(1, 2);\n\
+                let segs = store.segments_snapshot();\n\
+            }\n";
+        let f = analyze_source("coordinator/compactor.rs", ok);
+        assert!(!fires(&f, WRITER_BUMPS_EPOCH), "{f:?}");
+    }
+
+    #[test]
+    fn durability_modules_are_in_scope() {
+        use super::rules::rules_for;
+        for file in ["coordinator/durable.rs", "coordinator/wal.rs", "coordinator/segfile.rs"] {
+            let rules = rules_for(file);
+            assert!(rules.contains(&SERVING_NO_PANIC), "{file}: {rules:?}");
+            assert!(rules.contains(&LEN_BEFORE_ALLOC), "{file}: {rules:?}");
+            assert!(rules.contains(&GUARD_ACROSS_BLOCKING), "{file}: {rules:?}");
+        }
+        let compactor = rules_for("coordinator/compactor.rs");
+        assert!(compactor.contains(&SERVING_NO_PANIC), "{compactor:?}");
+        assert!(compactor.contains(&WRITER_BUMPS_EPOCH), "{compactor:?}");
+        assert!(compactor.contains(&GUARD_ACROSS_BLOCKING), "{compactor:?}");
+    }
+
+    #[test]
+    fn unvalidated_alloc_fires_in_wal() {
+        let src = "pub fn decode(n: usize) -> Vec<f32> {\n\
+                let out = Vec::with_capacity(n);\n\
+                out\n\
+            }\n";
+        let f = analyze_source("coordinator/wal.rs", src);
+        assert!(fires(&f, LEN_BEFORE_ALLOC), "{f:?}");
+    }
+
     // -- pragmas ------------------------------------------------------------
 
     #[test]

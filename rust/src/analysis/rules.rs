@@ -5,11 +5,11 @@
 //!
 //! | rule | scope | enforces |
 //! |------|-------|----------|
-//! | `serving-no-panic` | `api/`, `coordinator/state.rs`, `coordinator/pipeline.rs`, `core/estimator.rs` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` on serving paths |
+//! | `serving-no-panic` | `api/`, `coordinator/state.rs`, `coordinator/pipeline.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs`, `coordinator/compactor.rs`, `core/estimator.rs` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` on serving paths |
 //! | `no-index-untrusted` | `api/` | no `x[..]` indexing at the untrusted-input boundary — use `get(..)` |
-//! | `len-before-alloc` | `api/wire.rs`, `coordinator/persist.rs` | decoded-count allocations need a cap/bytes-present check earlier in the same function |
+//! | `len-before-alloc` | `api/wire.rs`, `coordinator/persist.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs` | decoded-count allocations need a cap/bytes-present check earlier in the same function |
 //! | `guard-across-blocking` | `api/`, `coordinator/` | lock guards must not be live across channel ops, thread scopes, or a second blocking lock |
-//! | `writer-bumps-epoch` | `coordinator/state.rs` | every manifest mutator bumps the store epoch inside its write critical section |
+//! | `writer-bumps-epoch` | `coordinator/state.rs`, `coordinator/compactor.rs` | in `state.rs`, every manifest mutator bumps the store epoch inside its write critical section; elsewhere in scope, store internals must not be touched directly (the mutators are the only sanctioned write path) |
 //!
 //! `no-index-untrusted` is deliberately **not** applied to the numeric
 //! kernels (`core/estimator.rs`): they index with loop-bounded offsets
@@ -65,6 +65,10 @@ pub fn rules_for(rel: &str) -> Vec<&'static str> {
     let serving = rel.starts_with("api/")
         || rel == "coordinator/state.rs"
         || rel == "coordinator/pipeline.rs"
+        || rel == "coordinator/durable.rs"
+        || rel == "coordinator/wal.rs"
+        || rel == "coordinator/segfile.rs"
+        || rel == "coordinator/compactor.rs"
         || rel == "core/estimator.rs";
     if serving {
         rules.push(SERVING_NO_PANIC);
@@ -72,13 +76,18 @@ pub fn rules_for(rel: &str) -> Vec<&'static str> {
     if rel.starts_with("api/") {
         rules.push(NO_INDEX_UNTRUSTED);
     }
-    if rel == "api/wire.rs" || rel == "coordinator/persist.rs" {
+    if rel == "api/wire.rs"
+        || rel == "coordinator/persist.rs"
+        || rel == "coordinator/durable.rs"
+        || rel == "coordinator/wal.rs"
+        || rel == "coordinator/segfile.rs"
+    {
         rules.push(LEN_BEFORE_ALLOC);
     }
     if rel.starts_with("api/") || rel.starts_with("coordinator/") {
         rules.push(GUARD_ACROSS_BLOCKING);
     }
-    if rel == "coordinator/state.rs" {
+    if rel == "coordinator/state.rs" || rel == "coordinator/compactor.rs" {
         rules.push(WRITER_BUMPS_EPOCH);
     }
     rules
@@ -745,7 +754,32 @@ fn assignment_eq(line: &str, from: usize) -> Option<usize> {
 // ---------------------------------------------------------------------------
 // writer-bumps-epoch
 
+/// Store-internals tokens banned outside `state.rs`: touching these
+/// directly bypasses the epoch bump the manifest mutators guarantee,
+/// so snapshot readers could miss the write.
+const STORE_INTERNALS: &[&str] = &[".epoch.fetch_add(", ".shards[", ".segments."];
+
 fn writer_bumps_epoch(rel: &str, code: &str, out: &mut Vec<Finding>) {
+    if rel != "coordinator/state.rs" {
+        // Non-defining files (e.g. the compactor): the manifest
+        // mutators live in state.rs, so the rule here bans direct
+        // store-internals access instead.
+        for tok in STORE_INTERNALS {
+            for at in token_positions(code, tok) {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: lexer::line_of(code, at),
+                    rule: WRITER_BUMPS_EPOCH,
+                    message: format!(
+                        "`{tok}..` touches store internals outside state.rs — go through a \
+                         manifest mutator ({}) so the epoch bump is guaranteed",
+                        MUTATOR_MANIFEST.join(" / ")
+                    ),
+                });
+            }
+        }
+        return;
+    }
     let spans = fn_spans(code);
     let test_spans = lexer::test_spans(code);
     let in_test =

@@ -32,5 +32,5 @@ pub mod service;
 pub mod wire;
 
 pub use protocol::{ApiStats, Request, Response, TopKTarget};
-pub use server::{Client, Server, ServerGuard};
+pub use server::{Client, ConnPolicy, Server, ServerGuard};
 pub use service::{ApiHandle, ApiJob};

@@ -11,20 +11,134 @@
 //! A malformed frame gets a best-effort `Error` response and the
 //! connection is dropped (a corrupt length prefix leaves no resync
 //! point). Clean client shutdown is just closing the socket.
+//!
+//! Connections are paced by a [`ConnPolicy`]: a client sitting idle
+//! between requests past `max_idle` is closed cleanly, while a client
+//! that stalls *inside* a frame (slowloris-style dribbling) is
+//! disconnected once its in-frame wait budget `max_stall` is spent —
+//! so a stalled or malicious peer can never pin a connection thread
+//! forever. Stall disconnects and malformed frames both increment the
+//! shared `wire_errors` counter (exported via pipeline metrics).
 
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{self, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::protocol::{ApiStats, Request, Response, TopKTarget};
 use super::service::ApiHandle;
 use super::wire;
 
+/// Per-connection pacing policy.
+#[derive(Clone)]
+pub struct ConnPolicy {
+    /// How long a client may sit between requests before the server
+    /// closes the connection (a clean close, not an error — idle
+    /// keep-alive clients are well-behaved).
+    pub max_idle: Duration,
+    /// Total in-frame wait budget: once a request's first byte arrived,
+    /// the cumulative time spent waiting for the rest may not exceed
+    /// this. Dribbling one byte per poll slice does not reset it.
+    pub max_stall: Duration,
+    /// Poll slice for the socket read timeout — the granularity at
+    /// which the idle/stall budgets are charged.
+    pub poll: Duration,
+    /// Shared malformed-frame / stall-disconnect counter (see
+    /// `Pipeline::wire_errors_handle`).
+    pub wire_errors: Arc<AtomicU64>,
+}
+
+impl Default for ConnPolicy {
+    fn default() -> Self {
+        ConnPolicy {
+            max_idle: Duration::from_secs(300),
+            max_stall: Duration::from_secs(30),
+            poll: Duration::from_millis(250),
+            wire_errors: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Why a [`PacedReader`] stopped delivering bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Expiry {
+    /// Idle budget spent between requests — treat as a clean close.
+    Idle,
+    /// Stall budget spent inside a frame — a wire error.
+    Stall,
+}
+
+/// A [`Read`] over the connection that charges wait time against the
+/// policy budgets. On expiry it reports EOF (`Ok(0)`) and records which
+/// budget ran out; the serving loop reads that out of band, because the
+/// flag survives however many layers (`BufReader`, anyhow contexts) the
+/// I/O error would have been wrapped in.
+struct PacedReader {
+    stream: TcpStream,
+    policy: ConnPolicy,
+    in_frame: bool,
+    waited: Duration,
+    expired: Option<Expiry>,
+}
+
+impl PacedReader {
+    fn new(stream: TcpStream, policy: ConnPolicy) -> io::Result<Self> {
+        stream.set_read_timeout(Some(policy.poll))?;
+        // Bound the best-effort error write too: flushing to a stalled
+        // peer must not pin the thread either.
+        stream.set_write_timeout(Some(policy.max_stall))?;
+        Ok(PacedReader { stream, policy, in_frame: false, waited: Duration::ZERO, expired: None })
+    }
+
+    /// Reset to the between-requests state: the idle budget applies
+    /// until the next byte arrives.
+    fn begin_frame(&mut self) {
+        self.in_frame = false;
+        self.waited = Duration::ZERO;
+    }
+
+    fn expiry(&self) -> Option<Expiry> {
+        self.expired
+    }
+}
+
+impl Read for PacedReader {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        loop {
+            if self.expired.is_some() {
+                return Ok(0);
+            }
+            match self.stream.read(buf) {
+                Ok(n) => {
+                    if n > 0 {
+                        self.in_frame = true;
+                    }
+                    return Ok(n);
+                }
+                Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+                {
+                    self.waited += self.policy.poll;
+                    let budget =
+                        if self.in_frame { self.policy.max_stall } else { self.policy.max_idle };
+                    if self.waited >= budget {
+                        self.expired =
+                            Some(if self.in_frame { Expiry::Stall } else { Expiry::Idle });
+                        return Ok(0);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
 /// A bound-but-not-yet-serving TCP server for the typed API.
 pub struct Server {
     listener: TcpListener,
     handle: ApiHandle,
+    policy: ConnPolicy,
 }
 
 impl Server {
@@ -32,9 +146,14 @@ impl Server {
     /// OS-assigned port) and attach the query-service handle every
     /// connection will be served from.
     pub fn bind(addr: &str, handle: ApiHandle) -> anyhow::Result<Self> {
+        Self::bind_with(addr, handle, ConnPolicy::default())
+    }
+
+    /// [`Server::bind`] with an explicit pacing policy / error counter.
+    pub fn bind_with(addr: &str, handle: ApiHandle, policy: ConnPolicy) -> anyhow::Result<Self> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
-        Ok(Server { listener, handle })
+        Ok(Server { listener, handle, policy })
     }
 
     pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
@@ -48,8 +167,9 @@ impl Server {
             match conn {
                 Ok(stream) => {
                     let handle = self.handle.clone();
+                    let policy = self.policy.clone();
                     std::thread::spawn(move || {
-                        let _ = serve_conn(stream, handle);
+                        let _ = serve_conn(stream, handle, policy);
                     });
                 }
                 Err(e) => eprintln!("accept error: {e}"),
@@ -66,6 +186,7 @@ impl Server {
         let accept_stop = Arc::clone(&stop);
         let handle = self.handle;
         let listener = self.listener;
+        let policy = self.policy;
         let join = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if accept_stop.load(Ordering::Relaxed) {
@@ -73,8 +194,9 @@ impl Server {
                 }
                 if let Ok(stream) = conn {
                     let handle = handle.clone();
+                    let policy = policy.clone();
                     std::thread::spawn(move || {
-                        let _ = serve_conn(stream, handle);
+                        let _ = serve_conn(stream, handle, policy);
                     });
                 }
             }
@@ -107,15 +229,26 @@ impl ServerGuard {
     }
 }
 
-fn serve_conn(stream: TcpStream, handle: ApiHandle) -> anyhow::Result<()> {
+fn serve_conn(stream: TcpStream, handle: ApiHandle, policy: ConnPolicy) -> anyhow::Result<()> {
     stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
+    let wire_errors = Arc::clone(&policy.wire_errors);
+    let writer_stream = stream.try_clone()?;
+    let mut reader = BufReader::new(PacedReader::new(stream, policy)?);
+    let mut writer = BufWriter::new(writer_stream);
     loop {
+        reader.get_mut().begin_frame();
         let req = match wire::read_request(&mut reader) {
             Ok(Some(req)) => req,
-            Ok(None) => return Ok(()), // client closed cleanly
+            // Clean client close — or the idle budget ran out, which is
+            // the same thing from the server's point of view.
+            Ok(None) => return Ok(()),
             Err(e) => {
+                wire_errors.fetch_add(1, Ordering::Relaxed);
+                if reader.get_ref().expiry() == Some(Expiry::Stall) {
+                    // The peer stopped sending mid-frame; don't write a
+                    // farewell it isn't reading.
+                    anyhow::bail!("connection stalled mid-frame (read budget spent)");
+                }
                 let _ = wire::write_response(
                     &mut writer,
                     &Response::Error(format!("bad request frame: {e}")),
@@ -292,6 +425,70 @@ mod tests {
         }
         // Server hangs up after an unrecoverable frame.
         assert_eq!(wire::read_response(&mut reader).unwrap(), None);
+        guard.stop();
+    }
+
+    fn test_policy(idle_ms: u64, stall_ms: u64) -> ConnPolicy {
+        ConnPolicy {
+            max_idle: Duration::from_millis(idle_ms),
+            max_stall: Duration::from_millis(stall_ms),
+            poll: Duration::from_millis(20),
+            wire_errors: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    #[test]
+    fn idle_connection_is_closed_cleanly_without_counting() {
+        let (pipeline, _) = served_pipeline();
+        let handle = pipeline.spawn_query_service();
+        let policy = test_policy(120, 5000);
+        let errors = Arc::clone(&policy.wire_errors);
+        let guard = Server::bind_with("127.0.0.1:0", handle, policy).unwrap().spawn().unwrap();
+        let stream = TcpStream::connect(guard.addr()).unwrap();
+        // Send nothing: the server must hang up on its own.
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        assert_eq!(wire::read_response(&mut reader).unwrap(), None, "idle close");
+        assert_eq!(errors.load(Ordering::Relaxed), 0, "idle is not a wire error");
+        guard.stop();
+    }
+
+    #[test]
+    fn stalled_mid_frame_connection_is_dropped_and_counted() {
+        let (pipeline, _) = served_pipeline();
+        let handle = pipeline.spawn_query_service();
+        let policy = test_policy(5000, 120);
+        let errors = Arc::clone(&policy.wire_errors);
+        let guard = Server::bind_with("127.0.0.1:0", handle, policy).unwrap().spawn().unwrap();
+        let mut stream = TcpStream::connect(guard.addr()).unwrap();
+        // Two bytes of a frame, then silence: slowloris. The stall
+        // budget (not the much longer idle budget) must apply.
+        stream.write_all(&[0x01, 0x02]).unwrap();
+        stream.flush().unwrap();
+        let t0 = std::time::Instant::now();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        assert_eq!(wire::read_response(&mut reader).unwrap(), None, "server hung up");
+        assert!(t0.elapsed() < Duration::from_secs(4), "stall budget applied, not idle");
+        assert_eq!(errors.load(Ordering::Relaxed), 1, "stall counts as a wire error");
+        guard.stop();
+    }
+
+    #[test]
+    fn malformed_frame_increments_wire_errors() {
+        let (pipeline, _) = served_pipeline();
+        let handle = pipeline.spawn_query_service();
+        let policy = ConnPolicy::default();
+        let errors = Arc::clone(&policy.wire_errors);
+        let guard = Server::bind_with("127.0.0.1:0", handle, policy).unwrap().spawn().unwrap();
+        let mut stream = TcpStream::connect(guard.addr()).unwrap();
+        stream.write_all(b"garbage that is not a frame at all").unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        match wire::read_response(&mut reader).unwrap() {
+            Some(Response::Error(e)) => assert!(e.contains("bad request frame"), "{e}"),
+            other => panic!("expected an error response, got {other:?}"),
+        }
+        assert_eq!(wire::read_response(&mut reader).unwrap(), None);
+        assert_eq!(errors.load(Ordering::Relaxed), 1);
         guard.stop();
     }
 

@@ -57,6 +57,11 @@ pub struct Config {
     /// Segment compaction: merged segments grow to at most this many
     /// rows.
     pub compact_target_rows: usize,
+    /// Background compactor wake interval (durable mode), milliseconds.
+    pub compactor_interval_ms: u64,
+    /// Durable I/O: retries per seal pass before declaring the data
+    /// directory degraded (backoff doubles from 10ms).
+    pub io_retry_max: u32,
     /// Prefer the PJRT engine when artifacts match; fall back to pure
     /// rust otherwise.
     pub use_pjrt: bool,
@@ -87,6 +92,8 @@ impl Default for Config {
             ingest_gemm: true,
             compact_min_rows: 1024,
             compact_target_rows: 8192,
+            compactor_interval_ms: 1000,
+            io_retry_max: 4,
             use_pjrt: false,
             artifacts_dir: PathBuf::from("artifacts"),
             data_dist: DataDist::ZipfTf { exponent: 1.1, density: 0.1 },
@@ -121,6 +128,11 @@ impl Config {
             "compact-target-rows" | "compact_target_rows" => {
                 self.compact_target_rows = parse_nonzero(key, value)?
             }
+            "compactor-interval-ms" | "compactor_interval_ms" => {
+                self.compactor_interval_ms = value.parse()?;
+                anyhow::ensure!(self.compactor_interval_ms > 0, "{key} must be > 0");
+            }
+            "io-retry-max" | "io_retry_max" => self.io_retry_max = value.parse()?,
             "pjrt" | "use-pjrt" | "use_pjrt" => self.use_pjrt = parse_bool(value)?,
             "artifacts-dir" | "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
             "data-dist" | "data_dist" => self.data_dist = DataDist::parse(value)?,
@@ -307,6 +319,19 @@ mod tests {
         low.apply_args(args(&["--compact-target-rows", "512"])).unwrap();
         assert_eq!(low.compact_target_rows, 512);
         assert!(c.set("compact-target-rows", "0").is_err());
+    }
+
+    #[test]
+    fn durability_knobs_parse() {
+        let mut c = Config::default();
+        assert_eq!(c.compactor_interval_ms, 1000);
+        assert_eq!(c.io_retry_max, 4);
+        c.apply_args(args(&["--compactor-interval-ms", "50", "--io-retry-max", "0"])).unwrap();
+        assert_eq!(c.compactor_interval_ms, 50);
+        assert_eq!(c.io_retry_max, 0, "0 retries (fail fast) is legal");
+        c.set("compactor_interval_ms", "250").unwrap();
+        assert_eq!(c.compactor_interval_ms, 250);
+        assert!(c.set("compactor-interval-ms", "0").is_err());
     }
 
     #[test]

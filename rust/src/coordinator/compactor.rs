@@ -1,0 +1,182 @@
+//! The background compactor: a single thread that periodically merges
+//! small columnar segments *across ingest runs* (the per-ingest
+//! lifecycle hook only sees its own run's range) under the store's COW
+//! `compact_range` swap, then seals the result through the durability
+//! layer so restart replays only the WAL tail.
+//!
+//! Robustness contract:
+//!
+//! * **graceful shutdown** — dropping the [`Compactor`] disconnects its
+//!   channel; the thread runs one final drain pass (so the freshest
+//!   state is sealed) and exits, and `Drop` joins it.
+//! * **retry with backoff** — transient I/O errors retry up to
+//!   `io_retry_max` times with doubling sleeps before a pass is
+//!   declared failed.
+//! * **degraded mode** — a pass that exhausts its retries (data
+//!   directory unwritable, disk full) sets the `durable_degraded`
+//!   gauge and logs loudly, once per transition; reads keep serving
+//!   from memory and the next successful pass clears the flag. Never a
+//!   panic.
+
+// Serving path: clippy backs the pallas-lint serving-no-panic rule.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::pipeline::Pipeline;
+
+/// Handle to the background compaction thread. Dropping it shuts the
+/// thread down gracefully (drain-on-drop: one final compact+seal pass).
+pub struct Compactor {
+    tx: Option<mpsc::Sender<()>>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Compactor {
+    /// Spawn the compactor over `pipeline`, waking every `interval`
+    /// (and immediately on [`Compactor::poke`]).
+    pub fn spawn(pipeline: Arc<Pipeline>, interval: Duration) -> Compactor {
+        let (tx, rx) = mpsc::channel::<()>();
+        let join = std::thread::spawn(move || run_loop(&pipeline, interval, &rx));
+        Compactor { tx: Some(tx), join: Some(join) }
+    }
+
+    /// Request an immediate pass (e.g. right after a large ingest).
+    pub fn poke(&self) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(());
+        }
+    }
+}
+
+impl Drop for Compactor {
+    fn drop(&mut self) {
+        // Disconnect wakes the loop; it runs one final pass and exits.
+        drop(self.tx.take());
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+fn run_loop(pipeline: &Arc<Pipeline>, interval: Duration, rx: &mpsc::Receiver<()>) {
+    loop {
+        let shutdown = match rx.recv_timeout(interval) {
+            Ok(()) | Err(mpsc::RecvTimeoutError::Timeout) => false,
+            Err(mpsc::RecvTimeoutError::Disconnected) => true,
+        };
+        run_pass(pipeline);
+        if shutdown {
+            break;
+        }
+    }
+}
+
+/// One compact+seal pass — public so tests and the CLI can drive a
+/// pass synchronously (the CLI's durable `ingest` seals before exit).
+pub fn run_pass(pipeline: &Pipeline) {
+    let metrics = pipeline.metrics_raw();
+    metrics.compactor_passes.fetch_add(1, Ordering::Relaxed);
+    // Cross-run merge: `Pipeline::compact` scans the whole store (the
+    // ingest hook only compacts within its own run) and swaps merged
+    // segments in under the COW write lock.
+    let cfg = pipeline.config();
+    if cfg.compact_min_rows > 0 {
+        let _ = pipeline.compact();
+    }
+    let Some(durability) = pipeline.durability() else {
+        return;
+    };
+    // Seal with retry-with-backoff; exhaustion flips degraded mode.
+    let mut delay = Duration::from_millis(10);
+    let mut last_err = None;
+    for attempt in 0..=cfg.io_retry_max {
+        match durability.seal(pipeline.store()) {
+            Ok(report) => {
+                metrics.segments_sealed.fetch_add(report.segments_written, Ordering::Relaxed);
+                let (records, bytes) = durability.wal_stats();
+                metrics.wal_records.store(records, Ordering::Relaxed);
+                metrics.wal_bytes.store(bytes, Ordering::Relaxed);
+                if durability.set_degraded(false) {
+                    metrics.durable_degraded.store(0, Ordering::Relaxed);
+                    eprintln!("durability restored: data directory is writable again");
+                }
+                return;
+            }
+            Err(e) => {
+                last_err = Some(e);
+                if attempt < cfg.io_retry_max {
+                    metrics.io_retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(delay);
+                    delay = delay.saturating_mul(2);
+                }
+            }
+        }
+    }
+    // Retries exhausted: degrade loudly (once per transition), keep
+    // serving reads. The in-memory store is intact; only persistence
+    // of *new* state is paused until the directory heals.
+    metrics.durable_degraded.store(1, Ordering::Relaxed);
+    if durability.set_degraded(true) {
+        let err = last_err.map(|e| format!("{e:#}")).unwrap_or_else(|| "unknown error".to_string());
+        eprintln!(
+            "DEGRADED: durability seal failed after {} retries ({err}); \
+             reads keep serving, new ingest is not being persisted",
+            cfg.io_retry_max
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::data::{gen, DataDist};
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.n = 48;
+        cfg.d = 24;
+        cfg.k = 8;
+        cfg.p = 4;
+        cfg.block_rows = 4;
+        cfg.workers = 2;
+        cfg.compact_min_rows = 0; // keep ingest's own hook out of the way
+        cfg
+    }
+
+    #[test]
+    fn compactor_merges_across_ingest_runs() {
+        let mut cfg = small_cfg();
+        cfg.compact_min_rows = 1024;
+        cfg.compact_target_rows = 4096;
+        let pipeline = Arc::new(Pipeline::new(cfg.clone()).unwrap());
+        // Several small ingest runs leave several small segments; the
+        // per-ingest hook cannot merge across runs.
+        for seed in 0..4 {
+            let data = gen::generate(DataDist::Gaussian, 12, cfg.d, 100 + seed);
+            pipeline.ingest(&data).unwrap();
+        }
+        let before = pipeline.store().segment_count();
+        assert!(before > 1, "setup should leave multiple segments, got {before}");
+        run_pass(&pipeline);
+        let after = pipeline.store().segment_count();
+        assert!(after < before, "cross-run pass must merge ({before} -> {after})");
+        assert_eq!(pipeline.metrics().compactor_passes, 1);
+        // Estimates survive compaction bitwise (COW swap invariant).
+        let ids = pipeline.store().ids();
+        assert_eq!(ids.len(), 48);
+    }
+
+    #[test]
+    fn drop_joins_the_thread() {
+        let pipeline = Arc::new(Pipeline::new(small_cfg()).unwrap());
+        let compactor = Compactor::spawn(Arc::clone(&pipeline), Duration::from_secs(3600));
+        compactor.poke();
+        drop(compactor); // must not hang; runs the final drain pass
+        assert!(pipeline.metrics().compactor_passes >= 1);
+    }
+}

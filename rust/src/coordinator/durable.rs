@@ -1,0 +1,1185 @@
+//! Durable ingest: the data-directory layer behind `serve --data-dir`.
+//!
+//! Sketches are expensive to (re)compute — each ingested row costs p−1
+//! projections through the GEMM path — so acknowledged ingest must
+//! survive `kill -9`, torn writes, and full disks. The layer is three
+//! cooperating pieces:
+//!
+//! * a checksummed write-ahead log ([`super::wal`]) that records every
+//!   acknowledged batch before the ack,
+//! * immutable per-segment files ([`super::segfile`]) that seal the
+//!   store's columnar blocks so restart replays only the WAL tail,
+//! * a background compactor ([`super::compactor`]) that merges small
+//!   segments across ingest runs and drives sealing.
+//!
+//! ## The data directory
+//!
+//! ```text
+//! <root>/
+//!   store.meta            sketch shape + projection (magic LPDM, CRC)
+//!   snapshot.lpsk         optional persist v1/v2/v3 snapshot (compat)
+//!   wal/wal-<seq>.wal     append-only record logs, replayed in order
+//!   seg/seg-<base>-<rows>.lpsk   sealed columnar segments (footer CRC)
+//! ```
+//!
+//! ## The ack protocol (insert-then-log)
+//!
+//! Ingest inserts into the in-memory store **first**, then appends the
+//! record and fsyncs; only a successful sync acknowledges the batch.
+//! Sealing snapshots the store *under the durability mutex*, so every
+//! record in a deleted WAL is provably covered by the snapshot that was
+//! sealed: a concurrent writer either landed before the snapshot (and
+//! is sealed with it) or logs after the rotation (into the fresh WAL).
+//! A crash can leave *unacknowledged* rows in WAL files or lose rows
+//! that were inserted but never synced — never an acknowledged one.
+//!
+//! ## Recovery
+//!
+//! [`Durability::open`] rebuilds the store from disk: load the optional
+//! snapshot, adopt sealed segment files (newest/widest first, exact
+//! duplicates and fully-covered ranges skipped, partial overlap is a
+//! hard error), then replay WAL files in sequence order with the same
+//! idempotence rules. Torn tails — the unsynced suffix a crash leaves —
+//! are tolerated on every WAL file (a torn record was never
+//! acknowledged); corruption *under* an intact record's CRC is a hard
+//! error, in the persist-v2 discipline: caps and bytes-present are
+//! validated before any allocation, and nothing here panics.
+//!
+//! All I/O goes through the injectable [`DurableFs`] trait so the
+//! fault-injection harness (`testkit::faultfs`) can crash the layer at
+//! every named point: torn record, short write, fsync failure, rename
+//! failure, disk-full.
+
+// Serving path: clippy backs the pallas-lint serving-no-panic rule.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::collections::BTreeSet;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Context;
+
+use crate::config::Config;
+use crate::projection::sketcher::{ColumnarBlock, RowSketch};
+use crate::projection::{ProjectionDist, Strategy};
+use crate::util::sync::MutexExt;
+
+use super::persist::{self, ProjectionInfo};
+use super::state::SketchStore;
+use super::{segfile, wal};
+
+/// Hard caps on declared shapes (mirrors `persist`): a corrupt header
+/// must error, never drive a multi-gigabyte allocation.
+pub(crate) const MAX_K: usize = 1 << 24;
+pub(crate) const MAX_ORDERS: usize = 64;
+pub(crate) const MAX_MOMENT_ORDERS: usize = 256;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, the zlib polynomial) — no vendored crc crate.
+// ---------------------------------------------------------------------------
+
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32 of `bytes` (IEEE: init all-ones, reflected, final xor).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Injectable filesystem
+// ---------------------------------------------------------------------------
+
+/// The filesystem surface the durability layer is written against.
+/// Production uses [`RealFs`]; the fault-injection harness wraps it and
+/// fails named call sites. Method names are deliberately distinct from
+/// lock-acquisition vocabulary (`read`/`write`) so lint scopes stay
+/// precise.
+pub trait DurableFs: Send + Sync {
+    fn read_file(&self, path: &Path) -> io::Result<Vec<u8>>;
+    /// Create-or-truncate `path` with exactly `data`.
+    fn write_file(&self, path: &Path, data: &[u8]) -> io::Result<()>;
+    /// Append `data` to `path`, creating it when absent.
+    fn append_file(&self, path: &Path, data: &[u8]) -> io::Result<()>;
+    /// `fsync` the file's contents + metadata.
+    fn sync_file(&self, path: &Path) -> io::Result<()>;
+    /// `fsync` a directory (makes renames/creates in it durable).
+    fn sync_dir(&self, path: &Path) -> io::Result<()>;
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    fn remove_file(&self, path: &Path) -> io::Result<()>;
+    fn list_dir(&self, dir: &Path) -> io::Result<Vec<PathBuf>>;
+    fn create_dir_all(&self, path: &Path) -> io::Result<()>;
+}
+
+/// [`DurableFs`] over `std::fs`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RealFs;
+
+impl DurableFs for RealFs {
+    fn read_file(&self, path: &Path) -> io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+
+    fn write_file(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        std::fs::write(path, data)
+    }
+
+    fn append_file(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(data)
+    }
+
+    fn sync_file(&self, path: &Path) -> io::Result<()> {
+        std::fs::File::open(path)?.sync_all()
+    }
+
+    fn sync_dir(&self, path: &Path) -> io::Result<()> {
+        // Directory fsync is how a rename/create becomes crash-durable
+        // on POSIX; platforms where opening a directory fails treat the
+        // rename itself as the barrier.
+        match std::fs::File::open(path) {
+            Ok(d) => d.sync_all(),
+            Err(_) => Ok(()),
+        }
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        std::fs::remove_file(path)
+    }
+
+    fn list_dir(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            out.push(entry?.path());
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+        std::fs::create_dir_all(path)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian codec helpers (shared by wal.rs / segfile.rs / meta)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub(crate) fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    out.reserve(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked cursor over a byte slice: every take validates
+/// bytes-present *before* allocating, and a short buffer is an error,
+/// never a panic.
+pub(crate) struct ByteReader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, off: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.remaining(),
+            "truncated record: need {n} bytes at offset {}, have {}",
+            self.off,
+            self.remaining()
+        );
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> anyhow::Result<u32> {
+        let s = self.take(4)?;
+        let mut b = [0u8; 4];
+        b.copy_from_slice(s);
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub(crate) fn u64(&mut self) -> anyhow::Result<u64> {
+        let s = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub(crate) fn f64(&mut self) -> anyhow::Result<f64> {
+        let s = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(f64::from_le_bytes(b))
+    }
+
+    pub(crate) fn f32s(&mut self, n: usize) -> anyhow::Result<Vec<f32>> {
+        let bytes = n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("panel length overflow"))?;
+        anyhow::ensure!(bytes <= self.remaining(), "truncated f32 panel ({n} values)");
+        let s = self.take(bytes)?;
+        let mut out = Vec::with_capacity(n);
+        for c in s.chunks_exact(4) {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(c);
+            out.push(f32::from_le_bytes(b));
+        }
+        Ok(out)
+    }
+
+    pub(crate) fn f64s(&mut self, n: usize) -> anyhow::Result<Vec<f64>> {
+        let bytes = n.checked_mul(8).ok_or_else(|| anyhow::anyhow!("panel length overflow"))?;
+        anyhow::ensure!(bytes <= self.remaining(), "truncated f64 panel ({n} values)");
+        let s = self.take(bytes)?;
+        let mut out = Vec::with_capacity(n);
+        for c in s.chunks_exact(8) {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(c);
+            out.push(f64::from_le_bytes(b));
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The sketch-shape meta file (store.meta)
+// ---------------------------------------------------------------------------
+
+/// The shape every record in a data directory must match — written once
+/// at creation, authoritative at recovery (a `recover` CLI run adopts
+/// it into the serving config). Mirrors the persist header plus the
+/// projection, so a recovered store can sketch fresh query vectors.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetaShape {
+    /// Distance order p (orders = p−1).
+    pub p: u32,
+    pub k: u32,
+    pub orders: u32,
+    pub moment_orders: u32,
+    pub two_sided: bool,
+    pub seed: u64,
+    pub dist: ProjectionDist,
+}
+
+impl MetaShape {
+    pub fn from_config(cfg: &Config) -> Self {
+        MetaShape {
+            p: cfg.p as u32,
+            k: cfg.k as u32,
+            orders: (cfg.p - 1) as u32,
+            moment_orders: (2 * (cfg.p - 1)) as u32,
+            two_sided: matches!(cfg.strategy, Strategy::Alternative),
+            seed: cfg.seed,
+            dist: cfg.dist,
+        }
+    }
+
+    /// Reject implausible shapes before they size any buffer.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.k >= 1 && self.k as usize <= MAX_K, "implausible k {}", self.k);
+        anyhow::ensure!(
+            self.orders >= 1 && self.orders as usize <= MAX_ORDERS,
+            "implausible order count {}",
+            self.orders
+        );
+        anyhow::ensure!(
+            self.moment_orders == 2 * self.orders
+                && self.moment_orders as usize <= MAX_MOMENT_ORDERS,
+            "inconsistent moment count {} for {} orders",
+            self.moment_orders,
+            self.orders
+        );
+        anyhow::ensure!(self.p == self.orders + 1, "p {} does not match orders {}", self.p, self.orders);
+        Ok(())
+    }
+
+    /// f32 values per row and side-count-adjusted (u plus v when
+    /// two-sided).
+    pub(crate) fn row_f32s(&self) -> usize {
+        let side = self.orders as usize * self.k as usize;
+        side * if self.two_sided { 2 } else { 1 }
+    }
+
+    /// Payload bytes of one row's sketch data (panels + moments).
+    pub(crate) fn row_data_bytes(&self) -> usize {
+        self.row_f32s() * 4 + self.moment_orders as usize * 8
+    }
+
+    /// The projection this directory's sketches were built with.
+    pub fn projection_info(&self) -> ProjectionInfo {
+        ProjectionInfo { seed: self.seed, dist: self.dist }
+    }
+}
+
+const META_MAGIC: &[u8; 4] = b"LPDM";
+const META_VERSION: u32 = 1;
+const DIST_NORMAL: u8 = 0;
+const DIST_UNIFORM: u8 = 1;
+const DIST_THREE_POINT: u8 = 2;
+
+fn encode_meta(shape: &MetaShape) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(META_MAGIC);
+    put_u32(&mut out, META_VERSION);
+    put_u32(&mut out, shape.p);
+    put_u32(&mut out, shape.k);
+    put_u32(&mut out, shape.orders);
+    put_u32(&mut out, shape.moment_orders);
+    out.push(shape.two_sided as u8);
+    put_u64(&mut out, shape.seed);
+    let (tag, param) = match shape.dist {
+        ProjectionDist::Normal => (DIST_NORMAL, 0.0),
+        ProjectionDist::Uniform => (DIST_UNIFORM, 0.0),
+        ProjectionDist::ThreePoint(s) => (DIST_THREE_POINT, s),
+    };
+    out.push(tag);
+    out.extend_from_slice(&param.to_le_bytes());
+    let crc = crc32(&out);
+    put_u32(&mut out, crc);
+    out
+}
+
+fn decode_meta(data: &[u8]) -> anyhow::Result<MetaShape> {
+    anyhow::ensure!(data.len() >= 4 + 4 + 4, "meta file too short");
+    anyhow::ensure!(&data[..4] == META_MAGIC, "not a store.meta file (bad magic)");
+    let body = &data[..data.len() - 4];
+    let mut tail = ByteReader::new(&data[data.len() - 4..]);
+    let want = tail.u32()?;
+    anyhow::ensure!(crc32(body) == want, "store.meta checksum mismatch (corrupt)");
+    let mut r = ByteReader::new(&body[4..]);
+    let version = r.u32()?;
+    anyhow::ensure!(version == META_VERSION, "unsupported store.meta version {version}");
+    let p = r.u32()?;
+    let k = r.u32()?;
+    let orders = r.u32()?;
+    let moment_orders = r.u32()?;
+    let two_sided = r.u8()? != 0;
+    let seed = r.u64()?;
+    let tag = r.u8()?;
+    let param = r.f64()?;
+    let dist = match tag {
+        DIST_NORMAL => ProjectionDist::Normal,
+        DIST_UNIFORM => ProjectionDist::Uniform,
+        DIST_THREE_POINT => {
+            anyhow::ensure!(
+                param.is_finite() && param >= 1.0,
+                "corrupt three-point parameter {param}"
+            );
+            ProjectionDist::ThreePoint(param)
+        }
+        t => anyhow::bail!("unknown projection distribution tag {t}"),
+    };
+    anyhow::ensure!(r.remaining() == 0, "trailing bytes in store.meta");
+    let shape = MetaShape { p, k, orders, moment_orders, two_sided, seed, dist };
+    shape.validate()?;
+    Ok(shape)
+}
+
+// ---------------------------------------------------------------------------
+// Data-directory layout
+// ---------------------------------------------------------------------------
+
+/// Path layout of one data directory.
+#[derive(Clone, Debug)]
+pub struct DataDir {
+    root: PathBuf,
+}
+
+impl DataDir {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        DataDir { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn wal_dir(&self) -> PathBuf {
+        self.root.join("wal")
+    }
+
+    pub fn seg_dir(&self) -> PathBuf {
+        self.root.join("seg")
+    }
+
+    pub fn meta_path(&self) -> PathBuf {
+        self.root.join("store.meta")
+    }
+
+    /// Optional persist-format snapshot adopted at recovery (compat
+    /// with `--save-sketches` files; v1/v2/v3 all load).
+    pub fn snapshot_path(&self) -> PathBuf {
+        self.root.join("snapshot.lpsk")
+    }
+
+    pub fn wal_path(&self, seq: u64) -> PathBuf {
+        self.wal_dir().join(format!("wal-{seq:016x}.wal"))
+    }
+}
+
+/// Read the directory's meta file (`None` when it does not exist yet).
+pub fn read_meta(fs: &dyn DurableFs, dir: &DataDir) -> anyhow::Result<Option<MetaShape>> {
+    match fs.read_file(&dir.meta_path()) {
+        Ok(data) => Ok(Some(decode_meta(&data)?)),
+        Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(None),
+        Err(e) => Err(e).context("reading store.meta"),
+    }
+}
+
+fn write_meta(fs: &dyn DurableFs, dir: &DataDir, shape: &MetaShape) -> anyhow::Result<()> {
+    let tmp = dir.root().join("store.meta.tmp");
+    let path = dir.meta_path();
+    fs.write_file(&tmp, &encode_meta(shape)).context("writing store.meta.tmp")?;
+    fs.sync_file(&tmp).context("syncing store.meta.tmp")?;
+    fs.rename(&tmp, &path).context("publishing store.meta")?;
+    fs.sync_dir(dir.root()).context("syncing data dir")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Reports
+// ---------------------------------------------------------------------------
+
+/// What [`Durability::open`] found and rebuilt.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// True when the directory was newly created (nothing to recover).
+    pub fresh: bool,
+    /// Rows loaded from `snapshot.lpsk`.
+    pub snapshot_rows: u64,
+    /// Sealed segment files adopted into the store.
+    pub segments_adopted: u64,
+    /// Sealed segment files skipped because their range was already
+    /// covered (superseded by compaction or the snapshot).
+    pub segments_superseded: u64,
+    /// WAL files scanned.
+    pub wal_files: u64,
+    /// Rows applied from WAL records.
+    pub wal_rows_applied: u64,
+    /// Rows skipped as duplicates (idempotent replay).
+    pub wal_rows_skipped: u64,
+    /// WAL files that ended in a torn (unacknowledged) tail.
+    pub torn_tails: u64,
+    /// Total rows in the recovered store.
+    pub rows: u64,
+}
+
+/// What one [`Durability::seal`] pass did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SealReport {
+    /// Segment files written this pass.
+    pub segments_written: u64,
+    /// Map rows re-logged into the rotated WAL.
+    pub map_rows_logged: u64,
+    /// Old WAL files removed.
+    pub wal_files_removed: u64,
+    /// Superseded segment files removed.
+    pub seg_files_removed: u64,
+}
+
+/// Accounting for one acknowledged WAL append.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WalAppend {
+    pub records: u64,
+    pub bytes: u64,
+}
+
+/// Result of [`Durability::open`].
+pub struct Opened {
+    pub store: SketchStore,
+    pub durability: Durability,
+    pub report: RecoveryReport,
+}
+
+// ---------------------------------------------------------------------------
+// Coverage tracking (recovery idempotence without store panics)
+// ---------------------------------------------------------------------------
+
+/// Which row ids the store already holds, as coalesced half-open ranges
+/// plus loose map-row ids. Recovery consults this before every insert
+/// so duplicate replay skips and genuine collisions become errors —
+/// the store's own collision `assert!`s are never reached.
+struct Coverage {
+    /// Sorted, disjoint, coalesced `[lo, hi)` ranges.
+    ranges: Vec<(u64, u64)>,
+    ids: BTreeSet<u64>,
+}
+
+impl Coverage {
+    fn from_store(store: &SketchStore) -> Self {
+        let mut ranges: Vec<(u64, u64)> = store
+            .segments_snapshot()
+            .iter()
+            .map(|(base, block)| (*base, base + block.rows() as u64))
+            .collect();
+        ranges.sort_unstable();
+        let mut cov = Coverage { ranges: Vec::new(), ids: store.map_ids().into_iter().collect() };
+        for (lo, hi) in ranges.drain(..) {
+            cov.insert_range(lo, hi);
+        }
+        cov
+    }
+
+    /// True when `[lo, hi)` lies entirely inside one coalesced range.
+    fn covers(&self, lo: u64, hi: u64) -> bool {
+        let i = self.ranges.partition_point(|&(_, rhi)| rhi < hi);
+        self.ranges.get(i).is_some_and(|&(rlo, rhi)| rlo <= lo && hi <= rhi)
+    }
+
+    /// True when `[lo, hi)` intersects any covered range or map id.
+    fn overlaps(&self, lo: u64, hi: u64) -> bool {
+        let i = self.ranges.partition_point(|&(_, rhi)| rhi <= lo);
+        if self.ranges.get(i).is_some_and(|&(rlo, _)| rlo < hi) {
+            return true;
+        }
+        self.ids.range(lo..hi).next().is_some()
+    }
+
+    /// Record `[lo, hi)` as covered, coalescing adjacent ranges.
+    fn insert_range(&mut self, lo: u64, hi: u64) {
+        let i = self.ranges.partition_point(|&(_, rhi)| rhi < lo);
+        let mut lo = lo;
+        let mut hi = hi;
+        let mut j = i;
+        while j < self.ranges.len() && self.ranges[j].0 <= hi {
+            lo = lo.min(self.ranges[j].0);
+            hi = hi.max(self.ranges[j].1);
+            j += 1;
+        }
+        self.ranges.splice(i..j, [(lo, hi)]);
+    }
+
+    fn contains_id(&self, id: u64) -> bool {
+        self.ids.contains(&id) || {
+            let i = self.ranges.partition_point(|&(_, rhi)| rhi <= id);
+            self.ranges.get(i).is_some_and(|&(rlo, _)| rlo <= id)
+        }
+    }
+
+    fn insert_id(&mut self, id: u64) {
+        self.ids.insert(id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The runtime object
+// ---------------------------------------------------------------------------
+
+struct DurState {
+    /// Sequence number of the WAL file new appends land in.
+    wal_seq: u64,
+    /// Records / bytes appended to the current WAL file.
+    wal_records: u64,
+    wal_bytes: u64,
+    /// `(base, rows)` of every segment already sealed on disk.
+    sealed: Vec<(u64, u64)>,
+    /// A failed append may have left a torn tail mid-file; appending
+    /// after it would turn the tear into mid-log corruption, so the
+    /// next append must rotate to a fresh file first.
+    poisoned: bool,
+    /// False only when nothing was appended since the last seal (lets
+    /// the compactor's idle passes skip disk writes entirely).
+    dirty: bool,
+}
+
+/// The durability runtime: owns the WAL tail, the sealed-segment
+/// directory, and the degraded flag. Cheap to share behind `Arc`;
+/// every method is `&self`.
+pub struct Durability {
+    fs: Arc<dyn DurableFs>,
+    dir: DataDir,
+    shape: MetaShape,
+    state: Mutex<DurState>,
+    degraded: AtomicBool,
+}
+
+impl Durability {
+    /// Create-or-recover a data directory: write the meta file on first
+    /// use, otherwise validate the shape, replay the directory into a
+    /// fresh store, and start a fresh WAL file for new appends (a
+    /// possibly-torn tail is never appended to).
+    pub fn open(
+        fs: Arc<dyn DurableFs>,
+        root: &Path,
+        shape: MetaShape,
+        shards: usize,
+    ) -> anyhow::Result<Opened> {
+        shape.validate()?;
+        let dir = DataDir::new(root);
+        fs.create_dir_all(&dir.wal_dir()).context("creating wal dir")?;
+        fs.create_dir_all(&dir.seg_dir()).context("creating seg dir")?;
+        let existing = read_meta(fs.as_ref(), &dir)?;
+        let fresh = existing.is_none();
+        match existing {
+            Some(disk) => anyhow::ensure!(
+                disk == shape,
+                "data dir shape mismatch: directory holds {disk:?}, config wants {shape:?} \
+                 (run `recover` to adopt the directory's shape)"
+            ),
+            None => write_meta(fs.as_ref(), &dir, &shape)?,
+        }
+        let (store, mut report, sealed, next_seq) =
+            recover_into(fs.as_ref(), &dir, &shape, shards)?;
+        report.fresh = fresh;
+        // Fresh WAL for new appends: never continue a file whose tail
+        // may be torn. Created eagerly so a later append failure is a
+        // clean per-batch error, not a half-created log.
+        let path = dir.wal_path(next_seq);
+        fs.write_file(&path, &wal::file_header()).context("creating WAL file")?;
+        fs.sync_file(&path).context("syncing WAL file")?;
+        fs.sync_dir(&dir.wal_dir()).context("syncing wal dir")?;
+        let durability = Durability {
+            fs,
+            dir,
+            shape,
+            state: Mutex::new(DurState {
+                wal_seq: next_seq,
+                wal_records: 0,
+                wal_bytes: 0,
+                sealed,
+                poisoned: false,
+                // Older WAL files may still hold unsealed rows; the
+                // first seal pass must not early-out.
+                dirty: !fresh,
+            }),
+            degraded: AtomicBool::new(false),
+        };
+        Ok(Opened { store, durability, report })
+    }
+
+    pub fn shape(&self) -> &MetaShape {
+        &self.shape
+    }
+
+    pub fn dir(&self) -> &DataDir {
+        &self.dir
+    }
+
+    /// True while the data directory is unwritable and ingest/seal is
+    /// failing — reads keep serving from memory.
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Flip the degraded flag; returns true when the value changed (the
+    /// caller logs transitions loudly, once).
+    pub(crate) fn set_degraded(&self, on: bool) -> bool {
+        self.degraded.swap(on, Ordering::Relaxed) != on
+    }
+
+    /// `(records, bytes)` appended to the current WAL file.
+    pub fn wal_stats(&self) -> (u64, u64) {
+        let st = self.state.lock_recover();
+        (st.wal_records, st.wal_bytes)
+    }
+
+    /// Log one row batch (per-row ingest path). The rows must already
+    /// be inserted in the store — see the module-level ack protocol.
+    /// All records land in one buffer, one append, one fsync (group
+    /// commit); `Ok` is the acknowledgement.
+    pub fn log_rows(&self, rows: &[(u64, RowSketch)]) -> anyhow::Result<WalAppend> {
+        if rows.is_empty() {
+            return Ok(WalAppend::default());
+        }
+        let mut buf = Vec::new();
+        for (id, rs) in rows {
+            wal::encode_row(&self.shape, *id, rs, &mut buf)?;
+        }
+        self.append_records(&buf, rows.len() as u64)
+    }
+
+    /// Log one columnar block (GEMM/PJRT ingest path). The block must
+    /// already be inserted in the store.
+    pub fn log_block(&self, base: u64, block: &ColumnarBlock) -> anyhow::Result<WalAppend> {
+        let mut buf = Vec::new();
+        wal::encode_batch(&self.shape, base, block, &mut buf)?;
+        self.append_records(&buf, 1)
+    }
+
+    fn append_records(&self, buf: &[u8], records: u64) -> anyhow::Result<WalAppend> {
+        let mut st = self.state.lock_recover();
+        if st.poisoned {
+            // Self-heal after a torn append: rotate to a fresh file so
+            // the tear stays a tolerated tail, then continue. The torn
+            // file keeps its valid prefix for replay.
+            let seq = st.wal_seq + 1;
+            let path = self.dir.wal_path(seq);
+            self.fs
+                .write_file(&path, &wal::file_header())
+                .and_then(|()| self.fs.sync_file(&path))
+                .and_then(|()| self.fs.sync_dir(&self.dir.wal_dir()))
+                .context("rotating WAL after a torn append")?;
+            st.wal_seq = seq;
+            st.wal_records = 0;
+            st.wal_bytes = 0;
+            st.poisoned = false;
+        }
+        let path = self.dir.wal_path(st.wal_seq);
+        let res = self
+            .fs
+            .append_file(&path, buf)
+            .and_then(|()| self.fs.sync_file(&path));
+        match res {
+            Ok(()) => {
+                st.wal_records += records;
+                st.wal_bytes += buf.len() as u64;
+                st.dirty = true;
+                Ok(WalAppend { records, bytes: buf.len() as u64 })
+            }
+            Err(e) => {
+                st.poisoned = true;
+                st.dirty = true;
+                Err(e).context("WAL append failed (batch not acknowledged)")
+            }
+        }
+    }
+
+    /// Seal the store's current state: write a segment file for every
+    /// in-memory segment not yet on disk, rotate the WAL to a fresh
+    /// file seeded with the map rows, then clean up superseded files.
+    /// After a successful seal, restart replays only the fresh WAL.
+    ///
+    /// The snapshot is captured *under the durability mutex*: every
+    /// record in the WALs being deleted was logged before this point,
+    /// so its insert happened-before the snapshot and the row is sealed
+    /// with it (see the module-level ack protocol).
+    pub fn seal(&self, store: &SketchStore) -> anyhow::Result<SealReport> {
+        let mut st = self.state.lock_recover();
+        let snap = store.snapshot();
+        let mut report = SealReport::default();
+        let mut new_sealed: Vec<(u64, u64)> = Vec::new();
+        for seg in snap.segments() {
+            new_sealed.push((seg.base, seg.block.rows() as u64));
+        }
+        if !st.dirty && new_sealed == st.sealed {
+            // Nothing appended, nothing compacted: idle pass, no I/O.
+            return Ok(report);
+        }
+        for seg in snap.segments() {
+            let key = (seg.base, seg.block.rows() as u64);
+            if !st.sealed.contains(&key) {
+                segfile::write_segment(self.fs.as_ref(), &self.dir.seg_dir(), seg.base, &seg.block)?;
+                report.segments_written += 1;
+            }
+        }
+        // Rotate: the fresh WAL opens with every map row, so deleting
+        // the old files loses nothing.
+        let seq = st.wal_seq + 1;
+        let mut buf = wal::file_header().to_vec();
+        let map_ids = snap.map_ids();
+        for &id in &map_ids {
+            if let Some(rs) = snap.get(id) {
+                wal::encode_row(&self.shape, id, &rs, &mut buf)?;
+                report.map_rows_logged += 1;
+            }
+        }
+        let path = self.dir.wal_path(seq);
+        self.fs.write_file(&path, &buf).context("writing rotated WAL")?;
+        self.fs.sync_file(&path).context("syncing rotated WAL")?;
+        self.fs.sync_dir(&self.dir.wal_dir()).context("syncing wal dir")?;
+        st.wal_seq = seq;
+        st.wal_records = report.map_rows_logged;
+        st.wal_bytes = buf.len() as u64;
+        st.poisoned = false;
+        st.dirty = false;
+        st.sealed = new_sealed;
+        // Cleanup is best-effort: a failure leaves stale files whose
+        // replay is idempotent, retried next pass.
+        if let Ok(entries) = self.fs.list_dir(&self.dir.wal_dir()) {
+            for p in entries {
+                let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+                if let Some(old) = wal::parse_wal_name(name) {
+                    if old != seq && self.fs.remove_file(&p).is_ok() {
+                        report.wal_files_removed += 1;
+                    }
+                }
+            }
+        }
+        if let Ok(entries) = self.fs.list_dir(&self.dir.seg_dir()) {
+            for p in entries {
+                let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+                let stale = match segfile::parse_name(name) {
+                    Some(key) => !st.sealed.contains(&key),
+                    None => name.ends_with(".tmp"),
+                };
+                if stale && self.fs.remove_file(&p).is_ok() {
+                    report.seg_files_removed += 1;
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recovery
+// ---------------------------------------------------------------------------
+
+/// Rebuild a store from the directory: snapshot → sealed segments →
+/// WAL replay. Returns the store, the report, the adopted sealed set,
+/// and the next free WAL sequence number.
+fn recover_into(
+    fs: &dyn DurableFs,
+    dir: &DataDir,
+    shape: &MetaShape,
+    shards: usize,
+) -> anyhow::Result<(SketchStore, RecoveryReport, Vec<(u64, u64)>, u64)> {
+    let mut report = RecoveryReport::default();
+    // A crashed seal can leave *.tmp segment files; they were never
+    // published, so they are dead weight.
+    if let Ok(entries) = fs.list_dir(&dir.seg_dir()) {
+        for p in entries {
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.ends_with(".tmp") {
+                let _ = fs.remove_file(&p);
+            }
+        }
+    }
+    // 1. Optional snapshot seeds the store (persist v1/v2/v3 compat).
+    let snap_path = dir.snapshot_path();
+    let have_snapshot = fs
+        .list_dir(dir.root())
+        .map(|e| e.iter().any(|p| p.file_name() == snap_path.file_name()))
+        .unwrap_or(false);
+    let store = if have_snapshot {
+        let (store, header) = persist::load(&snap_path, shards).context("loading snapshot.lpsk")?;
+        anyhow::ensure!(
+            header.rows == 0
+                || (header.k == shape.k
+                    && header.orders == shape.orders
+                    && header.moment_orders == shape.moment_orders
+                    && header.two_sided == shape.two_sided),
+            "snapshot.lpsk shape (k={}, orders={}, two_sided={}) does not match store.meta",
+            header.k,
+            header.orders,
+            header.two_sided
+        );
+        report.snapshot_rows = header.rows;
+        store
+    } else {
+        SketchStore::new(shards)
+    };
+    let mut cov = Coverage::from_store(&store);
+    // 2. Adopt sealed segments, widest-first per base so a compacted
+    // file supersedes the smaller files it merged.
+    let mut seg_entries: Vec<(u64, u64, PathBuf)> = Vec::new();
+    for p in fs.list_dir(&dir.seg_dir()).context("listing seg dir")? {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if let Some((base, rows)) = segfile::parse_name(name) {
+            seg_entries.push((base, rows, p));
+        }
+    }
+    seg_entries.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+    let mut sealed: Vec<(u64, u64)> = Vec::new();
+    for (base, rows, path) in seg_entries {
+        let end = base
+            .checked_add(rows)
+            .ok_or_else(|| anyhow::anyhow!("segment {path:?} id range overflows"))?;
+        if cov.covers(base, end) {
+            report.segments_superseded += 1;
+            let _ = fs.remove_file(&path);
+            continue;
+        }
+        anyhow::ensure!(
+            !cov.overlaps(base, end),
+            "sealed segment {path:?} partially overlaps recovered rows (corrupt data directory)"
+        );
+        let (got_base, block) = segfile::read_segment(fs, &path, shape)
+            .with_context(|| format!("reading sealed segment {path:?}"))?;
+        anyhow::ensure!(
+            got_base == base && block.rows() as u64 == rows,
+            "segment file {path:?} name does not match its header"
+        );
+        store.insert_block_columnar(base, block);
+        cov.insert_range(base, end);
+        sealed.push((base, rows));
+        report.segments_adopted += 1;
+    }
+    sealed.sort_unstable();
+    // 3. Replay WAL files in sequence order.
+    let mut wal_entries: Vec<(u64, PathBuf)> = Vec::new();
+    for p in fs.list_dir(&dir.wal_dir()).context("listing wal dir")? {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if let Some(seq) = wal::parse_wal_name(name) {
+            wal_entries.push((seq, p));
+        }
+    }
+    wal_entries.sort_unstable();
+    let mut max_seq: Option<u64> = None;
+    for (seq, path) in wal_entries {
+        max_seq = Some(seq);
+        let scan = wal::replay_file(fs, &path, shape)
+            .with_context(|| format!("replaying WAL {path:?}"))?;
+        report.wal_files += 1;
+        if scan.torn_tail {
+            report.torn_tails += 1;
+        }
+        for rec in scan.records {
+            match rec {
+                wal::WalRecord::Row(id, rs) => {
+                    if cov.contains_id(id) {
+                        report.wal_rows_skipped += 1;
+                    } else {
+                        store.insert(id, rs);
+                        cov.insert_id(id);
+                        report.wal_rows_applied += 1;
+                    }
+                }
+                wal::WalRecord::Batch(base, block) => {
+                    let rows = block.rows() as u64;
+                    let end = base
+                        .checked_add(rows)
+                        .ok_or_else(|| anyhow::anyhow!("WAL batch id range overflows"))?;
+                    if cov.covers(base, end) {
+                        report.wal_rows_skipped += rows;
+                    } else {
+                        anyhow::ensure!(
+                            !cov.overlaps(base, end),
+                            "WAL batch [{base}, {end}) partially overlaps recovered rows \
+                             (corrupt data directory)"
+                        );
+                        store.insert_block_columnar(base, block);
+                        cov.insert_range(base, end);
+                        report.wal_rows_applied += rows;
+                    }
+                }
+            }
+        }
+    }
+    report.rows = store.len() as u64;
+    let next_seq = max_seq.map_or(0, |s| s + 1);
+    Ok((store, report, sealed, next_seq))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::sketcher::Sketcher;
+    use crate::projection::{ProjectionSpec, Strategy};
+
+    fn tmp_root(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("lpsketch_durable_test")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn shape4() -> MetaShape {
+        MetaShape {
+            p: 4,
+            k: 8,
+            orders: 3,
+            moment_orders: 6,
+            two_sided: false,
+            seed: 11,
+            dist: ProjectionDist::Normal,
+        }
+    }
+
+    fn sketcher_for(shape: &MetaShape) -> Sketcher {
+        let strategy = if shape.two_sided { Strategy::Alternative } else { Strategy::Basic };
+        Sketcher::new(
+            ProjectionSpec::new(shape.seed, shape.k as usize, shape.dist, strategy),
+            shape.p as usize,
+        )
+    }
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // The canonical IEEE check value plus a zero run (independently
+        // verified against Python's zlib.crc32).
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(&[0u8; 32]), 0x190A_55AD);
+        assert_eq!(crc32(b"lpsketch"), crc32(b"lpsketch"));
+        assert_ne!(crc32(b"lpsketch"), crc32(b"lpsketcH"));
+    }
+
+    #[test]
+    fn meta_roundtrips_and_rejects_corruption() {
+        for dist in [
+            ProjectionDist::Normal,
+            ProjectionDist::Uniform,
+            ProjectionDist::ThreePoint(9.0),
+        ] {
+            let mut shape = shape4();
+            shape.dist = dist;
+            let bytes = encode_meta(&shape);
+            assert_eq!(decode_meta(&bytes).unwrap(), shape);
+            // Any single-byte flip must be caught by the CRC (or the
+            // magic/field validation).
+            for off in 0..bytes.len() {
+                let mut b = bytes.clone();
+                b[off] ^= 0x40;
+                assert!(decode_meta(&b).is_err(), "flip at {off} must error");
+            }
+        }
+        assert!(decode_meta(b"garbage").is_err());
+    }
+
+    #[test]
+    fn coverage_coalesces_and_classifies() {
+        let store = SketchStore::new(2);
+        let mut cov = Coverage::from_store(&store);
+        cov.insert_range(10, 20);
+        cov.insert_range(20, 30); // adjacent → coalesced
+        assert!(cov.covers(12, 28));
+        assert!(cov.covers(10, 30));
+        assert!(!cov.covers(10, 31));
+        assert!(cov.overlaps(29, 40));
+        assert!(!cov.overlaps(30, 40));
+        cov.insert_id(5);
+        assert!(cov.contains_id(5));
+        assert!(cov.contains_id(15));
+        assert!(!cov.contains_id(30));
+        assert!(cov.overlaps(0, 6));
+        cov.insert_range(40, 50);
+        cov.insert_range(30, 40); // bridges the gap
+        assert!(cov.covers(10, 50));
+        assert_eq!(cov.ranges, vec![(10, 50)]);
+    }
+
+    #[test]
+    fn open_fresh_log_crash_recover_roundtrip() {
+        let root = tmp_root("roundtrip");
+        let shape = shape4();
+        let sk = sketcher_for(&shape);
+        let fs: Arc<dyn DurableFs> = Arc::new(RealFs);
+        let opened = Durability::open(Arc::clone(&fs), &root, shape, 2).unwrap();
+        assert!(opened.report.fresh);
+        let rows: Vec<Vec<f32>> =
+            (0..6).map(|i| (0..10).map(|t| ((i * 7 + t) as f32 * 0.3).sin()).collect()).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        // Map rows + one columnar block, insert-then-log.
+        for (i, r) in refs[..2].iter().enumerate() {
+            let rs = sk.sketch_row(r);
+            opened.store.insert(i as u64, rs.clone());
+            opened.durability.log_rows(&[(i as u64, rs)]).unwrap();
+        }
+        let block = sk.sketch_block(&refs[2..], 1);
+        opened.store.insert_block_columnar(100, block.clone());
+        opened.durability.log_block(100, &block).unwrap();
+        let before = opened.store.ids();
+        drop(opened); // crash before any seal: pure WAL replay
+        let re = Durability::open(Arc::clone(&fs), &root, shape, 3).unwrap();
+        assert!(!re.report.fresh);
+        assert_eq!(re.report.wal_rows_applied, 6);
+        assert_eq!(re.store.ids(), before);
+        // Sketch payloads are bitwise identical through the log.
+        for id in 0..2u64 {
+            assert_eq!(re.store.get(id).unwrap().uside.data, sk.sketch_row(refs[id as usize]).uside.data);
+        }
+        assert_eq!(re.store.segments_snapshot().len(), 1);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn seal_truncates_wal_and_survives_restart() {
+        let root = tmp_root("seal");
+        let shape = shape4();
+        let sk = sketcher_for(&shape);
+        let fs: Arc<dyn DurableFs> = Arc::new(RealFs);
+        let opened = Durability::open(Arc::clone(&fs), &root, shape, 2).unwrap();
+        let rows: Vec<Vec<f32>> =
+            (0..9).map(|i| (0..12).map(|t| ((i * 5 + t) as f32 * 0.2).cos()).collect()).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let rs = sk.sketch_row(refs[0]);
+        opened.store.insert(7, rs.clone());
+        opened.durability.log_rows(&[(7, rs)]).unwrap();
+        let block = sk.sketch_block(&refs[1..], 1);
+        opened.store.insert_block_columnar(50, block.clone());
+        opened.durability.log_block(50, &block).unwrap();
+        let report = opened.durability.seal(&opened.store).unwrap();
+        assert_eq!(report.segments_written, 1);
+        assert_eq!(report.map_rows_logged, 1);
+        assert_eq!(report.wal_files_removed, 1);
+        // Idle pass after a seal: no I/O at all.
+        let idle = opened.durability.seal(&opened.store).unwrap();
+        assert_eq!(idle, SealReport::default());
+        let ids = opened.store.ids();
+        drop(opened);
+        let re = Durability::open(Arc::clone(&fs), &root, shape, 2).unwrap();
+        assert_eq!(re.report.segments_adopted, 1);
+        assert_eq!(re.report.wal_rows_applied, 1); // the re-logged map row
+        assert_eq!(re.store.ids(), ids);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let root = tmp_root("mismatch");
+        let fs: Arc<dyn DurableFs> = Arc::new(RealFs);
+        let shape = shape4();
+        drop(Durability::open(Arc::clone(&fs), &root, shape, 2).unwrap());
+        let mut other = shape;
+        other.k = 16;
+        assert!(Durability::open(Arc::clone(&fs), &root, other, 2).is_err());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn meta_shape_validation_rejects_nonsense() {
+        let mut s = shape4();
+        s.moment_orders = 7;
+        assert!(s.validate().is_err());
+        let mut s = shape4();
+        s.orders = 0;
+        assert!(s.validate().is_err());
+        let mut s = shape4();
+        s.k = 0;
+        assert!(s.validate().is_err());
+        assert!(shape4().validate().is_ok());
+    }
+}

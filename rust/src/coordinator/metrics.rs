@@ -2,6 +2,7 @@
 //! histogram, snapshotable for the CLI / benches.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Log₂-bucketed histogram of microsecond latencies (buckets:
 /// [0,1), [1,2), [2,4), … — 40 buckets covers > 15 minutes).
@@ -112,6 +113,23 @@ pub struct Metrics {
     /// sentinel (it would under-report staleness after an empty-store
     /// start).
     pub last_serve_epoch: AtomicU64,
+    /// Malformed frames / stalled connections dropped by the wire
+    /// server. Behind `Arc` so the server can count without holding the
+    /// whole pipeline.
+    pub wire_errors: Arc<AtomicU64>,
+    /// Gauge: records in the current (unsealed) WAL file.
+    pub wal_records: AtomicU64,
+    /// Gauge: bytes in the current (unsealed) WAL file.
+    pub wal_bytes: AtomicU64,
+    /// Segment files sealed to disk by the durability layer.
+    pub segments_sealed: AtomicU64,
+    /// Compact+seal passes run by the background compactor.
+    pub compactor_passes: AtomicU64,
+    /// Transient durable-I/O errors that were retried.
+    pub io_retries: AtomicU64,
+    /// Gauge: 1 while durability is degraded (data dir unwritable;
+    /// reads keep serving, persistence paused), else 0.
+    pub durable_degraded: AtomicU64,
     pub sketch_latency: Histogram,
     pub query_latency: Histogram,
 }
@@ -137,6 +155,13 @@ impl Metrics {
             segment_count: self.segment_count.load(Ordering::Relaxed),
             queries_in_flight: self.queries_in_flight.load(Ordering::Relaxed),
             snapshot_age: self.snapshot_age.load(Ordering::Relaxed),
+            wire_errors: self.wire_errors.load(Ordering::Relaxed),
+            wal_records: self.wal_records.load(Ordering::Relaxed),
+            wal_bytes: self.wal_bytes.load(Ordering::Relaxed),
+            segments_sealed: self.segments_sealed.load(Ordering::Relaxed),
+            compactor_passes: self.compactor_passes.load(Ordering::Relaxed),
+            io_retries: self.io_retries.load(Ordering::Relaxed),
+            durable_degraded: self.durable_degraded.load(Ordering::Relaxed),
             sketch_mean_us: self.sketch_latency.mean_us(),
             sketch_p95_us: self.sketch_latency.quantile_us(0.95),
             query_mean_us: self.query_latency.mean_us(),
@@ -160,6 +185,13 @@ pub struct Snapshot {
     pub segment_count: u64,
     pub queries_in_flight: u64,
     pub snapshot_age: u64,
+    pub wire_errors: u64,
+    pub wal_records: u64,
+    pub wal_bytes: u64,
+    pub segments_sealed: u64,
+    pub compactor_passes: u64,
+    pub io_retries: u64,
+    pub durable_degraded: u64,
     pub sketch_mean_us: f64,
     pub sketch_p95_us: u64,
     pub query_mean_us: f64,
@@ -170,7 +202,9 @@ impl Snapshot {
     pub fn render(&self) -> String {
         format!(
             "rows={} blocks={} queries={} batches={} (deadline={}) pjrt={} gemm={} fallback={} \
-             compactions={} segments={} in_flight={} snapshot_age={} sketch_mean={:.1}us \
+             compactions={} segments={} in_flight={} snapshot_age={} wire_errors={} \
+             wal_records={} wal_bytes={} sealed={} compactor_passes={} io_retries={} \
+             degraded={} sketch_mean={:.1}us \
              sketch_p95={}us query_mean={:.1}us query_p95={}us",
             self.rows_ingested,
             self.blocks_sketched,
@@ -184,6 +218,13 @@ impl Snapshot {
             self.segment_count,
             self.queries_in_flight,
             self.snapshot_age,
+            self.wire_errors,
+            self.wal_records,
+            self.wal_bytes,
+            self.segments_sealed,
+            self.compactor_passes,
+            self.io_retries,
+            self.durable_degraded,
             self.sketch_mean_us,
             self.sketch_p95_us,
             self.query_mean_us,

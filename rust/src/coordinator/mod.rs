@@ -12,16 +12,32 @@
 //!   O(nD) matrix), read through epoch snapshots so scans never pin the
 //!   write path.
 //! * [`metrics`] — counters + latency histograms.
+//! * [`durable`] / [`wal`] / [`segfile`] — crash durability: a
+//!   checksummed write-ahead log of acknowledged ingest, immutable
+//!   sealed-segment files, and the recovery path that replays a data
+//!   directory back into a store. All I/O goes through the injectable
+//!   [`durable::DurableFs`] trait so tests can inject faults at named
+//!   crash points.
+//! * [`compactor`] — background thread merging small segments across
+//!   ingest runs and sealing durable state, with drain-on-drop
+//!   shutdown, retry-with-backoff, and a degraded mode that keeps
+//!   serving reads when the data directory is unwritable.
 
 pub mod batcher;
+pub mod compactor;
+pub mod durable;
 pub mod metrics;
 pub mod persist;
 pub mod pipeline;
 pub mod rebalance;
 pub mod router;
 pub mod scheduler;
+pub mod segfile;
 pub mod state;
+pub mod wal;
 
+pub use compactor::Compactor;
+pub use durable::{DataDir, Durability, DurableFs, MetaShape, Opened, RealFs, RecoveryReport, SealReport};
 pub use metrics::{Metrics, Snapshot};
 pub use pipeline::{IngestReport, Pipeline};
 pub use router::Router;

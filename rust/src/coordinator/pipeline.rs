@@ -66,6 +66,7 @@ use crate::projection::Strategy;
 use crate::runtime::{ArtifactMeta, Engine, EngineHandle, OpKind, OwnedInput};
 
 use super::batcher::FlushReason;
+use super::durable::Durability;
 use super::metrics::{Metrics, Snapshot};
 use super::router::Router;
 use super::scheduler::{Block, BlockScheduler};
@@ -111,6 +112,11 @@ pub struct Pipeline {
     projection_known: bool,
     /// PJRT state, present when `cfg.use_pjrt` and the engine started.
     pjrt: Option<PjrtPath>,
+    /// Durability runtime (WAL + sealed segments), attached in durable
+    /// mode. Ingest then inserts-then-logs every batch: a batch is
+    /// acknowledged (ingest returns `Ok`) only after its WAL record is
+    /// fsynced, so a crash can lose at most unacknowledged work.
+    durability: Option<Arc<Durability>>,
     _engine: Option<Engine>,
 }
 
@@ -172,6 +178,7 @@ impl Pipeline {
             ingest_d: AtomicU64::new(0),
             projection_known: true,
             pjrt,
+            durability: None,
             _engine: engine,
             cfg,
         })
@@ -282,8 +289,73 @@ impl Pipeline {
         self.metrics.snapshot()
     }
 
+    /// Live counters (not a point-in-time copy) — the compactor and the
+    /// wire server update durability/wire gauges through this.
+    pub fn metrics_raw(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The wire server's malformed-frame / stall counter, shareable
+    /// without holding the whole pipeline.
+    pub fn wire_errors_handle(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.metrics.wire_errors)
+    }
+
+    /// Attach the durability runtime. From here on every ingested batch
+    /// is inserted into the store and then logged to the WAL before
+    /// ingest acknowledges it.
+    pub fn attach_durability(&mut self, durability: Arc<Durability>) {
+        let (records, bytes) = durability.wal_stats();
+        self.metrics.wal_records.store(records, Ordering::Relaxed);
+        self.metrics.wal_bytes.store(bytes, Ordering::Relaxed);
+        self.durability = Some(durability);
+    }
+
+    pub fn durability(&self) -> Option<&Arc<Durability>> {
+        self.durability.as_ref()
+    }
+
     pub fn rows(&self) -> usize {
         self.store.len()
+    }
+
+    /// Insert per-row sketches, then (in durable mode) append them to
+    /// the WAL — `Ok` means fsynced, i.e. acknowledged.
+    fn insert_rows_logged(&self, rows: Vec<(u64, RowSketch)>) -> anyhow::Result<()> {
+        match &self.durability {
+            Some(d) => {
+                for (id, rs) in &rows {
+                    self.store.insert(*id, rs.clone());
+                }
+                d.log_rows(&rows)?;
+                let (records, bytes) = d.wal_stats();
+                self.metrics.wal_records.store(records, Ordering::Relaxed);
+                self.metrics.wal_bytes.store(bytes, Ordering::Relaxed);
+            }
+            None => {
+                for (id, rs) in rows {
+                    self.store.insert(id, rs);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Insert one columnar block, then (in durable mode) append it to
+    /// the WAL as a single batch record.
+    fn insert_block_logged(&self, base: u64, cb: ColumnarBlock) -> anyhow::Result<()> {
+        match &self.durability {
+            Some(d) => {
+                let cb = Arc::new(cb);
+                self.store.insert_block_shared(base, Arc::clone(&cb));
+                d.log_block(base, &cb)?;
+                let (records, bytes) = d.wal_stats();
+                self.metrics.wal_records.store(records, Ordering::Relaxed);
+                self.metrics.wal_bytes.store(bytes, Ordering::Relaxed);
+            }
+            None => self.store.insert_block_columnar(base, cb),
+        }
+        Ok(())
     }
 
     /// Whether blocks of width `d` can take the PJRT path.
@@ -333,20 +405,23 @@ impl Pipeline {
                         // already order-major, so the block lands in
                         // the store as contiguous panels — no per-row
                         // AoS sketches, same as the GEMM path.
-                        self.sketch_block_pjrt_columnar(&block).map(|cb| {
+                        self.sketch_block_pjrt_columnar(&block).and_then(|cb| {
                             pjrt_rows.fetch_add(block.rows as u64, Ordering::Relaxed);
                             self.metrics.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-                            self.store.insert_block_columnar(base + block.first_row, cb);
+                            self.insert_block_logged(base + block.first_row, cb)
                         })
                     } else if use_pjrt {
                         // Pinned reference: per-row unpack of the same
                         // artifact outputs (`ingest-gemm false`).
-                        self.sketch_block_pjrt(&block).map(|sketches| {
+                        self.sketch_block_pjrt(&block).and_then(|sketches| {
                             pjrt_rows.fetch_add(block.rows as u64, Ordering::Relaxed);
                             self.metrics.pjrt_calls.fetch_add(1, Ordering::Relaxed);
-                            for (i, rs) in sketches.into_iter().enumerate() {
-                                self.store.insert(base + block.row_id(i), rs);
-                            }
+                            let rows = sketches
+                                .into_iter()
+                                .enumerate()
+                                .map(|(i, rs)| (base + block.row_id(i), rs))
+                                .collect();
+                            self.insert_rows_logged(rows)
                         })
                     } else if use_gemm {
                         // GEMM hot path: power-expand once, project with
@@ -356,17 +431,19 @@ impl Pipeline {
                         // parallelism lives at the block level, in this
                         // worker pool.
                         self.metrics.gemm_calls.fetch_add(1, Ordering::Relaxed);
-                        self.store.insert_block_columnar(
+                        self.insert_block_logged(
                             base + block.first_row,
                             self.sketch_block_gemm(&block),
-                        );
-                        Ok(())
+                        )
                     } else {
                         self.metrics.fallback_calls.fetch_add(1, Ordering::Relaxed);
-                        for (i, rs) in self.sketch_block_rust(&block).into_iter().enumerate() {
-                            self.store.insert(base + block.row_id(i), rs);
-                        }
-                        Ok(())
+                        let rows = self
+                            .sketch_block_rust(&block)
+                            .into_iter()
+                            .enumerate()
+                            .map(|(i, rs)| (base + block.row_id(i), rs))
+                            .collect();
+                        self.insert_rows_logged(rows)
                     };
                     match stored {
                         Ok(()) => {

@@ -1,0 +1,277 @@
+//! Immutable per-segment files: one sealed columnar block per
+//! `.lpsk` file, crash-safe via write-to-temp + fsync + atomic rename,
+//! with a trailing CRC32 footer over the whole body. Once a segment is
+//! sealed here, restart adopts it directly and replays only the WAL
+//! tail — a multi-GB store does not re-decode its settled history.
+//!
+//! ## File format (little-endian)
+//!
+//! | field     | type                 | notes                          |
+//! |-----------|----------------------|--------------------------------|
+//! | magic     | `b"LPSG"`            |                                |
+//! | version   | `u32` = 1            |                                |
+//! | base      | `u64`                | first covered row id           |
+//! | rows      | `u64`                |                                |
+//! | orders    | `u32`                | must match `store.meta`        |
+//! | k         | `u32`                |                                |
+//! | nm        | `u32`                | moment orders                  |
+//! | two_sided | `u8`                 |                                |
+//! | u panels  | `f32[orders·rows·k]` | per-order, contiguous          |
+//! | v panels  | `f32[orders·rows·k]` | two-sided only                 |
+//! | moments   | `f64[rows·nm]`       | row-major                      |
+//! | crc       | `u32`                | CRC32 of everything above      |
+//!
+//! The write protocol makes publication atomic: contents are fully
+//! fsynced *before* the rename, so a published name never points at
+//! torn data — a crash can only lose the directory entry (the WAL
+//! still covers those rows), never publish garbage. A present file
+//! failing its footer CRC is therefore a hard error, not a tear.
+
+// Serving path: clippy backs the pallas-lint serving-no-panic rule.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::projection::sketcher::ColumnarBlock;
+
+use super::durable::{crc32, put_f32s, put_f64s, put_u32, put_u64, ByteReader, DurableFs, MetaShape};
+
+pub(crate) const SEG_MAGIC: &[u8; 4] = b"LPSG";
+pub(crate) const SEG_VERSION: u32 = 1;
+
+/// Fixed bytes before the panels: magic + version + base + rows +
+/// orders + k + nm + two_sided.
+const SEG_HEADER_BYTES: usize = 4 + 4 + 8 + 8 + 4 + 4 + 4 + 1;
+
+/// `seg-<base:016x>-<rows:016x>.lpsk` for the segment at `base`.
+pub(crate) fn seg_file_name(base: u64, rows: u64) -> String {
+    format!("seg-{base:016x}-{rows:016x}.lpsk")
+}
+
+/// Parse a segment file name back to `(base, rows)`.
+pub(crate) fn parse_name(name: &str) -> Option<(u64, u64)> {
+    let hex = name.strip_prefix("seg-")?.strip_suffix(".lpsk")?;
+    let (b, r) = hex.split_once('-')?;
+    if b.len() != 16 || r.len() != 16 {
+        return None;
+    }
+    Some((u64::from_str_radix(b, 16).ok()?, u64::from_str_radix(r, 16).ok()?))
+}
+
+fn encode_segment(base: u64, block: &ColumnarBlock) -> Vec<u8> {
+    // pallas-lint: allow(len-before-alloc) -- sized from the in-memory block being encoded, not a decoded count
+    let mut out = Vec::with_capacity(SEG_HEADER_BYTES + block.bytes() + 4);
+    out.extend_from_slice(SEG_MAGIC);
+    put_u32(&mut out, SEG_VERSION);
+    put_u64(&mut out, base);
+    put_u64(&mut out, block.rows() as u64);
+    put_u32(&mut out, block.orders() as u32);
+    put_u32(&mut out, block.k() as u32);
+    put_u32(&mut out, block.moment_orders() as u32);
+    out.push(block.is_two_sided() as u8);
+    for m in 1..=block.orders() {
+        put_f32s(&mut out, block.u_order(m));
+    }
+    if block.is_two_sided() {
+        for m in 1..=block.orders() {
+            if let Some(panel) = block.v_order(m) {
+                put_f32s(&mut out, panel);
+            }
+        }
+    }
+    put_f64s(&mut out, block.moments_all());
+    let crc = crc32(&out);
+    put_u32(&mut out, crc);
+    out
+}
+
+/// Seal one columnar block as an immutable segment file in `seg_dir`:
+/// write to a `.tmp` sibling, fsync the contents, atomically rename to
+/// the final name, fsync the directory. Returns the published path.
+pub(crate) fn write_segment(
+    fs: &dyn DurableFs,
+    seg_dir: &Path,
+    base: u64,
+    block: &ColumnarBlock,
+) -> anyhow::Result<PathBuf> {
+    anyhow::ensure!(block.rows() > 0, "refusing to seal an empty segment");
+    let name = seg_file_name(base, block.rows() as u64);
+    let path = seg_dir.join(&name);
+    let tmp = seg_dir.join(format!("{name}.tmp"));
+    let data = encode_segment(base, block);
+    fs.write_file(&tmp, &data).with_context(|| format!("writing {tmp:?}"))?;
+    fs.sync_file(&tmp).with_context(|| format!("syncing {tmp:?}"))?;
+    fs.rename(&tmp, &path).with_context(|| format!("publishing {path:?}"))?;
+    fs.sync_dir(seg_dir).context("syncing seg dir")?;
+    Ok(path)
+}
+
+/// Read and validate one sealed segment: footer CRC over the whole
+/// body, shape pinned to `store.meta`, exact byte accounting before
+/// any panel allocation. Errors, never panics — a published file that
+/// fails here is corruption, not a tolerated tear (see module docs).
+pub(crate) fn read_segment(
+    fs: &dyn DurableFs,
+    path: &Path,
+    shape: &MetaShape,
+) -> anyhow::Result<(u64, ColumnarBlock)> {
+    let data = fs.read_file(path).context("reading segment file")?;
+    anyhow::ensure!(data.len() >= SEG_HEADER_BYTES + 4, "segment file too short");
+    let body = &data[..data.len() - 4];
+    let mut tail = ByteReader::new(&data[data.len() - 4..]);
+    let want = tail.u32()?;
+    anyhow::ensure!(crc32(body) == want, "segment footer checksum mismatch (corrupt)");
+    let mut r = ByteReader::new(body);
+    let magic = r.take(4)?;
+    anyhow::ensure!(magic == SEG_MAGIC, "not a segment file (bad magic)");
+    let version = r.u32()?;
+    anyhow::ensure!(version == SEG_VERSION, "unsupported segment version {version}");
+    let base = r.u64()?;
+    let rows = r.u64()?;
+    let orders = r.u32()?;
+    let k = r.u32()?;
+    let nm = r.u32()?;
+    let two_sided = r.u8()? != 0;
+    anyhow::ensure!(
+        orders == shape.orders && k == shape.k && nm == shape.moment_orders
+            && two_sided == shape.two_sided,
+        "segment shape (orders={orders}, k={k}, nm={nm}, two_sided={two_sided}) \
+         does not match store.meta"
+    );
+    anyhow::ensure!(rows > 0 && rows <= super::wal::MAX_BATCH_ROWS, "implausible segment of {rows} rows");
+    anyhow::ensure!(base.checked_add(rows).is_some(), "segment id range overflows");
+    let rows = rows as usize;
+    let expect = rows
+        .checked_mul(shape.row_data_bytes())
+        .ok_or_else(|| anyhow::anyhow!("segment byte size overflows"))?;
+    anyhow::ensure!(
+        r.remaining() == expect,
+        "segment body length does not match its declared shape"
+    );
+    let (orders, k, nm) = (orders as usize, k as usize, nm as usize);
+    let u = r.f32s(orders * rows * k)?;
+    let v = if two_sided { Some(r.f32s(orders * rows * k)?) } else { None };
+    let moments = r.f64s(rows * nm)?;
+    Ok((base, ColumnarBlock::from_parts(orders, k, nm, rows, u, v, moments)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::durable::RealFs;
+    use crate::projection::sketcher::Sketcher;
+    use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+
+    fn shape(two_sided: bool) -> MetaShape {
+        MetaShape {
+            p: 4,
+            k: 8,
+            orders: 3,
+            moment_orders: 6,
+            two_sided,
+            seed: 21,
+            dist: ProjectionDist::Normal,
+        }
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("lpsketch_segfile_test")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn block_for(s: &MetaShape, rows: usize) -> ColumnarBlock {
+        let strategy = if s.two_sided { Strategy::Alternative } else { Strategy::Basic };
+        let sk = Sketcher::new(
+            ProjectionSpec::new(s.seed, s.k as usize, s.dist, strategy),
+            s.p as usize,
+        );
+        let data: Vec<Vec<f32>> = (0..rows)
+            .map(|i| (0..11).map(|t| ((i * 17 + t) as f32 * 0.23).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+        sk.sketch_block(&refs, 1)
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        assert_eq!(parse_name(&seg_file_name(0, 1)), Some((0, 1)));
+        assert_eq!(parse_name(&seg_file_name(u64::MAX, 77)), Some((u64::MAX, 77)));
+        assert_eq!(parse_name("seg-00-01.lpsk"), None);
+        assert_eq!(parse_name("wal-0000000000000000.wal"), None);
+        assert_eq!(parse_name("seg-0000000000000100-0000000000000004.lpsk.tmp"), None);
+    }
+
+    #[test]
+    fn seal_and_read_back_bitwise() {
+        for two_sided in [false, true] {
+            let s = shape(two_sided);
+            let dir = tmp_dir(&format!("roundtrip_{two_sided}"));
+            let block = block_for(&s, 5);
+            let path = write_segment(&RealFs, &dir, 400, &block).unwrap();
+            assert!(path.file_name().and_then(|n| n.to_str()).map(parse_name).flatten().is_some());
+            let (base, got) = read_segment(&RealFs, &path, &s).unwrap();
+            assert_eq!(base, 400);
+            assert_eq!(got.rows(), block.rows());
+            for m in 1..=block.orders() {
+                assert_eq!(got.u_order(m), block.u_order(m));
+                assert_eq!(got.v_order(m), block.v_order(m));
+            }
+            assert_eq!(got.moments_all(), block.moments_all());
+            // No temp residue after a clean publish.
+            let leftovers: Vec<_> = std::fs::read_dir(&dir)
+                .unwrap()
+                .filter_map(|e| e.ok())
+                .filter(|e| e.path().extension().is_some_and(|x| x == "tmp"))
+                .collect();
+            assert!(leftovers.is_empty());
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn every_byte_flip_is_caught() {
+        let s = shape(false);
+        let dir = tmp_dir("flips");
+        let block = block_for(&s, 2);
+        let path = write_segment(&RealFs, &dir, 10, &block).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Step through the file (stride keeps the test fast; header and
+        // footer are covered exhaustively by the small stride).
+        for off in (0..bytes.len()).step_by(3) {
+            let mut b = bytes.clone();
+            b[off] ^= 0x10;
+            std::fs::write(&path, &b).unwrap();
+            assert!(
+                read_segment(&RealFs, &path, &s).is_err(),
+                "flip at offset {off} must be detected"
+            );
+        }
+        // Truncation at any point is an error too (a published segment
+        // is never legitimately short).
+        for cut in [0, 1, SEG_HEADER_BYTES, bytes.len() - 5, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(read_segment(&RealFs, &path, &s).is_err(), "cut at {cut} must error");
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_segment(&RealFs, &path, &s).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let s = shape(false);
+        let dir = tmp_dir("shape");
+        let block = block_for(&s, 3);
+        let path = write_segment(&RealFs, &dir, 0, &block).unwrap();
+        let mut other = s;
+        other.k = 16;
+        assert!(read_segment(&RealFs, &path, &other).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,495 @@
+//! The write-ahead log: length-prefixed, CRC32-checksummed records of
+//! acknowledged ingest, in the persist-v2 corruption discipline (caps
+//! and bytes-present validated before any allocation; errors, never
+//! panics).
+//!
+//! ## File format (little-endian)
+//!
+//! | field   | type          | notes                                |
+//! |---------|---------------|--------------------------------------|
+//! | magic   | `b"LPWL"`     |                                      |
+//! | version | `u32` = 1     |                                      |
+//! | records | …             | until EOF                            |
+//!
+//! Each record:
+//!
+//! | field   | type          | notes                                |
+//! |---------|---------------|--------------------------------------|
+//! | len     | `u32`         | payload bytes, `1..=MAX_RECORD_LEN`  |
+//! | crc     | `u32`         | CRC32 of the payload                 |
+//! | payload | `u8[len]`     | kind byte + body                     |
+//!
+//! Payload kinds (shape comes from `store.meta`, never the record):
+//!
+//! * kind 1 — map row: `id u64`, u panel `f32[orders·k]`, v panel
+//!   (two-sided only), moments `f64[moment_orders]`.
+//! * kind 2 — columnar batch: `base u64`, `rows u64`, then the
+//!   segment-panel layout of [`super::persist`]: per-order u panels,
+//!   per-order v panels (two-sided only), row-major moments.
+//!
+//! ## Tail discipline
+//!
+//! A crash can leave the final record torn: short header, short
+//! payload, a zero-extended suffix (metadata landed, data blocks did
+//! not), or a present-but-checksum-failing final record. All of these
+//! stop the scan at the last valid record — a torn record was never
+//! fsynced, so it was never acknowledged. Anything wrong *before* the
+//! final record (checksum mismatch, zero length mid-file, implausible
+//! length, CRC-valid garbage) is mid-log corruption: a hard error,
+//! because silently skipping it could drop acknowledged data.
+
+// Serving path: clippy backs the pallas-lint serving-no-panic rule.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::core::marginals::Moments;
+use crate::projection::sketcher::{ColumnarBlock, RowSketch, SketchSet};
+
+use super::durable::{crc32, put_f32s, put_f64s, put_u32, put_u64, ByteReader, DurableFs, MetaShape};
+
+pub(crate) const WAL_MAGIC: &[u8; 4] = b"LPWL";
+pub(crate) const WAL_VERSION: u32 = 1;
+
+/// Cap on one record's payload — a corrupt length field must error,
+/// not drive a gigabyte allocation.
+pub(crate) const MAX_RECORD_LEN: u32 = 1 << 30;
+/// Cap on a batch record's declared row count.
+pub(crate) const MAX_BATCH_ROWS: u64 = 1 << 24;
+
+const KIND_ROW: u8 = 1;
+const KIND_BATCH: u8 = 2;
+
+/// The 8-byte file header every WAL file starts with.
+pub(crate) fn file_header() -> [u8; 8] {
+    let mut h = [0u8; 8];
+    h[..4].copy_from_slice(WAL_MAGIC);
+    h[4..].copy_from_slice(&WAL_VERSION.to_le_bytes());
+    h
+}
+
+/// `wal-<seq:016x>.wal` → seq.
+pub(crate) fn parse_wal_name(name: &str) -> Option<u64> {
+    let hex = name.strip_prefix("wal-")?.strip_suffix(".wal")?;
+    if hex.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(hex, 16).ok()
+}
+
+/// One decoded record.
+pub(crate) enum WalRecord {
+    Row(u64, RowSketch),
+    Batch(u64, ColumnarBlock),
+}
+
+/// Result of scanning one WAL file.
+pub(crate) struct WalScan {
+    pub records: Vec<WalRecord>,
+    /// The file ended in a torn (tolerated, unacknowledged) tail.
+    pub torn_tail: bool,
+}
+
+fn frame(out: &mut Vec<u8>, payload: &[u8]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !payload.is_empty() && payload.len() <= MAX_RECORD_LEN as usize,
+        "WAL record payload of {} bytes exceeds the cap",
+        payload.len()
+    );
+    put_u32(out, payload.len() as u32);
+    put_u32(out, crc32(payload));
+    out.extend_from_slice(payload);
+    Ok(())
+}
+
+/// Append one map-row record to `out`. The row's shape must match the
+/// directory's meta shape (the payload does not repeat it).
+pub(crate) fn encode_row(
+    shape: &MetaShape,
+    id: u64,
+    rs: &RowSketch,
+    out: &mut Vec<u8>,
+) -> anyhow::Result<()> {
+    let (orders, k, nm) = (shape.orders as usize, shape.k as usize, shape.moment_orders as usize);
+    anyhow::ensure!(
+        rs.uside.orders == orders
+            && rs.uside.k == k
+            && rs.moments.len() == nm
+            && rs.vside_data.is_some() == shape.two_sided,
+        "row {id} does not match the data dir shape"
+    );
+    let mut payload = Vec::with_capacity(1 + 8 + shape.row_data_bytes());
+    payload.push(KIND_ROW);
+    put_u64(&mut payload, id);
+    put_f32s(&mut payload, &rs.uside.data);
+    if let Some(v) = &rs.vside_data {
+        put_f32s(&mut payload, &v.data);
+    }
+    put_f64s(&mut payload, &rs.moments.0);
+    frame(out, &payload)
+}
+
+/// Append one columnar-batch record to `out` (panels in the persist
+/// segment layout).
+pub(crate) fn encode_batch(
+    shape: &MetaShape,
+    base: u64,
+    block: &ColumnarBlock,
+    out: &mut Vec<u8>,
+) -> anyhow::Result<()> {
+    let (orders, k, nm) = (shape.orders as usize, shape.k as usize, shape.moment_orders as usize);
+    anyhow::ensure!(
+        block.orders() == orders
+            && block.k() == k
+            && block.moment_orders() == nm
+            && block.is_two_sided() == shape.two_sided,
+        "block at base {base} does not match the data dir shape"
+    );
+    let rows = block.rows();
+    anyhow::ensure!(rows > 0 && (rows as u64) <= MAX_BATCH_ROWS, "implausible batch of {rows} rows");
+    anyhow::ensure!(base.checked_add(rows as u64).is_some(), "batch id range overflows");
+    let mut payload = Vec::with_capacity(1 + 16 + rows * shape.row_data_bytes());
+    payload.push(KIND_BATCH);
+    put_u64(&mut payload, base);
+    put_u64(&mut payload, rows as u64);
+    for m in 1..=orders {
+        put_f32s(&mut payload, block.u_order(m));
+    }
+    if block.is_two_sided() {
+        for m in 1..=orders {
+            if let Some(panel) = block.v_order(m) {
+                put_f32s(&mut payload, panel);
+            }
+        }
+    }
+    put_f64s(&mut payload, block.moments_all());
+    frame(out, &payload)
+}
+
+fn decode_record(payload: &[u8], shape: &MetaShape) -> anyhow::Result<WalRecord> {
+    let mut r = ByteReader::new(payload);
+    let kind = r.u8()?;
+    let (orders, k, nm) = (shape.orders as usize, shape.k as usize, shape.moment_orders as usize);
+    let side = orders * k;
+    match kind {
+        KIND_ROW => {
+            let id = r.u64()?;
+            anyhow::ensure!(
+                r.remaining() == shape.row_data_bytes(),
+                "row record length does not match the store shape"
+            );
+            let udata = r.f32s(side)?;
+            let vside_data = if shape.two_sided {
+                Some(SketchSet { orders, k, data: r.f32s(side)? })
+            } else {
+                None
+            };
+            let moments = Moments(r.f64s(nm)?);
+            Ok(WalRecord::Row(
+                id,
+                RowSketch { uside: SketchSet { orders, k, data: udata }, vside_data, moments },
+            ))
+        }
+        KIND_BATCH => {
+            let base = r.u64()?;
+            let rows = r.u64()?;
+            anyhow::ensure!(rows > 0 && rows <= MAX_BATCH_ROWS, "implausible batch of {rows} rows");
+            anyhow::ensure!(base.checked_add(rows).is_some(), "batch id range overflows");
+            let rows = rows as usize;
+            let expect = rows
+                .checked_mul(shape.row_data_bytes())
+                .ok_or_else(|| anyhow::anyhow!("batch byte size overflows"))?;
+            anyhow::ensure!(
+                r.remaining() == expect,
+                "batch record length does not match the store shape"
+            );
+            let u = r.f32s(side * rows)?;
+            let v = if shape.two_sided { Some(r.f32s(side * rows)?) } else { None };
+            let moments = r.f64s(rows * nm)?;
+            Ok(WalRecord::Batch(base, ColumnarBlock::from_parts(orders, k, nm, rows, u, v, moments)))
+        }
+        t => anyhow::bail!("unknown WAL record kind {t}"),
+    }
+}
+
+/// Scan one WAL file: every intact record in order, stopping at a torn
+/// tail; mid-log corruption is a hard error (see the module docs for
+/// the full decision procedure).
+pub(crate) fn replay_file(
+    fs: &dyn DurableFs,
+    path: &Path,
+    shape: &MetaShape,
+) -> anyhow::Result<WalScan> {
+    let data = fs.read_file(path).context("reading WAL file")?;
+    if data.len() < 8 {
+        // A crash during file creation can tear the 8-byte header
+        // itself; nothing in this file was ever acknowledged.
+        return Ok(WalScan { records: Vec::new(), torn_tail: true });
+    }
+    anyhow::ensure!(&data[..4] == WAL_MAGIC, "not a WAL file (bad magic)");
+    let mut hdr = ByteReader::new(&data[4..8]);
+    let version = hdr.u32()?;
+    anyhow::ensure!(version == WAL_VERSION, "unsupported WAL version {version}");
+    let mut off = 8usize;
+    let mut records = Vec::new();
+    let mut torn_tail = false;
+    loop {
+        let rem = data.len() - off;
+        if rem == 0 {
+            break; // clean end
+        }
+        if rem < 8 {
+            torn_tail = true; // short record header
+            break;
+        }
+        let mut h = ByteReader::new(&data[off..off + 8]);
+        let len = h.u32()?;
+        let want_crc = h.u32()?;
+        if len == 0 {
+            // Zero length + all-zero suffix is filesystem
+            // zero-extension after a crash (size metadata landed, data
+            // blocks did not): a torn, unacknowledged tail. A zero
+            // length with nonzero bytes after it cannot come from a
+            // tear — hard error.
+            anyhow::ensure!(
+                want_crc == 0 && data[off..].iter().all(|&b| b == 0),
+                "corrupt WAL record at offset {off}: zero length mid-log"
+            );
+            torn_tail = true;
+            break;
+        }
+        anyhow::ensure!(
+            len <= MAX_RECORD_LEN,
+            "implausible WAL record length {len} at offset {off}"
+        );
+        let len = len as usize;
+        if rem - 8 < len {
+            torn_tail = true; // short payload
+            break;
+        }
+        let payload = &data[off + 8..off + 8 + len];
+        if crc32(payload) != want_crc {
+            // A checksum failure on the *final* record is a torn tail
+            // (partially-persisted last append); anywhere else it is
+            // corruption under the CRC of settled data.
+            anyhow::ensure!(
+                off + 8 + len == data.len(),
+                "WAL checksum mismatch at offset {off} (mid-log corruption)"
+            );
+            torn_tail = true;
+            break;
+        }
+        let rec = decode_record(payload, shape)
+            .with_context(|| format!("decoding WAL record at offset {off}"))?;
+        records.push(rec);
+        off += 8 + len;
+    }
+    Ok(WalScan { records, torn_tail })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::durable::RealFs;
+    use crate::projection::sketcher::Sketcher;
+    use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+    use std::path::PathBuf;
+
+    fn shape() -> MetaShape {
+        MetaShape {
+            p: 4,
+            k: 6,
+            orders: 3,
+            moment_orders: 6,
+            two_sided: false,
+            seed: 3,
+            dist: ProjectionDist::Normal,
+        }
+    }
+
+    fn shape_alt() -> MetaShape {
+        MetaShape {
+            p: 6,
+            k: 4,
+            orders: 5,
+            moment_orders: 10,
+            two_sided: true,
+            seed: 9,
+            dist: ProjectionDist::Uniform,
+        }
+    }
+
+    fn sketcher(s: &MetaShape) -> Sketcher {
+        let strategy = if s.two_sided { Strategy::Alternative } else { Strategy::Basic };
+        Sketcher::new(ProjectionSpec::new(s.seed, s.k as usize, s.dist, strategy), s.p as usize)
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("lpsketch_wal_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}_{}", std::process::id()))
+    }
+
+    fn write_wal(name: &str, body: &[u8]) -> PathBuf {
+        let path = tmp(name);
+        let mut data = file_header().to_vec();
+        data.extend_from_slice(body);
+        std::fs::write(&path, data).unwrap();
+        path
+    }
+
+    #[test]
+    fn wal_names_roundtrip() {
+        assert_eq!(parse_wal_name("wal-0000000000000000.wal"), Some(0));
+        assert_eq!(parse_wal_name("wal-00000000000000ff.wal"), Some(255));
+        assert_eq!(parse_wal_name("wal-ff.wal"), None);
+        assert_eq!(parse_wal_name("seg-0000000000000000.wal"), None);
+        assert_eq!(parse_wal_name("wal-000000000000000g.wal"), None);
+    }
+
+    #[test]
+    fn records_roundtrip_both_kinds_and_sides() {
+        for s in [shape(), shape_alt()] {
+            let sk = sketcher(&s);
+            let rows: Vec<Vec<f32>> = (0..5)
+                .map(|i| (0..9).map(|t| ((i * 3 + t) as f32 * 0.4).sin()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let rs = sk.sketch_row(refs[0]);
+            let block = sk.sketch_block(&refs[1..], 1);
+            let mut body = Vec::new();
+            encode_row(&s, 42, &rs, &mut body).unwrap();
+            encode_batch(&s, 1000, &block, &mut body).unwrap();
+            let path = write_wal(&format!("roundtrip_{}", s.two_sided), &body);
+            let scan = replay_file(&RealFs, &path, &s).unwrap();
+            assert!(!scan.torn_tail);
+            assert_eq!(scan.records.len(), 2);
+            match &scan.records[0] {
+                WalRecord::Row(id, got) => {
+                    assert_eq!(*id, 42);
+                    assert_eq!(got.uside.data, rs.uside.data);
+                    assert_eq!(got.moments.0, rs.moments.0);
+                    assert_eq!(
+                        got.vside_data.as_ref().map(|v| &v.data),
+                        rs.vside_data.as_ref().map(|v| &v.data)
+                    );
+                }
+                _ => panic!("expected a row record"),
+            }
+            match &scan.records[1] {
+                WalRecord::Batch(base, got) => {
+                    assert_eq!(*base, 1000);
+                    assert_eq!(got.rows(), block.rows());
+                    for m in 1..=block.orders() {
+                        assert_eq!(got.u_order(m), block.u_order(m));
+                    }
+                    assert_eq!(got.moments_all(), block.moments_all());
+                }
+                _ => panic!("expected a batch record"),
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn torn_tails_are_tolerated() {
+        let s = shape();
+        let sk = sketcher(&s);
+        let rs = sk.sketch_row(&[0.5, -0.2, 0.8, 0.1]);
+        let mut body = Vec::new();
+        encode_row(&s, 1, &rs, &mut body).unwrap();
+        let full = body.clone();
+        encode_row(&s, 2, &rs, &mut body).unwrap();
+        // Every truncation point inside the second record leaves record
+        // one intact and tolerates the tail (a cut at exactly the first
+        // record's end is simply a clean, shorter file).
+        for cut in full.len() + 1..body.len() {
+            let path = write_wal("torn", &body[..cut]);
+            let scan = replay_file(&RealFs, &path, &s).unwrap();
+            assert!(scan.torn_tail, "cut at {cut} must be a torn tail");
+            assert_eq!(scan.records.len(), 1, "cut at {cut} keeps the first record");
+            std::fs::remove_file(&path).ok();
+        }
+        // Zero-extension tear: full first record, then a run of zeros.
+        let mut zeroed = full.clone();
+        zeroed.extend_from_slice(&[0u8; 23]);
+        let path = write_wal("zeroext", &zeroed);
+        let scan = replay_file(&RealFs, &path, &s).unwrap();
+        assert!(scan.torn_tail);
+        assert_eq!(scan.records.len(), 1);
+        std::fs::remove_file(&path).ok();
+        // Torn file header (crash during creation).
+        let path = tmp("torn_header");
+        std::fs::write(&path, &file_header()[..3]).unwrap();
+        let scan = replay_file(&RealFs, &path, &s).unwrap();
+        assert!(scan.torn_tail);
+        assert!(scan.records.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mid_log_corruption_is_a_hard_error() {
+        let s = shape();
+        let sk = sketcher(&s);
+        let rs = sk.sketch_row(&[0.5, -0.2, 0.8, 0.1]);
+        let mut body = Vec::new();
+        encode_row(&s, 1, &rs, &mut body).unwrap();
+        encode_row(&s, 2, &rs, &mut body).unwrap();
+        // Flip a payload byte of the *first* record: settled data.
+        let mut b = body.clone();
+        b[10] ^= 0x01;
+        let path = write_wal("midflip", &b);
+        assert!(replay_file(&RealFs, &path, &s).is_err());
+        std::fs::remove_file(&path).ok();
+        // Zero length mid-log with nonzero data after it.
+        let mut b = body.clone();
+        b[..4].copy_from_slice(&0u32.to_le_bytes());
+        let path = write_wal("zerolen", &b);
+        assert!(replay_file(&RealFs, &path, &s).is_err());
+        std::fs::remove_file(&path).ok();
+        // Implausible length field.
+        let mut b = body.clone();
+        b[..4].copy_from_slice(&(MAX_RECORD_LEN + 1).to_le_bytes());
+        let path = write_wal("hugelen", &b);
+        assert!(replay_file(&RealFs, &path, &s).is_err());
+        std::fs::remove_file(&path).ok();
+        // Bad magic is never a tear.
+        let path = tmp("badmagic");
+        let mut data = file_header().to_vec();
+        data[0] ^= 0xFF;
+        data.extend_from_slice(&body);
+        std::fs::write(&path, data).unwrap();
+        assert!(replay_file(&RealFs, &path, &s).is_err());
+        std::fs::remove_file(&path).ok();
+        // A checksum failure on the final record is a tolerated tail
+        // (indistinguishable from a partially-persisted append) — the
+        // prefix survives.
+        let mut b = body.clone();
+        let last = b.len() - 1;
+        b[last] ^= 0x01;
+        let path = write_wal("tailflip", &b);
+        let scan = replay_file(&RealFs, &path, &s).unwrap();
+        assert!(scan.torn_tail);
+        assert_eq!(scan.records.len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_in_record_is_an_error() {
+        let s = shape();
+        let sk = sketcher(&s);
+        let rs = sk.sketch_row(&[0.1, 0.2, 0.3]);
+        let mut body = Vec::new();
+        encode_row(&s, 5, &rs, &mut body).unwrap();
+        // Replaying under a different shape must fail cleanly (exact
+        // length check), not misparse.
+        let path = write_wal("shapeshift", &body);
+        assert!(replay_file(&RealFs, &path, &shape_alt()).is_err());
+        std::fs::remove_file(&path).ok();
+        // Encoding a row under the wrong shape is rejected up front.
+        let mut out = Vec::new();
+        assert!(encode_row(&shape_alt(), 5, &rs, &mut out).is_err());
+    }
+}

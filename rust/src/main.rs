@@ -25,6 +25,9 @@
 //!   knn      — ingest then run k-NN through the typed API (top-k by
 //!              stored id, served from the snapshot-rebuilt index; no
 //!              raw-data index rebuild), with optional exact re-ranking.
+//!   recover  — open a `--data-dir`, replay its WAL tail, seal the
+//!              result into immutable segment files, print the
+//!              recovery report (optionally export to `--out`).
 //!   exp      — run a paper experiment (e1..e11) or `all`.
 //!   platform — print the PJRT platform and artifact inventory.
 //!   lint     — run pallas-lint ([`lpsketch::analysis`]) over the
@@ -40,7 +43,7 @@ use std::sync::Arc;
 use lpsketch::api::{self, Request, Response, TopKTarget};
 use lpsketch::baselines::exact;
 use lpsketch::config::Config;
-use lpsketch::coordinator::{persist, Pipeline};
+use lpsketch::coordinator::{compactor, durable, persist, Compactor, Pipeline};
 use lpsketch::data::{corpus, gen, io, RowMatrix};
 use lpsketch::experiments;
 use lpsketch::knn::{self, Neighbor};
@@ -48,20 +51,26 @@ use lpsketch::runtime::Engine;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: lpsketch [--key value ...] <ingest|pairs|query|serve|client|knn|exp|platform|lint> [args]\n\
+        "usage: lpsketch [--key value ...] <ingest|pairs|query|serve|client|knn|recover|exp|platform|lint> [args]\n\
          \n\
          data source: --data <file.bin|file.csv> | synthetic --data-dist --n --d | --data corpus\n\
          persistence: ingest --save-sketches <file.lpsk> (O(nk) state; the matrix can be discarded)\n\
                       pairs|serve --load-sketches <file.lpsk> (serve straight from saved sketches;\n\
                       pre-v3 files: --assume-projection + the original --seed/--dist re-enables\n\
                       fresh-vector queries)\n\
+         durability:  --data-dir <dir> on ingest|serve (checksummed WAL + sealed segment files;\n\
+                      an ingest ack means the batch is fsynced and survives a crash; an existing\n\
+                      dir pins --p/--k/--seed/--dist/--strategy from its store.meta)\n\
          common keys: --p --k --strategy --dist --seed --workers --block-rows --mle --pjrt\n\
+                      --compactor-interval-ms --io-retry-max\n\
          exp:         lpsketch exp <e1..e11|all> [--fast]\n\
          query:       lpsketch query <a> <b> [more pairs...]\n\
          serve:       lpsketch serve [clients] (in-process stress demo; --query-workers N)\n\
-                      lpsketch serve --listen <addr> [--load-sketches f.lpsk] (TCP server)\n\
+                      lpsketch serve --listen <addr> [--load-sketches f.lpsk | --data-dir d] (TCP)\n\
          client:      lpsketch client --connect <addr> <ping|stats|query a b ...|knn <id> <m>>\n\
          knn:         lpsketch knn <row-id> <m> [--rerank N]\n\
+         recover:     lpsketch recover --data-dir <dir> [--out snap.lpsk] (replay WAL, seal\n\
+                      segments, report; --out also exports a portable sketch file)\n\
          lint:        lpsketch lint [src-root] (default rust/src; exits 1 on findings)"
     );
     std::process::exit(2);
@@ -123,6 +132,56 @@ fn restore_pipeline(
     Pipeline::with_store_restored(cfg, store, known)
 }
 
+/// Create-or-recover a durable data directory ([`durable::Durability`]).
+///
+/// An existing `store.meta` is authoritative: its shape (p, k, seed,
+/// projection distribution, sidedness) is adopted into `cfg` so the
+/// pipeline serves exactly what the directory holds — mismatched
+/// command-line flags are overridden, not an error. A fresh directory
+/// takes its shape from the configured flags. Prints the recovery
+/// summary either way.
+fn open_data_dir(cfg: &mut Config, root: &std::path::Path) -> anyhow::Result<durable::Opened> {
+    let fs: Arc<dyn durable::DurableFs> = Arc::new(durable::RealFs);
+    let dir = durable::DataDir::new(root);
+    if let Some(disk) = durable::read_meta(fs.as_ref(), &dir)? {
+        cfg.p = disk.p as usize;
+        cfg.k = disk.k as usize;
+        cfg.d = cfg.d.max(cfg.k);
+        cfg.seed = disk.seed;
+        cfg.dist = disk.dist;
+        cfg.strategy = if disk.two_sided {
+            lpsketch::projection::Strategy::Alternative
+        } else {
+            lpsketch::projection::Strategy::Basic
+        };
+    }
+    let shape = durable::MetaShape::from_config(cfg);
+    let opened = durable::Durability::open(fs, root, shape, cfg.workers)?;
+    let r = &opened.report;
+    if r.fresh {
+        println!("data dir {}: fresh (created)", root.display());
+    } else {
+        println!(
+            "data dir {}: recovered {} rows — snapshot {}, segments {} adopted / {} superseded, \
+             wal {} file(s) / {} row(s) applied / {} skipped{}",
+            root.display(),
+            r.rows,
+            r.snapshot_rows,
+            r.segments_adopted,
+            r.segments_superseded,
+            r.wal_files,
+            r.wal_rows_applied,
+            r.wal_rows_skipped,
+            if r.torn_tails > 0 {
+                format!(", {} torn tail(s) dropped", r.torn_tails)
+            } else {
+                String::new()
+            },
+        );
+    }
+    Ok(opened)
+}
+
 fn main() -> anyhow::Result<()> {
     let mut cfg = Config::default();
     let mut raw: Vec<String> = std::env::args().skip(1).collect();
@@ -131,6 +190,7 @@ fn main() -> anyhow::Result<()> {
     let mut out_path: Option<String> = None;
     let mut save_sketches: Option<String> = None;
     let mut load_sketches: Option<String> = None;
+    let mut data_dir: Option<String> = None;
     let mut listen: Option<String> = None;
     let mut connect: Option<String> = None;
     let mut assume_projection = false;
@@ -145,6 +205,7 @@ fn main() -> anyhow::Result<()> {
             "--out" => out_path = it.next(),
             "--save-sketches" => save_sketches = it.next(),
             "--load-sketches" => load_sketches = it.next(),
+            "--data-dir" => data_dir = it.next(),
             "--listen" => listen = it.next(),
             "--connect" => connect = it.next(),
             "--assume-projection" => assume_projection = true,
@@ -227,8 +288,24 @@ fn main() -> anyhow::Result<()> {
             let data = load_data(&cfg, data_source.as_deref())?;
             cfg.d = data.d();
             cfg.n = data.n();
-            println!("config: {}", cfg.describe());
-            let pipeline = Pipeline::new(cfg)?;
+            // With --data-dir, ingest is durable: every acknowledged
+            // batch is in the fsynced WAL before `ingest` returns, and
+            // the final pass seals the store into segment files so the
+            // next start replays nothing.
+            let pipeline = match &data_dir {
+                Some(root) => {
+                    let root = std::path::PathBuf::from(root);
+                    let opened = open_data_dir(&mut cfg, &root)?;
+                    println!("config: {}", cfg.describe());
+                    let mut pipeline = Pipeline::with_store_restored(cfg, opened.store, true)?;
+                    pipeline.attach_durability(Arc::new(opened.durability));
+                    pipeline
+                }
+                None => {
+                    println!("config: {}", cfg.describe());
+                    Pipeline::new(cfg)?
+                }
+            };
             let report = pipeline.ingest(&data)?;
             println!(
                 "ingested {} rows ({} blocks) in {:.3}s — {:.0} rows/s, pjrt rows: {}",
@@ -244,6 +321,16 @@ fn main() -> anyhow::Result<()> {
                 report.sketch_bytes,
                 report.data_bytes as f64 / report.sketch_bytes as f64
             );
+            if pipeline.durability().is_some() {
+                // Seal before exit: compact across the run's segments,
+                // write them as immutable files, drop the covered WAL.
+                compactor::run_pass(&pipeline);
+                let m = pipeline.metrics();
+                println!(
+                    "durable: sealed {} segment file(s); wal tail holds {} record(s)",
+                    m.segments_sealed, m.wal_records
+                );
+            }
             println!("metrics: {}", pipeline.metrics().render());
             if let Some(path) = &save_sketches {
                 let cfg = pipeline.config();
@@ -342,11 +429,29 @@ fn main() -> anyhow::Result<()> {
             // source, or restore a sketch file — the paper's model of
             // serving from O(nk) state alone), then speak the wire
             // protocol until killed.
-            let pipeline = Arc::new(match &load_sketches {
-                Some(path) => {
+            let pipeline = Arc::new(match (&data_dir, &load_sketches) {
+                (Some(root), _) => {
+                    // Durable serving: recover the directory (sealed
+                    // segments adopted, WAL tail replayed), then serve
+                    // from it. Ingest-over-CLI runs write to the same
+                    // directory; the background compactor below keeps
+                    // sealing new state while the server runs.
+                    let root = std::path::PathBuf::from(root);
+                    let opened = open_data_dir(&mut cfg, &root)?;
+                    cfg.n = opened.store.len();
+                    println!("config: {}", cfg.describe());
+                    let mut pipeline = Pipeline::with_store_restored(cfg, opened.store, true)?;
+                    pipeline.attach_durability(Arc::new(opened.durability));
+                    if let Some(src) = &data_source {
+                        let data = load_data(pipeline.config(), Some(src.as_str()))?;
+                        pipeline.ingest(&data)?;
+                    }
+                    pipeline
+                }
+                (None, Some(path)) => {
                     restore_pipeline(cfg, std::path::Path::new(path), assume_projection)?
                 }
-                None => {
+                (None, None) => {
                     let data = load_data(&cfg, data_source.as_deref())?;
                     cfg.d = data.d();
                     cfg.n = data.n();
@@ -356,8 +461,24 @@ fn main() -> anyhow::Result<()> {
                     pipeline
                 }
             });
+            // Background compactor: merges small segments across runs
+            // and seals through the durability layer (no-op seal when
+            // the store is not durable — skip the thread entirely).
+            let _compactor = pipeline.durability().map(|_| {
+                Compactor::spawn(
+                    Arc::clone(&pipeline),
+                    std::time::Duration::from_millis(pipeline.config().compactor_interval_ms),
+                )
+            });
             let service = pipeline.spawn_query_service();
-            let server = api::Server::bind(listen.as_deref().expect("guarded"), service)?;
+            // Per-connection pacing (idle close + anti-slowloris stall
+            // budget) with malformed-frame counting in `wire_errors`.
+            let policy = api::ConnPolicy {
+                wire_errors: pipeline.wire_errors_handle(),
+                ..Default::default()
+            };
+            let server =
+                api::Server::bind_with(listen.as_deref().expect("guarded"), service, policy)?;
             println!("listening on {}", server.local_addr()?);
             // Parent processes (tests, orchestrators) parse the line
             // above to learn the bound port — get it out before the
@@ -543,6 +664,55 @@ fn main() -> anyhow::Result<()> {
                     nb.distance,
                     if nb.exact { " (exact)" } else { "" }
                 );
+            }
+        }
+        "recover" => {
+            // Offline recovery: replay the directory, seal everything
+            // into immutable segment files (so the next `serve` start
+            // adopts segments and replays nothing), report what was
+            // found. `--out` additionally exports a portable sketch
+            // file, projection parameters included.
+            let root = match data_dir.as_deref().or(positional.get(1).map(|s| s.as_str())) {
+                Some(r) => std::path::PathBuf::from(r),
+                None => {
+                    eprintln!("error: recover needs --data-dir <dir> (or a positional dir)");
+                    usage();
+                }
+            };
+            {
+                let fs = durable::RealFs;
+                let dir = durable::DataDir::new(&root);
+                anyhow::ensure!(
+                    durable::read_meta(&fs, &dir)?.is_some(),
+                    "{} has no store.meta — nothing to recover",
+                    root.display()
+                );
+            }
+            let opened = open_data_dir(&mut cfg, &root)?;
+            let shape = *opened.durability.shape();
+            let sealed = opened.durability.seal(&opened.store)?;
+            println!(
+                "sealed: {} segment file(s) written, {} superseded file(s) removed, \
+                 {} wal file(s) retired",
+                sealed.segments_written, sealed.seg_files_removed, sealed.wal_files_removed
+            );
+            println!(
+                "store: {} rows, p={} k={} two_sided={} — ready to serve \
+                 (lpsketch serve --listen <addr> --data-dir {})",
+                opened.store.len(),
+                shape.p,
+                shape.k,
+                shape.two_sided,
+                root.display()
+            );
+            if let Some(out) = &out_path {
+                let header = persist::save(
+                    &opened.store,
+                    shape.p as usize,
+                    Some(shape.projection_info()),
+                    std::path::Path::new(out),
+                )?;
+                println!("exported {} rows to {out} (p={} k={})", header.rows, header.p, header.k);
             }
         }
         "exp" => {

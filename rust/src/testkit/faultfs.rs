@@ -1,0 +1,311 @@
+//! Fault-injecting [`DurableFs`] for crash-point testing: wraps the
+//! real filesystem and fails specific operations at named sites — torn
+//! record, short write, fsync failure, rename failure, disk-full — so
+//! the durability tests can prove that every acknowledged batch
+//! survives a crash at every point.
+//!
+//! A fault is addressed by (operation, path substring, nth match).
+//! Actions model distinct real-world failures:
+//!
+//! * [`FaultAction::Err`] — one transient error; the op does not
+//!   happen, later attempts succeed (an NFS hiccup, an EINTR'd fsync).
+//! * [`FaultAction::ErrSticky`] — every matching op fails from then on
+//!   (disk full, directory chmodded read-only).
+//! * [`FaultAction::Torn`] — the write lands only partially on disk and
+//!   the process "crashes" (kill -9 mid-write): the crash latch trips,
+//!   failing every subsequent operation.
+//! * [`FaultAction::CrashBefore`] — the process dies just before the
+//!   op: nothing lands, the latch trips.
+//!
+//! Tests "restart" after a latched crash by recovering the same
+//! directory with a clean [`RealFs`] — exactly what a real restart sees.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::durable::{DurableFs, RealFs};
+use crate::util::sync::MutexExt;
+
+/// Which [`DurableFs`] operation a fault arms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOp {
+    ReadFile,
+    WriteFile,
+    AppendFile,
+    SyncFile,
+    SyncDir,
+    Rename,
+    RemoveFile,
+    ListDir,
+    CreateDirAll,
+}
+
+/// What happens when an armed fault's site is hit.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultAction {
+    /// One-shot transient error; the op is not performed.
+    Err,
+    /// Every matching op fails from the trigger on (disk-full style).
+    ErrSticky,
+    /// Write only the first `keep` bytes, then error and trip the crash
+    /// latch. Only meaningful for `WriteFile` / `AppendFile`.
+    Torn { keep: usize },
+    /// Trip the crash latch before performing the op.
+    CrashBefore,
+}
+
+/// One armed fault site.
+#[derive(Clone, Debug)]
+pub struct Fault {
+    pub op: FaultOp,
+    /// Trigger only on paths whose UTF-8 form contains this substring
+    /// (empty = any path).
+    pub path_contains: String,
+    /// Skip this many matching calls before triggering (0 = first).
+    pub skip: usize,
+    pub action: FaultAction,
+}
+
+impl Fault {
+    pub fn new(op: FaultOp, path_contains: &str, action: FaultAction) -> Self {
+        Fault { op, path_contains: path_contains.to_string(), skip: 0, action }
+    }
+
+    pub fn after(mut self, skip: usize) -> Self {
+        self.skip = skip;
+        self
+    }
+}
+
+struct Armed {
+    fault: Fault,
+    seen: usize,
+    spent: bool,
+}
+
+/// What the gate decided for one op.
+enum Gate {
+    Proceed,
+    Fail,
+    Torn { keep: usize },
+}
+
+/// The fault-injecting filesystem. All real I/O is delegated to
+/// [`RealFs`]; armed faults intercept matching calls.
+pub struct FaultFs {
+    inner: RealFs,
+    armed: Mutex<Vec<Armed>>,
+    crashed: AtomicBool,
+}
+
+impl FaultFs {
+    pub fn new(faults: Vec<Fault>) -> Self {
+        FaultFs {
+            inner: RealFs,
+            armed: Mutex::new(
+                faults.into_iter().map(|fault| Armed { fault, seen: 0, spent: false }).collect(),
+            ),
+            crashed: AtomicBool::new(false),
+        }
+    }
+
+    /// True once a `Torn` / `CrashBefore` fault tripped the latch; every
+    /// operation after that fails, like a dead process's would.
+    pub fn crashed(&self) -> bool {
+        self.crashed.load(Ordering::SeqCst)
+    }
+
+    /// Arm another fault on a live instance.
+    pub fn arm(&self, fault: Fault) {
+        self.armed.lock_recover().push(Armed { fault, seen: 0, spent: false });
+    }
+
+    fn err(what: &str) -> io::Error {
+        io::Error::new(io::ErrorKind::Other, format!("injected fault: {what}"))
+    }
+
+    fn gate(&self, op: FaultOp, path: &Path) -> io::Result<Gate> {
+        if self.crashed() {
+            return Err(Self::err("process crashed"));
+        }
+        let text = path.to_string_lossy();
+        let mut armed = self.armed.lock_recover();
+        for a in armed.iter_mut() {
+            if a.fault.op != op || !text.contains(a.fault.path_contains.as_str()) {
+                continue;
+            }
+            let hit = a.seen;
+            a.seen += 1;
+            if hit < a.fault.skip {
+                continue;
+            }
+            match a.fault.action {
+                FaultAction::Err => {
+                    if a.spent {
+                        continue;
+                    }
+                    a.spent = true;
+                    return Ok(Gate::Fail);
+                }
+                FaultAction::ErrSticky => return Ok(Gate::Fail),
+                FaultAction::Torn { keep } => {
+                    if a.spent {
+                        continue;
+                    }
+                    a.spent = true;
+                    self.crashed.store(true, Ordering::SeqCst);
+                    return Ok(Gate::Torn { keep });
+                }
+                FaultAction::CrashBefore => {
+                    self.crashed.store(true, Ordering::SeqCst);
+                    return Ok(Gate::Fail);
+                }
+            }
+        }
+        Ok(Gate::Proceed)
+    }
+
+    fn gate_simple(&self, op: FaultOp, path: &Path, what: &str) -> io::Result<()> {
+        match self.gate(op, path)? {
+            Gate::Proceed => Ok(()),
+            Gate::Fail | Gate::Torn { .. } => Err(Self::err(what)),
+        }
+    }
+}
+
+impl DurableFs for FaultFs {
+    fn read_file(&self, path: &Path) -> io::Result<Vec<u8>> {
+        self.gate_simple(FaultOp::ReadFile, path, "read_file")?;
+        self.inner.read_file(path)
+    }
+
+    fn write_file(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        match self.gate(FaultOp::WriteFile, path)? {
+            Gate::Proceed => self.inner.write_file(path, data),
+            Gate::Fail => Err(Self::err("write_file")),
+            Gate::Torn { keep } => {
+                let keep = keep.min(data.len());
+                self.inner.write_file(path, &data[..keep])?;
+                Err(Self::err("write_file torn mid-write"))
+            }
+        }
+    }
+
+    fn append_file(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        match self.gate(FaultOp::AppendFile, path)? {
+            Gate::Proceed => self.inner.append_file(path, data),
+            Gate::Fail => Err(Self::err("append_file")),
+            Gate::Torn { keep } => {
+                let keep = keep.min(data.len());
+                self.inner.append_file(path, &data[..keep])?;
+                Err(Self::err("append_file torn mid-write"))
+            }
+        }
+    }
+
+    fn sync_file(&self, path: &Path) -> io::Result<()> {
+        self.gate_simple(FaultOp::SyncFile, path, "sync_file")?;
+        self.inner.sync_file(path)
+    }
+
+    fn sync_dir(&self, path: &Path) -> io::Result<()> {
+        self.gate_simple(FaultOp::SyncDir, path, "sync_dir")?;
+        self.inner.sync_dir(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        // Match on the destination: that's the name tests know (the
+        // source is a `.tmp` sibling of it anyway).
+        self.gate_simple(FaultOp::Rename, to, "rename")?;
+        self.inner.rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        self.gate_simple(FaultOp::RemoveFile, path, "remove_file")?;
+        self.inner.remove_file(path)
+    }
+
+    fn list_dir(&self, dir: &Path) -> io::Result<Vec<PathBuf>> {
+        self.gate_simple(FaultOp::ListDir, dir, "list_dir")?;
+        self.inner.list_dir(dir)
+    }
+
+    fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+        self.gate_simple(FaultOp::CreateDirAll, path, "create_dir_all")?;
+        self.inner.create_dir_all(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("lpsketch_faultfs_test")
+            .join(format!("{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn transient_err_is_one_shot() {
+        let dir = tmp_dir("oneshot");
+        let fs = FaultFs::new(vec![Fault::new(FaultOp::WriteFile, "a.bin", FaultAction::Err)]);
+        let p = dir.join("a.bin");
+        assert!(fs.write_file(&p, b"x").is_err());
+        assert!(!fs.crashed());
+        assert!(fs.write_file(&p, b"x").is_ok(), "second attempt must succeed");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sticky_err_keeps_failing_and_spares_other_paths() {
+        let dir = tmp_dir("sticky");
+        let fs = FaultFs::new(vec![Fault::new(FaultOp::WriteFile, "full", FaultAction::ErrSticky)]);
+        let p = dir.join("full.bin");
+        for _ in 0..3 {
+            assert!(fs.write_file(&p, b"x").is_err());
+        }
+        assert!(fs.write_file(&dir.join("other.bin"), b"x").is_ok());
+        assert!(!fs.crashed());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_write_keeps_prefix_and_latches() {
+        let dir = tmp_dir("torn");
+        let fs =
+            FaultFs::new(vec![Fault::new(FaultOp::AppendFile, "", FaultAction::Torn { keep: 3 })]);
+        let p = dir.join("log.wal");
+        assert!(fs.append_file(&p, b"hello").is_err());
+        assert!(fs.crashed());
+        assert_eq!(std::fs::read(&p).unwrap(), b"hel");
+        // Everything after the crash fails, even unrelated ops.
+        assert!(fs.read_file(&p).is_err());
+        assert!(fs.sync_dir(&dir).is_err());
+        // The bytes survive on disk for a clean-fs "restart".
+        assert_eq!(RealFs.read_file(&p).unwrap(), b"hel");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn skip_counts_matching_calls_only() {
+        let dir = tmp_dir("skip");
+        let fs = FaultFs::new(vec![
+            Fault::new(FaultOp::SyncFile, "b.bin", FaultAction::CrashBefore).after(1),
+        ]);
+        let a = dir.join("a.bin");
+        let b = dir.join("b.bin");
+        std::fs::write(&a, b"x").unwrap();
+        std::fs::write(&b, b"x").unwrap();
+        assert!(fs.sync_file(&b).is_ok(), "skip=1: first match passes");
+        assert!(fs.sync_file(&a).is_ok(), "non-matching path never triggers");
+        assert!(fs.sync_file(&b).is_err(), "second match crashes");
+        assert!(fs.crashed());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

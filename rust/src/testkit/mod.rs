@@ -11,6 +11,7 @@
 
 use crate::util::rng::Rng;
 
+pub mod faultfs;
 pub mod store;
 
 /// Case generator handed to property closures.
