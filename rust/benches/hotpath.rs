@@ -8,6 +8,10 @@
 //!   * arena vs per-row: blocked batch estimation + fused top-k on the
 //!     columnar arena against the per-row reference (the ISSUE 1
 //!     acceptance: ≥3× at n=10⁴, k=64, p=4)
+//!   * zone-pruned top-k: the zone-map scan vs the full fused scan vs
+//!     per-row scoring, across population skew levels (the ISSUE 8
+//!     acceptance — pruned must equal full bitwise, and skewed
+//!     populations must record >0 skipped segments; `BENCH_topk.json`)
 //!   * typed API: one pair batch through the direct path, the typed
 //!     in-process dispatch, the batched query service, and a TCP
 //!     loopback client (equality-guarded; `BENCH_api.json`)
@@ -292,6 +296,146 @@ fn main() {
             m_tpr.mean.as_secs_f64() / m_tar.mean.as_secs_f64(),
             fmt_duration(m_tpr.mean),
         );
+    }
+
+    // Zone-pruned fused top-k vs the full scan vs per-row scoring,
+    // across population skew levels — the ISSUE 8 arm. Each level
+    // builds a fully-columnar store of `zsegs` segments whose entry
+    // magnitudes grow geometrically (growth 1 = uniform, no pruning
+    // expected; growth 4 = steep bands, pruning must engage). Queries
+    // sit at the smallest band's scale, so their neighbors live there
+    // and large-band segments fail the zone lower bound. Equality is
+    // guarded per level before timing: the pruned scan must be
+    // bitwise-identical to the full scan, and the steep level must
+    // record >0 skipped segments. Recorded machine-readably in
+    // BENCH_topk.json.
+    {
+        let fast = std::env::var("LPSKETCH_BENCH_FAST").as_deref() == Ok("1");
+        let (zsegs, zseg_rows, zq) = if fast { (8usize, 64usize, 16usize) } else { (16, 512, 64) };
+        let (zd, zk, ztop) = (64usize, 64usize, 10usize);
+        let zn = zsegs * zseg_rows;
+        let workers = std::thread::available_parallelism().map_or(1, |w| w.get());
+        let zsk =
+            Sketcher::new(ProjectionSpec::new(11, zk, ProjectionDist::Normal, Strategy::Basic), 4);
+        let zdata = gen::generate(DataDist::Gaussian, zn, zd, 31);
+        let zqdata = gen::generate(DataDist::Gaussian, zq, zd, 32);
+        let zqrows: Vec<&[f32]> = (0..zq).map(|i| zqdata.row(i)).collect();
+        let zqsketches = zsk.sketch_rows(&zqrows);
+        let zqarena = SketchArena::from_rows(4, zk, &zqsketches);
+        let zpairs = (zq * zn) as u64;
+        let mut topk_json: Vec<String> = Vec::new();
+        let mut prune_json: Vec<String> = Vec::new();
+        for (lvl, growth) in [("uniform", 1.0f32), ("mild", 2.0), ("steep", 4.0)] {
+            let store = SketchStore::new(2);
+            let mut rowsk = Vec::with_capacity(zn);
+            for s in 0..zsegs {
+                let scale = growth.powi(s as i32);
+                let rows: Vec<Vec<f32>> = (0..zseg_rows)
+                    .map(|r| zdata.row(s * zseg_rows + r).iter().map(|x| x * scale).collect())
+                    .collect();
+                let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+                let block = zsk.sketch_block(&refs, 1);
+                for r in 0..block.rows() {
+                    rowsk.push(block.to_row_sketch(r));
+                }
+                // Gapped bases keep the segments distinct under any
+                // later compaction heuristics.
+                store.insert_block_columnar(1000 + (s * (zseg_rows + 3)) as u64, block);
+            }
+            let snap = store.snapshot();
+            let panels = snap.columnar_panels(4).expect("fully columnar store");
+            let extents = panels.extents();
+            // Equality guard before timing: pruned == full, bitwise,
+            // with coherent visit accounting — and the steep level must
+            // actually skip segments, else the zone maps are inert.
+            let full = estimator::top_k_scan_arena(&dec, &zqarena, &panels, ztop, workers);
+            let (pruned, stats) =
+                estimator::top_k_scan_zoned(&dec, &zqarena, &panels, &extents, ztop, workers);
+            assert_eq!(pruned, full, "pruned top-k diverged from the full scan ({lvl})");
+            assert_eq!(
+                stats.segments_visited + stats.segments_skipped,
+                zpairs / zseg_rows as u64,
+                "visit accounting broken ({lvl})"
+            );
+            if growth >= 4.0 {
+                assert!(
+                    stats.segments_skipped > 0,
+                    "steep skew must prune segments (visited={}, skipped=0)",
+                    stats.segments_visited
+                );
+            }
+            let m_zpr = bench(&format!("topk/{lvl}/per_row"), Some(zpairs), || {
+                for qs in &zqsketches {
+                    let mut scored: Vec<(usize, f64)> = rowsk
+                        .iter()
+                        .enumerate()
+                        .map(|(j, r)| (j, estimator::estimate(&dec, qs, r)))
+                        .collect();
+                    scored.select_nth_unstable_by(ztop - 1, |a, b| a.1.total_cmp(&b.1));
+                    scored.truncate(ztop);
+                    scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+                    std::hint::black_box(scored);
+                }
+            });
+            let m_zfull = bench(&format!("topk/{lvl}/full"), Some(zpairs), || {
+                std::hint::black_box(estimator::top_k_scan_arena(
+                    &dec, &zqarena, &panels, ztop, workers,
+                ));
+            });
+            let m_zpruned = bench(&format!("topk/{lvl}/pruned"), Some(zpairs), || {
+                std::hint::black_box(estimator::top_k_scan_zoned(
+                    &dec, &zqarena, &panels, &extents, ztop, workers,
+                ));
+            });
+            for (path, m) in
+                [("per_row", &m_zpr), ("full", &m_zfull), ("pruned", &m_zpruned)]
+            {
+                table.row(&[
+                    "topk".into(),
+                    format!("{lvl} {path} B={zq} n={zn} segs={zsegs} k={zk}"),
+                    fmt_duration(m.mean),
+                    fmt_duration(m.p95),
+                    format!("{:.2} Mpairs/s", m.throughput().unwrap() / 1e6),
+                ]);
+                topk_json.push(format!(
+                    "    {{\"skew\": \"{lvl}\", \"path\": \"{path}\", \"mean_s\": {:.6e}, \
+                     \"mpairs_per_s\": {:.2}}}",
+                    m.mean.as_secs_f64(),
+                    m.throughput().unwrap() / 1e6,
+                ));
+            }
+            let visits = (zq * zsegs) as u64;
+            prune_json.push(format!(
+                "    {{\"skew\": \"{lvl}\", \"growth\": {growth}, \"segments\": {zsegs}, \
+                 \"segments_visited\": {}, \"segments_skipped\": {}, \"rows_skipped\": {}, \
+                 \"skip_fraction\": {:.3}}}",
+                stats.segments_visited,
+                stats.segments_skipped,
+                stats.rows_skipped,
+                stats.segments_skipped as f64 / visits as f64,
+            ));
+            println!(
+                "topk {lvl}: pruned {:.2}x of full, {:.2}x of per-row \
+                 ({}/{} segment visits skipped)",
+                m_zfull.mean.as_secs_f64() / m_zpruned.mean.as_secs_f64(),
+                m_zpr.mean.as_secs_f64() / m_zpruned.mean.as_secs_f64(),
+                stats.segments_skipped,
+                visits,
+            );
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"topk\",\n  \"n\": {zn},\n  \"segments\": {zsegs},\n  \
+             \"d\": {zd},\n  \"k\": {zk},\n  \"p\": 4,\n  \"queries\": {zq},\n  \
+             \"top\": {ztop},\n  \"workers\": {workers},\n  \"results\": [\n{}\n  ],\n  \
+             \"pruning\": [\n{}\n  ]\n}}\n",
+            topk_json.join(",\n"),
+            prune_json.join(",\n"),
+        );
+        if let Err(e) = std::fs::write("BENCH_topk.json", &json) {
+            eprintln!("(could not write BENCH_topk.json: {e})");
+        } else {
+            println!("wrote BENCH_topk.json");
+        }
     }
 
     // End-to-end all-pairs through the pipeline (arena path vs the

@@ -5,7 +5,7 @@
 //!
 //! | rule | scope | enforces |
 //! |------|-------|----------|
-//! | `serving-no-panic` | `api/`, `coordinator/state.rs`, `coordinator/pipeline.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs`, `coordinator/compactor.rs`, `core/estimator.rs` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` on serving paths |
+//! | `serving-no-panic` | `api/`, `coordinator/state.rs`, `coordinator/pipeline.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs`, `coordinator/compactor.rs`, `core/estimator.rs`, `core/zone.rs`, `knn/mod.rs` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` on serving paths |
 //! | `no-index-untrusted` | `api/` | no `x[..]` indexing at the untrusted-input boundary — use `get(..)` |
 //! | `len-before-alloc` | `api/wire.rs`, `coordinator/persist.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs` | decoded-count allocations need a cap/bytes-present check earlier in the same function |
 //! | `guard-across-blocking` | `api/`, `coordinator/` | lock guards must not be live across channel ops, thread scopes, or a second blocking lock |
@@ -39,7 +39,10 @@ pub const PRAGMA_RULE: &str = "pragma";
 /// `SketchStore` mutators that must bump the epoch inside their write
 /// critical section. Extend this list when adding a mutator; a listed
 /// name that no longer exists is itself reported (manifest drift).
-const MUTATOR_MANIFEST: &[&str] = &["insert", "insert_block_shared", "compact_range"];
+/// (`insert_block_shared` / `insert_block_columnar` delegate to
+/// `insert_block_prezoned` after computing the zone summary, so the
+/// bump lives there.)
+const MUTATOR_MANIFEST: &[&str] = &["insert", "insert_block_prezoned", "compact_range"];
 
 /// One rule violation (or pragma diagnostic).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -69,7 +72,9 @@ pub fn rules_for(rel: &str) -> Vec<&'static str> {
         || rel == "coordinator/wal.rs"
         || rel == "coordinator/segfile.rs"
         || rel == "coordinator/compactor.rs"
-        || rel == "core/estimator.rs";
+        || rel == "core/estimator.rs"
+        || rel == "core/zone.rs"
+        || rel == "knn/mod.rs";
     if serving {
         rules.push(SERVING_NO_PANIC);
     }

@@ -8,7 +8,11 @@
 //! concurrently — and each drained batch is answered by
 //! [`Pipeline::serve_api_batch`] from a single per-batch epoch
 //! snapshot. A pair query, a top-k scan, and a stats probe that land in
-//! the same batch therefore all observe the same consistent cut.
+//! the same batch therefore all observe the same consistent cut. Top-k
+//! requests are answered through the zone-pruned fused scan: segments
+//! whose marginal-norm zone bound cannot beat the current heap root are
+//! skipped outright (bitwise-identical results to the full scan), and
+//! the visit/skip counters land in the metrics registry.
 //!
 //! The [`ApiHandle`] is the client side: cloneable, blocking, used
 //! directly by the CLI (`query`, `knn`, the `serve` demo) and by every

@@ -809,7 +809,13 @@ impl Durability {
         for seg in snap.segments() {
             let key = (seg.base, seg.block.rows() as u64);
             if !st.sealed.contains(&key) {
-                segfile::write_segment(self.fs.as_ref(), &self.dir.seg_dir(), seg.base, &seg.block)?;
+                segfile::write_segment(
+                    self.fs.as_ref(),
+                    &self.dir.seg_dir(),
+                    seg.base,
+                    &seg.block,
+                    &seg.zone,
+                )?;
                 report.segments_written += 1;
             }
         }
@@ -935,13 +941,19 @@ fn recover_into(
             !cov.overlaps(base, end),
             "sealed segment {path:?} partially overlaps recovered rows (corrupt data directory)"
         );
-        let (got_base, block) = segfile::read_segment(fs, &path, shape)
+        let (got_base, block, zone) = segfile::read_segment(fs, &path, shape)
             .with_context(|| format!("reading sealed segment {path:?}"))?;
         anyhow::ensure!(
             got_base == base && block.rows() as u64 == rows,
             "segment file {path:?} name does not match its header"
         );
-        store.insert_block_columnar(base, block);
+        match zone {
+            // v2 segments carry their zone — adopt it verbatim, no
+            // O(rows·orders·k) rescan on the recovery path.
+            Some(z) => store.insert_block_prezoned(base, Arc::new(block), Arc::new(z)),
+            // v1 segments predate zones — recompute from the panels.
+            None => store.insert_block_columnar(base, block),
+        }
         cov.insert_range(base, end);
         sealed.push((base, rows));
         report.segments_adopted += 1;

@@ -130,6 +130,16 @@ pub struct Metrics {
     /// Gauge: 1 while durability is degraded (data dir unwritable;
     /// reads keep serving, persistence paused), else 0.
     pub durable_degraded: AtomicU64,
+    /// Segments (re-)indexed by serving-index refreshes. A cold build
+    /// counts every segment; an incremental refresh counts only
+    /// segments newer than the cached epoch.
+    pub knn_segments_reindexed: AtomicU64,
+    /// Zoned segments actually scanned by pruned top-k queries
+    /// (one count per (query, segment) visit).
+    pub topk_segments_visited: AtomicU64,
+    /// Zoned segments skipped whole by pruned top-k queries — their
+    /// admissible lower bound could not beat the heap threshold.
+    pub topk_segments_skipped: AtomicU64,
     pub sketch_latency: Histogram,
     pub query_latency: Histogram,
 }
@@ -162,6 +172,9 @@ impl Metrics {
             compactor_passes: self.compactor_passes.load(Ordering::Relaxed),
             io_retries: self.io_retries.load(Ordering::Relaxed),
             durable_degraded: self.durable_degraded.load(Ordering::Relaxed),
+            knn_segments_reindexed: self.knn_segments_reindexed.load(Ordering::Relaxed),
+            topk_segments_visited: self.topk_segments_visited.load(Ordering::Relaxed),
+            topk_segments_skipped: self.topk_segments_skipped.load(Ordering::Relaxed),
             sketch_mean_us: self.sketch_latency.mean_us(),
             sketch_p95_us: self.sketch_latency.quantile_us(0.95),
             query_mean_us: self.query_latency.mean_us(),
@@ -192,6 +205,9 @@ pub struct Snapshot {
     pub compactor_passes: u64,
     pub io_retries: u64,
     pub durable_degraded: u64,
+    pub knn_segments_reindexed: u64,
+    pub topk_segments_visited: u64,
+    pub topk_segments_skipped: u64,
     pub sketch_mean_us: f64,
     pub sketch_p95_us: u64,
     pub query_mean_us: f64,
@@ -204,7 +220,8 @@ impl Snapshot {
             "rows={} blocks={} queries={} batches={} (deadline={}) pjrt={} gemm={} fallback={} \
              compactions={} segments={} in_flight={} snapshot_age={} wire_errors={} \
              wal_records={} wal_bytes={} sealed={} compactor_passes={} io_retries={} \
-             degraded={} sketch_mean={:.1}us \
+             degraded={} knn_reindexed={} topk_visited={} topk_skipped={} \
+             sketch_mean={:.1}us \
              sketch_p95={}us query_mean={:.1}us query_p95={}us",
             self.rows_ingested,
             self.blocks_sketched,
@@ -225,6 +242,9 @@ impl Snapshot {
             self.compactor_passes,
             self.io_retries,
             self.durable_degraded,
+            self.knn_segments_reindexed,
+            self.topk_segments_visited,
+            self.topk_segments_skipped,
             self.sketch_mean_us,
             self.sketch_p95_us,
             self.query_mean_us,

@@ -3,19 +3,22 @@
 //! claim (after the linear scan, the sketches *are* the dataset; the
 //! O(nD) matrix can be discarded).
 //!
-//! ## Format v3 (little-endian, current)
+//! ## Format v4 (little-endian, current)
 //!
 //! The store's two internal representations are persisted as they are
 //! held: per-row map entries row-wise, columnar segments as contiguous
 //! panels (one bulk f32 write per (order, side) per segment), so a
 //! save/load cycle preserves the columnar layout — and with it the
 //! memcpy `arena_snapshot` / segment-native query fast paths — instead
-//! of degrading every row to a map entry.
+//! of degrading every row to a map entry. v4 additionally persists each
+//! segment's zone summary (its pruning metadata), so a restored store
+//! serves pruned top-k immediately, without an O(rows·orders·k)
+//! recomputation pass.
 //!
 //! | field                | type                  | notes                              |
 //! |----------------------|-----------------------|------------------------------------|
 //! | magic                | `b"LPSK"`             |                                    |
-//! | version              | `u32` = 3             |                                    |
+//! | version              | `u32` = 4             |                                    |
 //! | p                    | `u32`                 | distance order (validation)        |
 //! | k                    | `u32`                 | sketch width                       |
 //! | orders               | `u32`                 | sketch orders (p−1)                |
@@ -39,6 +42,21 @@
 //! |   u panels           | `f32[orders·rows·k]`  | one contiguous panel per order     |
 //! |   v panels           | `f32[orders·rows·k]`  | only if two_sided                  |
 //! |   moments            | `f64[rows·nm]`        | row-major                          |
+//! |   zone_len           | `u32`                 | v4: zone words, = `encoded_len`    |
+//! |   zone               | `f64[zone_len]`       | v4: `ZoneMeta::to_f64s` layout     |
+//! |   zone_crc           | `u32`                 | v4: CRC32 of the zone bytes        |
+//!
+//! `zone_len` is redundant with the header shape (it must equal
+//! [`ZoneMeta::encoded_len`]) and is validated *before* the zone buffer
+//! is allocated — an inflated count is a hard error, not an allocation.
+//! The per-zone CRC pins the summary: zones gate which segments a
+//! pruned top-k even reads, so a silently corrupted zone could drop
+//! true neighbors; a corrupted zone file errors instead.
+//!
+//! ## Format v3 (read-only compatibility)
+//!
+//! v4 without the per-segment zone trailer. Loads fine; zones are
+//! recomputed from the panels at insertion.
 //!
 //! The recorded projection (seed + distribution; strategy is already
 //! implied by `two_sided`) is what lets a store restored via
@@ -69,13 +87,15 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::core::marginals::Moments;
+use crate::core::zone::ZoneMeta;
 use crate::projection::sketcher::{ColumnarBlock, RowSketch, SketchSet};
 use crate::projection::ProjectionDist;
 
+use super::durable::crc32;
 use super::state::SketchStore;
 
 const MAGIC: &[u8; 4] = b"LPSK";
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
 
 /// Hard caps on declared shapes — a corrupt header must error, not
 /// drive a multi-gigabyte allocation.
@@ -204,8 +224,11 @@ pub fn save(
 ) -> anyhow::Result<SketchFileHeader> {
     let snap = store.snapshot();
     let map_ids = snap.map_ids();
-    let segments: Vec<_> =
-        snap.segments().iter().map(|s| (s.base, Arc::clone(&s.block))).collect();
+    let segments: Vec<_> = snap
+        .segments()
+        .iter()
+        .map(|s| (s.base, Arc::clone(&s.block), Arc::clone(&s.zone)))
+        .collect();
     // Probe shape from the first map row or the first segment (empty
     // stores save an empty file with zeroed shape — loadable, yields an
     // empty store).
@@ -217,7 +240,7 @@ pub fn save(
             nm: rs.moments.len(),
             two_sided: rs.vside_data.is_some(),
         }),
-        (None, Some((_, block))) => Some(Shape {
+        (None, Some((_, block, _))) => Some(Shape {
             k: block.k(),
             orders: block.orders(),
             nm: block.moment_orders(),
@@ -226,7 +249,7 @@ pub fn save(
         (None, None) => None,
     };
     let shape = shape.unwrap_or(Shape { k: 0, orders: 0, nm: 0, two_sided: false });
-    let seg_rows: usize = segments.iter().map(|(_, b)| b.rows()).sum();
+    let seg_rows: usize = segments.iter().map(|(_, b, _)| b.rows()).sum();
     let header = SketchFileHeader {
         p: p as u32,
         k: shape.k as u32,
@@ -279,7 +302,7 @@ pub fn save(
         }
         w_f64s(&mut w, &rs.moments.0)?;
     }
-    for (base, block) in &segments {
+    for (base, block, zone) in &segments {
         let block_shape = Shape {
             k: block.k(),
             orders: block.orders(),
@@ -298,6 +321,17 @@ pub fn save(
             }
         }
         w_f64s(&mut w, block.moments_all())?;
+        // v4 zone trailer: word count, payload, CRC of the payload
+        // bytes. The serialized zone is the one the serving path uses —
+        // the store's live summary rides verbatim, it is not recomputed.
+        let zvals = zone.to_f64s(shape.two_sided);
+        let mut zbytes = Vec::with_capacity(zvals.len() * 8);
+        for x in &zvals {
+            zbytes.extend_from_slice(&x.to_le_bytes());
+        }
+        w_u32(&mut w, zvals.len() as u32)?;
+        w.write_all(&zbytes)?;
+        w_u32(&mut w, crc32(&zbytes))?;
     }
     w.flush()?;
     Ok(header)
@@ -422,11 +456,13 @@ fn read_map_row(r: &mut impl Read, h: &SketchFileHeader) -> anyhow::Result<(u64,
     Ok((id, RowSketch { uside: SketchSet { orders, k, data: udata }, vside_data, moments }))
 }
 
-/// Load a sketch file into a fresh store with `shards` shards. v2 files
-/// reconstruct their columnar segments verbatim (panels land through
-/// [`SketchStore::insert_block_columnar`], so the memcpy snapshot and
-/// segment-native query paths survive the round-trip); v1 files load
-/// every row into the per-row map, as they were saved.
+/// Load a sketch file into a fresh store with `shards` shards. v2+
+/// files reconstruct their columnar segments verbatim; v4 files also
+/// restore each segment's zone summary as stored (via
+/// [`SketchStore::insert_block_prezoned`]), while v2/v3 segments land
+/// through [`SketchStore::insert_block_columnar`], which recomputes the
+/// zone from the panels. v1 files load every row into the per-row map,
+/// as they were saved.
 pub fn load(path: &Path, shards: usize) -> anyhow::Result<(SketchStore, SketchFileHeader)> {
     let file = std::fs::File::open(path)?;
     let file_len = file.metadata()?.len();
@@ -500,10 +536,34 @@ pub fn load(path: &Path, shards: usize) -> anyhow::Result<(SketchStore, SketchFi
             None
         };
         let moments = r_f64s(&mut r, rows * nm)?;
-        store.insert_block_columnar(
-            base,
-            ColumnarBlock::from_parts(orders, k, nm, rows, u, v, moments),
-        );
+        let block = ColumnarBlock::from_parts(orders, k, nm, rows, u, v, moments);
+        if version >= 4 {
+            // Zone trailer: the declared word count must match the
+            // shape exactly — checked before the payload buffer exists,
+            // so an inflated count is an error, never an allocation.
+            let zone_len = r_u32(&mut r)? as usize;
+            let want_len = ZoneMeta::encoded_len(nm, orders, header.two_sided);
+            anyhow::ensure!(
+                zone_len == want_len,
+                "segment {s} declares a zone of {zone_len} words; shape requires {want_len}"
+            );
+            let mut zbytes = vec![0u8; zone_len * 8];
+            r.read_exact(&mut zbytes)?;
+            let want_crc = r_u32(&mut r)?;
+            anyhow::ensure!(
+                crc32(&zbytes) == want_crc,
+                "segment {s} zone checksum mismatch (corrupt)"
+            );
+            let zvals: Vec<f64> = zbytes
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+                .collect();
+            let zone = ZoneMeta::from_f64s(rows, nm, orders, header.two_sided, &zvals)?;
+            store.insert_block_prezoned(base, Arc::new(block), Arc::new(zone));
+        } else {
+            // Pre-v4 files carry no zones — recompute from the panels.
+            store.insert_block_columnar(base, block);
+        }
         seg_rows_total += rows as u64;
     }
     anyhow::ensure!(
@@ -712,6 +772,160 @@ mod tests {
             assert_eq!(loaded.get(id).unwrap().uside.data, store.get(id).unwrap().uside.data);
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Build a store whose rows all live in columnar segments (the
+    /// zone-bearing representation).
+    fn segmented_store(strategy: Strategy) -> SketchStore {
+        let sk = Sketcher::new(ProjectionSpec::new(5, 8, ProjectionDist::Normal, strategy), 4);
+        let store = SketchStore::new(3);
+        let rows: Vec<Vec<f32>> = (0..9)
+            .map(|i| (0..20).map(|t| ((i * 7 + t) as f32 * 0.23).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        store.insert_block_columnar(10, sk.sketch_block(&refs[..5], 1)); // 10..15
+        store.insert_block_columnar(40, sk.sketch_block(&refs[5..], 1)); // 40..44
+        store
+    }
+
+    #[test]
+    fn roundtrip_preserves_segment_zones() {
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let store = segmented_store(strategy);
+            let path = tmp(&format!("zones_{strategy:?}.lpsk"));
+            save(&store, 4, Some(proj()), &path).unwrap();
+            let (loaded, _) = load(&path, 2).unwrap();
+            let before = store.segments_snapshot_zoned();
+            let after = loaded.segments_snapshot_zoned();
+            assert_eq!(before.len(), after.len());
+            for ((b_base, _, b_zone), (a_base, _, a_zone)) in before.iter().zip(&after) {
+                assert_eq!(b_base, a_base);
+                assert_eq!(**b_zone, **a_zone, "zone must survive the roundtrip bitwise");
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn v4_zone_trailer_is_adopted_verbatim_not_recomputed() {
+        // The proof that v4 loads *trust* the stored zone: deflate one
+        // word of the last segment's zone (a smaller minimum only
+        // loosens the lower bound, so the crafted zone stays
+        // admissible), fix the CRC, and the load must surface the
+        // deflated value — not a recomputation from the panels.
+        let store = segmented_store(Strategy::Basic);
+        let path = tmp("zone_adopt.lpsk");
+        let header = save(&store, 4, Some(proj()), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let zlen = ZoneMeta::encoded_len(
+            header.moment_orders as usize,
+            header.orders as usize,
+            header.two_sided,
+        );
+        // The last segment's zone trailer ends the file:
+        // [zone_len u32][payload f64·zlen][crc u32].
+        let payload_at = bytes.len() - 4 - 8 * zlen;
+        let original = store.segments_snapshot_zoned().pop().unwrap().2;
+        let deflated = original.min_moment[0] - 1.0;
+        bytes[payload_at..payload_at + 8].copy_from_slice(&deflated.to_le_bytes());
+        let crc = crc32(&bytes[payload_at..bytes.len() - 4]);
+        let crc_at = bytes.len() - 4;
+        bytes[crc_at..].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let (loaded, _) = load(&path, 2).unwrap();
+        let (_, _, lz) = loaded.segments_snapshot_zoned().pop().unwrap();
+        assert_eq!(lz.min_moment[0], deflated, "stored zone must load verbatim");
+        assert_ne!(*lz, *original);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_v3_files_load_with_zones_recomputed() {
+        // Hand-rolled v3 writer (the current format minus the zone
+        // trailer): segments must keep loading, with zones recomputed
+        // from the panels at insertion.
+        let sk = Sketcher::new(
+            ProjectionSpec::new(5, 8, ProjectionDist::Normal, Strategy::Basic),
+            4,
+        );
+        let rows: Vec<Vec<f32>> = (0..7)
+            .map(|i| (0..20).map(|t| ((i * 11 + t) as f32 * 0.19).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let block = sk.sketch_block(&refs, 1);
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(b"LPSK");
+        for v in [3u32, 4, block.k() as u32, block.orders() as u32, block.moment_orders() as u32]
+        {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.push(0u8); // one-sided
+        for v in [block.rows() as u64, 0u64, 1u64] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.push(0u8); // no projection recorded
+        out.extend_from_slice(&5u64.to_le_bytes()); // base
+        out.extend_from_slice(&(block.rows() as u64).to_le_bytes());
+        for m in 1..=block.orders() {
+            for x in block.u_order(m) {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        for x in block.moments_all() {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        let path = tmp("legacy_v3.lpsk");
+        std::fs::write(&path, out).unwrap();
+        let (loaded, header) = load(&path, 3).unwrap();
+        assert_eq!(header.segments, 1);
+        assert_eq!(header.projection, None);
+        let segs = loaded.segments_snapshot_zoned();
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].0, 5);
+        assert_eq!(
+            *segs[0].2,
+            ZoneMeta::from_block(&segs[0].1),
+            "v3 segments recompute their zone at load"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_zone_trailer_errors_never_panics() {
+        let store = segmented_store(Strategy::Alternative);
+        let path = tmp("zone_corrupt.lpsk");
+        let header = save(&store, 4, Some(proj()), &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let zlen = ZoneMeta::encoded_len(
+            header.moment_orders as usize,
+            header.orders as usize,
+            header.two_sided,
+        );
+        let trailer_at = bytes.len() - 8 - 8 * zlen;
+        let attack = tmp("zone_attacked.lpsk");
+        // Every byte of the last zone trailer is load-bearing: flips in
+        // the count trip the length check, flips in the payload or the
+        // CRC word trip the checksum comparison.
+        for off in trailer_at..bytes.len() {
+            let mut b = bytes.clone();
+            b[off] ^= 0xFF;
+            std::fs::write(&attack, &b).unwrap();
+            assert!(load(&attack, 1).is_err(), "flip at {off} must error");
+        }
+        // Truncation anywhere inside the trailer errors too.
+        for len in trailer_at..bytes.len() {
+            std::fs::write(&attack, &bytes[..len]).unwrap();
+            assert!(load(&attack, 1).is_err(), "truncation to {len} must error");
+        }
+        // An inflated word count must be rejected by the shape check —
+        // before a multi-gigabyte zone buffer could be allocated.
+        let mut b = bytes.clone();
+        b[trailer_at..trailer_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&attack, &b).unwrap();
+        let err = load(&attack, 1).unwrap_err().to_string();
+        assert!(err.contains("zone"), "unexpected error: {err}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&attack).ok();
     }
 
     #[test]

@@ -24,12 +24,14 @@
 //! [`Pipeline::serve_api_batch`] from one per-batch epoch snapshot
 //! (re-captured only when ingest advanced the store), with
 //! `snapshot_age` / `queries_in_flight` gauges observing it. Top-k
-//! requests are served from an epoch-cached
-//! [`crate::knn::KnnIndex::from_snapshot`] rebuild — by stored id
-//! (straight from the stored sketch) or by fresh vector (sketched with
-//! the pipeline's projection; rejected with a clear error when the
-//! store was restored from a file that does not record the projection
-//! parameters). All routes produce bitwise-identical estimates.
+//! requests are served from an epoch-cached serving index refreshed
+//! *incrementally* ([`crate::knn::KnnIndex::from_snapshot_incremental`]:
+//! only segments newer than the cached epoch are re-indexed) — by
+//! stored id (straight from the stored panels, zero materialization) or
+//! by fresh vector (sketched with the pipeline's projection; rejected
+//! with a clear error when the store was restored from a file that does
+//! not record the projection parameters). All routes produce
+//! bitwise-identical estimates.
 //!
 //! Compute backends per block:
 //! * **PJRT** (`use_pjrt`): blocks padded to the artifact's batch B,
@@ -95,8 +97,9 @@ pub struct Pipeline {
     metrics: Metrics,
     router: Router,
     next_id: AtomicU64,
-    /// Serving-side KNN index, rebuilt from a store snapshot whenever a
-    /// top-k request observes a newer epoch than the cached build.
+    /// Serving-side KNN index, refreshed incrementally from a store
+    /// snapshot whenever a top-k request observes a newer epoch than
+    /// the cached build (unchanged segments carry over by `Arc`).
     knn_cache: Mutex<Option<(u64, Arc<ServingIndex>)>>,
     /// Row width of the first ingested block (0 = nothing ingested,
     /// e.g. a store restored from a sketch file, which does not record
@@ -832,6 +835,11 @@ impl Pipeline {
     }
 
     /// Shared top-k scan: already-sketched queries against one snapshot.
+    /// A fully-columnar snapshot runs the *zone-pruned* scan on its
+    /// segment panels — segments whose admissible lower bound cannot
+    /// beat the heap threshold are skipped whole (counted by the
+    /// `topk_segments_visited` / `topk_segments_skipped` metrics),
+    /// bitwise-identical to the full scan by the bound's admissibility.
     fn top_k_sketched(
         &self,
         snap: &StoreSnapshot,
@@ -841,10 +849,21 @@ impl Pipeline {
         let qarena = SketchArena::from_rows(self.cfg.p, self.cfg.k, qsk);
         let workers = self.cfg.workers.max(1);
         match snap.columnar_panels(self.cfg.p) {
-            Some(v) => estimator::top_k_scan_arena(&self.dec, &qarena, &v, top, workers)
-                .into_iter()
-                .map(|lst| lst.into_iter().map(|(i, d)| (v.id_at(i), d)).collect())
-                .collect(),
+            Some(v) => {
+                let (lists, stats) = estimator::top_k_scan_zoned(
+                    &self.dec,
+                    &qarena,
+                    &v,
+                    &v.extents(),
+                    top,
+                    workers,
+                );
+                self.record_prune(&stats);
+                lists
+                    .into_iter()
+                    .map(|lst| lst.into_iter().map(|(i, d)| (v.id_at(i), d)).collect())
+                    .collect()
+            }
             None => {
                 let arena = snap.arena(self.cfg.p, self.cfg.k);
                 estimator::top_k_scan_arena(&self.dec, &qarena, &arena.arena, top, workers)
@@ -853,6 +872,16 @@ impl Pipeline {
                     .collect()
             }
         }
+    }
+
+    /// Fold one zoned scan's pruning counters into the metrics.
+    fn record_prune(&self, stats: &estimator::PruneStats) {
+        self.metrics
+            .topk_segments_visited
+            .fetch_add(stats.segments_visited, Ordering::Relaxed);
+        self.metrics
+            .topk_segments_skipped
+            .fetch_add(stats.segments_skipped, Ordering::Relaxed);
     }
 
     /// Distances from a fresh (never-ingested) vector to the given
@@ -1198,8 +1227,11 @@ impl Pipeline {
                     .ids
                     .binary_search(&id)
                     .map_err(|_| anyhow::anyhow!("unknown id {id}"))?;
-                let q = serving.index.sketch_at(pos).clone();
-                serving.index.query_sketches(&[q], top)
+                // By-position: the stored row's panels ARE the query —
+                // no sketch materialization, no query-arena copy.
+                let (list, stats) = serving.index.query_pos_stats(pos, top);
+                self.record_prune(&stats);
+                vec![list]
             }
             TopKTarget::Vector(v) => serving.index.query_batch(&[v.as_slice()], top),
         };
@@ -1267,10 +1299,14 @@ impl Pipeline {
     }
 
     /// The serving index for `snap`'s epoch: reused while the store is
-    /// quiescent, rebuilt from the snapshot (one materialization pass
-    /// over the O(nk) sketch state) the first time a top-k request
-    /// observes a newer epoch. The cache lock is held across a rebuild,
-    /// so racing top-k requests build each epoch's index exactly once.
+    /// quiescent, refreshed *incrementally* the first time a top-k
+    /// request observes a newer epoch — segment shards whose panels are
+    /// still the cached index's `Arc` allocations carry over untouched,
+    /// and only segments newer than the cached epoch (fresh ingests,
+    /// compaction outputs) are re-indexed (the `knn_segments_reindexed`
+    /// metric counts exactly those). The cache lock is held across a
+    /// refresh, so racing top-k requests build each epoch's index
+    /// exactly once.
     fn serving_index(&self, snap: &Arc<StoreSnapshot>) -> anyhow::Result<Arc<ServingIndex>> {
         let mut cache = self.knn_cache.lock_recover();
         if let Some((epoch, serving)) = cache.as_ref() {
@@ -1278,8 +1314,16 @@ impl Pipeline {
                 return Ok(Arc::clone(serving));
             }
         }
-        let (index, ids) =
-            KnnIndex::from_snapshot(snap, self.cfg.projection_spec(), self.cfg.p)?;
+        let prev = cache.as_ref().map(|(_, s)| Arc::clone(s));
+        let (index, ids, reindexed) = KnnIndex::from_snapshot_incremental(
+            snap,
+            self.cfg.projection_spec(),
+            self.cfg.p,
+            prev.as_deref().map(|s| &s.index),
+        )?;
+        self.metrics
+            .knn_segments_reindexed
+            .fetch_add(reindexed as u64, Ordering::Relaxed);
         let built = Arc::new(ServingIndex { index, ids });
         *cache = Some((snap.epoch(), Arc::clone(&built)));
         Ok(built)
@@ -1883,6 +1927,60 @@ mod tests {
         let one = assemble_columnar(orders, k, nm, rows, b, &u, &m, None);
         assert!(!one.is_two_sided());
         assert_eq!(one.u_row(2, 3), block.u_row(2, 3));
+    }
+
+    #[test]
+    fn serving_index_refresh_is_incremental_and_metered() {
+        use crate::api::{Request, Response, TopKTarget};
+        let mut c = cfg(32, 64);
+        c.k = 16;
+        c.block_rows = 16;
+        c.compact_min_rows = 0; // keep segments exactly as ingested
+        let data = gen::generate(DataDist::Gaussian, c.n, c.d, 97);
+        let p = Pipeline::new(c).unwrap();
+        p.ingest(&data).unwrap();
+        let segs0 = p.store().segment_count() as u64;
+        assert!(segs0 >= 2);
+        match p.answer(Request::TopK { target: TopKTarget::StoredId(0), top: 4 }) {
+            Response::TopK(lst) => assert_eq!(lst.len(), 4),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(p.metrics().knn_segments_reindexed, segs0, "cold build indexes every segment");
+        // Quiescent store: the cached index serves, nothing re-indexed.
+        let _ = p.answer(Request::TopK { target: TopKTarget::StoredId(1), top: 4 });
+        assert_eq!(p.metrics().knn_segments_reindexed, segs0);
+        // Appending ingest: the refresh re-indexes ONLY the new
+        // segments — the running total lands on the new segment count,
+        // not segs0 + segs1.
+        p.ingest(&data).unwrap();
+        let segs1 = p.store().segment_count() as u64;
+        assert!(segs1 > segs0);
+        let got = match p.answer(Request::TopK { target: TopKTarget::StoredId(5), top: 4 }) {
+            Response::TopK(lst) => lst,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(
+            p.metrics().knn_segments_reindexed,
+            segs1,
+            "refresh must re-index only segments newer than the cached epoch"
+        );
+        // The incrementally refreshed index answers bitwise-identically
+        // to a cold rebuild of the same snapshot.
+        let snap = p.store_snapshot();
+        let (cold, ids) = crate::knn::KnnIndex::from_snapshot(
+            &snap,
+            p.config().projection_spec(),
+            p.config().p,
+        )
+        .unwrap();
+        let pos = ids.binary_search(&5).unwrap();
+        let via_cold: Vec<(u64, f64)> =
+            cold.query_pos(pos, 4).into_iter().map(|nb| (ids[nb.index], nb.distance)).collect();
+        assert_eq!(got, via_cold);
+        // The zoned serve path kept its pruning books: every request
+        // visited each segment at most once.
+        let m = p.metrics();
+        assert!(m.topk_segments_visited + m.topk_segments_skipped > 0);
     }
 
     #[test]

@@ -4,12 +4,12 @@
 //! sealed here, restart adopts it directly and replays only the WAL
 //! tail — a multi-GB store does not re-decode its settled history.
 //!
-//! ## File format (little-endian)
+//! ## File format v2 (little-endian, current)
 //!
 //! | field     | type                 | notes                          |
 //! |-----------|----------------------|--------------------------------|
 //! | magic     | `b"LPSG"`            |                                |
-//! | version   | `u32` = 1            |                                |
+//! | version   | `u32` = 2            |                                |
 //! | base      | `u64`                | first covered row id           |
 //! | rows      | `u64`                |                                |
 //! | orders    | `u32`                | must match `store.meta`        |
@@ -19,7 +19,15 @@
 //! | u panels  | `f32[orders·rows·k]` | per-order, contiguous          |
 //! | v panels  | `f32[orders·rows·k]` | two-sided only                 |
 //! | moments   | `f64[rows·nm]`       | row-major                      |
+//! | zone_len  | `u32`                | v2: = `ZoneMeta::encoded_len`  |
+//! | zone      | `f64[zone_len]`      | v2: `ZoneMeta::to_f64s` layout |
 //! | crc       | `u32`                | CRC32 of everything above      |
+//!
+//! v2 seals the segment's zone summary with its panels, so recovery
+//! adopts pruning metadata verbatim instead of rescanning every panel;
+//! the zone rides under the same whole-file footer CRC as the data it
+//! summarizes. v1 files (no zone section) still load — the recovered
+//! segment recomputes its zone at insertion.
 //!
 //! The write protocol makes publication atomic: contents are fully
 //! fsynced *before* the rename, so a published name never points at
@@ -34,12 +42,13 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Context;
 
+use crate::core::zone::ZoneMeta;
 use crate::projection::sketcher::ColumnarBlock;
 
 use super::durable::{crc32, put_f32s, put_f64s, put_u32, put_u64, ByteReader, DurableFs, MetaShape};
 
 pub(crate) const SEG_MAGIC: &[u8; 4] = b"LPSG";
-pub(crate) const SEG_VERSION: u32 = 1;
+pub(crate) const SEG_VERSION: u32 = 2;
 
 /// Fixed bytes before the panels: magic + version + base + rows +
 /// orders + k + nm + two_sided.
@@ -60,7 +69,7 @@ pub(crate) fn parse_name(name: &str) -> Option<(u64, u64)> {
     Some((u64::from_str_radix(b, 16).ok()?, u64::from_str_radix(r, 16).ok()?))
 }
 
-fn encode_segment(base: u64, block: &ColumnarBlock) -> Vec<u8> {
+fn encode_segment(base: u64, block: &ColumnarBlock, zone: &ZoneMeta) -> Vec<u8> {
     // pallas-lint: allow(len-before-alloc) -- sized from the in-memory block being encoded, not a decoded count
     let mut out = Vec::with_capacity(SEG_HEADER_BYTES + block.bytes() + 4);
     out.extend_from_slice(SEG_MAGIC);
@@ -82,25 +91,31 @@ fn encode_segment(base: u64, block: &ColumnarBlock) -> Vec<u8> {
         }
     }
     put_f64s(&mut out, block.moments_all());
+    // v2 zone section, under the same footer CRC as the panels.
+    let zvals = zone.to_f64s(block.is_two_sided());
+    put_u32(&mut out, zvals.len() as u32);
+    put_f64s(&mut out, &zvals);
     let crc = crc32(&out);
     put_u32(&mut out, crc);
     out
 }
 
-/// Seal one columnar block as an immutable segment file in `seg_dir`:
-/// write to a `.tmp` sibling, fsync the contents, atomically rename to
-/// the final name, fsync the directory. Returns the published path.
+/// Seal one columnar block (and its zone summary) as an immutable
+/// segment file in `seg_dir`: write to a `.tmp` sibling, fsync the
+/// contents, atomically rename to the final name, fsync the directory.
+/// Returns the published path.
 pub(crate) fn write_segment(
     fs: &dyn DurableFs,
     seg_dir: &Path,
     base: u64,
     block: &ColumnarBlock,
+    zone: &ZoneMeta,
 ) -> anyhow::Result<PathBuf> {
     anyhow::ensure!(block.rows() > 0, "refusing to seal an empty segment");
     let name = seg_file_name(base, block.rows() as u64);
     let path = seg_dir.join(&name);
     let tmp = seg_dir.join(format!("{name}.tmp"));
-    let data = encode_segment(base, block);
+    let data = encode_segment(base, block, zone);
     fs.write_file(&tmp, &data).with_context(|| format!("writing {tmp:?}"))?;
     fs.sync_file(&tmp).with_context(|| format!("syncing {tmp:?}"))?;
     fs.rename(&tmp, &path).with_context(|| format!("publishing {path:?}"))?;
@@ -112,11 +127,14 @@ pub(crate) fn write_segment(
 /// body, shape pinned to `store.meta`, exact byte accounting before
 /// any panel allocation. Errors, never panics — a published file that
 /// fails here is corruption, not a tolerated tear (see module docs).
+///
+/// v2 files return their sealed zone summary; v1 files (sealed before
+/// zones existed) return `None` and the caller recomputes.
 pub(crate) fn read_segment(
     fs: &dyn DurableFs,
     path: &Path,
     shape: &MetaShape,
-) -> anyhow::Result<(u64, ColumnarBlock)> {
+) -> anyhow::Result<(u64, ColumnarBlock, Option<ZoneMeta>)> {
     let data = fs.read_file(path).context("reading segment file")?;
     anyhow::ensure!(data.len() >= SEG_HEADER_BYTES + 4, "segment file too short");
     let body = &data[..data.len() - 4];
@@ -127,7 +145,10 @@ pub(crate) fn read_segment(
     let magic = r.take(4)?;
     anyhow::ensure!(magic == SEG_MAGIC, "not a segment file (bad magic)");
     let version = r.u32()?;
-    anyhow::ensure!(version == SEG_VERSION, "unsupported segment version {version}");
+    anyhow::ensure!(
+        version >= 1 && version <= SEG_VERSION,
+        "unsupported segment version {version}"
+    );
     let base = r.u64()?;
     let rows = r.u64()?;
     let orders = r.u32()?;
@@ -143,8 +164,13 @@ pub(crate) fn read_segment(
     anyhow::ensure!(rows > 0 && rows <= super::wal::MAX_BATCH_ROWS, "implausible segment of {rows} rows");
     anyhow::ensure!(base.checked_add(rows).is_some(), "segment id range overflows");
     let rows = rows as usize;
+    // Exact byte accounting before any allocation — v2 bodies carry
+    // the fixed-size zone section after the row data.
+    let zone_words =
+        ZoneMeta::encoded_len(nm as usize, orders as usize, two_sided);
     let expect = rows
         .checked_mul(shape.row_data_bytes())
+        .and_then(|b| b.checked_add(if version >= 2 { 4 + 8 * zone_words } else { 0 }))
         .ok_or_else(|| anyhow::anyhow!("segment byte size overflows"))?;
     anyhow::ensure!(
         r.remaining() == expect,
@@ -154,7 +180,18 @@ pub(crate) fn read_segment(
     let u = r.f32s(orders * rows * k)?;
     let v = if two_sided { Some(r.f32s(orders * rows * k)?) } else { None };
     let moments = r.f64s(rows * nm)?;
-    Ok((base, ColumnarBlock::from_parts(orders, k, nm, rows, u, v, moments)))
+    let zone = if version >= 2 {
+        let zone_len = r.u32()? as usize;
+        anyhow::ensure!(
+            zone_len == zone_words,
+            "segment declares a zone of {zone_len} words; shape requires {zone_words}"
+        );
+        let zvals = r.f64s(zone_len)?;
+        Some(ZoneMeta::from_f64s(rows, nm, orders, two_sided, &zvals)?)
+    } else {
+        None
+    };
+    Ok((base, ColumnarBlock::from_parts(orders, k, nm, rows, u, v, moments), zone))
 }
 
 #[cfg(test)]
@@ -213,9 +250,10 @@ mod tests {
             let s = shape(two_sided);
             let dir = tmp_dir(&format!("roundtrip_{two_sided}"));
             let block = block_for(&s, 5);
-            let path = write_segment(&RealFs, &dir, 400, &block).unwrap();
+            let zone = ZoneMeta::from_block(&block);
+            let path = write_segment(&RealFs, &dir, 400, &block, &zone).unwrap();
             assert!(path.file_name().and_then(|n| n.to_str()).map(parse_name).flatten().is_some());
-            let (base, got) = read_segment(&RealFs, &path, &s).unwrap();
+            let (base, got, got_zone) = read_segment(&RealFs, &path, &s).unwrap();
             assert_eq!(base, 400);
             assert_eq!(got.rows(), block.rows());
             for m in 1..=block.orders() {
@@ -223,6 +261,7 @@ mod tests {
                 assert_eq!(got.v_order(m), block.v_order(m));
             }
             assert_eq!(got.moments_all(), block.moments_all());
+            assert_eq!(got_zone, Some(zone), "zone must survive the seal bitwise");
             // No temp residue after a clean publish.
             let leftovers: Vec<_> = std::fs::read_dir(&dir)
                 .unwrap()
@@ -239,7 +278,7 @@ mod tests {
         let s = shape(false);
         let dir = tmp_dir("flips");
         let block = block_for(&s, 2);
-        let path = write_segment(&RealFs, &dir, 10, &block).unwrap();
+        let path = write_segment(&RealFs, &dir, 10, &block, &ZoneMeta::from_block(&block)).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         // Step through the file (stride keeps the test fast; header and
         // footer are covered exhaustively by the small stride).
@@ -268,10 +307,63 @@ mod tests {
         let s = shape(false);
         let dir = tmp_dir("shape");
         let block = block_for(&s, 3);
-        let path = write_segment(&RealFs, &dir, 0, &block).unwrap();
+        let path = write_segment(&RealFs, &dir, 0, &block, &ZoneMeta::from_block(&block)).unwrap();
         let mut other = s;
         other.k = 16;
         assert!(read_segment(&RealFs, &path, &other).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_segments_load_with_no_zone() {
+        // Hand-rolled v1 file (pre-zone format): header, panels,
+        // moments, footer CRC — no zone section. Must keep loading,
+        // reporting `None` so the caller recomputes the zone.
+        let s = shape(false);
+        let dir = tmp_dir("v1_compat");
+        let block = block_for(&s, 4);
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(SEG_MAGIC);
+        put_u32(&mut out, 1); // v1
+        put_u64(&mut out, 30);
+        put_u64(&mut out, block.rows() as u64);
+        put_u32(&mut out, block.orders() as u32);
+        put_u32(&mut out, block.k() as u32);
+        put_u32(&mut out, block.moment_orders() as u32);
+        out.push(0u8);
+        for m in 1..=block.orders() {
+            put_f32s(&mut out, block.u_order(m));
+        }
+        put_f64s(&mut out, block.moments_all());
+        let crc = crc32(&out);
+        put_u32(&mut out, crc);
+        let path = dir.join(seg_file_name(30, block.rows() as u64));
+        std::fs::write(&path, &out).unwrap();
+        let (base, got, zone) = read_segment(&RealFs, &path, &s).unwrap();
+        assert_eq!(base, 30);
+        assert_eq!(got.moments_all(), block.moments_all());
+        assert_eq!(zone, None, "v1 files predate zones");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn inflated_zone_count_is_rejected_before_allocation() {
+        // A CRC-valid file whose zone_len disagrees with the shape must
+        // fail the length pin (the byte-accounting and length checks
+        // both run before the zone buffer is allocated).
+        let s = shape(false);
+        let dir = tmp_dir("zone_len");
+        let block = block_for(&s, 2);
+        let path = write_segment(&RealFs, &dir, 0, &block, &ZoneMeta::from_block(&block)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let zone_len_at = SEG_HEADER_BYTES + block.rows() * s.row_data_bytes();
+        bytes[zone_len_at..zone_len_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_segment(&RealFs, &path, &s).unwrap_err().to_string();
+        assert!(err.contains("zone"), "unexpected error: {err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

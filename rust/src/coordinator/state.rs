@@ -64,7 +64,8 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::core::arena::{ArenaBuilder, SketchArena};
 use crate::core::decompose::Decomposition;
-use crate::core::estimator::{dot, SketchPanels};
+use crate::core::estimator::{dot, SketchPanels, ZoneExtent};
+use crate::core::zone::ZoneMeta;
 use crate::projection::sketcher::{ColumnarBlock, RowSketch};
 use crate::util::sync::{MutexExt, RwLockExt};
 
@@ -72,11 +73,13 @@ type ShardMap = HashMap<u64, Arc<RowSketch>>;
 
 /// One columnar segment: ids `base .. base + block.rows()`, panels
 /// shared by handle between the store and every snapshot that captured
-/// them.
+/// them, plus the zone summary the pruned top-k scan bounds distances
+/// with (computed at insertion, merged exactly at compaction).
 #[derive(Clone)]
 pub struct Segment {
     pub base: u64,
     pub block: Arc<ColumnarBlock>,
+    pub zone: Arc<ZoneMeta>,
 }
 
 impl Segment {
@@ -379,10 +382,17 @@ impl StoreSnapshot {
         let mut parts = Vec::with_capacity(self.segments.len());
         let mut off = 0usize;
         for s in &self.segments {
-            parts.push((off, s.base, s.block.clone()));
+            parts.push((off, s.base, s.block.clone(), s.zone.clone()));
             off += s.block.rows();
         }
         Some(SegmentPanels { p, k: self.segments[0].block.k(), n: off, parts })
+    }
+
+    /// Arc handle of the map-shard row holding `id`, if any — the row
+    /// payload is shared, never copied (the serving index's map shards
+    /// are built from these).
+    pub fn map_row(&self, id: u64) -> Option<Arc<RowSketch>> {
+        self.map[self.shard_of(id)].get(&id).map(Arc::clone)
     }
 }
 
@@ -397,8 +407,9 @@ pub struct SegmentPanels {
     p: usize,
     k: usize,
     n: usize,
-    /// Per segment: (first view row, base id, block), offsets ascending.
-    parts: Vec<(usize, u64, Arc<ColumnarBlock>)>,
+    /// Per segment: (first view row, base id, block, zone), offsets
+    /// ascending.
+    parts: Vec<(usize, u64, Arc<ColumnarBlock>, Arc<ZoneMeta>)>,
 }
 
 impl SegmentPanels {
@@ -406,23 +417,36 @@ impl SegmentPanels {
     #[inline]
     fn locate(&self, i: usize) -> (&ColumnarBlock, usize) {
         debug_assert!(i < self.n);
-        let pos = self.parts.partition_point(|&(off, _, _)| off <= i);
-        let (off, _, block) = &self.parts[pos - 1];
+        let pos = self.parts.partition_point(|&(off, ..)| off <= i);
+        let (off, _, block, _) = &self.parts[pos - 1];
         (block.as_ref(), i - off)
     }
 
     /// Store id of view row `i`.
     pub fn id_at(&self, i: usize) -> u64 {
-        let pos = self.parts.partition_point(|&(off, _, _)| off <= i);
-        let (off, base, _) = &self.parts[pos - 1];
+        let pos = self.parts.partition_point(|&(off, ..)| off <= i);
+        let (off, base, ..) = &self.parts[pos - 1];
         base + (i - off) as u64
     }
 
     /// View row holding store id `id`, if a segment covers it.
     pub fn pos_of(&self, id: u64) -> Option<usize> {
-        let pos = self.parts.partition_point(|&(_, base, _)| base <= id);
-        let (off, base, block) = self.parts.get(pos.checked_sub(1)?)?;
+        let pos = self.parts.partition_point(|&(_, base, ..)| base <= id);
+        let (off, base, block, _) = self.parts.get(pos.checked_sub(1)?)?;
         (id < base + block.rows() as u64).then(|| off + (id - base) as usize)
+    }
+
+    /// Zone extents for `estimator::top_k_scan_zoned`: one per segment,
+    /// tiling `[0, n)` in view-row order.
+    pub fn extents(&self) -> Vec<ZoneExtent<'_>> {
+        self.parts
+            .iter()
+            .map(|(off, _, block, zone)| ZoneExtent {
+                off: *off,
+                rows: block.rows(),
+                zone: Some(zone.as_ref()),
+            })
+            .collect()
     }
 }
 
@@ -534,17 +558,29 @@ impl SketchStore {
 
     /// Land an `Arc`-held columnar block — the zero-copy variant used
     /// by rebalance and snapshot replays, which share panels with the
-    /// source store instead of copying them. Panics if the id range
-    /// overlaps an existing segment or a map row already present at
-    /// insertion time (a silent duplicate would corrupt the arena
-    /// build's contiguous landing); concurrent `insert`s into the range
-    /// after this check remain the caller's responsibility, as with
-    /// double `insert`s, and are caught by the arena duplicate-id
-    /// backstop.
+    /// source store instead of copying them. The zone summary is
+    /// computed here, off-lock, before the segment is published.
     pub fn insert_block_shared(&self, base: u64, block: Arc<ColumnarBlock>) {
         if block.rows() == 0 {
             return;
         }
+        let zone = Arc::new(ZoneMeta::from_block(&block));
+        self.insert_block_prezoned(base, block, zone);
+    }
+
+    /// Land a columnar block with a zone computed elsewhere (persist v4
+    /// load, recovered segment files) — trusted summaries skip the
+    /// `from_block` pass. Panics if the id range overlaps an existing
+    /// segment or a map row already present at insertion time (a silent
+    /// duplicate would corrupt the arena build's contiguous landing);
+    /// concurrent `insert`s into the range after this check remain the
+    /// caller's responsibility, as with double `insert`s, and are
+    /// caught by the arena duplicate-id backstop.
+    pub fn insert_block_prezoned(&self, base: u64, block: Arc<ColumnarBlock>, zone: Arc<ZoneMeta>) {
+        if block.rows() == 0 {
+            return;
+        }
+        assert_eq!(zone.rows, block.rows(), "zone summarizes a different row count");
         let end = base + block.rows() as u64;
         // Map-collision check before taking the segment lock (the
         // shard→segment order every path uses); one lock acquisition
@@ -564,7 +600,7 @@ impl SketchStore {
         let disjoint = (pos == 0 || segs[pos - 1].end() <= base)
             && (pos == segs.len() || end <= segs[pos].base);
         assert!(disjoint, "columnar segment [{base}, {end}) overlaps an existing segment");
-        segs.insert(pos, Segment { base, block });
+        segs.insert(pos, Segment { base, block, zone });
         self.epoch.fetch_add(1, Ordering::Release);
     }
 
@@ -749,10 +785,15 @@ impl SketchStore {
                 let blocks: Vec<&ColumnarBlock> =
                     g.iter().map(|s| s.block.as_ref()).collect();
                 let block = ColumnarBlock::concat(&blocks);
+                // Elementwise zone merge — bitwise-identical to
+                // ZoneMeta::from_block over the concatenated panels,
+                // without rescanning a single row.
+                let zones: Vec<&ZoneMeta> = g.iter().map(|s| s.zone.as_ref()).collect();
+                let zone = Arc::new(ZoneMeta::merge(&zones));
                 merges += 1;
                 rows_merged += block.rows();
                 let bases = g.iter().map(|s| s.base).collect();
-                (bases, Segment { base: g[0].base, block: Arc::new(block) })
+                (bases, Segment { base: g[0].base, block: Arc::new(block), zone })
             })
             .collect();
         // Swap each run atomically. Planned runs are still intact:
@@ -811,7 +852,7 @@ impl SketchStore {
         let mut parts = Vec::with_capacity(segs.len());
         let mut off = 0usize;
         for s in segs.iter() {
-            parts.push((off, s.base, s.block.clone()));
+            parts.push((off, s.base, s.block.clone(), s.zone.clone()));
             off += s.block.rows();
         }
         let view = SegmentPanels { p, k: segs[0].block.k(), n: off, parts };
@@ -824,6 +865,17 @@ impl SketchStore {
     /// re-sharding shares panels instead of copying them.
     pub fn segments_snapshot(&self) -> Vec<(u64, Arc<ColumnarBlock>)> {
         self.snapshot().segments().iter().map(|s| (s.base, Arc::clone(&s.block))).collect()
+    }
+
+    /// Like [`SketchStore::segments_snapshot`], with each segment's zone
+    /// summary — persistence rides zones alongside the panels so a
+    /// restored store prunes immediately, without recomputation.
+    pub fn segments_snapshot_zoned(&self) -> Vec<(u64, Arc<ColumnarBlock>, Arc<ZoneMeta>)> {
+        self.snapshot()
+            .segments()
+            .iter()
+            .map(|s| (s.base, Arc::clone(&s.block), Arc::clone(&s.zone)))
+            .collect()
     }
 
     /// Ids held in the hashmap shards only (segment-backed ids
@@ -1179,12 +1231,74 @@ mod tests {
             assert_eq!(s.base, *base);
             assert!(Arc::ptr_eq(&s.block, block), "segment at {base} was copied, not shared");
         }
-        // The owned panels view shares the same allocations too.
+        // The owned panels view shares the same allocations too —
+        // zones included.
         let panels = snap.columnar_panels(4).expect("fully columnar");
         assert_eq!(panels.n(), 7);
-        for (i, (_, base, block)) in panels.parts.iter().enumerate() {
+        for (i, (_, base, block, zone)) in panels.parts.iter().enumerate() {
             assert_eq!(*base, snap.segments()[i].base);
             assert!(Arc::ptr_eq(block, &snap.segments()[i].block));
+            assert!(Arc::ptr_eq(zone, &snap.segments()[i].zone));
+        }
+    }
+
+    // ---- zone maps ------------------------------------------------------
+
+    #[test]
+    fn inserted_segments_carry_their_block_zone() {
+        use crate::core::zone::ZoneMeta;
+        let store = SketchStore::new(2);
+        let block = block_of(5);
+        store.insert_block_columnar(10, block.clone());
+        let segs = store.segments_snapshot_zoned();
+        assert_eq!(segs.len(), 1);
+        assert_eq!(*segs[0].2, ZoneMeta::from_block(&block));
+        // Prezoned insertion adopts the supplied summary verbatim.
+        let store2 = SketchStore::new(2);
+        let mut custom = ZoneMeta::from_block(&block);
+        custom.min_moment[0] -= 1.0; // deflated: still admissible
+        store2.insert_block_prezoned(10, Arc::new(block), Arc::new(custom.clone()));
+        let segs2 = store2.segments_snapshot_zoned();
+        assert_eq!(*segs2[0].2, custom);
+    }
+
+    #[test]
+    #[should_panic(expected = "zone summarizes a different row count")]
+    fn prezoned_insert_rejects_row_count_mismatch() {
+        use crate::core::zone::ZoneMeta;
+        let store = SketchStore::new(1);
+        let mut zone = ZoneMeta::from_block(&block_of(4));
+        zone.rows = 3;
+        store.insert_block_prezoned(10, Arc::new(block_of(4)), Arc::new(zone));
+    }
+
+    #[test]
+    fn compaction_merges_zones_bitwise_equal_to_recomputation() {
+        use crate::core::zone::ZoneMeta;
+        let store = SketchStore::new(1);
+        store.insert_block_columnar(10, block_of(4)); // 10..14
+        store.insert_block_columnar(14, block_of(2)); // 14..16
+        store.insert_block_columnar(16, block_of(3)); // 16..19
+        let report = store.compact_segments(16, 1024);
+        assert_eq!(report.merges, 1);
+        let segs = store.segments_snapshot_zoned();
+        assert_eq!(segs.len(), 1);
+        assert_eq!(*segs[0].2, ZoneMeta::from_block(&segs[0].1));
+    }
+
+    #[test]
+    fn panels_extents_tile_the_view_with_segment_zones() {
+        let store = SketchStore::new(2);
+        store.insert_block_columnar(10, block_of(4));
+        store.insert_block_columnar(30, block_of(3));
+        let snap = store.snapshot();
+        let panels = snap.columnar_panels(4).expect("fully columnar");
+        let extents = panels.extents();
+        assert_eq!(extents.len(), 2);
+        assert_eq!((extents[0].off, extents[0].rows), (0, 4));
+        assert_eq!((extents[1].off, extents[1].rows), (4, 3));
+        for (ext, seg) in extents.iter().zip(snap.segments()) {
+            assert_eq!(ext.zone.expect("segment extents are zoned"), seg.zone.as_ref());
         }
     }
 

@@ -27,9 +27,12 @@
 //!   (tiling only reorders which pairs are computed when, never the
 //!   arithmetic within a pair).
 //!
-//! Three arena entry points: [`estimate_block_arena`] (dense B×n
+//! Four arena entry points: [`estimate_block_arena`] (dense B×n
 //! matrix), [`top_k_scan_arena`] (fused top-k: streams tiles through a
-//! bounded per-query heap without materializing B×n), and
+//! bounded per-query heap without materializing B×n),
+//! [`top_k_scan_zoned`] (the same fused top-k but zone-pruned: segments
+//! are visited in ascending lower-bound order and skipped once they
+//! cannot beat the heap threshold — bitwise-identical results), and
 //! [`estimate_condensed_arena`] (upper-triangle all-pairs, scipy
 //! `squareform` order). All take a `workers` thread count; results are
 //! deterministic in it.
@@ -39,9 +42,11 @@
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 
 use super::arena::SketchArena;
 use super::decompose::Decomposition;
+use super::zone::ZoneMeta;
 use crate::projection::sketcher::{RowSketch, SketchSet};
 
 /// f64 dot product of two f32 sketch vectors.
@@ -413,6 +418,185 @@ pub fn top_k_scan_arena<Q: SketchPanels + ?Sized, T: SketchPanels + ?Sized>(
     out
 }
 
+/// Relative deflation applied to every zone lower bound so fp rounding
+/// in the bound computation can never make it *over*-estimate a row's
+/// distance. The true rounding error is bounded by ~c·(k+p)·ε relative
+/// to the bound's term magnitudes (ε = 2⁻⁵²; ≈2e-11 even at k = 10⁵);
+/// 1e-9 leaves two orders of magnitude of headroom. Deflation only ever
+/// costs a missed skip — pruned results stay bitwise-identical to the
+/// full scan regardless of the margin's size.
+pub const ZONE_BOUND_MARGIN: f64 = 1e-9;
+
+/// Admissible lower bound on d̂(q-row, y) over every row `y` of a
+/// segment summarized by `zone`:
+///
+/// ```text
+/// d̂(q, y) = Σq^p + Σy^p + (1/k)·Σ_m c_m ⟨u_m(q), v_{p−m}(y)⟩
+///          ≥ Σq^p + min_moment[p] − (1/k)·Σ_m |c_m|·‖u_m(q)‖₂·max_v2[p−m]
+/// ```
+///
+/// by Cauchy–Schwarz per order, deflated by [`ZONE_BOUND_MARGIN`].
+/// `q_u2[m-1]` must be ‖u_m(q)‖₂; `k` the sketch width. Returns
+/// `NEG_INFINITY` (prune nothing) for non-finite inputs or shapes too
+/// small for order `p` — the bound is an optimization, never a gate.
+pub fn zone_lower_bound(
+    dec: &Decomposition,
+    q_norm_p: f64,
+    q_u2: &[f64],
+    zone: &ZoneMeta,
+    k: f64,
+) -> f64 {
+    let p = dec.p();
+    if zone.min_moment.len() < p || zone.max_v2.len() < p - 1 || q_u2.len() < p - 1 {
+        return f64::NEG_INFINITY;
+    }
+    let mut b = q_norm_p + zone.min_moment[p - 1];
+    let mut scale = q_norm_p.abs() + zone.min_moment[p - 1].abs();
+    for m in 1..p {
+        let term = dec.coeff(m).abs() * q_u2[m - 1] * zone.max_v2[p - m - 1] / k;
+        b -= term;
+        scale += term;
+    }
+    let bound = b - ZONE_BOUND_MARGIN * scale;
+    if bound.is_finite() {
+        bound
+    } else {
+        f64::NEG_INFINITY
+    }
+}
+
+/// One contiguous run of target rows with an optional zone summary.
+/// `zone: None` (map rows, or segments without zones) is never skipped.
+#[derive(Clone, Copy, Debug)]
+pub struct ZoneExtent<'z> {
+    /// First target row of the run.
+    pub off: usize,
+    /// Rows in the run.
+    pub rows: usize,
+    /// Zone summary, if the run is a zoned segment.
+    pub zone: Option<&'z ZoneMeta>,
+}
+
+/// Pruning effectiveness counters for one [`top_k_scan_zoned`] call,
+/// summed over all queries.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// (query, extent) visits that scanned rows.
+    pub segments_visited: u64,
+    /// (query, extent) visits skipped via the zone bound.
+    pub segments_skipped: u64,
+    /// Rows inside skipped extents (work avoided vs the full scan).
+    pub rows_skipped: u64,
+}
+
+/// Zone-pruned fused top-k scan — **bitwise-identical** results to
+/// [`top_k_scan_arena`], plus [`PruneStats`].
+///
+/// `extents` must tile `[0, t.n())` contiguously (the store's segment
+/// layout). Per query, extents are visited in ascending lower-bound
+/// order; once the heap holds `top` candidates and the next extent's
+/// bound is **strictly** above the heap root's distance, that extent
+/// and every later one are skipped. Identity argument: the scan order
+/// never changes any per-pair score (same [`score_tile`] arithmetic),
+/// the heap retains the `top` smallest (d, idx) pairs under the same
+/// total order regardless of insertion order, and a skipped row has
+/// d̂ ≥ bound > worst.d, so it could not have displaced the root even
+/// via the index tie-break (which only applies at equal distance).
+/// Strictness matters: at `bound == worst.d` an equal-distance,
+/// lower-index row could still displace the root, so we scan.
+pub fn top_k_scan_zoned<Q: SketchPanels + ?Sized, T: SketchPanels + ?Sized>(
+    dec: &Decomposition,
+    q: &Q,
+    t: &T,
+    extents: &[ZoneExtent<'_>],
+    top: usize,
+    workers: usize,
+) -> (Vec<Vec<(usize, f64)>>, PruneStats) {
+    let (bn, tn) = (q.n(), t.n());
+    let mut out: Vec<Vec<(usize, f64)>> = (0..bn).map(|_| Vec::new()).collect();
+    if bn == 0 || tn == 0 || top == 0 {
+        return (out, PruneStats::default());
+    }
+    check_arena_compat(dec, q, t);
+    let mut cover = 0;
+    for ext in extents {
+        assert_eq!(ext.off, cover, "zone extents must tile the target contiguously");
+        cover += ext.rows;
+    }
+    assert_eq!(cover, tn, "zone extents must cover every target row");
+    let p = dec.p();
+    let kf = q.k() as f64;
+    let visited = AtomicU64::new(0);
+    let skipped = AtomicU64::new(0);
+    let rows_skipped = AtomicU64::new(0);
+    let slots: Vec<(usize, &mut Vec<(usize, f64)>)> = out.iter_mut().enumerate().collect();
+    run_bundles(round_robin(slots, workers), |bundle| {
+        let mut buf = vec![0.0f64; ARENA_TILE];
+        let mut order: Vec<(f64, usize)> = Vec::with_capacity(extents.len());
+        for (qi, slot) in bundle {
+            let q_norm_p = q.norm_p(qi);
+            let q_u2: Vec<f64> = (1..p)
+                .map(|m| {
+                    let u = q.u_row(m, qi);
+                    dot(u, u).sqrt()
+                })
+                .collect();
+            order.clear();
+            for (e, ext) in extents.iter().enumerate() {
+                let b = match ext.zone {
+                    Some(z) => zone_lower_bound(dec, q_norm_p, &q_u2, z, kf),
+                    None => f64::NEG_INFINITY,
+                };
+                order.push((b, e));
+            }
+            order.sort_unstable_by(|a, b| {
+                a.0.total_cmp(&b.0)
+                    .then_with(|| extents[a.1].off.cmp(&extents[b.1].off))
+            });
+            let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::with_capacity(top + 1);
+            for (pos, &(bound, e)) in order.iter().enumerate() {
+                if heap.len() == top {
+                    if let Some(worst) = heap.peek() {
+                        if bound.total_cmp(&worst.d) == Ordering::Greater {
+                            // Bounds ascend from here and the root only
+                            // improves — everything remaining is prunable.
+                            for &(_, e2) in &order[pos..] {
+                                skipped.fetch_add(1, AtomicOrdering::Relaxed);
+                                rows_skipped
+                                    .fetch_add(extents[e2].rows as u64, AtomicOrdering::Relaxed);
+                            }
+                            break;
+                        }
+                    }
+                }
+                visited.fetch_add(1, AtomicOrdering::Relaxed);
+                let ext = &extents[e];
+                let end = ext.off + ext.rows;
+                let mut j0 = ext.off;
+                while j0 < end {
+                    let width = ARENA_TILE.min(end - j0);
+                    score_tile(dec, q, t, qi, 1, j0, width, &mut buf, width);
+                    for j2 in 0..width {
+                        push_bounded(&mut heap, top, j0 + j2, buf[j2]);
+                    }
+                    j0 += width;
+                }
+            }
+            *slot = heap
+                .into_sorted_vec()
+                .into_iter()
+                .map(|e| (e.idx, e.d))
+                .collect();
+        }
+    });
+    let stats = PruneStats {
+        segments_visited: visited.into_inner(),
+        segments_skipped: skipped.into_inner(),
+        rows_skipped: rows_skipped.into_inner(),
+    };
+    (out, stats)
+}
+
 /// Blocked all-pairs over one panel source, condensed upper-triangle
 /// order (matching [`crate::baselines::exact::condensed_index`]). Row
 /// tiles own contiguous condensed regions, so workers write disjoint
@@ -763,5 +947,145 @@ mod tests {
         // top = 0: empty lists, not a panic.
         let lists = top_k_scan_arena(&dec, &one, &one, 0, 2);
         assert!(lists[0].is_empty());
+    }
+
+    // ---- zoned top-k ---------------------------------------------------
+
+    use crate::projection::sketcher::ColumnarBlock;
+
+    /// Segment-shaped population: one block per scale, rows are scaled
+    /// sin patterns. Returns the blocks plus the same rows flattened (so
+    /// an arena built from them is bitwise-identical to the panels).
+    fn zoned_population(
+        strategy: Strategy,
+        p: usize,
+        k: usize,
+        scales: &[f32],
+        rows_per: usize,
+        seed: u64,
+    ) -> (Vec<ColumnarBlock>, Vec<RowSketch>) {
+        let sk = Sketcher::new(ProjectionSpec::new(seed, k, ProjectionDist::Normal, strategy), p);
+        let mut blocks = Vec::new();
+        let mut rows = Vec::new();
+        for (b, &scale) in scales.iter().enumerate() {
+            let data: Vec<Vec<f32>> = (0..rows_per)
+                .map(|i| {
+                    (0..20)
+                        .map(|t| scale * ((b * 91 + i * 37 + t) as f32 * 0.13).sin())
+                        .collect()
+                })
+                .collect();
+            let refs: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+            let block = sk.sketch_block(&refs, 1);
+            for r in 0..block.rows() {
+                rows.push(block.to_row_sketch(r));
+            }
+            blocks.push(block);
+        }
+        (blocks, rows)
+    }
+
+    fn extents_of<'z>(blocks: &[ColumnarBlock], zones: &'z [ZoneMeta]) -> Vec<ZoneExtent<'z>> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        for (block, zone) in blocks.iter().zip(zones) {
+            out.push(ZoneExtent { off, rows: block.rows(), zone: Some(zone) });
+            off += block.rows();
+        }
+        out
+    }
+
+    #[test]
+    fn zoned_topk_is_bitwise_identical_to_full_scan() {
+        for (strategy, p) in [
+            (Strategy::Basic, 4),
+            (Strategy::Alternative, 4),
+            (Strategy::Basic, 6),
+            (Strategy::Alternative, 6),
+        ] {
+            // Uniform scales: bounds rarely prune, exercising the
+            // visit-everything path with ragged tile edges (17-row
+            // segments ≠ multiple of ARENA_TILE).
+            let (blocks, rows) =
+                zoned_population(strategy, p, 8, &[1.0, 1.0, 1.0, 1.0], 17, 21);
+            let zones: Vec<ZoneMeta> = blocks.iter().map(ZoneMeta::from_block).collect();
+            let dec = Decomposition::new(p).unwrap();
+            let tarena = SketchArena::from_rows(p, 8, &rows);
+            let qarena = SketchArena::from_rows(p, 8, &rows[..5]);
+            let want = top_k_scan_arena(&dec, &qarena, &tarena, 7, 2);
+            let (got, _) =
+                top_k_scan_zoned(&dec, &qarena, &tarena, &extents_of(&blocks, &zones), 7, 2);
+            assert_eq!(got, want, "{strategy:?} p={p}");
+            // One zoneless extent over everything == plain full scan.
+            let whole = [ZoneExtent { off: 0, rows: rows.len(), zone: None }];
+            let (got, stats) = top_k_scan_zoned(&dec, &qarena, &tarena, &whole, 7, 2);
+            assert_eq!(got, want, "{strategy:?} p={p} zoneless");
+            assert_eq!(stats.segments_skipped, 0);
+        }
+    }
+
+    #[test]
+    fn zoned_topk_skips_segments_on_skewed_population_and_stays_exact() {
+        // Magnitude bands: p-norms of the far bands are ≥8⁴× the near
+        // band's, so their lower bounds dwarf the heap threshold.
+        let (blocks, rows) =
+            zoned_population(Strategy::Basic, 4, 8, &[1.0, 8.0, 64.0, 512.0], 19, 33);
+        let zones: Vec<ZoneMeta> = blocks.iter().map(ZoneMeta::from_block).collect();
+        let dec = Decomposition::new(4).unwrap();
+        let tarena = SketchArena::from_rows(4, 8, &rows);
+        let qarena = SketchArena::from_rows(4, 8, &rows[..4]);
+        let extents = extents_of(&blocks, &zones);
+        let want = top_k_scan_arena(&dec, &qarena, &tarena, 5, 1);
+        let (got, stats) = top_k_scan_zoned(&dec, &qarena, &tarena, &extents, 5, 1);
+        assert_eq!(got, want);
+        assert!(
+            stats.segments_skipped > 0,
+            "skewed population must actually prune: {stats:?}"
+        );
+        assert!(stats.rows_skipped > 0);
+        // Deterministic in workers — results AND counters.
+        let (got5, stats5) = top_k_scan_zoned(&dec, &qarena, &tarena, &extents, 5, 5);
+        assert_eq!(got5, want);
+        assert_eq!(stats5, stats);
+    }
+
+    #[test]
+    fn zoned_topk_handles_ties_single_rows_and_edge_shapes() {
+        // All rows identical: every distance ties, ordering falls to the
+        // index tie-break, and the deflated bound can never prune (it
+        // sits strictly below the shared distance).
+        let (blocks, rows) = zoned_population(Strategy::Basic, 4, 8, &[1.0, 1.0], 1, 41);
+        let dup_blocks = [blocks[0].clone(), blocks[0].clone(), blocks[1].clone()];
+        let dup_rows =
+            [rows[0].clone(), rows[0].clone(), rows[1].clone()];
+        let zones: Vec<ZoneMeta> = dup_blocks.iter().map(ZoneMeta::from_block).collect();
+        let dec = Decomposition::new(4).unwrap();
+        let tarena = SketchArena::from_rows(4, 8, &dup_rows);
+        let qarena = SketchArena::from_rows(4, 8, &dup_rows[..1]);
+        let extents = extents_of(&dup_blocks, &zones);
+        for top in [1, 2, 3, 5] {
+            // top ≥ n included: heap never fills, nothing is skippable.
+            let want = top_k_scan_arena(&dec, &qarena, &tarena, top, 1);
+            let (got, _) = top_k_scan_zoned(&dec, &qarena, &tarena, &extents, top, 1);
+            assert_eq!(got, want, "top={top}");
+        }
+        // top = 0 and empty query side: empty outputs, zero stats.
+        let (lists, stats) = top_k_scan_zoned(&dec, &qarena, &tarena, &extents, 0, 1);
+        assert!(lists[0].is_empty());
+        assert_eq!(stats, PruneStats::default());
+        let empty = SketchArena::empty(4, 8);
+        let (lists, stats) = top_k_scan_zoned(&dec, &empty, &tarena, &extents, 3, 1);
+        assert!(lists.is_empty());
+        assert_eq!(stats, PruneStats::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "zone extents must cover every target row")]
+    fn zoned_topk_rejects_partial_extent_coverage() {
+        let (_, rows) = zoned_population(Strategy::Basic, 4, 8, &[1.0], 3, 43);
+        let dec = Decomposition::new(4).unwrap();
+        let arena = SketchArena::from_rows(4, 8, &rows);
+        let short = [ZoneExtent { off: 0, rows: 2, zone: None }];
+        let _ = top_k_scan_zoned(&dec, &arena, &arena, &short, 1, 1);
     }
 }

@@ -9,5 +9,6 @@ pub mod marginals;
 pub mod mle;
 pub mod tail;
 pub mod variance;
+pub mod zone;
 
 pub use decompose::Decomposition;

@@ -1,0 +1,266 @@
+//! Per-segment **zone metadata**: marginal-moment min/max per order plus
+//! sketch-norm maxima, the cheap per-segment summary the pruned top-k
+//! scan bounds distances with before touching a single panel.
+//!
+//! The paper's decomposition writes every even-p distance as two
+//! marginal norms plus p−1 projected inner products:
+//!
+//! ```text
+//! d̂(q, y) = Σq^p + Σy^p + (1/k) Σ_{m=1}^{p-1} c_m ⟨u_m(q), v_{p-m}(y)⟩
+//! ```
+//!
+//! For a whole segment, `Σy^p ≥ min_moment[p]` and (Cauchy–Schwarz)
+//! `|⟨u_m(q), v_{p−m}(y)⟩| ≤ ‖u_m(q)‖₂ · max_v2[p−m]`, so an admissible
+//! lower bound on *every* row's estimated distance is computable from
+//! this O(nm + orders) summary alone — see
+//! [`crate::core::estimator::zone_lower_bound`] for the bound itself and
+//! the deflation margin that keeps it admissible under fp rounding.
+//!
+//! Zones are **p-independent** (they summarize all moment orders and all
+//! sketch orders the block carries), computed once at segment insertion
+//! ([`ZoneMeta::from_block`]) and merged *exactly* at compaction
+//! ([`ZoneMeta::merge`] — elementwise min/max selects input values, so a
+//! merged zone is bitwise-identical to recomputing over the
+//! concatenated block, with no O(rows·orders·k) rescan).
+
+// Serving path: clippy backs the pallas-lint serving-no-panic rule.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use crate::core::estimator::dot;
+use crate::projection::sketcher::ColumnarBlock;
+
+/// Zone summary of one columnar segment. All vectors are order-indexed
+/// from 1 (`min_moment[o-1]` summarizes moment order `o`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ZoneMeta {
+    /// Rows summarized (must equal the segment block's row count).
+    pub rows: usize,
+    /// Per moment order `o = 1..=nm`: min over rows of Σ x^o.
+    pub min_moment: Vec<f64>,
+    /// Per moment order `o = 1..=nm`: max over rows of Σ x^o.
+    pub max_moment: Vec<f64>,
+    /// Per sketch order `m = 1..=orders`: max over rows of ‖u_m‖₂.
+    pub max_u2: Vec<f64>,
+    /// Per sketch order `m = 1..=orders`: max over rows of ‖v_m‖₂.
+    /// Equals `max_u2` for one-sided (basic-strategy) blocks, where the
+    /// sides coincide.
+    pub max_v2: Vec<f64>,
+}
+
+/// Fold-min that ignores NaN (f64::min semantics) — folding from +∞
+/// selects an input value, so the fold is associative and a merge of
+/// per-block folds is bitwise-identical to one fold over all rows.
+#[inline]
+fn fold_min(acc: f64, v: f64) -> f64 {
+    acc.min(v)
+}
+
+#[inline]
+fn fold_max(acc: f64, v: f64) -> f64 {
+    acc.max(v)
+}
+
+impl ZoneMeta {
+    /// Summarize a columnar block: one pass over its moments and one
+    /// self-dot per (row, order, side). O(rows · (nm + orders·k)) —
+    /// done once per segment at ingest/seal, never on the query path.
+    pub fn from_block(block: &ColumnarBlock) -> ZoneMeta {
+        let nm = block.moment_orders();
+        let orders = block.orders();
+        let rows = block.rows();
+        let mut min_moment = vec![f64::INFINITY; nm];
+        let mut max_moment = vec![f64::NEG_INFINITY; nm];
+        for r in 0..rows {
+            let mrow = block.moments_row(r);
+            for (o, &v) in mrow.iter().enumerate() {
+                min_moment[o] = fold_min(min_moment[o], v);
+                max_moment[o] = fold_max(max_moment[o], v);
+            }
+        }
+        let mut max_u2 = vec![f64::NEG_INFINITY; orders];
+        let mut max_v2 = vec![f64::NEG_INFINITY; orders];
+        for m in 1..=orders {
+            for r in 0..rows {
+                let u = block.u_row(m, r);
+                max_u2[m - 1] = fold_max(max_u2[m - 1], dot(u, u).sqrt());
+                let v = block.v_row(m, r);
+                max_v2[m - 1] = fold_max(max_v2[m - 1], dot(v, v).sqrt());
+            }
+        }
+        ZoneMeta { rows, min_moment, max_moment, max_u2, max_v2 }
+    }
+
+    /// Merge zones of segments being compacted into the zone of the
+    /// merged segment. Elementwise min/max selects one of the input
+    /// values, so the result is **bitwise-identical** to
+    /// [`ZoneMeta::from_block`] over the concatenated block — no panel
+    /// rescan at compaction. Panics on empty input or shape mismatch
+    /// (compaction groups are homogeneous by construction).
+    pub fn merge(zones: &[&ZoneMeta]) -> ZoneMeta {
+        assert!(!zones.is_empty(), "zone merge of zero segments");
+        let first = zones[0];
+        let (nm, orders) = (first.min_moment.len(), first.max_u2.len());
+        let mut out = ZoneMeta {
+            rows: 0,
+            min_moment: vec![f64::INFINITY; nm],
+            max_moment: vec![f64::NEG_INFINITY; nm],
+            max_u2: vec![f64::NEG_INFINITY; orders],
+            max_v2: vec![f64::NEG_INFINITY; orders],
+        };
+        for z in zones {
+            assert!(
+                z.min_moment.len() == nm && z.max_u2.len() == orders,
+                "heterogeneous zones in merge"
+            );
+            out.rows += z.rows;
+            for o in 0..nm {
+                out.min_moment[o] = fold_min(out.min_moment[o], z.min_moment[o]);
+                out.max_moment[o] = fold_max(out.max_moment[o], z.max_moment[o]);
+            }
+            for m in 0..orders {
+                out.max_u2[m] = fold_max(out.max_u2[m], z.max_u2[m]);
+                out.max_v2[m] = fold_max(out.max_v2[m], z.max_v2[m]);
+            }
+        }
+        out
+    }
+
+    /// f64 word count of the persisted encoding for a given shape — the
+    /// length codecs must validate *before* allocating ([`zone_len`] is
+    /// the value a well-formed file declares).
+    pub fn encoded_len(nm: usize, orders: usize, two_sided: bool) -> usize {
+        2 * nm + orders * if two_sided { 2 } else { 1 }
+    }
+
+    /// Flatten for persistence: `min_moment · max_moment · max_u2`
+    /// (`· max_v2` only when two-sided — one-sided blocks' v side is a
+    /// bitwise copy of the u side and is reconstructed on decode).
+    pub fn to_f64s(&self, two_sided: bool) -> Vec<f64> {
+        let mut out =
+            Vec::with_capacity(Self::encoded_len(self.min_moment.len(), self.max_u2.len(), two_sided));
+        out.extend_from_slice(&self.min_moment);
+        out.extend_from_slice(&self.max_moment);
+        out.extend_from_slice(&self.max_u2);
+        if two_sided {
+            out.extend_from_slice(&self.max_v2);
+        }
+        out
+    }
+
+    /// Decode a persisted zone. `vals` must be exactly
+    /// [`ZoneMeta::encoded_len`] words — callers validate the declared
+    /// length against the shape *before* reading/allocating the buffer;
+    /// this re-checks and errors (never panics) on mismatch.
+    pub fn from_f64s(
+        rows: usize,
+        nm: usize,
+        orders: usize,
+        two_sided: bool,
+        vals: &[f64],
+    ) -> anyhow::Result<ZoneMeta> {
+        anyhow::ensure!(
+            vals.len() == Self::encoded_len(nm, orders, two_sided),
+            "zone payload of {} words does not match shape (nm={nm}, orders={orders}, \
+             two_sided={two_sided})",
+            vals.len()
+        );
+        let min_moment = vals[..nm].to_vec();
+        let max_moment = vals[nm..2 * nm].to_vec();
+        let max_u2 = vals[2 * nm..2 * nm + orders].to_vec();
+        let max_v2 = if two_sided {
+            vals[2 * nm + orders..].to_vec()
+        } else {
+            max_u2.clone()
+        };
+        Ok(ZoneMeta { rows, min_moment, max_moment, max_u2, max_v2 })
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::projection::sketcher::Sketcher;
+    use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
+
+    fn block_of(strategy: Strategy, p: usize, k: usize, n: usize, seed: u64) -> ColumnarBlock {
+        let sk = Sketcher::new(ProjectionSpec::new(seed, k, ProjectionDist::Normal, strategy), p);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|i| (0..20).map(|t| ((i * 13 + t) as f32 * 0.21).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        sk.sketch_block(&refs, 1)
+    }
+
+    #[test]
+    fn from_block_bounds_every_row() {
+        for (strategy, p) in [(Strategy::Basic, 4), (Strategy::Alternative, 6)] {
+            let block = block_of(strategy, p, 8, 9, 3);
+            let z = ZoneMeta::from_block(&block);
+            assert_eq!(z.rows, 9);
+            assert_eq!(z.min_moment.len(), 2 * (p - 1));
+            assert_eq!(z.max_u2.len(), p - 1);
+            for r in 0..block.rows() {
+                for o in 1..=block.moment_orders() {
+                    let v = block.moment(r, o);
+                    assert!(z.min_moment[o - 1] <= v && v <= z.max_moment[o - 1], "o={o} r={r}");
+                }
+                for m in 1..=block.orders() {
+                    let u = block.u_row(m, r);
+                    assert!(dot(u, u).sqrt() <= z.max_u2[m - 1], "u m={m} r={r}");
+                    let v = block.v_row(m, r);
+                    assert!(dot(v, v).sqrt() <= z.max_v2[m - 1], "v m={m} r={r}");
+                }
+            }
+            // One-sided blocks: the v bound IS the u bound, bitwise.
+            if !block.is_two_sided() {
+                assert_eq!(z.max_u2, z.max_v2);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_bitwise_identical_to_recomputation_over_concat() {
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let a = block_of(strategy, 4, 8, 5, 7);
+            let b = block_of(strategy, 4, 8, 3, 8);
+            let c = block_of(strategy, 4, 8, 1, 9);
+            let za = ZoneMeta::from_block(&a);
+            let zb = ZoneMeta::from_block(&b);
+            let zc = ZoneMeta::from_block(&c);
+            let merged = ZoneMeta::merge(&[&za, &zb, &zc]);
+            let whole = ZoneMeta::from_block(&ColumnarBlock::concat(&[&a, &b, &c]));
+            assert_eq!(merged, whole, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn codec_roundtrips_both_sidednesses() {
+        for (strategy, two_sided) in [(Strategy::Basic, false), (Strategy::Alternative, true)] {
+            let block = block_of(strategy, 4, 8, 4, 11);
+            assert_eq!(block.is_two_sided(), two_sided);
+            let z = ZoneMeta::from_block(&block);
+            let flat = z.to_f64s(two_sided);
+            assert_eq!(flat.len(), ZoneMeta::encoded_len(6, 3, two_sided));
+            let back = ZoneMeta::from_f64s(4, 6, 3, two_sided, &flat).unwrap();
+            assert_eq!(back, z);
+        }
+    }
+
+    #[test]
+    fn codec_rejects_wrong_lengths() {
+        let z = ZoneMeta::from_block(&block_of(Strategy::Basic, 4, 8, 2, 13));
+        let flat = z.to_f64s(false);
+        assert!(ZoneMeta::from_f64s(2, 6, 3, false, &flat[..flat.len() - 1]).is_err());
+        assert!(ZoneMeta::from_f64s(2, 6, 3, true, &flat).is_err());
+        let mut long = flat.clone();
+        long.push(0.0);
+        assert!(ZoneMeta::from_f64s(2, 6, 3, false, &long).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "zone merge of zero segments")]
+    fn merge_of_nothing_panics() {
+        let _ = ZoneMeta::merge(&[]);
+    }
+}

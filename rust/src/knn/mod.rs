@@ -9,20 +9,30 @@
 //! 2. **Re-ranking (optional)** — recompute exact distances for the top
 //!    `rerank` candidates with a linear scan over just those rows.
 //!
-//! ## Index layout and the blocked query path
+//! ## Index backings and the blocked query path
 //!
-//! The index keeps its sketches twice:
-//! * a [`SketchArena`] — columnar (order-major `orders × (n × k)`)
-//!   storage the plain-estimator queries run on. [`KnnIndex::query`] and
-//!   [`KnnIndex::query_batch`] route through
-//!   [`estimator::top_k_scan_arena`]: target rows stream in
-//!   cache-sized tiles through a bounded per-query heap, and query
-//!   batches are sharded across `workers` threads via
-//!   `std::thread::scope`. Scores are bitwise-identical to the per-row
-//!   reference path ([`KnnIndex::query_per_row`]).
-//! * the per-row [`RowSketch`]es — kept for the margin-MLE scoring mode
-//!   (`use_mle`), which consumes per-order norms and higher moments the
-//!   arena does not store.
+//! An index is backed one of two ways:
+//! * **Owned** ([`KnnIndex::build`]) — sketches computed from raw data:
+//!   per-row [`RowSketch`]es (the margin-MLE scoring mode consumes
+//!   per-order norms the arena does not store) plus a columnar
+//!   [`SketchArena`] the blocked kernels run on.
+//! * **Shared** ([`KnnIndex::from_snapshot`]) — the serving-side
+//!   rebuild. The index holds the snapshot's own `Arc` panels (segment
+//!   blocks + zone summaries, map rows by `Arc` handle) instead of
+//!   copying every sketch into a private arena: per-segment shards are
+//!   keyed by block identity, so an epoch refresh re-indexes **only
+//!   segments newer than the cached epoch**
+//!   ([`KnnIndex::from_snapshot_incremental`]) — the per-segment work
+//!   is one packed gather of marginal p-norms. By-id queries serve
+//!   straight from the shared panels ([`KnnIndex::query_pos`]): the
+//!   stored row IS the query payload, zero materialization.
+//!
+//! Queries on either backing run through
+//! [`estimator::top_k_scan_zoned`]: target rows stream in cache-sized
+//! tiles through a bounded per-query heap, and zoned segments are
+//! visited in ascending lower-bound order and skipped when they cannot
+//! beat the heap threshold. Scores are bitwise-identical to the per-row
+//! reference path ([`KnnIndex::query_per_row`]).
 //!
 //! NaN scores (malformed input rows) are filtered, never returned; an
 //! empty index returns empty neighbor lists rather than panicking.
@@ -30,27 +40,177 @@
 //! E8 measures recall@m vs sketch width k, with and without re-ranking,
 //! against exact ground truth, plus the arena-vs-per-row batch timing.
 
+// Serving path: clippy backs the pallas-lint serving-no-panic rule.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::sync::Arc;
+
 use crate::coordinator::StoreSnapshot;
 use crate::core::arena::SketchArena;
 use crate::core::decompose::Decomposition;
-use crate::core::estimator;
+use crate::core::estimator::{self, PruneStats, SketchPanels, ZoneExtent};
 use crate::core::mle::{self, Solve};
+use crate::core::zone::ZoneMeta;
 use crate::data::RowMatrix;
-use crate::projection::sketcher::{RowSketch, Sketcher};
+use crate::projection::sketcher::{ColumnarBlock, RowSketch, Sketcher};
 use crate::projection::ProjectionSpec;
 
+/// One per-segment index shard served straight from snapshot-held
+/// panels. `norms` is the only payload built at index time: the
+/// segment's marginal p-norms gathered from the row-major moment table
+/// into one packed, scan-friendly vector — the work an incremental
+/// refresh skips for unchanged segments.
+#[derive(Clone)]
+struct SegShard {
+    off: usize,
+    base: u64,
+    block: Arc<ColumnarBlock>,
+    zone: Arc<ZoneMeta>,
+    norms: Arc<Vec<f64>>,
+}
+
+/// One run of index rows: a stretch of map rows (shared by `Arc`
+/// handle) or a columnar segment.
+enum Shard {
+    Map { off: usize, rows: Vec<Arc<RowSketch>> },
+    Seg(SegShard),
+}
+
+impl Shard {
+    #[inline]
+    fn off(&self) -> usize {
+        match self {
+            Shard::Map { off, .. } => *off,
+            Shard::Seg(s) => s.off,
+        }
+    }
+}
+
+/// Snapshot-shared [`SketchPanels`]: index row `i` is the `i`-th row of
+/// the snapshot in ascending id order, served from the shard that holds
+/// it — no copies of sketch panels anywhere.
+struct SharedPanels {
+    p: usize,
+    k: usize,
+    n: usize,
+    /// Runs in view order; offsets ascending, tiling `[0, n)`.
+    shards: Vec<Shard>,
+}
+
+impl SharedPanels {
+    /// The shard holding view row `i`, plus the row's offset in it.
+    #[inline]
+    fn shard_for(&self, i: usize) -> (&Shard, usize) {
+        debug_assert!(i < self.n);
+        let pos = self.shards.partition_point(|s| s.off() <= i);
+        let s = &self.shards[pos - 1];
+        (s, i - s.off())
+    }
+
+    /// Zone extents for the pruned scan: segments carry their zone, map
+    /// runs are never skipped.
+    fn extents(&self) -> Vec<ZoneExtent<'_>> {
+        self.shards
+            .iter()
+            .map(|s| match s {
+                Shard::Map { off, rows } => {
+                    ZoneExtent { off: *off, rows: rows.len(), zone: None }
+                }
+                Shard::Seg(seg) => ZoneExtent {
+                    off: seg.off,
+                    rows: seg.block.rows(),
+                    zone: Some(seg.zone.as_ref()),
+                },
+            })
+            .collect()
+    }
+}
+
+impl SketchPanels for SharedPanels {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn u_row(&self, m: usize, i: usize) -> &[f32] {
+        match self.shard_for(i) {
+            (Shard::Map { rows, .. }, r) => rows[r].uside.u(m),
+            (Shard::Seg(s), r) => s.block.u_row(m, r),
+        }
+    }
+
+    fn v_row(&self, m: usize, i: usize) -> &[f32] {
+        match self.shard_for(i) {
+            (Shard::Map { rows, .. }, r) => rows[r].vside().u(m),
+            (Shard::Seg(s), r) => s.block.v_row(m, r),
+        }
+    }
+
+    fn norm_p(&self, i: usize) -> f64 {
+        match self.shard_for(i) {
+            (Shard::Map { rows, .. }, r) => rows[r].moments.get(self.p),
+            (Shard::Seg(s), r) => s.norms[r],
+        }
+    }
+}
+
+/// Single-row [`SketchPanels`] view over row `row` of `inner` — the
+/// by-position query payload: the stored row's panels ARE the query,
+/// with no materialization and no arena copy.
+struct OneRow<'a, P: SketchPanels + ?Sized> {
+    inner: &'a P,
+    row: usize,
+}
+
+impl<P: SketchPanels + ?Sized> SketchPanels for OneRow<'_, P> {
+    fn n(&self) -> usize {
+        1
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+
+    fn p(&self) -> usize {
+        self.inner.p()
+    }
+
+    fn u_row(&self, m: usize, i: usize) -> &[f32] {
+        debug_assert_eq!(i, 0);
+        self.inner.u_row(m, self.row)
+    }
+
+    fn v_row(&self, m: usize, i: usize) -> &[f32] {
+        debug_assert_eq!(i, 0);
+        self.inner.v_row(m, self.row)
+    }
+
+    fn norm_p(&self, i: usize) -> f64 {
+        debug_assert_eq!(i, 0);
+        self.inner.norm_p(self.row)
+    }
+}
+
+/// How an index stores its rows.
+enum Backing {
+    /// Built from raw data: owned sketches, twice (per-row + arena).
+    Owned { rows: Vec<RowSketch>, arena: SketchArena },
+    /// Served from snapshot-held `Arc` panels — single-residency.
+    Shared(SharedPanels),
+}
+
 /// A built sketch index over a fixed row set.
-///
-/// Memory note: the sketches are held twice — per-row (the MLE path
-/// consumes per-order norms/moments the arena does not store, and
-/// `use_mle` may be toggled on at any time after build) and columnar.
-/// That doubles the O(nk) payload; an MLE-free, single-copy index is a
-/// follow-up once `use_mle` becomes a build-time choice.
 pub struct KnnIndex {
     dec: Decomposition,
     sketcher: Sketcher,
-    rows: Vec<RowSketch>,
-    arena: SketchArena,
+    backing: Backing,
     /// Use the margin MLE (Lemma 4) when scoring candidates (per-row
     /// scoring path; the arena kernels serve the plain estimator).
     pub use_mle: bool,
@@ -79,14 +239,21 @@ impl KnnIndex {
         let rows = sketcher.sketch_rows(&refs);
         let arena = SketchArena::from_rows(p, k, &rows);
         let workers = std::thread::available_parallelism().map_or(1, |n| n.get());
-        Ok(KnnIndex { dec, sketcher, rows, arena, use_mle: false, workers })
+        Ok(KnnIndex {
+            dec,
+            sketcher,
+            backing: Backing::Owned { rows, arena },
+            use_mle: false,
+            workers,
+        })
     }
 
     /// Rebuild an index from a store snapshot — the serving-side
-    /// rebuild: the index is assembled entirely from the O(nk) sketch
-    /// state of one consistent epoch cut, while ingest keeps writing to
-    /// the live store underneath. Returns the index plus the store id
-    /// of every index row (`Neighbor::index` i ↔ `ids[i]`).
+    /// rebuild: the index serves the O(nk) sketch state of one
+    /// consistent epoch cut *by `Arc` handle* (no panel copies), while
+    /// ingest keeps writing to the live store underneath. Returns the
+    /// index plus the store id of every index row
+    /// (`Neighbor::index` i ↔ `ids[i]`).
     ///
     /// `spec` must be the projection the store's sketches were built
     /// with (queries are sketched through it); shape mismatches fail
@@ -96,13 +263,31 @@ impl KnnIndex {
         spec: ProjectionSpec,
         p: usize,
     ) -> anyhow::Result<(Self, Vec<u64>)> {
+        let (idx, ids, _) = Self::from_snapshot_incremental(snap, spec, p, None)?;
+        Ok((idx, ids))
+    }
+
+    /// [`KnnIndex::from_snapshot`] with incremental refresh: segment
+    /// shards of `prev` whose block `Arc` still backs the new snapshot
+    /// are reused as-is — only segments newer than the previous index's
+    /// epoch (fresh ingests, compaction outputs) pay the per-segment
+    /// norm gather. The third return is the number of segments
+    /// (re-)indexed, the `knn_segments_reindexed` metric.
+    pub fn from_snapshot_incremental(
+        snap: &StoreSnapshot,
+        spec: ProjectionSpec,
+        p: usize,
+        prev: Option<&KnnIndex>,
+    ) -> anyhow::Result<(Self, Vec<u64>, usize)> {
         let dec = Decomposition::new(p)?;
         let k = spec.k;
         let sketcher = Sketcher::new(spec, p);
-        let ids = snap.ids();
-        // Shape check before the arena build (which would panic on a
-        // mismatched row).
-        if let Some(rs) = ids.first().map(|&id| snap.get(id).expect("snapshot listed id")) {
+        let prev_shards: &[Shard] = match prev.map(|ix| &ix.backing) {
+            Some(Backing::Shared(sp)) => &sp.shards,
+            _ => &[],
+        };
+        let map_ids = snap.map_ids();
+        if let Some(rs) = map_ids.first().and_then(|&id| snap.map_row(id)) {
             anyhow::ensure!(
                 rs.uside.k == k && rs.uside.orders == p - 1,
                 "snapshot shape (k={}, orders={}) does not match index spec (k={}, p={})",
@@ -112,39 +297,139 @@ impl KnnIndex {
                 p,
             );
         }
-        let arena_snap = snap.arena(p, k);
-        let rows: Vec<RowSketch> = arena_snap
-            .ids
-            .iter()
-            .map(|&id| snap.get(id).expect("snapshot listed id"))
-            .collect();
+        let mut shards: Vec<Shard> = Vec::new();
+        let mut ids: Vec<u64> = Vec::new();
+        let mut off = 0usize;
+        let mut reindexed = 0usize;
+        let mut mi = 0usize;
+        // Close out the run of map ids below `limit` as one Map shard.
+        let mut flush_map = |upto: u64,
+                             mi: &mut usize,
+                             off: &mut usize,
+                             shards: &mut Vec<Shard>,
+                             ids: &mut Vec<u64>|
+         -> anyhow::Result<()> {
+            let start = *mi;
+            while *mi < map_ids.len() && map_ids[*mi] < upto {
+                *mi += 1;
+            }
+            if *mi > start {
+                let mut rows = Vec::with_capacity(*mi - start);
+                for &id in &map_ids[start..*mi] {
+                    let rs = snap
+                        .map_row(id)
+                        .ok_or_else(|| anyhow::anyhow!("snapshot map id {id} vanished"))?;
+                    rows.push(rs);
+                    ids.push(id);
+                }
+                shards.push(Shard::Map { off: *off, rows });
+                *off += *mi - start;
+            }
+            Ok(())
+        };
+        for seg in snap.segments() {
+            let rows = seg.block.rows();
+            let end = seg.base + rows as u64;
+            flush_map(seg.base, &mut mi, &mut off, &mut shards, &mut ids)?;
+            anyhow::ensure!(
+                mi == map_ids.len() || map_ids[mi] >= end,
+                "store id {} present in both map and columnar segments",
+                map_ids[mi],
+            );
+            anyhow::ensure!(
+                seg.block.k() == k && seg.block.orders() == p - 1,
+                "segment shape (k={}, orders={}) does not match index spec (k={}, p={})",
+                seg.block.k(),
+                seg.block.orders(),
+                k,
+                p,
+            );
+            let reused = prev_shards.iter().find_map(|s| match s {
+                Shard::Seg(ss) if Arc::ptr_eq(&ss.block, &seg.block) => Some(ss.clone()),
+                _ => None,
+            });
+            let shard = match reused {
+                Some(ss) => SegShard { off, ..ss },
+                None => {
+                    reindexed += 1;
+                    let norms: Vec<f64> = (0..rows).map(|r| seg.block.moment(r, p)).collect();
+                    SegShard {
+                        off,
+                        base: seg.base,
+                        block: Arc::clone(&seg.block),
+                        zone: Arc::clone(&seg.zone),
+                        norms: Arc::new(norms),
+                    }
+                }
+            };
+            shards.push(Shard::Seg(shard));
+            ids.extend(seg.base..end);
+            off += rows;
+        }
+        flush_map(u64::MAX, &mut mi, &mut off, &mut shards, &mut ids)?;
         let workers = std::thread::available_parallelism().map_or(1, |n| n.get());
         Ok((
-            KnnIndex { dec, sketcher, rows, arena: arena_snap.arena, use_mle: false, workers },
-            arena_snap.ids,
+            KnnIndex {
+                dec,
+                sketcher,
+                backing: Backing::Shared(SharedPanels { p, k, n: off, shards }),
+                use_mle: false,
+                workers,
+            },
+            ids,
+            reindexed,
         ))
     }
 
     pub fn len(&self) -> usize {
-        self.rows.len()
+        match &self.backing {
+            Backing::Owned { rows, .. } => rows.len(),
+            Backing::Shared(sp) => sp.n,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.rows.is_empty()
+        self.len() == 0
     }
 
-    /// Sketch bytes held by the index (the O(nk) storage claim): per-row
-    /// sketches plus the columnar arena mirror.
+    /// Sketch bytes *owned* by the index (the O(nk) storage claim). An
+    /// Owned backing holds the sketches twice (per-row + arena); a
+    /// Shared backing owns only the packed per-segment norm vectors —
+    /// the panels belong to the snapshot.
     pub fn bytes(&self) -> usize {
-        self.rows.iter().map(|r| r.sketch_bytes()).sum::<usize>() + self.arena.bytes()
+        match &self.backing {
+            Backing::Owned { rows, arena } => {
+                rows.iter().map(|r| r.sketch_bytes()).sum::<usize>() + arena.bytes()
+            }
+            Backing::Shared(sp) => sp
+                .shards
+                .iter()
+                .map(|s| match s {
+                    Shard::Map { .. } => 0,
+                    Shard::Seg(ss) => ss.norms.len() * std::mem::size_of::<f64>(),
+                })
+                .sum(),
+        }
     }
 
-    /// The stored sketch of index row `i` (`Neighbor::index` space) —
-    /// the query payload for by-stored-id top-k, where the row's own
-    /// sketch ranks the rest of the index with no raw data and no
-    /// re-sketching.
-    pub fn sketch_at(&self, i: usize) -> &RowSketch {
-        &self.rows[i]
+    /// Run `f` on index row `i`'s sketch: by reference where one is
+    /// resident (Owned rows, Shared map rows), materialized on demand
+    /// for segment rows.
+    fn with_row<T>(&self, i: usize, f: impl FnOnce(&RowSketch) -> T) -> T {
+        match &self.backing {
+            Backing::Owned { rows, .. } => f(&rows[i]),
+            Backing::Shared(sp) => match sp.shard_for(i) {
+                (Shard::Map { rows, .. }, r) => f(&rows[r]),
+                (Shard::Seg(ss), r) => f(&ss.block.to_row_sketch(r)),
+            },
+        }
+    }
+
+    /// The stored sketch of index row `i` (`Neighbor::index` space),
+    /// materialized. Prefer [`KnnIndex::query_pos`] for by-stored-id
+    /// top-k — it serves the row straight from the panels instead.
+    pub fn sketch_at(&self, i: usize) -> RowSketch {
+        self.with_row(i, |r| r.clone())
     }
 
     /// Phase-1 query: top `m` candidates by estimated distance.
@@ -163,25 +448,81 @@ impl KnnIndex {
 
     /// Batched phase-1 queries from *already-sketched* rows (a stored
     /// row's sketch, a sketch that arrived over the wire, …): the fused
-    /// arena top-k scan sharded across `self.workers` threads.
+    /// zone-pruned top-k scan sharded across `self.workers` threads.
     /// Equivalent to calling [`KnnIndex::query_per_row`] per query
-    /// (bitwise-identical scores), but tiled and parallel.
+    /// (bitwise-identical scores), but tiled, pruned, and parallel.
     pub fn query_sketches(&self, qsk: &[RowSketch], m: usize) -> Vec<Vec<Neighbor>> {
+        self.query_sketches_stats(qsk, m).0
+    }
+
+    /// [`KnnIndex::query_sketches`] plus the pruning counters of the
+    /// underlying zoned scan (zeros in MLE mode, which scans per-row).
+    pub fn query_sketches_stats(
+        &self,
+        qsk: &[RowSketch],
+        m: usize,
+    ) -> (Vec<Vec<Neighbor>>, PruneStats) {
         if qsk.is_empty() {
-            return Vec::new();
+            return (Vec::new(), PruneStats::default());
         }
         if self.use_mle {
-            return qsk.iter().map(|qrow| self.scored_per_row(qrow, m)).collect();
+            let lists = qsk.iter().map(|qrow| self.scored_per_row(qrow, m)).collect();
+            return (lists, PruneStats::default());
         }
         let qarena = SketchArena::from_rows(self.dec.p(), self.sketcher.spec.k, qsk);
-        estimator::top_k_scan_arena(&self.dec, &qarena, &self.arena, m, self.workers.max(1))
+        self.scan(&qarena, m)
+    }
+
+    /// By-position query: index row `pos` queries the rest of the index
+    /// with its own stored sketches, served directly from the backing
+    /// panels — no materialization, no query arena. Bitwise-identical
+    /// to `query_sketches(&[self.sketch_at(pos)], m)`. Out-of-range
+    /// positions return an empty list.
+    pub fn query_pos(&self, pos: usize, m: usize) -> Vec<Neighbor> {
+        self.query_pos_stats(pos, m).0
+    }
+
+    /// [`KnnIndex::query_pos`] plus the pruning counters.
+    pub fn query_pos_stats(&self, pos: usize, m: usize) -> (Vec<Neighbor>, PruneStats) {
+        if pos >= self.len() {
+            return (Vec::new(), PruneStats::default());
+        }
+        if self.use_mle {
+            let qs = self.sketch_at(pos);
+            return (self.scored_per_row(&qs, m), PruneStats::default());
+        }
+        let (mut lists, stats) = match &self.backing {
+            Backing::Owned { arena, .. } => self.scan(&OneRow { inner: arena, row: pos }, m),
+            Backing::Shared(sp) => self.scan(&OneRow { inner: sp, row: pos }, m),
+        };
+        (lists.pop().unwrap_or_default(), stats)
+    }
+
+    /// The zoned top-k scan over this index's backing. Owned backings
+    /// scan as one zoneless extent (nothing to prune); Shared backings
+    /// prune segments via their zone bounds. Results are
+    /// bitwise-identical either way.
+    fn scan<Q: SketchPanels>(&self, q: &Q, m: usize) -> (Vec<Vec<Neighbor>>, PruneStats) {
+        let workers = self.workers.max(1);
+        let (lists, stats) = match &self.backing {
+            Backing::Owned { arena, .. } => {
+                let whole = [ZoneExtent { off: 0, rows: arena.n(), zone: None }];
+                estimator::top_k_scan_zoned(&self.dec, q, arena, &whole, m, workers)
+            }
+            Backing::Shared(sp) => {
+                let extents = sp.extents();
+                estimator::top_k_scan_zoned(&self.dec, q, sp, &extents, m, workers)
+            }
+        };
+        let lists = lists
             .into_iter()
             .map(|lst| {
                 lst.into_iter()
                     .map(|(index, distance)| Neighbor { index, distance, exact: false })
                     .collect()
             })
-            .collect()
+            .collect();
+        (lists, stats)
     }
 
     /// Reference per-row query path: score every stored row one pair at
@@ -193,17 +534,16 @@ impl KnnIndex {
     }
 
     fn scored_per_row(&self, qs: &RowSketch, m: usize) -> Vec<Neighbor> {
-        let mut scored: Vec<Neighbor> = self
-            .rows
-            .iter()
-            .enumerate()
-            .map(|(i, r)| Neighbor {
+        let mut scored: Vec<Neighbor> = (0..self.len())
+            .map(|i| Neighbor {
                 index: i,
-                distance: if self.use_mle {
-                    mle::estimate_mle(&self.dec, qs, r, Solve::OneStepNewton)
-                } else {
-                    estimator::estimate(&self.dec, qs, r)
-                },
+                distance: self.with_row(i, |r| {
+                    if self.use_mle {
+                        mle::estimate_mle(&self.dec, qs, r, Solve::OneStepNewton)
+                    } else {
+                        estimator::estimate(&self.dec, qs, r)
+                    }
+                }),
                 exact: false,
             })
             .collect();
@@ -220,7 +560,7 @@ impl KnnIndex {
         m: usize,
         rerank: usize,
     ) -> Vec<Neighbor> {
-        assert_eq!(data.n(), self.rows.len(), "index/data mismatch");
+        assert_eq!(data.n(), self.len(), "index/data mismatch");
         let cands = self.query(q, rerank.max(m));
         let p = self.dec.p();
         let mut exact: Vec<Neighbor> = cands
@@ -279,6 +619,7 @@ fn top_m(scored: &mut Vec<Neighbor>, m: usize) -> Vec<Neighbor> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::data::{corpus, gen, DataDist};
@@ -393,8 +734,8 @@ mod tests {
         // stored row's own sketch IS the query payload.
         let data = gen::generate(DataDist::Gaussian, 50, 48, 23);
         let idx = KnnIndex::build(&data, spec(16), 4).unwrap();
-        let q5 = idx.sketch_at(5).clone();
-        let q11 = idx.sketch_at(11).clone();
+        let q5 = idx.sketch_at(5);
+        let q11 = idx.sketch_at(11);
         let by_sketch = idx.query_sketches(&[q5, q11], 6);
         assert_eq!(by_sketch[0], idx.query(data.row(5), 6));
         assert_eq!(by_sketch[1], idx.query(data.row(11), 6));
@@ -402,6 +743,10 @@ mod tests {
         // exactly the estimator's self-distance).
         assert_eq!(by_sketch[0][0].index, 5);
         assert!(idx.query_sketches(&[], 6).is_empty());
+        // query_pos serves the same answers straight from the panels.
+        assert_eq!(idx.query_pos(5, 6), by_sketch[0]);
+        assert_eq!(idx.query_pos(11, 6), by_sketch[1]);
+        assert!(idx.query_pos(usize::MAX, 6).is_empty());
     }
 
     #[test]
@@ -439,6 +784,153 @@ mod tests {
     }
 
     #[test]
+    fn shared_index_serves_from_snapshot_panels_without_copying() {
+        // The double-residency fix, ptr_eq-pinned: a snapshot-backed
+        // index holds the snapshot's own Arc allocations — segment
+        // panels and zones are shared, never copied.
+        let mut c = crate::config::Config::default();
+        c.n = 48;
+        c.d = 32;
+        c.k = 16;
+        c.block_rows = 16;
+        c.workers = 2;
+        let data = gen::generate(DataDist::Gaussian, c.n, c.d, 37);
+        let pipeline = crate::coordinator::Pipeline::new(c.clone()).unwrap();
+        pipeline.ingest(&data).unwrap();
+        let snap = pipeline.store_snapshot();
+        let (idx, ids) = KnnIndex::from_snapshot(&snap, c.projection_spec(), c.p).unwrap();
+        assert_eq!(ids.len(), 48);
+        let Backing::Shared(sp) = &idx.backing else {
+            panic!("snapshot rebuild must produce a Shared backing");
+        };
+        let segs: Vec<&SegShard> = sp
+            .shards
+            .iter()
+            .filter_map(|s| match s {
+                Shard::Seg(ss) => Some(ss),
+                Shard::Map { .. } => None,
+            })
+            .collect();
+        assert_eq!(segs.len(), snap.segment_count());
+        for (ss, seg) in segs.iter().zip(snap.segments()) {
+            assert!(Arc::ptr_eq(&ss.block, &seg.block), "panels copied at base {}", seg.base);
+            assert!(Arc::ptr_eq(&ss.zone, &seg.zone), "zone copied at base {}", seg.base);
+            assert_eq!(ss.base, seg.base);
+        }
+        // Owned overhead is just the packed norms — far below the
+        // payload the old arena copy duplicated.
+        assert_eq!(idx.bytes(), 48 * std::mem::size_of::<f64>());
+        // By-position queries served from the shared panels match the
+        // materialize-then-query path bitwise.
+        for pos in [0usize, 17, 47] {
+            assert_eq!(
+                idx.query_pos(pos, 6),
+                idx.query_sketches(&[idx.sketch_at(pos)], 6)[0],
+                "pos {pos}"
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_refresh_reindexes_only_new_segments() {
+        let mut c = crate::config::Config::default();
+        c.n = 32;
+        c.d = 32;
+        c.k = 16;
+        c.block_rows = 16;
+        c.workers = 2;
+        let data = gen::generate(DataDist::Gaussian, c.n, c.d, 41);
+        let pipeline = crate::coordinator::Pipeline::new(c.clone()).unwrap();
+        pipeline.ingest(&data).unwrap();
+        let snap1 = pipeline.store_snapshot();
+        let (idx1, _, built1) =
+            KnnIndex::from_snapshot_incremental(&snap1, c.projection_spec(), c.p, None).unwrap();
+        assert_eq!(built1, snap1.segment_count());
+        assert!(built1 > 0);
+        // Appending ingest: only the new segments are indexed; the old
+        // shards are reused Arc-for-Arc (norms included).
+        pipeline.ingest(&data).unwrap();
+        let snap2 = pipeline.store_snapshot();
+        let (idx2, ids2, built2) =
+            KnnIndex::from_snapshot_incremental(&snap2, c.projection_spec(), c.p, Some(&idx1))
+                .unwrap();
+        assert_eq!(built2, snap2.segment_count() - snap1.segment_count());
+        assert!(built2 > 0);
+        let shards_of = |ix: &KnnIndex| match &ix.backing {
+            Backing::Shared(sp) => sp
+                .shards
+                .iter()
+                .filter_map(|s| match s {
+                    Shard::Seg(ss) => Some(ss.clone()),
+                    Shard::Map { .. } => None,
+                })
+                .collect::<Vec<_>>(),
+            Backing::Owned { .. } => panic!("expected shared backing"),
+        };
+        let (s1, s2) = (shards_of(&idx1), shards_of(&idx2));
+        for old in &s1 {
+            let carried = s2
+                .iter()
+                .find(|ss| Arc::ptr_eq(&ss.block, &old.block))
+                .expect("unchanged segment dropped from refreshed index");
+            assert!(Arc::ptr_eq(&carried.norms, &old.norms), "norms rebuilt at {}", old.base);
+        }
+        // The refreshed index answers bitwise-equal to a cold rebuild.
+        let (cold, cold_ids) =
+            KnnIndex::from_snapshot(&snap2, c.projection_spec(), c.p).unwrap();
+        assert_eq!(ids2, cold_ids);
+        for pos in [0usize, 20, 63] {
+            assert_eq!(idx2.query_pos(pos, 7), cold.query_pos(pos, 7), "pos {pos}");
+        }
+        let q = data.row(3);
+        assert_eq!(idx2.query(q, 9), cold.query(q, 9));
+        // An unchanged snapshot refresh re-indexes nothing.
+        let (_, _, built3) =
+            KnnIndex::from_snapshot_incremental(&snap2, c.projection_spec(), c.p, Some(&idx2))
+                .unwrap();
+        assert_eq!(built3, 0);
+    }
+
+    #[test]
+    fn shared_backing_serves_mixed_map_and_segment_stores() {
+        use crate::coordinator::SketchStore;
+        use crate::projection::sketcher::Sketcher;
+        // Map rows interleaved around a columnar segment: the shard walk
+        // must tile the id space exactly and score identically to an
+        // Owned index over the same sketches.
+        let sk = Sketcher::new(spec(12), 4);
+        let data = gen::generate(DataDist::Gaussian, 12, 24, 43);
+        let refs: Vec<&[f32]> = (0..12).map(|i| data.row(i)).collect();
+        let store = SketchStore::new(3);
+        // ids 0,1 and 20 in the map; 8..16 columnar (rows 2..10).
+        store.insert(0, sk.sketch_row(refs[0]));
+        store.insert(1, sk.sketch_row(refs[1]));
+        store.insert_block_columnar(8, sk.sketch_block(&refs[2..10], 1));
+        store.insert(20, sk.sketch_row(refs[10]));
+        let snap = store.snapshot();
+        let (idx, ids) = KnnIndex::from_snapshot(&snap, spec(12), 4).unwrap();
+        assert_eq!(ids, vec![0, 1, 8, 9, 10, 11, 12, 13, 14, 15, 20]);
+        assert_eq!(idx.len(), 11);
+        // Owned oracle over the same rows in id order (map run 0,1 —
+        // then segment rows 2..10 — then map row 10 at id 20).
+        let flat: Vec<f32> = (0..11).flat_map(|i| refs[i].iter().copied()).collect();
+        let owned = KnnIndex::build(&RowMatrix::new(11, 24, flat), spec(12), 4).unwrap();
+        for qi in [0usize, 5, 11] {
+            let got = idx.query(refs[qi], 6);
+            let want = owned.query(refs[qi], 6);
+            assert_eq!(got, want, "query row {qi}");
+        }
+        // By-position works for map rows and segment rows alike.
+        for pos in 0..idx.len() {
+            assert_eq!(
+                idx.query_pos(pos, 4),
+                idx.query_sketches(&[idx.sketch_at(pos)], 4)[0],
+                "pos {pos}"
+            );
+        }
+    }
+
+    #[test]
     fn empty_index_returns_empty_results() {
         let data = RowMatrix::zeros(0, 16);
         let idx = KnnIndex::build(&data, spec(8), 4).unwrap();
@@ -447,9 +939,16 @@ mod tests {
         assert!(idx.query(&q, 5).is_empty());
         assert!(idx.query_per_row(&q, 5).is_empty());
         assert!(idx.query_rerank(&data, &q, 5, 10).is_empty());
+        assert!(idx.query_pos(0, 5).is_empty());
         let mut mle_idx = KnnIndex::build(&data, spec(8), 4).unwrap();
         mle_idx.use_mle = true;
         assert!(mle_idx.query(&q, 5).is_empty());
+        // An empty snapshot builds an empty shared index.
+        let store = crate::coordinator::SketchStore::new(2);
+        let (idx, ids) = KnnIndex::from_snapshot(&store.snapshot(), spec(8), 4).unwrap();
+        assert!(idx.is_empty());
+        assert!(ids.is_empty());
+        assert!(idx.query(&q, 5).is_empty());
     }
 
     #[test]

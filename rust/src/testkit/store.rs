@@ -121,6 +121,40 @@ pub fn random_store_pop(g: &mut Gen, map_rows_max: usize) -> StorePop {
     StorePop { p, k, strategy, map_rows, blocks }
 }
 
+/// Draw a fully-columnar population whose segments live at wildly
+/// different magnitudes: per-block entry scales of 1×, 4×, 16×, 64×.
+/// For p > 2 the marginal p-norm grows polynomially in the scale, so
+/// the zone lower bounds of small-magnitude segments sit far below the
+/// large-magnitude ones — the shape where pruned top-k provably skips
+/// segments (the pruning-equivalence suite asserts it does).
+pub fn skewed_store_pop(g: &mut Gen) -> StorePop {
+    let p = if g.bool() { 4 } else { 6 };
+    let strategy = if g.bool() { Strategy::Basic } else { Strategy::Alternative };
+    let k = 1 + g.usize_in(0, 12);
+    let d = 8 + g.usize_in(0, 24);
+    let seed = g.usize_in(0, 1 << 16) as u64;
+    let sk = Sketcher::new(ProjectionSpec::new(seed, k, ProjectionDist::Normal, strategy), p);
+    // One block per magnitude band, shuffled order via random bases
+    // being assigned in band order but with random gaps — bound-order
+    // visiting must not depend on id order.
+    let mut base = 100u64;
+    let mut blocks = Vec::new();
+    for &scale in &[1.0f32, 4.0, 16.0, 64.0] {
+        let rows = 2 + g.usize_in(0, 12);
+        let data: Vec<Vec<f32>> = (0..rows)
+            .map(|_| g.vec_f32(d..d + 1, -2.0..2.0).iter().map(|x| x * scale).collect())
+            .collect();
+        let refs: Vec<&[f32]> = data.iter().map(|r| r.as_slice()).collect();
+        let block = sk.sketch_block(&refs, 1 + g.usize_in(0, 3));
+        if g.bool() {
+            base += 1 + g.usize_in(0, 20) as u64;
+        }
+        blocks.push((base, block));
+        base += rows as u64;
+    }
+    StorePop { p, k, strategy, map_rows: Vec::new(), blocks }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +191,25 @@ mod tests {
             let store = pop.build(2);
             assert!(store.map_ids().is_empty());
             assert_eq!(store.len(), pop.total_rows());
+        });
+    }
+
+    #[test]
+    fn skewed_populations_span_magnitude_bands() {
+        testkit::check(10, |g| {
+            let pop = skewed_store_pop(g);
+            assert!(pop.map_rows.is_empty());
+            assert_eq!(pop.blocks.len(), 4);
+            let store = pop.build(2);
+            assert_eq!(store.len(), pop.total_rows());
+            // The largest band's max p-norm moment dwarfs the smallest
+            // band's — the separation pruning feeds on.
+            let zones = store.segments_snapshot_zoned();
+            let pm = pop.p - 1; // index of moment order p in 0-based nm layout...
+            let maxes: Vec<f64> = zones.iter().map(|(_, _, z)| z.max_moment[pm]).collect();
+            let lo = maxes.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = maxes.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!(hi > lo * 100.0, "bands must be separated (lo={lo}, hi={hi})");
         });
     }
 }

@@ -1,5 +1,6 @@
 //! Lifecycle property suite: the columnar segment lifecycle —
-//! persistence v2, compaction, and segment-native queries — pinned
+//! persistence (v4 zone trailers included), compaction, segment-native
+//! queries, and zone-pruned top-k — pinned
 //! against the per-row reference path over random store populations
 //! (map rows × segment blocks × ragged sizes, p ∈ {4, 6},
 //! one/two-sided; see `testkit::store`).
@@ -126,6 +127,15 @@ fn persist_v2_round_trip_preserves_layout_and_estimates() {
         assert_eq!(loaded.map_ids(), store.map_ids());
         assert_eq!(loaded.ids(), store.ids());
         assert_eq!(loaded.bytes(), store.bytes());
+        // v4: zone summaries ride in the file and restore bitwise.
+        for ((ab, _, az), (bb, _, bz)) in store
+            .segments_snapshot_zoned()
+            .iter()
+            .zip(&loaded.segments_snapshot_zoned())
+        {
+            assert_eq!(ab, bb);
+            assert_eq!(**az, **bz, "zone diverged through the roundtrip");
+        }
         // And the same estimates, bitwise.
         let dec = lpsketch::core::decompose::Decomposition::new(pop.p).unwrap();
         let ids = pop.ids();
@@ -495,6 +505,200 @@ fn writers_are_never_blocked_behind_a_scan() {
         tx_done.send(()).unwrap();
     });
     assert_eq!(store.len(), n_before + spare.rows());
+}
+
+#[test]
+fn pruned_top_k_is_bitwise_identical_to_full_scan() {
+    // The pruning-equivalence property: over random fully-columnar
+    // populations (p ∈ {4, 6}, one/two-sided, ragged segment sizes —
+    // including 1-row segments the generator draws), the zoned
+    // self-query top-k is bitwise-identical to the unpruned full scan
+    // for every k — including k ≥ n — and every worker count. The
+    // bound is admissible w.r.t. the *estimated* distances (same dot /
+    // coefficient algebra, deflated by the fp margin), so pruning may
+    // only skip segments that provably cannot contribute.
+    testkit::check(12, |g| {
+        let pop = testkit::store::random_store_pop(g, 0);
+        let store = pop.build(2);
+        let snap = store.snapshot();
+        let v = snap.columnar_panels(pop.p).expect("fully columnar population");
+        let dec = Decomposition::new(pop.p).unwrap();
+        let extents = v.extents();
+        let n = pop.total_rows();
+        for top in [1usize, 5, n, n + 3] {
+            for workers in [1usize, 3] {
+                let full = estimator::top_k_scan_arena(&dec, &v, &v, top, workers);
+                let (pruned, stats) =
+                    estimator::top_k_scan_zoned(&dec, &v, &v, &extents, top, workers);
+                assert_eq!(pruned, full, "pruned top-{top} diverged (workers={workers})");
+                // Every (query, extent) pair is accounted for exactly
+                // once — either scanned or skipped.
+                assert_eq!(
+                    stats.segments_visited + stats.segments_skipped,
+                    (n as u64) * extents.len() as u64
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn pruned_top_k_handles_adversarial_zone_shapes() {
+    // Degenerate zones the bound must survive: (1) every row identical
+    // — zero-width zones, ties on every distance, where the heap's
+    // lower-index preference must not be disturbed by visit order; and
+    // (2) a store of single-row segments — maximal extent count,
+    // minimal rows per bound evaluation.
+    let mut g = testkit::Gen { rng: lpsketch::util::rng::Rng::new(33), case: 0 };
+    for strategy in
+        [lpsketch::projection::Strategy::Basic, lpsketch::projection::Strategy::Alternative]
+    {
+        let p = 4;
+        let sk = lpsketch::projection::sketcher::Sketcher::new(
+            lpsketch::projection::ProjectionSpec::new(
+                9,
+                8,
+                lpsketch::projection::ProjectionDist::Normal,
+                strategy,
+            ),
+            p,
+        );
+        let dec = Decomposition::new(p).unwrap();
+        // (1) identical rows split across three segments.
+        let row = g.vec_f32(16..17, -2.0..2.0);
+        let refs: Vec<&[f32]> = std::iter::repeat(row.as_slice()).take(12).collect();
+        let store = SketchStore::new(2);
+        store.insert_block_columnar(100, sk.sketch_block(&refs[..4], 1));
+        store.insert_block_columnar(104, sk.sketch_block(&refs[4..6], 1));
+        store.insert_block_columnar(106, sk.sketch_block(&refs[6..], 1));
+        let snap = store.snapshot();
+        let v = snap.columnar_panels(p).unwrap();
+        for top in [1usize, 3, 12, 20] {
+            let full = estimator::top_k_scan_arena(&dec, &v, &v, top, 2);
+            let (pruned, _) = estimator::top_k_scan_zoned(&dec, &v, &v, &v.extents(), top, 2);
+            assert_eq!(pruned, full, "tie ordering diverged at top-{top}");
+            // All-identical rows: distances tie everywhere, so the heap
+            // must keep the lowest indices, in ascending order.
+            let want: Vec<usize> = (0..top.min(12)).collect();
+            for list in &pruned {
+                let got: Vec<usize> = list.iter().map(|&(i, _)| i).collect();
+                assert_eq!(got, want, "ties must resolve to ascending indices");
+            }
+        }
+        // (2) single-row segments.
+        let rows: Vec<Vec<f32>> = (0..7).map(|_| g.vec_f32(16..17, -2.0..2.0)).collect();
+        let store = SketchStore::new(2);
+        for (i, r) in rows.iter().enumerate() {
+            store.insert_block_columnar(
+                200 + 10 * i as u64,
+                sk.sketch_block(&[r.as_slice()], 1),
+            );
+        }
+        let snap = store.snapshot();
+        let v = snap.columnar_panels(p).unwrap();
+        assert_eq!(v.extents().len(), 7);
+        for top in [1usize, 4, 7, 9] {
+            let full = estimator::top_k_scan_arena(&dec, &v, &v, top, 1);
+            let (pruned, _) = estimator::top_k_scan_zoned(&dec, &v, &v, &v.extents(), top, 1);
+            assert_eq!(pruned, full, "single-row segments diverged at top-{top}");
+        }
+    }
+}
+
+#[test]
+fn pruned_top_k_skips_segments_on_skewed_stores() {
+    // Pruning must actually fire, not just be harmless: on populations
+    // whose segments sit at 1×/4×/16×/64× magnitude bands, the p-norm
+    // lower bound of a far band exceeds any near-band heap threshold,
+    // so the zoned scan provably skips whole segments — while staying
+    // bitwise-identical to the full scan.
+    testkit::check(8, |g| {
+        let pop = testkit::store::skewed_store_pop(g);
+        let store = pop.build(2);
+        let snap = store.snapshot();
+        let v = snap.columnar_panels(pop.p).expect("fully columnar population");
+        let dec = Decomposition::new(pop.p).unwrap();
+        let full = estimator::top_k_scan_arena(&dec, &v, &v, 2, 2);
+        let (pruned, stats) = estimator::top_k_scan_zoned(&dec, &v, &v, &v.extents(), 2, 2);
+        assert_eq!(pruned, full, "pruned scan diverged on skewed store");
+        assert!(
+            stats.segments_skipped > 0,
+            "skewed bands must prune (visited={}, skipped={})",
+            stats.segments_visited,
+            stats.segments_skipped
+        );
+        assert!(stats.rows_skipped > 0);
+    });
+}
+
+#[test]
+fn incremental_serving_index_race_matches_cold_rebuild() {
+    // The serving-index stress property: readers refresh their KNN
+    // index incrementally (reusing shards whose segment blocks are
+    // pointer-identical) while a writer ingests and compacts. Every
+    // refreshed index must answer bitwise-identically to a cold rebuild
+    // from the same snapshot, and refresh work is bounded by what
+    // actually changed.
+    use lpsketch::knn::KnnIndex;
+    let mut c = Config::default();
+    c.n = 48;
+    c.d = 48;
+    c.k = 16;
+    c.block_rows = 8;
+    c.workers = 2;
+    c.compact_min_rows = 0; // the writer drives compaction explicitly
+    let data = gen::generate(DataDist::Gaussian, c.n, c.d, 29);
+    let pipeline = Pipeline::new(c.clone()).unwrap();
+    pipeline.ingest(&data).unwrap();
+    let store = pipeline.store();
+    let spec = c.projection_spec();
+    let p = c.p;
+
+    std::thread::scope(|s| {
+        let writer = s.spawn(|| {
+            for _ in 0..3 {
+                pipeline.ingest(&data).unwrap();
+                store.compact_segments(1 << 20, 1 << 22);
+            }
+        });
+        for _ in 0..2 {
+            let spec = spec.clone();
+            s.spawn(move || {
+                let mut prev: Option<(u64, KnnIndex)> = None;
+                for _ in 0..4 {
+                    let snap = store.snapshot();
+                    let (idx, ids, reindexed) = KnnIndex::from_snapshot_incremental(
+                        &snap,
+                        spec.clone(),
+                        p,
+                        prev.as_ref().map(|(_, i)| i),
+                    )
+                    .unwrap();
+                    let (cold, cold_ids) =
+                        KnnIndex::from_snapshot(&snap, spec.clone(), p).unwrap();
+                    assert_eq!(ids, cold_ids);
+                    for pos in [0usize, 7, ids.len() - 1] {
+                        assert_eq!(
+                            idx.query_pos(pos, 5),
+                            cold.query_pos(pos, 5),
+                            "incremental index diverged from cold rebuild at pos {pos}"
+                        );
+                    }
+                    // A quiescent snapshot re-indexes nothing; a changed
+                    // one at most its current segment count.
+                    if let Some((prev_epoch, _)) = &prev {
+                        if snap.epoch() == *prev_epoch {
+                            assert_eq!(reindexed, 0, "unchanged snapshot re-indexed segments");
+                        }
+                    }
+                    assert!(reindexed <= snap.segment_count());
+                    prev = Some((snap.epoch(), idx));
+                }
+            });
+        }
+        writer.join().unwrap();
+    });
+    assert_eq!(pipeline.rows(), 4 * 48);
 }
 
 #[test]
