@@ -322,6 +322,19 @@ mod tests {
     }
 
     #[test]
+    fn simd_and_quant_modules_are_in_scope() {
+        // The SIMD dispatch and the panel codec feed every serving
+        // kernel and decode persisted bytes, so both sit under the
+        // panic ban and the allocation-size discipline.
+        use super::rules::rules_for;
+        for file in ["projection/simd.rs", "core/quant.rs"] {
+            let rules = rules_for(file);
+            assert!(rules.contains(&SERVING_NO_PANIC), "{file}: {rules:?}");
+            assert!(rules.contains(&LEN_BEFORE_ALLOC), "{file}: {rules:?}");
+        }
+    }
+
+    #[test]
     fn unvalidated_alloc_fires_in_wal() {
         let src = "pub fn decode(n: usize) -> Vec<f32> {\n\
                 let out = Vec::with_capacity(n);\n\

@@ -5,9 +5,9 @@
 //!
 //! | rule | scope | enforces |
 //! |------|-------|----------|
-//! | `serving-no-panic` | `api/`, `coordinator/state.rs`, `coordinator/pipeline.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs`, `coordinator/compactor.rs`, `core/estimator.rs`, `core/zone.rs`, `knn/mod.rs` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` on serving paths |
+//! | `serving-no-panic` | `api/`, `coordinator/state.rs`, `coordinator/pipeline.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs`, `coordinator/compactor.rs`, `core/estimator.rs`, `core/zone.rs`, `core/quant.rs`, `projection/simd.rs`, `knn/mod.rs` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` on serving paths |
 //! | `no-index-untrusted` | `api/` | no `x[..]` indexing at the untrusted-input boundary — use `get(..)` |
-//! | `len-before-alloc` | `api/wire.rs`, `coordinator/persist.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs` | decoded-count allocations need a cap/bytes-present check earlier in the same function |
+//! | `len-before-alloc` | `api/wire.rs`, `coordinator/persist.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs`, `core/quant.rs`, `projection/simd.rs` | decoded-count allocations need a cap/bytes-present check earlier in the same function |
 //! | `guard-across-blocking` | `api/`, `coordinator/` | lock guards must not be live across channel ops, thread scopes, or a second blocking lock |
 //! | `writer-bumps-epoch` | `coordinator/state.rs`, `coordinator/compactor.rs` | in `state.rs`, every manifest mutator bumps the store epoch inside its write critical section; elsewhere in scope, store internals must not be touched directly (the mutators are the only sanctioned write path) |
 //!
@@ -74,6 +74,8 @@ pub fn rules_for(rel: &str) -> Vec<&'static str> {
         || rel == "coordinator/compactor.rs"
         || rel == "core/estimator.rs"
         || rel == "core/zone.rs"
+        || rel == "core/quant.rs"
+        || rel == "projection/simd.rs"
         || rel == "knn/mod.rs";
     if serving {
         rules.push(SERVING_NO_PANIC);
@@ -86,6 +88,8 @@ pub fn rules_for(rel: &str) -> Vec<&'static str> {
         || rel == "coordinator/durable.rs"
         || rel == "coordinator/wal.rs"
         || rel == "coordinator/segfile.rs"
+        || rel == "core/quant.rs"
+        || rel == "projection/simd.rs"
     {
         rules.push(LEN_BEFORE_ALLOC);
     }

@@ -8,6 +8,7 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::core::quant::PanelQuant;
 use crate::data::DataDist;
 use crate::projection::{ProjectionDist, Strategy};
 
@@ -46,6 +47,14 @@ pub struct Config {
     /// reference path — the baseline the GEMM path is benchmarked and
     /// equivalence-tested against.
     pub ingest_gemm: bool,
+    /// Panel storage encoding applied to columnar segments at the store
+    /// boundary: `none` (f32, the bitwise reference), `f16`, `bf16`, or
+    /// `i8` (per-(order, side) scale). Quantized decode is value-exact,
+    /// so every downstream layer — zones, estimates, persistence —
+    /// agrees bitwise on the decoded values; the codec's only error is
+    /// the one round-trip at ingest (bounded, see `core/quant.rs`).
+    /// Moments and per-row map entries always stay full precision.
+    pub panel_quant: PanelQuant,
     /// Segment compaction: merge adjacent columnar segments smaller than
     /// this after each ingest (incrementally — only the run the ingest
     /// appended) and on rebalance. `0` disables the pass. Compaction is
@@ -90,6 +99,7 @@ impl Default for Config {
             query_workers: 2,
             use_mle: false,
             ingest_gemm: true,
+            panel_quant: PanelQuant::None,
             compact_min_rows: 1024,
             compact_target_rows: 8192,
             compactor_interval_ms: 1000,
@@ -124,6 +134,7 @@ impl Config {
             "query-workers" | "query_workers" => self.query_workers = parse_nonzero(key, value)?,
             "mle" | "use-mle" | "use_mle" => self.use_mle = parse_bool(value)?,
             "ingest-gemm" | "ingest_gemm" => self.ingest_gemm = parse_bool(value)?,
+            "panel-quant" | "panel_quant" => self.panel_quant = PanelQuant::parse(value)?,
             "compact-min-rows" | "compact_min_rows" => self.compact_min_rows = value.parse()?,
             "compact-target-rows" | "compact_target_rows" => {
                 self.compact_target_rows = parse_nonzero(key, value)?
@@ -222,7 +233,7 @@ impl Config {
     pub fn describe(&self) -> String {
         format!(
             "p={} k={} strategy={} dist={} n={} d={} workers={} qworkers={} block={} \
-             compact={}/{} mle={} gemm={} pjrt={}",
+             compact={}/{} quant={} mle={} gemm={} pjrt={}",
             self.p,
             self.k,
             self.strategy.as_str(),
@@ -234,6 +245,7 @@ impl Config {
             self.block_rows,
             self.compact_min_rows,
             self.compact_target_rows,
+            self.panel_quant.name(),
             self.use_mle,
             self.ingest_gemm,
             self.use_pjrt,
@@ -296,6 +308,23 @@ mod tests {
         assert!(!c.ingest_gemm);
         c.set("ingest_gemm", "on").unwrap();
         assert!(c.ingest_gemm);
+    }
+
+    #[test]
+    fn panel_quant_parses_and_defaults_off() {
+        let mut c = Config::default();
+        assert_eq!(c.panel_quant, PanelQuant::None, "f32 storage is the default");
+        c.apply_args(args(&["--panel-quant", "i8"])).unwrap();
+        assert_eq!(c.panel_quant, PanelQuant::I8);
+        c.set("panel_quant", "f16").unwrap();
+        assert_eq!(c.panel_quant, PanelQuant::F16);
+        c.set("panel-quant", "bf16").unwrap();
+        assert_eq!(c.panel_quant, PanelQuant::Bf16);
+        c.set("panel-quant", "none").unwrap();
+        assert_eq!(c.panel_quant, PanelQuant::None);
+        assert!(c.set("panel-quant", "q4").is_err(), "unknown encodings fail loudly");
+        c.panel_quant = PanelQuant::Bf16;
+        assert!(c.describe().contains("quant=bf16"), "{}", c.describe());
     }
 
     #[test]

@@ -211,6 +211,20 @@ pub(crate) fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
     }
 }
 
+pub(crate) fn put_u16s(out: &mut Vec<u8>, xs: &[u16]) {
+    out.reserve(xs.len() * 2);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub(crate) fn put_i8s(out: &mut Vec<u8>, xs: &[i8]) {
+    out.reserve(xs.len());
+    for x in xs {
+        out.push(*x as u8);
+    }
+}
+
 /// Bounds-checked cursor over a byte slice: every take validates
 /// bytes-present *before* allocating, and a short buffer is an error,
 /// never a panic.
@@ -276,6 +290,25 @@ impl<'a> ByteReader<'a> {
             out.push(f32::from_le_bytes(b));
         }
         Ok(out)
+    }
+
+    pub(crate) fn u16s(&mut self, n: usize) -> anyhow::Result<Vec<u16>> {
+        let bytes = n.checked_mul(2).ok_or_else(|| anyhow::anyhow!("panel length overflow"))?;
+        anyhow::ensure!(bytes <= self.remaining(), "truncated u16 panel ({n} values)");
+        let s = self.take(bytes)?;
+        let mut out = Vec::with_capacity(n);
+        for c in s.chunks_exact(2) {
+            let mut b = [0u8; 2];
+            b.copy_from_slice(c);
+            out.push(u16::from_le_bytes(b));
+        }
+        Ok(out)
+    }
+
+    pub(crate) fn i8s(&mut self, n: usize) -> anyhow::Result<Vec<i8>> {
+        anyhow::ensure!(n <= self.remaining(), "truncated i8 panel ({n} values)");
+        let s = self.take(n)?;
+        Ok(s.iter().map(|&b| b as i8).collect())
     }
 
     pub(crate) fn f64s(&mut self, n: usize) -> anyhow::Result<Vec<f64>> {

@@ -153,6 +153,10 @@ impl Metrics {
 
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
+            // Resolved once per process by runtime dispatch; surfaced
+            // here so operators can verify which inner-loop kernel —
+            // avx / neon / portable / scalar — is actually serving.
+            simd_kernel: crate::projection::simd::active_kernel(),
             rows_ingested: self.rows_ingested.load(Ordering::Relaxed),
             blocks_sketched: self.blocks_sketched.load(Ordering::Relaxed),
             queries_served: self.queries_served.load(Ordering::Relaxed),
@@ -186,6 +190,9 @@ impl Metrics {
 /// Point-in-time copy of the counters.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Snapshot {
+    /// The SIMD kernel the f32 inner loops dispatched to ("avx",
+    /// "neon", "portable", or "scalar" — see `projection/simd.rs`).
+    pub simd_kernel: &'static str,
     pub rows_ingested: u64,
     pub blocks_sketched: u64,
     pub queries_served: u64,
@@ -217,12 +224,14 @@ pub struct Snapshot {
 impl Snapshot {
     pub fn render(&self) -> String {
         format!(
-            "rows={} blocks={} queries={} batches={} (deadline={}) pjrt={} gemm={} fallback={} \
+            "simd={} rows={} blocks={} queries={} batches={} (deadline={}) pjrt={} gemm={} \
+             fallback={} \
              compactions={} segments={} in_flight={} snapshot_age={} wire_errors={} \
              wal_records={} wal_bytes={} sealed={} compactor_passes={} io_retries={} \
              degraded={} knn_reindexed={} topk_visited={} topk_skipped={} \
              sketch_mean={:.1}us \
              sketch_p95={}us query_mean={:.1}us query_p95={}us",
+            self.simd_kernel,
             self.rows_ingested,
             self.blocks_sketched,
             self.queries_served,
@@ -310,5 +319,16 @@ mod tests {
         assert_eq!(s.rows_ingested, 5);
         assert_eq!(s.pjrt_calls, 2);
         assert!(s.render().contains("rows=5"));
+    }
+
+    #[test]
+    fn snapshot_reports_the_active_simd_kernel() {
+        let s = Metrics::new().snapshot();
+        assert!(
+            ["avx", "neon", "portable", "scalar"].contains(&s.simd_kernel),
+            "unexpected kernel {:?}",
+            s.simd_kernel
+        );
+        assert!(s.render().contains(&format!("simd={}", s.simd_kernel)));
     }
 }

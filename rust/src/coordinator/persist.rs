@@ -3,17 +3,20 @@
 //! claim (after the linear scan, the sketches *are* the dataset; the
 //! O(nD) matrix can be discarded).
 //!
-//! ## Format v4 (little-endian, current)
+//! ## Format v5 (little-endian, current)
 //!
 //! The store's two internal representations are persisted as they are
 //! held: per-row map entries row-wise, columnar segments as contiguous
-//! panels (one bulk f32 write per (order, side) per segment), so a
+//! panels (one bulk write per (order, side) per segment), so a
 //! save/load cycle preserves the columnar layout — and with it the
 //! memcpy `arena_snapshot` / segment-native query fast paths — instead
 //! of degrading every row to a map entry. v4 additionally persists each
 //! segment's zone summary (its pruning metadata), so a restored store
 //! serves pruned top-k immediately, without an O(rows·orders·k)
-//! recomputation pass.
+//! recomputation pass. v5 additionally records each segment's panel
+//! encoding ([`PanelQuant`]) so quantized segments persist **as
+//! stored** — an i8 segment writes 1 byte/value plus its per-order
+//! scales, not a decoded f32 blow-up — and restore bit-identically.
 //!
 //! | field                | type                  | notes                              |
 //! |----------------------|-----------------------|------------------------------------|
@@ -39,9 +42,13 @@
 //! | *per segment*        |                       | *base ascending, ranges disjoint*  |
 //! |   base               | `u64`                 | first covered id                   |
 //! |   seg_rows           | `u64`                 |                                    |
-//! |   u panels           | `f32[orders·rows·k]`  | one contiguous panel per order     |
-//! |   v panels           | `f32[orders·rows·k]`  | only if two_sided                  |
-//! |   moments            | `f64[rows·nm]`        | row-major                          |
+//! |   enc                | `u8`                  | v5: `PanelQuant` tag (0 f32, 1 f16, 2 bf16, 3 i8) |
+//! |   u_scales           | `f32[orders]`         | v5, i8 only: per-order u scales    |
+//! |   v_scales           | `f32[orders]`         | v5, i8 + two_sided only            |
+//! |   enc_crc            | `u32`                 | v5: CRC32 of tag + scale bytes     |
+//! |   u panels           | `enc[orders·rows·k]`  | one contiguous panel per order, `enc`-sized values |
+//! |   v panels           | `enc[orders·rows·k]`  | only if two_sided                  |
+//! |   moments            | `f64[rows·nm]`        | row-major, always f64              |
 //! |   zone_len           | `u32`                 | v4: zone words, = `encoded_len`    |
 //! |   zone               | `f64[zone_len]`       | v4: `ZoneMeta::to_f64s` layout     |
 //! |   zone_crc           | `u32`                 | v4: CRC32 of the zone bytes        |
@@ -51,7 +58,19 @@
 //! is allocated — an inflated count is a hard error, not an allocation.
 //! The per-zone CRC pins the summary: zones gate which segments a
 //! pruned top-k even reads, so a silently corrupted zone could drop
-//! true neighbors; a corrupted zone file errors instead.
+//! true neighbors; a corrupted zone file errors instead. The v5
+//! encoding trailer is pinned the same way: an unknown tag is rejected
+//! *before* any panel byte is sized or read (the tag decides
+//! bytes-per-value, so a flipped tag would mis-slice the whole
+//! segment), a corrupted scale errors via `enc_crc`, and a non-finite
+//! or negative scale is rejected outright. Restored quantized segments
+//! keep their stored zone verbatim — admissible because quantized
+//! decode is value-exact, so the values the zone bounds are exactly the
+//! values every kernel sees.
+//!
+//! ## Format v4 (read-only compatibility)
+//!
+//! v5 without the per-segment encoding trailer: panels are always f32.
 //!
 //! ## Format v3 (read-only compatibility)
 //!
@@ -87,6 +106,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::core::marginals::Moments;
+use crate::core::quant::{PanelQuant, PanelStore};
 use crate::core::zone::ZoneMeta;
 use crate::projection::sketcher::{ColumnarBlock, RowSketch, SketchSet};
 use crate::projection::ProjectionDist;
@@ -95,7 +115,7 @@ use super::durable::crc32;
 use super::state::SketchStore;
 
 const MAGIC: &[u8; 4] = b"LPSK";
-const VERSION: u32 = 4;
+const VERSION: u32 = 5;
 
 /// Hard caps on declared shapes — a corrupt header must error, not
 /// drive a multi-gigabyte allocation.
@@ -175,6 +195,29 @@ fn w_f64s(w: &mut impl Write, xs: &[f64]) -> std::io::Result<()> {
     w.write_all(&bytes)
 }
 
+fn w_u16s(w: &mut impl Write, xs: &[u16]) -> std::io::Result<()> {
+    let mut bytes = Vec::with_capacity(xs.len() * 2);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&bytes)
+}
+
+fn w_i8s(w: &mut impl Write, xs: &[i8]) -> std::io::Result<()> {
+    let bytes: Vec<u8> = xs.iter().map(|&x| x as u8).collect();
+    w.write_all(&bytes)
+}
+
+/// Write one panel store in its held encoding — the whole point of the
+/// v5 segment body: an i8 store hits disk at 1 byte/value.
+fn w_store(w: &mut impl Write, s: &PanelStore) -> std::io::Result<()> {
+    match s {
+        PanelStore::F32(xs) => w_f32s(w, xs),
+        PanelStore::F16(xs) | PanelStore::Bf16(xs) => w_u16s(w, xs),
+        PanelStore::I8 { data, .. } => w_i8s(w, data),
+    }
+}
+
 fn r_f32s(r: &mut impl Read, n: usize) -> anyhow::Result<Vec<f32>> {
     let len = n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("panel length overflow"))?;
     let mut bytes = vec![0u8; len];
@@ -195,6 +238,42 @@ fn r_f64s(r: &mut impl Read, n: usize) -> anyhow::Result<Vec<f64>> {
         .collect())
 }
 
+fn r_u16s(r: &mut impl Read, n: usize) -> anyhow::Result<Vec<u16>> {
+    let len = n.checked_mul(2).ok_or_else(|| anyhow::anyhow!("panel length overflow"))?;
+    let mut bytes = vec![0u8; len];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes(c.try_into().expect("2-byte chunk")))
+        .collect())
+}
+
+fn r_i8s(r: &mut impl Read, n: usize) -> anyhow::Result<Vec<i8>> {
+    let mut bytes = vec![0u8; n];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.into_iter().map(|b| b as i8).collect())
+}
+
+/// Read one panel store of `n` values in encoding `enc`. `scales` must
+/// be `Some` exactly when `enc` is i8 (the caller read and validated
+/// them from the segment's encoding trailer).
+fn r_store(
+    r: &mut impl Read,
+    enc: PanelQuant,
+    n: usize,
+    scales: Option<Vec<f32>>,
+) -> anyhow::Result<PanelStore> {
+    Ok(match enc {
+        PanelQuant::None => PanelStore::F32(r_f32s(r, n)?),
+        PanelQuant::F16 => PanelStore::F16(r_u16s(r, n)?),
+        PanelQuant::Bf16 => PanelStore::Bf16(r_u16s(r, n)?),
+        PanelQuant::I8 => PanelStore::I8 {
+            data: r_i8s(r, n)?,
+            scales: scales.ok_or_else(|| anyhow::anyhow!("i8 segment without scales"))?,
+        },
+    })
+}
+
 /// Per-row shape of one side, validated for homogeneity at save time.
 #[derive(Clone, Copy, PartialEq, Eq)]
 struct Shape {
@@ -204,8 +283,9 @@ struct Shape {
     two_sided: bool,
 }
 
-/// Save every row of `store` to `path` (format v3: map rows row-wise,
-/// columnar segments as contiguous panels). `p` is the distance order
+/// Save every row of `store` to `path` (format v5: map rows row-wise,
+/// columnar segments as contiguous panels in their stored encoding,
+/// each with its zone summary). `p` is the distance order
 /// the sketches were built for (recorded for load-time validation);
 /// `projection` records the projection seed + distribution so the
 /// restored store can sketch fresh query vectors consistently (pass
@@ -312,13 +392,26 @@ pub fn save(
         anyhow::ensure!(block_shape == shape, "heterogeneous store (segment at {base})");
         w_u64(&mut w, *base)?;
         w_u64(&mut w, block.rows() as u64)?;
-        for m in 1..=block.orders() {
-            w_f32s(&mut w, block.u_order(m))?;
-        }
-        if block.is_two_sided() {
-            for m in 1..=block.orders() {
-                w_f32s(&mut w, block.v_order(m).expect("two-sided"))?;
+        // v5 encoding trailer: tag byte (+ per-order i8 scales), pinned
+        // by its own CRC — the tag decides bytes-per-value for the rest
+        // of the segment, so it must not be trusted un-checksummed.
+        let mut ebytes = vec![block.encoding().tag()];
+        if let Some(scales) = block.u_store().i8_scales() {
+            for x in scales {
+                ebytes.extend_from_slice(&x.to_le_bytes());
             }
+            if let Some(vs) = block.v_store() {
+                for x in vs.i8_scales().expect("cross-side encodings match") {
+                    ebytes.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        w.write_all(&ebytes)?;
+        w_u32(&mut w, crc32(&ebytes))?;
+        // Panels ride in their stored encoding; moments stay f64.
+        w_store(&mut w, block.u_store())?;
+        if let Some(vs) = block.v_store() {
+            w_store(&mut w, vs)?;
         }
         w_f64s(&mut w, block.moments_all())?;
         // v4 zone trailer: word count, payload, CRC of the payload
@@ -457,12 +550,14 @@ fn read_map_row(r: &mut impl Read, h: &SketchFileHeader) -> anyhow::Result<(u64,
 }
 
 /// Load a sketch file into a fresh store with `shards` shards. v2+
-/// files reconstruct their columnar segments verbatim; v4 files also
+/// files reconstruct their columnar segments verbatim; v4+ files also
 /// restore each segment's zone summary as stored (via
 /// [`SketchStore::insert_block_prezoned`]), while v2/v3 segments land
 /// through [`SketchStore::insert_block_columnar`], which recomputes the
-/// zone from the panels. v1 files load every row into the per-row map,
-/// as they were saved.
+/// zone from the panels. v5 segments restore in their stored panel
+/// encoding (pre-v5 segments are always f32); the prezoned path never
+/// re-encodes, so quantized segments come back bit-identical. v1 files
+/// load every row into the per-row map, as they were saved.
 pub fn load(path: &Path, shards: usize) -> anyhow::Result<(SketchStore, SketchFileHeader)> {
     let file = std::fs::File::open(path)?;
     let file_len = file.metadata()?.len();
@@ -499,13 +594,51 @@ pub fn load(path: &Path, shards: usize) -> anyhow::Result<(SketchStore, SketchFi
     );
     let mut seg_rows_total = 0u64;
     let mut prev_end = 0u64;
-    // Bytes one segment row occupies in the panels section.
-    let seg_row_bytes =
-        (orders * k * 4) as u64 * if header.two_sided { 2 } else { 1 } + (nm * 8) as u64;
+    let sides = if header.two_sided { 2usize } else { 1 };
     for s in 0..header.segments {
         let base = r_u64(&mut r)?;
         let rows = r_u64(&mut r)?;
         anyhow::ensure!(rows > 0, "segment {s} is empty");
+        // v5 encoding trailer. The tag is validated *first* — it sets
+        // bytes-per-value for the whole segment, so an unknown tag must
+        // be rejected before any panel buffer is sized.
+        let (enc, mut u_scales, mut v_scales) = if version >= 5 {
+            let mut ebytes = vec![0u8; 1];
+            r.read_exact(&mut ebytes)?;
+            let enc = PanelQuant::from_tag(ebytes[0]).ok_or_else(|| {
+                anyhow::anyhow!("segment {s} has unknown panel-encoding tag {}", ebytes[0])
+            })?;
+            let (us, vs) = if enc == PanelQuant::I8 {
+                let mut sbytes = vec![0u8; orders * 4 * sides];
+                r.read_exact(&mut sbytes)?;
+                ebytes.extend_from_slice(&sbytes);
+                let all: Vec<f32> = sbytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                    .collect();
+                anyhow::ensure!(
+                    all.iter().all(|x| x.is_finite() && *x >= 0.0),
+                    "segment {s} has a non-finite or negative i8 scale"
+                );
+                let (u, v) = all.split_at(orders);
+                (Some(u.to_vec()), header.two_sided.then(|| v.to_vec()))
+            } else {
+                (None, None)
+            };
+            let want_crc = r_u32(&mut r)?;
+            anyhow::ensure!(
+                crc32(&ebytes) == want_crc,
+                "segment {s} panel-encoding checksum mismatch (corrupt)"
+            );
+            (enc, us, vs)
+        } else {
+            // Pre-v5 files always hold f32 panels.
+            (PanelQuant::None, None, None)
+        };
+        // Bytes one segment row occupies in the panels section, under
+        // this segment's encoding — exact accounting before allocation.
+        let seg_row_bytes =
+            (orders * k * enc.bytes_per_value()) as u64 * sides as u64 + (nm * 8) as u64;
         anyhow::ensure!(
             rows.checked_mul(seg_row_bytes).is_some_and(|b| b <= file_len),
             "segment {s} declares more rows than the file holds (truncated or corrupt)"
@@ -528,15 +661,15 @@ pub fn load(path: &Path, shards: usize) -> anyhow::Result<(SketchStore, SketchFi
         let rows = rows as usize;
         // The per-order u panels are stored consecutively, so the whole
         // u (and v) buffer reads as one contiguous chunk — exactly the
-        // block's internal layout.
-        let u = r_f32s(&mut r, orders * rows * k)?;
+        // block's internal layout, in the segment's stored encoding.
+        let u = r_store(&mut r, enc, orders * rows * k, u_scales.take())?;
         let v = if header.two_sided {
-            Some(r_f32s(&mut r, orders * rows * k)?)
+            Some(r_store(&mut r, enc, orders * rows * k, v_scales.take())?)
         } else {
             None
         };
         let moments = r_f64s(&mut r, rows * nm)?;
-        let block = ColumnarBlock::from_parts(orders, k, nm, rows, u, v, moments);
+        let block = ColumnarBlock::from_stores(orders, k, nm, rows, u, v, moments);
         if version >= 4 {
             // Zone trailer: the declared word count must match the
             // shape exactly — checked before the payload buffer exists,
@@ -926,6 +1059,190 @@ mod tests {
         assert!(err.contains("zone"), "unexpected error: {err}");
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&attack).ok();
+    }
+
+    /// Like `segmented_store`, with the store's panel quantization set
+    /// before ingest so both segments land encoded.
+    fn quantized_segmented_store(strategy: Strategy, q: PanelQuant) -> SketchStore {
+        let sk = Sketcher::new(ProjectionSpec::new(5, 8, ProjectionDist::Normal, strategy), 4);
+        let store = SketchStore::new(3);
+        store.set_panel_quant(q);
+        let rows: Vec<Vec<f32>> = (0..9)
+            .map(|i| (0..20).map(|t| ((i * 7 + t) as f32 * 0.23).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        store.insert_block_columnar(10, sk.sketch_block(&refs[..5], 1)); // 10..15
+        store.insert_block_columnar(40, sk.sketch_block(&refs[5..], 1)); // 40..44
+        store
+    }
+
+    #[test]
+    fn roundtrip_preserves_quantized_segments() {
+        // Quantized segments persist *as stored* — same encoding, same
+        // bytes, same zones, bitwise-equal estimates — and the file is
+        // strictly smaller than its f32 twin.
+        let dec = Decomposition::new(4).unwrap();
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let f32_path = tmp(&format!("quant_f32_{strategy:?}.lpsk"));
+            save(&segmented_store(strategy), 4, Some(proj()), &f32_path).unwrap();
+            let f32_len = std::fs::metadata(&f32_path).unwrap().len();
+            for q in [PanelQuant::F16, PanelQuant::Bf16, PanelQuant::I8] {
+                let store = quantized_segmented_store(strategy, q);
+                let path = tmp(&format!("quant_{}_{strategy:?}.lpsk", q.name()));
+                let saved = save(&store, 4, Some(proj()), &path).unwrap();
+                assert_eq!(saved.segments, 2);
+                assert!(
+                    std::fs::metadata(&path).unwrap().len() < f32_len,
+                    "{q:?} file must be smaller than the f32 twin"
+                );
+                let (loaded, header) = load(&path, 2).unwrap();
+                assert_eq!(header, saved);
+                assert_eq!(loaded.segments_snapshot(), store.segments_snapshot());
+                assert_eq!(loaded.bytes(), store.bytes());
+                for ((_, _, bz), (_, _, az)) in store
+                    .segments_snapshot_zoned()
+                    .iter()
+                    .zip(&loaded.segments_snapshot_zoned())
+                {
+                    assert_eq!(**bz, **az, "zones survive the roundtrip bitwise");
+                }
+                for (_, block) in loaded.segments_snapshot() {
+                    assert_eq!(block.encoding(), q);
+                }
+                assert_eq!(
+                    store.estimate_pair_plain(&dec, 11, 41),
+                    loaded.estimate_pair_plain(&dec, 11, 41),
+                    "quantized estimates identical through the roundtrip"
+                );
+                std::fs::remove_file(&path).ok();
+            }
+            std::fs::remove_file(&f32_path).ok();
+        }
+    }
+
+    #[test]
+    fn mixed_encoding_stores_roundtrip_per_segment() {
+        // The encoding tag is per segment: a store whose quantization
+        // setting changed mid-life holds mixed segments, and each must
+        // come back in its own encoding.
+        let sk = Sketcher::new(
+            ProjectionSpec::new(5, 8, ProjectionDist::Normal, Strategy::Basic),
+            4,
+        );
+        let store = SketchStore::new(2);
+        let rows: Vec<Vec<f32>> = (0..8)
+            .map(|i| (0..20).map(|t| ((i * 5 + t) as f32 * 0.31).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        store.insert_block_columnar(0, sk.sketch_block(&refs[..4], 1)); // f32
+        store.set_panel_quant(PanelQuant::I8);
+        store.insert_block_columnar(4, sk.sketch_block(&refs[4..], 1)); // i8
+        let path = tmp("mixed_enc.lpsk");
+        save(&store, 4, Some(proj()), &path).unwrap();
+        let (loaded, _) = load(&path, 2).unwrap();
+        let segs = loaded.segments_snapshot();
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].1.encoding(), PanelQuant::None);
+        assert_eq!(segs[1].1.encoding(), PanelQuant::I8);
+        assert_eq!(segs, store.segments_snapshot());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_panel_encoding_trailer_errors_never_panics() {
+        let store = quantized_segmented_store(Strategy::Basic, PanelQuant::I8);
+        let path = tmp("enc_corrupt.lpsk");
+        let header = save(&store, 4, Some(proj()), &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Header layout (with projection): magic(4) version(4) p(4)
+        // k(4) orders(4) nm(4) flag(1) rows(8) map_rows(8) segments(8)
+        // has_proj(1) seed(8) dist(1) param(8) = 67 bytes; first segment
+        // follows with base(8) rows(8), so its encoding trailer —
+        // tag(1) + scales(orders·4, one-sided i8) + crc(4) — starts at
+        // byte 83.
+        let trailer_at = 67 + 16;
+        let trailer_len = 1 + header.orders as usize * 4 + 4;
+        let attack = tmp("enc_attacked.lpsk");
+        // Every byte of the trailer is load-bearing: a flipped tag is
+        // unknown (or fails the CRC), flipped scales and flipped CRC
+        // words fail the checksum comparison.
+        for off in trailer_at..trailer_at + trailer_len {
+            let mut b = bytes.clone();
+            b[off] ^= 0xFF;
+            std::fs::write(&attack, &b).unwrap();
+            assert!(load(&attack, 1).is_err(), "flip at {off} must error");
+        }
+        // Truncation anywhere inside the trailer, and inside the panels
+        // that follow it, errors too.
+        for len in trailer_at..trailer_at + trailer_len + 5 {
+            std::fs::write(&attack, &bytes[..len]).unwrap();
+            assert!(load(&attack, 1).is_err(), "truncation to {len} must error");
+        }
+        // An unknown tag is rejected by name, before any panel buffer
+        // is sized from it.
+        let mut b = bytes.clone();
+        b[trailer_at] = 200;
+        std::fs::write(&attack, &b).unwrap();
+        let err = load(&attack, 1).unwrap_err().to_string();
+        assert!(err.contains("unknown panel-encoding tag"), "unexpected error: {err}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&attack).ok();
+    }
+
+    #[test]
+    fn legacy_v4_files_load_as_f32_with_zones_adopted() {
+        // Hand-rolled v4 writer (the current format minus the encoding
+        // trailer): panels are implicitly f32, and the zone trailer is
+        // still adopted verbatim.
+        let sk = Sketcher::new(
+            ProjectionSpec::new(5, 8, ProjectionDist::Normal, Strategy::Basic),
+            4,
+        );
+        let rows: Vec<Vec<f32>> = (0..6)
+            .map(|i| (0..20).map(|t| ((i * 3 + t) as f32 * 0.29).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let block = sk.sketch_block(&refs, 1);
+        let zone = ZoneMeta::from_block(&block);
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(b"LPSK");
+        for v in [4u32, 4, block.k() as u32, block.orders() as u32, block.moment_orders() as u32]
+        {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.push(0u8); // one-sided
+        for v in [block.rows() as u64, 0u64, 1u64] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.push(0u8); // no projection recorded
+        out.extend_from_slice(&7u64.to_le_bytes()); // base
+        out.extend_from_slice(&(block.rows() as u64).to_le_bytes());
+        for m in 1..=block.orders() {
+            for x in block.u_order(m) {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        for x in block.moments_all() {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        let zvals = zone.to_f64s(false);
+        let mut zbytes = Vec::with_capacity(zvals.len() * 8);
+        for x in &zvals {
+            zbytes.extend_from_slice(&x.to_le_bytes());
+        }
+        out.extend_from_slice(&(zvals.len() as u32).to_le_bytes());
+        out.extend_from_slice(&zbytes);
+        out.extend_from_slice(&crc32(&zbytes).to_le_bytes());
+        let path = tmp("legacy_v4.lpsk");
+        std::fs::write(&path, out).unwrap();
+        let (loaded, header) = load(&path, 2).unwrap();
+        assert_eq!(header.segments, 1);
+        let segs = loaded.segments_snapshot_zoned();
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].0, 7);
+        assert_eq!(segs[0].1.encoding(), PanelQuant::None);
+        assert_eq!(*segs[0].2, zone, "v4 zones still adopt verbatim");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

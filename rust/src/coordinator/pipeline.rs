@@ -170,10 +170,14 @@ impl Pipeline {
             (None, None)
         };
         let workers = cfg.workers;
+        let store = SketchStore::new(workers);
+        // Block ingest quantizes at the store boundary from here on;
+        // per-row map entries and the WAL stay f32 regardless.
+        store.set_panel_quant(cfg.panel_quant);
         Ok(Pipeline {
             dec,
             sketcher,
-            store: SketchStore::new(workers),
+            store,
             metrics: Metrics::new(),
             router: Router::new_mod(workers),
             next_id: AtomicU64::new(0),
@@ -219,6 +223,9 @@ impl Pipeline {
             );
             pipeline.next_id = AtomicU64::new(ids.last().copied().unwrap_or(first) + 1);
         }
+        // The adopted store keeps its existing segments as they are;
+        // the config's encoding applies to blocks ingested from now on.
+        store.set_panel_quant(pipeline.cfg.panel_quant);
         pipeline.store = store;
         pipeline
             .metrics
@@ -325,21 +332,19 @@ impl Pipeline {
     /// Insert per-row sketches, then (in durable mode) append them to
     /// the WAL — `Ok` means fsynced, i.e. acknowledged.
     fn insert_rows_logged(&self, rows: Vec<(u64, RowSketch)>) -> anyhow::Result<()> {
+        // One batched insert — a single epoch bump and snapshot-cache
+        // purge for the whole batch, not one per row, so concurrent
+        // readers keep their cached snapshot across an ingest wave and
+        // never observe a torn batch.
         match &self.durability {
             Some(d) => {
-                for (id, rs) in &rows {
-                    self.store.insert(*id, rs.clone());
-                }
+                self.store.insert_rows(rows.clone());
                 d.log_rows(&rows)?;
                 let (records, bytes) = d.wal_stats();
                 self.metrics.wal_records.store(records, Ordering::Relaxed);
                 self.metrics.wal_bytes.store(bytes, Ordering::Relaxed);
             }
-            None => {
-                for (id, rs) in rows {
-                    self.store.insert(id, rs);
-                }
-            }
+            None => self.store.insert_rows(rows),
         }
         Ok(())
     }

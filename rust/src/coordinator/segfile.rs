@@ -4,21 +4,24 @@
 //! sealed here, restart adopts it directly and replays only the WAL
 //! tail — a multi-GB store does not re-decode its settled history.
 //!
-//! ## File format v2 (little-endian, current)
+//! ## File format v3 (little-endian, current)
 //!
 //! | field     | type                 | notes                          |
 //! |-----------|----------------------|--------------------------------|
 //! | magic     | `b"LPSG"`            |                                |
-//! | version   | `u32` = 2            |                                |
+//! | version   | `u32` = 3            |                                |
 //! | base      | `u64`                | first covered row id           |
 //! | rows      | `u64`                |                                |
 //! | orders    | `u32`                | must match `store.meta`        |
 //! | k         | `u32`                |                                |
 //! | nm        | `u32`                | moment orders                  |
 //! | two_sided | `u8`                 |                                |
-//! | u panels  | `f32[orders·rows·k]` | per-order, contiguous          |
-//! | v panels  | `f32[orders·rows·k]` | two-sided only                 |
-//! | moments   | `f64[rows·nm]`       | row-major                      |
+//! | enc       | `u8`                 | v3: `PanelQuant` tag (0 f32, 1 f16, 2 bf16, 3 i8) |
+//! | u_scales  | `f32[orders]`        | v3, i8 only: per-order scales  |
+//! | v_scales  | `f32[orders]`        | v3, i8 + two_sided only        |
+//! | u panels  | `enc[orders·rows·k]` | per-order, contiguous, `enc`-sized values |
+//! | v panels  | `enc[orders·rows·k]` | two-sided only                 |
+//! | moments   | `f64[rows·nm]`       | row-major, always f64          |
 //! | zone_len  | `u32`                | v2: = `ZoneMeta::encoded_len`  |
 //! | zone      | `f64[zone_len]`      | v2: `ZoneMeta::to_f64s` layout |
 //! | crc       | `u32`                | CRC32 of everything above      |
@@ -28,6 +31,14 @@
 //! the zone rides under the same whole-file footer CRC as the data it
 //! summarizes. v1 files (no zone section) still load — the recovered
 //! segment recomputes its zone at insertion.
+//!
+//! v3 seals quantized panels **as stored**: the encoding tag rides in
+//! the header (under the footer CRC), the panel section shrinks to
+//! `enc.bytes_per_value()` per value, and recovery adopts the segment
+//! in its sealed encoding — no decode, no re-quantization (re-encoding
+//! would change values and invalidate the sealed zone). The tag is
+//! validated *before* any panel byte is sized: an unknown tag is a
+//! hard error, never an allocation. v1/v2 files are always f32.
 //!
 //! The write protocol makes publication atomic: contents are fully
 //! fsynced *before* the rename, so a published name never points at
@@ -42,16 +53,21 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Context;
 
+use crate::core::quant::{PanelQuant, PanelStore};
 use crate::core::zone::ZoneMeta;
 use crate::projection::sketcher::ColumnarBlock;
 
-use super::durable::{crc32, put_f32s, put_f64s, put_u32, put_u64, ByteReader, DurableFs, MetaShape};
+use super::durable::{
+    crc32, put_f32s, put_f64s, put_i8s, put_u16s, put_u32, put_u64, ByteReader, DurableFs,
+    MetaShape,
+};
 
 pub(crate) const SEG_MAGIC: &[u8; 4] = b"LPSG";
-pub(crate) const SEG_VERSION: u32 = 2;
+pub(crate) const SEG_VERSION: u32 = 3;
 
-/// Fixed bytes before the panels: magic + version + base + rows +
-/// orders + k + nm + two_sided.
+/// Fixed bytes before the panels in v1/v2: magic + version + base +
+/// rows + orders + k + nm + two_sided. v3 appends the encoding tag
+/// byte (and, for i8, the per-order scales) after this prefix.
 const SEG_HEADER_BYTES: usize = 4 + 4 + 8 + 8 + 4 + 4 + 4 + 1;
 
 /// `seg-<base:016x>-<rows:016x>.lpsk` for the segment at `base`.
@@ -69,6 +85,15 @@ pub(crate) fn parse_name(name: &str) -> Option<(u64, u64)> {
     Some((u64::from_str_radix(b, 16).ok()?, u64::from_str_radix(r, 16).ok()?))
 }
 
+/// Append one panel store in its held encoding.
+fn put_store(out: &mut Vec<u8>, s: &PanelStore) {
+    match s {
+        PanelStore::F32(xs) => put_f32s(out, xs),
+        PanelStore::F16(xs) | PanelStore::Bf16(xs) => put_u16s(out, xs),
+        PanelStore::I8 { data, .. } => put_i8s(out, data),
+    }
+}
+
 fn encode_segment(base: u64, block: &ColumnarBlock, zone: &ZoneMeta) -> Vec<u8> {
     // pallas-lint: allow(len-before-alloc) -- sized from the in-memory block being encoded, not a decoded count
     let mut out = Vec::with_capacity(SEG_HEADER_BYTES + block.bytes() + 4);
@@ -80,15 +105,19 @@ fn encode_segment(base: u64, block: &ColumnarBlock, zone: &ZoneMeta) -> Vec<u8> 
     put_u32(&mut out, block.k() as u32);
     put_u32(&mut out, block.moment_orders() as u32);
     out.push(block.is_two_sided() as u8);
-    for m in 1..=block.orders() {
-        put_f32s(&mut out, block.u_order(m));
-    }
-    if block.is_two_sided() {
-        for m in 1..=block.orders() {
-            if let Some(panel) = block.v_order(m) {
-                put_f32s(&mut out, panel);
-            }
+    // v3: encoding tag, then per-order i8 scales (u side, then v side),
+    // then the panels in their stored encoding — all under the footer
+    // CRC, so a flipped tag can never silently mis-slice the panels.
+    out.push(block.encoding().tag());
+    if let Some(scales) = block.u_store().i8_scales() {
+        put_f32s(&mut out, scales);
+        if let Some(scales) = block.v_store().and_then(|v| v.i8_scales()) {
+            put_f32s(&mut out, scales);
         }
+    }
+    put_store(&mut out, block.u_store());
+    if let Some(vs) = block.v_store() {
+        put_store(&mut out, vs);
     }
     put_f64s(&mut out, block.moments_all());
     // v2 zone section, under the same footer CRC as the panels.
@@ -128,8 +157,9 @@ pub(crate) fn write_segment(
 /// any panel allocation. Errors, never panics — a published file that
 /// fails here is corruption, not a tolerated tear (see module docs).
 ///
-/// v2 files return their sealed zone summary; v1 files (sealed before
-/// zones existed) return `None` and the caller recomputes.
+/// v2+ files return their sealed zone summary; v1 files (sealed before
+/// zones existed) return `None` and the caller recomputes. v3 files
+/// return the block in its sealed panel encoding (v1/v2 are f32).
 pub(crate) fn read_segment(
     fs: &dyn DurableFs,
     path: &Path,
@@ -164,12 +194,38 @@ pub(crate) fn read_segment(
     anyhow::ensure!(rows > 0 && rows <= super::wal::MAX_BATCH_ROWS, "implausible segment of {rows} rows");
     anyhow::ensure!(base.checked_add(rows).is_some(), "segment id range overflows");
     let rows = rows as usize;
-    // Exact byte accounting before any allocation — v2 bodies carry
-    // the fixed-size zone section after the row data.
+    let sides = if two_sided { 2usize } else { 1 };
+    // v3: the encoding tag decides bytes-per-value for the rest of the
+    // body, so it is validated before any panel byte is sized; the i8
+    // scales follow it (u side, then v side). v1/v2 are always f32.
+    let (enc, mut u_scales, mut v_scales) = if version >= 3 {
+        let tag = r.u8()?;
+        let enc = PanelQuant::from_tag(tag)
+            .ok_or_else(|| anyhow::anyhow!("unknown panel-encoding tag {tag}"))?;
+        let (us, vs) = if enc == PanelQuant::I8 {
+            let u = r.f32s(orders as usize)?;
+            let v = if two_sided { Some(r.f32s(orders as usize)?) } else { None };
+            anyhow::ensure!(
+                u.iter().chain(v.iter().flatten()).all(|x| x.is_finite() && *x >= 0.0),
+                "non-finite or negative i8 scale"
+            );
+            (Some(u), v)
+        } else {
+            (None, None)
+        };
+        (enc, us, vs)
+    } else {
+        (PanelQuant::None, None, None)
+    };
+    // Exact byte accounting before any allocation — v2+ bodies carry
+    // the fixed-size zone section after the row data, and v3 panels
+    // occupy `enc.bytes_per_value()` per value.
     let zone_words =
         ZoneMeta::encoded_len(nm as usize, orders as usize, two_sided);
+    let row_data_bytes = (orders as usize * k as usize * enc.bytes_per_value()) * sides
+        + nm as usize * 8;
     let expect = rows
-        .checked_mul(shape.row_data_bytes())
+        .checked_mul(row_data_bytes)
         .and_then(|b| b.checked_add(if version >= 2 { 4 + 8 * zone_words } else { 0 }))
         .ok_or_else(|| anyhow::anyhow!("segment byte size overflows"))?;
     anyhow::ensure!(
@@ -177,8 +233,9 @@ pub(crate) fn read_segment(
         "segment body length does not match its declared shape"
     );
     let (orders, k, nm) = (orders as usize, k as usize, nm as usize);
-    let u = r.f32s(orders * rows * k)?;
-    let v = if two_sided { Some(r.f32s(orders * rows * k)?) } else { None };
+    let vals = orders * rows * k;
+    let u = read_store(&mut r, enc, vals, u_scales.take())?;
+    let v = if two_sided { Some(read_store(&mut r, enc, vals, v_scales.take())?) } else { None };
     let moments = r.f64s(rows * nm)?;
     let zone = if version >= 2 {
         let zone_len = r.u32()? as usize;
@@ -191,7 +248,26 @@ pub(crate) fn read_segment(
     } else {
         None
     };
-    Ok((base, ColumnarBlock::from_parts(orders, k, nm, rows, u, v, moments), zone))
+    Ok((base, ColumnarBlock::from_stores(orders, k, nm, rows, u, v, moments), zone))
+}
+
+/// Read one panel store of `n` values in encoding `enc`. `scales` is
+/// `Some` exactly when `enc` is i8 (read from the v3 header).
+fn read_store(
+    r: &mut ByteReader<'_>,
+    enc: PanelQuant,
+    n: usize,
+    scales: Option<Vec<f32>>,
+) -> anyhow::Result<PanelStore> {
+    Ok(match enc {
+        PanelQuant::None => PanelStore::F32(r.f32s(n)?),
+        PanelQuant::F16 => PanelStore::F16(r.u16s(n)?),
+        PanelQuant::Bf16 => PanelStore::Bf16(r.u16s(n)?),
+        PanelQuant::I8 => PanelStore::I8 {
+            data: r.i8s(n)?,
+            scales: scales.ok_or_else(|| anyhow::anyhow!("i8 segment without scales"))?,
+        },
+    })
 }
 
 #[cfg(test)]
@@ -303,6 +379,87 @@ mod tests {
     }
 
     #[test]
+    fn quantized_seal_and_read_back_bitwise() {
+        // Quantized segments seal in their stored encoding: the file
+        // shrinks with bytes-per-value, and the read-back block — data,
+        // scales, views, zone — is bitwise identical.
+        for two_sided in [false, true] {
+            let s = shape(two_sided);
+            let dir = tmp_dir(&format!("quant_roundtrip_{two_sided}"));
+            let f32_block = block_for(&s, 5);
+            let f32_len = {
+                let zone = ZoneMeta::from_block(&f32_block);
+                let path = write_segment(&RealFs, &dir, 100, &f32_block, &zone).unwrap();
+                std::fs::metadata(&path).unwrap().len()
+            };
+            for q in [PanelQuant::F16, PanelQuant::Bf16, PanelQuant::I8] {
+                let block = f32_block.encoded_as(q);
+                let zone = ZoneMeta::from_block(&block);
+                let path = write_segment(&RealFs, &dir, 200, &block, &zone).unwrap();
+                assert!(
+                    std::fs::metadata(&path).unwrap().len() < f32_len,
+                    "{q:?} segment must be smaller than the f32 seal"
+                );
+                let (base, got, got_zone) = read_segment(&RealFs, &path, &s).unwrap();
+                assert_eq!(base, 200);
+                assert_eq!(got.encoding(), q);
+                assert_eq!(got, block, "sealed block must read back bitwise");
+                assert_eq!(got_zone, Some(zone), "zone must survive the seal bitwise");
+                std::fs::remove_file(&path).ok();
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn quantized_segment_every_byte_flip_is_caught() {
+        // The i8 layout has the most header structure (tag + scales);
+        // every flipped byte — tag, scale, panel, moment, zone, CRC —
+        // must be detected, and truncations must error.
+        let s = shape(true);
+        let dir = tmp_dir("quant_flips");
+        let block = block_for(&s, 2).encoded_as(PanelQuant::I8);
+        let zone = ZoneMeta::from_block(&block);
+        let path = write_segment(&RealFs, &dir, 10, &block, &zone).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for off in (0..bytes.len()).step_by(3) {
+            let mut b = bytes.clone();
+            b[off] ^= 0x10;
+            std::fs::write(&path, &b).unwrap();
+            assert!(
+                read_segment(&RealFs, &path, &s).is_err(),
+                "flip at offset {off} must be detected"
+            );
+        }
+        for cut in [0, SEG_HEADER_BYTES, SEG_HEADER_BYTES + 1, bytes.len() - 5, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(read_segment(&RealFs, &path, &s).is_err(), "cut at {cut} must error");
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_segment(&RealFs, &path, &s).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_encoding_tag_is_rejected_before_allocation() {
+        // A CRC-valid file with an out-of-range tag must fail the tag
+        // check by name — before the tag could drive any panel sizing.
+        let s = shape(false);
+        let dir = tmp_dir("bad_tag");
+        let block = block_for(&s, 2);
+        let path = write_segment(&RealFs, &dir, 0, &block, &ZoneMeta::from_block(&block)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[SEG_HEADER_BYTES] = 200; // the v3 enc byte follows the v1/v2 prefix
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_segment(&RealFs, &path, &s).unwrap_err().to_string();
+        assert!(err.contains("unknown panel-encoding tag"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn shape_mismatch_is_rejected() {
         let s = shape(false);
         let dir = tmp_dir("shape");
@@ -347,6 +504,42 @@ mod tests {
     }
 
     #[test]
+    fn v2_segments_load_as_f32_with_their_zone() {
+        // Hand-rolled v2 file (pre-encoding format): no enc byte, f32
+        // panels, sealed zone. Must keep loading, zone adopted.
+        let s = shape(false);
+        let dir = tmp_dir("v2_compat");
+        let block = block_for(&s, 4);
+        let zone = ZoneMeta::from_block(&block);
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(SEG_MAGIC);
+        put_u32(&mut out, 2); // v2
+        put_u64(&mut out, 50);
+        put_u64(&mut out, block.rows() as u64);
+        put_u32(&mut out, block.orders() as u32);
+        put_u32(&mut out, block.k() as u32);
+        put_u32(&mut out, block.moment_orders() as u32);
+        out.push(0u8);
+        for m in 1..=block.orders() {
+            put_f32s(&mut out, block.u_order(m));
+        }
+        put_f64s(&mut out, block.moments_all());
+        let zvals = zone.to_f64s(false);
+        put_u32(&mut out, zvals.len() as u32);
+        put_f64s(&mut out, &zvals);
+        let crc = crc32(&out);
+        put_u32(&mut out, crc);
+        let path = dir.join(seg_file_name(50, block.rows() as u64));
+        std::fs::write(&path, &out).unwrap();
+        let (base, got, got_zone) = read_segment(&RealFs, &path, &s).unwrap();
+        assert_eq!(base, 50);
+        assert_eq!(got.encoding(), PanelQuant::None);
+        assert_eq!(got.moments_all(), block.moments_all());
+        assert_eq!(got_zone, Some(zone), "v2 zones still adopt verbatim");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn inflated_zone_count_is_rejected_before_allocation() {
         // A CRC-valid file whose zone_len disagrees with the shape must
         // fail the length pin (the byte-accounting and length checks
@@ -356,7 +549,9 @@ mod tests {
         let block = block_for(&s, 2);
         let path = write_segment(&RealFs, &dir, 0, &block, &ZoneMeta::from_block(&block)).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
-        let zone_len_at = SEG_HEADER_BYTES + block.rows() * s.row_data_bytes();
+        // v3: the f32 enc byte sits between the fixed prefix and the
+        // panels.
+        let zone_len_at = SEG_HEADER_BYTES + 1 + block.rows() * s.row_data_bytes();
         bytes[zone_len_at..zone_len_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         let body_len = bytes.len() - 4;
         let crc = crc32(&bytes[..body_len]);

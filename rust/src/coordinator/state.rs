@@ -64,7 +64,8 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::core::arena::{ArenaBuilder, SketchArena};
 use crate::core::decompose::Decomposition;
-use crate::core::estimator::{dot, SketchPanels, ZoneExtent};
+use crate::core::estimator::{SketchPanels, ZoneExtent};
+use crate::core::quant::{dot_views, PanelQuant, RowView};
 use crate::core::zone::ZoneMeta;
 use crate::projection::sketcher::{ColumnarBlock, RowSketch};
 use crate::util::sync::{MutexExt, RwLockExt};
@@ -111,6 +112,12 @@ pub struct SketchStore {
     /// Serializes compaction passes, so a planned merge run can never
     /// be mutated by a rival compactor between plan and swap.
     compaction: Mutex<()>,
+    /// Panel encoding applied to blocks landed via
+    /// [`SketchStore::insert_block_shared`] (the `panel-quant` config
+    /// knob, stored as a [`PanelQuant`] tag). Quantization happens
+    /// exactly once, at this store boundary; prezoned insertions
+    /// (recovery, rebalance) adopt their blocks verbatim.
+    panel_quant: std::sync::atomic::AtomicU8,
 }
 
 /// Where one side of a pair query lives: a map row (borrowed) or a
@@ -151,14 +158,14 @@ fn score_sides(dec: &Decomposition, x: &Side<'_>, y: &Side<'_>) -> f64 {
     let mut est = x_norm + y_norm;
     for m in 1..p {
         let u = match x {
-            Side::Map(rs) => rs.uside.u(m),
-            Side::Seg(block, r) => block.u_row(m, *r),
+            Side::Map(rs) => RowView::F32(rs.uside.u(m)),
+            Side::Seg(block, r) => block.u_view(m, *r),
         };
         let v = match y {
-            Side::Map(rs) => rs.vside().u(p - m),
-            Side::Seg(block, r) => block.v_row(p - m, *r),
+            Side::Map(rs) => RowView::F32(rs.vside().u(p - m)),
+            Side::Seg(block, r) => block.v_view(p - m, *r),
         };
-        est += dec.coeff(m) * dot(u, v) / kf;
+        est += dec.coeff(m) * dot_views(u, v) / kf;
     }
     est
 }
@@ -463,14 +470,14 @@ impl SketchPanels for SegmentPanels {
         self.p
     }
 
-    fn u_row(&self, m: usize, i: usize) -> &[f32] {
+    fn u_row(&self, m: usize, i: usize) -> RowView<'_> {
         let (block, r) = self.locate(i);
-        block.u_row(m, r)
+        block.u_view(m, r)
     }
 
-    fn v_row(&self, m: usize, i: usize) -> &[f32] {
+    fn v_row(&self, m: usize, i: usize) -> RowView<'_> {
         let (block, r) = self.locate(i);
-        block.v_row(m, r)
+        block.v_view(m, r)
     }
 
     fn norm_p(&self, i: usize) -> f64 {
@@ -499,7 +506,22 @@ impl SketchStore {
             epoch: AtomicU64::new(0),
             cached: RwLock::new(None),
             compaction: Mutex::new(()),
+            panel_quant: std::sync::atomic::AtomicU8::new(PanelQuant::None.tag()),
         }
+    }
+
+    /// Panel encoding newly ingested blocks are stored under.
+    pub fn panel_quant(&self) -> PanelQuant {
+        PanelQuant::from_tag(self.panel_quant.load(Ordering::Relaxed))
+            .unwrap_or(PanelQuant::None)
+    }
+
+    /// Set the panel encoding for future block ingest (existing
+    /// segments are never rewritten; mixed-encoding directories are
+    /// fine — compaction merges homogeneous runs bytewise and decodes
+    /// mixed ones).
+    pub fn set_panel_quant(&self, q: PanelQuant) {
+        self.panel_quant.store(q.tag(), Ordering::Relaxed);
     }
 
     pub fn shard_count(&self) -> usize {
@@ -544,6 +566,51 @@ impl SketchStore {
         self.epoch.fetch_add(1, Ordering::Release);
     }
 
+    /// Insert a batch of per-row sketches with **one** epoch bump and
+    /// one shard-lock acquisition per touched shard — the per-row
+    /// ingest path used to bump the epoch once per row, invalidating
+    /// the snapshot cache `rows` times per WAL batch and forcing every
+    /// interleaved point read to re-capture. All touched shard locks
+    /// are held together across the bump (ascending index, the same
+    /// order [`SketchStore::snapshot`] acquires them), so readers never
+    /// observe a torn batch: a capture sees either none of it or all of
+    /// it, with an epoch to match.
+    pub fn insert_rows(&self, batch: Vec<(u64, RowSketch)>) {
+        if batch.is_empty() {
+            return;
+        }
+        let mut by_shard: Vec<Vec<(u64, Arc<RowSketch>)>> =
+            (0..self.shards.len()).map(|_| Vec::new()).collect();
+        for (id, rs) in batch {
+            debug_assert!(
+                !self.segment_covers(id),
+                "map insert at id {id} collides with a columnar segment"
+            );
+            by_shard[self.shard_of(id)].push((id, Arc::new(rs)));
+        }
+        // Same non-blocking cache purge as `insert` (cache → shards
+        // lock order).
+        if let Ok(mut cache) = self.cached.try_write() {
+            *cache = None;
+        }
+        // pallas-lint: allow(guard-across-blocking) -- touched shard guards are held together, ascending, exactly like snapshot's capture; the bump lands inside the joint critical section
+        let mut guards: Vec<_> = self
+            .shards
+            .iter()
+            .zip(&by_shard)
+            .map(|(shard, rows)| (!rows.is_empty()).then(|| shard.write_recover()))
+            .collect();
+        for (guard, rows) in guards.iter_mut().zip(by_shard) {
+            if let Some(guard) = guard {
+                let map = Arc::make_mut(guard);
+                for (id, rs) in rows {
+                    map.insert(id, rs);
+                }
+            }
+        }
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+
     /// Whether some columnar segment covers `id`.
     fn segment_covers(&self, id: u64) -> bool {
         seg_side(&self.segments.read_recover(), id).is_some()
@@ -558,12 +625,23 @@ impl SketchStore {
 
     /// Land an `Arc`-held columnar block — the zero-copy variant used
     /// by rebalance and snapshot replays, which share panels with the
-    /// source store instead of copying them. The zone summary is
-    /// computed here, off-lock, before the segment is published.
+    /// source store instead of copying them. Under a non-`None`
+    /// [`SketchStore::panel_quant`] setting, f32 blocks are encoded
+    /// here (once, off-lock) before publication; already-encoded blocks
+    /// pass through verbatim, so replays and rebalances never re-lose
+    /// precision. The zone summary is computed from the *stored*
+    /// (possibly encoded) panels — decode is value-exact, so the zone
+    /// bounds exactly what the serving kernels will see.
     pub fn insert_block_shared(&self, base: u64, block: Arc<ColumnarBlock>) {
         if block.rows() == 0 {
             return;
         }
+        let q = self.panel_quant();
+        let block = if q != PanelQuant::None && block.encoding() == PanelQuant::None {
+            Arc::new(block.encoded_as(q))
+        } else {
+            block
+        };
         let zone = Arc::new(ZoneMeta::from_block(&block));
         self.insert_block_prezoned(base, block, zone);
     }
@@ -1202,8 +1280,16 @@ mod tests {
                 assert_eq!(v.id_at(i), snap.ids[i]);
                 assert_eq!(v.pos_of(snap.ids[i]), Some(i));
                 for m in 1..4 {
-                    assert_eq!(v.u_row(m, i), snap.arena.u_row(m, i), "m={m} i={i}");
-                    assert_eq!(v.v_row(m, i), snap.arena.v_row(m, i), "m={m} i={i}");
+                    assert_eq!(
+                        v.u_row(m, i).as_f32(),
+                        Some(snap.arena.u_row(m, i)),
+                        "m={m} i={i}"
+                    );
+                    assert_eq!(
+                        v.v_row(m, i).as_f32(),
+                        Some(snap.arena.v_row(m, i)),
+                        "m={m} i={i}"
+                    );
                 }
                 assert_eq!(v.norm_p(i), snap.arena.norm_p(i));
             }
@@ -1372,5 +1458,94 @@ mod tests {
         store.insert_block_shared(10, Arc::clone(&block));
         let held = store.segments_snapshot();
         assert!(Arc::ptr_eq(&held[0].1, &block));
+    }
+
+    #[test]
+    fn insert_rows_bumps_epoch_once_per_batch() {
+        let store = SketchStore::new(4);
+        let e0 = store.epoch();
+        store.insert_rows((0..10u64).map(|i| (i, sketch_of(i as f32 + 1.0))).collect());
+        assert_eq!(store.epoch(), e0 + 1, "one batch, one epoch bump");
+        assert_eq!(store.len(), 10);
+        for i in 0..10u64 {
+            assert!(store.contains(i));
+        }
+        // Snapshot cache stays hot between batches (the point of
+        // batching: point reads interleaved with block ingest reuse the
+        // cached capture instead of re-walking every shard per row).
+        let a = store.snapshot();
+        let b = store.snapshot();
+        assert!(Arc::ptr_eq(&a, &b), "quiescent captures must share the cached snapshot");
+        store.insert_rows(vec![(100, sketch_of(0.5)), (101, sketch_of(0.25))]);
+        let c = store.snapshot();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(c.epoch(), e0 + 2);
+        assert!(Arc::ptr_eq(&c, &store.snapshot()), "cache hot again after the batch");
+        // Empty batches are complete no-ops.
+        store.insert_rows(Vec::new());
+        assert_eq!(store.epoch(), e0 + 2);
+        // Batched rows read back identically to per-row inserts.
+        let per_row = SketchStore::new(4);
+        for i in 0..10u64 {
+            per_row.insert(i, sketch_of(i as f32 + 1.0));
+        }
+        assert_eq!(per_row.epoch(), 10, "per-row path: one bump per row");
+        for i in 0..10u64 {
+            let (x, y) = (store.get(i).unwrap(), per_row.get(i).unwrap());
+            assert_eq!(x.uside.data, y.uside.data);
+            assert_eq!(x.moments.0, y.moments.0);
+        }
+    }
+
+    #[test]
+    fn panel_quant_setting_encodes_at_the_store_boundary() {
+        use crate::core::decompose::Decomposition;
+        use crate::core::estimator;
+        use crate::core::quant::PanelQuant;
+        use crate::core::zone::ZoneMeta;
+        let block = block_of(5);
+        let f32_bytes = block.bytes();
+
+        let store = SketchStore::new(2);
+        store.set_panel_quant(PanelQuant::I8);
+        assert_eq!(store.panel_quant(), PanelQuant::I8);
+        store.insert_block_columnar(10, block.clone());
+        let segs = store.segments_snapshot_zoned();
+        assert_eq!(segs[0].1.encoding(), PanelQuant::I8);
+        assert!(segs[0].1.bytes() < f32_bytes, "quantized segment must shrink");
+        // The zone summarizes the *stored* (encoded) panels, so it
+        // bounds exactly what serving decodes.
+        assert_eq!(*segs[0].2, ZoneMeta::from_block(&segs[0].1));
+        // Row materialization decodes the stored values exactly…
+        let rs = store.get(12).unwrap();
+        for m in 1..4 {
+            for j in 0..4 {
+                assert_eq!(rs.uside.u(m)[j], segs[0].1.u_view(m, 2).get(j));
+            }
+        }
+        // …so panel-served pair estimates are bitwise equal to the
+        // per-row reference estimator on materialized rows.
+        let dec = Decomposition::new(4).unwrap();
+        let want = {
+            let (ra, rb) = (store.get(11).unwrap(), store.get(13).unwrap());
+            estimator::estimate(&dec, &ra, &rb)
+        };
+        assert_eq!(store.estimate_pair_plain(&dec, 11, 13).unwrap(), want);
+
+        // Prezoned insertion (recovery, rebalance) adopts blocks
+        // verbatim — never re-encodes, whatever the setting says.
+        let store2 = SketchStore::new(2);
+        store2.set_panel_quant(PanelQuant::F16);
+        let zone = Arc::new(ZoneMeta::from_block(&block));
+        store2.insert_block_prezoned(10, Arc::new(block.clone()), zone);
+        assert_eq!(store2.segments_snapshot()[0].1.encoding(), PanelQuant::None);
+
+        // Already-encoded blocks pass through insert_block_shared
+        // untouched (no double quantization, panels still shared).
+        let store3 = SketchStore::new(2);
+        store3.set_panel_quant(PanelQuant::F16);
+        let pre = Arc::new(block.encoded_as(PanelQuant::I8));
+        store3.insert_block_shared(10, Arc::clone(&pre));
+        assert!(Arc::ptr_eq(&store3.segments_snapshot()[0].1, &pre));
     }
 }

@@ -147,6 +147,14 @@ pub(crate) fn encode_batch(
             && block.is_two_sided() == shape.two_sided,
         "block at base {base} does not match the data dir shape"
     );
+    // WAL batch records are always plain f32: the log sits *before* the
+    // store boundary where `panel-quant` applies, so replayed batches
+    // re-quantize under whatever setting the recovering store has.
+    anyhow::ensure!(
+        block.encoding() == crate::core::quant::PanelQuant::None,
+        "WAL batch at base {base} must be f32-encoded, got {}",
+        block.encoding().name()
+    );
     let rows = block.rows();
     anyhow::ensure!(rows > 0 && (rows as u64) <= MAX_BATCH_ROWS, "implausible batch of {rows} rows");
     anyhow::ensure!(base.checked_add(rows as u64).is_some(), "batch id range overflows");

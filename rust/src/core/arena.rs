@@ -199,8 +199,10 @@ impl ArenaBuilder {
     /// Land a whole columnar block at arena positions
     /// `[i0, i0 + block.rows())` — the ingest fast path: the block's
     /// order panels are already arena-shaped, so each (order, side) is
-    /// a single `memcpy` and only the marginal p-norms are gathered
-    /// per row.
+    /// a single bulk copy and only the marginal p-norms are gathered
+    /// per row. Quantized blocks decode panel-wise into the arena's f32
+    /// buffers — decode is value-exact, so arena-served estimates equal
+    /// view-served ones bitwise.
     pub fn set_block(&mut self, i0: usize, block: &ColumnarBlock) {
         let rows = block.rows();
         let (n, k, orders) = (self.n, self.k, self.orders);
@@ -215,9 +217,9 @@ impl ArenaBuilder {
         assert!(block.moment_orders() >= self.p, "block moments too short for p");
         for m in 1..=orders {
             let off = ((m - 1) * n + i0) * k;
-            self.u[off..off + rows * k].copy_from_slice(block.u_order(m));
+            block.decode_u_order_into(m, &mut self.u[off..off + rows * k]);
             if let Some(vbuf) = self.v.as_mut() {
-                vbuf[off..off + rows * k].copy_from_slice(block.v_order(m).expect("two-sided"));
+                block.decode_v_order_into(m, &mut vbuf[off..off + rows * k]);
             }
         }
         for r in 0..rows {
@@ -372,6 +374,29 @@ mod tests {
                     assert_eq!(one.v_row(m, r), seq.v_row(m, r), "v m={m} r={r}");
                 }
                 assert_eq!(one.norm_p(r), seq.norm_p(r), "norm r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_block_lands_decoded_values() {
+        // Landing an encoded block fills the arena with exactly the
+        // values the block's views decode to (value-exact decode).
+        use crate::core::quant::PanelQuant;
+        for q in [PanelQuant::F16, PanelQuant::Bf16, PanelQuant::I8] {
+            let (p, k, n) = (4, 8, 5);
+            let block = block_of(Strategy::Alternative, p, k, n).encoded_as(q);
+            let mut b = ArenaBuilder::new(p, k, n, true);
+            b.set_block(0, &block);
+            let arena = b.finish();
+            for r in 0..n {
+                for m in 1..p {
+                    for j in 0..k {
+                        assert_eq!(arena.u_row(m, r)[j], block.u_view(m, r).get(j));
+                        assert_eq!(arena.v_row(m, r)[j], block.v_view(m, r).get(j));
+                    }
+                }
+                assert_eq!(arena.norm_p(r), block.moment(r, p));
             }
         }
     }

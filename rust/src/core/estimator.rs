@@ -46,35 +46,26 @@ use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 
 use super::arena::SketchArena;
 use super::decompose::Decomposition;
+use super::quant::{dot_views, RowView};
 use super::zone::ZoneMeta;
 use crate::projection::sketcher::{RowSketch, SketchSet};
 
-/// f64 dot product of two f32 sketch vectors.
+/// f64 dot product of two f32 sketch vectors, SIMD-dispatched
+/// (`projection::simd`, bitwise-identical on every kernel).
 ///
-/// Four independent accumulators break the sequential-FMA dependency
-/// chain so the compiler can vectorize the f32→f64 convert + FMA loop
-/// (≈2.3× on the estimate hot path — EXPERIMENTS.md §Perf iteration 3).
-/// f64 accumulation is load-bearing: sketch entries are O(√D) and the
-/// combine multiplies by binomial coefficients, so f32 accumulation
-/// loses digits exactly where the distance is a small difference of
-/// large terms.
+/// The reduction-order contract — four independent f64 accumulators
+/// over chunks of 4, a scalar tail, final
+/// `(acc0 + acc2) + (acc1 + acc3) + tail` — is pinned in
+/// [`crate::projection::simd::dot_f32_scalar`]; the four accumulators
+/// both break the sequential dependency chain (≈2.3× on the estimate
+/// hot path — EXPERIMENTS.md §Perf iteration 3) and map one-to-one
+/// onto the 4 f64 lanes of the vector kernels. f64 accumulation is
+/// load-bearing: sketch entries are O(√D) and the combine multiplies
+/// by binomial coefficients, so f32 accumulation loses digits exactly
+/// where the distance is a small difference of large terms.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; 4];
-    let chunks = a.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += (a[i] as f64) * (b[i] as f64);
-        acc[1] += (a[i + 1] as f64) * (b[i + 1] as f64);
-        acc[2] += (a[i + 2] as f64) * (b[i + 2] as f64);
-        acc[3] += (a[i + 3] as f64) * (b[i + 3] as f64);
-    }
-    let mut tail = 0.0f64;
-    for i in chunks * 4..a.len() {
-        tail += (a[i] as f64) * (b[i] as f64);
-    }
-    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+    crate::projection::simd::dot_f32(a, b)
 }
 
 /// Plain estimator from two sketch sets + exact marginal p-norms.
@@ -140,10 +131,15 @@ pub const ARENA_TILE: usize = 64;
 /// transposed copy) and by the store's zero-copy segment view
 /// (`coordinator::state::SegmentPanels`), so batch queries over a
 /// fully-columnar store score segment rows straight from their panels
-/// without paying the `arena_snapshot` copy first. Accessors mirror
-/// `SketchArena`'s; a conforming implementation must return the same
-/// f32 slices / f64 norms the equivalent arena would, which makes every
-/// kernel bitwise-identical across implementations by construction.
+/// without paying the `arena_snapshot` copy first.
+///
+/// Rows come back as [`RowView`]s so quantized segment panels
+/// (`core::quant`) are scored by decoding lanes in registers — no f32
+/// copy is ever materialized. An f32-backed implementation must return
+/// the same values / f64 norms the equivalent arena would; since
+/// quantized decode is value-exact (the decoded f32 *is* the stored
+/// value), every kernel is bitwise-consistent across implementations
+/// holding the same values, whatever their storage width.
 pub trait SketchPanels: Sync {
     /// Number of rows.
     fn n(&self) -> usize;
@@ -152,9 +148,9 @@ pub trait SketchPanels: Sync {
     /// Distance order the sketches were built for.
     fn p(&self) -> usize;
     /// u_m sketch of row `i` (the left/query side of a pair).
-    fn u_row(&self, m: usize, i: usize) -> &[f32];
+    fn u_row(&self, m: usize, i: usize) -> RowView<'_>;
     /// v_m sketch of row `i` (the right/target side of a pair).
-    fn v_row(&self, m: usize, i: usize) -> &[f32];
+    fn v_row(&self, m: usize, i: usize) -> RowView<'_>;
     /// Marginal p-norm Σ x^p of row `i`.
     fn norm_p(&self, i: usize) -> f64;
 }
@@ -172,12 +168,12 @@ impl SketchPanels for SketchArena {
         SketchArena::p(self)
     }
 
-    fn u_row(&self, m: usize, i: usize) -> &[f32] {
-        SketchArena::u_row(self, m, i)
+    fn u_row(&self, m: usize, i: usize) -> RowView<'_> {
+        RowView::F32(SketchArena::u_row(self, m, i))
     }
 
-    fn v_row(&self, m: usize, i: usize) -> &[f32] {
-        SketchArena::v_row(self, m, i)
+    fn v_row(&self, m: usize, i: usize) -> RowView<'_> {
+        RowView::F32(SketchArena::v_row(self, m, i))
     }
 
     fn norm_p(&self, i: usize) -> f64 {
@@ -199,7 +195,7 @@ pub fn estimate_arena<Q: SketchPanels + ?Sized, T: SketchPanels + ?Sized>(
     let kf = q.k() as f64;
     let mut d = q.norm_p(i) + t.norm_p(j);
     for m in 1..p {
-        d += dec.coeff(m) * dot(q.u_row(m, i), t.v_row(p - m, j)) / kf;
+        d += dec.coeff(m) * dot_views(q.u_row(m, i), t.v_row(p - m, j)) / kf;
     }
     d
 }
@@ -251,7 +247,7 @@ fn score_tile<Q: SketchPanels + ?Sized, T: SketchPanels + ?Sized>(
             let urow = q.u_row(m, i0 + r);
             let row = &mut out[r * stride..r * stride + width];
             for (j2, slot) in row.iter_mut().enumerate() {
-                *slot += c * dot(urow, t.v_row(pm, j0 + j2)) / kf;
+                *slot += c * dot_views(urow, t.v_row(pm, j0 + j2)) / kf;
             }
         }
     }
@@ -538,7 +534,7 @@ pub fn top_k_scan_zoned<Q: SketchPanels + ?Sized, T: SketchPanels + ?Sized>(
             let q_u2: Vec<f64> = (1..p)
                 .map(|m| {
                     let u = q.u_row(m, qi);
-                    dot(u, u).sqrt()
+                    dot_views(u, u).sqrt()
                 })
                 .collect();
             order.clear();
@@ -921,6 +917,50 @@ mod tests {
             estimate_condensed_arena(&dec, &arena, 1),
             estimate_condensed_arena(&dec, &arena, 5)
         );
+    }
+
+    #[test]
+    fn arena_kernels_are_bitwise_invariant_under_simd_dispatch() {
+        use crate::projection::simd;
+        let _g = simd::lock_dispatch();
+        let n = ARENA_TILE + 9;
+        for (strategy, p) in [
+            (Strategy::Basic, 4),
+            (Strategy::Alternative, 4),
+            (Strategy::Basic, 6),
+            (Strategy::Alternative, 6),
+        ] {
+            // k = 10 straddles the 4-wide accumulator chunks (2 chunks
+            // + a 2-lane tail) — the widths where a broken tail or
+            // reduction order would show.
+            for k in [8usize, 10] {
+                let rows = sketch_batch(strategy, p, k, n, 17);
+                let dec = Decomposition::new(p).unwrap();
+                let tarena = SketchArena::from_rows(p, k, &rows);
+                let qarena = SketchArena::from_rows(p, k, &rows[..5]);
+                simd::force_scalar(false);
+                let fast_block = estimate_block_arena(&dec, &qarena, &tarena, 2);
+                let fast_topk = top_k_scan_arena(&dec, &qarena, &tarena, 6, 2);
+                let fast_cond = estimate_condensed_arena(&dec, &tarena, 2);
+                simd::force_scalar(true);
+                let slow_block = estimate_block_arena(&dec, &qarena, &tarena, 2);
+                let slow_topk = top_k_scan_arena(&dec, &qarena, &tarena, 6, 2);
+                let slow_cond = estimate_condensed_arena(&dec, &tarena, 2);
+                for (i, (f, s)) in fast_block.iter().zip(&slow_block).enumerate() {
+                    assert_eq!(f.to_bits(), s.to_bits(), "{strategy:?} p={p} k={k} block {i}");
+                }
+                for (i, (f, s)) in fast_cond.iter().zip(&slow_cond).enumerate() {
+                    assert_eq!(f.to_bits(), s.to_bits(), "{strategy:?} p={p} k={k} cond {i}");
+                }
+                for (qi, (fl, sl)) in fast_topk.iter().zip(&slow_topk).enumerate() {
+                    assert_eq!(fl.len(), sl.len());
+                    for ((fi, fd), (si, sd)) in fl.iter().zip(sl) {
+                        assert_eq!(fi, si, "{strategy:?} p={p} k={k} query {qi}");
+                        assert_eq!(fd.to_bits(), sd.to_bits(), "{strategy:?} p={p} k={k} query {qi}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

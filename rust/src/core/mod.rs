@@ -3,6 +3,7 @@
 
 pub mod arena;
 pub mod cubic;
+pub mod quant;
 pub mod decompose;
 pub mod estimator;
 pub mod marginals;

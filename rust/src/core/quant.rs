@@ -1,0 +1,763 @@
+//! Quantized sketch-panel codec: f16 / bf16 / i8-with-per-order-scale
+//! storage for the columnar u/v panels.
+//!
+//! Sketches are already lossy estimates whose accuracy is set by the
+//! width k, so panel precision beyond ~3 decimal digits buys nothing —
+//! while the top-k scan at millions of rows is memory-bandwidth bound.
+//! Quantized panels move 2–4× fewer bytes per row and decode **lane-wise
+//! in registers** inside the dot kernels (see [`dot_views`] and
+//! `projection::simd`); no f32 copy of a panel is ever materialized on
+//! the scan path. Moments and marginal norms stay f64 end to end — they
+//! enter the estimator exactly.
+//!
+//! ## Encodings and error bounds
+//!
+//! | encoding | storage      | per-value error       | bytes/value |
+//! |----------|--------------|-----------------------|-------------|
+//! | `none`   | f32          | 0 (reference)         | 4           |
+//! | `f16`    | IEEE binary16| rel ≤ 2⁻¹¹ (normal)   | 2           |
+//! | `bf16`   | bfloat16     | rel ≤ 2⁻⁸             | 2           |
+//! | `i8`     | i8 + f32 scale per (order, side) | abs ≤ scale/2 | 1 (+ε) |
+//!
+//! Encoding is round-to-nearest-even everywhere; f16/bf16 saturate to
+//! their largest finite value instead of overflowing to infinity, so a
+//! huge sketch entry degrades an estimate instead of poisoning it.
+//! Decoding is **exact** (f16/bf16 are subsets of f32; i8 decodes as
+//! the single correctly-rounded product `q as f32 * scale`), which
+//! makes every decoded value *the* value: kernels, zone summaries and
+//! round-tripped files all agree bitwise on what a quantized panel
+//! means. [`dot_error_bound`] turns the table above into an analytic
+//! bound on a quantized-vs-f32 inner product — the widened-tolerance
+//! property suites pin quantization error against it.
+
+// Decoded views feed the serving-path kernels.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use crate::core::estimator::dot;
+
+/// Panel storage encoding — the `panel-quant` config knob and the tag
+/// persisted in `.lpsk` v5 / segment-file v3 headers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum PanelQuant {
+    /// Full f32 panels (the bitwise reference).
+    #[default]
+    None,
+    /// IEEE binary16.
+    F16,
+    /// bfloat16 (f32 with the low 16 mantissa bits dropped).
+    Bf16,
+    /// i8 with one f32 scale per (order, side) panel.
+    I8,
+}
+
+impl PanelQuant {
+    /// Wire tag (persisted; stable across versions).
+    pub fn tag(self) -> u8 {
+        match self {
+            PanelQuant::None => 0,
+            PanelQuant::F16 => 1,
+            PanelQuant::Bf16 => 2,
+            PanelQuant::I8 => 3,
+        }
+    }
+
+    /// Inverse of [`PanelQuant::tag`]; `None` for unknown tags (callers
+    /// must reject the record *before* sizing any buffer from it).
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        match tag {
+            0 => Some(PanelQuant::None),
+            1 => Some(PanelQuant::F16),
+            2 => Some(PanelQuant::Bf16),
+            3 => Some(PanelQuant::I8),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PanelQuant::None => "none",
+            PanelQuant::F16 => "f16",
+            PanelQuant::Bf16 => "bf16",
+            PanelQuant::I8 => "i8",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "none" | "f32" | "off" => Ok(PanelQuant::None),
+            "f16" | "half" => Ok(PanelQuant::F16),
+            "bf16" => Ok(PanelQuant::Bf16),
+            "i8" | "int8" => Ok(PanelQuant::I8),
+            _ => anyhow::bail!("unknown panel-quant {s:?} (want none|f16|bf16|i8)"),
+        }
+    }
+
+    /// Storage bytes per panel value (i8 scales are accounted
+    /// separately — one f32 per order per side).
+    pub fn bytes_per_value(self) -> usize {
+        match self {
+            PanelQuant::None => 4,
+            PanelQuant::F16 | PanelQuant::Bf16 => 2,
+            PanelQuant::I8 => 1,
+        }
+    }
+
+    /// Relative error bound of one encoded value (f16/bf16 in their
+    /// normal range; 0 for f32, `None` for i8 whose error is absolute —
+    /// see [`dot_error_bound`]).
+    pub fn rel_err(self) -> Option<f64> {
+        match self {
+            PanelQuant::None => Some(0.0),
+            PanelQuant::F16 => Some(1.0 / 2048.0),  // 2^-11
+            PanelQuant::Bf16 => Some(1.0 / 256.0),  // 2^-8
+            PanelQuant::I8 => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar conversion primitives (round-to-nearest-even, saturating)
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even; finite overflow
+/// saturates to ±65504 (largest finite half) instead of ±inf.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let abs = b & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // Inf / NaN keep their class (NaN payload folded into one bit).
+        return sign | 0x7c00 | if abs > 0x7f80_0000 { 0x0200 } else { 0 };
+    }
+    let exp = (abs >> 23) as i32 - 127;
+    if exp >= 16 {
+        return sign | 0x7bff; // saturate: 65504.0
+    }
+    if exp >= -14 {
+        // Normal half: RTNE on the 13 dropped mantissa bits.
+        let man = abs & 0x007f_ffff;
+        let base = (((exp + 15) as u32) << 10) | (man >> 13);
+        let rem = man & 0x1fff;
+        let round = (rem > 0x1000 || (rem == 0x1000 && base & 1 == 1)) as u32;
+        let out = base + round;
+        // A carry at the top exponent would round past 65504 into inf.
+        return sign | if out >= 0x7c00 { 0x7bff } else { out as u16 };
+    }
+    if exp >= -25 {
+        // Subnormal half: implicit bit joins the mantissa, then a
+        // rounding shift places it at 2^-24 granularity.
+        let man = (abs & 0x007f_ffff) | 0x0080_0000;
+        let shift = (-exp - 1) as u32; // 14..=24
+        let base = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round = (rem > halfway || (rem == halfway && base & 1 == 1)) as u32;
+        // A full carry promotes to the smallest normal — correct RTNE.
+        return sign | (base + round) as u16;
+    }
+    sign // underflow to ±0
+}
+
+/// IEEE binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal half = man·2⁻²⁴: normalize into an f32.
+            let l = 31 - man.leading_zeros(); // top set bit, 0..=9
+            sign | ((l + 103) << 23) | ((man << (23 - l)) & 0x007f_ffff)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16 bits, round-to-nearest-even; finite overflow
+/// saturates to the largest finite bf16.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    if x.is_nan() {
+        return ((b >> 16) as u16) | 0x0040; // quiet, sign preserved
+    }
+    let base = b >> 16;
+    let rem = b & 0xffff;
+    let round = (rem > 0x8000 || (rem == 0x8000 && base & 1 == 1)) as u32;
+    let out = base + round;
+    if out & 0x7fff == 0x7f80 {
+        // Finite input rounded into inf: saturate.
+        return (out as u16 & 0x8000) | 0x7f7f;
+    }
+    out as u16
+}
+
+/// bfloat16 bits → f32 (exact).
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// i8 quantizer for one panel: symmetric, scale = max|x| / 127 (0.0 for
+/// an all-zero panel). Non-finite entries quantize to 0 — a NaN lane
+/// must not poison the whole panel's scale.
+pub fn i8_scale_for(values: &[f32]) -> f32 {
+    let max = values.iter().filter(|v| v.is_finite()).fold(0.0f32, |m, &v| m.max(v.abs()));
+    if max == 0.0 {
+        0.0
+    } else {
+        max / 127.0
+    }
+}
+
+/// Quantize one value at `scale` (round-to-nearest, clamped to ±127).
+#[inline]
+pub fn i8_encode(x: f32, scale: f32) -> i8 {
+    if scale == 0.0 || !x.is_finite() {
+        return 0;
+    }
+    (x / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Decode one i8 lane — the single correctly-rounded f32 product every
+/// consumer (kernels, zones, round-trips) agrees on.
+#[inline]
+pub fn i8_decode(q: i8, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+// ---------------------------------------------------------------------------
+// Panel storage + row views
+// ---------------------------------------------------------------------------
+
+/// Backing storage of one side's order-major sketch panels. All
+/// variants hold `orders · rows · k` values in the arena layout; `I8`
+/// additionally carries one scale per order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PanelStore {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Bf16(Vec<u16>),
+    I8 {
+        data: Vec<i8>,
+        /// `scales[m-1]` is order m's quantization scale.
+        scales: Vec<f32>,
+    },
+}
+
+impl PanelStore {
+    pub fn encoding(&self) -> PanelQuant {
+        match self {
+            PanelStore::F32(_) => PanelQuant::None,
+            PanelStore::F16(_) => PanelQuant::F16,
+            PanelStore::Bf16(_) => PanelQuant::Bf16,
+            PanelStore::I8 { .. } => PanelQuant::I8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            PanelStore::F32(v) => v.len(),
+            PanelStore::F16(v) | PanelStore::Bf16(v) => v.len(),
+            PanelStore::I8 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage bytes (values + i8 scales).
+    pub fn bytes(&self) -> usize {
+        match self {
+            PanelStore::F32(v) => v.len() * 4,
+            PanelStore::F16(v) | PanelStore::Bf16(v) => v.len() * 2,
+            PanelStore::I8 { data, scales } => data.len() + scales.len() * 4,
+        }
+    }
+
+    /// Encode an f32 panel buffer (`orders` consecutive panels of
+    /// `panel_len` values each) into `q` storage.
+    pub fn encode(values: Vec<f32>, q: PanelQuant, orders: usize, panel_len: usize) -> PanelStore {
+        debug_assert_eq!(values.len(), orders * panel_len);
+        match q {
+            PanelQuant::None => PanelStore::F32(values),
+            PanelQuant::F16 => {
+                PanelStore::F16(values.iter().map(|&x| f32_to_f16_bits(x)).collect())
+            }
+            PanelQuant::Bf16 => {
+                PanelStore::Bf16(values.iter().map(|&x| f32_to_bf16_bits(x)).collect())
+            }
+            PanelQuant::I8 => {
+                let scales: Vec<f32> = (0..orders)
+                    .map(|m| i8_scale_for(&values[m * panel_len..(m + 1) * panel_len]))
+                    .collect();
+                let data = values
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &x)| i8_encode(x, scales[if panel_len == 0 { 0 } else { i / panel_len }]))
+                    .collect();
+                PanelStore::I8 { data, scales }
+            }
+        }
+    }
+
+    /// Row view of `len` values at element offset `off`; `order_idx` is
+    /// the 0-based order (selects the i8 scale).
+    #[inline]
+    pub fn view(&self, order_idx: usize, off: usize, len: usize) -> RowView<'_> {
+        match self {
+            PanelStore::F32(v) => RowView::F32(&v[off..off + len]),
+            PanelStore::F16(v) => RowView::F16(&v[off..off + len]),
+            PanelStore::Bf16(v) => RowView::Bf16(&v[off..off + len]),
+            PanelStore::I8 { data, scales } => {
+                RowView::I8 { q: &data[off..off + len], scale: scales[order_idx] }
+            }
+        }
+    }
+
+    /// Decode `len` values at element offset `off` into `out`
+    /// (`order_idx` selects the i8 scale). F32 storage is a straight
+    /// copy.
+    pub fn decode_into(&self, order_idx: usize, off: usize, out: &mut [f32]) {
+        self.view(order_idx, off, out.len()).decode_into(out);
+    }
+
+    /// Per-order i8 scales (`None` for every other encoding).
+    pub fn i8_scales(&self) -> Option<&[f32]> {
+        match self {
+            PanelStore::I8 { scales, .. } => Some(scales),
+            _ => None,
+        }
+    }
+
+    /// Byte-concatenate same-encoding stores covering consecutive row
+    /// ranges — the compaction fast path. Each part is `(store, rows)`,
+    /// order-major with `k` values per row. Returns `None` unless every
+    /// part shares the first's encoding — and, for i8, its exact
+    /// per-order scales (re-encoding at a merged scale would *change*
+    /// decoded values and invalidate zone summaries). Callers hitting
+    /// `None` decode to f32 and concat there; decode is value-exact, so
+    /// either route yields the same decoded values.
+    pub fn concat_rows(
+        parts: &[(&PanelStore, usize)],
+        orders: usize,
+        k: usize,
+    ) -> Option<PanelStore> {
+        let (first, _) = *parts.first()?;
+        let enc = first.encoding();
+        if parts.iter().any(|(s, _)| s.encoding() != enc) {
+            return None;
+        }
+        let total: usize = parts.iter().map(|&(_, r)| r).sum();
+        fn gather<T: Copy + Default>(
+            parts: &[(&PanelStore, usize)],
+            orders: usize,
+            k: usize,
+            total: usize,
+            slice_of: impl Fn(&PanelStore) -> Option<&[T]>,
+        ) -> Option<Vec<T>> {
+            // pallas-lint: allow(len-before-alloc) -- sized from the in-memory stores being merged, not a decoded count
+            let mut out = vec![T::default(); orders * total * k];
+            for m in 0..orders {
+                let mut r0 = 0usize;
+                for &(part, rows) in parts {
+                    let src = slice_of(part)?;
+                    out.get_mut((m * total + r0) * k..(m * total + r0 + rows) * k)?
+                        .copy_from_slice(src.get(m * rows * k..(m * rows + rows) * k)?);
+                    r0 += rows;
+                }
+            }
+            Some(out)
+        }
+        match first {
+            PanelStore::F32(_) => Some(PanelStore::F32(gather(parts, orders, k, total, |s| {
+                match s {
+                    PanelStore::F32(v) => Some(v.as_slice()),
+                    _ => None,
+                }
+            })?)),
+            PanelStore::F16(_) => Some(PanelStore::F16(gather(parts, orders, k, total, |s| {
+                match s {
+                    PanelStore::F16(v) => Some(v.as_slice()),
+                    _ => None,
+                }
+            })?)),
+            PanelStore::Bf16(_) => Some(PanelStore::Bf16(gather(parts, orders, k, total, |s| {
+                match s {
+                    PanelStore::Bf16(v) => Some(v.as_slice()),
+                    _ => None,
+                }
+            })?)),
+            PanelStore::I8 { scales, .. } => {
+                if parts.iter().any(|(s, _)| s.i8_scales() != Some(scales.as_slice())) {
+                    return None;
+                }
+                Some(PanelStore::I8 {
+                    data: gather(parts, orders, k, total, |s| match s {
+                        PanelStore::I8 { data, .. } => Some(data.as_slice()),
+                        _ => None,
+                    })?,
+                    scales: scales.clone(),
+                })
+            }
+        }
+    }
+}
+
+/// Borrowed view of one sketch row in its storage encoding. Kernels
+/// consume views directly ([`dot_views`]), decoding lane-wise in
+/// registers — a quantized panel is never expanded to f32 in memory on
+/// the scan path.
+#[derive(Clone, Copy, Debug)]
+pub enum RowView<'a> {
+    F32(&'a [f32]),
+    F16(&'a [u16]),
+    Bf16(&'a [u16]),
+    I8 { q: &'a [i8], scale: f32 },
+}
+
+impl<'a> RowView<'a> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            RowView::F32(v) => v.len(),
+            RowView::F16(v) | RowView::Bf16(v) => v.len(),
+            RowView::I8 { q, .. } => q.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode one lane to f32 (exact — see module docs).
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        match self {
+            RowView::F32(v) => v[i],
+            RowView::F16(v) => f16_bits_to_f32(v[i]),
+            RowView::Bf16(v) => bf16_bits_to_f32(v[i]),
+            RowView::I8 { q, scale } => i8_decode(q[i], *scale),
+        }
+    }
+
+    /// The f32 slice behind an unquantized view.
+    pub fn as_f32(&self) -> Option<&'a [f32]> {
+        match self {
+            RowView::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn decode_into(&self, out: &mut [f32]) {
+        match self {
+            RowView::F32(v) => out.copy_from_slice(v),
+            _ => {
+                for (i, slot) in out.iter_mut().enumerate() {
+                    *slot = self.get(i);
+                }
+            }
+        }
+    }
+
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len()];
+        self.decode_into(&mut out);
+        out
+    }
+}
+
+/// f64 dot product of two row views — the quantized counterpart of
+/// [`crate::core::estimator::dot`], with **the identical accumulation
+/// contract**: four independent f64 accumulators over chunks of 4,
+/// scalar tail, final reduction `(acc0 + acc2) + (acc1 + acc3) + tail`.
+/// Lanes are decoded to f32 in registers, widened to f64, multiplied
+/// and added in exactly that order, so:
+///
+/// * two `F32` views reproduce `dot` bitwise (it *is* `dot`, routed
+///   through the same SIMD dispatch), and
+/// * a quantized view differs from its f32 original only by the
+///   encoding error of the stored lanes — bounded analytically by
+///   [`dot_error_bound`] — never by accumulation-order drift.
+#[inline]
+pub fn dot_views(a: RowView<'_>, b: RowView<'_>) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    match (a, b) {
+        (RowView::F32(x), RowView::F32(y)) => dot(x, y),
+        (RowView::F16(x), RowView::F16(y)) => crate::projection::simd::dot_f16_f16(x, y),
+        (RowView::F32(x), RowView::F16(y)) => crate::projection::simd::dot_f32_f16(x, y),
+        // IEEE multiplication commutes bitwise, and the accumulation
+        // contract is symmetric in the operands — swapping sides is
+        // exact.
+        (RowView::F16(x), RowView::F32(y)) => crate::projection::simd::dot_f32_f16(y, x),
+        _ => dot_views_generic(a, b),
+    }
+}
+
+/// Portable any-encoding dot: per-lane decode via [`RowView::get`],
+/// same 4-accumulator contract. The reference the SIMD f16 paths must
+/// match bitwise (their decodes are exact, so equal inputs ⇒ equal
+/// roundings).
+pub fn dot_views_generic(a: RowView<'_>, b: RowView<'_>) -> f64 {
+    let n = a.len();
+    debug_assert_eq!(n, b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += (a.get(i) as f64) * (b.get(i) as f64);
+        acc[1] += (a.get(i + 1) as f64) * (b.get(i + 1) as f64);
+        acc[2] += (a.get(i + 2) as f64) * (b.get(i + 2) as f64);
+        acc[3] += (a.get(i + 3) as f64) * (b.get(i + 3) as f64);
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..n {
+        tail += (a.get(i) as f64) * (b.get(i) as f64);
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Analytic bound on `|⟨ũ, ṽ⟩ − ⟨u, v⟩|` where ũ/ṽ are `u`/`v` encoded
+/// at `(qu, su)` / `(qv, sv)` (`s*` = the i8 scale, ignored otherwise).
+///
+/// With per-value errors `|δu_i| ≤ eu·|u_i| + au` and
+/// `|δv_i| ≤ ev·|v_i| + av` (relative for f16/bf16, absolute for i8):
+///
+/// ```text
+/// |Σ δ| ≤ Σ (|u_i||δv_i| + |v_i||δu_i| + |δu_i||δv_i|)
+/// ```
+///
+/// expanded term-by-term below. A small headroom factor absorbs the
+/// f64 rounding of the bound computation itself; the property suites
+/// assert observed error ≤ this bound.
+pub fn dot_error_bound(
+    u: &[f32],
+    v: &[f32],
+    qu: PanelQuant,
+    su: f32,
+    qv: PanelQuant,
+    sv: f32,
+) -> f64 {
+    let (eu, au) = per_value_err(qu, su);
+    let (ev, av) = per_value_err(qv, sv);
+    let mut bound = 0.0f64;
+    for (&x, &y) in u.iter().zip(v) {
+        let (ax, ay) = (x.abs() as f64, y.abs() as f64);
+        let du = eu * ax + au;
+        let dv = ev * ay + av;
+        bound += ax * dv + ay * du + du * dv;
+    }
+    // Headroom: the bound itself rounds in f64, and i8 decode rounds
+    // once per lane (≤ 2⁻²⁴ relative) on top of the quantization step.
+    bound * 1.001 + 1e-12
+}
+
+/// (relative, absolute) per-value error of one encoding. f16 values
+/// below the normal range (|x| < 2⁻¹⁴) incur an absolute subnormal
+/// quantum instead of the relative bound.
+fn per_value_err(q: PanelQuant, scale: f32) -> (f64, f64) {
+    match q {
+        PanelQuant::None => (0.0, 0.0),
+        PanelQuant::F16 => (1.0 / 2048.0, 2.0f64.powi(-25)),
+        PanelQuant::Bf16 => (1.0 / 256.0, 0.0),
+        PanelQuant::I8 => (0.0, scale as f64 * 0.5),
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| ((rng.next_f64() - 0.5) * 2.0 * scale) as f32).collect()
+    }
+
+    #[test]
+    fn f16_roundtrip_is_exact_for_representables() {
+        // Every finite f16 must survive f32→f16→f32 bitwise.
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/nan
+            }
+            let x = f16_bits_to_f32(h);
+            let back = f32_to_f16_bits(x);
+            assert_eq!(back, h, "half bits {h:#06x} -> {x} -> {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_error_is_within_half_ulp() {
+        let mut rng = Rng::new(7);
+        for _ in 0..2000 {
+            let x = ((rng.next_f64() - 0.5) * 100.0) as f32;
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            let err = (y - x).abs() as f64;
+            assert!(
+                err <= (x.abs() as f64) / 2048.0 + 2.0f64.powi(-25),
+                "x={x} y={y} err={err}"
+            );
+        }
+    }
+
+    #[test]
+    fn f16_saturates_instead_of_overflowing() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), 65504.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e9)), -65504.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(65505.0)), 65504.0);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)).is_infinite());
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_rtne_ties() {
+        // 2049 sits exactly between representable halves 2048 and 2050:
+        // round-to-even picks 2048.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(2049.0)), 2048.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(2051.0)), 2052.0);
+    }
+
+    #[test]
+    fn f16_subnormals_roundtrip() {
+        let tiny = 2.0f32.powi(-24); // smallest positive half subnormal
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tiny)), tiny);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tiny * 0.4)), 0.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(2.0f32.powi(-15))), 2.0f32.powi(-15));
+    }
+
+    #[test]
+    fn bf16_roundtrip_and_saturation() {
+        let mut rng = Rng::new(11);
+        for _ in 0..2000 {
+            let x = ((rng.next_f64() - 0.5) * 1e6) as f32;
+            let y = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            assert!(((y - x).abs() as f64) <= (x.abs() as f64) / 256.0, "x={x} y={y}");
+        }
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::MAX)).is_finite());
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn i8_error_within_half_scale() {
+        let mut rng = Rng::new(13);
+        let vals = sample(&mut rng, 512, 8.0);
+        let scale = i8_scale_for(&vals);
+        for &x in &vals {
+            let y = i8_decode(i8_encode(x, scale), scale);
+            assert!(
+                ((y - x).abs() as f64) <= scale as f64 * 0.5 + 1e-7,
+                "x={x} y={y} scale={scale}"
+            );
+        }
+        // Degenerate panels stay representable.
+        assert_eq!(i8_scale_for(&[0.0; 8]), 0.0);
+        assert_eq!(i8_encode(1.0, 0.0), 0);
+        assert_eq!(i8_encode(f32::NAN, 1.0), 0);
+    }
+
+    #[test]
+    fn panel_store_encodes_per_order_scales() {
+        // Two orders with very different magnitudes: per-order scales
+        // must keep the small order's resolution.
+        let panel_len = 64;
+        let mut rng = Rng::new(17);
+        let mut vals = sample(&mut rng, panel_len, 0.01);
+        vals.extend(sample(&mut rng, panel_len, 100.0));
+        let store = PanelStore::encode(vals.clone(), PanelQuant::I8, 2, panel_len);
+        let scales = store.i8_scales().unwrap();
+        assert!(scales[0] < scales[1] / 100.0, "scales {scales:?}");
+        for m in 0..2 {
+            let mut out = vec![0.0f32; panel_len];
+            store.decode_into(m, m * panel_len, &mut out);
+            for (i, (&got, &want)) in out.iter().zip(&vals[m * panel_len..]).enumerate() {
+                assert!(
+                    ((got - want).abs() as f64) <= scales[m] as f64 * 0.5 + 1e-7,
+                    "order {m} lane {i}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_views_f32_is_bitwise_dot() {
+        let mut rng = Rng::new(19);
+        for n in [0usize, 1, 3, 4, 7, 8, 64, 129] {
+            let a = sample(&mut rng, n, 2.0);
+            let b = sample(&mut rng, n, 2.0);
+            let via_views = dot_views(RowView::F32(&a), RowView::F32(&b));
+            assert_eq!(via_views.to_bits(), dot(&a, &b).to_bits(), "n={n}");
+            // The generic per-lane path implements the same contract.
+            let generic = dot_views_generic(RowView::F32(&a), RowView::F32(&b));
+            assert_eq!(generic.to_bits(), dot(&a, &b).to_bits(), "generic n={n}");
+        }
+    }
+
+    #[test]
+    fn quantized_dot_error_is_within_analytic_bound() {
+        let mut rng = Rng::new(23);
+        for q in [PanelQuant::F16, PanelQuant::Bf16, PanelQuant::I8] {
+            for n in [5usize, 32, 64, 257] {
+                let a = sample(&mut rng, n, 3.0);
+                let b = sample(&mut rng, n, 3.0);
+                let sa = PanelStore::encode(a.clone(), q, 1, n);
+                let sb = PanelStore::encode(b.clone(), q, 1, n);
+                let (ssa, ssb) = (
+                    sa.i8_scales().map_or(0.0, |s| s[0]),
+                    sb.i8_scales().map_or(0.0, |s| s[0]),
+                );
+                let exact = dot(&a, &b);
+                let approx = dot_views(sa.view(0, 0, n), sb.view(0, 0, n));
+                let bound = dot_error_bound(&a, &b, q, ssa, q, ssb);
+                assert!(
+                    (approx - exact).abs() <= bound,
+                    "{}: n={n} err={} bound={bound}",
+                    q.name(),
+                    (approx - exact).abs()
+                );
+                // Mixed f32 × quantized (the serving top-k shape).
+                let mixed = dot_views(RowView::F32(&a), sb.view(0, 0, n));
+                let mbound = dot_error_bound(&a, &b, PanelQuant::None, 0.0, q, ssb);
+                assert!((mixed - exact).abs() <= mbound, "{} mixed n={n}", q.name());
+            }
+        }
+    }
+
+    #[test]
+    fn decoded_views_are_deterministic() {
+        // decode_into, get and to_f32_vec must agree bitwise — the
+        // decoded value is *the* value everywhere.
+        let mut rng = Rng::new(29);
+        let vals = sample(&mut rng, 96, 5.0);
+        for q in [PanelQuant::None, PanelQuant::F16, PanelQuant::Bf16, PanelQuant::I8] {
+            let store = PanelStore::encode(vals.clone(), q, 3, 32);
+            for m in 0..3 {
+                let view = store.view(m, m * 32, 32);
+                let vec = view.to_f32_vec();
+                for i in 0..32 {
+                    assert_eq!(vec[i].to_bits(), view.get(i).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tags_roundtrip_and_unknown_rejected() {
+        for q in [PanelQuant::None, PanelQuant::F16, PanelQuant::Bf16, PanelQuant::I8] {
+            assert_eq!(PanelQuant::from_tag(q.tag()), Some(q));
+            assert_eq!(PanelQuant::parse(q.name()).unwrap(), q);
+        }
+        for t in 4..=u8::MAX {
+            assert_eq!(PanelQuant::from_tag(t), None);
+        }
+        assert!(PanelQuant::parse("q4").is_err());
+    }
+}

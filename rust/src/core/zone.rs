@@ -26,7 +26,7 @@
 // Serving path: clippy backs the pallas-lint serving-no-panic rule.
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
-use crate::core::estimator::dot;
+use crate::core::quant::dot_views;
 use crate::projection::sketcher::ColumnarBlock;
 
 /// Zone summary of one columnar segment. All vectors are order-indexed
@@ -77,14 +77,18 @@ impl ZoneMeta {
                 max_moment[o] = fold_max(max_moment[o], v);
             }
         }
+        // Views decode quantized panels to their exact stored values, so
+        // a zone computed from an encoded block bounds exactly the
+        // values the estimator kernels will see (admissibility is
+        // independent of the panel encoding).
         let mut max_u2 = vec![f64::NEG_INFINITY; orders];
         let mut max_v2 = vec![f64::NEG_INFINITY; orders];
         for m in 1..=orders {
             for r in 0..rows {
-                let u = block.u_row(m, r);
-                max_u2[m - 1] = fold_max(max_u2[m - 1], dot(u, u).sqrt());
-                let v = block.v_row(m, r);
-                max_v2[m - 1] = fold_max(max_v2[m - 1], dot(v, v).sqrt());
+                let u = block.u_view(m, r);
+                max_u2[m - 1] = fold_max(max_u2[m - 1], dot_views(u, u).sqrt());
+                let v = block.v_view(m, r);
+                max_v2[m - 1] = fold_max(max_v2[m - 1], dot_views(v, v).sqrt());
             }
         }
         ZoneMeta { rows, min_moment, max_moment, max_u2, max_v2 }
@@ -180,6 +184,7 @@ impl ZoneMeta {
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+    use crate::core::estimator::dot;
     use crate::projection::sketcher::Sketcher;
     use crate::projection::{ProjectionDist, ProjectionSpec, Strategy};
 
@@ -231,6 +236,32 @@ mod tests {
             let merged = ZoneMeta::merge(&[&za, &zb, &zc]);
             let whole = ZoneMeta::from_block(&ColumnarBlock::concat(&[&a, &b, &c]));
             assert_eq!(merged, whole, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn zones_of_encoded_blocks_bound_their_decoded_values() {
+        use crate::core::quant::PanelQuant;
+        for q in [PanelQuant::F16, PanelQuant::Bf16, PanelQuant::I8] {
+            let block = block_of(Strategy::Alternative, 4, 8, 6, 5).encoded_as(q);
+            let z = ZoneMeta::from_block(&block);
+            for r in 0..block.rows() {
+                for m in 1..=block.orders() {
+                    let u = block.u_view(m, r);
+                    assert!(dot_views(u, u).sqrt() <= z.max_u2[m - 1], "{q:?} u m={m} r={r}");
+                    let v = block.v_view(m, r);
+                    assert!(dot_views(v, v).sqrt() <= z.max_v2[m - 1], "{q:?} v m={m} r={r}");
+                }
+            }
+            // Compaction invariant holds per encoding too: merged zone ==
+            // recomputed zone over the concatenated block, bitwise —
+            // whether concat stayed encoded (f16/bf16) or fell back to
+            // the decoded f32 domain (i8 scale mismatch).
+            let b2 = block_of(Strategy::Alternative, 4, 8, 3, 6).encoded_as(q);
+            let merged =
+                ZoneMeta::merge(&[&ZoneMeta::from_block(&block), &ZoneMeta::from_block(&b2)]);
+            let whole = ZoneMeta::from_block(&ColumnarBlock::concat(&[&block, &b2]));
+            assert_eq!(merged, whole, "{q:?}");
         }
     }
 

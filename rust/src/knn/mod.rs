@@ -50,6 +50,7 @@ use crate::core::arena::SketchArena;
 use crate::core::decompose::Decomposition;
 use crate::core::estimator::{self, PruneStats, SketchPanels, ZoneExtent};
 use crate::core::mle::{self, Solve};
+use crate::core::quant::RowView;
 use crate::core::zone::ZoneMeta;
 use crate::data::RowMatrix;
 use crate::projection::sketcher::{ColumnarBlock, RowSketch, Sketcher};
@@ -139,17 +140,17 @@ impl SketchPanels for SharedPanels {
         self.p
     }
 
-    fn u_row(&self, m: usize, i: usize) -> &[f32] {
+    fn u_row(&self, m: usize, i: usize) -> RowView<'_> {
         match self.shard_for(i) {
-            (Shard::Map { rows, .. }, r) => rows[r].uside.u(m),
-            (Shard::Seg(s), r) => s.block.u_row(m, r),
+            (Shard::Map { rows, .. }, r) => RowView::F32(rows[r].uside.u(m)),
+            (Shard::Seg(s), r) => s.block.u_view(m, r),
         }
     }
 
-    fn v_row(&self, m: usize, i: usize) -> &[f32] {
+    fn v_row(&self, m: usize, i: usize) -> RowView<'_> {
         match self.shard_for(i) {
-            (Shard::Map { rows, .. }, r) => rows[r].vside().u(m),
-            (Shard::Seg(s), r) => s.block.v_row(m, r),
+            (Shard::Map { rows, .. }, r) => RowView::F32(rows[r].vside().u(m)),
+            (Shard::Seg(s), r) => s.block.v_view(m, r),
         }
     }
 
@@ -182,12 +183,12 @@ impl<P: SketchPanels + ?Sized> SketchPanels for OneRow<'_, P> {
         self.inner.p()
     }
 
-    fn u_row(&self, m: usize, i: usize) -> &[f32] {
+    fn u_row(&self, m: usize, i: usize) -> RowView<'_> {
         debug_assert_eq!(i, 0);
         self.inner.u_row(m, self.row)
     }
 
-    fn v_row(&self, m: usize, i: usize) -> &[f32] {
+    fn v_row(&self, m: usize, i: usize) -> RowView<'_> {
         debug_assert_eq!(i, 0);
         self.inner.v_row(m, self.row)
     }

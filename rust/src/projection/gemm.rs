@@ -91,23 +91,11 @@ pub fn expand_powers(
     debug_assert!(powers.len() >= orders * n * cl);
     debug_assert!(moments.len() >= n * nm);
     debug_assert!(nm >= orders);
-    let mut pw = vec![0.0f32; orders];
     for (r, row) in rows.iter().enumerate() {
         let mrow = &mut moments[r * nm..(r + 1) * nm];
-        for (t, &x) in row[start..start + cl].iter().enumerate() {
-            if x == 0.0 {
-                // Zero entries contribute nothing; the powers slot still
-                // needs a write because the buffer is reused across chunks.
-                for m in 0..orders {
-                    powers[(m * n + r) * cl + t] = 0.0;
-                }
-                continue;
-            }
-            power_ladder_update(x, orders, mrow, &mut pw);
-            for m in 0..orders {
-                powers[(m * n + r) * cl + t] = pw[m];
-            }
-        }
+        // SIMD-dispatched per row; bitwise-identical to the scalar
+        // ladder (see `projection::simd` module docs).
+        super::simd::expand_row(&row[start..start + cl], r, n, cl, orders, nm, powers, mrow);
     }
 }
 
@@ -161,17 +149,9 @@ fn kernel_full(
     let a1 = &a[(i0 + 1) * depth + t0..][..tc];
     let a2 = &a[(i0 + 2) * depth + t0..][..tc];
     let a3 = &a[(i0 + 3) * depth + t0..][..tc];
-    for t in 0..tc {
-        let bt = &b[(t0 + t) * n + j0..][..NR];
-        let (x0, x1, x2, x3) = (a0[t], a1[t], a2[t], a3[t]);
-        for j in 0..NR {
-            let bv = bt[j];
-            acc[0][j] += x0 * bv;
-            acc[1][j] += x1 * bv;
-            acc[2][j] += x2 * bv;
-            acc[3][j] += x3 * bv;
-        }
-    }
+    // SIMD-dispatched register tile; every path reproduces the scalar
+    // per-slot accumulation order bitwise (`projection::simd`).
+    super::simd::gemm_tile_4x8(&mut acc, [a0, a1, a2, a3], b, t0, tc, n, j0);
     for (i, acc_row) in acc.iter().enumerate() {
         let crow = &mut c[(i0 + i) * n + j0..][..NR];
         for j in 0..NR {
@@ -367,6 +347,63 @@ mod tests {
         expand_powers(&rows, 0, 2, 2, 4, &mut powers, &mut moments);
         assert!(powers.iter().all(|&p| p == 0.0));
         assert!(moments.iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn dispatched_gemm_is_bitwise_scalar_over_ragged_shapes() {
+        use crate::projection::simd;
+        let _g = simd::lock_dispatch();
+        for &(m, depth, n) in &[
+            (1usize, 1usize, 1usize),
+            (4, 16, 8),
+            (5, 17, 9),
+            (3, 600, 7),
+            (8, 513, 16),
+            (13, 1025, 12),
+        ] {
+            let a = pattern(m * depth, 0.01);
+            let b = pattern(depth * n, 0.02);
+            let seed = pattern(m * n, 0.5);
+            let mut fast = seed.clone();
+            simd::force_scalar(false);
+            gemm(&mut fast, &a, &b, m, depth, n);
+            let mut slow = seed;
+            simd::force_scalar(true);
+            gemm(&mut slow, &a, &b, m, depth, n);
+            for (i, (&f, &s)) in fast.iter().zip(&slow).enumerate() {
+                assert_eq!(f.to_bits(), s.to_bits(), "shape ({m},{depth},{n}) slot {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_expand_powers_is_bitwise_scalar() {
+        use crate::projection::simd;
+        let _g = simd::lock_dispatch();
+        for &cl in &[1usize, 2, 3, 4, 5, 7, 8, 17, 64, 65] {
+            let mut r0 = pattern(cl, 0.07);
+            let r1 = pattern(cl, 1.3);
+            r0[0] = -0.0; // negative zero must match the scalar zero-skip
+            if cl > 2 {
+                r0[2] = 0.0;
+            }
+            let rows: Vec<&[f32]> = vec![&r0, &r1];
+            let (orders, nm) = (3usize, 6usize);
+            let mut p_fast = vec![f32::NAN; orders * 2 * cl];
+            let mut m_fast = vec![0.25f64; 2 * nm];
+            simd::force_scalar(false);
+            expand_powers(&rows, 0, cl, orders, nm, &mut p_fast, &mut m_fast);
+            let mut p_slow = vec![f32::NAN; orders * 2 * cl];
+            let mut m_slow = vec![0.25f64; 2 * nm];
+            simd::force_scalar(true);
+            expand_powers(&rows, 0, cl, orders, nm, &mut p_slow, &mut m_slow);
+            for (i, (&f, &s)) in p_fast.iter().zip(&p_slow).enumerate() {
+                assert_eq!(f.to_bits(), s.to_bits(), "cl={cl} power slot {i}");
+            }
+            for (i, (&f, &s)) in m_fast.iter().zip(&m_slow).enumerate() {
+                assert_eq!(f.to_bits(), s.to_bits(), "cl={cl} moment slot {i}");
+            }
+        }
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 pub mod gemm;
 pub mod matrix;
+pub mod simd;
 pub mod sketcher;
 pub mod subgaussian;
 

@@ -1,0 +1,760 @@
+//! Runtime-dispatched SIMD micro-kernels for the two hot paths: the
+//! 4×8 GEMM register tile at ingest and the f64-accumulated dot
+//! products at query.
+//!
+//! ## Dispatch
+//!
+//! One kernel choice per process, detected at first use
+//! ([`active`]): AVX on x86-64 (`is_x86_feature_detected!`), NEON on
+//! aarch64, a portable unrolled fallback elsewhere. The scalar
+//! reference kernels stay compiled on every target — they *are* the
+//! semantics, and [`force_scalar`] (or `LPSKETCH_FORCE_SCALAR=1`)
+//! pins dispatch to them so the bitwise-equality property suites can
+//! exercise both sides on one machine. The serving metrics report the
+//! choice as the `simd_kernel` label ([`active_kernel`]).
+//!
+//! ## The bitwise contract
+//!
+//! Every vector path reproduces its scalar reference **bitwise**, by
+//! construction, not by tolerance:
+//!
+//! * [`dot_f32`]'s scalar contract is four independent f64
+//!   accumulators over chunks of 4, a scalar tail, and the fixed final
+//!   reduction `(acc0 + acc2) + (acc1 + acc3) + tail`. The AVX path
+//!   maps the four accumulators onto the four lanes of one `__m256d`
+//!   (`cvtps_pd` → `mul_pd` → `add_pd`, never FMA), the NEON path onto
+//!   two `float64x2_t`s — identical operations per slot, in the same
+//!   order, so identical roundings.
+//! * The 4×8 GEMM tile accumulates `acc[i][j] += a_i[t]·b[t][j]` with
+//!   `t` ascending; the vector paths keep one register per output row
+//!   and use separate multiply and add (no FMA contraction), so every
+//!   slot sees the scalar operation sequence.
+//! * The power-ladder expansion walks `x, x², …` in f64 per entry; the
+//!   AVX path runs four entries' ladders in lock-step lanes (same
+//!   multiply chain per entry) and accumulates moments scalar-wise in
+//!   entry order from the extracted lanes.
+//!
+//! f16 dots decode lanes exactly (f16 ⊂ f32) and then follow the same
+//! accumulation contract, so the AVX F16C path and the portable decode
+//! agree bitwise too.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Kernel families the dispatcher can select.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// The scalar reference (also what `force_scalar` pins).
+    Scalar,
+    /// Portable unrolled loops (no arch intrinsics; autovectorizable).
+    Portable,
+    /// aarch64 NEON.
+    Neon,
+    /// x86-64 AVX (+ F16C for f16 decodes when available).
+    Avx,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Portable => "portable",
+            Kernel::Neon => "neon",
+            Kernel::Avx => "avx",
+        }
+    }
+}
+
+/// 0 = follow detection (honouring the env override), 1 = forced
+/// scalar, 2 = forced auto (test hook re-enabling detection).
+static FORCE: AtomicU8 = AtomicU8::new(0);
+
+static DETECTED: OnceLock<Kernel> = OnceLock::new();
+static ENV_SCALAR: OnceLock<bool> = OnceLock::new();
+#[cfg(target_arch = "x86_64")]
+static F16C: OnceLock<bool> = OnceLock::new();
+
+fn detected() -> Kernel {
+    *DETECTED.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx") {
+                return Kernel::Avx;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Kernel::Neon;
+            }
+        }
+        Kernel::Portable
+    })
+}
+
+/// Whether the AVX paths may use F16C half-precision converts.
+#[cfg(target_arch = "x86_64")]
+fn f16c() -> bool {
+    *F16C.get_or_init(|| std::arch::is_x86_feature_detected!("f16c"))
+}
+
+/// The kernel dispatch currently in effect.
+pub fn active() -> Kernel {
+    match FORCE.load(Ordering::Relaxed) {
+        1 => Kernel::Scalar,
+        2 => detected(),
+        _ => {
+            let env = *ENV_SCALAR.get_or_init(|| {
+                std::env::var("LPSKETCH_FORCE_SCALAR").is_ok_and(|v| v == "1")
+            });
+            if env {
+                Kernel::Scalar
+            } else {
+                detected()
+            }
+        }
+    }
+}
+
+/// The `simd_kernel` metrics label.
+pub fn active_kernel() -> &'static str {
+    active().name()
+}
+
+/// Pin dispatch to the scalar reference (`true`) or back to detection
+/// (`false`) — the property-suite hook for exercising both sides of
+/// the bitwise contract in one process. Overrides
+/// `LPSKETCH_FORCE_SCALAR`.
+pub fn force_scalar(on: bool) {
+    FORCE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+/// Serializes tests that toggle [`force_scalar`]: the switch is
+/// process-global, so concurrent toggling tests would race each
+/// other's dispatch expectations. Dropping the guard restores
+/// follow-the-environment dispatch.
+#[cfg(test)]
+pub(crate) fn lock_dispatch() -> DispatchGuard {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    DispatchGuard(match LOCK.lock() {
+        Ok(g) => g,
+        Err(e) => e.into_inner(),
+    })
+}
+
+#[cfg(test)]
+pub(crate) struct DispatchGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+#[cfg(test)]
+impl Drop for DispatchGuard {
+    fn drop(&mut self) {
+        FORCE.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f64-accumulated dot products
+// ---------------------------------------------------------------------------
+
+/// f64 dot product of two f32 sketch rows, SIMD-dispatched.
+/// Bitwise-identical to [`dot_f32_scalar`] on every path.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if active() == Kernel::Avx {
+        // SAFETY: dispatch only selects Avx after runtime detection.
+        return unsafe { dot_f32_avx(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if active() == Kernel::Neon {
+        // SAFETY: dispatch only selects Neon after runtime detection.
+        return unsafe { dot_f32_neon(a, b) };
+    }
+    dot_f32_scalar(a, b)
+}
+
+/// The scalar reduction-order contract (see `estimator::dot` docs):
+/// four independent f64 accumulators, chunks of 4, scalar tail, final
+/// `(acc0 + acc2) + (acc1 + acc3) + tail`. Changing this sequence
+/// changes every persisted estimate — it is pinned by the SIMD
+/// equality suites and the bench guards.
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += (a[i] as f64) * (b[i] as f64);
+        acc[1] += (a[i + 1] as f64) * (b[i + 1] as f64);
+        acc[2] += (a[i + 2] as f64) * (b[i + 2] as f64);
+        acc[3] += (a[i + 3] as f64) * (b[i + 3] as f64);
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..a.len() {
+        tail += (a[i] as f64) * (b[i] as f64);
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// AVX dot: one `__m256d` whose lane `j` plays scalar `acc[j]`.
+/// `cvtps_pd` is exact, `mul_pd`/`add_pd` round separately exactly as
+/// the scalar's `*` then `+=` do — never FMA.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn dot_f32_avx(a: &[f32], b: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let i = c * 4;
+        let av = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i)));
+        let bv = _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(i)));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0f64;
+    for i in chunks * 4..a.len() {
+        tail += (a[i] as f64) * (b[i] as f64);
+    }
+    (lanes[0] + lanes[2]) + (lanes[1] + lanes[3]) + tail
+}
+
+/// NEON dot: `acc[0..2]` and `acc[2..4]` live in two `float64x2_t`s;
+/// separate `vmulq`/`vaddq` (no fused form), same final reduction.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_f32_neon(a: &[f32], b: &[f32]) -> f64 {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        let av = vld1q_f32(a.as_ptr().add(i));
+        let bv = vld1q_f32(b.as_ptr().add(i));
+        acc01 = vaddq_f64(
+            acc01,
+            vmulq_f64(vcvt_f64_f32(vget_low_f32(av)), vcvt_f64_f32(vget_low_f32(bv))),
+        );
+        acc23 = vaddq_f64(
+            acc23,
+            vmulq_f64(vcvt_f64_f32(vget_high_f32(av)), vcvt_f64_f32(vget_high_f32(bv))),
+        );
+    }
+    let (a0, a1) = (vgetq_lane_f64::<0>(acc01), vgetq_lane_f64::<1>(acc01));
+    let (a2, a3) = (vgetq_lane_f64::<0>(acc23), vgetq_lane_f64::<1>(acc23));
+    let mut tail = 0.0f64;
+    for i in chunks * 4..a.len() {
+        tail += (a[i] as f64) * (b[i] as f64);
+    }
+    (a0 + a2) + (a1 + a3) + tail
+}
+
+/// f64 dot of two f16-encoded rows: decode lanes exactly, then the
+/// [`dot_f32_scalar`] contract. AVX+F16C decodes four halves per
+/// `cvtph_ps` in registers; other targets decode per lane.
+#[inline]
+pub fn dot_f16_f16(a: &[u16], b: &[u16]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if active() == Kernel::Avx && f16c() {
+        // SAFETY: gated on runtime AVX + F16C detection.
+        return unsafe { dot_f16_f16_avx(a, b) };
+    }
+    dot_f16_f16_scalar(a, b)
+}
+
+/// Portable f16×f16 dot (the reference the AVX path matches bitwise).
+pub fn dot_f16_f16_scalar(a: &[u16], b: &[u16]) -> f64 {
+    use crate::core::quant::f16_bits_to_f32;
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += (f16_bits_to_f32(a[i]) as f64) * (f16_bits_to_f32(b[i]) as f64);
+        acc[1] += (f16_bits_to_f32(a[i + 1]) as f64) * (f16_bits_to_f32(b[i + 1]) as f64);
+        acc[2] += (f16_bits_to_f32(a[i + 2]) as f64) * (f16_bits_to_f32(b[i + 2]) as f64);
+        acc[3] += (f16_bits_to_f32(a[i + 3]) as f64) * (f16_bits_to_f32(b[i + 3]) as f64);
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..a.len() {
+        tail += (f16_bits_to_f32(a[i]) as f64) * (f16_bits_to_f32(b[i]) as f64);
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx", enable = "f16c")]
+unsafe fn dot_f16_f16_avx(a: &[u16], b: &[u16]) -> f64 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let i = c * 4;
+        // Four halves in the low 64 bits; cvtph_ps decodes them exactly.
+        let ah = _mm_loadl_epi64(a.as_ptr().add(i) as *const __m128i);
+        let bh = _mm_loadl_epi64(b.as_ptr().add(i) as *const __m128i);
+        let av = _mm256_cvtps_pd(_mm_cvtph_ps(ah));
+        let bv = _mm256_cvtps_pd(_mm_cvtph_ps(bh));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0f64;
+    for i in chunks * 4..a.len() {
+        use crate::core::quant::f16_bits_to_f32;
+        tail += (f16_bits_to_f32(a[i]) as f64) * (f16_bits_to_f32(b[i]) as f64);
+    }
+    (lanes[0] + lanes[2]) + (lanes[1] + lanes[3]) + tail
+}
+
+/// f64 dot of an f32 row against an f16-encoded row — the serving
+/// top-k shape (f32 query sketches × quantized segment panels).
+#[inline]
+pub fn dot_f32_f16(a: &[f32], b: &[u16]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if active() == Kernel::Avx && f16c() {
+        // SAFETY: gated on runtime AVX + F16C detection.
+        return unsafe { dot_f32_f16_avx(a, b) };
+    }
+    dot_f32_f16_scalar(a, b)
+}
+
+/// Portable f32×f16 dot (reference for the AVX path).
+pub fn dot_f32_f16_scalar(a: &[f32], b: &[u16]) -> f64 {
+    use crate::core::quant::f16_bits_to_f32;
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += (a[i] as f64) * (f16_bits_to_f32(b[i]) as f64);
+        acc[1] += (a[i + 1] as f64) * (f16_bits_to_f32(b[i + 1]) as f64);
+        acc[2] += (a[i + 2] as f64) * (f16_bits_to_f32(b[i + 2]) as f64);
+        acc[3] += (a[i + 3] as f64) * (f16_bits_to_f32(b[i + 3]) as f64);
+    }
+    let mut tail = 0.0f64;
+    for i in chunks * 4..a.len() {
+        tail += (a[i] as f64) * (f16_bits_to_f32(b[i]) as f64);
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx", enable = "f16c")]
+unsafe fn dot_f32_f16_avx(a: &[f32], b: &[u16]) -> f64 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let i = c * 4;
+        let av = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i)));
+        let bh = _mm_loadl_epi64(b.as_ptr().add(i) as *const __m128i);
+        let bv = _mm256_cvtps_pd(_mm_cvtph_ps(bh));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0f64;
+    for i in chunks * 4..a.len() {
+        use crate::core::quant::f16_bits_to_f32;
+        tail += (a[i] as f64) * (f16_bits_to_f32(b[i]) as f64);
+    }
+    (lanes[0] + lanes[2]) + (lanes[1] + lanes[3]) + tail
+}
+
+// ---------------------------------------------------------------------------
+// The 4×8 GEMM register tile
+// ---------------------------------------------------------------------------
+
+/// Update a full 4×8 accumulator tile: for `t` in `0..tc`,
+/// `acc[i][j] += a[i][t] · b[(t0+t)·n + j0 + j]`. Dispatched; every
+/// path performs the identical per-slot multiply-then-add sequence
+/// (see module docs), so the tiled GEMM stays bitwise independent of
+/// the kernel choice.
+#[inline]
+pub fn gemm_tile_4x8(
+    acc: &mut [[f32; 8]; 4],
+    a: [&[f32]; 4],
+    b: &[f32],
+    t0: usize,
+    tc: usize,
+    n: usize,
+    j0: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if active() == Kernel::Avx {
+        // SAFETY: dispatch only selects Avx after runtime detection.
+        unsafe { gemm_tile_4x8_avx(acc, a, b, t0, tc, n, j0) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if active() == Kernel::Neon {
+        // SAFETY: dispatch only selects Neon after runtime detection.
+        unsafe { gemm_tile_4x8_neon(acc, a, b, t0, tc, n, j0) };
+        return;
+    }
+    gemm_tile_4x8_scalar(acc, a, b, t0, tc, n, j0)
+}
+
+/// Scalar reference tile (the seed kernel's exact inner loop).
+pub fn gemm_tile_4x8_scalar(
+    acc: &mut [[f32; 8]; 4],
+    a: [&[f32]; 4],
+    b: &[f32],
+    t0: usize,
+    tc: usize,
+    n: usize,
+    j0: usize,
+) {
+    for t in 0..tc {
+        let bt = &b[(t0 + t) * n + j0..][..8];
+        let (x0, x1, x2, x3) = (a[0][t], a[1][t], a[2][t], a[3][t]);
+        for j in 0..8 {
+            let bv = bt[j];
+            acc[0][j] += x0 * bv;
+            acc[1][j] += x1 * bv;
+            acc[2][j] += x2 * bv;
+            acc[3][j] += x3 * bv;
+        }
+    }
+}
+
+/// AVX tile: one `__m256` per output row, broadcast `a_i[t]`, separate
+/// `mul_ps`/`add_ps` (never FMA — fusing would change roundings vs the
+/// scalar reference).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn gemm_tile_4x8_avx(
+    acc: &mut [[f32; 8]; 4],
+    a: [&[f32]; 4],
+    b: &[f32],
+    t0: usize,
+    tc: usize,
+    n: usize,
+    j0: usize,
+) {
+    use std::arch::x86_64::*;
+    let mut r0 = _mm256_loadu_ps(acc[0].as_ptr());
+    let mut r1 = _mm256_loadu_ps(acc[1].as_ptr());
+    let mut r2 = _mm256_loadu_ps(acc[2].as_ptr());
+    let mut r3 = _mm256_loadu_ps(acc[3].as_ptr());
+    for t in 0..tc {
+        let bt = _mm256_loadu_ps(b.as_ptr().add((t0 + t) * n + j0));
+        r0 = _mm256_add_ps(r0, _mm256_mul_ps(_mm256_set1_ps(a[0][t]), bt));
+        r1 = _mm256_add_ps(r1, _mm256_mul_ps(_mm256_set1_ps(a[1][t]), bt));
+        r2 = _mm256_add_ps(r2, _mm256_mul_ps(_mm256_set1_ps(a[2][t]), bt));
+        r3 = _mm256_add_ps(r3, _mm256_mul_ps(_mm256_set1_ps(a[3][t]), bt));
+    }
+    _mm256_storeu_ps(acc[0].as_mut_ptr(), r0);
+    _mm256_storeu_ps(acc[1].as_mut_ptr(), r1);
+    _mm256_storeu_ps(acc[2].as_mut_ptr(), r2);
+    _mm256_storeu_ps(acc[3].as_mut_ptr(), r3);
+}
+
+/// NEON tile: two `float32x4_t`s per output row, separate
+/// `vmulq`/`vaddq` (no fused form).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn gemm_tile_4x8_neon(
+    acc: &mut [[f32; 8]; 4],
+    a: [&[f32]; 4],
+    b: &[f32],
+    t0: usize,
+    tc: usize,
+    n: usize,
+    j0: usize,
+) {
+    use std::arch::aarch64::*;
+    let mut lo = [vdupq_n_f32(0.0); 4];
+    let mut hi = [vdupq_n_f32(0.0); 4];
+    for i in 0..4 {
+        lo[i] = vld1q_f32(acc[i].as_ptr());
+        hi[i] = vld1q_f32(acc[i].as_ptr().add(4));
+    }
+    for t in 0..tc {
+        let base = b.as_ptr().add((t0 + t) * n + j0);
+        let blo = vld1q_f32(base);
+        let bhi = vld1q_f32(base.add(4));
+        for i in 0..4 {
+            let x = vdupq_n_f32(a[i][t]);
+            lo[i] = vaddq_f32(lo[i], vmulq_f32(x, blo));
+            hi[i] = vaddq_f32(hi[i], vmulq_f32(x, bhi));
+        }
+    }
+    for i in 0..4 {
+        vst1q_f32(acc[i].as_mut_ptr(), lo[i]);
+        vst1q_f32(acc[i].as_mut_ptr().add(4), hi[i]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Power-ladder expansion
+// ---------------------------------------------------------------------------
+
+/// Expand one row chunk's power ladder into the order-major powers
+/// panel and fold the chunk into the row's moments — the vectorizable
+/// inner body of `gemm::expand_powers`. `row` is the chunk slice
+/// (`cl` entries), `r` the row index, `n` the row count; layout and
+/// semantics match the scalar reference in `projection::gemm` exactly
+/// (f64 ladder, f32 power casts, zero entries contribute nothing to
+/// the moments).
+#[allow(clippy::too_many_arguments)]
+pub fn expand_row(
+    row: &[f32],
+    r: usize,
+    n: usize,
+    cl: usize,
+    orders: usize,
+    nm: usize,
+    powers: &mut [f32],
+    mrow: &mut [f64],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if active() == Kernel::Avx {
+        // SAFETY: dispatch only selects Avx after runtime detection.
+        unsafe { expand_row_avx(row, r, n, cl, orders, nm, powers, mrow) };
+        return;
+    }
+    expand_row_scalar(row, r, n, cl, orders, nm, powers, mrow)
+}
+
+/// Scalar reference expansion (the seed `expand_powers` body for one
+/// row).
+#[allow(clippy::too_many_arguments)]
+pub fn expand_row_scalar(
+    row: &[f32],
+    r: usize,
+    n: usize,
+    cl: usize,
+    orders: usize,
+    nm: usize,
+    powers: &mut [f32],
+    mrow: &mut [f64],
+) {
+    debug_assert_eq!(mrow.len(), nm);
+    for (t, &x) in row.iter().enumerate() {
+        if x == 0.0 {
+            // Zero entries contribute nothing; the powers slot still
+            // needs a write because the buffer is reused across chunks.
+            for m in 0..orders {
+                powers[(m * n + r) * cl + t] = 0.0;
+            }
+            continue;
+        }
+        let xf = x as f64;
+        let mut ladder = 1.0f64;
+        for (m, slot) in mrow.iter_mut().enumerate() {
+            ladder *= xf;
+            if m < orders {
+                powers[(m * n + r) * cl + t] = ladder as f32;
+            }
+            *slot += ladder;
+        }
+    }
+}
+
+/// AVX expansion: four entries' f64 ladders run in lock-step lanes
+/// (`mul_pd` per rung — each lane performs exactly the scalar ladder's
+/// multiply chain), rung casts go out via `cvtpd_ps` (round-to-nearest,
+/// identical to the scalar `as f32`), and moments accumulate
+/// scalar-wise from the extracted lanes **in entry order with the zero
+/// skip**, so the result is bitwise-identical to
+/// [`expand_row_scalar`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn expand_row_avx(
+    row: &[f32],
+    r: usize,
+    n: usize,
+    cl: usize,
+    orders: usize,
+    nm: usize,
+    powers: &mut [f32],
+    mrow: &mut [f64],
+) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(mrow.len(), nm);
+    let quads = row.len() / 4;
+    let mut lanes = [0.0f64; 4];
+    for q in 0..quads {
+        let t = q * 4;
+        let x4 = _mm256_cvtps_pd(_mm_loadu_ps(row.as_ptr().add(t)));
+        // Lane mask: true iff the entry is not ±0.0 (NaN stays true,
+        // matching the scalar `x == 0.0` skip). ANDing the stored rung
+        // with it turns a -0.0 entry's -0.0 rung into the +0.0 the
+        // scalar skip writes, and is a bit-preserving no-op elsewhere.
+        let nz = _mm256_cmp_pd::<_CMP_NEQ_UQ>(x4, _mm256_setzero_pd());
+        let mut ladder = _mm256_set1_pd(1.0);
+        for m in 0..nm {
+            ladder = _mm256_mul_pd(ladder, x4);
+            if m < orders {
+                // Contiguous in t: 4 power slots in one store.
+                let pw4 = _mm256_cvtpd_ps(_mm256_and_pd(ladder, nz));
+                _mm_storeu_ps(powers.as_mut_ptr().add((m * n + r) * cl + t), pw4);
+            }
+            _mm256_storeu_pd(lanes.as_mut_ptr(), ladder);
+            // Moments fold scalar-wise in entry order; zero entries are
+            // skipped exactly as the scalar path skips them (adding
+            // their 0.0 rung could still flip a -0.0 accumulator).
+            for (lane, &l) in lanes.iter().enumerate() {
+                if row[t + lane] != 0.0 {
+                    mrow[m] += l;
+                }
+            }
+        }
+    }
+    // Ragged tail at entry offsets quads*4.. — the scalar body verbatim
+    // (the power rows are strided by cl, so the tail cannot be handled
+    // by re-slicing `powers`).
+    for t in quads * 4..row.len() {
+        let x = row[t];
+        if x == 0.0 {
+            for m in 0..orders {
+                powers[(m * n + r) * cl + t] = 0.0;
+            }
+            continue;
+        }
+        let xf = x as f64;
+        let mut ladder = 1.0f64;
+        for (m, slot) in mrow.iter_mut().enumerate() {
+            ladder *= xf;
+            if m < orders {
+                powers[(m * n + r) * cl + t] = ladder as f32;
+            }
+            *slot += ladder;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| ((rng.next_f64() - 0.5) * 2.0 * scale) as f32).collect()
+    }
+
+    #[test]
+    fn dispatch_reports_a_known_kernel() {
+        let _g = lock_dispatch();
+        let name = active_kernel();
+        assert!(["avx", "neon", "portable", "scalar"].contains(&name), "{name}");
+        force_scalar(true);
+        assert_eq!(active_kernel(), "scalar");
+        force_scalar(false);
+        assert_eq!(active(), detected());
+    }
+
+    #[test]
+    fn dot_dispatched_is_bitwise_scalar() {
+        let mut rng = Rng::new(31);
+        let _g = lock_dispatch();
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 15, 16, 63, 64, 65, 257] {
+            let a = sample(&mut rng, n, 3.0);
+            let b = sample(&mut rng, n, 3.0);
+            force_scalar(false);
+            let fast = dot_f32(&a, &b);
+            force_scalar(true);
+            let slow = dot_f32(&a, &b);
+            assert_eq!(fast.to_bits(), slow.to_bits(), "n={n}");
+            assert_eq!(slow.to_bits(), dot_f32_scalar(&a, &b).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn f16_dots_match_their_scalar_reference_bitwise() {
+        use crate::core::quant::f32_to_f16_bits;
+        let mut rng = Rng::new(37);
+        let _g = lock_dispatch();
+        for n in [0usize, 1, 3, 4, 5, 8, 31, 64, 130] {
+            let a = sample(&mut rng, n, 2.0);
+            let b = sample(&mut rng, n, 2.0);
+            let ah: Vec<u16> = a.iter().map(|&x| f32_to_f16_bits(x)).collect();
+            let bh: Vec<u16> = b.iter().map(|&x| f32_to_f16_bits(x)).collect();
+            force_scalar(false);
+            let fast_hh = dot_f16_f16(&ah, &bh);
+            let fast_fh = dot_f32_f16(&a, &bh);
+            force_scalar(true);
+            assert_eq!(fast_hh.to_bits(), dot_f16_f16(&ah, &bh).to_bits(), "hh n={n}");
+            assert_eq!(fast_fh.to_bits(), dot_f32_f16(&a, &bh).to_bits(), "fh n={n}");
+            assert_eq!(
+                dot_f16_f16(&ah, &bh).to_bits(),
+                dot_f16_f16_scalar(&ah, &bh).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_tile_dispatched_is_bitwise_scalar() {
+        let mut rng = Rng::new(41);
+        let _g = lock_dispatch();
+        for tc in [1usize, 2, 7, 8, 64, 511, 512] {
+            let n = 24;
+            let j0 = 8;
+            let a: Vec<Vec<f32>> = (0..4).map(|_| sample(&mut rng, tc, 0.5)).collect();
+            let b = sample(&mut rng, (tc + 1) * n, 0.5);
+            let seed: Vec<[f32; 8]> =
+                (0..4).map(|i| std::array::from_fn(|j| (i * 8 + j) as f32 * 0.1)).collect();
+            let arows = [a[0].as_slice(), a[1].as_slice(), a[2].as_slice(), a[3].as_slice()];
+            let mut fast: [[f32; 8]; 4] = [seed[0], seed[1], seed[2], seed[3]];
+            force_scalar(false);
+            gemm_tile_4x8(&mut fast, arows, &b, 0, tc, n, j0);
+            let mut slow: [[f32; 8]; 4] = [seed[0], seed[1], seed[2], seed[3]];
+            force_scalar(true);
+            gemm_tile_4x8(&mut slow, arows, &b, 0, tc, n, j0);
+            for i in 0..4 {
+                for j in 0..8 {
+                    assert_eq!(
+                        fast[i][j].to_bits(),
+                        slow[i][j].to_bits(),
+                        "tc={tc} slot ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expand_row_dispatched_is_bitwise_scalar() {
+        let mut rng = Rng::new(43);
+        let _g = lock_dispatch();
+        for cl in [1usize, 3, 4, 5, 8, 17, 64] {
+            let (orders, nm, n, r) = (3usize, 6usize, 2usize, 1usize);
+            let mut row = sample(&mut rng, cl, 1.5);
+            if cl > 2 {
+                row[0] = -0.0; // negative zero must store +0.0 powers
+                row[1] = 0.0; // exercise the zero-skip
+                row[cl - 1] = 0.0;
+            }
+            let mut p_fast = vec![f32::NAN; orders * n * cl];
+            let mut m_fast = vec![0.1f64; nm];
+            force_scalar(false);
+            expand_row(&row, r, n, cl, orders, nm, &mut p_fast, &mut m_fast);
+            let mut p_slow = vec![f32::NAN; orders * n * cl];
+            let mut m_slow = vec![0.1f64; nm];
+            force_scalar(true);
+            expand_row(&row, r, n, cl, orders, nm, &mut p_slow, &mut m_slow);
+            for m in 0..orders {
+                for t in 0..cl {
+                    let idx = (m * n + r) * cl + t;
+                    assert_eq!(
+                        p_fast[idx].to_bits(),
+                        p_slow[idx].to_bits(),
+                        "cl={cl} m={m} t={t}"
+                    );
+                }
+            }
+            for m in 0..nm {
+                assert_eq!(m_fast[m].to_bits(), m_slow[m].to_bits(), "cl={cl} moment {m}");
+            }
+        }
+    }
+}

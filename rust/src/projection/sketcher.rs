@@ -42,6 +42,7 @@ use super::gemm::{self, SparseChunk};
 use super::matrix::{ProjectionMatrix, ProjectionSpec};
 use super::Strategy;
 use crate::core::marginals::Moments;
+use crate::core::quant::{PanelQuant, PanelStore, RowView};
 
 /// Power sketches of one row for one side: `u(m)` is the k-vector
 /// (x^∘m)ᵀ R^(id), m = 1..=orders.
@@ -131,6 +132,14 @@ impl RowSketch {
 /// segment) is one contiguous copy per order per side, with no per-row
 /// AoS allocation in between. Moments are row-major f64 (`rows × nm`,
 /// nm = 2(p−1)), everything `core/mle.rs` consumes.
+///
+/// Sketch panels live in a [`PanelStore`]: plain f32 (the sketcher's
+/// output and the bitwise-reference encoding) or a quantized codec
+/// (f16/bf16/i8) chosen at the store boundary. Quantized decode is
+/// value-exact — the decoded f32 *is* the stored value — so views over
+/// any encoding feed the same estimator kernels; moments always stay
+/// f64. Mutating accessors and the raw `&[f32]` panel accessors require
+/// the f32 encoding (ingest/WAL paths never quantize).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ColumnarBlock {
     orders: usize,
@@ -139,10 +148,10 @@ pub struct ColumnarBlock {
     nm: usize,
     rows: usize,
     /// Order-major u-side sketches.
-    u: Vec<f32>,
+    u: PanelStore,
     /// Order-major v-side sketches (alternative strategy only); `None`
     /// ⇒ the sides coincide, mirroring [`RowSketch::vside`].
-    v: Option<Vec<f32>>,
+    v: Option<PanelStore>,
     /// Row-major marginal moments Σ x^m, m = 1..=nm, f64.
     moments: Vec<f64>,
 }
@@ -154,8 +163,8 @@ impl ColumnarBlock {
             k,
             nm,
             rows,
-            u: vec![0.0; orders * rows * k],
-            v: two_sided.then(|| vec![0.0; orders * rows * k]),
+            u: PanelStore::F32(vec![0.0; orders * rows * k]),
+            v: two_sided.then(|| PanelStore::F32(vec![0.0; orders * rows * k])),
             moments: vec![0.0; rows * nm],
         }
     }
@@ -180,43 +189,144 @@ impl ColumnarBlock {
         self.v.is_some()
     }
 
-    /// u_m sketch of block row `r`.
+    /// The panel encoding (both sides always share one). [`PanelQuant::None`]
+    /// ⇒ plain f32, the sketcher-output / WAL / bitwise-reference form.
+    pub fn encoding(&self) -> PanelQuant {
+        self.u.encoding()
+    }
+
+    /// The raw f32 panel behind `store`, for the accessors that predate
+    /// quantized panels. Those accessors are only reachable on f32
+    /// blocks (ingest output, WAL records, per-row reference paths);
+    /// serving code uses the encoding-agnostic `*_view` accessors.
+    #[track_caller]
+    fn f32_panel(store: &PanelStore) -> &[f32] {
+        match store {
+            PanelStore::F32(v) => v,
+            other => panic!(
+                "raw f32 panel access on a {}-encoded block; use the view accessors",
+                other.encoding().name()
+            ),
+        }
+    }
+
+    /// u_m sketch of block row `r` (f32 blocks only — see
+    /// [`ColumnarBlock::u_view`] for the encoding-agnostic accessor).
     #[inline]
+    #[track_caller]
     pub fn u_row(&self, m: usize, r: usize) -> &[f32] {
         debug_assert!(m >= 1 && m <= self.orders && r < self.rows);
         let off = ((m - 1) * self.rows + r) * self.k;
-        &self.u[off..off + self.k]
+        &Self::f32_panel(&self.u)[off..off + self.k]
     }
 
     /// v_m sketch of block row `r`; falls back to the u side under the
-    /// basic strategy (the sides coincide).
+    /// basic strategy (the sides coincide). f32 blocks only.
     #[inline]
+    #[track_caller]
     pub fn v_row(&self, m: usize, r: usize) -> &[f32] {
         match &self.v {
             Some(v) => {
                 debug_assert!(m >= 1 && m <= self.orders && r < self.rows);
                 let off = ((m - 1) * self.rows + r) * self.k;
-                &v[off..off + self.k]
+                &Self::f32_panel(v)[off..off + self.k]
             }
             None => self.u_row(m, r),
         }
     }
 
-    /// The contiguous `rows × k` u-side panel of order `m`.
+    /// u_m sketch of block row `r` as a lane-decodable [`RowView`] —
+    /// works for every panel encoding; kernels decode in registers.
+    #[inline]
+    pub fn u_view(&self, m: usize, r: usize) -> RowView<'_> {
+        debug_assert!(m >= 1 && m <= self.orders && r < self.rows);
+        let off = ((m - 1) * self.rows + r) * self.k;
+        self.u.view(m - 1, off, self.k)
+    }
+
+    /// v_m sketch of block row `r` as a [`RowView`]; falls back to the
+    /// u side under the basic strategy.
+    #[inline]
+    pub fn v_view(&self, m: usize, r: usize) -> RowView<'_> {
+        match &self.v {
+            Some(v) => {
+                debug_assert!(m >= 1 && m <= self.orders && r < self.rows);
+                let off = ((m - 1) * self.rows + r) * self.k;
+                v.view(m - 1, off, self.k)
+            }
+            None => self.u_view(m, r),
+        }
+    }
+
+    /// The contiguous `rows × k` u-side panel of order `m` (f32 blocks
+    /// only — WAL encode and pre-v5 persistence, which are never
+    /// quantized).
+    #[track_caller]
     pub fn u_order(&self, m: usize) -> &[f32] {
         debug_assert!(m >= 1 && m <= self.orders);
         let off = (m - 1) * self.rows * self.k;
-        &self.u[off..off + self.rows * self.k]
+        &Self::f32_panel(&self.u)[off..off + self.rows * self.k]
     }
 
     /// The contiguous `rows × k` v-side panel of order `m`
-    /// (`None` under the basic strategy).
+    /// (`None` under the basic strategy). f32 blocks only.
+    #[track_caller]
     pub fn v_order(&self, m: usize) -> Option<&[f32]> {
         self.v.as_ref().map(|v| {
             debug_assert!(m >= 1 && m <= self.orders);
             let off = (m - 1) * self.rows * self.k;
-            &v[off..off + self.rows * self.k]
+            &Self::f32_panel(v)[off..off + self.rows * self.k]
         })
+    }
+
+    /// Decode the `rows × k` u-side panel of order `m` into `out`
+    /// (encoding-agnostic bulk export: arena landing, WAL re-encode).
+    pub fn decode_u_order_into(&self, m: usize, out: &mut [f32]) {
+        debug_assert!(m >= 1 && m <= self.orders);
+        debug_assert_eq!(out.len(), self.rows * self.k);
+        self.u.decode_into(m - 1, (m - 1) * self.rows * self.k, out);
+    }
+
+    /// Decode the `rows × k` v-side panel of order `m` into `out`;
+    /// falls back to the u side under the basic strategy.
+    pub fn decode_v_order_into(&self, m: usize, out: &mut [f32]) {
+        match &self.v {
+            Some(v) => {
+                debug_assert!(m >= 1 && m <= self.orders);
+                debug_assert_eq!(out.len(), self.rows * self.k);
+                v.decode_into(m - 1, (m - 1) * self.rows * self.k, out);
+            }
+            None => self.decode_u_order_into(m, out),
+        }
+    }
+
+    /// The u-side panel store (persistence writers serialize it as-is).
+    pub fn u_store(&self) -> &PanelStore {
+        &self.u
+    }
+
+    /// The v-side panel store (`None` under the basic strategy).
+    pub fn v_store(&self) -> Option<&PanelStore> {
+        self.v.as_ref()
+    }
+
+    /// Mutable f32 panel + moment buffers — the sketcher's output
+    /// surface. Panics unless the block is f32-encoded: sketch output
+    /// is always written in f32; quantization happens later, at the
+    /// store boundary.
+    #[track_caller]
+    fn f32_bufs_mut(&mut self) -> (&mut [f32], Option<&mut [f32]>, &mut [f64]) {
+        let ColumnarBlock { u, v, moments, .. } = self;
+        fn panel(store: &mut PanelStore) -> &mut [f32] {
+            match store {
+                PanelStore::F32(b) => b.as_mut_slice(),
+                other => panic!(
+                    "sketch output block is {}-encoded; sketching writes f32",
+                    other.encoding().name()
+                ),
+            }
+        }
+        (panel(u), v.as_mut().map(panel), moments.as_mut_slice())
     }
 
     /// All moments of block row `r` (orders 1..=nm).
@@ -248,16 +358,90 @@ impl ColumnarBlock {
             assert_eq!(v.len(), orders * rows * k, "v panel length mismatch");
         }
         assert_eq!(moments.len(), rows * nm, "moment buffer length mismatch");
+        ColumnarBlock {
+            orders,
+            k,
+            nm,
+            rows,
+            u: PanelStore::F32(u),
+            v: v.map(PanelStore::F32),
+            moments,
+        }
+    }
+
+    /// Reassemble a block from already-encoded panel stores — the
+    /// persistence-v5 / segfile-v3 load path, which reads each side's
+    /// store verbatim (any encoding). Panics on shape/length/encoding
+    /// mismatch (callers validate declared sizes before allocating).
+    pub fn from_stores(
+        orders: usize,
+        k: usize,
+        nm: usize,
+        rows: usize,
+        u: PanelStore,
+        v: Option<PanelStore>,
+        moments: Vec<f64>,
+    ) -> Self {
+        assert_eq!(u.len(), orders * rows * k, "u panel length mismatch");
+        if let Some(scales) = u.i8_scales() {
+            assert_eq!(scales.len(), orders, "u i8 scale count mismatch");
+        }
+        if let Some(v) = &v {
+            assert_eq!(v.len(), orders * rows * k, "v panel length mismatch");
+            assert_eq!(v.encoding(), u.encoding(), "panel encoding differs across sides");
+            if let Some(scales) = v.i8_scales() {
+                assert_eq!(scales.len(), orders, "v i8 scale count mismatch");
+            }
+        }
+        assert_eq!(moments.len(), rows * nm, "moment buffer length mismatch");
         ColumnarBlock { orders, k, nm, rows, u, v, moments }
     }
 
+    /// Re-encode the sketch panels as `q` (moments stay f64). Encoding
+    /// happens exactly once, at the store boundary: callers only ever
+    /// go f32 → quantized (ingest under a `panel-quant` setting) or
+    /// quantized → f32 ([`ColumnarBlock::decode`]); chaining two lossy
+    /// encodings would compound error and is never done.
+    pub fn encoded_as(&self, q: PanelQuant) -> ColumnarBlock {
+        if q == self.encoding() {
+            return self.clone();
+        }
+        let panel_len = self.rows * self.k;
+        let encode = |store: &PanelStore| {
+            let mut flat = vec![0.0f32; self.orders * panel_len];
+            for m in 0..self.orders {
+                store.decode_into(m, m * panel_len, &mut flat[m * panel_len..(m + 1) * panel_len]);
+            }
+            PanelStore::encode(flat, q, self.orders, panel_len)
+        };
+        ColumnarBlock {
+            orders: self.orders,
+            k: self.k,
+            nm: self.nm,
+            rows: self.rows,
+            u: encode(&self.u),
+            v: self.v.as_ref().map(encode),
+            moments: self.moments.clone(),
+        }
+    }
+
+    /// Decode back to plain f32 panels. Exact: every quantized value
+    /// maps to one f32, so `decode().encoded_as(q)` reproduces the
+    /// original store bitwise.
+    pub fn decode(&self) -> ColumnarBlock {
+        self.encoded_as(PanelQuant::None)
+    }
+
     /// Concatenate blocks covering consecutive row ranges into one
-    /// block — the segment-compaction kernel. Per (order, side) each
-    /// input panel lands with a single contiguous copy at its row
-    /// offset (the [`crate::core::arena::ArenaBuilder::set_block`]
-    /// pattern), so the merged block holds bitwise-identical sketches
-    /// and moments. Panics if the blocks disagree on shape/sidedness or
-    /// if `blocks` is empty.
+    /// block — the segment-compaction kernel. When every input shares
+    /// one encoding (and, for i8, identical per-order scales), each
+    /// (order, side) panel lands with a single contiguous copy at its
+    /// row offset, so the merged block holds bitwise-identical encoded
+    /// sketches. Otherwise the inputs are decoded to f32 first — decode
+    /// is value-exact, so the merged block still holds exactly the
+    /// values the estimators saw before compaction (zone summaries stay
+    /// admissible either way). Moments always copy verbatim. Panics if
+    /// the blocks disagree on shape/sidedness or if `blocks` is empty.
     pub fn concat(blocks: &[&ColumnarBlock]) -> ColumnarBlock {
         let first = blocks.first().expect("concat of zero blocks");
         let (orders, k, nm) = (first.orders, first.k, first.nm);
@@ -273,21 +457,38 @@ impl ColumnarBlock {
                 b.rows
             })
             .sum();
-        let mut out = ColumnarBlock::zeros(orders, k, nm, rows, two_sided);
+        let u_parts: Vec<(&PanelStore, usize)> =
+            blocks.iter().map(|b| (&b.u, b.rows)).collect();
+        let u = PanelStore::concat_rows(&u_parts, orders, k);
+        let v = if two_sided {
+            let v_parts: Vec<(&PanelStore, usize)> = blocks
+                .iter()
+                .map(|b| (b.v.as_ref().expect("two-sided"), b.rows))
+                .collect();
+            match PanelStore::concat_rows(&v_parts, orders, k) {
+                Some(v) => Some(Some(v)),
+                None => None,
+            }
+        } else {
+            Some(None)
+        };
+        let (u, v) = match (u, v) {
+            (Some(u), Some(v)) => (u, v),
+            _ => {
+                // Mixed encodings (or unequal i8 scales): merge in the
+                // exact f32 domain instead.
+                let decoded: Vec<ColumnarBlock> = blocks.iter().map(|b| b.decode()).collect();
+                let refs: Vec<&ColumnarBlock> = decoded.iter().collect();
+                return ColumnarBlock::concat(&refs);
+            }
+        };
+        let mut moments = vec![0.0f64; rows * nm];
         let mut r0 = 0usize;
         for b in blocks {
-            for m in 1..=orders {
-                let off = ((m - 1) * rows + r0) * k;
-                out.u[off..off + b.rows * k].copy_from_slice(b.u_order(m));
-                if let Some(vbuf) = out.v.as_mut() {
-                    vbuf[off..off + b.rows * k]
-                        .copy_from_slice(b.v_order(m).expect("two-sided"));
-                }
-            }
-            out.moments[r0 * nm..(r0 + b.rows) * nm].copy_from_slice(&b.moments);
+            moments[r0 * nm..(r0 + b.rows) * nm].copy_from_slice(&b.moments);
             r0 += b.rows;
         }
-        out
+        ColumnarBlock { orders, k, nm, rows, u, v, moments }
     }
 
     /// Σ x^order of block row `r` (order >= 1).
@@ -298,16 +499,17 @@ impl ColumnarBlock {
 
     /// Materialize block row `r` as a per-row [`RowSketch`] (the
     /// reference/AoS view — MLE queries and persistence use it).
+    /// Quantized panels decode to their exact f32 values.
     pub fn to_row_sketch(&self, r: usize) -> RowSketch {
         assert!(r < self.rows, "block row {r} out of range ({})", self.rows);
         let mut uside = SketchSet::zeros(self.orders, self.k);
         for m in 1..=self.orders {
-            uside.u_mut(m).copy_from_slice(self.u_row(m, r));
+            self.u_view(m, r).decode_into(uside.u_mut(m));
         }
         let vside_data = self.v.as_ref().map(|_| {
             let mut s = SketchSet::zeros(self.orders, self.k);
             for m in 1..=self.orders {
-                s.u_mut(m).copy_from_slice(self.v_row(m, r));
+                self.v_view(m, r).decode_into(s.u_mut(m));
             }
             s
         });
@@ -315,10 +517,12 @@ impl ColumnarBlock {
     }
 
     /// Payload bytes (storage accounting, mirrors
-    /// [`RowSketch::sketch_bytes`] summed over the block).
+    /// [`RowSketch::sketch_bytes`] summed over the block for f32 panels
+    /// and shrinks with the panel encoding — i8 scales included).
     pub fn bytes(&self) -> usize {
-        let floats = self.u.len() + self.v.as_ref().map_or(0, |v| v.len());
-        floats * std::mem::size_of::<f32>() + self.moments.len() * std::mem::size_of::<f64>()
+        self.u.bytes()
+            + self.v.as_ref().map_or(0, |v| v.bytes())
+            + self.moments.len() * std::mem::size_of::<f64>()
     }
 }
 
@@ -578,11 +782,12 @@ impl Sketcher {
         assert_eq!(out.k, k, "block sketch width mismatch");
         assert_eq!(out.nm, nm, "block moment count mismatch");
         assert_eq!(out.v.is_some(), two_sided, "block sidedness mismatch");
-        out.u.fill(0.0);
-        if let Some(v) = out.v.as_mut() {
+        let (u_buf, mut v_buf, mom_buf) = out.f32_bufs_mut();
+        u_buf.fill(0.0);
+        if let Some(v) = v_buf.as_deref_mut() {
             v.fill(0.0);
         }
-        out.moments.fill(0.0);
+        mom_buf.fill(0.0);
         if n == 0 {
             return;
         }
@@ -614,11 +819,11 @@ impl Sketcher {
         let per = n / nw;
         let rem = n % nw;
         let counts: Vec<usize> = (0..nw).map(|w| per + usize::from(w < rem)).collect();
-        let u_bands = split_order_bands(&mut out.u, n, k, &counts);
-        let v_bands = out.v.as_mut().map(|v| split_order_bands(v, n, k, &counts));
+        let u_bands = split_order_bands(u_buf, n, k, &counts);
+        let v_bands = v_buf.map(|v| split_order_bands(v, n, k, &counts));
         let mut mom_bands: Vec<&mut [f64]> = Vec::with_capacity(nw);
         {
-            let mut rest: &mut [f64] = &mut out.moments;
+            let mut rest: &mut [f64] = mom_buf;
             for &c in &counts {
                 let (head, tail) = rest.split_at_mut(c * nm);
                 mom_bands.push(head);
@@ -1268,5 +1473,137 @@ mod tests {
             alt.sketch_bytes() - moments_bytes,
             2 * (basic.sketch_bytes() - moments_bytes)
         );
+    }
+
+    #[test]
+    fn quantized_blocks_round_trip_within_codec_error() {
+        for strategy in [Strategy::Basic, Strategy::Alternative] {
+            let sk = mk(strategy, 8, 4);
+            let rows: Vec<Vec<f32>> = (0..5)
+                .map(|r| (0..48).map(|t| ((r * 7 + 3 * t) as f32 * 0.17).sin() * 2.0).collect())
+                .collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let block = sk.sketch_block(&refs, 1);
+            let f32_panel_bytes = block.bytes() - block.moments_all().len() * 8;
+            for q in [PanelQuant::F16, PanelQuant::Bf16, PanelQuant::I8] {
+                let enc = block.encoded_as(q);
+                assert_eq!(enc.encoding(), q);
+                assert_eq!(enc.rows(), block.rows());
+                assert_eq!(enc.is_two_sided(), block.is_two_sided());
+                // ≥2× panel-byte reduction (i8 scale vectors included).
+                let enc_panel_bytes = enc.bytes() - enc.moments_all().len() * 8;
+                assert!(
+                    2 * enc_panel_bytes <= f32_panel_bytes,
+                    "{q:?}: {enc_panel_bytes} vs {f32_panel_bytes}"
+                );
+                // Moments are never quantized.
+                assert_eq!(enc.moments_all(), block.moments_all());
+                for r in 0..block.rows() {
+                    let rs = enc.to_row_sketch(r);
+                    for m in 1..4 {
+                        for v_side in [false, true] {
+                            let orig: Vec<f32> = if v_side {
+                                block.v_row(m, r).to_vec()
+                            } else {
+                                block.u_row(m, r).to_vec()
+                            };
+                            let view = if v_side { enc.v_view(m, r) } else { enc.u_view(m, r) };
+                            let scale_of = |b: &ColumnarBlock| {
+                                let store = if v_side && b.is_two_sided() {
+                                    b.v_store().unwrap()
+                                } else {
+                                    b.u_store()
+                                };
+                                store.i8_scales().map(|s| s[m - 1]).unwrap_or(0.0)
+                            };
+                            for (j, &x) in orig.iter().enumerate() {
+                                let d = view.get(j);
+                                let bound = match q {
+                                    PanelQuant::None => 0.0,
+                                    PanelQuant::F16 => x.abs() as f64 / 2048.0 + 2.0f64.powi(-24),
+                                    PanelQuant::Bf16 => x.abs() as f64 / 256.0 + 1e-30,
+                                    PanelQuant::I8 => scale_of(&enc) as f64 * 0.5 + 1e-12,
+                                };
+                                assert!(
+                                    ((d - x) as f64).abs() <= bound,
+                                    "{q:?} m={m} r={r} j={j} v={v_side}: {d} vs {x}"
+                                );
+                            }
+                            // AoS export decodes to exactly the stored values.
+                            let decoded: Vec<f32> = (0..8).map(|j| view.get(j)).collect();
+                            let aos = if v_side { rs.vside().u(m) } else { rs.uside.u(m) };
+                            assert_eq!(aos, decoded.as_slice());
+                        }
+                    }
+                }
+                // Decode is value-exact: re-encoding reproduces the store.
+                let dec = enc.decode();
+                assert_eq!(dec.encoding(), PanelQuant::None);
+                assert_eq!(dec.encoded_as(q), enc);
+            }
+        }
+    }
+
+    #[test]
+    fn concat_merges_homogeneous_encodings_and_decodes_mixed() {
+        let sk = mk(Strategy::Alternative, 8, 4);
+        let mk_block = |seed: usize, n: usize| {
+            let rows: Vec<Vec<f32>> = (0..n)
+                .map(|r| (0..40).map(|t| ((seed + 5 * r + 2 * t) as f32 * 0.19).sin()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            sk.sketch_block(&refs, 1)
+        };
+        let (a, b) = (mk_block(1, 3), mk_block(100, 4));
+
+        // Same encoding (f16): byte-concat; encoded rows land verbatim.
+        let (qa, qb) = (a.encoded_as(PanelQuant::F16), b.encoded_as(PanelQuant::F16));
+        let merged = ColumnarBlock::concat(&[&qa, &qb]);
+        assert_eq!(merged.encoding(), PanelQuant::F16);
+        assert_eq!(merged.rows(), 7);
+        for r in 0..7 {
+            let (src, sr) = if r < 3 { (&qa, r) } else { (&qb, r - 3) };
+            for m in 1..4 {
+                for j in 0..8 {
+                    assert_eq!(merged.u_view(m, r).get(j), src.u_view(m, sr).get(j));
+                    assert_eq!(merged.v_view(m, r).get(j), src.v_view(m, sr).get(j));
+                }
+            }
+            assert_eq!(merged.moments_row(r), src.moments_row(sr));
+        }
+
+        // Mixed encodings: the merge happens in the exact f32 domain —
+        // quantized inputs contribute their decoded values, f32 inputs
+        // their originals, bitwise.
+        let mixed = ColumnarBlock::concat(&[&qa, &b]);
+        assert_eq!(mixed.encoding(), PanelQuant::None);
+        for m in 1..4 {
+            let want: Vec<f32> = (0..8).map(|j| qa.u_view(m, 1).get(j)).collect();
+            assert_eq!(mixed.u_row(m, 1), want.as_slice());
+            assert_eq!(mixed.u_row(m, 5), b.u_row(m, 2));
+        }
+
+        // i8 with unequal per-order scales cannot byte-concat (re-scaling
+        // would change values): falls back to decoded f32.
+        let (ia, ib) = (a.encoded_as(PanelQuant::I8), b.encoded_as(PanelQuant::I8));
+        assert_ne!(
+            ia.u_store().i8_scales(),
+            ib.u_store().i8_scales(),
+            "test premise: different data should give different scales"
+        );
+        let im = ColumnarBlock::concat(&[&ia, &ib]);
+        assert_eq!(im.encoding(), PanelQuant::None);
+        for m in 1..4 {
+            let want: Vec<f32> = (0..8).map(|j| ib.u_view(m, 0).get(j)).collect();
+            assert_eq!(im.u_row(m, 3), want.as_slice());
+        }
+
+        // Identical scales (same block twice) stay i8 end to end.
+        let twice = ColumnarBlock::concat(&[&ia, &ia]);
+        assert_eq!(twice.encoding(), PanelQuant::I8);
+        assert_eq!(twice.rows(), 6);
+        for j in 0..8 {
+            assert_eq!(twice.u_view(2, 4).get(j), ia.u_view(2, 1).get(j));
+        }
     }
 }
