@@ -1,0 +1,1258 @@
+//! Per-function forward dataflow for pallas-lint v2.
+//!
+//! Two linear passes over a function body's token stream:
+//!
+//! * **Taint** — tracks where integer values come from. Origins are
+//!   strings: `param:<name>` for formal parameters, `dec@<line>` for
+//!   values produced by a byte decoder (`from_le_bytes`, a crate
+//!   function whose return is tainted, or an unresolved method named
+//!   like a primitive width). Field projection composes
+//!   (`param:h.map_rows`). `ensure!`/`bail!` arguments, `if`/`while`
+//!   conditions, and `match` scrutinees *validate* the origins they
+//!   mention. An allocation sized by an unvalidated `dec@` origin is a
+//!   finding; sized by an unvalidated parameter it marks that
+//!   parameter *sensitive*, and callers passing unvalidated decoded
+//!   values into sensitive positions get the finding instead — that is
+//!   the cross-helper reach the v1 lexical rule lacked.
+//!
+//! * **Locks** — tracks which lock classes are held at each point.
+//!   Classes are the `SketchStore` lock fields in their declared
+//!   global order ([`LOCK_ORDER`]); guards from `let` bindings live to
+//!   end of scope, temporaries die at the end of their statement.
+//!   Blocking acquisitions while a lower-ordered class is held,
+//!   re-acquisition of a non-sharded class, and channel/thread
+//!   blocking operations under any guard are findings. Acquisition
+//!   pairs involving classes outside the declared order become crate
+//!   edges; rules.rs reports them only when two call paths disagree
+//!   on direction.
+//!
+//! Both passes are linear-scan approximations of dominance: facts
+//! established earlier in the token stream are assumed to dominate
+//! later uses, which holds for the rustfmt-shaped, early-return style
+//! this crate enforces.
+//!
+//! Crate-level context lives in [`Summaries`]; rules.rs recomputes the
+//! per-function facts to a fixpoint as summaries evolve.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::syntax::{TokKind, Tree};
+
+/// Declared global lock-acquisition order for `SketchStore` fields.
+/// Earlier classes must be acquired before later ones; `shards` may
+/// nest with itself because shard guards are taken index-ascending.
+pub const LOCK_ORDER: [&str; 4] = ["cached", "compaction", "shards", "segments"];
+
+const ACQUIRE_METHODS: [&str; 9] = [
+    "read",
+    "write",
+    "lock",
+    "read_recover",
+    "write_recover",
+    "lock_recover",
+    "try_read",
+    "try_write",
+    "try_lock",
+];
+
+/// Guard adapters that keep the acquire expression a guard value.
+const GUARD_ADAPTERS: [&str; 4] = ["unwrap", "ok", "expect", "unwrap_or_else"];
+
+/// Methods whose result does not carry the receiver's taint (sizes of
+/// in-memory values, counts already bounded by materialized data).
+const BENIGN_METHODS: [&str; 7] =
+    ["len", "capacity", "is_empty", "remaining", "bytes", "count", "min"];
+
+/// Method names assumed to decode untrusted bytes when they do not
+/// resolve to a crate function (reader helpers named after widths).
+const DECODER_FALLBACK: [&str; 4] = ["u8", "u16", "u32", "u64"];
+
+/// Receiver methods that block on another thread.
+const BLOCKING_METHODS: [&str; 4] = ["send", "recv", "recv_timeout", "spawn"];
+
+const KEYWORDS_NOT_CALLS: [&str; 8] =
+    ["if", "while", "for", "match", "return", "let", "loop", "in"];
+
+/// Crate-level facts carried between fixpoint iterations.
+#[derive(Default, Clone, PartialEq, Eq)]
+pub struct Summaries {
+    /// All function names defined in the crate (resolution universe).
+    pub fns: BTreeSet<String>,
+    /// Functions whose return value derives from decoded bytes
+    /// without an intervening validation.
+    pub taint_ret: BTreeSet<String>,
+    /// Function → parameter indices that size an allocation without
+    /// local validation.
+    pub sensitive: BTreeMap<String, BTreeSet<usize>>,
+    /// Function → known lock classes it (transitively) acquires.
+    pub locks: BTreeMap<String, BTreeSet<String>>,
+}
+
+/// Facts extracted from one function under the current summaries.
+#[derive(Default, Clone)]
+pub struct FnFacts {
+    pub name: String,
+    /// Lines allocating with an unvalidated decoded size.
+    pub alloc_findings: Vec<usize>,
+    /// (line, callee): unvalidated decoded value passed into a
+    /// sensitive parameter position.
+    pub call_findings: Vec<(usize, String)>,
+    /// Parameter indices that size allocations (here or in callees).
+    pub sensitive: BTreeSet<usize>,
+    /// Return value carries unvalidated decoded taint.
+    pub taint_ret: bool,
+    /// (line, message): definite lock-order violations.
+    pub order_findings: Vec<(usize, String)>,
+    /// (held-class, acquired-class, line) edges involving a class
+    /// outside [`LOCK_ORDER`]; adjudicated crate-wide.
+    pub edges: Vec<(String, String, usize)>,
+    /// (line, message): blocking operation while a guard is held.
+    pub blocking_findings: Vec<(usize, String)>,
+    /// Known lock classes acquired directly or via callees.
+    pub acquired: BTreeSet<String>,
+}
+
+/// Run both passes over `item`'s body.
+pub fn fn_facts(
+    code: &str,
+    tree: &Tree,
+    item: &super::syntax::FnItem,
+    sums: &Summaries,
+) -> FnFacts {
+    let mut facts = FnFacts { name: item.name.clone(), ..FnFacts::default() };
+    let Some((b0, b1)) = item.body else { return facts };
+    taint_walk(code, tree, item, b0, b1, sums, &mut facts);
+    lock_walk(code, tree, b0, b1, sums, &mut facts);
+    facts
+}
+
+fn byte_at(code: &str, tree: &Tree, i: usize) -> u8 {
+    code.as_bytes()[tree.toks[i].start]
+}
+
+fn is_punct(code: &str, tree: &Tree, i: usize, c: u8) -> bool {
+    tree.toks[i].kind == TokKind::Punct && byte_at(code, tree, i) == c
+}
+
+fn is_open(code: &str, tree: &Tree, i: usize, c: u8) -> bool {
+    tree.toks[i].kind == TokKind::Open && byte_at(code, tree, i) == c
+}
+
+/// `i` and `i+1` form a `::` path separator.
+fn is_path_sep(code: &str, tree: &Tree, i: usize) -> bool {
+    i + 1 < tree.toks.len()
+        && is_punct(code, tree, i, b':')
+        && is_punct(code, tree, i + 1, b':')
+        && tree.toks[i].end == tree.toks[i + 1].start
+}
+
+// ---------------------------------------------------------------- taint
+
+struct TaintCx<'a> {
+    taint: BTreeMap<String, BTreeSet<String>>,
+    validated: BTreeSet<String>,
+    sums: &'a Summaries,
+}
+
+impl TaintCx<'_> {
+    fn valid(&self, origin: &str) -> bool {
+        self.validated.contains(origin)
+            || self.validated.iter().any(|v| {
+                // A validated value vouches for its field projections
+                // (`ensure!(h <= cap)` covers `h.rows`), and a
+                // field-level gate vouches for the struct it projects
+                // from when that struct is passed onward whole:
+                // `ensure!(header.rows * row_bytes <= file_len)`
+                // followed by `read_row(&mut r, &header)` is the
+                // dominant decode-then-gate idiom, and a name-keyed
+                // analysis cannot see which fields the callee sizes by.
+                // Scalar allocation sizes still need their own origin
+                // (or a field of it) validated — `dec@L` never gains a
+                // `.field` suffix from a gate on an unrelated value.
+                (origin.len() > v.len()
+                    && origin.starts_with(v.as_str())
+                    && origin.as_bytes()[v.len()] == b'.')
+                    || (v.len() > origin.len()
+                        && v.starts_with(origin)
+                        && v.as_bytes()[origin.len()] == b'.')
+            })
+    }
+}
+
+/// Union of chain origins for every chain rooted in `[from, to)`.
+fn origins_of(cx: &TaintCx, code: &str, tree: &Tree, from: usize, to: usize) -> BTreeSet<String> {
+    let t = &tree.toks;
+    let mut out = BTreeSet::new();
+    let to = to.min(t.len());
+    for i in from..to {
+        if t[i].kind != TokKind::Ident {
+            continue;
+        }
+        // Chain roots only: not a `.field`/`.m()` segment, not the
+        // tail of a `::` path.
+        if i > 0 && is_punct(code, tree, i - 1, b'.') {
+            continue;
+        }
+        if i >= 2 && is_path_sep(code, tree, i - 2) {
+            continue;
+        }
+        out.extend(chain_origins(cx, code, tree, i, to));
+    }
+    out
+}
+
+/// Walk one ident chain (`a.b.c()`, `T::f(x)?`, `buf[i]`) and return
+/// the origin set of its value.
+fn chain_origins(
+    cx: &TaintCx,
+    code: &str,
+    tree: &Tree,
+    start: usize,
+    limit: usize,
+) -> BTreeSet<String> {
+    let t = &tree.toks;
+    let root = tree.text(code, start);
+    let mut acc: BTreeSet<String> =
+        cx.taint.get(root).cloned().unwrap_or_default();
+    let mut emitted: BTreeSet<String> = BTreeSet::new();
+    let mut i = start; // current segment ident (or tuple-index num)
+    let mut is_root = true;
+    loop {
+        // Segment: call or field?
+        let callish = i + 1 < limit && is_open(code, tree, i + 1, b'(');
+        if callish && t[i].kind == TokKind::Ident {
+            let callee = tree.text(code, i);
+            let line = tree.line(code, i);
+            if BENIGN_METHODS.contains(&callee) {
+                acc.clear();
+            } else if cx.sums.taint_ret.contains(callee)
+                || callee == "from_le_bytes"
+                || callee == "from_be_bytes"
+                || (DECODER_FALLBACK.contains(&callee) && !cx.sums.fns.contains(callee))
+            {
+                acc = BTreeSet::from([format!("dec@{line}")]);
+            } else {
+                // Unknown transform: the receiver's taint escapes into
+                // the result only as "was derived from" — record it.
+                emitted.append(&mut acc);
+            }
+        } else if !is_root {
+            // Field / tuple-index projection composes origins.
+            let field = tree.text(code, i);
+            acc = acc.iter().map(|o| format!("{o}.{field}")).collect();
+        }
+        is_root = false;
+        // Continuation: skip the call group, then `?`/index hops, then
+        // follow `.`/`::` to the next segment.
+        let mut p = if callish { tree.close_of(i + 1) } else { i };
+        loop {
+            let n = p + 1;
+            if n >= limit {
+                emitted.extend(acc);
+                return emitted;
+            }
+            if is_punct(code, tree, n, b'?') {
+                p = n;
+            } else if is_open(code, tree, n, b'[') {
+                p = tree.close_of(n);
+            } else {
+                break;
+            }
+        }
+        let n = p + 1;
+        if n < limit && is_punct(code, tree, n, b'.') && n + 1 < limit
+            && matches!(t[n + 1].kind, TokKind::Ident | TokKind::Num)
+        {
+            i = n + 1;
+        } else if n + 2 < limit && is_path_sep(code, tree, n)
+            && t[n + 2].kind == TokKind::Ident
+        {
+            i = n + 2;
+        } else {
+            emitted.extend(acc);
+            return emitted;
+        }
+    }
+}
+
+/// Scan a `let`/`for` pattern region and return bound names (skips
+/// `mut`/`ref`, constructors, paths, and the type annotation after a
+/// top-level `:`).
+fn pattern_names(code: &str, tree: &Tree, from: usize, to: usize) -> Vec<String> {
+    let t = &tree.toks;
+    let mut names = Vec::new();
+    let mut i = from;
+    while i < to.min(t.len()) {
+        if is_punct(code, tree, i, b':') && !is_path_sep(code, tree, i)
+            && !(i > 0 && is_path_sep(code, tree, i - 1))
+        {
+            break; // type annotation — stop collecting
+        }
+        if t[i].kind == TokKind::Ident {
+            let s = tree.text(code, i);
+            let ctor = i + 1 < t.len()
+                && (is_open(code, tree, i + 1, b'(')
+                    || is_punct(code, tree, i + 1, b'!')
+                    || is_path_sep(code, tree, i + 1));
+            if s != "mut" && s != "ref" && s != "_" && !ctor
+                && !(i >= 2 && is_path_sep(code, tree, i - 2))
+            {
+                names.push(s.to_string());
+            }
+        }
+        i += 1;
+    }
+    names
+}
+
+/// Find the `=` terminating a `let` pattern, scanning from `from`.
+/// Returns None for `let`-else-less declarations (`let x;`).
+fn find_pattern_eq(code: &str, tree: &Tree, from: usize, to: usize) -> Option<usize> {
+    let t = &tree.toks;
+    let mut i = from;
+    while i < to.min(t.len()) {
+        match t[i].kind {
+            TokKind::Open => i = tree.close_of(i) + 1,
+            TokKind::Punct => {
+                let c = byte_at(code, tree, i);
+                if c == b'=' {
+                    // not ==, >=, <=, =>
+                    let next_eq = is_punct(code, tree, i + 1, b'=')
+                        && t[i].end == t[i + 1].start;
+                    let next_gt = is_punct(code, tree, i + 1, b'>')
+                        && t[i].end == t[i + 1].start;
+                    let prev_cmp = i > 0
+                        && t[i - 1].end == t[i].start
+                        && matches!(byte_at(code, tree, i - 1), b'=' | b'>' | b'<' | b'!');
+                    if !next_eq && !next_gt && !prev_cmp {
+                        return Some(i);
+                    }
+                } else if c == b';' {
+                    return None;
+                }
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    None
+}
+
+/// End of the statement starting after `=` at token `from`: the first
+/// `;` at relative brace depth 0, or a `{` opening a block body
+/// (`if let`/`while let`). Groups are jumped.
+fn stmt_end(code: &str, tree: &Tree, from: usize, to: usize) -> usize {
+    let t = &tree.toks;
+    let mut i = from;
+    while i < to.min(t.len()) {
+        match t[i].kind {
+            TokKind::Open => {
+                if byte_at(code, tree, i) == b'{' {
+                    return i;
+                }
+                i = tree.close_of(i) + 1;
+            }
+            TokKind::Punct if byte_at(code, tree, i) == b';' => return i,
+            _ => i += 1,
+        }
+    }
+    to.min(t.len())
+}
+
+/// Condition region: from `from` to the next `{` at group depth 0.
+fn cond_end(code: &str, tree: &Tree, from: usize, to: usize) -> usize {
+    let t = &tree.toks;
+    let mut i = from;
+    while i < to.min(t.len()) {
+        match t[i].kind {
+            TokKind::Open => {
+                if byte_at(code, tree, i) == b'{' {
+                    return i;
+                }
+                i = tree.close_of(i) + 1;
+            }
+            _ => i += 1,
+        }
+    }
+    to.min(t.len())
+}
+
+fn taint_walk(
+    code: &str,
+    tree: &Tree,
+    item: &super::syntax::FnItem,
+    b0: usize,
+    b1: usize,
+    sums: &Summaries,
+    facts: &mut FnFacts,
+) {
+    let t = &tree.toks;
+    let mut cx = TaintCx { taint: BTreeMap::new(), validated: BTreeSet::new(), sums };
+    for p in &item.params {
+        cx.taint.insert(p.clone(), BTreeSet::from([format!("param:{p}")]));
+    }
+    let mut ret_origins: BTreeSet<String> = BTreeSet::new();
+    let mut depth = 1usize;
+    let mut last_semi = b0; // last `;` at body depth 1
+    let mut i = b0 + 1;
+    while i < b1 {
+        match t[i].kind {
+            TokKind::Open if byte_at(code, tree, i) == b'{' => {
+                depth += 1;
+                i += 1;
+            }
+            TokKind::Close if byte_at(code, tree, i) == b'}' => {
+                depth = depth.saturating_sub(1);
+                i += 1;
+            }
+            TokKind::Punct if byte_at(code, tree, i) == b';' => {
+                if depth == 1 {
+                    last_semi = i;
+                }
+                i += 1;
+            }
+            TokKind::Ident => {
+                let w = tree.text(code, i);
+                match w {
+                    "let" => {
+                        if let Some(eq) = find_pattern_eq(code, tree, i + 1, b1) {
+                            let names = pattern_names(code, tree, i + 1, eq);
+                            let end = stmt_end(code, tree, eq + 1, b1);
+                            let orig = origins_of(&cx, code, tree, eq + 1, end);
+                            for n in names {
+                                cx.taint.insert(n, orig.clone());
+                            }
+                            i = eq + 1; // rescan RHS for allocs/validators
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    "for" => {
+                        // `for <pat> in <iter> {`
+                        let mut j = i + 1;
+                        while j < b1 && !(t[j].kind == TokKind::Ident && tree.is(code, j, "in"))
+                        {
+                            if t[j].kind == TokKind::Open {
+                                j = tree.close_of(j);
+                            }
+                            j += 1;
+                        }
+                        if j < b1 {
+                            let names = pattern_names(code, tree, i + 1, j);
+                            let end = cond_end(code, tree, j + 1, b1);
+                            let orig = origins_of(&cx, code, tree, j + 1, end);
+                            for n in names {
+                                cx.taint.insert(n, orig.clone());
+                            }
+                            i = j + 1;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    "if" | "while" | "match" => {
+                        let from = if w != "match"
+                            && i + 1 < b1
+                            && tree.is(code, i + 1, "let")
+                        {
+                            // if-let: bind the pattern, validate the RHS
+                            let pat_from = i + 2;
+                            if let Some(eq) = find_pattern_eq(code, tree, pat_from, b1) {
+                                let end = cond_end(code, tree, eq + 1, b1);
+                                let orig = origins_of(&cx, code, tree, eq + 1, end);
+                                for n in pattern_names(code, tree, pat_from, eq) {
+                                    cx.taint.insert(n, orig.clone());
+                                }
+                                eq + 1
+                            } else {
+                                i + 1
+                            }
+                        } else {
+                            i + 1
+                        };
+                        let end = cond_end(code, tree, from, b1);
+                        let orig = origins_of(&cx, code, tree, from, end);
+                        cx.validated.extend(orig);
+                        i += 1;
+                    }
+                    "return" => {
+                        let end = stmt_end(code, tree, i + 1, b1);
+                        ret_origins.extend(origins_of(&cx, code, tree, i + 1, end));
+                        i += 1;
+                    }
+                    "ensure" | "bail" => {
+                        if i + 1 < b1
+                            && is_punct(code, tree, i + 1, b'!')
+                            && i + 2 < b1
+                            && t[i + 2].kind == TokKind::Open
+                        {
+                            let close = tree.close_of(i + 2);
+                            let orig = origins_of(&cx, code, tree, i + 3, close);
+                            cx.validated.extend(orig);
+                            i = i + 3;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    "vec" => {
+                        // `vec![elem; size]`
+                        if i + 1 < b1
+                            && is_punct(code, tree, i + 1, b'!')
+                            && i + 2 < b1
+                            && is_open(code, tree, i + 2, b'[')
+                        {
+                            let close = tree.close_of(i + 2);
+                            let mut semi = None;
+                            let mut j = i + 3;
+                            while j < close {
+                                if t[j].kind == TokKind::Open {
+                                    j = tree.close_of(j);
+                                } else if is_punct(code, tree, j, b';') {
+                                    semi = Some(j);
+                                    break;
+                                }
+                                j += 1;
+                            }
+                            if let Some(s) = semi {
+                                let orig = origins_of(&cx, code, tree, s + 1, close);
+                                note_alloc(&cx, item, facts, tree.line(code, i), &orig);
+                            }
+                        }
+                        i += 1;
+                    }
+                    "with_capacity" | "reserve" => {
+                        let dotted = i > 0 && is_punct(code, tree, i - 1, b'.');
+                        let ok = if w == "reserve" { dotted } else { true };
+                        if ok && i + 1 < b1 && is_open(code, tree, i + 1, b'(') {
+                            let close = tree.close_of(i + 1);
+                            let orig = origins_of(&cx, code, tree, i + 2, close);
+                            note_alloc(&cx, item, facts, tree.line(code, i), &orig);
+                        }
+                        i += 1;
+                    }
+                    _ => {
+                        // Call into a function with sensitive params?
+                        let callish = i + 1 < b1
+                            && is_open(code, tree, i + 1, b'(')
+                            && !KEYWORDS_NOT_CALLS.contains(&w);
+                        if callish && crate_local_callee(code, tree, i) {
+                            if let Some(sens) = sums.sensitive.get(w) {
+                                check_sensitive_call(
+                                    &cx, code, tree, item, facts, i, sens,
+                                );
+                            }
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    // Trailing expression (implicit return).
+    if last_semi + 1 < b1 {
+        ret_origins.extend(origins_of(&cx, code, tree, last_semi + 1, b1));
+    }
+    facts.taint_ret = ret_origins
+        .iter()
+        .any(|o| o.starts_with("dec@") && !cx.valid(o));
+}
+
+/// Record an allocation sized by `origins`: unvalidated decode →
+/// finding; unvalidated parameter → sensitive parameter.
+fn note_alloc(
+    cx: &TaintCx,
+    item: &super::syntax::FnItem,
+    facts: &mut FnFacts,
+    line: usize,
+    origins: &BTreeSet<String>,
+) {
+    for o in origins {
+        if cx.valid(o) {
+            continue;
+        }
+        if o.starts_with("dec@") {
+            facts.alloc_findings.push(line);
+        } else if let Some(rest) = o.strip_prefix("param:") {
+            let root = rest.split('.').next().unwrap_or(rest);
+            if let Some(idx) = item.params.iter().position(|p| p == root) {
+                facts.sensitive.insert(idx);
+            }
+        }
+    }
+}
+
+/// Whether the call ident at `i` plausibly targets a crate-local fn, so
+/// that a name-keyed summary may be applied: `self.f(..)`, free `f(..)`,
+/// or `Self::f(..)`. Foreign-path calls (`Arc::new(..)`, `Vec::insert`
+/// receivers) must NOT match — otherwise an unrelated local `fn new`
+/// or `fn clone` poisons every `Arc::new` / `Arc::clone` call site in
+/// the crate with its lock and taint summaries.
+fn crate_local_callee(code: &str, tree: &Tree, i: usize) -> bool {
+    let dotted = i > 0 && is_punct(code, tree, i - 1, b'.');
+    if dotted {
+        // Method call: only `self.f(..)` is summary-eligible; the
+        // receiver of `segs.insert(..)` is a std container, not us.
+        return i >= 2
+            && tree.toks[i - 2].kind == TokKind::Ident
+            && tree.is(code, i - 2, "self");
+    }
+    if i >= 2 && is_path_sep(code, tree, i - 2) {
+        // Path call `X::f(..)`: eligible only when X is `Self`.
+        return i >= 3
+            && tree.toks[i - 3].kind == TokKind::Ident
+            && tree.is(code, i - 3, "Self");
+    }
+    true
+}
+
+/// Arguments flowing into sensitive parameter positions of `callee`.
+fn check_sensitive_call(
+    cx: &TaintCx,
+    code: &str,
+    tree: &Tree,
+    item: &super::syntax::FnItem,
+    facts: &mut FnFacts,
+    name_tok: usize,
+    sens: &BTreeSet<usize>,
+) {
+    let open = name_tok + 1;
+    let close = tree.close_of(open);
+    // Split top-level commas.
+    let t = &tree.toks;
+    let mut args: Vec<(usize, usize)> = Vec::new();
+    let mut seg = open + 1;
+    let mut j = open + 1;
+    while j <= close && j < t.len() {
+        let comma = is_punct(code, tree, j, b',');
+        if j == close || comma {
+            if j > seg {
+                args.push((seg, j));
+            }
+            seg = j + 1;
+        } else if t[j].kind == TokKind::Open {
+            j = tree.close_of(j);
+        }
+        j += 1;
+    }
+    // Method receivers shift positions by zero here: sensitive indices
+    // are computed over declared params excluding self, and call-site
+    // args exclude the receiver, so positions line up.
+    for &si in sens {
+        let Some(&(a0, a1)) = args.get(si) else { continue };
+        for o in origins_of(cx, code, tree, a0, a1) {
+            if cx.valid(&o) {
+                continue;
+            }
+            if o.starts_with("dec@") {
+                facts
+                    .call_findings
+                    .push((tree.line(code, name_tok), tree.text(code, name_tok).to_string()));
+            } else if let Some(rest) = o.strip_prefix("param:") {
+                let root = rest.split('.').next().unwrap_or(rest);
+                if let Some(idx) = item.params.iter().position(|p| p == root) {
+                    facts.sensitive.insert(idx);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- locks
+
+struct Guard {
+    class: String,
+    known: bool,
+    name: Option<String>,
+    /// Brace depth of the binding (named) or acquisition (temporary).
+    depth: usize,
+    temp: bool,
+}
+
+fn lock_fields() -> &'static [&'static str] {
+    &LOCK_ORDER
+}
+
+/// Prepass: `let`/`for` bindings whose right-hand side mentions
+/// `self.<lock-field>` alias their bound names to that field (iterator
+/// pipelines over `self.shards`, etc.).
+fn alias_map(code: &str, tree: &Tree, b0: usize, b1: usize) -> BTreeMap<String, String> {
+    let t = &tree.toks;
+    let mut out = BTreeMap::new();
+    let mut i = b0 + 1;
+    while i < b1 {
+        if t[i].kind == TokKind::Ident {
+            let w = tree.text(code, i);
+            if w == "let" {
+                if let Some(eq) = find_pattern_eq(code, tree, i + 1, b1) {
+                    let end = stmt_end(code, tree, eq + 1, b1);
+                    if let Some(f) = mentioned_lock_field(code, tree, eq + 1, end) {
+                        for n in pattern_names(code, tree, i + 1, eq) {
+                            out.insert(n, f.to_string());
+                        }
+                    }
+                    i = eq;
+                }
+            } else if w == "for" {
+                let mut j = i + 1;
+                while j < b1 && !(t[j].kind == TokKind::Ident && tree.is(code, j, "in")) {
+                    if t[j].kind == TokKind::Open {
+                        j = tree.close_of(j);
+                    }
+                    j += 1;
+                }
+                if j < b1 {
+                    let end = cond_end(code, tree, j + 1, b1);
+                    if let Some(f) = mentioned_lock_field(code, tree, j + 1, end) {
+                        for n in pattern_names(code, tree, i + 1, j) {
+                            out.insert(n, f.to_string());
+                        }
+                    }
+                    i = j;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// First `self.<lock-field>` mentioned in the region, if any.
+fn mentioned_lock_field<'c>(
+    code: &'c str,
+    tree: &Tree,
+    from: usize,
+    to: usize,
+) -> Option<&'c str> {
+    let t = &tree.toks;
+    for i in from..to.min(t.len()).saturating_sub(2) {
+        if t[i].kind == TokKind::Ident
+            && tree.is(code, i, "self")
+            && is_punct(code, tree, i + 1, b'.')
+            && t[i + 2].kind == TokKind::Ident
+        {
+            let f = tree.text(code, i + 2);
+            if lock_fields().contains(&f) {
+                return Some(f);
+            }
+        }
+    }
+    None
+}
+
+fn order_index(class: &str) -> Option<usize> {
+    LOCK_ORDER.iter().position(|c| *c == class)
+}
+
+fn lock_walk(
+    code: &str,
+    tree: &Tree,
+    b0: usize,
+    b1: usize,
+    sums: &Summaries,
+    facts: &mut FnFacts,
+) {
+    let t = &tree.toks;
+    let aliases = alias_map(code, tree, b0, b1);
+    let mut held: Vec<Guard> = Vec::new();
+    let mut depth = 1usize;
+    let mut i = b0 + 1;
+    while i < b1 {
+        match t[i].kind {
+            TokKind::Open if byte_at(code, tree, i) == b'{' => {
+                depth += 1;
+                i += 1;
+            }
+            TokKind::Close if byte_at(code, tree, i) == b'}' => {
+                depth = depth.saturating_sub(1);
+                let d = depth;
+                // Temporaries die when the closing brace lands back at
+                // (or below) their acquisition depth — an if-let
+                // scrutinee guard lives exactly through the if body.
+                held.retain(|g| if g.temp { d > g.depth } else { g.depth <= d });
+                i += 1;
+            }
+            TokKind::Punct if byte_at(code, tree, i) == b';' => {
+                let d = depth;
+                held.retain(|g| !(g.temp && g.depth == d));
+                i += 1;
+            }
+            TokKind::Ident => {
+                let w = tree.text(code, i);
+                let dotted = i > 0 && is_punct(code, tree, i - 1, b'.');
+                let next_open_paren = i + 1 < b1 && is_open(code, tree, i + 1, b'(');
+                if w == "drop" && !dotted && next_open_paren {
+                    let close = tree.close_of(i + 1);
+                    if close == i + 3 && t[i + 2].kind == TokKind::Ident {
+                        let victim = tree.text(code, i + 2);
+                        held.retain(|g| g.name.as_deref() != Some(victim));
+                    }
+                    i = close + 1;
+                    continue;
+                }
+                if dotted
+                    && next_open_paren
+                    && tree.close_of(i + 1) == i + 2
+                    && ACQUIRE_METHODS.contains(&w)
+                {
+                    // Lock acquisition.
+                    let non_blocking = w.starts_with("try_");
+                    let (class, known) = resolve_class(code, tree, i, b0, &aliases);
+                    if !non_blocking {
+                        for g in &held {
+                            note_edge(facts, g, &class, known, tree.line(code, i));
+                        }
+                    }
+                    if known {
+                        facts.acquired.insert(class.clone());
+                    }
+                    let close = i + 2;
+                    let temp = guard_is_temporary(code, tree, close, b1);
+                    let name = if temp { None } else { let_binding_name(code, tree, i, b0) };
+                    let temp = temp || name.is_none();
+                    held.push(Guard { class, known, name, depth, temp });
+                    i = close + 1;
+                    continue;
+                }
+                // Blocking operations under a guard.
+                let blocking = (dotted
+                    && next_open_paren
+                    && (BLOCKING_METHODS.contains(&w)
+                        || (w == "join" && tree.close_of(i + 1) == i + 2)))
+                    || (!dotted
+                        && w == "thread"
+                        && i + 3 < b1
+                        && is_path_sep(code, tree, i + 1)
+                        && (tree.is(code, i + 3, "spawn") || tree.is(code, i + 3, "scope")));
+                if blocking && !held.is_empty() {
+                    let classes: Vec<&str> =
+                        held.iter().map(|g| g.class.as_str()).collect();
+                    facts.blocking_findings.push((
+                        tree.line(code, i),
+                        format!(
+                            "blocking `{w}` while holding lock(s) {}",
+                            classes.join(", ")
+                        ),
+                    ));
+                    i += 1;
+                    continue;
+                }
+                // Calls into crate functions that acquire locks:
+                // `self.f(..)`, free `f(..)`, and `Self::f(..)` only —
+                // see `crate_local_callee`.
+                if next_open_paren
+                    && !KEYWORDS_NOT_CALLS.contains(&w)
+                    && crate_local_callee(code, tree, i)
+                {
+                    if let Some(classes) = sums.locks.get(w) {
+                        for c in classes {
+                            for g in &held {
+                                note_edge(facts, g, c, true, tree.line(code, i));
+                            }
+                            facts.acquired.insert(c.clone());
+                        }
+                    }
+                }
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+}
+
+/// Record the (held → acquired) relation: definite finding when both
+/// classes are in the declared order, a crate edge otherwise.
+fn note_edge(facts: &mut FnFacts, held: &Guard, new_class: &str, new_known: bool, line: usize) {
+    if held.known && new_known {
+        let hi = order_index(&held.class);
+        let ni = order_index(new_class);
+        if let (Some(hi), Some(ni)) = (hi, ni) {
+            if held.class == new_class {
+                if new_class != "shards" {
+                    facts.order_findings.push((
+                        line,
+                        format!("re-acquires lock class `{new_class}` while already held"),
+                    ));
+                }
+            } else if hi > ni {
+                facts.order_findings.push((
+                    line,
+                    format!(
+                        "acquires `{new_class}` while holding `{}` — declared order is {}",
+                        held.class,
+                        LOCK_ORDER.join(" -> ")
+                    ),
+                ));
+            }
+            return;
+        }
+    }
+    facts
+        .edges
+        .push((held.class.clone(), new_class.to_string(), line));
+}
+
+/// Classify the expression after an acquire's `()` — adapters and `?`
+/// keep it a guard; any other `.method` consumes it immediately.
+fn guard_is_temporary(code: &str, tree: &Tree, close: usize, b1: usize) -> bool {
+    let t = &tree.toks;
+    let mut p = close;
+    loop {
+        let n = p + 1;
+        if n >= b1 {
+            return false;
+        }
+        if is_punct(code, tree, n, b'?') {
+            p = n;
+            continue;
+        }
+        if is_punct(code, tree, n, b'.') && n + 1 < b1 && t[n + 1].kind == TokKind::Ident {
+            let m = tree.text(code, n + 1);
+            if GUARD_ADAPTERS.contains(&m)
+                && n + 2 < b1
+                && is_open(code, tree, n + 2, b'(')
+            {
+                p = tree.close_of(n + 2);
+                continue;
+            }
+            return true; // projected through — the guard is a temporary
+        }
+        return false;
+    }
+}
+
+/// If the statement containing token `at` is a `let`, return the first
+/// bound name (the guard binding).
+fn let_binding_name(code: &str, tree: &Tree, at: usize, b0: usize) -> Option<String> {
+    let t = &tree.toks;
+    let mut j = at;
+    while j > b0 {
+        j -= 1;
+        match t[j].kind {
+            TokKind::Punct if byte_at(code, tree, j) == b';' => break,
+            TokKind::Open if byte_at(code, tree, j) == b'{' => break,
+            TokKind::Close if byte_at(code, tree, j) == b'}' => break,
+            _ => {}
+        }
+    }
+    // First significant token after the boundary.
+    let mut k = if j == b0 { b0 + 1 } else { j + 1 };
+    while k < at && t[k].kind != TokKind::Ident {
+        k += 1;
+    }
+    if k < at && tree.is(code, k, "let") {
+        let eq = find_pattern_eq(code, tree, k + 1, at)?;
+        pattern_names(code, tree, k + 1, eq).into_iter().next()
+    } else {
+        None
+    }
+}
+
+/// Resolve the lock class of the receiver of the acquire method at
+/// token `at` (the method ident; `at - 1` is the dot).
+fn resolve_class(
+    code: &str,
+    tree: &Tree,
+    at: usize,
+    b0: usize,
+    aliases: &BTreeMap<String, String>,
+) -> (String, bool) {
+    let t = &tree.toks;
+    let mut r = at.saturating_sub(2); // token before the dot
+    if t[r].kind == TokKind::Close && byte_at(code, tree, r) == b']' {
+        // `self.shards[i].write()` — hop over the index.
+        let open = tree.pair[r];
+        if open != super::syntax::NO_PAIR && open > 0 {
+            r = open - 1;
+        }
+    }
+    if t[r].kind == TokKind::Ident {
+        let name = tree.text(code, r);
+        let field_dot = r > 0 && is_punct(code, tree, r - 1, b'.');
+        if field_dot && lock_fields().contains(&name) {
+            return (name.to_string(), true);
+        }
+        if !field_dot {
+            // Same-statement backward search for `self.<field>` first
+            // (closure parameters over a lock-field iterator). This
+            // outranks the alias map: the alias prepass is
+            // flow-insensitive, so a closure param `|s|` shadowing an
+            // earlier `if let Some(s) = self.cached...` binding would
+            // otherwise resolve to the wrong class.
+            let mut j = r;
+            while j > b0 {
+                j -= 1;
+                match t[j].kind {
+                    TokKind::Punct if byte_at(code, tree, j) == b';' => break,
+                    TokKind::Open if byte_at(code, tree, j) == b'{' => break,
+                    TokKind::Close if byte_at(code, tree, j) == b'}' => break,
+                    _ => {}
+                }
+            }
+            if let Some(f) = mentioned_lock_field(code, tree, j, at) {
+                return (f.to_string(), true);
+            }
+            if let Some(f) = aliases.get(name) {
+                return (f.clone(), true);
+            }
+            return (name.to_string(), false);
+        }
+        // Dotted field that is not a declared lock class.
+        return (name.to_string(), false);
+    }
+    ("<expr>".to_string(), false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::syntax::{fn_items, Tree};
+
+    fn facts_of(code: &str, sums: &Summaries) -> Vec<FnFacts> {
+        let tree = Tree::parse(code);
+        fn_items(code, &tree)
+            .iter()
+            .map(|f| fn_facts(code, &tree, f, sums))
+            .collect()
+    }
+
+    #[test]
+    fn decoded_alloc_without_validation_is_flagged() {
+        let code = r#"
+fn read(buf: &[u8]) -> Vec<u8> {
+    let n = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    let mut out = Vec::with_capacity(n);
+    out
+}
+"#;
+        let fs = facts_of(code, &Summaries::default());
+        assert_eq!(fs[0].alloc_findings.len(), 1, "{:?}", fs[0].alloc_findings);
+    }
+
+    #[test]
+    fn ensure_validation_dominates_the_alloc() {
+        let code = r#"
+fn read(buf: &[u8]) -> Vec<u8> {
+    let n = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    ensure!(n <= MAX_ROWS);
+    let mut out = Vec::with_capacity(n);
+    out
+}
+"#;
+        let fs = facts_of(code, &Summaries::default());
+        assert!(fs[0].alloc_findings.is_empty(), "{:?}", fs[0].alloc_findings);
+    }
+
+    #[test]
+    fn param_sized_alloc_marks_sensitive_not_finding() {
+        let code = "fn fill(n: usize) -> Vec<u8> { let v = vec![0u8; n]; v }";
+        let fs = facts_of(code, &Summaries::default());
+        assert!(fs[0].alloc_findings.is_empty());
+        assert_eq!(fs[0].sensitive, BTreeSet::from([0]));
+    }
+
+    #[test]
+    fn decoded_arg_into_sensitive_param_is_flagged_at_call_site() {
+        let mut sums = Summaries::default();
+        sums.fns.insert("fill".into());
+        sums.sensitive.insert("fill".into(), BTreeSet::from([0]));
+        let code = r#"
+fn load(buf: &[u8]) {
+    let n = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    fill(n);
+}
+"#;
+        let fs = facts_of(code, &sums);
+        assert_eq!(fs[0].call_findings.len(), 1, "{:?}", fs[0].call_findings);
+    }
+
+    #[test]
+    fn taint_ret_propagates_through_helper() {
+        let code = "fn rd(b: &[u8]) -> u32 { u32::from_le_bytes([b[0], b[1], b[2], b[3]]) }";
+        let fs = facts_of(code, &Summaries::default());
+        assert!(fs[0].taint_ret);
+    }
+
+    #[test]
+    fn benign_len_clears_taint() {
+        let code = "fn f(rows: &[u8]) -> Vec<u8> { Vec::with_capacity(rows.len()) }";
+        let fs = facts_of(code, &Summaries::default());
+        assert!(fs[0].alloc_findings.is_empty());
+        assert!(fs[0].sensitive.is_empty());
+    }
+
+    #[test]
+    fn inverted_lock_order_is_flagged() {
+        let code = r#"
+fn bad(&self) {
+    let segs = self.segments.write_recover();
+    let c = self.compaction.lock_recover();
+}
+"#;
+        let fs = facts_of(code, &Summaries::default());
+        assert_eq!(fs[0].order_findings.len(), 1, "{:?}", fs[0].order_findings);
+    }
+
+    #[test]
+    fn declared_order_is_clean_and_temporaries_die_at_semicolon() {
+        let code = r#"
+fn good(&self) {
+    let plan = self.segments.read_recover().clone();
+    let c = self.compaction.lock_recover();
+    let mut segs = self.segments.write_recover();
+}
+"#;
+        // plan's guard is a temporary (projected through .clone()) and
+        // dies at the `;`, so compaction-after-segments never happens.
+        let fs = facts_of(code, &Summaries::default());
+        assert!(fs[0].order_findings.is_empty(), "{:?}", fs[0].order_findings);
+    }
+
+    #[test]
+    fn blocking_recv_under_guard_is_flagged() {
+        let code = r#"
+fn worker(&self) {
+    let guard = rx.lock_recover();
+    let block = guard.recv();
+}
+"#;
+        let fs = facts_of(code, &Summaries::default());
+        assert_eq!(fs[0].blocking_findings.len(), 1, "{:?}", fs[0].blocking_findings);
+    }
+
+    #[test]
+    fn closure_guard_resolves_via_same_statement_receiver() {
+        let code = r#"
+fn snap(&self) {
+    let cache = self.cached.write_recover();
+    let shards: Vec<_> = self.shards.iter().map(|s| s.read_recover()).collect();
+    let segs = self.segments.read_recover();
+}
+"#;
+        let fs = facts_of(code, &Summaries::default());
+        assert!(fs[0].order_findings.is_empty(), "{:?}", fs[0].order_findings);
+        assert!(fs[0].edges.is_empty(), "{:?}", fs[0].edges);
+        assert_eq!(
+            fs[0].acquired,
+            BTreeSet::from(["cached".to_string(), "shards".to_string(), "segments".to_string()])
+        );
+    }
+
+    #[test]
+    fn callee_lock_summary_creates_edges_at_call_site() {
+        let mut sums = Summaries::default();
+        sums.fns.insert("refresh".into());
+        sums.locks.insert("refresh".into(), BTreeSet::from(["compaction".to_string()]));
+        let code = r#"
+fn bad(&self) {
+    let segs = self.segments.write_recover();
+    self.refresh();
+}
+"#;
+        let fs = facts_of(code, &sums);
+        assert_eq!(fs[0].order_findings.len(), 1, "{:?}", fs[0].order_findings);
+    }
+
+    #[test]
+    fn try_acquire_is_held_but_creates_no_edge() {
+        let code = r#"
+fn ins(&self) {
+    let g = self.shards.write_recover();
+    if let Some(mut cache) = self.cached.try_write() {
+        cache.clear();
+    }
+}
+"#;
+        // shards -> cached would be inverted, but try_write is
+        // non-blocking and must not create the edge.
+        let fs = facts_of(code, &Summaries::default());
+        assert!(fs[0].order_findings.is_empty(), "{:?}", fs[0].order_findings);
+    }
+
+    #[test]
+    fn unknown_classes_become_crate_edges() {
+        let code = r#"
+fn a(&self) {
+    let g = left.lock_recover();
+    let h = right.lock_recover();
+}
+"#;
+        let fs = facts_of(code, &Summaries::default());
+        assert_eq!(fs[0].edges.len(), 1);
+        assert_eq!(fs[0].edges[0].0, "left");
+        assert_eq!(fs[0].edges[0].1, "right");
+    }
+
+    #[test]
+    fn foreign_path_call_does_not_match_local_summaries() {
+        // A crate-local `fn new` that locks and allocates must not
+        // poison `Arc::new(..)` call sites via the shared bare name.
+        let mut sums = Summaries::default();
+        sums.fns.insert("new".into());
+        sums.locks.insert("new".into(), BTreeSet::from(["cached".to_string()]));
+        sums.sensitive.insert("new".into(), BTreeSet::from([0]));
+        let code = r#"
+fn publish(&self, b: &[u8]) {
+    let n = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+    let g = self.shards[0].write_recover();
+    let v = Arc::new(n);
+}
+"#;
+        let fs = facts_of(code, &sums);
+        assert!(fs[0].order_findings.is_empty(), "{:?}", fs[0].order_findings);
+        assert!(fs[0].call_findings.is_empty(), "{:?}", fs[0].call_findings);
+        // `Self::new(..)` IS the local constructor — summaries apply.
+        let local = code.replace("Arc::new(n)", "Self::new(n)");
+        let fs = facts_of(&local, &sums);
+        assert_eq!(fs[0].order_findings.len(), 1, "{:?}", fs[0].order_findings);
+        assert_eq!(fs[0].call_findings.len(), 1, "{:?}", fs[0].call_findings);
+    }
+
+    #[test]
+    fn stale_alias_is_outranked_by_same_statement_receiver() {
+        // The alias prepass is flow-insensitive: `s` below is first an
+        // if-let binding over `cached`, then a closure parameter over
+        // the `shards` iterator. Same-statement evidence must win or
+        // the capture loop reads as a bogus `cached` re-acquisition.
+        let code = r#"
+fn snapshot(&self) -> Arc<StoreSnapshot> {
+    if let Some(s) = self.cached.read_recover().as_ref() {
+        return Arc::clone(s);
+    }
+    let mut cache = self.cached.write_recover();
+    let guards: Vec<_> = self.shards.iter().map(|s| s.read_recover()).collect();
+    *cache = Some(build(&guards));
+    drop(guards);
+}
+"#;
+        let fs = facts_of(code, &Summaries::default());
+        assert!(fs[0].order_findings.is_empty(), "{:?}", fs[0].order_findings);
+    }
+
+    #[test]
+    fn field_gate_validates_the_struct_passed_whole() {
+        // The decode-then-gate idiom: `ensure!` over header fields
+        // vouches for passing the header itself into a size-sensitive
+        // helper — a name-keyed analysis cannot see which fields the
+        // callee sizes by.
+        let mut sums = Summaries::default();
+        sums.fns.insert("read_row".into());
+        sums.fns.insert("decode_header".into());
+        sums.taint_ret.insert("decode_header".into());
+        sums.sensitive.insert("read_row".into(), BTreeSet::from([1]));
+        let code = r#"
+fn load(r: &mut Reader, file_len: u64) -> anyhow::Result<()> {
+    let h = decode_header(r)?;
+    ensure!(h.rows * h.row_bytes <= file_len);
+    for _ in 0..h.rows {
+        read_row(r, &h)?;
+    }
+    Ok(())
+}
+"#;
+        let fs = facts_of(code, &sums);
+        assert!(fs[0].call_findings.is_empty(), "{:?}", fs[0].call_findings);
+        let unguarded = code.replace("    ensure!(h.rows * h.row_bytes <= file_len);\n", "");
+        let fs = facts_of(&unguarded, &sums);
+        assert_eq!(fs[0].call_findings.len(), 1, "{:?}", fs[0].call_findings);
+    }
+}

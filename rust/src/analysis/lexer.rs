@@ -8,11 +8,12 @@
 //! inside a doc comment or an error message.
 //!
 //! Handled Rust lexical forms: line comments, nested block comments,
-//! plain / escaped strings, byte strings, raw (byte) strings with any
-//! `#` count, char and byte-char literals, and the char-literal vs
-//! lifetime (`'a`) ambiguity. Raw identifiers (`r#fn`) pass through as
-//! code. Known simplification: a multi-byte char literal (`'→'`) is
-//! left as code — it cannot contain a rule token, so this is harmless.
+//! plain / escaped strings, byte strings, C strings (`c".."` /
+//! `cr#".."#`, Rust 1.77+), raw (byte) strings with any `#` count,
+//! char and byte-char literals, and the char-literal vs lifetime
+//! (`'a`) ambiguity. Raw identifiers (`r#fn`) pass through as code.
+//! Known simplification: a multi-byte char literal (`'→'`) is left as
+//! code — it cannot contain a rule token, so this is harmless.
 //!
 //! Allow pragmas are extracted from line comments during the same scan:
 //!
@@ -43,9 +44,14 @@ pub struct Stripped {
     /// spaces, newlines are preserved.
     pub code: String,
     pub pragmas: Vec<Pragma>,
+    /// 1-based lines of comments carrying a `SAFETY:` contract. The
+    /// comments themselves are blanked like any other, so the
+    /// `unsafe-contract` rule reads this list instead of the code.
+    pub safety_lines: Vec<usize>,
 }
 
 const PRAGMA_MARKER: &str = "pallas-lint:";
+const SAFETY_MARKER: &str = "SAFETY:";
 
 fn is_ident_byte(c: u8) -> bool {
     c == b'_' || c.is_ascii_alphanumeric()
@@ -66,6 +72,7 @@ pub fn strip(src: &str) -> Stripped {
     let n = b.len();
     let mut out = b.to_vec();
     let mut pragmas = Vec::new();
+    let mut safety_lines = Vec::new();
     let mut line = 1usize;
     let mut i = 0usize;
     while i < n {
@@ -89,12 +96,16 @@ pub fn strip(src: &str) -> Stripped {
                     pragmas.push(p);
                 }
             }
+            if src[start..j].contains(SAFETY_MARKER) {
+                safety_lines.push(line);
+            }
             blank(&mut out, start, j);
             i = j;
             continue;
         }
         if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
             let start = i;
+            let comment_line = line;
             let mut depth = 1usize;
             let mut j = i + 2;
             while j < n && depth > 0 {
@@ -110,6 +121,9 @@ pub fn strip(src: &str) -> Stripped {
                     }
                     j += 1;
                 }
+            }
+            if src[start..j].contains(SAFETY_MARKER) {
+                safety_lines.push(comment_line);
             }
             blank(&mut out, start, j);
             i = j;
@@ -150,6 +164,25 @@ pub fn strip(src: &str) -> Stripped {
                 continue;
             }
         }
+        // C-string literals (Rust 1.77+): `c".."` and raw `cr#".."#`.
+        // Without this arm the `c` lexes as an identifier and the
+        // string body is scanned as code — desyncing every later
+        // offset if the literal contains a quote or comment marker.
+        if c == b'c' && fresh && i + 1 < n {
+            if b[i + 1] == b'"' {
+                let j = skip_string(b, i + 1, &mut line);
+                blank(&mut out, i, j);
+                i = j;
+                continue;
+            }
+            if b[i + 1] == b'r' {
+                if let Some(j) = skip_raw_string(b, i + 2, &mut line) {
+                    blank(&mut out, i, j);
+                    i = j;
+                    continue;
+                }
+            }
+        }
         if c == b'\'' && is_char_literal(b, i) {
             let j = skip_char(b, i);
             blank(&mut out, i, j);
@@ -164,7 +197,7 @@ pub fn strip(src: &str) -> Stripped {
     let code = String::from_utf8(out).unwrap_or_else(|e| {
         String::from_utf8_lossy(e.as_bytes()).into_owned()
     });
-    Stripped { code, pragmas }
+    Stripped { code, pragmas, safety_lines }
 }
 
 /// `i` points at the opening quote; returns the index one past the
@@ -382,6 +415,37 @@ let y = 1; /* block unwrap() */ let z = 2;
         assert!(s.code.contains("let a ="));
         assert!(s.code.contains("let b ="));
         assert!(s.code.contains("let c ="));
+    }
+
+    #[test]
+    fn c_string_literals_are_blanked_with_exact_offsets() {
+        // `c"..."` (Rust 1.77+) must be treated like `b"..."`: the old
+        // lexer read `c` as an identifier and entered the string body
+        // as code, so an embedded `//` would eat the rest of the line.
+        let src = "let p = c\"unwrap() // not a comment\"; let q = 1;\nlet r = cr#\"raw c unwrap()\"#; let s = 2;\n";
+        let s = strip(src);
+        assert_eq!(s.code.len(), src.len(), "byte length preserved");
+        assert!(!s.code.contains("unwrap"), "{}", s.code);
+        assert!(s.code.contains("let q = 1;"), "code after the literal survives: {}", s.code);
+        assert!(s.code.contains("let s = 2;"), "{}", s.code);
+        // Offsets still map 1:1: `let q` sits at the same byte index.
+        assert_eq!(s.code.find("let q"), src.find("let q"));
+        assert_eq!(s.code.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn c_prefixed_identifiers_are_not_strings() {
+        let src = "let count = cfg.count; c_helper();\n";
+        let s = strip(src);
+        assert_eq!(s.code, src);
+    }
+
+    #[test]
+    fn safety_comment_lines_are_recorded() {
+        let src = "// SAFETY: len checked above\nunsafe { ptr.read() }\n// ordinary comment\n/* SAFETY: block form */\n";
+        let s = strip(src);
+        assert_eq!(s.safety_lines, vec![1, 4]);
+        assert!(!s.code.contains("SAFETY"), "comment still blanked: {}", s.code);
     }
 
     #[test]

@@ -1,36 +1,61 @@
 //! pallas-lint: in-repo static analysis enforcing the crate's serving
 //! conventions.
 //!
-//! PRs 1–5 built a concurrent serving system whose correctness rests
+//! PRs 1–9 built a concurrent serving system whose correctness rests
 //! on hand-maintained disciplines — panic-free serving paths,
 //! "validate declared counts before any allocation" in the wire and
-//! persist codecs, and the epoch/COW lock order of the snapshot store.
-//! This module machine-checks them: a [`lexer`] that strips comments,
-//! strings, and char literals (byte-length-preserving, so offsets map
-//! to lines), and a [`rules`] engine with module-scoped rule sets and
-//! an inline allow-pragma syntax:
+//! persist codecs, the epoch/COW lock order of the snapshot store,
+//! and ~760 lines of `unsafe` SIMD kernels behind bitwise-equality
+//! contracts. v2 machine-checks them *structurally*:
+//!
+//! * [`lexer`] strips comments/strings/chars byte-length-preserving
+//!   (offsets map to lines) and records `// SAFETY:` comment lines
+//!   and `pallas-lint:` pragmas;
+//! * [`syntax`] turns the stripped text into a token tree — matched
+//!   delimiters, function outlines with parameter names, `unsafe`
+//!   sites, call expressions;
+//! * [`flow`] runs a per-function forward dataflow: decoded-integer
+//!   taint with validation tracking, and lock classes held at each
+//!   point under the store's declared acquisition order;
+//! * [`rules`] iterates the dataflow to a crate-wide fixpoint
+//!   (tainted returns, size-sensitive parameters, and transitive lock
+//!   summaries cross function and file boundaries) and emits
+//!   findings; [`report`] serializes them as JSON or SARIF.
+//!
+//! The pragma syntax is unchanged from v1:
 //!
 //! ```text
 //! // pallas-lint: allow(serving-no-panic) -- length checked two lines up
 //! ```
 //!
-//! The reason clause after `--` is mandatory; stale or malformed
-//! pragmas are themselves findings. Run it as `lpsketch lint` or via
-//! the `lint_gate` integration test, both of which walk `rust/src/`
-//! and fail on any un-pragma'd violation. Rule inventory and scoping
-//! live in [`rules`]; the README has the operator-facing summary.
+//! The reason clause after `--` is mandatory; stale, malformed, or
+//! unknown-rule pragmas (including ones naming a rule that has since
+//! been renamed) are themselves findings. Run it as `lpsketch lint`
+//! (`--format json|sarif` for machines) or via the `lint_gate`
+//! integration test, both of which walk `rust/src/` and fail on any
+//! un-pragma'd violation. Rule inventory and scoping live in
+//! [`rules`]; the README has the operator-facing summary.
 //!
-//! The analyzer is deliberately lexical (no syn, no rustc internals —
-//! the crate stays dependency-free): precise enough for this
-//! codebase's rustfmt-shaped sources, and every heuristic limit is
+//! The analyzer remains dependency-free (no syn, no rustc internals):
+//! the token tree pairs `()[]{}` only, angle brackets stay ordinary
+//! punctuation, and both dataflow passes are linear scans that
+//! approximate dominance — precise for this codebase's
+//! rustfmt-shaped, early-return sources, with every heuristic limit
 //! documented where it lives.
 
+pub mod flow;
 pub mod lexer;
+pub mod report;
 pub mod rules;
+pub mod syntax;
 
-pub use rules::{analyze_source, analyze_tree, count_rs_files, rules_for, Finding};
+pub use report::{to_json, to_sarif};
 pub use rules::{
-    GUARD_ACROSS_BLOCKING, LEN_BEFORE_ALLOC, NO_INDEX_UNTRUSTED, PRAGMA_RULE, SERVING_NO_PANIC,
+    analyze_source, analyze_sources, analyze_tree, count_rs_files, rules_for, Finding,
+};
+pub use rules::{
+    CODEC_VERSION_EXHAUSTIVE, KNOWN_RULES, LEN_BEFORE_ALLOC, LOCK_ORDER, NO_INDEX_UNTRUSTED,
+    PRAGMA_RULE, RENAMED_RULES, SERVING_NO_PANIC, SNAPSHOT_DISCIPLINE, UNSAFE_CONTRACT,
     WRITER_BUMPS_EPOCH,
 };
 
@@ -112,7 +137,7 @@ mod tests {
         assert!(fires(&analyze_source("api/wire.rs", src), NO_INDEX_UNTRUSTED));
     }
 
-    // -- len-before-alloc ---------------------------------------------------
+    // -- len-before-alloc (v2: taint-tracked) -------------------------------
 
     #[test]
     fn alloc_fires_without_validation() {
@@ -143,8 +168,14 @@ mod tests {
 
     #[test]
     fn alloc_fires_on_vec_macro_and_reserve() {
-        let src = "fn a(n: usize) -> Vec<u8> { vec![0u8; n * 4] }\n\
-                   fn b(v: &mut Vec<u8>, n: usize) { v.reserve(n); }\n";
+        let src = "fn a(b: &[u8]) -> Vec<u8> {\n\
+                       let n = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;\n\
+                       vec![0u8; n * 4]\n\
+                   }\n\
+                   fn c(v: &mut Vec<u8>, b: &[u8]) {\n\
+                       let n = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;\n\
+                       v.reserve(n);\n\
+                   }\n";
         let f = analyze_source("coordinator/persist.rs", src);
         assert_eq!(f.iter().filter(|x| x.rule == LEN_BEFORE_ALLOC).count(), 2, "{f:?}");
     }
@@ -161,31 +192,67 @@ mod tests {
         assert!(fires(&f, LEN_BEFORE_ALLOC), "checks after the alloc don't count: {f:?}");
     }
 
-    // -- guard-across-blocking ----------------------------------------------
+    #[test]
+    fn alloc_tracks_across_helper_calls() {
+        // The v1 lexical rule could not see this: the helper allocates
+        // from its parameter, and the caller passes a raw decoded
+        // count. v2 marks the parameter size-sensitive and moves the
+        // finding to the call site.
+        let src = "fn fill(n: usize) -> Vec<u8> {\n\
+                       vec![0u8; n]\n\
+                   }\n\
+                   fn load(b: &[u8]) -> Vec<u8> {\n\
+                       let n = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;\n\
+                       fill(n)\n\
+                   }\n";
+        let f = analyze_source("coordinator/persist.rs", src);
+        let hits: Vec<_> = f.iter().filter(|x| x.rule == LEN_BEFORE_ALLOC).collect();
+        assert_eq!(hits.len(), 1, "{f:?}");
+        assert_eq!(hits[0].line, 6, "finding lands on the call site: {f:?}");
+        assert!(hits[0].message.contains("fill"), "{f:?}");
+
+        // Validating before the call clears it.
+        let ok = src.replace("fill(n)\n", "ensure!(n <= MAX_ROWS);\nfill(n)\n");
+        let f = analyze_source("coordinator/persist.rs", &ok);
+        assert!(!fires(&f, LEN_BEFORE_ALLOC), "{f:?}");
+    }
 
     #[test]
-    fn guard_fires_on_send_while_live() {
+    fn unvalidated_alloc_fires_in_wal() {
+        let src = "pub fn replay(b: &[u8]) -> Vec<f32> {\n\
+                       let n = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;\n\
+                       let out = Vec::with_capacity(n);\n\
+                       out\n\
+                   }\n";
+        let f = analyze_source("coordinator/wal.rs", src);
+        assert!(fires(&f, LEN_BEFORE_ALLOC), "{f:?}");
+    }
+
+    // -- lock-order ----------------------------------------------------------
+
+    #[test]
+    fn lock_order_fires_on_inverted_known_order() {
+        let src = "fn f(&self) {\n\
+                       let segs = self.segments.write_recover();\n\
+                       let serial = self.compaction.lock_recover();\n\
+                   }\n";
+        let f = analyze_source("coordinator/scheduler.rs", src);
+        assert!(fires(&f, LOCK_ORDER), "{f:?}");
+        assert!(f[0].message.contains("declared order"), "{f:?}");
+    }
+
+    #[test]
+    fn lock_order_fires_on_blocking_op_while_guard_held() {
         let src = "fn f(&self) {\n\
                        let g = self.state.lock_recover();\n\
                        self.tx.send(1);\n\
                    }\n";
         let f = analyze_source("coordinator/scheduler.rs", src);
-        assert!(fires(&f, GUARD_ACROSS_BLOCKING), "{f:?}");
-        assert!(f[0].message.contains('g'), "names the guard: {f:?}");
+        assert!(fires(&f, LOCK_ORDER), "{f:?}");
     }
 
     #[test]
-    fn guard_fires_on_second_blocking_lock() {
-        let src = "fn f(&self) {\n\
-                       let a = self.x.read_recover();\n\
-                       let b = self.y.write_recover();\n\
-                   }\n";
-        let f = analyze_source("coordinator/scheduler.rs", src);
-        assert!(fires(&f, GUARD_ACROSS_BLOCKING), "{f:?}");
-    }
-
-    #[test]
-    fn guard_passes_when_scoped_before_blocking() {
+    fn lock_order_passes_when_scoped_before_blocking() {
         let src = "fn f(&self) {\n\
                        {\n\
                            let g = self.state.lock_recover();\n\
@@ -199,24 +266,243 @@ mod tests {
                        self.tx.send(2);\n\
                    }\n";
         let f = analyze_source("coordinator/scheduler.rs", src);
-        assert!(!fires(&f, GUARD_ACROSS_BLOCKING), "{f:?}");
+        assert!(!fires(&f, LOCK_ORDER), "{f:?}");
     }
 
     #[test]
-    fn guard_ignores_temporaries_and_try_locks() {
+    fn lock_order_ignores_temporaries_and_try_locks() {
         // A chained temporary dies at the `;`; try_* never blocks.
         let src = "fn f(&self) {\n\
                        self.errors.lock_recover().push(1);\n\
                        self.tx.send(1);\n\
                    }\n\
                    fn g(&self) {\n\
-                       let shard = self.shard.write_recover();\n\
+                       let shard = self.shards.write_recover();\n\
                        if let Ok(mut c) = self.cached.try_write() {\n\
                            c.clear();\n\
                        }\n\
                    }\n";
         let f = analyze_source("coordinator/state_helpers.rs", src);
-        assert!(!fires(&f, GUARD_ACROSS_BLOCKING), "{f:?}");
+        assert!(!fires(&f, LOCK_ORDER), "{f:?}");
+    }
+
+    #[test]
+    fn lock_order_allows_ascending_shards_flags_same_class_reacquire() {
+        let shards = "fn two(&self) {\n\
+                          let a = self.shards[0].write_recover();\n\
+                          let b = self.shards[1].write_recover();\n\
+                      }\n";
+        let f = analyze_source("coordinator/state.rs", shards);
+        assert!(!fires(&f, LOCK_ORDER), "index-ascending shard nesting is legal: {f:?}");
+
+        let segs = "fn twice(&self) {\n\
+                        let a = self.segments.read_recover();\n\
+                        let b = self.segments.read_recover();\n\
+                    }\n";
+        let f = analyze_source("coordinator/scheduler.rs", segs);
+        assert!(fires(&f, LOCK_ORDER), "{f:?}");
+        assert!(f.iter().any(|x| x.message.contains("re-acquires")), "{f:?}");
+    }
+
+    #[test]
+    fn lock_order_fires_on_inconsistent_order_across_paths() {
+        // `journal` and `index` are not declared store classes; a
+        // single nesting is fine, but two call paths that disagree on
+        // direction are a deadlock and both get flagged.
+        let one = "fn a(&self) {\n\
+                       let g = self.journal.lock_recover();\n\
+                       let h = self.index.lock_recover();\n\
+                   }\n";
+        let f = analyze_source("coordinator/scheduler.rs", one);
+        assert!(!fires(&f, LOCK_ORDER), "one direction alone is not a finding: {f:?}");
+
+        let both = "fn a(&self) {\n\
+                        let g = self.journal.lock_recover();\n\
+                        let h = self.index.lock_recover();\n\
+                    }\n\
+                    fn b(&self) {\n\
+                        let g = self.index.lock_recover();\n\
+                        let h = self.journal.lock_recover();\n\
+                    }\n";
+        let f = analyze_source("coordinator/scheduler.rs", both);
+        assert_eq!(f.iter().filter(|x| x.rule == LOCK_ORDER).count(), 2, "{f:?}");
+        assert!(f[0].message.contains("inconsistent order"), "{f:?}");
+    }
+
+    #[test]
+    fn lock_order_sees_through_the_call_graph() {
+        let src = "fn refresh(&self) {\n\
+                       let serial = self.compaction.lock_recover();\n\
+                   }\n\
+                   fn outer(&self) {\n\
+                       let segs = self.segments.write_recover();\n\
+                       self.refresh();\n\
+                   }\n";
+        let f = analyze_source("coordinator/scheduler.rs", src);
+        assert!(fires(&f, LOCK_ORDER), "callee acquisitions count: {f:?}");
+    }
+
+    // -- unsafe-contract -----------------------------------------------------
+
+    #[test]
+    fn unsafe_without_safety_comment_fires() {
+        let src = "pub unsafe fn k(p: *const f32) -> f32 { *p }\n";
+        let f = analyze_source("baselines/exact.rs", src);
+        assert!(fires(&f, UNSAFE_CONTRACT), "{f:?}");
+        assert!(f[0].message.contains("SAFETY"), "{f:?}");
+    }
+
+    #[test]
+    fn safety_comment_covers_through_attributes() {
+        let src = "// SAFETY: dispatch only calls this after runtime AVX2 detection\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   pub unsafe fn d(p: *const f32) -> f32 { *p }\n\
+                   \n\
+                   pub fn wrap(p: *const f32) -> f32 {\n\
+                       // SAFETY: p points into the caller-owned panel\n\
+                       unsafe { *p }\n\
+                   }\n";
+        let f = analyze_source("baselines/exact.rs", src);
+        assert!(!fires(&f, UNSAFE_CONTRACT), "{f:?}");
+    }
+
+    #[test]
+    fn unsafe_is_banned_in_serving_and_analysis_modules() {
+        let src = "// SAFETY: even a documented contract does not excuse it here\n\
+                   pub fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        for file in ["api/handlers.rs", "coordinator/state.rs", "analysis/lexer.rs"] {
+            let f = analyze_source(file, src);
+            assert!(fires(&f, UNSAFE_CONTRACT), "{file}: {f:?}");
+            assert!(
+                f.iter().any(|x| x.message.contains("not permitted")),
+                "{file}: {f:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn pointer_arithmetic_is_confined_to_kernel_allowlist() {
+        let src = "pub fn scatter(p: *mut f64, i: usize) {\n\
+                       // SAFETY: i < len by the loop bound\n\
+                       unsafe { *p.add(i) = 0.0 };\n\
+                   }\n";
+        let f = analyze_source("baselines/exact.rs", src);
+        assert!(fires(&f, UNSAFE_CONTRACT), "{f:?}");
+        assert!(f.iter().any(|x| x.message.contains("allowlist")), "{f:?}");
+        // The same code inside a kernel module is fine.
+        let f = analyze_source("projection/simd.rs", src);
+        assert!(!fires(&f, UNSAFE_CONTRACT), "{f:?}");
+    }
+
+    #[test]
+    fn core_arch_outside_kernels_fires() {
+        let src = "use core::arch::x86_64::_mm256_loadu_ps;\n";
+        let f = analyze_source("baselines/exact.rs", src);
+        assert!(fires(&f, UNSAFE_CONTRACT), "{f:?}");
+    }
+
+    #[test]
+    fn unsafe_contract_is_pragma_suppressible() {
+        let src = "pub fn scatter(p: *mut f64, i: usize) {\n\
+                       // pallas-lint: allow(unsafe-contract) -- fixed offset into an owned buffer\n\
+                       unsafe { *p.add(i) = 0.0 };\n\
+                   }\n";
+        let f = analyze_source("baselines/exact.rs", src);
+        assert!(f.is_empty(), "pragma suppresses and is not stale: {f:?}");
+    }
+
+    // -- snapshot-discipline -------------------------------------------------
+
+    #[test]
+    fn snapshot_discipline_fires_on_store_lock_acquisition() {
+        let src = "pub fn serve(&self) {\n\
+                       let g = self.store.shards[0].read_recover();\n\
+                   }\n";
+        let f = analyze_source("knn/mod.rs", src);
+        assert!(fires(&f, SNAPSHOT_DISCIPLINE), "{f:?}");
+        assert!(f[0].message.contains("shards"), "{f:?}");
+    }
+
+    #[test]
+    fn snapshot_discipline_allows_plain_fields_named_like_locks() {
+        // knn keeps its own `shards: Vec<ShardView>` — touching it is
+        // fine; only acquire-routed access to the store's locks fires.
+        let src = "pub fn locate(&self, id: u64) -> usize {\n\
+                       self.shards.partition_point(|s| s.min_id <= id)\n\
+                   }\n";
+        let f = analyze_source("knn/mod.rs", src);
+        assert!(!fires(&f, SNAPSHOT_DISCIPLINE), "{f:?}");
+    }
+
+    #[test]
+    fn snapshot_discipline_polices_raw_epoch_reads() {
+        let raw = "pub fn e(&self) -> u64 { self.store.epoch.load(Ordering::Acquire) }\n";
+        let f = analyze_source("api/service.rs", raw);
+        assert!(fires(&f, SNAPSHOT_DISCIPLINE), "{f:?}");
+        let accessor = "pub fn e(&self) -> u64 { self.store.epoch() }\n";
+        let f = analyze_source("api/service.rs", accessor);
+        assert!(!fires(&f, SNAPSHOT_DISCIPLINE), "{f:?}");
+        // A plain `epoch` field on a wire struct (or a snapshot's
+        // frozen epoch) has no atomic-method tail and is not a
+        // store-internals read.
+        let field_copy = "pub fn stats_epoch(s: &ApiStats) -> u64 { s.epoch }\n";
+        let f = analyze_source("api/service.rs", field_copy);
+        assert!(!fires(&f, SNAPSHOT_DISCIPLINE), "{f:?}");
+    }
+
+    // -- codec-version-exhaustive ---------------------------------------------
+
+    const SEGFILE_OK: &str = "pub const SEG_VERSION: u32 = 3;\n\
+        fn read_seg(f: &mut File) -> anyhow::Result<Seg> {\n\
+            let version = r_u32(f)?;\n\
+            ensure!(version >= 1 && version <= SEG_VERSION, \"segfile version\");\n\
+            if version >= 2 { read_zones(f)?; }\n\
+            if version >= 3 { read_checksums(f)?; }\n\
+            Ok(Seg::default())\n\
+        }\n";
+
+    #[test]
+    fn codec_versions_pass_when_exhaustive_and_bounded_by_name() {
+        let f = analyze_source("coordinator/segfile.rs", SEGFILE_OK);
+        assert!(!fires(&f, CODEC_VERSION_EXHAUSTIVE), "{f:?}");
+    }
+
+    #[test]
+    fn codec_fires_on_missing_historical_arm() {
+        let src = SEGFILE_OK.replace("if version >= 3 { read_checksums(f)?; }\n", "");
+        let f = analyze_source("coordinator/segfile.rs", &src);
+        assert!(fires(&f, CODEC_VERSION_EXHAUSTIVE), "{f:?}");
+        assert!(f.iter().any(|x| x.message.contains("no explicit arm")), "{f:?}");
+    }
+
+    #[test]
+    fn codec_fires_when_upper_bound_is_a_magic_number() {
+        let src = SEGFILE_OK.replace("version <= SEG_VERSION", "version <= 3");
+        let f = analyze_source("coordinator/segfile.rs", &src);
+        assert!(fires(&f, CODEC_VERSION_EXHAUSTIVE), "{f:?}");
+        assert!(f.iter().any(|x| x.message.contains("by name")), "{f:?}");
+    }
+
+    #[test]
+    fn codec_fires_on_manifest_drift() {
+        let src = SEGFILE_OK.replace("SEG_VERSION", "SEGMENT_VERSION");
+        let f = analyze_source("coordinator/segfile.rs", &src);
+        assert!(
+            f.iter().any(|x| x.rule == CODEC_VERSION_EXHAUSTIVE && x.message.contains("not found")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn codec_equality_bound_covers_a_v1_format() {
+        let src = "pub const WAL_VERSION: u32 = 1;\n\
+            fn read_rec(f: &mut File) -> anyhow::Result<Rec> {\n\
+                let version = r_u32(f)?;\n\
+                ensure!(version == WAL_VERSION, \"wal version\");\n\
+                Ok(Rec::default())\n\
+            }\n";
+        let f = analyze_source("coordinator/wal.rs", src);
+        assert!(!fires(&f, CODEC_VERSION_EXHAUSTIVE), "{f:?}");
     }
 
     // -- writer-bumps-epoch -------------------------------------------------
@@ -227,7 +513,7 @@ mod tests {
             shard.push(1);\n\
             self.epoch.fetch_add(1, Ordering::Release);\n\
         }\n\
-        pub fn insert_block_shared(&self) {\n\
+        pub fn insert_block_prezoned(&self) {\n\
             let mut shard = self.shards.write_recover();\n\
             shard.push(2);\n\
             self.epoch.fetch_add(1, Ordering::Release);\n\
@@ -271,7 +557,7 @@ mod tests {
                 let mut shard = self.shards.write_recover();\n\
                 shard.push(1);\n\
             }\n\
-            pub fn insert_block_shared(&self) {\n\
+            pub fn insert_block_prezoned(&self) {\n\
                 let mut shard = self.shards.write_recover();\n\
                 self.epoch.fetch_add(1, Ordering::Release);\n\
             }\n\
@@ -306,6 +592,8 @@ mod tests {
         assert!(!fires(&f, WRITER_BUMPS_EPOCH), "{f:?}");
     }
 
+    // -- scoping -------------------------------------------------------------
+
     #[test]
     fn durability_modules_are_in_scope() {
         use super::rules::rules_for;
@@ -313,12 +601,12 @@ mod tests {
             let rules = rules_for(file);
             assert!(rules.contains(&SERVING_NO_PANIC), "{file}: {rules:?}");
             assert!(rules.contains(&LEN_BEFORE_ALLOC), "{file}: {rules:?}");
-            assert!(rules.contains(&GUARD_ACROSS_BLOCKING), "{file}: {rules:?}");
+            assert!(rules.contains(&LOCK_ORDER), "{file}: {rules:?}");
         }
         let compactor = rules_for("coordinator/compactor.rs");
         assert!(compactor.contains(&SERVING_NO_PANIC), "{compactor:?}");
         assert!(compactor.contains(&WRITER_BUMPS_EPOCH), "{compactor:?}");
-        assert!(compactor.contains(&GUARD_ACROSS_BLOCKING), "{compactor:?}");
+        assert!(compactor.contains(&LOCK_ORDER), "{compactor:?}");
     }
 
     #[test]
@@ -335,13 +623,20 @@ mod tests {
     }
 
     #[test]
-    fn unvalidated_alloc_fires_in_wal() {
-        let src = "pub fn decode(n: usize) -> Vec<f32> {\n\
-                let out = Vec::with_capacity(n);\n\
-                out\n\
-            }\n";
-        let f = analyze_source("coordinator/wal.rs", src);
-        assert!(fires(&f, LEN_BEFORE_ALLOC), "{f:?}");
+    fn v2_rules_are_scoped() {
+        use super::rules::rules_for;
+        // unsafe-contract runs everywhere, even outside serving scope.
+        assert!(rules_for("baselines/exact.rs").contains(&UNSAFE_CONTRACT));
+        assert!(rules_for("experiments/mod.rs").contains(&UNSAFE_CONTRACT));
+        // snapshot-discipline covers the serving read paths only.
+        assert!(rules_for("api/wire.rs").contains(&SNAPSHOT_DISCIPLINE));
+        assert!(rules_for("knn/mod.rs").contains(&SNAPSHOT_DISCIPLINE));
+        assert!(!rules_for("core/estimator.rs").contains(&SNAPSHOT_DISCIPLINE));
+        assert!(!rules_for("coordinator/state.rs").contains(&SNAPSHOT_DISCIPLINE));
+        // codec-version-exhaustive pins the three versioned readers.
+        assert!(rules_for("coordinator/persist.rs").contains(&CODEC_VERSION_EXHAUSTIVE));
+        assert!(rules_for("coordinator/wal.rs").contains(&CODEC_VERSION_EXHAUSTIVE));
+        assert!(!rules_for("api/wire.rs").contains(&CODEC_VERSION_EXHAUSTIVE));
     }
 
     // -- pragmas ------------------------------------------------------------
@@ -391,6 +686,135 @@ mod tests {
                    pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
         let f = analyze_source("core/estimator.rs", src);
         assert!(fires(&f, SERVING_NO_PANIC), "{f:?}");
+    }
+
+    #[test]
+    fn each_new_rule_is_pragma_suppressible() {
+        // unsafe-contract's suppression is pinned above; the other four
+        // structural rules must honor the same escape hatch.
+        let fixtures: &[(&str, &str)] = &[
+            (
+                "api/wire.rs",
+                "fn decode(cur: &mut Cur) -> anyhow::Result<Vec<u64>> {\n\
+                 let n = cur.u32()? as usize;\n\
+                 // pallas-lint: allow(len-before-alloc) -- n is capped by the frame length checked upstream\n\
+                 let mut v = Vec::with_capacity(n);\n\
+                 Ok(v)\n\
+                 }\n",
+            ),
+            (
+                "coordinator/scheduler.rs",
+                "fn f(&self) {\n\
+                 let segs = self.segments.write_recover();\n\
+                 // pallas-lint: allow(lock-order) -- startup path, single-threaded by construction\n\
+                 let serial = self.compaction.lock_recover();\n\
+                 }\n",
+            ),
+            (
+                "knn/mod.rs",
+                "pub fn serve(&self) {\n\
+                 // pallas-lint: allow(snapshot-discipline) -- warm path before the first snapshot exists\n\
+                 let g = self.store.shards[0].read_recover();\n\
+                 }\n",
+            ),
+            (
+                "coordinator/segfile.rs",
+                "// pallas-lint: allow(codec-version-exhaustive) -- v3 checksum arm lands with the reader next PR\n\
+                 pub const SEG_VERSION: u32 = 3;\n\
+                 fn read_seg(f: &mut File) -> anyhow::Result<Seg> {\n\
+                 let version = r_u32(f)?;\n\
+                 ensure!(version >= 1 && version <= SEG_VERSION, \"segfile version\");\n\
+                 if version >= 2 { read_zones(f)?; }\n\
+                 Ok(Seg::default())\n\
+                 }\n",
+            ),
+        ];
+        for (rel, src) in fixtures {
+            let f = analyze_source(rel, src);
+            assert!(f.is_empty(), "{rel}: suppressed and not stale: {f:?}");
+        }
+    }
+
+    #[test]
+    fn stale_pragmas_are_reported_for_each_new_rule() {
+        // Each fixture is clean under its rule, so the pragma has
+        // nothing to cover and must surface as a stale finding.
+        let fixtures: &[(&str, &str)] = &[
+            (
+                "api/wire.rs",
+                "// pallas-lint: allow(len-before-alloc) -- left after refactor\n\
+                 fn decode(cur: &mut Cur) -> anyhow::Result<Vec<u64>> {\n\
+                 let n = cur.count(8, \"pairs\")?;\n\
+                 let mut v = Vec::with_capacity(n);\n\
+                 Ok(v)\n\
+                 }\n",
+            ),
+            (
+                "coordinator/scheduler.rs",
+                "// pallas-lint: allow(lock-order) -- left after refactor\n\
+                 fn f(&self) {\n\
+                 let serial = self.compaction.lock_recover();\n\
+                 }\n",
+            ),
+            (
+                "baselines/exact.rs",
+                "// pallas-lint: allow(unsafe-contract) -- left after refactor\n\
+                 pub fn f(x: u32) -> u32 { x + 1 }\n",
+            ),
+            (
+                "knn/mod.rs",
+                "// pallas-lint: allow(snapshot-discipline) -- left after refactor\n\
+                 pub fn serve(&self) { self.snapshot().len(); }\n",
+            ),
+            (
+                "coordinator/segfile.rs",
+                "// pallas-lint: allow(codec-version-exhaustive) -- left after refactor\n\
+                 pub const SEG_VERSION: u32 = 3;\n\
+                 fn read_seg(f: &mut File) -> anyhow::Result<Seg> {\n\
+                 let version = r_u32(f)?;\n\
+                 ensure!(version >= 1 && version <= SEG_VERSION, \"segfile version\");\n\
+                 if version >= 2 { read_zones(f)?; }\n\
+                 if version >= 3 { read_checksums(f)?; }\n\
+                 Ok(Seg::default())\n\
+                 }\n",
+            ),
+        ];
+        for (rel, src) in fixtures {
+            let f = analyze_source(rel, src);
+            assert!(
+                f.iter().any(|x| x.rule == PRAGMA_RULE && x.message.contains("stale")),
+                "{rel}: {f:?}"
+            );
+            assert_eq!(f.len(), 1, "{rel}: only the stale-pragma finding: {f:?}");
+        }
+    }
+
+    #[test]
+    fn pragma_for_renamed_rule_names_the_successor() {
+        let src = "// pallas-lint: allow(guard-across-blocking) -- shared Receiver idiom\n\
+                   pub fn f() {}\n";
+        let f = analyze_source("coordinator/scheduler.rs", src);
+        assert!(
+            f.iter().any(|x| {
+                x.rule == PRAGMA_RULE
+                    && x.message.contains("retired")
+                    && x.message.contains("lock-order")
+            }),
+            "{f:?}"
+        );
+        // And it never reports as merely "stale" — the rename hint wins.
+        assert!(!f.iter().any(|x| x.message.contains("stale")), "{f:?}");
+    }
+
+    #[test]
+    fn pragma_for_unknown_rule_is_reported() {
+        let src = "// pallas-lint: allow(no-such-rule) -- misremembered\n\
+                   pub fn f() {}\n";
+        let f = analyze_source("api/service.rs", src);
+        assert!(
+            f.iter().any(|x| x.rule == PRAGMA_RULE && x.message.contains("unknown rule")),
+            "{f:?}"
+        );
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Machine-readable lint output: plain JSON and SARIF 2.1.0.
+//!
+//! Hand-rolled serialization — the crate is dependency-free by policy,
+//! and the two shapes emitted here are small enough that a serializer
+//! would be more code than the escaping helper. Both formats carry the
+//! same findings: the JSON path is the round-trip source of truth
+//! (`findings` array, `count`), SARIF adds the tool/rule envelope that
+//! code-scanning UIs ingest.
+
+use super::rules::Finding;
+
+/// Escape `s` for a JSON string literal (without the quotes).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Findings as a JSON document:
+/// `{"tool": "pallas-lint", "count": N, "findings": [...]}`.
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\n  \"tool\": \"pallas-lint\",\n");
+    out.push_str(&format!("  \"count\": {},\n  \"findings\": [", findings.len()));
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+            esc(&f.file),
+            f.line,
+            esc(f.rule),
+            esc(&f.message)
+        ));
+    }
+    if findings.is_empty() {
+        out.push_str("]\n}\n");
+    } else {
+        out.push_str("\n  ]\n}\n");
+    }
+    out
+}
+
+/// Findings as a SARIF 2.1.0 document (one run, one driver; level is
+/// always `error` — pallas-lint has no warning tier, a finding gates).
+pub fn to_sarif(findings: &[Finding]) -> String {
+    let mut rules: Vec<&str> = findings.iter().map(|f| f.rule).collect();
+    rules.sort_unstable();
+    rules.dedup();
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"$schema\": \"https://json.schemastore.org/sarif-2.1.0.json\",\n");
+    out.push_str("  \"version\": \"2.1.0\",\n");
+    out.push_str("  \"runs\": [\n    {\n");
+    out.push_str("      \"tool\": {\n        \"driver\": {\n");
+    out.push_str("          \"name\": \"pallas-lint\",\n");
+    out.push_str("          \"rules\": [");
+    for (i, r) in rules.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\n            {{\"id\": \"{}\"}}", esc(r)));
+    }
+    if rules.is_empty() {
+        out.push_str("]\n");
+    } else {
+        out.push_str("\n          ]\n");
+    }
+    out.push_str("        }\n      },\n");
+    out.push_str("      \"results\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n        {{\n          \"ruleId\": \"{}\",\n          \"level\": \"error\",\n          \
+             \"message\": {{\"text\": \"{}\"}},\n          \"locations\": [\n            \
+             {{\"physicalLocation\": {{\"artifactLocation\": {{\"uri\": \"{}\"}}, \
+             \"region\": {{\"startLine\": {}}}}}}}\n          ]\n        }}",
+            esc(f.rule),
+            esc(&f.message),
+            esc(&f.file),
+            f.line
+        ));
+    }
+    if findings.is_empty() {
+        out.push_str("]\n");
+    } else {
+        out.push_str("\n      ]\n");
+    }
+    out.push_str("    }\n  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Finding> {
+        vec![Finding {
+            file: "api/wire.rs".into(),
+            line: 42,
+            rule: crate::analysis::rules::LEN_BEFORE_ALLOC,
+            message: "allocation \"sized\" by\na decoded value".into(),
+        }]
+    }
+
+    #[test]
+    fn json_escapes_and_counts() {
+        let j = to_json(&sample());
+        assert!(j.contains("\"count\": 1"), "{j}");
+        assert!(j.contains("\\\"sized\\\""), "escaped quotes: {j}");
+        assert!(j.contains("\\n"), "escaped newline: {j}");
+        assert!(!j.contains("sized\" by\na"), "raw newline leaked: {j}");
+    }
+
+    #[test]
+    fn empty_inputs_produce_empty_arrays() {
+        let j = to_json(&[]);
+        assert!(j.contains("\"count\": 0"), "{j}");
+        assert!(j.contains("\"findings\": []"), "{j}");
+        let s = to_sarif(&[]);
+        assert!(s.contains("\"results\": []"), "{s}");
+        assert!(s.contains("\"rules\": []"), "{s}");
+    }
+
+    #[test]
+    fn sarif_carries_rule_ids_and_locations() {
+        let s = to_sarif(&sample());
+        assert!(s.contains("\"version\": \"2.1.0\""), "{s}");
+        assert!(s.contains("{\"id\": \"len-before-alloc\"}"), "{s}");
+        assert!(s.contains("\"ruleId\": \"len-before-alloc\""), "{s}");
+        assert!(s.contains("\"uri\": \"api/wire.rs\""), "{s}");
+        assert!(s.contains("\"startLine\": 42"), "{s}");
+    }
+}

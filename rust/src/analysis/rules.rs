@@ -1,15 +1,19 @@
-//! The pallas-lint rule engine: module-scoped rules over stripped
-//! source (see [`super::lexer`]), with pragma suppression.
+//! The pallas-lint v2 rule engine: structural rules over token trees
+//! ([`super::syntax`]) and per-function dataflow ([`super::flow`]),
+//! plus the original lexical rules, with pragma suppression.
 //!
 //! Rules and scopes (paths relative to `rust/src/`):
 //!
-//! | rule | scope | enforces |
-//! |------|-------|----------|
-//! | `serving-no-panic` | `api/`, `coordinator/state.rs`, `coordinator/pipeline.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs`, `coordinator/compactor.rs`, `core/estimator.rs`, `core/zone.rs`, `core/quant.rs`, `projection/simd.rs`, `knn/mod.rs` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` on serving paths |
-//! | `no-index-untrusted` | `api/` | no `x[..]` indexing at the untrusted-input boundary — use `get(..)` |
-//! | `len-before-alloc` | `api/wire.rs`, `coordinator/persist.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs`, `core/quant.rs`, `projection/simd.rs` | decoded-count allocations need a cap/bytes-present check earlier in the same function |
-//! | `guard-across-blocking` | `api/`, `coordinator/` | lock guards must not be live across channel ops, thread scopes, or a second blocking lock |
-//! | `writer-bumps-epoch` | `coordinator/state.rs`, `coordinator/compactor.rs` | in `state.rs`, every manifest mutator bumps the store epoch inside its write critical section; elsewhere in scope, store internals must not be touched directly (the mutators are the only sanctioned write path) |
+//! | rule | kind | scope | enforces |
+//! |------|------|-------|----------|
+//! | `serving-no-panic` | lexical | `api/`, `coordinator/state.rs`, `coordinator/pipeline.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs`, `coordinator/compactor.rs`, `core/estimator.rs`, `core/zone.rs`, `core/quant.rs`, `projection/simd.rs`, `knn/mod.rs` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` on serving paths |
+//! | `no-index-untrusted` | lexical | `api/` | no `x[..]` indexing at the untrusted-input boundary — use `get(..)` |
+//! | `len-before-alloc` | dataflow | `api/wire.rs`, `coordinator/persist.rs`, `coordinator/durable.rs`, `coordinator/wal.rs`, `coordinator/segfile.rs`, `core/quant.rs`, `projection/simd.rs` | an allocation sized by a decoded integer needs a dominating cap / bytes-present validation — tracked across helper calls via parameter sensitivity |
+//! | `lock-order` | dataflow | `api/`, `coordinator/` | nested lock acquisitions respect the declared global order (`cached -> compaction -> shards -> segments`, shards index-ascending); no blocking channel/thread op while a guard is held; unknown lock classes must agree on direction across all call paths |
+//! | `unsafe-contract` | structural | every file | each `unsafe` fn/block/impl carries a `// SAFETY:` comment; raw-pointer arithmetic and `core::arch` only in `projection/simd.rs` / `core/quant.rs`; no `unsafe` at all in `api/`, `coordinator/`, `analysis/` |
+//! | `snapshot-discipline` | structural | `api/`, `knn/mod.rs`, `coordinator/pipeline.rs`, `coordinator/durable.rs`, `coordinator/compactor.rs` | serving paths read store state only through `StoreSnapshot` / sanctioned accessors — no acquiring the store's `shards`/`segments`/`cached` locks, no raw `.epoch` field reads |
+//! | `codec-version-exhaustive` | structural | `coordinator/persist.rs`, `coordinator/segfile.rs`, `coordinator/wal.rs` | readers compare the decoded version against the format-current const by name (reject-newer) and gate every historical version `2..=current` explicitly |
+//! | `writer-bumps-epoch` | lexical | `coordinator/state.rs`, `coordinator/compactor.rs` | in `state.rs`, every manifest mutator bumps the store epoch inside its write critical section; elsewhere in scope, store internals must not be touched directly |
 //!
 //! `no-index-untrusted` is deliberately **not** applied to the numeric
 //! kernels (`core/estimator.rs`): they index with loop-bounded offsets
@@ -18,23 +22,48 @@
 //! there by `serving-no-panic`.
 //!
 //! `#[cfg(test)]` items are exempt from every rule — tests unwrap
-//! freely by design. The engine is lexical, line-oriented for the
-//! guard rule (a guard binding and its acquire are assumed to share a
-//! line, which matches rustfmt output for every real site in-tree).
+//! freely by design. Analysis is crate-aware: [`analyze_sources`]
+//! parses every file, then iterates per-function dataflow to a
+//! fixpoint so that taint return values, size-sensitive parameters,
+//! and transitive lock acquisition summaries cross function (and
+//! file) boundaries.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, BTreeSet, HashSet};
 use std::path::Path;
 
-use super::lexer;
+use super::{flow, lexer, syntax};
 
 pub const SERVING_NO_PANIC: &str = "serving-no-panic";
 pub const NO_INDEX_UNTRUSTED: &str = "no-index-untrusted";
 pub const LEN_BEFORE_ALLOC: &str = "len-before-alloc";
-pub const GUARD_ACROSS_BLOCKING: &str = "guard-across-blocking";
+pub const LOCK_ORDER: &str = "lock-order";
+pub const UNSAFE_CONTRACT: &str = "unsafe-contract";
+pub const SNAPSHOT_DISCIPLINE: &str = "snapshot-discipline";
+pub const CODEC_VERSION_EXHAUSTIVE: &str = "codec-version-exhaustive";
 pub const WRITER_BUMPS_EPOCH: &str = "writer-bumps-epoch";
 /// Diagnostics about the pragmas themselves (malformed / missing
-/// reason / stale). Not suppressible.
+/// reason / unknown rule / stale). Not suppressible.
 pub const PRAGMA_RULE: &str = "pragma";
+
+/// Every rule a pragma may name.
+pub const KNOWN_RULES: &[&str] = &[
+    SERVING_NO_PANIC,
+    NO_INDEX_UNTRUSTED,
+    LEN_BEFORE_ALLOC,
+    LOCK_ORDER,
+    UNSAFE_CONTRACT,
+    SNAPSHOT_DISCIPLINE,
+    CODEC_VERSION_EXHAUSTIVE,
+    WRITER_BUMPS_EPOCH,
+];
+
+/// Retired rule names and their successors, so a pragma left behind by
+/// a rename gets a pointed diagnostic instead of a silent dead-letter.
+pub const RENAMED_RULES: &[(&str, &str)] = &[("guard-across-blocking", LOCK_ORDER)];
+
+/// Kernel modules allowed to contain raw-pointer arithmetic and
+/// `core::arch` intrinsics.
+const UNSAFE_ALLOWLIST: &[&str] = &["projection/simd.rs", "core/quant.rs"];
 
 /// `SketchStore` mutators that must bump the epoch inside their write
 /// critical section. Extend this list when adding a mutator; a listed
@@ -43,6 +72,13 @@ pub const PRAGMA_RULE: &str = "pragma";
 /// `insert_block_prezoned` after computing the zone summary, so the
 /// bump lives there.)
 const MUTATOR_MANIFEST: &[&str] = &["insert", "insert_block_prezoned", "compact_range"];
+
+/// Versioned readers: (file, name of the format-current const).
+const CODEC_MANIFEST: &[(&str, &str)] = &[
+    ("coordinator/persist.rs", "VERSION"),
+    ("coordinator/segfile.rs", "SEG_VERSION"),
+    ("coordinator/wal.rs", "WAL_VERSION"),
+];
 
 /// One rule violation (or pragma diagnostic).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -94,7 +130,19 @@ pub fn rules_for(rel: &str) -> Vec<&'static str> {
         rules.push(LEN_BEFORE_ALLOC);
     }
     if rel.starts_with("api/") || rel.starts_with("coordinator/") {
-        rules.push(GUARD_ACROSS_BLOCKING);
+        rules.push(LOCK_ORDER);
+    }
+    rules.push(UNSAFE_CONTRACT);
+    if rel.starts_with("api/")
+        || rel == "knn/mod.rs"
+        || rel == "coordinator/pipeline.rs"
+        || rel == "coordinator/durable.rs"
+        || rel == "coordinator/compactor.rs"
+    {
+        rules.push(SNAPSHOT_DISCIPLINE);
+    }
+    if CODEC_MANIFEST.iter().any(|(f, _)| *f == rel) {
+        rules.push(CODEC_VERSION_EXHAUSTIVE);
     }
     if rel == "coordinator/state.rs" || rel == "coordinator/compactor.rs" {
         rules.push(WRITER_BUMPS_EPOCH);
@@ -102,20 +150,198 @@ pub fn rules_for(rel: &str) -> Vec<&'static str> {
     rules
 }
 
-/// Analyze one file's source under its root-relative path.
+struct FileCx {
+    rel: String,
+    stripped: lexer::Stripped,
+    tree: syntax::Tree,
+    /// Non-test function items, parallel to the per-file facts.
+    fns: Vec<syntax::FnItem>,
+    test_spans: Vec<(usize, usize)>,
+}
+
+/// Analyze a set of files as one crate. This is the real entry point:
+/// dataflow summaries (tainted returns, size-sensitive parameters,
+/// lock acquisition sets) are iterated to a fixpoint across every
+/// file before findings are emitted.
+pub fn analyze_sources(files: &[(String, String)]) -> Vec<Finding> {
+    let cxs: Vec<FileCx> = files
+        .iter()
+        .map(|(rel, src)| {
+            let stripped = lexer::strip(src);
+            let tree = syntax::Tree::parse(&stripped.code);
+            let test_spans = lexer::test_spans(&stripped.code);
+            let fns = syntax::fn_items(&stripped.code, &tree)
+                .into_iter()
+                .filter(|f| !test_spans.iter().any(|&(a, b)| a <= f.line && f.line <= b))
+                .collect();
+            FileCx { rel: rel.replace('\\', "/"), stripped, tree, fns, test_spans }
+        })
+        .collect();
+
+    // Crate summaries to a fixpoint (bounded: each iteration only adds
+    // facts, and the fact space is finite).
+    let mut sums = flow::Summaries::default();
+    for cx in &cxs {
+        for f in &cx.fns {
+            sums.fns.insert(f.name.clone());
+        }
+    }
+    let mut facts: Vec<Vec<flow::FnFacts>> = Vec::new();
+    for _ in 0..10 {
+        facts = cxs
+            .iter()
+            .map(|cx| {
+                cx.fns
+                    .iter()
+                    .map(|f| flow::fn_facts(&cx.stripped.code, &cx.tree, f, &sums))
+                    .collect()
+            })
+            .collect();
+        let mut next = sums.clone();
+        for file_facts in &facts {
+            for fa in file_facts {
+                if fa.taint_ret {
+                    next.taint_ret.insert(fa.name.clone());
+                }
+                if !fa.sensitive.is_empty() {
+                    next.sensitive
+                        .entry(fa.name.clone())
+                        .or_default()
+                        .extend(fa.sensitive.iter().copied());
+                }
+                if !fa.acquired.is_empty() {
+                    next.locks
+                        .entry(fa.name.clone())
+                        .or_default()
+                        .extend(fa.acquired.iter().cloned());
+                }
+            }
+        }
+        if next == sums {
+            break;
+        }
+        sums = next;
+    }
+
+    // Crate-wide lock edges involving undeclared classes: a finding
+    // only when two call paths disagree on direction.
+    let mut edge_map: BTreeMap<(String, String), Vec<(usize, usize)>> = BTreeMap::new();
+    for (fi, file_facts) in facts.iter().enumerate() {
+        for fa in file_facts {
+            for (a, b, line) in &fa.edges {
+                edge_map.entry((a.clone(), b.clone())).or_default().push((fi, *line));
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    for (fi, cx) in cxs.iter().enumerate() {
+        findings.extend(file_findings(cx, fi, &facts[fi], &edge_map));
+    }
+    findings
+}
+
+/// Analyze one file's source under its root-relative path (a
+/// single-file crate; cross-file summaries are empty).
 pub fn analyze_source(rel: &str, src: &str) -> Vec<Finding> {
-    let stripped = lexer::strip(src);
-    let code = stripped.code.as_str();
-    let spans = lexer::test_spans(code);
-    let in_test = |line: usize| spans.iter().any(|&(a, b)| a <= line && line <= b);
+    analyze_sources(&[(rel.to_string(), src.to_string())])
+}
+
+fn file_findings(
+    cx: &FileCx,
+    fi: usize,
+    facts: &[flow::FnFacts],
+    edge_map: &BTreeMap<(String, String), Vec<(usize, usize)>>,
+) -> Vec<Finding> {
+    let rel = cx.rel.as_str();
+    let code = cx.stripped.code.as_str();
+    let in_test =
+        |line: usize| cx.test_spans.iter().any(|&(a, b)| a <= line && line <= b);
 
     let mut raw = Vec::new();
     for rule in rules_for(rel) {
         match rule {
-            SERVING_NO_PANIC => serving_no_panic(rel, code, &mut raw),
-            NO_INDEX_UNTRUSTED => no_index_untrusted(rel, code, &mut raw),
-            LEN_BEFORE_ALLOC => len_before_alloc(rel, code, &mut raw),
-            GUARD_ACROSS_BLOCKING => guard_across_blocking(rel, code, &mut raw),
+            SERVING_NO_PANIC => serving_no_panic(rel, code, &cx.tree, &mut raw),
+            NO_INDEX_UNTRUSTED => no_index_untrusted(rel, code, &cx.tree, &mut raw),
+            LEN_BEFORE_ALLOC => {
+                for fa in facts {
+                    for &line in &fa.alloc_findings {
+                        raw.push(Finding {
+                            file: rel.to_string(),
+                            line,
+                            rule: LEN_BEFORE_ALLOC,
+                            message: format!(
+                                "allocation in `{}` sized by a decoded value with no dominating \
+                                 cap/bytes-present validation — `ensure!` a bound first",
+                                fa.name
+                            ),
+                        });
+                    }
+                    for (line, callee) in &fa.call_findings {
+                        raw.push(Finding {
+                            file: rel.to_string(),
+                            line: *line,
+                            rule: LEN_BEFORE_ALLOC,
+                            message: format!(
+                                "`{}` passes an unvalidated decoded value into a size-sensitive \
+                                 parameter of `{callee}` — validate before the call",
+                                fa.name
+                            ),
+                        });
+                    }
+                }
+            }
+            LOCK_ORDER => {
+                for fa in facts {
+                    for (line, msg) in &fa.order_findings {
+                        raw.push(Finding {
+                            file: rel.to_string(),
+                            line: *line,
+                            rule: LOCK_ORDER,
+                            message: format!("in `{}`: {msg}", fa.name),
+                        });
+                    }
+                    for (line, msg) in &fa.blocking_findings {
+                        raw.push(Finding {
+                            file: rel.to_string(),
+                            line: *line,
+                            rule: LOCK_ORDER,
+                            message: format!(
+                                "in `{}`: {msg} — scope the guard to end first, or pragma the \
+                                 documented protocol",
+                                fa.name
+                            ),
+                        });
+                    }
+                }
+                for ((a, b), locs) in edge_map {
+                    let reversed = edge_map.contains_key(&(b.clone(), a.clone()));
+                    let both = a == b || reversed;
+                    if !both {
+                        continue;
+                    }
+                    for &(efi, line) in locs {
+                        if efi == fi {
+                            raw.push(Finding {
+                                file: rel.to_string(),
+                                line,
+                                rule: LOCK_ORDER,
+                                message: format!(
+                                    "locks `{a}` and `{b}` are acquired in inconsistent order \
+                                     across call paths — pick one order or merge the locks"
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+            UNSAFE_CONTRACT => {
+                unsafe_contract(rel, code, &cx.stripped, &cx.tree, &cx.fns, &mut raw)
+            }
+            SNAPSHOT_DISCIPLINE => snapshot_discipline(rel, code, &cx.tree, &mut raw),
+            CODEC_VERSION_EXHAUSTIVE => {
+                codec_version_exhaustive(rel, code, &cx.tree, &mut raw)
+            }
             WRITER_BUMPS_EPOCH => writer_bumps_epoch(rel, code, &mut raw),
             _ => {}
         }
@@ -126,10 +352,10 @@ pub fn analyze_source(rel: &str, src: &str) -> Vec<Finding> {
     raw.retain(|f| seen.insert((f.rule, f.line)));
 
     let lines: Vec<&str> = code.lines().collect();
-    let mut used = vec![false; stripped.pragmas.len()];
+    let mut used = vec![false; cx.stripped.pragmas.len()];
     let mut findings = Vec::new();
     for f in raw {
-        let suppressed = stripped.pragmas.iter().enumerate().any(|(pi, p)| {
+        let suppressed = cx.stripped.pragmas.iter().enumerate().any(|(pi, p)| {
             let hit = p.rule.as_deref() == Some(f.rule)
                 && p.reason.is_some()
                 && pragma_covers(p.line, f.line, &lines);
@@ -142,13 +368,22 @@ pub fn analyze_source(rel: &str, src: &str) -> Vec<Finding> {
             findings.push(f);
         }
     }
-    for (pi, p) in stripped.pragmas.iter().enumerate() {
+    for (pi, p) in cx.stripped.pragmas.iter().enumerate() {
         if in_test(p.line) {
             continue;
         }
         let message = match (&p.rule, &p.reason) {
             (None, _) => {
                 "malformed pragma — expected `pallas-lint: allow(<rule>) -- <reason>`".to_string()
+            }
+            (Some(rule), _) if !KNOWN_RULES.contains(&rule.as_str()) => {
+                match RENAMED_RULES.iter().find(|(old, _)| old == rule) {
+                    Some((_, new)) => format!(
+                        "allow({rule}) names a retired rule — it was renamed to `{new}`; \
+                         update the pragma"
+                    ),
+                    None => format!("allow({rule}) names an unknown rule"),
+                }
             }
             (Some(rule), None) => {
                 format!("allow({rule}) is missing its mandatory `-- <reason>` clause")
@@ -178,17 +413,19 @@ fn pragma_covers(p: usize, finding: usize, lines: &[&str]) -> bool {
 }
 
 /// Recursively analyze every `.rs` file under `root` (usually
-/// `rust/src`). Findings are ordered by path, then line.
+/// `rust/src`) as one crate. Findings are ordered by path, then line.
 pub fn analyze_tree(root: &Path) -> anyhow::Result<Vec<Finding>> {
     let mut files = Vec::new();
     collect_rs(root, root, &mut files)?;
     files.sort();
-    let mut findings = Vec::new();
-    for rel in &files {
-        let src = std::fs::read_to_string(root.join(rel))
+    let mut sources = Vec::new();
+    for rel in files {
+        let src = std::fs::read_to_string(root.join(&rel))
             .map_err(|e| anyhow::anyhow!("reading {rel}: {e}"))?;
-        findings.extend(analyze_source(rel, &src));
+        sources.push((rel, src));
     }
+    let mut findings = analyze_sources(&sources);
+    findings.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
     Ok(findings)
 }
 
@@ -220,7 +457,482 @@ fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> anyhow::Result<
 }
 
 // ---------------------------------------------------------------------------
-// Token scanning helpers (over stripped code).
+// Token-stream helpers.
+
+fn tok_byte(code: &str, tree: &syntax::Tree, i: usize) -> u8 {
+    code.as_bytes()[tree.toks[i].start]
+}
+
+fn is_punct_tok(code: &str, tree: &syntax::Tree, i: usize, c: u8) -> bool {
+    tree.toks[i].kind == syntax::TokKind::Punct && tok_byte(code, tree, i) == c
+}
+
+// ---------------------------------------------------------------------------
+// serving-no-panic (lexical, over the token stream)
+
+fn serving_no_panic(rel: &str, code: &str, tree: &syntax::Tree, out: &mut Vec<Finding>) {
+    const METHODS: &[&str] = &["unwrap", "expect"];
+    const MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+    let t = &tree.toks;
+    for i in 0..t.len() {
+        if t[i].kind != syntax::TokKind::Ident {
+            continue;
+        }
+        let w = tree.text(code, i);
+        if METHODS.contains(&w)
+            && i > 0
+            && is_punct_tok(code, tree, i - 1, b'.')
+            && i + 1 < t.len()
+            && t[i + 1].kind == syntax::TokKind::Open
+            && tok_byte(code, tree, i + 1) == b'('
+        {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: tree.line(code, i),
+                rule: SERVING_NO_PANIC,
+                message: format!(
+                    "`.{w}(..)` on a serving path — return an error instead, or add \
+                     `// pallas-lint: allow(serving-no-panic) -- <why infallible>`"
+                ),
+            });
+        }
+        if MACROS.contains(&w) && i + 1 < t.len() && is_punct_tok(code, tree, i + 1, b'!') {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: tree.line(code, i),
+                rule: SERVING_NO_PANIC,
+                message: format!("`{w}!` on a serving path — serving code must not abort"),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// no-index-untrusted (lexical, over the token stream)
+
+fn no_index_untrusted(rel: &str, code: &str, tree: &syntax::Tree, out: &mut Vec<Finding>) {
+    let t = &tree.toks;
+    for i in 0..t.len() {
+        if t[i].kind != syntax::TokKind::Open || tok_byte(code, tree, i) != b'[' {
+            continue;
+        }
+        let Some(p) = i.checked_sub(1) else { continue };
+        let indexes = match t[p].kind {
+            syntax::TokKind::Ident => {
+                let w = tree.text(code, p);
+                let lifetime = p > 0 && is_punct_tok(code, tree, p - 1, b'\'');
+                // A keyword or lifetime before `[` means type/expression
+                // position (`&mut [u8]`, `&'a [u8]`, `return [..]`).
+                !lifetime
+                    && !matches!(
+                        w,
+                        "mut" | "dyn" | "impl" | "else" | "return" | "in" | "as" | "move"
+                            | "where" | "const" | "static" | "ref" | "box" | "match" | "if"
+                            | "break" | "let"
+                    )
+            }
+            syntax::TokKind::Num => true,
+            syntax::TokKind::Close => {
+                matches!(tok_byte(code, tree, p), b')' | b']')
+            }
+            syntax::TokKind::Punct => tok_byte(code, tree, p) == b'?',
+            _ => false,
+        };
+        if indexes {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: tree.line(code, i),
+                rule: NO_INDEX_UNTRUSTED,
+                message: "`[..]` indexing at the wire boundary can panic on malformed input — \
+                          use `get(..)` / `split_at_checked`-style accessors"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// unsafe-contract
+
+fn unsafe_contract(
+    rel: &str,
+    code: &str,
+    stripped: &lexer::Stripped,
+    tree: &syntax::Tree,
+    fns: &[syntax::FnItem],
+    out: &mut Vec<Finding>,
+) {
+    let sites = syntax::unsafe_sites(code, tree);
+    let banned_module = rel.starts_with("api/")
+        || rel.starts_with("coordinator/")
+        || rel.starts_with("analysis/");
+    let lines: Vec<&str> = code.lines().collect();
+    for site in &sites {
+        if banned_module {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: site.line,
+                rule: UNSAFE_CONTRACT,
+                message: "`unsafe` is not permitted in api/, coordinator/, or analysis/ — \
+                          keep unsafety inside the kernel modules behind safe wrappers"
+                    .to_string(),
+            });
+            continue;
+        }
+        if !safety_covered(site.line, &lines, &stripped.safety_lines) {
+            let what = match site.kind {
+                syntax::UnsafeKind::Fn => "unsafe fn",
+                syntax::UnsafeKind::Block => "unsafe block",
+                syntax::UnsafeKind::Impl => "unsafe impl/trait",
+            };
+            out.push(Finding {
+                file: rel.to_string(),
+                line: site.line,
+                rule: UNSAFE_CONTRACT,
+                message: format!(
+                    "{what} without a `// SAFETY:` comment — state the invariant that makes \
+                     this sound"
+                ),
+            });
+        }
+    }
+    if UNSAFE_ALLOWLIST.contains(&rel) {
+        return;
+    }
+    // Raw-pointer arithmetic inside unsafe regions, and core::arch
+    // anywhere, are confined to the kernel allowlist.
+    let mut regions: Vec<(usize, usize)> = sites.iter().filter_map(|s| s.body).collect();
+    for f in fns {
+        if f.is_unsafe {
+            if let Some(b) = f.body {
+                regions.push(b);
+            }
+        }
+    }
+    let t = &tree.toks;
+    for i in 0..t.len() {
+        if t[i].kind != syntax::TokKind::Ident {
+            continue;
+        }
+        let w = tree.text(code, i);
+        if (w == "add" || w == "offset")
+            && i > 0
+            && is_punct_tok(code, tree, i - 1, b'.')
+            && i + 1 < t.len()
+            && t[i + 1].kind == syntax::TokKind::Open
+            && tok_byte(code, tree, i + 1) == b'('
+            && regions.iter().any(|&(a, b)| a < i && i < b)
+        {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: tree.line(code, i),
+                rule: UNSAFE_CONTRACT,
+                message: format!(
+                    "raw-pointer `.{w}(..)` outside the kernel allowlist \
+                     ({}) — move the arithmetic into a kernel module or index safely",
+                    UNSAFE_ALLOWLIST.join(", ")
+                ),
+            });
+        }
+        if w == "arch"
+            && i >= 3
+            && t[i - 3].kind == syntax::TokKind::Ident
+            && matches!(tree.text(code, i - 3), "core" | "std")
+            && is_punct_tok(code, tree, i - 2, b':')
+            && is_punct_tok(code, tree, i - 1, b':')
+        {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: tree.line(code, i),
+                rule: UNSAFE_CONTRACT,
+                message: format!(
+                    "`{}::arch` intrinsics outside the kernel allowlist ({})",
+                    tree.text(code, i - 3),
+                    UNSAFE_ALLOWLIST.join(", ")
+                ),
+            });
+        }
+    }
+}
+
+/// A SAFETY comment covers an `unsafe` site if it sits on the same
+/// line, or above it separated only by blank (comment-stripped) lines
+/// and `#[..]` attribute lines, within a small window.
+fn safety_covered(line: usize, lines: &[&str], safety_lines: &[usize]) -> bool {
+    if safety_lines.contains(&line) {
+        return true;
+    }
+    let mut l = line;
+    for _ in 0..8 {
+        if l <= 1 {
+            return false;
+        }
+        l -= 1;
+        if safety_lines.contains(&l) {
+            return true;
+        }
+        let text = lines.get(l - 1).map_or("", |s| s.trim());
+        if text.is_empty() || text.starts_with('#') {
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// snapshot-discipline
+
+/// Store lock fields a serving-path module must not route through.
+const STORE_LOCK_FIELDS: &[&str] = &["shards", "segments", "cached"];
+
+/// Atomic operations whose presence after `.epoch` marks a live
+/// store-internals read (vs a plain `epoch` field on a wire struct).
+const ATOMIC_METHODS: &[&str] = &[
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+const ACQUIRE_METHODS: &[&str] = &[
+    "read",
+    "write",
+    "lock",
+    "read_recover",
+    "write_recover",
+    "lock_recover",
+    "try_read",
+    "try_write",
+    "try_lock",
+];
+
+fn snapshot_discipline(rel: &str, code: &str, tree: &syntax::Tree, out: &mut Vec<Finding>) {
+    let t = &tree.toks;
+    for i in 0..t.len() {
+        if t[i].kind != syntax::TokKind::Ident {
+            continue;
+        }
+        let w = tree.text(code, i);
+        // Raw `.epoch` atomic access (the `.epoch()` accessor is the
+        // sanctioned read). The store's epoch is an `AtomicU64`, so any
+        // direct touch reads `.epoch.load(..)` / `.epoch.fetch_add(..)`
+        // — that atomic-method tail is the discriminator. A bare
+        // `.epoch` copy out of a plain struct (wire stats, a
+        // `StoreSnapshot`'s frozen epoch) carries no atomic call and is
+        // not a store-internals read.
+        let atomic_tail = w == "epoch"
+            && i + 3 < t.len()
+            && is_punct_tok(code, tree, i + 1, b'.')
+            && t[i + 2].kind == syntax::TokKind::Ident
+            && ATOMIC_METHODS.contains(&tree.text(code, i + 2))
+            && t[i + 3].kind == syntax::TokKind::Open
+            && tok_byte(code, tree, i + 3) == b'(';
+        if atomic_tail && i > 0 && is_punct_tok(code, tree, i - 1, b'.') {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: tree.line(code, i),
+                rule: SNAPSHOT_DISCIPLINE,
+                message: "raw `.epoch` field access on a serving path — use the `epoch()` \
+                          accessor or a `StoreSnapshot`"
+                    .to_string(),
+            });
+            continue;
+        }
+        // Lock acquisition routed through a store lock field.
+        if !ACQUIRE_METHODS.contains(&w)
+            || i == 0
+            || !is_punct_tok(code, tree, i - 1, b'.')
+            || i + 1 >= t.len()
+            || t[i + 1].kind != syntax::TokKind::Open
+            || tok_byte(code, tree, i + 1) != b'('
+            || tree.close_of(i + 1) != i + 2
+        {
+            continue;
+        }
+        let mut r = i - 2;
+        if t[r].kind == syntax::TokKind::Close && tok_byte(code, tree, r) == b']' {
+            let open = tree.pair[r];
+            if open != syntax::NO_PAIR && open > 0 {
+                r = open - 1;
+            }
+        }
+        if t[r].kind == syntax::TokKind::Ident
+            && r > 0
+            && is_punct_tok(code, tree, r - 1, b'.')
+        {
+            let field = tree.text(code, r);
+            if STORE_LOCK_FIELDS.contains(&field) {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: tree.line(code, i),
+                    rule: SNAPSHOT_DISCIPLINE,
+                    message: format!(
+                        "serving path acquires the store's `{field}` lock directly — read \
+                         through a `StoreSnapshot` / sanctioned accessor instead"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// codec-version-exhaustive
+
+fn codec_version_exhaustive(rel: &str, code: &str, tree: &syntax::Tree, out: &mut Vec<Finding>) {
+    let Some((_, cname)) = CODEC_MANIFEST.iter().find(|(f, _)| *f == rel) else {
+        return;
+    };
+    let t = &tree.toks;
+    // `const <cname>: u32 = N;`
+    let mut current: Option<u64> = None;
+    for i in 0..t.len() {
+        if t[i].kind == syntax::TokKind::Ident
+            && tree.is(code, i, "const")
+            && i + 1 < t.len()
+            && tree.is(code, i + 1, cname)
+        {
+            for j in i + 2..(i + 8).min(t.len()) {
+                if t[j].kind == syntax::TokKind::Num {
+                    current = num_value(tree.text(code, j));
+                    break;
+                }
+            }
+        }
+    }
+    let Some(current) = current else {
+        out.push(Finding {
+            file: rel.to_string(),
+            line: 1,
+            rule: CODEC_VERSION_EXHAUSTIVE,
+            message: format!(
+                "format-current const `{cname}` not found — update CODEC_MANIFEST in \
+                 analysis/rules.rs if it was renamed"
+            ),
+        });
+        return;
+    };
+    // Comparisons of the ident `version` against integer literals and
+    // against the const by name.
+    let mut literals: BTreeSet<u64> = BTreeSet::new();
+    let mut bound_by_name = false;
+    for i in 0..t.len() {
+        if t[i].kind != syntax::TokKind::Ident || !tree.is(code, i, "version") {
+            continue;
+        }
+        // Right side: `version <op> X`
+        if let Some((other, _)) = comparison_operand(code, tree, i, true) {
+            record_operand(code, tree, other, cname, &mut literals, &mut bound_by_name);
+        }
+        // Left side: `X <op> version`
+        if let Some((other, _)) = comparison_operand(code, tree, i, false) {
+            record_operand(code, tree, other, cname, &mut literals, &mut bound_by_name);
+        }
+    }
+    if !bound_by_name {
+        out.push(Finding {
+            file: rel.to_string(),
+            line: 1,
+            rule: CODEC_VERSION_EXHAUSTIVE,
+            message: format!(
+                "reader never compares `version` against `{cname}` — future versions must \
+                 be rejected by name, not by magic number"
+            ),
+        });
+    }
+    let missing: Vec<String> =
+        (2..=current).filter(|v| !literals.contains(v)).map(|v| v.to_string()).collect();
+    if !missing.is_empty() {
+        out.push(Finding {
+            file: rel.to_string(),
+            line: 1,
+            rule: CODEC_VERSION_EXHAUSTIVE,
+            message: format!(
+                "reader has no explicit arm for historical version(s) {} (current is \
+                 {current}; v1 is the base path) — every tag <= `{cname}` needs a gate",
+                missing.join(", ")
+            ),
+        });
+    }
+}
+
+fn num_value(text: &str) -> Option<u64> {
+    let digits: String = text.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+/// If the token after (`right == true`) or before the `version` ident
+/// is a comparison operator, return the operand token on the far side.
+fn comparison_operand(
+    code: &str,
+    tree: &syntax::Tree,
+    i: usize,
+    right: bool,
+) -> Option<(usize, ())> {
+    let t = &tree.toks;
+    let is_cmp = |j: usize| {
+        j < t.len()
+            && t[j].kind == syntax::TokKind::Punct
+            && matches!(tok_byte(code, tree, j), b'<' | b'>' | b'=' | b'!')
+    };
+    if right {
+        let mut j = i + 1;
+        if !is_cmp(j) {
+            return None;
+        }
+        while is_cmp(j) {
+            j += 1;
+        }
+        (j < t.len()
+            && matches!(t[j].kind, syntax::TokKind::Num | syntax::TokKind::Ident))
+        .then_some((j, ()))
+    } else {
+        let j = i.checked_sub(1)?;
+        if !is_cmp(j) {
+            return None;
+        }
+        let mut k = j;
+        while k > 0 && is_cmp(k - 1) {
+            k -= 1;
+        }
+        let o = k.checked_sub(1)?;
+        matches!(t[o].kind, syntax::TokKind::Num | syntax::TokKind::Ident)
+            .then_some((o, ()))
+    }
+}
+
+fn record_operand(
+    code: &str,
+    tree: &syntax::Tree,
+    at: usize,
+    cname: &str,
+    literals: &mut BTreeSet<u64>,
+    bound_by_name: &mut bool,
+) {
+    match tree.toks[at].kind {
+        syntax::TokKind::Num => {
+            if let Some(v) = num_value(tree.text(code, at)) {
+                literals.insert(v);
+            }
+        }
+        syntax::TokKind::Ident => {
+            if tree.is(code, at, cname) {
+                *bound_by_name = true;
+            }
+        }
+        _ => {}
+    }
+}
+
+// ---------------------------------------------------------------------------
+// writer-bumps-epoch (lexical, kept byte-oriented from v1: the
+// mutator-manifest check reads whole function bodies, which the byte
+// scan does precisely enough, and its messages are pinned by tests)
 
 fn is_ident_byte(c: u8) -> bool {
     c == b'_' || c.is_ascii_alphanumeric()
@@ -247,27 +959,6 @@ fn token_positions(code: &str, tok: &str) -> Vec<usize> {
     out
 }
 
-fn next_non_space(b: &[u8], mut i: usize) -> Option<u8> {
-    while i < b.len() {
-        if !b[i].is_ascii_whitespace() {
-            return Some(b[i]);
-        }
-        i += 1;
-    }
-    None
-}
-
-fn prev_non_space(b: &[u8], i: usize) -> Option<u8> {
-    let mut j = i;
-    while j > 0 {
-        j -= 1;
-        if !b[j].is_ascii_whitespace() {
-            return Some(b[j]);
-        }
-    }
-    None
-}
-
 /// Offset of the delimiter closing the one at `open` (same line or
 /// beyond); `code.len()` when unbalanced.
 fn match_delim(code: &str, open: usize, oc: u8, cc: u8) -> usize {
@@ -287,116 +978,6 @@ fn match_delim(code: &str, open: usize, oc: u8, cc: u8) -> usize {
     }
     code.len()
 }
-
-/// Maximal identifier tokens in `s`.
-fn idents(s: &str) -> Vec<&str> {
-    let b = s.as_bytes();
-    let mut out = Vec::new();
-    let mut i = 0;
-    while i < b.len() {
-        if (b[i] == b'_' || b[i].is_ascii_alphabetic()) && (i == 0 || !is_ident_byte(b[i - 1])) {
-            let start = i;
-            while i < b.len() && is_ident_byte(b[i]) {
-                i += 1;
-            }
-            out.push(&s[start..i]);
-        } else {
-            i += 1;
-        }
-    }
-    out
-}
-
-// ---------------------------------------------------------------------------
-// serving-no-panic
-
-fn serving_no_panic(rel: &str, code: &str, out: &mut Vec<Finding>) {
-    let b = code.as_bytes();
-    const METHODS: &[&str] = &["unwrap", "expect"];
-    const MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
-    for tok in METHODS {
-        for at in token_positions(code, tok) {
-            if prev_non_space(b, at) == Some(b'.') && next_non_space(b, at + tok.len()) == Some(b'(')
-            {
-                out.push(Finding {
-                    file: rel.to_string(),
-                    line: lexer::line_of(code, at),
-                    rule: SERVING_NO_PANIC,
-                    message: format!(
-                        "`.{tok}(..)` on a serving path — return an error instead, or add \
-                         `// pallas-lint: allow(serving-no-panic) -- <why infallible>`"
-                    ),
-                });
-            }
-        }
-    }
-    for tok in MACROS {
-        for at in token_positions(code, tok) {
-            if next_non_space(b, at + tok.len()) == Some(b'!') {
-                out.push(Finding {
-                    file: rel.to_string(),
-                    line: lexer::line_of(code, at),
-                    rule: SERVING_NO_PANIC,
-                    message: format!("`{tok}!` on a serving path — serving code must not abort"),
-                });
-            }
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// no-index-untrusted
-
-fn no_index_untrusted(rel: &str, code: &str, out: &mut Vec<Finding>) {
-    let b = code.as_bytes();
-    for (i, &c) in b.iter().enumerate() {
-        if c != b'[' {
-            continue;
-        }
-        let Some(prev) = prev_non_space(b, i) else { continue };
-        // A keyword or lifetime before `[` means type/expression
-        // position (`&mut [u8]`, `&'a [u8]`, `return [..]`), not
-        // indexing.
-        if is_ident_byte(prev) && preceding_word_is_keyword_or_lifetime(b, i) {
-            continue;
-        }
-        if is_ident_byte(prev) || prev == b')' || prev == b']' || prev == b'?' {
-            out.push(Finding {
-                file: rel.to_string(),
-                line: lexer::line_of(code, i),
-                rule: NO_INDEX_UNTRUSTED,
-                message: "`[..]` indexing at the wire boundary can panic on malformed input — \
-                          use `get(..)` / `split_at_checked`-style accessors"
-                    .to_string(),
-            });
-        }
-    }
-}
-
-/// Is the identifier ending just before offset `i` (after skipping
-/// whitespace) a keyword or a lifetime (`&'a [u8]`) rather than an
-/// indexable expression?
-fn preceding_word_is_keyword_or_lifetime(b: &[u8], i: usize) -> bool {
-    let mut end = i;
-    while end > 0 && b[end - 1].is_ascii_whitespace() {
-        end -= 1;
-    }
-    let mut start = end;
-    while start > 0 && is_ident_byte(b[start - 1]) {
-        start -= 1;
-    }
-    if start > 0 && b[start - 1] == b'\'' {
-        return true;
-    }
-    matches!(
-        std::str::from_utf8(&b[start..end]).unwrap_or(""),
-        "mut" | "dyn" | "impl" | "else" | "return" | "in" | "as" | "move" | "where" | "const"
-            | "static" | "ref" | "box" | "match" | "if" | "break" | "let"
-    )
-}
-
-// ---------------------------------------------------------------------------
-// len-before-alloc
 
 struct FnSpan {
     body_start: usize,
@@ -450,318 +1031,6 @@ fn fn_spans(code: &str) -> Vec<FnSpan> {
     }
     spans
 }
-
-/// Innermost function body containing `at`.
-fn enclosing_fn(spans: &[FnSpan], at: usize) -> Option<&FnSpan> {
-    spans
-        .iter()
-        .filter(|s| s.body_start < at && at < s.body_end)
-        .min_by_key(|s| s.body_end - s.body_start)
-}
-
-/// Size expressions that cannot come from a decoded count: literal /
-/// const-only arithmetic, or sizes measured off in-memory data via
-/// `.len()`.
-fn alloc_size_is_benign(arg: &str) -> bool {
-    if arg.contains(".len(") {
-        return true;
-    }
-    const PRIMS: &[&str] = &[
-        "as", "usize", "isize", "u8", "u16", "u32", "u64", "i8", "i16", "i32", "i64", "f32", "f64",
-    ];
-    idents(arg).iter().all(|id| {
-        PRIMS.contains(id)
-            || id
-                .chars()
-                .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
-    })
-}
-
-/// Tokens accepted as "a cap / bytes-present check happened".
-const VALIDATORS: &[&str] = &[
-    "ensure!",
-    "bail!",
-    ".count(",
-    "checked_mul",
-    "checked_add",
-    "parse_header",
-    "ensure_frame_fits",
-    "MAX_",
-];
-
-fn has_validator_before(code: &str, from: usize, to: usize) -> bool {
-    let window = &code[from..to];
-    VALIDATORS.iter().any(|v| {
-        let mut search = 0;
-        while let Some(rel) = window[search..].find(v) {
-            let at = search + rel;
-            let first = v.as_bytes()[0];
-            let left_ok = !is_ident_byte(first)
-                || at == 0
-                || !is_ident_byte(window.as_bytes()[at - 1]);
-            if left_ok {
-                return true;
-            }
-            search = at + 1;
-        }
-        false
-    })
-}
-
-fn len_before_alloc(rel: &str, code: &str, out: &mut Vec<Finding>) {
-    let spans = fn_spans(code);
-    let b = code.as_bytes();
-    let mut sites: Vec<(usize, String)> = Vec::new();
-    for at in token_positions(code, "with_capacity") {
-        let Some(open_rel) = code[at..].find('(') else { continue };
-        let open = at + open_rel;
-        let close = match_delim(code, open, b'(', b')');
-        sites.push((at, code[open + 1..close.min(code.len())].to_string()));
-    }
-    for at in token_positions(code, "reserve") {
-        if prev_non_space(b, at) != Some(b'.') {
-            continue;
-        }
-        let Some(open_rel) = code[at..].find('(') else { continue };
-        let open = at + open_rel;
-        let close = match_delim(code, open, b'(', b')');
-        sites.push((at, code[open + 1..close.min(code.len())].to_string()));
-    }
-    for at in token_positions(code, "vec") {
-        if next_non_space(b, at + 3) != Some(b'!') {
-            continue;
-        }
-        let Some(open_rel) = code[at..].find('[') else { continue };
-        let open = at + open_rel;
-        let close = match_delim(code, open, b'[', b']');
-        let body = &code[open + 1..close.min(code.len())];
-        // `vec![elem; size]` — only the repeat form declares a size.
-        let Some(semi) = top_level_semi(body) else { continue };
-        sites.push((at, body[semi + 1..].to_string()));
-    }
-    for (at, arg) in sites {
-        if alloc_size_is_benign(&arg) {
-            continue;
-        }
-        let Some(span) = enclosing_fn(&spans, at) else { continue };
-        if has_validator_before(code, span.body_start, at) {
-            continue;
-        }
-        out.push(Finding {
-            file: rel.to_string(),
-            line: lexer::line_of(code, at),
-            rule: LEN_BEFORE_ALLOC,
-            message: format!(
-                "allocation sized by `{}` with no cap/bytes-present check earlier in `{}` — \
-                 validate the decoded count first",
-                arg.trim(),
-                span.name
-            ),
-        });
-    }
-}
-
-/// Offset of the last `;` at bracket depth 0 in `s`, if any.
-fn top_level_semi(s: &str) -> Option<usize> {
-    let b = s.as_bytes();
-    let mut depth = 0isize;
-    let mut found = None;
-    for (i, &c) in b.iter().enumerate() {
-        match c {
-            b'(' | b'[' | b'{' => depth += 1,
-            b')' | b']' | b'}' => depth -= 1,
-            b';' if depth == 0 => found = Some(i),
-            _ => {}
-        }
-    }
-    found
-}
-
-// ---------------------------------------------------------------------------
-// guard-across-blocking
-
-/// Lock acquisitions that produce a guard.
-const ACQUIRES: &[&str] = &[
-    ".lock()",
-    ".read()",
-    ".write()",
-    ".lock_recover()",
-    ".read_recover()",
-    ".write_recover()",
-    ".try_read()",
-    ".try_write()",
-];
-/// The blocking subset: acquiring one of these while another guard is
-/// live risks deadlock; `try_*` never blocks and is exempt (it is the
-/// sanctioned non-blocking pattern, e.g. the insert-path cache purge).
-const BLOCKING_ACQUIRES: &[&str] = &[
-    ".lock()",
-    ".read()",
-    ".write()",
-    ".lock_recover()",
-    ".read_recover()",
-    ".write_recover()",
-];
-/// Blocking operations a guard must not be live across. `.join()` is
-/// the no-arg thread-join form (`path.join("..")` takes an argument
-/// and never matches); `thread::spawn` covers the non-method form.
-const BLOCKING_OPS: &[&str] = &[
-    "thread::scope",
-    "thread::spawn",
-    ".spawn(",
-    ".send(",
-    ".recv(",
-    ".recv_timeout(",
-    ".join()",
-];
-
-fn guard_across_blocking(rel: &str, code: &str, out: &mut Vec<Finding>) {
-    struct Guard {
-        name: String,
-        depth: isize,
-        line: usize,
-    }
-    let mut guards: Vec<Guard> = Vec::new();
-    let mut depth = 0isize;
-    for (ln0, line) in code.lines().enumerate() {
-        let ln = ln0 + 1;
-        if let Some(g) = guards.last() {
-            let tok = BLOCKING_OPS
-                .iter()
-                .chain(BLOCKING_ACQUIRES)
-                .find(|t| line.contains(*t));
-            if let Some(tok) = tok {
-                out.push(Finding {
-                    file: rel.to_string(),
-                    line: ln,
-                    rule: GUARD_ACROSS_BLOCKING,
-                    message: format!(
-                        "lock guard `{}` (bound on line {}) is live across `{}` — scope the \
-                         guard to end first, or pragma the documented lock order",
-                        g.name, g.line, tok
-                    ),
-                });
-            }
-        } else {
-            // Two blocking acquisitions inside one statement.
-            let hits: usize =
-                BLOCKING_ACQUIRES.iter().map(|t| line.matches(t).count()).sum();
-            if hits >= 2 {
-                out.push(Finding {
-                    file: rel.to_string(),
-                    line: ln,
-                    rule: GUARD_ACROSS_BLOCKING,
-                    message: "two blocking lock acquisitions in one statement — acquire in a \
-                              documented order, one at a time"
-                        .to_string(),
-                });
-            }
-        }
-        let opens = line.bytes().filter(|&c| c == b'{').count() as isize;
-        let closes = line.bytes().filter(|&c| c == b'}').count() as isize;
-        depth += opens - closes;
-        guards.retain(|g| g.depth <= depth);
-        if !line.is_empty() {
-            guards.retain(|g| !line.contains(&format!("drop({})", g.name)));
-        }
-        if token_positions(line, "let").is_empty() {
-            continue;
-        }
-        let acquire = ACQUIRES
-            .iter()
-            .filter_map(|t| line.find(t).map(|p| (p, *t)))
-            .min();
-        if let Some((pos, tok)) = acquire {
-            if binds_guard(line, pos + tok.len()) {
-                guards.push(Guard {
-                    name: binding_name(line).unwrap_or_else(|| "_".to_string()),
-                    depth,
-                    line: ln,
-                });
-            }
-        }
-    }
-}
-
-/// After an acquire token: does this statement keep the guard (true)
-/// or immediately extract a value through it (false → temporary whose
-/// guard dies at the `;`)?
-fn binds_guard(line: &str, mut i: usize) -> bool {
-    let b = line.as_bytes();
-    loop {
-        while i < b.len() && b[i].is_ascii_whitespace() {
-            i += 1;
-        }
-        if i >= b.len() {
-            return true; // statement continues on the next line — assume guard
-        }
-        match b[i] {
-            b'?' => i += 1,
-            b'.' => {
-                let rest = &line[i..];
-                // Poison/Option adapters still yield the guard itself.
-                if let Some(skip) = chained_adapter_len(rest) {
-                    i += skip;
-                } else {
-                    return false;
-                }
-            }
-            _ => return true,
-        }
-    }
-}
-
-/// If `rest` starts with an adapter that returns the guard
-/// (`.unwrap()`, `.expect(..)`, `.unwrap_or_else(..)`, `.ok()`),
-/// return its length on this line.
-fn chained_adapter_len(rest: &str) -> Option<usize> {
-    for prefix in [".unwrap()", ".ok()"] {
-        if rest.starts_with(prefix) {
-            return Some(prefix.len());
-        }
-    }
-    for prefix in [".expect(", ".unwrap_or_else("] {
-        if rest.starts_with(prefix) {
-            let open = prefix.len() - 1;
-            let close = match_delim(rest, open, b'(', b')');
-            return Some(if close >= rest.len() { rest.len() } else { close + 1 });
-        }
-    }
-    None
-}
-
-/// Identifier bound by a `let` on this line (last ident of the pattern,
-/// skipping `mut`/`ref` and enum constructors).
-fn binding_name(line: &str) -> Option<String> {
-    let let_at = token_positions(line, "let").first().copied()?;
-    let eq = assignment_eq(line, let_at + 3)?;
-    let pat = &line[let_at + 3..eq];
-    idents(pat)
-        .into_iter()
-        .filter(|id| !matches!(*id, "mut" | "ref" | "Some" | "Ok" | "Err"))
-        .next_back()
-        .map(str::to_string)
-}
-
-/// First plain `=` (not `==`, `=>`, `<=`, `>=`, `!=`, `+=`, …).
-fn assignment_eq(line: &str, from: usize) -> Option<usize> {
-    let b = line.as_bytes();
-    let mut i = from;
-    while i < b.len() {
-        if b[i] == b'='
-            && b.get(i + 1) != Some(&b'=')
-            && b.get(i + 1) != Some(&b'>')
-            && (i == 0 || !matches!(b[i - 1], b'=' | b'!' | b'<' | b'>' | b'+' | b'-' | b'*' | b'/' | b'&' | b'|' | b'^' | b'%'))
-        {
-            return Some(i);
-        }
-        i += 1;
-    }
-    None
-}
-
-// ---------------------------------------------------------------------------
-// writer-bumps-epoch
 
 /// Store-internals tokens banned outside `state.rs`: touching these
 /// directly bypasses the epoch bump the manifest mutators guarantee,

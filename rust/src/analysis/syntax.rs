@@ -1,0 +1,584 @@
+//! Token trees and item outlines for pallas-lint v2.
+//!
+//! The [`lexer`](super::lexer) strips literals and comments while
+//! preserving byte offsets; this module turns the stripped text into a
+//! token stream with matched `()` `[]` `{}` delimiter pairs (a token
+//! *tree*, flattened: [`Tree::pair`] maps each opener to its closer),
+//! and reads item outlines off it: function items with parameter
+//! names and body extents ([`fn_items`]), `unsafe` sites
+//! ([`unsafe_sites`]), and call expressions ([`calls_in`]).
+//!
+//! Generics are deliberately **not** delimiters here — `<`/`>` are
+//! ordinary punctuation (the `Vec<Vec<[u8; N]>>` ambiguity is why
+//! real Rust lexers do the same); outline scanning tracks angle depth
+//! locally where it matters (skipping a generic parameter list to
+//! find a function's parameter parentheses). This stays precise for
+//! rustfmt-shaped sources without importing a real parser, which is
+//! the crate's no-dependency constraint.
+
+use super::lexer;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Punct,
+    Open,
+    Close,
+}
+
+/// One token over the stripped code: byte range plus kind.
+#[derive(Clone, Copy, Debug)]
+pub struct Tok {
+    pub start: usize,
+    pub end: usize,
+    pub kind: TokKind,
+}
+
+/// Sentinel for an unmatched delimiter in [`Tree::pair`].
+pub const NO_PAIR: usize = usize::MAX;
+
+/// Flattened token tree: tokens plus delimiter pairing.
+pub struct Tree {
+    pub toks: Vec<Tok>,
+    /// For `Open`/`Close` tokens, the index of the matching delimiter;
+    /// [`NO_PAIR`] when unbalanced. Unused entries for other kinds.
+    pub pair: Vec<usize>,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+impl Tree {
+    pub fn parse(code: &str) -> Tree {
+        let toks = lex(code);
+        let mut pair = vec![NO_PAIR; toks.len()];
+        // One stack per delimiter kind: a stray `)` must not steal a
+        // pending `{` (mismatches happen mid-edit; the gate still runs).
+        let mut stacks: [Vec<usize>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        let which = |c: u8| match c {
+            b'(' | b')' => 0usize,
+            b'[' | b']' => 1,
+            _ => 2,
+        };
+        for (i, t) in toks.iter().enumerate() {
+            match t.kind {
+                TokKind::Open => stacks[which(code.as_bytes()[t.start])].push(i),
+                TokKind::Close => {
+                    if let Some(open) = stacks[which(code.as_bytes()[t.start])].pop() {
+                        pair[open] = i;
+                        pair[i] = open;
+                    }
+                }
+                _ => {}
+            }
+        }
+        Tree { toks, pair }
+    }
+
+    /// Token text slice.
+    pub fn text<'c>(&self, code: &'c str, i: usize) -> &'c str {
+        &code[self.toks[i].start..self.toks[i].end]
+    }
+
+    pub fn is(&self, code: &str, i: usize, s: &str) -> bool {
+        self.text(code, i) == s
+    }
+
+    /// 1-based line of token `i`.
+    pub fn line(&self, code: &str, i: usize) -> usize {
+        lexer::line_of(code, self.toks[i].start)
+    }
+
+    /// Matching close index for the `Open` at `i` (or the end of the
+    /// stream when unbalanced, so range loops stay safe).
+    pub fn close_of(&self, i: usize) -> usize {
+        let p = self.pair[i];
+        if p == NO_PAIR {
+            self.toks.len().saturating_sub(1)
+        } else {
+            p
+        }
+    }
+}
+
+/// Tokenize stripped code: identifiers (keywords included), numeric
+/// literals, delimiters, and single-byte punctuation. Multi-byte
+/// operators arrive as adjacent punct tokens; adjacency is detectable
+/// via byte offsets (`==` is two `=` toks with `end == start`).
+pub fn lex(code: &str) -> Vec<Tok> {
+    let b = code.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok { start, end: i, kind: TokKind::Ident });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            // Numeric literal: digits plus suffix/hex/underscore bytes
+            // and the `.` of a float when followed by a digit.
+            let start = i;
+            while i < n
+                && (is_ident_byte(b[i])
+                    || (b[i] == b'.' && i + 1 < n && b[i + 1].is_ascii_digit()))
+            {
+                i += 1;
+            }
+            toks.push(Tok { start, end: i, kind: TokKind::Num });
+            continue;
+        }
+        let kind = match c {
+            b'(' | b'[' | b'{' => TokKind::Open,
+            b')' | b']' | b'}' => TokKind::Close,
+            _ => TokKind::Punct,
+        };
+        toks.push(Tok { start: i, end: i + 1, kind });
+        i += 1;
+    }
+    toks
+}
+
+/// A `fn` item outline.
+#[derive(Clone, Debug)]
+pub struct FnItem {
+    pub name: String,
+    pub name_tok: usize,
+    /// Parameter names in declaration order, `self` receivers
+    /// excluded (call-site arguments line up positionally).
+    pub params: Vec<String>,
+    /// Token indices of the body `{` and its matching `}`; `None` for
+    /// bodyless declarations.
+    pub body: Option<(usize, usize)>,
+    pub is_unsafe: bool,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+}
+
+/// All function items (including nested fns and methods) in the tree.
+pub fn fn_items(code: &str, tree: &Tree) -> Vec<FnItem> {
+    let t = &tree.toks;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < t.len() {
+        if t[i].kind != TokKind::Ident || !tree.is(code, i, "fn") {
+            i += 1;
+            continue;
+        }
+        let kw = i;
+        let Some(name_tok) = next_at(t, i + 1) else { break };
+        if t[name_tok].kind != TokKind::Ident {
+            i += 1;
+            continue; // `fn` inside a closure type — not an item
+        }
+        let name = tree.text(code, name_tok).to_string();
+        // Find the parameter parens, skipping a generic list. Angle
+        // depth counts `<`/`>` puncts; `->` cannot appear before the
+        // parameter list, so no arrow correction is needed here.
+        let mut j = name_tok + 1;
+        let mut angle = 0i32;
+        let mut params_group = None;
+        while j < t.len() {
+            match t[j].kind {
+                TokKind::Punct => {
+                    let c = code.as_bytes()[t[j].start];
+                    if c == b'<' {
+                        angle += 1;
+                    } else if c == b'>' {
+                        angle -= 1;
+                    } else if c == b';' {
+                        break;
+                    }
+                    j += 1;
+                }
+                TokKind::Open => {
+                    if angle == 0 && code.as_bytes()[t[j].start] == b'(' {
+                        params_group = Some(j);
+                        break;
+                    }
+                    j = tree.close_of(j) + 1;
+                }
+                _ => j += 1,
+            }
+        }
+        let Some(pg) = params_group else {
+            i = kw + 1;
+            continue;
+        };
+        let pg_close = tree.close_of(pg);
+        let params = param_names(code, tree, pg, pg_close);
+        // Body `{` after the signature: skip bracketed groups (array
+        // types in the return position), stop at `;` outside angles.
+        let mut k = pg_close + 1;
+        let mut angle = 0i32;
+        let mut body = None;
+        while k < t.len() {
+            match t[k].kind {
+                TokKind::Punct => {
+                    let c = code.as_bytes()[t[k].start];
+                    let prev_minus = k > 0
+                        && t[k - 1].end == t[k].start
+                        && code.as_bytes()[t[k - 1].start] == b'-';
+                    if c == b'<' {
+                        angle += 1;
+                    } else if c == b'>' && !prev_minus {
+                        angle -= 1;
+                    } else if c == b';' && angle <= 0 {
+                        break;
+                    }
+                    k += 1;
+                }
+                TokKind::Open => {
+                    if code.as_bytes()[t[k].start] == b'{' {
+                        body = Some((k, tree.close_of(k)));
+                        break;
+                    }
+                    k = tree.close_of(k) + 1;
+                }
+                _ => k += 1,
+            }
+        }
+        let is_unsafe = prev_at(t, kw).is_some_and(|p| tree.is(code, p, "unsafe"));
+        out.push(FnItem {
+            name,
+            name_tok,
+            params,
+            body,
+            is_unsafe,
+            line: tree.line(code, kw),
+        });
+        i = name_tok + 1;
+    }
+    out
+}
+
+fn next_at(t: &[Tok], i: usize) -> Option<usize> {
+    (i < t.len()).then_some(i)
+}
+
+fn prev_at(_t: &[Tok], i: usize) -> Option<usize> {
+    i.checked_sub(1)
+}
+
+/// Parameter names: split the paren group at top-level commas; each
+/// parameter contributes its first pattern identifier (skipping
+/// `mut`/`ref` and reference sigils), except `self` receivers.
+fn param_names(code: &str, tree: &Tree, open: usize, close: usize) -> Vec<String> {
+    let t = &tree.toks;
+    let mut names = Vec::new();
+    let mut seg_start = open + 1;
+    let mut i = open + 1;
+    while i <= close && i < t.len() {
+        let at_comma = t[i].kind == TokKind::Punct && code.as_bytes()[t[i].start] == b',';
+        if i == close || at_comma {
+            let mut j = seg_start;
+            let mut first = None;
+            while j < i {
+                if t[j].kind == TokKind::Ident {
+                    let s = tree.text(code, j);
+                    if s != "mut" && s != "ref" {
+                        first = Some(s.to_string());
+                        break;
+                    }
+                }
+                if t[j].kind == TokKind::Open {
+                    j = tree.close_of(j) + 1;
+                    continue;
+                }
+                j += 1;
+            }
+            if let Some(p) = first {
+                if p != "self" {
+                    names.push(p);
+                }
+            }
+            seg_start = i + 1;
+        } else if t[i].kind == TokKind::Open {
+            i = tree.close_of(i);
+        }
+        i += 1;
+    }
+    names
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum UnsafeKind {
+    /// `unsafe fn` — the contract covers the whole function.
+    Fn,
+    /// `unsafe { .. }` block.
+    Block,
+    /// `unsafe impl`/`unsafe trait` (e.g. a manual `Send`).
+    Impl,
+}
+
+/// One `unsafe` occurrence.
+#[derive(Clone, Debug)]
+pub struct UnsafeSite {
+    pub kind: UnsafeKind,
+    /// Token index of the `unsafe` keyword.
+    pub tok: usize,
+    pub line: usize,
+    /// Body token range (`{`, `}`) for blocks and fns, when present.
+    pub body: Option<(usize, usize)>,
+}
+
+/// All `unsafe` keywords, classified.
+pub fn unsafe_sites(code: &str, tree: &Tree) -> Vec<UnsafeSite> {
+    let t = &tree.toks;
+    let mut out = Vec::new();
+    for i in 0..t.len() {
+        if t[i].kind != TokKind::Ident || !tree.is(code, i, "unsafe") {
+            continue;
+        }
+        let line = tree.line(code, i);
+        let Some(next) = t.get(i + 1) else {
+            continue;
+        };
+        let site = match next.kind {
+            TokKind::Open if code.as_bytes()[next.start] == b'{' => UnsafeSite {
+                kind: UnsafeKind::Block,
+                tok: i,
+                line,
+                body: Some((i + 1, tree.close_of(i + 1))),
+            },
+            TokKind::Ident => {
+                let word = tree.text(code, i + 1);
+                match word {
+                    "fn" | "extern" => {
+                        // Body extent comes from the matching FnItem.
+                        UnsafeSite { kind: UnsafeKind::Fn, tok: i, line, body: None }
+                    }
+                    "impl" | "trait" => {
+                        UnsafeSite { kind: UnsafeKind::Impl, tok: i, line, body: None }
+                    }
+                    _ => continue,
+                }
+            }
+            _ => continue,
+        };
+        out.push(site);
+    }
+    out
+}
+
+/// Receiver shape of a call expression.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Recv {
+    /// `f(..)` or `path::f(..)` — a free/path call.
+    Free,
+    /// `self.f(..)` — a method on the defining type.
+    SelfDot,
+    /// `x.f(..)` — a method on some other receiver.
+    Other,
+}
+
+/// One call expression inside a body.
+#[derive(Clone, Debug)]
+pub struct Call {
+    pub name: String,
+    /// Token index of the callee identifier.
+    pub tok: usize,
+    pub line: usize,
+    pub recv: Recv,
+    /// Token ranges (inclusive start, exclusive end) of each
+    /// top-level-comma argument inside the paren group.
+    pub args: Vec<(usize, usize)>,
+}
+
+const CALL_KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "fn", "loop", "let", "in", "as", "move", "where",
+    "impl", "dyn", "pub", "use", "mod", "unsafe", "else", "break", "continue",
+];
+
+/// Call expressions within the token range `[from, to]`: an identifier
+/// followed by `(` (optionally through a `::<..>` turbofish), macro
+/// invocations excluded.
+pub fn calls_in(code: &str, tree: &Tree, from: usize, to: usize) -> Vec<Call> {
+    let t = &tree.toks;
+    let mut out = Vec::new();
+    for i in from..=to.min(t.len().saturating_sub(1)) {
+        if t[i].kind != TokKind::Ident {
+            continue;
+        }
+        let name = tree.text(code, i);
+        if CALL_KEYWORDS.contains(&name) {
+            continue;
+        }
+        // Locate the argument parens: directly, or through a turbofish.
+        let mut open = None;
+        if let Some(n1) = t.get(i + 1) {
+            if n1.kind == TokKind::Open && code.as_bytes()[n1.start] == b'(' {
+                open = Some(i + 1);
+            } else if n1.kind == TokKind::Punct && code.as_bytes()[n1.start] == b'!' {
+                continue; // macro, not a call
+            } else if n1.kind == TokKind::Punct
+                && code.as_bytes()[n1.start] == b':'
+                && t.get(i + 2).is_some_and(|p| {
+                    p.kind == TokKind::Punct && code.as_bytes()[p.start] == b':'
+                })
+                && t.get(i + 3).is_some_and(|p| {
+                    p.kind == TokKind::Punct && code.as_bytes()[p.start] == b'<'
+                })
+            {
+                // `name::<..>(` — scan past the turbofish.
+                let mut j = i + 4;
+                let mut angle = 1i32;
+                while j < t.len() && angle > 0 {
+                    if t[j].kind == TokKind::Punct {
+                        match code.as_bytes()[t[j].start] {
+                            b'<' => angle += 1,
+                            b'>' => angle -= 1,
+                            _ => {}
+                        }
+                    } else if t[j].kind == TokKind::Open {
+                        j = tree.close_of(j);
+                    }
+                    j += 1;
+                }
+                if t.get(j).is_some_and(|p| {
+                    p.kind == TokKind::Open && code.as_bytes()[p.start] == b'('
+                }) {
+                    open = Some(j);
+                }
+            }
+        }
+        let Some(open) = open else { continue };
+        let close = tree.close_of(open);
+        let recv = match i.checked_sub(1) {
+            Some(p)
+                if t[p].kind == TokKind::Punct && code.as_bytes()[t[p].start] == b'.' =>
+            {
+                if p > 0 && t[p - 1].kind == TokKind::Ident && tree.is(code, p - 1, "self") {
+                    Recv::SelfDot
+                } else {
+                    Recv::Other
+                }
+            }
+            _ => Recv::Free,
+        };
+        // Split args at top-level commas.
+        let mut args = Vec::new();
+        let mut seg = open + 1;
+        let mut j = open + 1;
+        while j <= close && j < t.len() {
+            let comma = t[j].kind == TokKind::Punct && code.as_bytes()[t[j].start] == b',';
+            if j == close || comma {
+                if j > seg {
+                    args.push((seg, j));
+                }
+                seg = j + 1;
+            } else if t[j].kind == TokKind::Open {
+                j = tree.close_of(j);
+            }
+            j += 1;
+        }
+        out.push(Call { name: name.to_string(), tok: i, line: tree.line(code, i), recv, args });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree(code: &str) -> Tree {
+        Tree::parse(code)
+    }
+
+    #[test]
+    fn delimiters_pair_through_nested_generics() {
+        // `Vec<Vec<[u8; N]>>`: the brackets pair; `<`/`>` stay puncts.
+        let code = "fn f(x: Vec<Vec<[u8; N]>>) -> Vec<[f32; 4]> { x.len() }";
+        let t = tree(code);
+        let opens: Vec<usize> = (0..t.toks.len())
+            .filter(|&i| t.toks[i].kind == TokKind::Open)
+            .collect();
+        for o in opens {
+            assert_ne!(t.pair[o], NO_PAIR, "unpaired delimiter in {code}");
+        }
+        let fns = fn_items(code, &t);
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "f");
+        assert_eq!(fns[0].params, vec!["x"]);
+        assert!(fns[0].body.is_some(), "array-typed return must not hide the body");
+    }
+
+    #[test]
+    fn fn_outline_skips_generic_parameter_lists() {
+        let code = "fn g<F: Fn(u32) -> u64, const N: usize>(cb: F, buf: [u8; N]) -> u64 { cb(0) }";
+        let t = tree(code);
+        let fns = fn_items(code, &t);
+        assert_eq!(fns.len(), 1, "the Fn(u32) in the generic list is not the param group");
+        assert_eq!(fns[0].params, vec!["cb", "buf"]);
+    }
+
+    #[test]
+    fn self_receivers_are_excluded_from_params() {
+        let code = "impl S { fn m(&mut self, n: usize, mut k: u32) {} }";
+        let t = tree(code);
+        let fns = fn_items(code, &t);
+        assert_eq!(fns[0].params, vec!["n", "k"]);
+    }
+
+    #[test]
+    fn unsafe_sites_classify_fn_block_impl() {
+        let code = "unsafe fn k() {}\nfn f() { unsafe { g() } }\nunsafe impl Send for P {}\n";
+        let t = tree(code);
+        let sites = unsafe_sites(code, &t);
+        let kinds: Vec<UnsafeKind> = sites.iter().map(|s| s.kind).collect();
+        assert_eq!(kinds, vec![UnsafeKind::Fn, UnsafeKind::Block, UnsafeKind::Impl]);
+        assert_eq!(sites[1].line, 2);
+        assert!(sites[1].body.is_some());
+    }
+
+    #[test]
+    fn calls_distinguish_receivers_and_skip_macros() {
+        let code = "fn f(&self) { self.step(1); other.go(2, 3); helper(x); ensure!(a <= b); }";
+        let t = tree(code);
+        let fns = fn_items(code, &t);
+        let (b0, b1) = fns[0].body.unwrap();
+        let calls = calls_in(code, &t, b0, b1);
+        let names: Vec<(&str, Recv)> =
+            calls.iter().map(|c| (c.name.as_str(), c.recv)).collect();
+        assert!(names.contains(&("step", Recv::SelfDot)), "{names:?}");
+        assert!(names.contains(&("go", Recv::Other)), "{names:?}");
+        assert!(names.contains(&("helper", Recv::Free)), "{names:?}");
+        assert!(!names.iter().any(|(n, _)| *n == "ensure"), "macros excluded: {names:?}");
+        let go = calls.iter().find(|c| c.name == "go").unwrap();
+        assert_eq!(go.args.len(), 2);
+    }
+
+    #[test]
+    fn turbofish_calls_are_still_calls() {
+        let code = "fn f() { parse::<Vec<u32>>(input); }";
+        let t = tree(code);
+        let fns = fn_items(code, &t);
+        let (b0, b1) = fns[0].body.unwrap();
+        let calls = calls_in(code, &t, b0, b1);
+        assert!(calls.iter().any(|c| c.name == "parse" && c.args.len() == 1), "{calls:?}");
+    }
+
+    #[test]
+    fn closure_fn_keyword_is_not_an_item() {
+        let code = "fn f(cb: impl Fn(u32)) { let g: fn(u32) -> u32 = id; cb(g(1)) }";
+        let t = tree(code);
+        let fns = fn_items(code, &t);
+        assert_eq!(fns.len(), 1, "only the real item: {fns:?}");
+        assert_eq!(fns[0].name, "f");
+    }
+}

@@ -40,6 +40,7 @@ pub fn pairwise_condensed(m: &RowMatrix, p: usize, threads: usize) -> Vec<f64> {
                         let d = distance_f32(m.row(i), m.row(j), p);
                         // SAFETY: rows are disjoint across threads, so the
                         // condensed ranges [base, base+n-i-1) never overlap.
+                        // pallas-lint: allow(unsafe-contract) -- offline baseline writer, not a serving kernel; per-thread ranges are disjoint by construction
                         unsafe { *out_ptr.0.add(base + j - i - 1) = d };
                     }
                 }
@@ -75,6 +76,9 @@ fn partition_condensed(n: usize, threads: usize) -> Vec<Vec<usize>> {
 }
 
 struct SendPtr(*mut f64);
+// SAFETY: SendPtr only ferries the base pointer of a caller-owned `out`
+// buffer into scoped threads that write disjoint condensed ranges; the
+// buffer outlives the scope and no element is aliased by two threads.
 unsafe impl Send for SendPtr {}
 
 /// Dense n×n2 exact distance matrix between two row sets (E7's block op).

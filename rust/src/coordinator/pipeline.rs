@@ -403,7 +403,7 @@ impl Pipeline {
                 scope.spawn(move || loop {
                     let block = {
                         let guard = rx.lock_recover();
-                        // pallas-lint: allow(guard-across-blocking) -- shared-Receiver idiom: this mutex exists to serialize recv; senders never take it
+                        // pallas-lint: allow(lock-order) -- shared-Receiver idiom: this mutex exists to serialize recv; senders never take it
                         guard.recv()
                     };
                     let Ok(block) = block else { break };

@@ -95,7 +95,6 @@ fn put_store(out: &mut Vec<u8>, s: &PanelStore) {
 }
 
 fn encode_segment(base: u64, block: &ColumnarBlock, zone: &ZoneMeta) -> Vec<u8> {
-    // pallas-lint: allow(len-before-alloc) -- sized from the in-memory block being encoded, not a decoded count
     let mut out = Vec::with_capacity(SEG_HEADER_BYTES + block.bytes() + 4);
     out.extend_from_slice(SEG_MAGIC);
     put_u32(&mut out, SEG_VERSION);

@@ -593,7 +593,6 @@ impl SketchStore {
         if let Ok(mut cache) = self.cached.try_write() {
             *cache = None;
         }
-        // pallas-lint: allow(guard-across-blocking) -- touched shard guards are held together, ascending, exactly like snapshot's capture; the bump lands inside the joint critical section
         let mut guards: Vec<_> = self
             .shards
             .iter()
@@ -714,9 +713,7 @@ impl SketchStore {
             // writers take shard/segment locks without the cache lock
             // (insert's cache purge is a non-blocking try_write), so no
             // cycle exists.
-            // pallas-lint: allow(guard-across-blocking) -- consistent-cut capture: lock order cache -> shards -> segments; writers never hold these while taking the cache lock
             let guards: Vec<_> = self.shards.iter().map(|s| s.read_recover()).collect();
-            // pallas-lint: allow(guard-across-blocking) -- segments joins the same consistent cut, acquired last in the documented order
             let segs = self.segments.read_recover();
             Arc::new(StoreSnapshot {
                 epoch: self.epoch.load(Ordering::Acquire),
@@ -825,7 +822,6 @@ impl SketchStore {
     ) -> CompactionReport {
         let _serial = self.compaction.lock_recover();
         // Plan from a directory snapshot (Arc handles, no panel copies).
-        // pallas-lint: allow(guard-across-blocking) -- `_serial` exists to serialize whole compaction passes; the segment lock nests inside it by design
         let plan: Vec<Segment> = self.segments.read_recover().clone();
         let before = plan.len();
         let mut groups: Vec<Vec<Segment>> = Vec::new();
@@ -878,7 +874,6 @@ impl SketchStore {
         // compaction is serialized, and ingest can only add segments
         // outside a run's contiguous id range.
         let after = {
-            // pallas-lint: allow(guard-across-blocking) -- the swap nests inside `_serial` on purpose: no rival compactor can invalidate the plan between read and write
             let mut segs = self.segments.write_recover();
             for (bases, seg) in merged {
                 let pos = segs.partition_point(|s| s.base < seg.base);
@@ -922,7 +917,6 @@ impl SketchStore {
         f: impl FnOnce(Option<&SegmentPanels>) -> R,
     ) -> R {
         let guards: Vec<_> = self.shards.iter().map(|s| s.read_recover()).collect();
-        // pallas-lint: allow(guard-across-blocking) -- legacy lock-pinned baseline, kept deliberately for the hotpath bench; not a serving path
         let segs = self.segments.read_recover();
         if segs.is_empty() || guards.iter().any(|g| !g.is_empty()) {
             return f(None);

@@ -362,7 +362,6 @@ impl PanelStore {
             total: usize,
             slice_of: impl Fn(&PanelStore) -> Option<&[T]>,
         ) -> Option<Vec<T>> {
-            // pallas-lint: allow(len-before-alloc) -- sized from the in-memory stores being merged, not a decoded count
             let mut out = vec![T::default(); orders * total * k];
             for m in 0..orders {
                 let mut r0 = 0usize;

@@ -71,7 +71,8 @@ fn usage() -> ! {
          knn:         lpsketch knn <row-id> <m> [--rerank N]\n\
          recover:     lpsketch recover --data-dir <dir> [--out snap.lpsk] (replay WAL, seal\n\
                       segments, report; --out also exports a portable sketch file)\n\
-         lint:        lpsketch lint [src-root] (default rust/src; exits 1 on findings)"
+         lint:        lpsketch lint [src-root] [--format json|sarif] (default rust/src; \
+         findings on stdout, diagnostics on stderr, exits 1 on findings)"
     );
     std::process::exit(2);
 }
@@ -195,6 +196,7 @@ fn main() -> anyhow::Result<()> {
     let mut connect: Option<String> = None;
     let mut assume_projection = false;
     let mut fast = false;
+    let mut lint_format: Option<String> = None;
     let mut rerank: usize = 0;
     let mut args = Vec::new();
     let mut it = raw.drain(..);
@@ -210,6 +212,7 @@ fn main() -> anyhow::Result<()> {
             "--connect" => connect = it.next(),
             "--assume-projection" => assume_projection = true,
             "--fast" => fast = true,
+            "--format" => lint_format = it.next(),
             "--rerank" => {
                 // A bad value must error loudly, like every config key
                 // (`--rerank abc` used to silently mean "no rerank").
@@ -257,12 +260,24 @@ fn main() -> anyhow::Result<()> {
             );
             let files = lpsketch::analysis::count_rs_files(&root)?;
             let findings = lpsketch::analysis::analyze_tree(&root)?;
-            if findings.is_empty() {
-                println!("pallas-lint: {files} files clean");
-            } else {
-                for f in &findings {
-                    println!("{}", f.render());
+            // Findings go to stdout (text lines, or one JSON/SARIF
+            // document — empty arrays when clean); human diagnostics go
+            // to stderr; the exit code is 1 exactly when findings > 0.
+            match lint_format.as_deref() {
+                Some("json") => print!("{}", lpsketch::analysis::to_json(&findings)),
+                Some("sarif") => print!("{}", lpsketch::analysis::to_sarif(&findings)),
+                Some(other) => {
+                    anyhow::bail!("--format must be `json` or `sarif`, got {other:?}")
                 }
+                None => {
+                    for f in &findings {
+                        println!("{}", f.render());
+                    }
+                }
+            }
+            if findings.is_empty() {
+                eprintln!("pallas-lint: {files} files clean");
+            } else {
                 eprintln!("pallas-lint: {} finding(s) across {files} files", findings.len());
                 std::process::exit(1);
             }

@@ -199,6 +199,9 @@ pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f64 {
 /// AVX dot: one `__m256d` whose lane `j` plays scalar `acc[j]`.
 /// `cvtps_pd` is exact, `mul_pd`/`add_pd` round separately exactly as
 /// the scalar's `*` then `+=` do — never FMA.
+// SAFETY: caller must have verified AVX support (the dispatcher gates
+// on `is_x86_feature_detected!("avx")`); slices may be any length, the
+// tail loop covers the remainder.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx")]
 unsafe fn dot_f32_avx(a: &[f32], b: &[f32]) -> f64 {
@@ -223,6 +226,9 @@ unsafe fn dot_f32_avx(a: &[f32], b: &[f32]) -> f64 {
 
 /// NEON dot: `acc[0..2]` and `acc[2..4]` live in two `float64x2_t`s;
 /// separate `vmulq`/`vaddq` (no fused form), same final reduction.
+// SAFETY: caller must have verified NEON support (always present on
+// aarch64, gated by the dispatcher anyway); no pointer arithmetic past
+// the checked chunk bounds.
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn dot_f32_neon(a: &[f32], b: &[f32]) -> f64 {
@@ -286,6 +292,8 @@ pub fn dot_f16_f16_scalar(a: &[u16], b: &[u16]) -> f64 {
     (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
 }
 
+// SAFETY: caller must have verified AVX+F16C support (dispatcher gates
+// on both); loads stay within the checked chunk bounds.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx", enable = "f16c")]
 unsafe fn dot_f16_f16_avx(a: &[u16], b: &[u16]) -> f64 {
@@ -344,6 +352,8 @@ pub fn dot_f32_f16_scalar(a: &[f32], b: &[u16]) -> f64 {
     (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
 }
 
+// SAFETY: caller must have verified AVX+F16C support (dispatcher gates
+// on both); loads stay within the checked chunk bounds.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx", enable = "f16c")]
 unsafe fn dot_f32_f16_avx(a: &[f32], b: &[u16]) -> f64 {
@@ -428,6 +438,8 @@ pub fn gemm_tile_4x8_scalar(
 /// AVX tile: one `__m256` per output row, broadcast `a_i[t]`, separate
 /// `mul_ps`/`add_ps` (never FMA — fusing would change roundings vs the
 /// scalar reference).
+// SAFETY: caller must have verified AVX support and pass rows of at
+// least 8 columns per tile step, which the tiled driver guarantees.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx")]
 unsafe fn gemm_tile_4x8_avx(
@@ -459,6 +471,8 @@ unsafe fn gemm_tile_4x8_avx(
 
 /// NEON tile: two `float32x4_t`s per output row, separate
 /// `vmulq`/`vaddq` (no fused form).
+// SAFETY: caller must have verified NEON support and pass rows of at
+// least 8 columns per tile step, which the tiled driver guarantees.
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn gemm_tile_4x8_neon(
@@ -566,6 +580,8 @@ pub fn expand_row_scalar(
 /// scalar-wise from the extracted lanes **in entry order with the zero
 /// skip**, so the result is bitwise-identical to
 /// [`expand_row_scalar`].
+// SAFETY: caller must have verified AVX support (dispatcher-gated);
+// all lane extracts index constant positions within one `__m256d`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx")]
 #[allow(clippy::too_many_arguments)]

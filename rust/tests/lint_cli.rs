@@ -1,0 +1,119 @@
+//! Integration: the `lpsketch lint` exit-path contract, exercised
+//! through the real executable (CARGO_BIN_EXE_lpsketch).
+//!
+//! The contract CI scripts rely on: findings (text lines or one
+//! JSON/SARIF document) go to stdout, human diagnostics go to stderr,
+//! and the exit code is 1 exactly when findings > 0.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_lpsketch"))
+}
+
+/// Materialize a throwaway source tree; `rel` paths choose rule scope.
+fn plant(name: &str, files: &[(&str, &str)]) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lpsketch_lint_cli_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    for (rel, src) in files {
+        let p = dir.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, src).unwrap();
+    }
+    dir
+}
+
+const CLEAN: &str = "pub fn add(a: u32, b: u32) -> u32 { a.wrapping_add(b) }\n";
+const VIOLATING: &str = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+
+#[test]
+fn clean_tree_exits_zero_with_empty_stdout() {
+    let root = plant("clean", &[("core/util.rs", CLEAN)]);
+    let out = bin().args(["lint", root.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(out.stdout.is_empty(), "{}", String::from_utf8_lossy(&out.stdout));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("files clean"), "{stderr}");
+}
+
+#[test]
+fn findings_go_to_stdout_and_exit_code_is_one() {
+    let root = plant("dirty", &[("api/wire.rs", VIOLATING)]);
+    let out = bin().args(["lint", root.to_str().unwrap()]).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("api/wire.rs:1: [serving-no-panic]"), "{stdout}");
+    // stdout carries findings only — every line is a `file:line: [rule]`
+    // record, diagnostics never leak in.
+    assert!(stdout.lines().all(|l| l.contains(": [")), "{stdout}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("finding(s)"), "{stderr}");
+}
+
+#[test]
+fn json_format_reports_findings_and_count() {
+    let root = plant("json", &[("api/wire.rs", VIOLATING)]);
+    let out = bin()
+        .args(["lint", root.to_str().unwrap(), "--format", "json"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.trim_start().starts_with('{'), "{stdout}");
+    assert!(stdout.contains("\"tool\": \"pallas-lint\""), "{stdout}");
+    assert!(stdout.contains("\"count\": 1"), "{stdout}");
+    assert!(stdout.contains("\"rule\": \"serving-no-panic\""), "{stdout}");
+}
+
+#[test]
+fn json_format_on_a_clean_tree_is_an_empty_array() {
+    let root = plant("json_clean", &[("core/util.rs", CLEAN)]);
+    let out = bin()
+        .args(["lint", root.to_str().unwrap(), "--format", "json"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"count\": 0"), "{stdout}");
+    assert!(stdout.contains("\"findings\": []"), "{stdout}");
+}
+
+#[test]
+fn sarif_format_carries_the_code_scanning_envelope() {
+    let root = plant("sarif", &[("api/wire.rs", VIOLATING)]);
+    let out = bin()
+        .args(["lint", root.to_str().unwrap(), "--format", "sarif"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"version\": \"2.1.0\""), "{stdout}");
+    assert!(stdout.contains("sarif-2.1.0.json"), "{stdout}");
+    assert!(stdout.contains("\"ruleId\": \"serving-no-panic\""), "{stdout}");
+    assert!(stdout.contains("\"startLine\": 1"), "{stdout}");
+}
+
+#[test]
+fn unknown_format_is_rejected_before_any_output() {
+    let root = plant("badfmt", &[("core/util.rs", CLEAN)]);
+    let out = bin()
+        .args(["lint", root.to_str().unwrap(), "--format", "yaml"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(out.stdout.is_empty(), "{}", String::from_utf8_lossy(&out.stdout));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--format"), "{stderr}");
+}
+
+#[test]
+fn missing_root_is_an_error() {
+    let out = bin()
+        .args(["lint", "/nonexistent/lpsketch_lint_root"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("not a directory"), "{stderr}");
+}

@@ -43,3 +43,62 @@ fn gate_catches_a_planted_violation() {
         "{findings:?}"
     );
 }
+
+#[test]
+fn gate_catches_planted_v2_violations() {
+    // One planted violation per structural rule, so a regression in the
+    // token-tree or dataflow layers cannot quietly blind the gate while
+    // `tree_is_clean` keeps passing vacuously.
+    let plants: &[(&str, &str, &str)] = &[
+        (
+            "baselines/exact.rs",
+            "pub unsafe fn k(p: *const f32) -> f32 { *p }\n",
+            analysis::UNSAFE_CONTRACT,
+        ),
+        (
+            "coordinator/scheduler.rs",
+            "fn f(&self) {\n\
+             let segs = self.segments.write_recover();\n\
+             let serial = self.compaction.lock_recover();\n\
+             }\n",
+            analysis::LOCK_ORDER,
+        ),
+        (
+            "knn/mod.rs",
+            "pub fn serve(&self) {\n\
+             let g = self.store.shards[0].read_recover();\n\
+             }\n",
+            analysis::SNAPSHOT_DISCIPLINE,
+        ),
+        (
+            "coordinator/persist.rs",
+            "fn fill(n: usize) -> Vec<u8> {\n\
+             vec![0u8; n]\n\
+             }\n\
+             fn load(b: &[u8]) -> Vec<u8> {\n\
+             let n = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;\n\
+             fill(n)\n\
+             }\n",
+            analysis::LEN_BEFORE_ALLOC,
+        ),
+        (
+            "coordinator/segfile.rs",
+            "pub const SEG_VERSION: u32 = 3;\n\
+             fn read_seg(f: &mut File) -> anyhow::Result<Seg> {\n\
+             let version = r_u32(f)?;\n\
+             ensure!(version >= 1 && version <= 3, \"segfile version\");\n\
+             if version >= 2 { read_zones(f)?; }\n\
+             if version >= 3 { read_checksums(f)?; }\n\
+             Ok(Seg::default())\n\
+             }\n",
+            analysis::CODEC_VERSION_EXHAUSTIVE,
+        ),
+    ];
+    for (rel, src, rule) in plants {
+        let findings = analysis::analyze_source(rel, src);
+        assert!(
+            findings.iter().any(|f| f.rule == *rule),
+            "{rel}: expected {rule}, got {findings:?}"
+        );
+    }
+}
